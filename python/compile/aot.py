@@ -1,0 +1,61 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+Emits HLO text (NOT ``.serialize()``): jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+(idempotent; invoked by ``make artifacts``).
+"""
+
+import argparse
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact name filter"
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out, exist_ok=True)
+
+    t0 = time.time()
+    count = 0
+    for name, fn, example_args in model.artifact_specs():
+        if only is not None and name not in only:
+            continue
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        count += 1
+        print(f"  [{time.time() - t0:6.1f}s] {name}: {len(text)} chars")
+
+    manifest = os.path.join(args.out, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(model.manifest_lines()) + "\n")
+    print(f"wrote {count} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""L1 Pallas kernel for Algorithm A1: exact constrained episode counting.
+
+Implements the paper's Algorithm 1 — non-overlapped occurrence counting of
+a serial episode with full ``(t_low, t_high]`` inter-event constraints —
+vectorized across a block of episodes. With a strict lower bound the most
+recent timestamp no longer dominates (a too-recent entry fails ``> t_low``
+where an older one passes), so each level keeps a bounded list of the K
+most recent occurrence times. This mirrors the paper's GPU version, whose
+lists are bounded by the 16 KB shared-memory budget (220 B per thread at
+N=5); here the bound is the VMEM tile ``[B, N, K]``.
+
+The list is stored most-recent-first; Algorithm 1 searches latest-first and
+stops at the first entry satisfying the constraint, and since only the
+*existence* of a satisfying entry matters (the current event time ``t`` is
+what gets appended), the vectorized form reduces the search to a masked
+``any`` over the K lanes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import NEG
+
+# Events per loop iteration (see a2.py UNROLL — amortizes the XLA CPU
+# while-loop's fixed per-iteration overhead).
+UNROLL = 8
+
+
+def _push_front(lst, t, mask):
+    """Push scalar time ``t`` onto the front of ``[B, K]`` lists where
+    ``mask`` (``[B]``) holds; the oldest entry falls off the end."""
+    b = lst.shape[0]
+    shifted = jnp.concatenate(
+        [jnp.full((b, 1), t, jnp.int32), lst[:, :-1]], axis=1
+    )
+    return jnp.where(mask[:, None], shifted, lst)
+
+
+def _a1_block_kernel(
+    n_levels,
+    types_ref,
+    tlow_ref,
+    thigh_ref,
+    evt_ref,
+    evtime_ref,
+    s_ref,
+    cnt_ref,
+    s_out_ref,
+    cnt_out_ref,
+):
+    """Count one episode block over one event chunk.
+
+    Carried state ``s`` is ``[B, N, K]`` timestamps (NEG = empty slot) and
+    ``cnt`` is ``[B]``.
+    """
+    types = types_ref[...]
+    tlow = tlow_ref[...]
+    thigh = thigh_ref[...]
+    ev_t = evt_ref[...]
+    ev_tm = evtime_ref[...]
+    s0 = s_ref[...]
+    c0 = cnt_ref[...]
+    chunk = ev_t.shape[0]
+    n = n_levels
+
+    def one_event(s, cnt, e, t):
+        done = jnp.zeros(s.shape[0], dtype=jnp.bool_)
+        for i in range(n - 1, -1, -1):
+            m = (types[:, i] == e) & ~done
+            if i == 0:
+                # First level: every matching event is recorded (Alg. 1
+                # line 19); the K-bound keeps the most recent K.
+                s = s.at[:, 0, :].set(_push_front(s[:, 0, :], t, m))
+            else:
+                d = t - s[:, i - 1, :]  # [B, K]
+                okk = (d > tlow[:, i - 1, None]) & (d <= thigh[:, i - 1, None])
+                found = m & okk.any(axis=1)
+                if i == n - 1:
+                    cnt = cnt + found.astype(jnp.int32)
+                    s = jnp.where(found[:, None, None], NEG, s)
+                    done = done | found
+                else:
+                    s = s.at[:, i, :].set(_push_front(s[:, i, :], t, found))
+        return s, cnt
+
+    def step(j, carry):
+        s, cnt = carry
+        base = j * UNROLL
+        for u in range(UNROLL):
+            s, cnt = one_event(s, cnt, ev_t[base + u], ev_tm[base + u])
+        return s, cnt
+
+    if chunk % UNROLL != 0:
+        raise ValueError(f"chunk {chunk} not a multiple of UNROLL {UNROLL}")
+    s, cnt = jax.lax.fori_loop(0, chunk // UNROLL, step, (s0, c0))
+    s_out_ref[...] = s
+    cnt_out_ref[...] = cnt
+
+
+def a1_count(types, tlow, thigh, ev_type, ev_time, s_in, cnt_in, *, block=128):
+    """Run the A1 kernel over a batch of episodes and one event chunk.
+
+    Args:
+      types: ``[M, N]`` int32 episode event types (pad lanes with EP_PAD).
+      tlow / thigh: ``[M, N-1]`` int32 inter-event constraint bounds.
+      ev_type / ev_time: ``[C]`` int32 event chunk (pad with EV_PAD).
+      s_in: ``[M, N, K]`` int32 carried lists (init: NEG).
+      cnt_in: ``[M]`` int32 carried counts (init: 0).
+      block: episode lanes per grid program.
+
+    Returns:
+      ``(s_out, cnt_out)`` with the same shapes as ``(s_in, cnt_in)``.
+    """
+    m, n = types.shape
+    k = s_in.shape[2]
+    chunk = ev_type.shape[0]
+    if m % block != 0:
+        raise ValueError(f"episode batch {m} not a multiple of block {block}")
+    kernel = functools.partial(_a1_block_kernel, n)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+            pl.BlockSpec((block, n - 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, n - 1), lambda i: (i, 0)),
+            pl.BlockSpec((chunk,), lambda i: (0,)),
+            pl.BlockSpec((chunk,), lambda i: (0,)),
+            pl.BlockSpec((block, n, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, n, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n, k), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        interpret=True,
+    )(types, tlow, thigh, ev_type, ev_time, s_in, cnt_in)

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel for Algorithm A2: less-constrained episode counting.
+
+A2 (paper Algorithm 3 / Observation 5.1) counts non-overlapped occurrences
+of a serial episode when the *lower* bounds of the inter-event constraints
+are relaxed to 0. With only upper bounds, each level's occurrence list
+collapses to a single timestamp (the most recent one dominates), so the
+per-episode state is ``[N]`` int32 instead of ``[N, K]`` — this is the
+"cheap first pass" of the paper's two-pass elimination approach.
+
+Hardware adaptation (GTX280 -> TPU-style Pallas): a CUDA thread holding one
+episode's automaton in registers/shared memory becomes one *lane* of a
+``[B]``-wide episode block held in VMEM. The event chunk is scanned with an
+in-kernel ``fori_loop``; each step performs masked compare/select rows
+across all lanes, which is how SIMT branch divergence is rephrased for a
+vector unit. State (``s`` and counts) is threaded in/out of the kernel so
+the Rust runtime can stream arbitrarily long event sequences through a
+fixed-shape executable chunk by chunk.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import NEG
+
+# Events processed per loop iteration. The XLA CPU while-loop carries a
+# fixed per-iteration overhead that dwarfs the per-event vector work at
+# B=128 lanes; unrolling 8 events per iteration amortizes it ~8x (see
+# EXPERIMENTS.md §Perf L1). The chunk length must be a multiple of this.
+UNROLL = 8
+
+
+def _a2_block_kernel(
+    n_levels,
+    types_ref,
+    thigh_ref,
+    evt_ref,
+    evtime_ref,
+    s_ref,
+    cnt_ref,
+    s_out_ref,
+    cnt_out_ref,
+):
+    """Count one episode block over one event chunk.
+
+    Block shapes: types ``[B, N]``, thigh ``[B, N-1]``, events ``[C]``
+    (whole chunk, shared by every grid program), carried state ``s`` is
+    ``[B, N]`` timestamps and ``cnt`` is ``[B]``.
+    """
+    types = types_ref[...]
+    thigh = thigh_ref[...]
+    ev_t = evt_ref[...]
+    ev_tm = evtime_ref[...]
+    s0 = s_ref[...]
+    c0 = cnt_ref[...]
+    chunk = ev_t.shape[0]
+    n = n_levels
+
+    def one_event(s, cnt, e, t):
+        # `done` lanes completed an occurrence with this event: the serial
+        # algorithm consumes the event entirely (Alg. 1 line 13 breaks to
+        # the next event), so lower levels must not also use it.
+        done = jnp.zeros(s.shape[0], dtype=jnp.bool_)
+        # Walk levels from last to first so an event cannot serve two
+        # adjacent levels of the same episode at one timestamp.
+        for i in range(n - 1, -1, -1):
+            m = (types[:, i] == e) & ~done
+            if i == 0:
+                # First level accepts unconditionally (Alg. 3 line 14).
+                s = s.at[:, 0].set(jnp.where(m, t, s[:, 0]))
+            else:
+                d = t - s[:, i - 1]
+                # [0, t_high] — the paper's Algorithm 3 (line 8) checks only
+                # the upper bound. Allowing d == 0 (simultaneous events) is
+                # what makes the single-timestamp state sound (Observation
+                # 5.1 keeps only the *latest* entry, which can tie with t)
+                # and keeps Theorem 5.1's count(a') >= count(a) true on
+                # streams with tied timestamps. The NEG empty sentinel fails
+                # the upper bound (its delta exceeds any t_high).
+                ok = m & (d >= 0) & (d <= thigh[:, i - 1])
+                if i == n - 1:
+                    cnt = cnt + ok.astype(jnp.int32)
+                    # Non-overlapped count: full state reset on completion.
+                    s = jnp.where(ok[:, None], NEG, s)
+                    done = done | ok
+                else:
+                    s = s.at[:, i].set(jnp.where(ok, t, s[:, i]))
+        return s, cnt
+
+    def step(j, carry):
+        s, cnt = carry
+        base = j * UNROLL
+        for u in range(UNROLL):
+            s, cnt = one_event(s, cnt, ev_t[base + u], ev_tm[base + u])
+        return s, cnt
+
+    if chunk % UNROLL != 0:
+        raise ValueError(f"chunk {chunk} not a multiple of UNROLL {UNROLL}")
+    s, cnt = jax.lax.fori_loop(0, chunk // UNROLL, step, (s0, c0))
+    s_out_ref[...] = s
+    cnt_out_ref[...] = cnt
+
+
+def a2_count(types, thigh, ev_type, ev_time, s_in, cnt_in, *, block=128):
+    """Run the A2 kernel over a batch of episodes and one event chunk.
+
+    Args:
+      types: ``[M, N]`` int32 episode event types (pad lanes with EP_PAD).
+      thigh: ``[M, N-1]`` int32 upper inter-event bounds.
+      ev_type / ev_time: ``[C]`` int32 event chunk (pad with EV_PAD).
+      s_in: ``[M, N]`` int32 carried automaton state (init: NEG).
+      cnt_in: ``[M]`` int32 carried counts (init: 0).
+      block: episode lanes per grid program (VMEM tile height).
+
+    Returns:
+      ``(s_out, cnt_out)`` with the same shapes as ``(s_in, cnt_in)``.
+    """
+    m, n = types.shape
+    chunk = ev_type.shape[0]
+    if m % block != 0:
+        raise ValueError(f"episode batch {m} not a multiple of block {block}")
+    kernel = functools.partial(_a2_block_kernel, n)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+            pl.BlockSpec((block, n - 1), lambda i: (i, 0)),
+            pl.BlockSpec((chunk,), lambda i: (0,)),
+            pl.BlockSpec((chunk,), lambda i: (0,)),
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, n), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        interpret=True,
+    )(types, thigh, ev_type, ev_time, s_in, cnt_in)

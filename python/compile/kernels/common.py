@@ -1,0 +1,19 @@
+"""Shared constants and conventions for the L1 Pallas counting kernels.
+
+All kernel state is int32. Times are integer ticks (the datasets use 1 tick
+= 1 ms). Conventions:
+
+- ``NEG`` is the "empty slot / invalid timestamp" sentinel. It is chosen so
+  that ``t - NEG`` never overflows int32 for any valid event time
+  (``0 <= t < 2**30``) and always fails the ``<= t_high`` constraint check,
+  so empty list slots need no separate validity mask.
+- ``EV_PAD`` pads event chunks out to the static chunk length. It never
+  equals a real event type (real types are ``>= 0``).
+- ``EP_PAD`` pads episode batches out to the static batch size. It is
+  distinct from ``EV_PAD`` so a padded episode can never match a padded
+  event.
+"""
+
+NEG = -(1 << 30)
+EV_PAD = -1
+EP_PAD = -2

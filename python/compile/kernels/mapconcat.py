@@ -1,0 +1,209 @@
+"""L1 Pallas kernel for the Map step of MapConcatenate (paper §5.2.2).
+
+When the number of candidate episodes is too small to fill the machine
+with per-lane episodes (the PTPE regime), the paper parallelizes *within*
+one episode: the event stream is split into P segments and each segment is
+counted locally, with N state machines per segment — one per way an
+occurrence can straddle the boundary (machine k starts at
+``tau_p - sum_{i<=k} t_high_i``, Fig. 4/5). Each machine emits a tuple
+``(a, count, b)``:
+
+- ``count`` — occurrences completing in ``(tau_p, tau_{p+1}]``,
+- ``a``     — end time of the machine's first completion in
+              ``(tau_p, tau_p + sum t_high)``, else the sentinel ``tau_p``,
+- ``b``     — end time of the one *crossing* occurrence the machine chases
+              past the segment end (completing before
+              ``tau_{p+1} + sum t_high``, not counted), else the sentinel
+              ``tau_{p+1}``.
+
+The Concatenate step (owned by the Rust coordinator, ``coordinator/
+mapconcat.rs``) chains tuples of adjacent segments by matching
+``b_s^k == a_t^l``; sentinels are constructed so that "no crossing
+occurrence" chains with "first completion unaffected by the boundary".
+
+Grid is ``(episodes, segments)``; each program runs its segment's N
+machines as an ``[N_machines]``-wide vector automaton (each machine itself
+holding ``[N, K]`` bounded lists, as in A1). The program scans from the
+previous segment's first event (machines start before ``tau_p``) until
+``tau_{p+1} + sum t_high`` — the Map step reads adjacent segments, which is
+exactly why the paper distinguishes MapConcatenate from MapReduce.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import NEG
+
+# Events per loop iteration (see a2.py UNROLL). Sub-events past the scan
+# window are masked off rather than branched over.
+UNROLL = 8
+
+
+def _mapcat_kernel(
+    n_levels,
+    k_slots,
+    types_ref,
+    tlow_ref,
+    thigh_ref,
+    evt_ref,
+    evtime_ref,
+    taus_ref,
+    seglo_ref,
+    a_ref,
+    cnt_ref,
+    b_ref,
+):
+    n = n_levels
+    k = k_slots
+    p = pl.program_id(1)
+    types = types_ref[0, :]  # [N]
+    tlow = tlow_ref[0, :]  # [N-1]
+    thigh = thigh_ref[0, :]
+    ev = evt_ref[...]
+    tm = evtime_ref[...]
+    taus = taus_ref[...]
+    chunk = ev.shape[0]
+
+    tau_p = taus[p]
+    tau_p1 = taus[p + 1]
+    sumh = jnp.sum(thigh)
+    # Machine k starts observing at tau_p - sum_{i=1..k} t_high_i (Fig. 4).
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(thigh)])
+    start = tau_p - cum[:n]  # [N] machine start times
+    stop = tau_p1 + sumh
+    lo = seglo_ref[p]
+
+    init = (
+        lo,
+        jnp.full((n, n, k), NEG, jnp.int32),  # s[machine, level, slot]
+        jnp.zeros((n,), jnp.int32),  # count
+        jnp.full((n,), tau_p, jnp.int32),  # a (sentinel tau_p)
+        jnp.full((n,), tau_p1, jnp.int32),  # b (sentinel tau_{p+1})
+        jnp.zeros((n,), jnp.bool_),  # frozen: b recorded
+        jnp.zeros((n,), jnp.bool_),  # a_window_closed
+    )
+
+    def cond(carry):
+        idx = carry[0]
+        t = tm[jnp.minimum(idx, chunk - 1)]
+        # Inclusive: a crossing occurrence can complete at exactly
+        # tau_{p+1} + sum t_high (its first event exactly on the boundary).
+        # The paper's strict "<" (step 4) drops it and desynchronizes the
+        # b == a chain; see DESIGN.md §6 (MapConcatenate fidelity).
+        return (idx < chunk) & (t <= stop)
+
+    def one_event(state, e, t, valid):
+        s, cnt, a, b, frozen, a_closed = state
+        active = valid & (t > start) & ~frozen  # [N] machines
+        done = jnp.zeros((n,), jnp.bool_)
+        for i in range(n - 1, -1, -1):
+            m = active & ~done & (types[i] == e)
+            if i == 0:
+                shifted = jnp.concatenate(
+                    [jnp.full((n, 1), t, jnp.int32), s[:, 0, :-1]], axis=1
+                )
+                s = s.at[:, 0, :].set(
+                    jnp.where(m[:, None], shifted, s[:, 0, :])
+                )
+            else:
+                d = t - s[:, i - 1, :]  # [N, K]
+                okk = (d > tlow[i - 1]) & (d <= thigh[i - 1])
+                found = m & okk.any(axis=1)
+                if i == n - 1:
+                    # Completion at time t for machines in `found`.
+                    in_count = found & (t > tau_p) & (t <= tau_p1)
+                    cnt = cnt + in_count.astype(jnp.int32)
+                    # inclusive window, mirroring the crossing (`b`) window
+                    set_a = in_count & ~a_closed & (t <= tau_p + sumh)
+                    a = jnp.where(set_a, t, a)
+                    # Only the *first* completion can define `a`; a first
+                    # completion beyond the straddle window leaves the
+                    # sentinel in place.
+                    a_closed = a_closed | in_count
+                    cross = found & (t > tau_p1)
+                    b = jnp.where(cross, t, b)
+                    frozen = frozen | cross
+                    s = jnp.where(found[:, None, None], NEG, s)
+                    done = done | found
+                else:
+                    shifted = jnp.concatenate(
+                        [jnp.full((n, 1), t, jnp.int32), s[:, i, :-1]],
+                        axis=1,
+                    )
+                    s = s.at[:, i, :].set(
+                        jnp.where(found[:, None], shifted, s[:, i, :])
+                    )
+        return (s, cnt, a, b, frozen, a_closed)
+
+    def body(carry):
+        idx, s, cnt, a, b, frozen, a_closed = carry
+        state = (s, cnt, a, b, frozen, a_closed)
+        for u in range(UNROLL):
+            j = idx + u
+            jc = jnp.minimum(j, chunk - 1)
+            e = ev[jc]
+            t = tm[jc]
+            # sub-events past the chunk or scan window are masked, not
+            # branched (SIMT style)
+            valid = (j < chunk) & (t <= stop)
+            state = one_event(state, e, t, valid)
+        s, cnt, a, b, frozen, a_closed = state
+        return (idx + UNROLL, s, cnt, a, b, frozen, a_closed)
+
+    _, _, cnt, a, b, _, _ = jax.lax.while_loop(cond, body, init)
+    a_ref[0, 0, :] = a
+    cnt_ref[0, 0, :] = cnt
+    b_ref[0, 0, :] = b
+
+
+def mapcat_map(types, tlow, thigh, ev_type, ev_time, taus, seg_lo, *, k_slots=8):
+    """Run the Map step for a batch of episodes over one event chunk.
+
+    Args:
+      types: ``[E, N]`` int32 episode event types.
+      tlow / thigh: ``[E, N-1]`` int32 constraint bounds.
+      ev_type / ev_time: ``[C]`` int32 events, time-sorted (pad EV_PAD with
+        time = last real time so padded events sit past every window).
+      taus: ``[P+1]`` int32 segment boundary times; counting window of
+        segment p is ``(taus[p], taus[p+1]]``; ``taus[0]`` must precede the
+        first event, ``taus[P]`` must be >= the last event time.
+      seg_lo: ``[P]`` int32 scan-start event index per segment (the first
+        event of segment p-1; 0 for p = 0) — machines start before
+        ``tau_p`` and need the previous segment's tail.
+      k_slots: bounded list length per level (as in A1).
+
+    Returns:
+      ``(a, cnt, b)`` each ``[E, P, N]`` int32 — per episode, segment, and
+      boundary-machine.
+    """
+    e_count, n = types.shape
+    p_count = taus.shape[0] - 1
+    chunk = ev_type.shape[0]
+    kernel = functools.partial(_mapcat_kernel, n, k_slots)
+    return pl.pallas_call(
+        kernel,
+        grid=(e_count, p_count),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda e, p: (e, 0)),
+            pl.BlockSpec((1, n - 1), lambda e, p: (e, 0)),
+            pl.BlockSpec((1, n - 1), lambda e, p: (e, 0)),
+            pl.BlockSpec((chunk,), lambda e, p: (0,)),
+            pl.BlockSpec((chunk,), lambda e, p: (0,)),
+            pl.BlockSpec((p_count + 1,), lambda e, p: (0,)),
+            pl.BlockSpec((p_count,), lambda e, p: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n), lambda e, p: (e, p, 0)),
+            pl.BlockSpec((1, 1, n), lambda e, p: (e, p, 0)),
+            pl.BlockSpec((1, 1, n), lambda e, p: (e, p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e_count, p_count, n), jnp.int32),
+            jax.ShapeDtypeStruct((e_count, p_count, n), jnp.int32),
+            jax.ShapeDtypeStruct((e_count, p_count, n), jnp.int32),
+        ],
+        interpret=True,
+    )(types, tlow, thigh, ev_type, ev_time, taus, seg_lo)

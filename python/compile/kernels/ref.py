@@ -1,0 +1,233 @@
+"""Pure-Python correctness oracles for the L1 kernels.
+
+These implement the paper's serial algorithms directly from the pseudocode
+(Algorithm 1 and Algorithm 3) with no vectorization tricks, and are the
+ground truth every kernel is tested against. They are also mirrored by the
+Rust reference implementations in ``rust/src/mining/`` — the same fixture
+vectors are asserted on both sides (see ``python/tests/test_fixtures.py``
+and ``rust/tests/cross_fixtures.rs``).
+"""
+
+
+def count_serial(types, tlow, thigh, ev, tm):
+    """Paper Algorithm 1: exact non-overlapped count, unbounded lists.
+
+    ``types`` is the episode's event-type tuple; ``tlow``/``thigh`` are the
+    N-1 inter-event constraint bounds ``(t_low, t_high]``; ``ev``/``tm``
+    the time-sorted event stream.
+    """
+    n = len(types)
+    if n == 1:
+        return sum(1 for e in ev if e == types[0])
+    count = 0
+    s = [[] for _ in range(n)]
+    for e, t in zip(ev, tm):
+        completed = False
+        for i in range(n - 1, -1, -1):
+            if e != types[i]:
+                continue
+            if i == 0:
+                s[0].append(t)
+            else:
+                # Search latest-first; stop at the first satisfying entry.
+                for tp in reversed(s[i - 1]):
+                    d = t - tp
+                    if tlow[i - 1] < d <= thigh[i - 1]:
+                        if i == n - 1:
+                            count += 1
+                            s = [[] for _ in range(n)]
+                            completed = True
+                        else:
+                            s[i].append(t)
+                        break
+            if completed:
+                break
+    return count
+
+
+def count_serial_bounded(types, tlow, thigh, ev, tm, k):
+    """Algorithm 1 with lists bounded to the K most recent entries.
+
+    This matches the GPU/Pallas A1 kernel bit-for-bit (the kernel's
+    fixed-size ``[N, K]`` state is exactly "keep the K most recent").
+    """
+    n = len(types)
+    if n == 1:
+        return sum(1 for e in ev if e == types[0])
+    count = 0
+    s = [[] for _ in range(n)]
+    for e, t in zip(ev, tm):
+        completed = False
+        for i in range(n - 1, -1, -1):
+            if e != types[i]:
+                continue
+            if i == 0:
+                s[0].append(t)
+                if len(s[0]) > k:
+                    s[0].pop(0)
+            else:
+                for tp in reversed(s[i - 1]):
+                    d = t - tp
+                    if tlow[i - 1] < d <= thigh[i - 1]:
+                        if i == n - 1:
+                            count += 1
+                            s = [[] for _ in range(n)]
+                            completed = True
+                        else:
+                            s[i].append(t)
+                            if len(s[i]) > k:
+                                s[i].pop(0)
+                        break
+            if completed:
+                break
+    return count
+
+
+def count_a2_serial(types, thigh, ev, tm):
+    """Paper Algorithm 3: relaxed counting, single timestamp per level."""
+    n = len(types)
+    if n == 1:
+        return sum(1 for e in ev if e == types[0])
+    count = 0
+    s = [None] * n
+    for e, t in zip(ev, tm):
+        completed = False
+        for i in range(n - 1, -1, -1):
+            if e != types[i]:
+                continue
+            if i == 0:
+                s[0] = t
+            else:
+                tp = s[i - 1]
+                # [0, t_high]: Algorithm 3 checks only the upper bound; see
+                # the A2 kernel for why d == 0 must be admitted.
+                if tp is not None and 0 <= t - tp <= thigh[i - 1]:
+                    if i == n - 1:
+                        count += 1
+                        s = [None] * n
+                        completed = True
+                    else:
+                        s[i] = t
+            if completed:
+                break
+    return count
+
+
+def mapcat_map_serial(types, tlow, thigh, ev, tm, taus, k):
+    """Reference Map step: per segment p, run the N boundary machines and
+    emit ``(a, count, b)`` tuples. Mirrors the kernel semantics exactly
+    (bounded-K lists, sentinels a=tau_p / b=tau_{p+1})."""
+    n = len(types)
+    p_count = len(taus) - 1
+    sumh = sum(thigh)
+    out = []
+    for p in range(p_count):
+        tau_p, tau_p1 = taus[p], taus[p + 1]
+        stop = tau_p1 + sumh
+        tuples = []
+        for mk in range(n):
+            start = tau_p - sum(thigh[:mk])
+            s = [[] for _ in range(n)]
+            cnt = 0
+            a, b = tau_p, tau_p1
+            a_closed = False
+            frozen = False
+            for e, t in zip(ev, tm):
+                # inclusive stop: crossing completions at exactly
+                # tau_{p+1} + sum(thigh) must be observed (see kernel docs)
+                if t > stop or frozen:
+                    break
+                if t <= start:
+                    continue
+                completed = False
+                for i in range(n - 1, -1, -1):
+                    if e != types[i]:
+                        continue
+                    if i == 0:
+                        s[0].append(t)
+                        if len(s[0]) > k:
+                            s[0].pop(0)
+                    else:
+                        for tp in reversed(s[i - 1]):
+                            d = t - tp
+                            if tlow[i - 1] < d <= thigh[i - 1]:
+                                if i == n - 1:
+                                    completed = True
+                                else:
+                                    s[i].append(t)
+                                    if len(s[i]) > k:
+                                        s[i].pop(0)
+                                break
+                    if completed:
+                        break
+                if completed:
+                    s = [[] for _ in range(n)]
+                    if tau_p < t <= tau_p1:
+                        cnt += 1
+                        if not a_closed and t <= tau_p + sumh:
+                            a = t
+                        a_closed = True
+                    elif t > tau_p1:
+                        b = t
+                        frozen = True
+            tuples.append((a, cnt, b))
+        out.append(tuples)
+    return out
+
+
+def concatenate_fold(tuples):
+    """Concatenate step as a left fold: start from segment 0's machine 0
+    (the true stream-start automaton) and chain ``b == a`` matches.
+
+    Returns ``(total_count, misses)`` where ``misses`` counts segments with
+    no matching machine (falls back to machine 0 — measured, see
+    DESIGN.md §6 MapConcatenate fidelity)."""
+    total = tuples[0][0][1]
+    cur_b = tuples[0][0][2]
+    misses = 0
+    for p in range(1, len(tuples)):
+        for a, cnt, b in tuples[p]:
+            if a == cur_b:
+                total += cnt
+                cur_b = b
+                break
+        else:
+            misses += 1
+            a, cnt, b = tuples[p][0]
+            total += cnt
+            cur_b = b
+    return total, misses
+
+
+def concatenate_tree(tuples):
+    """Concatenate step as the paper's log-tree merge (§5.2.2 step 2-3):
+    adjacent segment pairs are merged level by level; a left tuple
+    ``(a, c, b)`` joins the right tuple ``(a', c', b')`` with ``a' == b``.
+
+    Left tuples with no right match keep their count and take the right
+    side's machine-0 continuation (the same fallback the fold uses).
+    Returns ``(total_count, misses)``.
+    """
+    level = [list(seg) for seg in tuples]
+    misses = 0
+    while len(level) > 1:
+        nxt = []
+        for j in range(0, len(level) - 1, 2):
+            left, right = level[j], level[j + 1]
+            merged = []
+            for a, c, b in left:
+                hit = None
+                for a2, c2, b2 in right:
+                    if a2 == b:
+                        hit = (a, c + c2, b2)
+                        break
+                if hit is None:
+                    misses += 1
+                    a2, c2, b2 = right[0]
+                    hit = (a, c + c2, b2)
+                merged.append(hit)
+            nxt.append(merged)
+        if len(level) % 2 == 1:
+            nxt.append(level[-1])
+        level = nxt
+    return level[0][0][1], misses

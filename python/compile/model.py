@@ -1,0 +1,148 @@
+"""L2: the batched episode-counting compute graphs, built on the L1 kernels.
+
+The "model" of this paper is not a neural network but the counting
+computation itself: a batch of serial-episode automata advanced over an
+event chunk. This module fixes the production shapes (the artifact matrix
+of DESIGN.md §7), provides jit-able entry points with example arguments for
+AOT lowering, and is the single source of truth for the constants the Rust
+runtime needs (mirrored into ``artifacts/manifest.txt`` by ``aot.py``).
+
+Python only ever runs at build time (``make artifacts``); the Rust
+coordinator streams arbitrary-length event sequences through these
+fixed-shape executables by carrying the automaton state across chunks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import a1, a2, mapconcat
+from .kernels.common import NEG, EV_PAD, EP_PAD
+
+# --- Production shape configuration (mirrored in artifacts/manifest.txt) ---
+
+# PTPE-style counting artifacts (A1 exact / A2 relaxed):
+M_EPISODES = 512   # episode lanes per executable call (pad with EP_PAD)
+C_CHUNK = 8192     # events per chunk (pad with EV_PAD)
+EP_BLOCK = 128     # episode lanes per Pallas grid program (VMEM tile)
+K_SLOTS = 8        # bounded occurrence-list length per level (A1)
+
+# MapConcatenate artifacts:
+MC_EPISODES = 64   # episodes per Map call
+MC_SEGMENTS = 64   # stream segments P
+MC_CHUNK = 65536   # events per Map call (whole partition in one chunk)
+
+N_MIN, N_MAX = 2, 8  # episode sizes with dedicated artifacts (N=1 is Rust)
+
+
+def a2_fn(n):
+    """A2 relaxed-counting graph for episode size ``n``.
+
+    Signature: (types[M,n], thigh[M,n-1], ev_type[C], ev_time[C],
+    s[M,n], cnt[M]) -> (s'[M,n], cnt'[M]).
+    """
+
+    def fn(types, thigh, ev_type, ev_time, s_in, cnt_in):
+        return a2.a2_count(
+            types, thigh, ev_type, ev_time, s_in, cnt_in, block=EP_BLOCK
+        )
+
+    return fn
+
+
+def a1_fn(n):
+    """A1 exact-counting graph for episode size ``n``.
+
+    Signature: (types[M,n], tlow[M,n-1], thigh[M,n-1], ev_type[C],
+    ev_time[C], s[M,n,K], cnt[M]) -> (s'[M,n,K], cnt'[M]).
+    """
+
+    def fn(types, tlow, thigh, ev_type, ev_time, s_in, cnt_in):
+        return a1.a1_count(
+            types, tlow, thigh, ev_type, ev_time, s_in, cnt_in, block=EP_BLOCK
+        )
+
+    return fn
+
+
+def mapcat_fn(n):
+    """MapConcatenate Map-step graph for episode size ``n``.
+
+    Signature: (types[E,n], tlow[E,n-1], thigh[E,n-1], ev_type[C],
+    ev_time[C], taus[P+1], seg_lo[P]) -> (a[E,P,n], cnt[E,P,n], b[E,P,n]).
+    """
+
+    def fn(types, tlow, thigh, ev_type, ev_time, taus, seg_lo):
+        return mapconcat.mapcat_map(
+            types, tlow, thigh, ev_type, ev_time, taus, seg_lo, k_slots=K_SLOTS
+        )
+
+    return fn
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs():
+    """Yield (name, fn, example_args) for every artifact to AOT-compile."""
+    for n in range(N_MIN, N_MAX + 1):
+        yield (
+            f"a2_n{n}",
+            a2_fn(n),
+            (
+                _i32((M_EPISODES, n)),
+                _i32((M_EPISODES, n - 1)),
+                _i32((C_CHUNK,)),
+                _i32((C_CHUNK,)),
+                _i32((M_EPISODES, n)),
+                _i32((M_EPISODES,)),
+            ),
+        )
+        yield (
+            f"a1_n{n}",
+            a1_fn(n),
+            (
+                _i32((M_EPISODES, n)),
+                _i32((M_EPISODES, n - 1)),
+                _i32((M_EPISODES, n - 1)),
+                _i32((C_CHUNK,)),
+                _i32((C_CHUNK,)),
+                _i32((M_EPISODES, n, K_SLOTS)),
+                _i32((M_EPISODES,)),
+            ),
+        )
+        yield (
+            f"mapcat_n{n}",
+            mapcat_fn(n),
+            (
+                _i32((MC_EPISODES, n)),
+                _i32((MC_EPISODES, n - 1)),
+                _i32((MC_EPISODES, n - 1)),
+                _i32((MC_CHUNK,)),
+                _i32((MC_CHUNK,)),
+                _i32((MC_SEGMENTS + 1,)),
+                _i32((MC_SEGMENTS,)),
+            ),
+        )
+
+
+def manifest_lines():
+    """Constants the Rust runtime must agree on, as ``key=value`` lines
+    (the offline crate set has no serde; a flat text manifest is parsed by
+    ``rust/src/runtime/manifest.rs``)."""
+    return [
+        f"m_episodes={M_EPISODES}",
+        f"c_chunk={C_CHUNK}",
+        f"ep_block={EP_BLOCK}",
+        f"k_slots={K_SLOTS}",
+        f"mc_episodes={MC_EPISODES}",
+        f"mc_segments={MC_SEGMENTS}",
+        f"mc_chunk={MC_CHUNK}",
+        f"n_min={N_MIN}",
+        f"n_max={N_MAX}",
+        f"neg_sentinel={NEG}",
+        f"ev_pad={EV_PAD}",
+        f"ep_pad={EP_PAD}",
+    ]

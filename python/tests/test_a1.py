@@ -1,0 +1,124 @@
+"""A1 kernel vs serial oracles (Algorithm 1, bounded and unbounded)."""
+
+import numpy as np
+import pytest
+
+from util import (
+    random_stream,
+    random_episode,
+    pad_events,
+    pad_episodes,
+    fresh_state_a1,
+)
+from compile.kernels import a1
+from compile.kernels import ref
+
+M, C, BLOCK, K = 8, 64, 4, 8
+
+
+def run_a1(types_l, tlow_l, thigh_l, ev, tm, n, k=K):
+    types, tlow, thigh = pad_episodes(types_l, tlow_l, thigh_l, M, n)
+    pev, ptm = pad_events(ev, tm, C)
+    s, cnt = fresh_state_a1(M, n, k)
+    s_out, cnt_out = a1.a1_count(
+        types, tlow, thigh, pev, ptm, s, cnt, block=BLOCK
+    )
+    return np.asarray(cnt_out), np.asarray(s_out)
+
+
+def test_lower_bound_rejects_recent():
+    # t_low = 2: B at distance 1 must not count, B at distance 5 must.
+    ev = np.array([0, 1, 0, 1], np.int32)
+    tm = np.array([0, 1, 10, 15], np.int32)
+    cnt, _ = run_a1([[0, 1]], [[2]], [[10]], ev, tm, 2)
+    assert cnt[0] == 1
+
+
+def test_list_needed_with_lower_bound():
+    # Events 0@0, 0@9, 1@10: the most recent A (9) fails t_low=2 but the
+    # older A (0) satisfies (2, 10]. A single-timestamp state (A2-style)
+    # would miss this; the K-list must catch it.
+    ev = np.array([0, 0, 1], np.int32)
+    tm = np.array([0, 9, 10], np.int32)
+    cnt, _ = run_a1([[0, 1]], [[2]], [[10]], ev, tm, 2)
+    assert cnt[0] == 1
+    # And with K=1 the truncated list loses the older A:
+    cnt1, _ = run_a1([[0, 1]], [[2]], [[10]], ev, tm, 2, k=1)
+    assert cnt1[0] == 0
+
+
+def test_paper_example_constraints():
+    # A -(5,10]-> B -(10,15]-> C (paper Fig. 2 constraint set).
+    ev = np.array([0, 1, 2, 0, 1, 2], np.int32)
+    tm = np.array([1, 8, 20, 30, 32, 45], np.int32)
+    # First triple: 8-1=7 in (5,10], 20-8=12 in (10,15] -> count.
+    # Second: 32-30=2 fails (5,10] -> no count.
+    cnt, _ = run_a1([[0, 1, 2]], [[5, 10]], [[10, 15]], ev, tm, 3)
+    assert cnt[0] == 1
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_vs_serial_bounded(n, seed):
+    rng = np.random.default_rng(seed * 100 + n + 7)
+    ev, tm = random_stream(rng, C - 8, 5)
+    eps = [random_episode(rng, n, 5) for _ in range(M)]
+    cnt, _ = run_a1(
+        [e[0] for e in eps], [e[1] for e in eps], [e[2] for e in eps], ev, tm, n
+    )
+    for j in range(M):
+        expect = ref.count_serial_bounded(
+            eps[j][0].tolist(), eps[j][1].tolist(), eps[j][2].tolist(), ev, tm, K
+        )
+        assert cnt[j] == expect, f"episode {j}: {cnt[j]} != {expect}"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bounded_k8_matches_unbounded_on_neural_rates(seed):
+    """At realistic event rates the K=8 bound never bites: bounded count ==
+    unbounded Algorithm 1 (the Rust serial reference)."""
+    rng = np.random.default_rng(seed)
+    ev, tm = random_stream(rng, C - 8, 8, max_gap=6)
+    for _ in range(8):
+        types, tlow, thigh = random_episode(rng, 3, 8)
+        b = ref.count_serial_bounded(
+            types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm, K
+        )
+        u = ref.count_serial(types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm)
+        assert b == u
+
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_theorem_5_1_upper_bound(n):
+    """count(alpha') >= count(alpha): the relaxed A2 count dominates the
+    exact A1 count (the soundness of two-pass elimination)."""
+    rng = np.random.default_rng(n)
+    for seed in range(6):
+        ev, tm = random_stream(rng, C - 8, 4)
+        types, tlow, thigh = random_episode(rng, n, 4)
+        a1c = ref.count_serial(types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm)
+        a2c = ref.count_a2_serial(types.tolist(), thigh.tolist(), ev, tm)
+        assert a2c >= a1c
+
+
+@pytest.mark.parametrize("split", [1, 31, 63])
+def test_chunk_carry_equivalence(split):
+    rng = np.random.default_rng(43)
+    n = 3
+    ev, tm = random_stream(rng, C - 8, 4)
+    eps = [random_episode(rng, n, 4) for _ in range(M)]
+    types, tlow, thigh = pad_episodes(
+        [e[0] for e in eps], [e[1] for e in eps], [e[2] for e in eps], M, n
+    )
+
+    pev, ptm = pad_events(ev, tm, C)
+    s, cnt = fresh_state_a1(M, n, K)
+    _, cnt_one = a1.a1_count(types, tlow, thigh, pev, ptm, s, cnt, block=BLOCK)
+
+    pev1, ptm1 = pad_events(ev[:split], tm[:split], C)
+    pev2, ptm2 = pad_events(ev[split:], tm[split:], C)
+    s, cnt = fresh_state_a1(M, n, K)
+    s1, c1 = a1.a1_count(types, tlow, thigh, pev1, ptm1, s, cnt, block=BLOCK)
+    _, cnt_two = a1.a1_count(types, tlow, thigh, pev2, ptm2, s1, c1, block=BLOCK)
+
+    np.testing.assert_array_equal(np.asarray(cnt_one), np.asarray(cnt_two))

@@ -1,0 +1,134 @@
+"""A2 kernel vs serial oracle (Algorithm 3)."""
+
+import numpy as np
+import pytest
+
+from util import (
+    random_stream,
+    random_episode,
+    pad_events,
+    pad_episodes,
+    fresh_state_a2,
+)
+from compile.kernels import a2
+from compile.kernels import ref
+
+M, C, BLOCK = 8, 64, 4
+
+
+def run_a2(types_l, thigh_l, ev, tm, n):
+    types, _, thigh = pad_episodes(
+        types_l, [np.zeros(n - 1, np.int32)] * len(types_l), thigh_l, M, n
+    )
+    pev, ptm = pad_events(ev, tm, C)
+    s, cnt = fresh_state_a2(M, n)
+    s_out, cnt_out = a2.a2_count(types, thigh, pev, ptm, s, cnt, block=BLOCK)
+    return np.asarray(cnt_out), np.asarray(s_out)
+
+
+def test_single_occurrence():
+    # A -> B -> C with t_high (10, 15]; two clean occurrences.
+    ev = np.array([0, 1, 2, 0, 1, 2], np.int32)
+    tm = np.array([1, 8, 20, 30, 35, 45], np.int32)
+    cnt, _ = run_a2([[0, 1, 2]], [[10, 15]], ev, tm, 3)
+    assert cnt[0] == 2
+
+
+def test_junk_events_interleaved():
+    # Junk events (type 9) between episode events must not break it.
+    ev = np.array([0, 9, 9, 1, 9, 2], np.int32)
+    tm = np.array([1, 2, 3, 6, 7, 12], np.int32)
+    cnt, _ = run_a2([[0, 1, 2]], [[10, 15]], ev, tm, 3)
+    assert cnt[0] == 1
+
+
+def test_upper_bound_violation():
+    # Gap beyond t_high breaks the chain.
+    ev = np.array([0, 1, 2], np.int32)
+    tm = np.array([1, 20, 25], np.int32)
+    cnt, _ = run_a2([[0, 1, 2]], [[10, 15]], ev, tm, 3)
+    assert cnt[0] == 0
+
+
+def test_simultaneous_events_chain_in_relaxed_a2():
+    # A2's relaxation is effectively [0, t_high] (Algorithm 3 line 8 checks
+    # only the upper bound): a gap of exactly 0 chains. This is required
+    # for Theorem 5.1 (A2 dominates A1) on streams with tied timestamps;
+    # A1 itself still rejects d == 0 via its strict (t_low, t_high].
+    ev = np.array([0, 1], np.int32)
+    tm = np.array([5, 5], np.int32)
+    cnt, _ = run_a2([[0, 1]], [[10]], ev, tm, 2)
+    assert cnt[0] == 1
+
+
+def test_non_overlap_reset():
+    # A A B B: only one non-overlapped occurrence of A->B is counted by the
+    # left-most inner-most semantics (count resets consume state).
+    ev = np.array([0, 0, 1, 1], np.int32)
+    tm = np.array([1, 2, 4, 5], np.int32)
+    cnt, _ = run_a2([[0, 1]], [[10]], ev, tm, 2)
+    # First B at 4 completes with latest A (2); state reset; second B at 5
+    # finds no A.
+    assert cnt[0] == 1
+
+
+def test_event_cannot_serve_two_levels():
+    # Episode A -> A: one event must not chain with itself.
+    ev = np.array([0, 0], np.int32)
+    tm = np.array([1, 4], np.int32)
+    cnt, _ = run_a2([[0, 0]], [[10]], ev, tm, 2)
+    assert cnt[0] == 1
+
+
+def test_duplicate_type_episode_repeated():
+    ev = np.array([0, 0, 0, 0, 0], np.int32)
+    tm = np.array([1, 3, 5, 7, 9], np.int32)
+    cnt, _ = run_a2([[0, 0]], [[10]], ev, tm, 2)
+    # occurrences: (1,3) count, reset; (5,7) count, reset; 9 dangling.
+    assert cnt[0] == 2
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_vs_serial(n, seed):
+    rng = np.random.default_rng(seed * 100 + n)
+    ev, tm = random_stream(rng, C - 8, 5)
+    eps = [random_episode(rng, n, 5) for _ in range(M)]
+    types_l = [e[0] for e in eps]
+    thigh_l = [e[2] for e in eps]
+    cnt, _ = run_a2(types_l, thigh_l, ev, tm, n)
+    for j in range(M):
+        expect = ref.count_a2_serial(types_l[j].tolist(), thigh_l[j].tolist(), ev, tm)
+        assert cnt[j] == expect, f"episode {j}: {cnt[j]} != {expect}"
+
+
+@pytest.mark.parametrize("split", [1, 17, 32, 63])
+def test_chunk_carry_equivalence(split):
+    """Streaming the events through two chunks with carried state must give
+    the same counts as one pass — the contract the Rust runtime relies on."""
+    rng = np.random.default_rng(42)
+    n = 3
+    ev, tm = random_stream(rng, C - 8, 4)
+    eps = [random_episode(rng, n, 4) for _ in range(M)]
+    types, _, thigh = pad_episodes(
+        [e[0] for e in eps], [e[1] for e in eps], [e[2] for e in eps], M, n
+    )
+
+    pev, ptm = pad_events(ev, tm, C)
+    s, cnt = fresh_state_a2(M, n)
+    _, cnt_one = a2.a2_count(types, thigh, pev, ptm, s, cnt, block=BLOCK)
+
+    pev1, ptm1 = pad_events(ev[:split], tm[:split], C)
+    pev2, ptm2 = pad_events(ev[split:], tm[split:], C)
+    s, cnt = fresh_state_a2(M, n)
+    s1, c1 = a2.a2_count(types, thigh, pev1, ptm1, s, cnt, block=BLOCK)
+    _, cnt_two = a2.a2_count(types, thigh, pev2, ptm2, s1, c1, block=BLOCK)
+
+    np.testing.assert_array_equal(np.asarray(cnt_one), np.asarray(cnt_two))
+
+
+def test_padded_lanes_stay_zero():
+    ev = np.array([0, 1, 2], np.int32)
+    tm = np.array([1, 2, 3], np.int32)
+    cnt, _ = run_a2([[0, 1]], [[5]], ev, tm, 2)
+    assert (cnt[1:] == 0).all()

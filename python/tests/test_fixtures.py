@@ -1,0 +1,60 @@
+"""Cross-language fixtures: the same stream, episodes, and expected counts
+are asserted here and in ``rust/tests/cross_fixtures.rs``. If either side
+drifts from the paper's semantics, the two suites diverge and one fails.
+
+The stream is 60 events over 6 types with tied timestamps included
+(np.random.default_rng(2009); literals inlined so neither side needs the
+other's RNG)."""
+
+import numpy as np
+
+from util import pad_events, pad_episodes, fresh_state_a1, fresh_state_a2
+from compile.kernels import a1, a2, ref
+
+EV = [5, 1, 2, 3, 4, 5, 0, 2, 0, 2, 0, 1, 4, 4, 3, 1, 1, 4, 4, 0, 5, 2, 0,
+      1, 2, 3, 2, 4, 3, 5, 1, 4, 5, 0, 5, 1, 5, 3, 2, 2, 5, 2, 1, 3, 0, 2,
+      4, 3, 4, 4, 3, 3, 5, 5, 4, 2, 1, 4, 3, 2]
+TM = [2, 5, 5, 6, 9, 9, 9, 12, 13, 14, 17, 17, 20, 20, 21, 22, 22, 24, 27,
+      28, 29, 31, 34, 35, 38, 41, 44, 45, 46, 48, 48, 48, 49, 49, 52, 53,
+      56, 57, 59, 62, 64, 64, 64, 64, 64, 64, 65, 66, 66, 66, 66, 66, 69,
+      69, 72, 75, 75, 77, 77, 77]
+
+# (types, tlow, thigh, a1_count, a2_count) — a1 == bounded(K=8) on this data
+CASES = [
+    ([1, 1, 2], [0, 0], [10, 10], 2, 2),
+    ([5, 0, 3, 2], [0, 0, 0], [12, 12, 12], 2, 3),
+    ([4, 3], [0], [3], 3, 5),
+    ([2, 0, 1], [1, 0], [9, 12], 4, 4),
+]
+
+M, C, BLOCK, K = 8, 64, 4, 8
+
+
+def test_oracle_matches_fixture_counts():
+    ev = np.asarray(EV, np.int32)
+    tm = np.asarray(TM, np.int32)
+    for types, tlow, thigh, a1_expect, a2_expect in CASES:
+        assert ref.count_serial(types, tlow, thigh, ev, tm) == a1_expect
+        assert ref.count_serial_bounded(types, tlow, thigh, ev, tm, K) == a1_expect
+        assert ref.count_a2_serial(types, thigh, ev, tm) == a2_expect
+
+
+def test_kernels_match_fixture_counts():
+    ev = np.asarray(EV, np.int32)
+    tm = np.asarray(TM, np.int32)
+    pev, ptm = pad_events(ev, tm, C)
+    for types, tlow, thigh, a1_expect, a2_expect in CASES:
+        n = len(types)
+        ty, lo, hi = pad_episodes(
+            [np.asarray(types, np.int32)],
+            [np.asarray(tlow, np.int32)],
+            [np.asarray(thigh, np.int32)],
+            M,
+            n,
+        )
+        s, cnt = fresh_state_a1(M, n, K)
+        _, c1 = a1.a1_count(ty, lo, hi, pev, ptm, s, cnt, block=BLOCK)
+        assert int(np.asarray(c1)[0]) == a1_expect
+        s, cnt = fresh_state_a2(M, n)
+        _, c2 = a2.a2_count(ty, hi, pev, ptm, s, cnt, block=BLOCK)
+        assert int(np.asarray(c2)[0]) == a2_expect

@@ -1,0 +1,136 @@
+"""MapConcatenate Map kernel vs serial reference, and full
+Map+Concatenate vs the single-machine serial count."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from util import random_stream, random_episode, pad_events
+from compile.kernels import mapconcat
+from compile.kernels import ref
+from compile.kernels.common import EV_PAD
+
+K = 8
+
+
+def make_segments(tm, p_count):
+    """Even time segmentation: taus[0] < first event, taus[P] >= last."""
+    t0, t1 = int(tm[0]) - 1, int(tm[-1])
+    span = max(t1 - t0, p_count)
+    taus = [t0 + (span * i) // p_count for i in range(p_count)] + [t1]
+    return np.asarray(taus, np.int32)
+
+
+def seg_lo_indices(tm, taus):
+    """Scan-start index per segment: first event of the previous segment."""
+    p_count = len(taus) - 1
+    firsts = np.searchsorted(tm, taus[:-1], side="right")
+    lo = np.zeros(p_count, np.int64)
+    lo[1:] = firsts[:-1]
+    return lo.astype(np.int32)
+
+
+def run_map(types_l, tlow_l, thigh_l, ev, tm, taus, c=256):
+    e_count = len(types_l)
+    n = len(types_l[0])
+    types = jnp.asarray(np.stack(types_l).astype(np.int32))
+    tlow = jnp.asarray(np.stack(tlow_l).astype(np.int32).reshape(e_count, n - 1))
+    thigh = jnp.asarray(np.stack(thigh_l).astype(np.int32).reshape(e_count, n - 1))
+    pev, ptm = pad_events(ev, tm, c)
+    lo = seg_lo_indices(tm, taus)
+    a, cnt, b = mapconcat.mapcat_map(
+        types, tlow, thigh, pev, ptm, jnp.asarray(taus), jnp.asarray(lo), k_slots=K
+    )
+    return np.asarray(a), np.asarray(cnt), np.asarray(b)
+
+
+def tuples_from_arrays(a, cnt, b, e):
+    p_count, n = a.shape[1], a.shape[2]
+    return [
+        [(int(a[e, p, k]), int(cnt[e, p, k]), int(b[e, p, k])) for k in range(n)]
+        for p in range(p_count)
+    ]
+
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("p_count", [2, 4])
+def test_map_kernel_matches_serial_map(n, seed, p_count):
+    rng = np.random.default_rng(seed * 10 + n)
+    ev, tm = random_stream(rng, 200, 5)
+    taus = make_segments(tm, p_count)
+    eps = [random_episode(rng, n, 5) for _ in range(4)]
+    a, cnt, b = run_map(
+        [e[0] for e in eps], [e[1] for e in eps], [e[2] for e in eps], ev, tm, taus
+    )
+    for j, (types, tlow, thigh) in enumerate(eps):
+        expect = ref.mapcat_map_serial(
+            types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm, taus.tolist(), K
+        )
+        got = tuples_from_arrays(a, cnt, b, j)
+        assert got == expect, f"episode {j}: {got} != {expect}"
+
+
+@pytest.mark.parametrize("n", [2, 3])
+@pytest.mark.parametrize("p_count", [2, 4, 8])
+def test_concatenate_equals_serial_on_sparse(n, p_count):
+    """On sparse streams (occurrences well inside segments) the Map +
+    Concatenate total must equal the serial Algorithm 1 count exactly."""
+    rng = np.random.default_rng(99 + n + p_count)
+    # Sparse: large gaps relative to t_high so occurrences rarely straddle.
+    ev, tm = random_stream(rng, 150, 4, max_gap=9)
+    taus = make_segments(tm, p_count)
+    eps = [random_episode(rng, n, 4, max_low=1, max_high=5) for _ in range(4)]
+    a, cnt, b = run_map(
+        [e[0] for e in eps], [e[1] for e in eps], [e[2] for e in eps], ev, tm, taus
+    )
+    for j, (types, tlow, thigh) in enumerate(eps):
+        serial = ref.count_serial_bounded(
+            types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm, K
+        )
+        tuples = tuples_from_arrays(a, cnt, b, j)
+        total, misses = ref.concatenate_fold(tuples)
+        assert total == serial, f"episode {j}: {total} != {serial} (misses={misses})"
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_concatenate_dense_streams(seed):
+    """Dense streams with straddling occurrences: measure that the
+    boundary-machine construction reproduces the serial count."""
+    rng = np.random.default_rng(seed)
+    ev, tm = random_stream(rng, 200, 3, max_gap=3)
+    taus = make_segments(tm, 4)
+    types, tlow, thigh = random_episode(rng, 3, 3, max_low=2, max_high=8)
+    a, cnt, b = run_map([types], [tlow], [thigh], ev, tm, taus)
+    serial = ref.count_serial_bounded(
+        types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm, K
+    )
+    total, misses = ref.concatenate_fold(tuples_from_arrays(a, cnt, b, 0))
+    assert total == serial, f"{total} != {serial} (misses={misses})"
+
+
+def test_tree_equals_fold():
+    rng = np.random.default_rng(7)
+    ev, tm = random_stream(rng, 200, 4, max_gap=4)
+    taus = make_segments(tm, 8)
+    for _ in range(6):
+        types, tlow, thigh = random_episode(rng, 3, 4)
+        tuples = ref.mapcat_map_serial(
+            types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm, taus.tolist(), K
+        )
+        ft, fm = ref.concatenate_fold(tuples)
+        tt, tmiss = ref.concatenate_tree(tuples)
+        assert ft == tt
+
+
+def test_single_segment_is_plain_count():
+    rng = np.random.default_rng(3)
+    ev, tm = random_stream(rng, 100, 4)
+    taus = np.asarray([int(tm[0]) - 1, int(tm[-1])], np.int32)
+    types, tlow, thigh = random_episode(rng, 3, 4)
+    a, cnt, b = run_map([types], [tlow], [thigh], ev, tm, taus)
+    serial = ref.count_serial_bounded(
+        types.tolist(), tlow.tolist(), thigh.tolist(), ev, tm, K
+    )
+    # machine 0 of the single segment sees the whole stream
+    assert int(cnt[0, 0, 0]) == serial

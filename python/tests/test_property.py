@@ -1,0 +1,89 @@
+"""Hypothesis sweeps: kernel shapes/dtypes/data vs the ref.py oracles.
+
+Shapes are drawn from a small fixed menu so XLA's compile cache is reused
+across examples (fresh shapes would recompile the interpret-lowered kernel
+on every example)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from util import pad_events, pad_episodes, fresh_state_a1, fresh_state_a2
+from compile.kernels import a1, a2
+from compile.kernels import ref
+
+M, C, BLOCK, K = 8, 64, 4, 8
+
+
+@st.composite
+def stream_and_episodes(draw, n):
+    n_events = draw(st.integers(min_value=0, max_value=C - 8))
+    n_types = draw(st.sampled_from([2, 4, 6]))
+    ev = draw(
+        st.lists(
+            st.integers(0, n_types - 1), min_size=n_events, max_size=n_events
+        )
+    )
+    gaps = draw(st.lists(st.integers(0, 5), min_size=n_events, max_size=n_events))
+    tm = np.cumsum(np.asarray(gaps, np.int64)).astype(np.int32)
+    eps = []
+    for _ in range(M):
+        types = draw(
+            st.lists(st.integers(0, n_types - 1), min_size=n, max_size=n)
+        )
+        tlow = draw(st.lists(st.integers(0, 3), min_size=n - 1, max_size=n - 1))
+        thigh = [lo + draw(st.integers(1, 10)) for lo in tlow]
+        eps.append(
+            (
+                np.asarray(types, np.int32),
+                np.asarray(tlow, np.int32),
+                np.asarray(thigh, np.int32),
+            )
+        )
+    return np.asarray(ev, np.int32), tm, eps
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=stream_and_episodes(n=3))
+def test_a1_kernel_matches_oracle(data):
+    ev, tm, eps = data
+    n = 3
+    types, tlow, thigh = pad_episodes(
+        [e[0] for e in eps], [e[1] for e in eps], [e[2] for e in eps], M, n
+    )
+    pev, ptm = pad_events(ev, tm, C) if len(ev) else pad_events(
+        np.asarray([0], np.int32), np.asarray([0], np.int32), C
+    )
+    if len(ev) == 0:
+        ev = np.asarray([0], np.int32)
+        tm = np.asarray([0], np.int32)
+    s, cnt = fresh_state_a1(M, n, K)
+    _, cnt_out = a1.a1_count(types, tlow, thigh, pev, ptm, s, cnt, block=BLOCK)
+    cnt_out = np.asarray(cnt_out)
+    for j, (ty, lo, hi) in enumerate(eps):
+        expect = ref.count_serial_bounded(
+            ty.tolist(), lo.tolist(), hi.tolist(), ev, tm, K
+        )
+        assert cnt_out[j] == expect
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=stream_and_episodes(n=4))
+def test_a2_kernel_matches_oracle_and_dominates_a1(data):
+    ev, tm, eps = data
+    n = 4
+    types, _, thigh = pad_episodes(
+        [e[0] for e in eps], [e[1] for e in eps], [e[2] for e in eps], M, n
+    )
+    if len(ev) == 0:
+        ev = np.asarray([0], np.int32)
+        tm = np.asarray([0], np.int32)
+    pev, ptm = pad_events(ev, tm, C)
+    s, cnt = fresh_state_a2(M, n)
+    _, cnt_out = a2.a2_count(types, thigh, pev, ptm, s, cnt, block=BLOCK)
+    cnt_out = np.asarray(cnt_out)
+    for j, (ty, lo, hi) in enumerate(eps):
+        expect = ref.count_a2_serial(ty.tolist(), hi.tolist(), ev, tm)
+        assert cnt_out[j] == expect
+        # Theorem 5.1: relaxed count is an upper bound on the exact count.
+        exact = ref.count_serial(ty.tolist(), lo.tolist(), hi.tolist(), ev, tm)
+        assert cnt_out[j] >= exact

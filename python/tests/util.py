@@ -1,0 +1,85 @@
+"""Shared helpers for the kernel test-suite."""
+
+import numpy as np
+import jax.numpy as jnp
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels.common import NEG, EV_PAD, EP_PAD  # noqa: E402
+
+
+def random_stream(rng, n_events, n_types, max_gap=4):
+    """Time-sorted random event stream with strictly positive total span.
+
+    Gaps of 0 are included on purpose: simultaneous events exercise the
+    strict lower bound of the ``(t_low, t_high]`` constraint.
+    """
+    ev = rng.integers(0, n_types, size=n_events).astype(np.int32)
+    gaps = rng.integers(0, max_gap + 1, size=n_events)
+    tm = np.cumsum(gaps).astype(np.int32)
+    return ev, tm
+
+
+def random_episode(rng, n, n_types, max_low=3, max_high=12):
+    """Random episode of size n with random (t_low, t_high] constraints."""
+    types = rng.integers(0, n_types, size=n).astype(np.int32)
+    tlow = rng.integers(0, max_low + 1, size=n - 1).astype(np.int32)
+    thigh = (tlow + 1 + rng.integers(0, max_high, size=n - 1)).astype(np.int32)
+    return types, tlow, thigh
+
+
+def planted_stream(rng, types, delays, n_reps, noise_types, noise_rate, gap):
+    """Stream with ``n_reps`` planted occurrences of ``types`` separated by
+    ``gap`` ticks, interleaved with uniform noise events."""
+    ev, tm = [], []
+    t = 1
+    for _ in range(n_reps):
+        for i, e in enumerate(types):
+            ev.append(e)
+            tm.append(t)
+            if i < len(delays):
+                t += delays[i]
+        t += gap
+    # noise
+    n_noise = int(len(ev) * noise_rate)
+    if n_noise and noise_types:
+        nev = rng.choice(noise_types, size=n_noise)
+        ntm = rng.integers(1, max(t, 2), size=n_noise)
+        ev = np.concatenate([np.array(ev), nev])
+        tm = np.concatenate([np.array(tm), ntm])
+        order = np.argsort(tm, kind="stable")
+        ev, tm = ev[order], tm[order]
+    return np.asarray(ev, np.int32), np.asarray(tm, np.int32)
+
+
+def pad_events(ev, tm, c):
+    """Pad an event stream to chunk length ``c`` with EV_PAD events."""
+    assert len(ev) <= c
+    pe = np.full(c, EV_PAD, np.int32)
+    pt = np.full(c, tm[-1] if len(tm) else 0, np.int32)
+    pe[: len(ev)] = ev
+    pt[: len(tm)] = tm
+    return jnp.asarray(pe), jnp.asarray(pt)
+
+
+def pad_episodes(types_list, tlow_list, thigh_list, m, n):
+    """Pad an episode batch to ``m`` lanes with EP_PAD episodes."""
+    types = np.full((m, n), EP_PAD, np.int32)
+    tlow = np.zeros((m, n - 1), np.int32)
+    thigh = np.zeros((m, n - 1), np.int32)
+    for j, (ty, lo, hi) in enumerate(zip(types_list, tlow_list, thigh_list)):
+        types[j] = ty
+        tlow[j] = lo
+        thigh[j] = hi
+    return jnp.asarray(types), jnp.asarray(tlow), jnp.asarray(thigh)
+
+
+def fresh_state_a2(m, n):
+    return jnp.full((m, n), NEG, jnp.int32), jnp.zeros((m,), jnp.int32)
+
+
+def fresh_state_a1(m, n, k):
+    return jnp.full((m, n, k), NEG, jnp.int32), jnp.zeros((m,), jnp.int32)

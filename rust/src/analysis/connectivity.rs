@@ -1,0 +1,200 @@
+//! Functional-connectivity reconstruction from mined episodes (paper
+//! Fig. 1 right-to-left arrow; the end product of chip-on-chip mining).
+//!
+//! Every adjacent pair inside a frequent episode is evidence for a
+//! directed functional edge A -> B with the episode's inter-event delay.
+//! Edges are scored by the maximum support among the episodes that
+//! contain them; the reconstructed graph is compared against a generator
+//! ground truth with precision/recall.
+
+use std::collections::HashMap;
+
+use crate::episodes::{CountedEpisode, Episode};
+use crate::events::EventType;
+
+/// A directed functional edge with its evidence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Edge {
+    pub from: EventType,
+    pub to: EventType,
+    /// strongest support among episodes containing this edge
+    pub support: u64,
+    /// delay bounds of the supporting constraint
+    pub t_low: i32,
+    pub t_high: i32,
+}
+
+/// The reconstructed functional-connectivity graph.
+#[derive(Clone, Debug, Default)]
+pub struct Circuit {
+    pub edges: Vec<Edge>,
+}
+
+impl Circuit {
+    /// Build from mined episodes: every adjacent pair contributes an edge
+    /// candidate; keep the strongest evidence per (from, to).
+    pub fn reconstruct(frequent: &[CountedEpisode]) -> Circuit {
+        let mut best: HashMap<(EventType, EventType), Edge> = HashMap::new();
+        for c in frequent {
+            let ep = &c.episode;
+            for i in 0..ep.n().saturating_sub(1) {
+                let key = (ep.types[i], ep.types[i + 1]);
+                let iv = &ep.intervals[i];
+                let e = best.entry(key).or_insert(Edge {
+                    from: key.0,
+                    to: key.1,
+                    support: 0,
+                    t_low: iv.t_low,
+                    t_high: iv.t_high,
+                });
+                if c.count > e.support {
+                    e.support = c.count;
+                    e.t_low = iv.t_low;
+                    e.t_high = iv.t_high;
+                }
+            }
+        }
+        let mut edges: Vec<Edge> = best.into_values().collect();
+        edges.sort_by_key(|e| (std::cmp::Reverse(e.support), e.from, e.to));
+        Circuit { edges }
+    }
+
+    /// Keep only edges with support >= threshold.
+    pub fn thresholded(&self, min_support: u64) -> Circuit {
+        Circuit {
+            edges: self.edges.iter().filter(|e| e.support >= min_support).cloned().collect(),
+        }
+    }
+
+    pub fn contains(&self, from: EventType, to: EventType) -> bool {
+        self.edges.iter().any(|e| e.from == from && e.to == to)
+    }
+
+    /// Precision/recall against ground-truth chains (the generator's
+    /// embedded circuits).
+    pub fn score(&self, truth_chains: &[Episode]) -> Score {
+        let mut truth: Vec<(EventType, EventType)> = vec![];
+        for ch in truth_chains {
+            for w in ch.types.windows(2) {
+                truth.push((w[0], w[1]));
+            }
+        }
+        truth.sort_unstable();
+        truth.dedup();
+        let tp = self
+            .edges
+            .iter()
+            .filter(|e| truth.contains(&(e.from, e.to)))
+            .count();
+        Score {
+            true_positives: tp,
+            predicted: self.edges.len(),
+            actual: truth.len(),
+        }
+    }
+
+    /// Graphviz dot rendering for the supplementary-style visuals.
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from("digraph circuit {\n  rankdir=LR;\n");
+        for e in &self.edges {
+            s.push_str(&format!(
+                "  n{} -> n{} [label=\"{} ({},{}]\"];\n",
+                e.from, e.to, e.support, e.t_low, e.t_high
+            ));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Score {
+    pub true_positives: usize,
+    pub predicted: usize,
+    pub actual: usize,
+}
+
+impl Score {
+    pub fn precision(&self) -> f64 {
+        if self.predicted == 0 {
+            return 1.0;
+        }
+        self.true_positives as f64 / self.predicted as f64
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.actual == 0 {
+            return 1.0;
+        }
+        self.true_positives as f64 / self.actual as f64
+    }
+
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            return 0.0;
+        }
+        2.0 * p * r / (p + r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+
+    fn counted(types: Vec<i32>, count: u64) -> CountedEpisode {
+        let iv = Interval::new(2, 10);
+        let n = types.len();
+        CountedEpisode { episode: Episode::new(types, vec![iv; n - 1]), count }
+    }
+
+    #[test]
+    fn reconstruct_takes_max_support_per_edge() {
+        let c = Circuit::reconstruct(&[
+            counted(vec![0, 1], 5),
+            counted(vec![0, 1, 2], 9),
+            counted(vec![1, 2], 3),
+        ]);
+        let e01 = c.edges.iter().find(|e| e.from == 0 && e.to == 1).unwrap();
+        assert_eq!(e01.support, 9);
+        let e12 = c.edges.iter().find(|e| e.from == 1 && e.to == 2).unwrap();
+        assert_eq!(e12.support, 9);
+        assert_eq!(c.edges.len(), 2);
+    }
+
+    #[test]
+    fn threshold_filters() {
+        let c = Circuit::reconstruct(&[counted(vec![0, 1], 5), counted(vec![2, 3], 50)]);
+        let t = c.thresholded(10);
+        assert_eq!(t.edges.len(), 1);
+        assert!(t.contains(2, 3));
+    }
+
+    #[test]
+    fn score_precision_recall() {
+        let truth = vec![Episode::new(
+            vec![0, 1, 2],
+            vec![Interval::new(2, 10); 2],
+        )];
+        let c = Circuit::reconstruct(&[
+            counted(vec![0, 1], 5), // true edge
+            counted(vec![5, 6], 5), // false edge
+        ]);
+        let s = c.score(&truth);
+        assert_eq!(s.true_positives, 1);
+        assert_eq!(s.predicted, 2);
+        assert_eq!(s.actual, 2); // (0,1), (1,2)
+        assert!((s.precision() - 0.5).abs() < 1e-9);
+        assert!((s.recall() - 0.5).abs() < 1e-9);
+        assert!(s.f1() > 0.0);
+    }
+
+    #[test]
+    fn dot_output_contains_edges() {
+        let c = Circuit::reconstruct(&[counted(vec![3, 7], 12)]);
+        let dot = c.to_dot();
+        assert!(dot.contains("n3 -> n7"));
+        assert!(dot.contains("digraph"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Post-mining analysis: turning frequent episodes into neuroscience
+//! artifacts (paper Fig. 1: "frequent episodes ... summarized to
+//! reconstruct the underlying neuronal circuitry", §6.5 evolving
+//! cultures).
+
+pub mod connectivity;
+pub mod summarize;
+pub mod raster;

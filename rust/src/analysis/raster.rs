@@ -1,0 +1,97 @@
+//! ASCII raster plots of spike trains with episode-occurrence overlays —
+//! the terminal stand-in for the paper's supplementary visualizations
+//! ("fast-forward and slow-play facilities", §7).
+
+use crate::episodes::Episode;
+use crate::events::{EventStream, Tick};
+
+/// Render a raster of the stream window `(t0, t1]`: one row per event
+/// type (top `max_rows` busiest), one column per `bin` ticks; cell shows
+/// event density. Rows participating in `highlight` are marked.
+pub fn render(
+    stream: &EventStream,
+    t0: Tick,
+    t1: Tick,
+    width: usize,
+    max_rows: usize,
+    highlight: Option<&Episode>,
+) -> String {
+    assert!(t1 > t0 && width > 0);
+    let win = stream.window(t0, t1);
+    let bin = ((t1 - t0) as f64 / width as f64).max(1.0);
+    // busiest rows first
+    let counts = win.type_counts();
+    let mut order: Vec<usize> = (0..stream.n_types).collect();
+    order.sort_by_key(|&ty| std::cmp::Reverse(counts.get(ty).copied().unwrap_or(0)));
+    order.truncate(max_rows);
+    order.sort_unstable();
+
+    let mut grid = vec![vec![0u32; width]; order.len()];
+    for (e, t) in win.iter() {
+        if let Some(row) = order.iter().position(|&ty| ty == e as usize) {
+            let col = (((t - t0) as f64 - 1.0) / bin).max(0.0) as usize;
+            grid[row][col.min(width - 1)] += 1;
+        }
+    }
+
+    let mut s = String::new();
+    s.push_str(&format!("raster ({t0}, {t1}] — {} events, bin {bin:.0} ticks\n", win.len()));
+    for (row, &ty) in order.iter().enumerate() {
+        let mark = highlight
+            .map(|ep| if ep.types.contains(&(ty as i32)) { '*' } else { ' ' })
+            .unwrap_or(' ');
+        s.push_str(&format!("{mark}{ty:>4} |"));
+        for &c in &grid[row] {
+            s.push(match c {
+                0 => ' ',
+                1 => '.',
+                2..=3 => ':',
+                4..=7 => '+',
+                _ => '#',
+            });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+
+    fn stream() -> EventStream {
+        EventStream::from_pairs(
+            vec![(0, 10), (1, 15), (0, 20), (2, 25), (0, 25), (1, 30)],
+            3,
+        )
+    }
+
+    #[test]
+    fn renders_expected_shape() {
+        let s = stream();
+        let out = render(&s, 0, 40, 20, 3, None);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 3 rows
+        assert!(lines[0].contains("6 events"));
+        assert!(lines[1].contains('|'));
+    }
+
+    #[test]
+    fn highlight_marks_episode_rows() {
+        let s = stream();
+        let ep = Episode::new(vec![0, 1], vec![Interval::new(1, 10)]);
+        let out = render(&s, 0, 40, 20, 3, Some(&ep));
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines[1].starts_with('*')); // type 0
+        assert!(lines[2].starts_with('*')); // type 1
+        assert!(lines[3].starts_with(' ')); // type 2
+    }
+
+    #[test]
+    fn respects_max_rows() {
+        let s = stream();
+        let out = render(&s, 0, 40, 10, 2, None);
+        assert_eq!(out.lines().count(), 3);
+    }
+}

@@ -1,0 +1,107 @@
+//! Episode-set summarization: reduce the mined lattice to its maximal,
+//! non-redundant members — what a neuroscientist actually reads.
+//!
+//! A frequent episode is *subsumed* by a longer frequent episode that
+//! contains it as a contiguous sub-episode with the same constraints
+//! (its count is then explained by the longer chain). The summary keeps
+//! only non-subsumed episodes, optionally merging near-duplicate chains.
+
+use crate::episodes::CountedEpisode;
+
+/// Is `a` a contiguous sub-episode of `b` (same types and intervals)?
+pub fn is_sub_episode(a: &CountedEpisode, b: &CountedEpisode) -> bool {
+    let (ea, eb) = (&a.episode, &b.episode);
+    let (na, nb) = (ea.n(), eb.n());
+    if na > nb {
+        return false;
+    }
+    if na == nb {
+        return ea == eb;
+    }
+    (0..=nb - na).any(|off| {
+        ea.types[..] == eb.types[off..off + na]
+            && ea.intervals[..] == eb.intervals[off..off + na - 1]
+    })
+}
+
+/// Keep only maximal episodes: those not subsumed by any other frequent
+/// episode. `slack` tolerates support decay along the chain: a
+/// sub-episode is only pruned if the superset's count is at least
+/// `slack * sub.count` (slack in (0, 1]; 1.0 = prune only when counts
+/// match exactly).
+pub fn maximal_episodes(frequent: &[CountedEpisode], slack: f64) -> Vec<CountedEpisode> {
+    assert!(slack > 0.0 && slack <= 1.0);
+    let mut out: Vec<CountedEpisode> = vec![];
+    for (i, cand) in frequent.iter().enumerate() {
+        let subsumed = frequent.iter().enumerate().any(|(j, other)| {
+            i != j
+                && other.episode.n() > cand.episode.n()
+                && is_sub_episode(cand, other)
+                && other.count as f64 >= slack * cand.count as f64
+        });
+        if !subsumed {
+            out.push(cand.clone());
+        }
+    }
+    out.sort_by_key(|c| (std::cmp::Reverse(c.episode.n()), std::cmp::Reverse(c.count)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::{Episode, Interval};
+
+    fn counted(types: Vec<i32>, count: u64) -> CountedEpisode {
+        let iv = Interval::new(2, 10);
+        let n = types.len();
+        CountedEpisode { episode: Episode::new(types, vec![iv; n - 1]), count }
+    }
+
+    #[test]
+    fn sub_episode_detection() {
+        let a = counted(vec![1, 2], 10);
+        let b = counted(vec![0, 1, 2, 3], 9);
+        assert!(is_sub_episode(&a, &b));
+        let c = counted(vec![2, 1], 10);
+        assert!(!is_sub_episode(&c, &b));
+    }
+
+    #[test]
+    fn sub_episode_requires_same_intervals() {
+        let a = CountedEpisode {
+            episode: Episode::new(vec![1, 2], vec![Interval::new(0, 5)]),
+            count: 5,
+        };
+        let b = counted(vec![0, 1, 2], 5); // intervals (2,10]
+        assert!(!is_sub_episode(&a, &b));
+    }
+
+    #[test]
+    fn maximal_keeps_longest_chain_only() {
+        let set = vec![
+            counted(vec![0, 1], 12),
+            counted(vec![1, 2], 11),
+            counted(vec![0, 1, 2], 10),
+        ];
+        let max = maximal_episodes(&set, 0.5);
+        assert_eq!(max.len(), 1);
+        assert_eq!(max[0].episode.types, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn slack_protects_much_stronger_subchains() {
+        // sub-chain occurs 100x, super-chain only 10x: with slack 0.5 the
+        // sub-chain is NOT explained away by the longer one
+        let set = vec![counted(vec![0, 1], 100), counted(vec![0, 1, 2], 10)];
+        let max = maximal_episodes(&set, 0.5);
+        assert_eq!(max.len(), 2);
+    }
+
+    #[test]
+    fn unrelated_episodes_survive() {
+        let set = vec![counted(vec![0, 1, 2], 10), counted(vec![5, 6], 8)];
+        let max = maximal_episodes(&set, 0.9);
+        assert_eq!(max.len(), 2);
+    }
+}

@@ -1,0 +1,199 @@
+//! MapConcatenate: segment planning and the host-side Concatenate step
+//! (paper §5.2.2).
+//!
+//! The Map step runs on the accelerator (`runtime::exec::mapcat_map`,
+//! kernel `python/compile/kernels/mapconcat.py`); this module plans the
+//! segmentation and merges the per-segment boundary-machine tuples.
+//! Merging is implemented both as a left fold (the production path — O(P)
+//! with tiny constants) and as the paper's log-tree (what the GPU's
+//! Concatenate kernel does in `q+1` levels); the two are property-tested
+//! equal.
+
+use anyhow::Result;
+
+use crate::episodes::Episode;
+use crate::events::{EventStream, Tick};
+use crate::runtime::{exec, Runtime};
+
+/// A planned segmentation: P+1 boundary times.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub taus: Vec<Tick>,
+}
+
+/// Plan an even time segmentation into the manifest's P segments, or
+/// `None` if MapConcatenate is infeasible for this workload:
+/// - the stream exceeds the Map chunk capacity, or
+/// - some episode's constraint window (`sum t_high`) is wider than a
+///   segment (boundary machines would need to reach beyond the adjacent
+///   segment, which the Map kernel does not scan).
+pub fn plan(rt: &Runtime, episodes: &[Episode], stream: &EventStream) -> Option<Plan> {
+    let mf = rt.manifest();
+    let p = mf.mc_segments as i64;
+    if stream.len() > mf.mc_chunk || stream.is_empty() {
+        return None;
+    }
+    let t0 = stream.t_begin() as i64 - 1;
+    let t1 = stream.t_end() as i64;
+    let span = t1 - t0;
+    if span < p {
+        return None; // degenerate: fewer ticks than segments
+    }
+    let seg_width = span / p; // narrowest segment width
+    let max_span = episodes.iter().map(|e| e.span_max() as i64).max().unwrap_or(0);
+    if max_span >= seg_width {
+        return None;
+    }
+    let taus: Vec<Tick> = (0..p).map(|i| (t0 + span * i / p) as Tick).chain([t1 as Tick]).collect();
+    Some(Plan { taus })
+}
+
+/// Run Map on the accelerator and Concatenate on the host. Returns the
+/// per-episode counts and per-episode concatenate miss counts.
+///
+/// A *miss* is a chain step whose `cur_b` matched no machine's `a` in the
+/// next segment: the paper's N boundary machines do not cover every
+/// automaton entry state (rare, but real — see DESIGN.md §6), and a missed
+/// segment can silently drop occurrences. Crucially a mismatch is always
+/// accompanied by a miss: whenever some machine's `a` equals the chain's
+/// `cur_b`, that machine's first completion coincides with the reference
+/// automaton's, after which both are reset-synchronized — so matched
+/// chains are exact. The coordinator therefore recounts only episodes
+/// whose miss count is nonzero (via PTPE) to restore exactness.
+pub fn count(
+    rt: &Runtime,
+    episodes: &[Episode],
+    stream: &EventStream,
+    plan: &Plan,
+) -> Result<(Vec<u64>, Vec<u64>)> {
+    let tuples = exec::mapcat_map(rt, episodes, stream, &plan.taus)?;
+    let mut counts = Vec::with_capacity(episodes.len());
+    let mut misses = Vec::with_capacity(episodes.len());
+    for per_seg in &tuples {
+        let (c, m) = concatenate_fold(per_seg);
+        counts.push(c);
+        misses.push(m);
+    }
+    Ok((counts, misses))
+}
+
+/// Left-fold Concatenate: start from segment 0's machine 0 (the true
+/// stream-start automaton) and chain `b == a` matches.
+pub fn concatenate_fold(segments: &[Vec<(Tick, u64, Tick)>]) -> (u64, u64) {
+    let mut total = segments[0][0].1;
+    let mut cur_b = segments[0][0].2;
+    let mut misses = 0u64;
+    for seg in &segments[1..] {
+        match seg.iter().find(|(a, _, _)| *a == cur_b) {
+            Some(&(_, c, b)) => {
+                total += c;
+                cur_b = b;
+            }
+            None => {
+                misses += 1;
+                total += seg[0].1;
+                cur_b = seg[0].2;
+            }
+        }
+    }
+    (total, misses)
+}
+
+/// The paper's log-tree Concatenate (§5.2.2 steps 2-3): adjacent segment
+/// pairs merge level by level in `q+1 = log2(P)+1` levels. Functionally
+/// equal to the fold; used by the ablation bench to compare merge costs.
+pub fn concatenate_tree(segments: &[Vec<(Tick, u64, Tick)>]) -> (u64, u64) {
+    let mut level: Vec<Vec<(Tick, u64, Tick)>> = segments.to_vec();
+    let mut misses = 0u64;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.chunks(2);
+        for pair in &mut it {
+            if pair.len() == 1 {
+                next.push(pair[0].clone());
+                continue;
+            }
+            let (left, right) = (&pair[0], &pair[1]);
+            let merged: Vec<(Tick, u64, Tick)> = left
+                .iter()
+                .map(|&(a, c, b)| match right.iter().find(|(a2, _, _)| *a2 == b) {
+                    Some(&(_, c2, b2)) => (a, c + c2, b2),
+                    None => {
+                        misses += 1;
+                        let (_, c2, b2) = right[0];
+                        (a, c + c2, b2)
+                    }
+                })
+                .collect();
+            next.push(merged);
+        }
+        level = next;
+    }
+    (level[0][0].1, misses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+    use crate::mining::serial;
+    use crate::util::rng::Rng;
+
+    fn world(seed: u64) -> (Episode, EventStream) {
+        let mut rng = Rng::new(seed);
+        let mut pairs = vec![];
+        let mut t = 0;
+        for _ in 0..600 {
+            t += rng.range_i32(0, 3);
+            pairs.push((rng.range_i32(0, 4), t));
+        }
+        let ep = Episode::new(
+            vec![0, 1, 2],
+            vec![Interval::new(0, 8), Interval::new(1, 6)],
+        );
+        (ep, EventStream::from_pairs(pairs, 5))
+    }
+
+    fn taus_for(stream: &EventStream, p: usize) -> Vec<Tick> {
+        let t0 = stream.t_begin() as i64 - 1;
+        let t1 = stream.t_end() as i64;
+        let span = t1 - t0;
+        (0..p as i64).map(|i| (t0 + span * i / p as i64) as Tick).chain([t1 as Tick]).collect()
+    }
+
+    #[test]
+    fn fold_equals_tree_on_cpu_map() {
+        for seed in 0..10 {
+            let (ep, stream) = world(seed);
+            let taus = taus_for(&stream, 8);
+            let tuples = serial::mapcat_map(&ep, &stream, &taus, 8);
+            let (cf, _) = concatenate_fold(&tuples);
+            let (ct, _) = concatenate_tree(&tuples);
+            assert_eq!(cf, ct, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn cpu_map_concat_equals_serial_count() {
+        for seed in 0..10 {
+            let (ep, stream) = world(seed);
+            for p in [2usize, 4, 8, 16] {
+                let taus = taus_for(&stream, p);
+                let tuples = serial::mapcat_map(&ep, &stream, &taus, 8);
+                let (total, misses) = concatenate_fold(&tuples);
+                let want = serial::count_a1_bounded(&ep, &stream, 8);
+                assert_eq!(total, want, "seed {seed} p {p} misses {misses}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_handles_non_power_of_two() {
+        let (ep, stream) = world(3);
+        let taus = taus_for(&stream, 5);
+        let tuples = serial::mapcat_map(&ep, &stream, &taus, 8);
+        let (cf, _) = concatenate_fold(&tuples);
+        let (ct, _) = concatenate_tree(&tuples);
+        assert_eq!(cf, ct);
+    }
+}

@@ -1,0 +1,59 @@
+//! Run metrics: what the coordinator did and what it cost.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// episodes passed through `count`
+    pub episodes_counted: u64,
+    /// PTPE artifact invocations
+    pub ptpe_calls: u64,
+    /// MapConcatenate Map invocations
+    pub mapcat_calls: u64,
+    /// MapConcatenate plans that fell back to PTPE
+    pub mapcat_fallbacks: u64,
+    /// Concatenate chain steps with no b==a match
+    pub concat_misses: u64,
+    /// episode sizes with no artifact, counted on CPU
+    pub cpu_fallbacks: u64,
+    /// candidates culled by the A2 first pass
+    pub a2_culled: u64,
+    /// candidates that survived to the A1 second pass
+    pub a2_survivors: u64,
+    /// total accelerator wall time
+    pub accel_time: Duration,
+    /// total host (generation + concatenate) wall time
+    pub host_time: Duration,
+}
+
+impl Metrics {
+    pub fn report(&self) -> String {
+        format!(
+            "episodes={} ptpe_calls={} mapcat_calls={} mapcat_fallbacks={} \
+             concat_misses={} cpu_fallbacks={} a2_culled={} a2_survivors={} \
+             accel={:?} host={:?}",
+            self.episodes_counted,
+            self.ptpe_calls,
+            self.mapcat_calls,
+            self.mapcat_fallbacks,
+            self.concat_misses,
+            self.cpu_fallbacks,
+            self.a2_culled,
+            self.a2_survivors,
+            self.accel_time,
+            self.host_time,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_contains_counters() {
+        let mut m = Metrics::default();
+        m.a2_culled = 42;
+        assert!(m.report().contains("a2_culled=42"));
+    }
+}

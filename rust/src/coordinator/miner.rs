@@ -1,0 +1,139 @@
+//! Level-wise frequent-episode mining driver (paper §5: candidate
+//! generation on the host alternating with counting on the accelerator).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{Coordinator, Strategy};
+use crate::episodes::{candidates, CountedEpisode, Episode, Interval};
+use crate::events::EventStream;
+
+/// Counting mode for each mining level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CountMode {
+    /// one pass with the given strategy
+    OnePass(Strategy),
+    /// the paper's two-pass elimination (A2 filter + Hybrid exact pass)
+    TwoPass,
+}
+
+#[derive(Clone, Debug)]
+pub struct MineConfig {
+    /// support threshold theta (non-overlapped occurrence count)
+    pub theta: u64,
+    /// the inter-event constraint set I (paper Problem 1)
+    pub intervals: Vec<Interval>,
+    pub mode: CountMode,
+    /// stop after this episode size (the paper mines to ~7-8)
+    pub max_level: usize,
+    /// guardrail: abort a level whose candidate set exceeds this (a
+    /// too-low theta on bursty data grows the lattice combinatorially;
+    /// production systems must fail fast, not OOM)
+    pub max_candidates_per_level: usize,
+}
+
+impl MineConfig {
+    pub fn new(theta: u64, intervals: Vec<Interval>) -> MineConfig {
+        MineConfig {
+            theta,
+            intervals,
+            mode: CountMode::TwoPass,
+            max_level: 8,
+            max_candidates_per_level: 2_000_000,
+        }
+    }
+}
+
+/// Per-level mining report (the numbers Figs. 7/9 are built from).
+#[derive(Clone, Debug)]
+pub struct LevelReport {
+    pub level: usize,
+    pub candidates: usize,
+    pub frequent: usize,
+    pub culled_by_a2: u64,
+    pub count_seconds: f64,
+    pub gen_seconds: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MineResult {
+    /// frequent episodes of every size, with exact counts
+    pub frequent: Vec<CountedEpisode>,
+    pub levels: Vec<LevelReport>,
+}
+
+impl MineResult {
+    pub fn frequent_of_size(&self, n: usize) -> Vec<&CountedEpisode> {
+        self.frequent.iter().filter(|c| c.episode.n() == n).collect()
+    }
+
+    pub fn total_count_seconds(&self) -> f64 {
+        self.levels.iter().map(|l| l.count_seconds).sum()
+    }
+}
+
+impl Coordinator {
+    /// Run the full level-wise mining loop.
+    pub fn mine(&mut self, stream: &EventStream, cfg: &MineConfig) -> Result<MineResult> {
+        let mut result = MineResult::default();
+        let mut frontier: Vec<Episode> = vec![];
+        for level in 1..=cfg.max_level {
+            let t_gen = Instant::now();
+            let cands = if level == 1 {
+                candidates::level1(stream.n_types)
+            } else {
+                candidates::next_level(&frontier, &cfg.intervals)
+            };
+            let gen_seconds = t_gen.elapsed().as_secs_f64();
+            if cands.is_empty() {
+                break;
+            }
+            anyhow::ensure!(
+                cands.len() <= cfg.max_candidates_per_level,
+                "level {level} generated {} candidates (> {} cap) — raise theta \
+                 or max_candidates_per_level",
+                cands.len(),
+                cfg.max_candidates_per_level
+            );
+
+            let t_count = Instant::now();
+            let (counts, culled) = match cfg.mode {
+                CountMode::OnePass(strategy) => {
+                    (self.count(&cands, stream, strategy)?, 0)
+                }
+                CountMode::TwoPass => {
+                    let out = self.count_two_pass(&cands, stream, cfg.theta)?;
+                    (out.counts, out.culled)
+                }
+            };
+            let count_seconds = t_count.elapsed().as_secs_f64();
+
+            frontier = cands
+                .iter()
+                .zip(&counts)
+                .filter(|(_, &c)| c >= cfg.theta)
+                .map(|(e, _)| e.clone())
+                .collect();
+            result.levels.push(LevelReport {
+                level,
+                candidates: cands.len(),
+                frequent: frontier.len(),
+                culled_by_a2: culled,
+                count_seconds,
+                gen_seconds,
+            });
+            result.frequent.extend(
+                cands
+                    .into_iter()
+                    .zip(counts)
+                    .filter(|(_, c)| *c >= cfg.theta)
+                    .map(|(episode, count)| CountedEpisode { episode, count }),
+            );
+            if frontier.is_empty() {
+                break;
+            }
+        }
+        Ok(result)
+    }
+}

@@ -1,0 +1,239 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! Owns algorithm dispatch (PTPE vs MapConcatenate vs Hybrid, paper §5.2),
+//! the two-pass A2+A1 elimination pipeline (§5.3), the level-wise mining
+//! driver (§5), and the streaming "chip-on-chip" partition processor (§1
+//! contribution 3). Counting executes on the PJRT runtime; candidate
+//! generation and concatenation stay here on the host — exactly the
+//! paper's CPU/GPU split.
+
+pub mod mapconcat;
+pub mod metrics;
+pub mod miner;
+pub mod streaming;
+pub mod two_pass;
+
+use anyhow::Result;
+
+use crate::episodes::Episode;
+use crate::events::EventStream;
+use crate::gpu_model::crossover::{CostModel, CrossoverModel};
+use crate::mining::{cpu_parallel, serial};
+use crate::runtime::{exec, Runtime};
+
+pub use metrics::Metrics;
+
+/// Counting strategy (the paper's algorithm menu).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// per-thread-per-episode on the accelerator, exact constraints (§5.2.1)
+    PtpeA1,
+    /// segment-parallel Map + host Concatenate (§5.2.2)
+    MapConcat,
+    /// Hybrid: crossover-model dispatch between the two (§5.2.3, Alg. 2)
+    Hybrid,
+    /// serial CPU reference (Algorithm 1)
+    CpuSerial,
+    /// the paper's multithreaded CPU baseline (§6.4)
+    CpuParallel,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        Some(match s {
+            "ptpe" | "a1" => Strategy::PtpeA1,
+            "mapconcat" | "mc" => Strategy::MapConcat,
+            "hybrid" => Strategy::Hybrid,
+            "cpu" | "cpu-serial" => Strategy::CpuSerial,
+            "cpu-parallel" => Strategy::CpuParallel,
+            _ => return None,
+        })
+    }
+}
+
+/// How the Hybrid strategy picks PTPE vs MapConcatenate.
+#[derive(Clone, Copy, Debug)]
+pub enum Dispatch {
+    /// the paper's Eq. 2 form: S > f(N) with f fitted to crossovers
+    Crossover(CrossoverModel),
+    /// stream-length-aware cost model calibrated on this substrate
+    /// (DESIGN.md §6; the default)
+    Cost(CostModel),
+}
+
+/// The coordinator: runtime handle + dispatch model + run metrics.
+pub struct Coordinator {
+    pub rt: Runtime,
+    pub dispatch: Dispatch,
+    pub metrics: Metrics,
+    /// worker threads for the CPU-parallel strategy
+    pub cpu_threads: usize,
+}
+
+impl Coordinator {
+    pub fn new(rt: Runtime) -> Coordinator {
+        let mf = rt.manifest();
+        let cost = CostModel::substrate_default(mf.m_episodes, mf.c_chunk);
+        Coordinator {
+            rt,
+            dispatch: Dispatch::Cost(cost),
+            metrics: Metrics::default(),
+            cpu_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+        }
+    }
+
+    /// Switch the Hybrid dispatch rule (benches compare both).
+    pub fn with_dispatch(mut self, d: Dispatch) -> Coordinator {
+        self.dispatch = d;
+        self
+    }
+
+    pub fn open_default() -> Result<Coordinator> {
+        Ok(Coordinator::new(Runtime::open_default()?))
+    }
+
+    /// Count every episode's non-overlapped occurrences under the given
+    /// strategy. Episodes may mix sizes; they are grouped by size
+    /// internally and results return in input order.
+    pub fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+        strategy: Strategy,
+    ) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; episodes.len()];
+        for (indices, group) in group_by_size(episodes) {
+            let counts = self.count_uniform(&group, stream, strategy)?;
+            for (slot, c) in indices.into_iter().zip(counts) {
+                out[slot] = c;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Count a uniform-size group.
+    fn count_uniform(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+        strategy: Strategy,
+    ) -> Result<Vec<u64>> {
+        let n = episodes[0].n();
+        self.metrics.episodes_counted += episodes.len() as u64;
+        // 1-node episodes are plain frequencies — no kernel needed (§7 of
+        // DESIGN.md: N=1 handled on the host).
+        if n == 1 {
+            let freq = stream.type_counts();
+            return Ok(episodes.iter().map(|e| freq[e.types[0] as usize]).collect());
+        }
+        match strategy {
+            Strategy::CpuSerial => {
+                Ok(episodes.iter().map(|e| serial::count_a1(e, stream)).collect())
+            }
+            Strategy::CpuParallel => {
+                Ok(cpu_parallel::count_all_parallel(episodes, stream, self.cpu_threads))
+            }
+            Strategy::PtpeA1 => {
+                if !self.rt.supports_n(n) {
+                    self.metrics.cpu_fallbacks += 1;
+                    return Ok(cpu_parallel::count_all_parallel(
+                        episodes,
+                        stream,
+                        self.cpu_threads,
+                    ));
+                }
+                self.metrics.ptpe_calls += 1;
+                exec::count_a1(&self.rt, episodes, stream)
+            }
+            Strategy::MapConcat => self.count_mapconcat(episodes, stream),
+            Strategy::Hybrid => {
+                // Alg. 2: PTPE when S exceeds the level-dependent
+                // crossover, MapConcatenate otherwise.
+                let ptpe = match self.dispatch {
+                    Dispatch::Crossover(m) => m.choose_ptpe(episodes.len(), n),
+                    Dispatch::Cost(m) => m.choose_ptpe(episodes.len(), n, stream.len()),
+                };
+                if ptpe {
+                    self.count_uniform(episodes, stream, Strategy::PtpeA1)
+                } else {
+                    self.count_uniform(episodes, stream, Strategy::MapConcat)
+                }
+            }
+        }
+    }
+
+    fn count_mapconcat(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<Vec<u64>> {
+        let n = episodes[0].n();
+        match mapconcat::plan(&self.rt, episodes, stream) {
+            Some(plan) if self.rt.supports_n(n) => {
+                self.metrics.mapcat_calls += 1;
+                let (mut counts, misses) =
+                    mapconcat::count(&self.rt, episodes, stream, &plan)?;
+                // Concatenate misses flag episodes whose boundary-machine
+                // chain lost synchronization (matched chains are exact;
+                // see mapconcat::count). Recount those exactly via PTPE.
+                let missed: Vec<usize> =
+                    (0..episodes.len()).filter(|&i| misses[i] > 0).collect();
+                if !missed.is_empty() {
+                    self.metrics.concat_misses += missed.len() as u64;
+                    let subset: Vec<Episode> =
+                        missed.iter().map(|&i| episodes[i].clone()).collect();
+                    let exact = exec::count_a1(&self.rt, &subset, stream)?;
+                    for (&i, c) in missed.iter().zip(exact) {
+                        counts[i] = c;
+                    }
+                }
+                Ok(counts)
+            }
+            _ => {
+                // segmentation infeasible (stream too large / too short, or
+                // constraint windows wider than a segment): PTPE fallback.
+                self.metrics.mapcat_fallbacks += 1;
+                self.count_uniform(episodes, stream, Strategy::PtpeA1)
+            }
+        }
+    }
+}
+
+/// Group episode indices by episode size, preserving order within groups.
+fn group_by_size(episodes: &[Episode]) -> Vec<(Vec<usize>, Vec<Episode>)> {
+    let mut groups: Vec<(usize, Vec<usize>)> = vec![];
+    for (i, ep) in episodes.iter().enumerate() {
+        match groups.iter_mut().find(|(n, _)| *n == ep.n()) {
+            Some((_, v)) => v.push(i),
+            None => groups.push((ep.n(), vec![i])),
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(_, idx)| {
+            let eps = idx.iter().map(|&i| episodes[i].clone()).collect();
+            (idx, eps)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+
+    #[test]
+    fn group_by_size_preserves_order() {
+        let iv = Interval::new(0, 5);
+        let eps = vec![
+            Episode::single(0),
+            Episode::new(vec![1, 2], vec![iv]),
+            Episode::single(3),
+            Episode::new(vec![4, 5], vec![iv]),
+        ];
+        let groups = group_by_size(&eps);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].0, vec![0, 2]);
+        assert_eq!(groups[1].0, vec![1, 3]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Developing cortical-culture simulator: the stand-in for the Wagenaar
+//! et al. recordings (paper datasets 2-1-33, 2-1-34, 2-1-35 — culture 2-1
+//! on days-in-vitro 33/34/35).
+//!
+//! What the paper's experiments actually exercise in those recordings:
+//! event volume (hundreds of thousands of spikes), strong temporal
+//! clumping into network bursts (which drives A1 list occupancy, A2
+//! culling rates, and branch divergence), and day-over-day maturation
+//! (burst rate/size and circuit strength grow with age — §6.5 "mining
+//! evolving cultures"). The simulator reproduces those three properties:
+//!
+//! - tonic background firing per channel,
+//! - network bursts: Poisson-timed population events in which a random
+//!   subset of channels fires densely for ~100 ms,
+//! - synfire chains embedded *within* bursts whose participation
+//!   probability rises with culture age.
+
+use crate::events::{EventStream, Tick};
+use crate::episodes::{Episode, Interval};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CultureConfig {
+    pub n_channels: usize,
+    pub duration_ms: Tick,
+    /// days in vitro — the maturation knob (paper days: 33, 34, 35)
+    pub div_age: u32,
+    pub tonic_hz: f64,
+    /// network bursts per second
+    pub burst_hz: f64,
+    /// burst envelope width (ms)
+    pub burst_width_ms: Tick,
+    /// fraction of channels recruited per burst
+    pub burst_participation: f64,
+    /// per-channel firing rate inside a burst (Hz)
+    pub burst_rate_hz: f64,
+    /// embedded synfire chains (channel sequences) + per-link probability
+    pub chains: Vec<Vec<i32>>,
+    pub chain_prob: f64,
+    /// chain trigger rate (Hz) — circuits fire tonically, not only in
+    /// bursts, and more reliably than chance coincidences inside bursts
+    pub chain_hz: f64,
+    pub d_low: Tick,
+    pub d_high: Tick,
+}
+
+impl CultureConfig {
+    /// Configuration for culture 2-1 at the given day in vitro; the knobs
+    /// scale with (day - 33) the way burst statistics mature in Wagenaar's
+    /// data (denser, more structured bursts late in development).
+    pub fn day(div_age: u32) -> CultureConfig {
+        let m = (div_age.saturating_sub(33)) as f64; // 0, 1, 2
+        CultureConfig {
+            n_channels: 64,
+            duration_ms: 120_000,
+            div_age,
+            tonic_hz: 2.0 + 0.5 * m,
+            burst_hz: 0.25 + 0.1 * m,
+            burst_width_ms: 100,
+            burst_participation: 0.4 + 0.1 * m,
+            burst_rate_hz: 120.0,
+            chains: vec![
+                vec![3, 17, 29, 41],
+                vec![8, 22, 50],
+                vec![12, 33, 47, 55, 60],
+            ],
+            chain_prob: 0.75 + 0.08 * m,
+            chain_hz: 1.0 + 0.4 * m,
+            d_low: 2,
+            d_high: 10,
+        }
+    }
+
+    pub fn embedded_episodes(&self) -> Vec<Episode> {
+        let iv = Interval::new(self.d_low, self.d_high);
+        self.chains
+            .iter()
+            .map(|c| Episode::new(c.clone(), vec![iv; c.len() - 1]))
+            .collect()
+    }
+
+    pub fn interval_set(&self) -> Vec<Interval> {
+        vec![Interval::new(self.d_low, self.d_high)]
+    }
+}
+
+/// Generate a culture recording.
+pub fn generate(cfg: &CultureConfig, seed: u64) -> EventStream {
+    let mut rng = Rng::new(seed ^ (cfg.div_age as u64) << 32);
+    let mut pairs: Vec<(i32, Tick)> = vec![];
+
+    // tonic background
+    let tonic_per_ms = cfg.tonic_hz / 1000.0;
+    for ch in 0..cfg.n_channels as i32 {
+        let mut r = rng.fork(ch as u64 + 1);
+        let mut t = 0f64;
+        loop {
+            t += r.exponential(tonic_per_ms);
+            if t >= cfg.duration_ms as f64 {
+                break;
+            }
+            pairs.push((ch, t as Tick));
+        }
+    }
+
+    // network bursts
+    let mut rb = rng.fork(7_001);
+    let burst_per_ms = cfg.burst_hz / 1000.0;
+    let in_burst_per_ms = cfg.burst_rate_hz / 1000.0;
+    let mut bt = 0f64;
+    loop {
+        bt += rb.exponential(burst_per_ms);
+        if bt >= cfg.duration_ms as f64 {
+            break;
+        }
+        let burst_start = bt as Tick;
+        // recruit channels
+        for ch in 0..cfg.n_channels as i32 {
+            if !rb.chance(cfg.burst_participation) {
+                continue;
+            }
+            let mut t = burst_start as f64 + rb.f64() * 20.0; // staggered onset
+            let burst_end = (burst_start + cfg.burst_width_ms) as f64;
+            loop {
+                t += rb.exponential(in_burst_per_ms);
+                if t >= burst_end || t >= cfg.duration_ms as f64 {
+                    break;
+                }
+                pairs.push((ch, t as Tick));
+            }
+        }
+        // synfire chains also ride on bursts
+        for chain in &cfg.chains {
+            if !rb.chance(cfg.chain_prob) {
+                continue;
+            }
+            let mut ct = burst_start + rb.range_i32(0, 10);
+            pairs.push((chain[0], ct));
+            for &next in &chain[1..] {
+                if !rb.chance(cfg.chain_prob) {
+                    break;
+                }
+                ct += rb.range_i32(cfg.d_low + 1, cfg.d_high);
+                if ct >= cfg.duration_ms {
+                    break;
+                }
+                pairs.push((next, ct));
+            }
+        }
+    }
+
+    // tonic synfire-chain triggers: the maturing circuits fire throughout
+    // the recording, which is what makes them stand out against chance
+    // in-burst coincidences at mining thresholds
+    for (ci, chain) in cfg.chains.iter().enumerate() {
+        let mut rc = rng.fork(9_000 + ci as u64);
+        let per_ms = cfg.chain_hz / 1000.0;
+        let mut t = 0f64;
+        loop {
+            t += rc.exponential(per_ms);
+            if t >= cfg.duration_ms as f64 {
+                break;
+            }
+            let mut ct = t as Tick;
+            pairs.push((chain[0], ct));
+            for &next in &chain[1..] {
+                if !rc.chance(cfg.chain_prob) {
+                    break;
+                }
+                ct += rc.range_i32(cfg.d_low + 1, cfg.d_high);
+                if ct >= cfg.duration_ms {
+                    break;
+                }
+                pairs.push((next, ct));
+            }
+        }
+    }
+
+    EventStream::from_pairs(pairs, cfg.n_channels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::serial;
+
+    #[test]
+    fn volume_scales_with_age() {
+        let d33 = generate(&CultureConfig::day(33), 1);
+        let d35 = generate(&CultureConfig::day(35), 1);
+        assert!(d33.len() > 10_000, "{}", d33.len());
+        assert!(d35.len() > d33.len(), "{} !> {}", d35.len(), d33.len());
+    }
+
+    #[test]
+    fn bursts_create_clumping() {
+        let cfg = CultureConfig::day(34);
+        let s = generate(&cfg, 2);
+        // clumping: the max events in any 200ms window far exceeds the mean
+        let mut max_w = 0usize;
+        let mut t0 = s.t_begin();
+        while t0 < s.t_end() {
+            max_w = max_w.max(s.window(t0, t0 + 200).len());
+            t0 += 200;
+        }
+        let mean_w = s.len() as f64 / (s.span() as f64 / 200.0);
+        assert!(max_w as f64 > 4.0 * mean_w, "max {max_w} mean {mean_w}");
+    }
+
+    #[test]
+    fn chain_counts_grow_with_age() {
+        let c33 = CultureConfig::day(33);
+        let c35 = CultureConfig::day(35);
+        let s33 = generate(&c33, 3);
+        let s35 = generate(&c35, 3);
+        let ep33 = &c33.embedded_episodes()[0];
+        let ep35 = &c35.embedded_episodes()[0];
+        let n33 = serial::count_a1(ep33, &s33);
+        let n35 = serial::count_a1(ep35, &s35);
+        assert!(n35 > n33, "day35 {n35} !> day33 {n33}");
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_day() {
+        let a = generate(&CultureConfig::day(34), 5);
+        let b = generate(&CultureConfig::day(34), 5);
+        assert_eq!(a, b);
+    }
+}

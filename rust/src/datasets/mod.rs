@@ -1,0 +1,26 @@
+//! Dataset substrate: generators standing in for the paper's data sources.
+//!
+//! - `sym26`: the paper's mathematical model (§6.1.1) — 26 neurons firing
+//!   as inhomogeneous Poisson processes at a 20 Hz basal rate with two
+//!   embedded causal chains (one short, one long), 60 s ≈ 50 k events.
+//! - `culture`: a simulator of developing cortical cultures standing in
+//!   for the Wagenaar et al. recordings (datasets 2-1-33/34/35): network
+//!   bursts whose rate and size grow with culture age, plus synfire
+//!   chains that strengthen day over day. See DESIGN.md §5 for why this
+//!   substitution preserves what the experiments exercise.
+
+pub mod sym26;
+pub mod culture;
+
+use crate::events::EventStream;
+
+/// Named dataset selector used by the CLI, examples and benches.
+pub fn by_name(name: &str, seed: u64) -> Option<(EventStream, &'static str)> {
+    match name {
+        "sym26" => Some((sym26::generate(&sym26::Sym26Config::default(), seed), "sym26")),
+        "2-1-33" => Some((culture::generate(&culture::CultureConfig::day(33), seed), "2-1-33")),
+        "2-1-34" => Some((culture::generate(&culture::CultureConfig::day(34), seed), "2-1-34")),
+        "2-1-35" => Some((culture::generate(&culture::CultureConfig::day(35), seed), "2-1-35")),
+        _ => None,
+    }
+}

@@ -1,0 +1,148 @@
+//! Level-wise (Apriori-style) candidate generation (paper §5, first phase).
+//!
+//! The paper's mining loop alternates candidate generation (on the CPU —
+//! this module) with counting (on the accelerator). Size-(N+1) candidates
+//! are generated from frequent size-N episodes with the standard
+//! suffix-prefix join: α joins β when α's last N-1 (type, interval) pairs
+//! equal β's first N-1 pairs; the candidate is α extended by β's last node.
+//! Every gap's interval is drawn from the run's constraint set `I`
+//! (paper Problem 1); |I| = 1 in all of the paper's experiments.
+
+use std::collections::HashSet;
+
+use super::{Episode, Interval};
+use crate::events::EventType;
+
+/// Level-1 candidates: one single-node episode per event type.
+pub fn level1(n_types: usize) -> Vec<Episode> {
+    (0..n_types as EventType).map(Episode::single).collect()
+}
+
+/// Level-2 candidates: all ordered pairs of frequent 1-episodes × all
+/// intervals in `i_set` (self-pairs included: A->A episodes are valid).
+pub fn level2(frequent1: &[Episode], i_set: &[Interval]) -> Vec<Episode> {
+    let mut out = vec![];
+    for a in frequent1 {
+        for b in frequent1 {
+            for &iv in i_set {
+                out.push(Episode::new(vec![a.types[0], b.types[0]], vec![iv]));
+            }
+        }
+    }
+    out
+}
+
+/// Size N -> N+1 suffix-prefix join over frequent size-N episodes.
+///
+/// Only candidates whose every size-N sub-episode (obtained by dropping
+/// the first or last node) is frequent are kept — the anti-monotonicity
+/// prune. (Dropping interior nodes does not yield a sub-episode under
+/// inter-event constraints, so only the two end prunes apply.)
+pub fn join(frequent: &[Episode]) -> Vec<Episode> {
+    if frequent.is_empty() {
+        return vec![];
+    }
+    let n = frequent[0].n();
+    debug_assert!(frequent.iter().all(|e| e.n() == n));
+    let set: HashSet<(&[EventType], &[Interval])> =
+        frequent.iter().map(|e| (e.types.as_slice(), e.intervals.as_slice())).collect();
+    let mut out = vec![];
+    for a in frequent {
+        for b in frequent {
+            if a.types[1..] == b.types[..n - 1] && a.intervals[1..] == b.intervals[..n - 2] {
+                // suffix of a == prefix of b (types and intervals)
+                let mut types = a.types.clone();
+                types.push(b.types[n - 1]);
+                let mut intervals = a.intervals.clone();
+                intervals.push(*b.intervals.last().unwrap());
+                // anti-monotone prune: the head-dropped sub-episode is b,
+                // the tail-dropped one is a — both frequent by construction.
+                // (kept explicit for clarity with |I| > 1 interval sets)
+                debug_assert!(set.contains(&(b.types.as_slice(), b.intervals.as_slice())));
+                out.push(Episode::new(types, intervals));
+            }
+        }
+    }
+    out
+}
+
+/// Generate the next level's candidates from this level's frequent set.
+pub fn next_level(frequent: &[Episode], i_set: &[Interval]) -> Vec<Episode> {
+    if frequent.is_empty() {
+        return vec![];
+    }
+    if frequent[0].n() == 1 {
+        level2(frequent, i_set)
+    } else {
+        join(frequent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv() -> Interval {
+        Interval::new(0, 10)
+    }
+
+    #[test]
+    fn level1_covers_alphabet() {
+        let l1 = level1(3);
+        assert_eq!(l1.len(), 3);
+        assert_eq!(l1[2].types, vec![2]);
+    }
+
+    #[test]
+    fn level2_is_full_cross() {
+        let l1 = level1(3);
+        let l2 = level2(&l1, &[iv()]);
+        assert_eq!(l2.len(), 9); // self-pairs included
+        let l2b = level2(&l1, &[iv(), Interval::new(5, 20)]);
+        assert_eq!(l2b.len(), 18);
+    }
+
+    #[test]
+    fn join_requires_suffix_prefix_match() {
+        // frequent 2-episodes: 0->1, 1->2, 1->0
+        let f = vec![
+            Episode::new(vec![0, 1], vec![iv()]),
+            Episode::new(vec![1, 2], vec![iv()]),
+            Episode::new(vec![1, 0], vec![iv()]),
+        ];
+        let c = join(&f);
+        let got: HashSet<Vec<i32>> = c.iter().map(|e| e.types.clone()).collect();
+        // 0->1 joins 1->2 and 1->0; 1->0 joins 0->1
+        let want: HashSet<Vec<i32>> =
+            [vec![0, 1, 2], vec![0, 1, 0], vec![1, 0, 1]].into_iter().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn join_respects_interval_identity() {
+        let a = Episode::new(vec![0, 1], vec![Interval::new(0, 10)]);
+        let b = Episode::new(vec![1, 2], vec![Interval::new(5, 20)]);
+        // join is allowed regardless of differing gap intervals — only the
+        // *shared* (suffix/prefix) gaps must agree, and for size 2 there is
+        // no shared gap.
+        let c = join(&[a, b]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].types, vec![0, 1, 2]);
+        assert_eq!(c[0].intervals, vec![Interval::new(0, 10), Interval::new(5, 20)]);
+    }
+
+    #[test]
+    fn join_three_node_shares_middle_gap() {
+        let i1 = Interval::new(0, 10);
+        let i2 = Interval::new(5, 20);
+        let a = Episode::new(vec![0, 1, 2], vec![i1, i2]);
+        let b_match = Episode::new(vec![1, 2, 3], vec![i2, i1]);
+        let b_clash = Episode::new(vec![1, 2, 3], vec![i1, i1]);
+        let c = join(&[a.clone(), b_match, b_clash]);
+        // only b_match's prefix interval (i2) equals a's suffix interval
+        let with_a_prefix: Vec<_> =
+            c.iter().filter(|e| e.types == vec![0, 1, 2, 3]).collect();
+        assert_eq!(with_a_prefix.len(), 1);
+        assert_eq!(with_a_prefix[0].intervals, vec![i1, i2, i1]);
+    }
+}

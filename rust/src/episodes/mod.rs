@@ -1,0 +1,132 @@
+//! Episode substrate: serial episodes with inter-event constraints
+//! (paper Def. 2.2 / Problem 1) and level-wise candidate generation.
+
+pub mod candidates;
+
+use crate::events::{EventType, Tick};
+
+/// An inter-event constraint interval `(t_low, t_high]` (paper §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Interval {
+    pub t_low: Tick,
+    pub t_high: Tick,
+}
+
+impl Interval {
+    pub fn new(t_low: Tick, t_high: Tick) -> Interval {
+        assert!(0 <= t_low && t_low < t_high, "need 0 <= t_low < t_high");
+        Interval { t_low, t_high }
+    }
+
+    /// Does a delay `d` satisfy `(t_low, t_high]`?
+    #[inline]
+    pub fn admits(&self, d: Tick) -> bool {
+        self.t_low < d && d <= self.t_high
+    }
+
+    /// The relaxed counterpart used by A2 (lower bound dropped; see the
+    /// kernel docs for why the relaxation is effectively `[0, t_high]`).
+    pub fn relaxed(&self) -> Interval {
+        Interval { t_low: 0, t_high: self.t_high }
+    }
+}
+
+/// A serial episode with inter-event constraints:
+/// `E(1) -(I1]-> E(2) ... -(I(N-1)]-> E(N)`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Episode {
+    pub types: Vec<EventType>,
+    pub intervals: Vec<Interval>,
+}
+
+impl Episode {
+    pub fn new(types: Vec<EventType>, intervals: Vec<Interval>) -> Episode {
+        assert!(!types.is_empty());
+        assert_eq!(intervals.len(), types.len() - 1, "need N-1 intervals");
+        Episode { types, intervals }
+    }
+
+    /// 1-node episode (no constraints).
+    pub fn single(e: EventType) -> Episode {
+        Episode { types: vec![e], intervals: vec![] }
+    }
+
+    /// Episode size N (number of nodes / levels).
+    pub fn n(&self) -> usize {
+        self.types.len()
+    }
+
+    pub fn tlow(&self) -> Vec<Tick> {
+        self.intervals.iter().map(|i| i.t_low).collect()
+    }
+
+    pub fn thigh(&self) -> Vec<Tick> {
+        self.intervals.iter().map(|i| i.t_high).collect()
+    }
+
+    /// Sum of upper bounds: the maximum time an occurrence can span, and
+    /// the straddle window of MapConcatenate boundary machines.
+    pub fn span_max(&self) -> Tick {
+        self.intervals.iter().map(|i| i.t_high).sum()
+    }
+
+    /// Human-readable form, e.g. `3 -(5,15]-> 7 -(5,15]-> 1`.
+    pub fn display(&self) -> String {
+        let mut s = String::new();
+        for (i, &e) in self.types.iter().enumerate() {
+            if i > 0 {
+                let iv = &self.intervals[i - 1];
+                s.push_str(&format!(" -({},{}]-> ", iv.t_low, iv.t_high));
+            }
+            s.push_str(&e.to_string());
+        }
+        s
+    }
+}
+
+/// An episode with its mined support count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CountedEpisode {
+    pub episode: Episode,
+    pub count: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_semantics() {
+        let iv = Interval::new(5, 15);
+        assert!(!iv.admits(5)); // strict lower
+        assert!(iv.admits(6));
+        assert!(iv.admits(15)); // inclusive upper
+        assert!(!iv.admits(16));
+        assert_eq!(iv.relaxed(), Interval { t_low: 0, t_high: 15 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_interval_rejected() {
+        Interval::new(5, 5);
+    }
+
+    #[test]
+    fn episode_shape() {
+        let ep = Episode::new(
+            vec![0, 1, 2],
+            vec![Interval::new(5, 15), Interval::new(0, 10)],
+        );
+        assert_eq!(ep.n(), 3);
+        assert_eq!(ep.span_max(), 25);
+        assert_eq!(ep.tlow(), vec![5, 0]);
+        assert_eq!(ep.thigh(), vec![15, 10]);
+        assert_eq!(ep.display(), "0 -(5,15]-> 1 -(0,10]-> 2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_interval_arity_rejected() {
+        Episode::new(vec![0, 1, 2], vec![Interval::new(0, 5)]);
+    }
+}

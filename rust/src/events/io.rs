@@ -1,0 +1,140 @@
+//! Event-stream I/O: a simple binary format and CSV interchange.
+//!
+//! Binary layout (little-endian): magic `EPGS`, u32 version, u32 n_types,
+//! u64 n_events, then n_events × (i32 type, i32 time).
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::EventStream;
+
+const MAGIC: &[u8; 4] = b"EPGS";
+const VERSION: u32 = 1;
+
+pub fn write_binary(stream: &EventStream, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(stream.n_types as u32).to_le_bytes())?;
+    w.write_all(&(stream.len() as u64).to_le_bytes())?;
+    for (e, t) in stream.iter() {
+        w.write_all(&e.to_le_bytes())?;
+        w.write_all(&t.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_binary(path: &Path) -> io::Result<EventStream> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad version"));
+    }
+    let n_types = read_u32(&mut r)? as usize;
+    let n_events = read_u64(&mut r)? as usize;
+    let mut s = EventStream::new(n_types);
+    s.types.reserve(n_events);
+    s.times.reserve(n_events);
+    for _ in 0..n_events {
+        s.types.push(read_i32(&mut r)?);
+        s.times.push(read_i32(&mut r)?);
+    }
+    if !s.check_sorted() {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "unsorted stream"));
+    }
+    Ok(s)
+}
+
+/// CSV: header `type,time`, one event per line.
+pub fn write_csv(stream: &EventStream, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "type,time")?;
+    for (e, t) in stream.iter() {
+        writeln!(w, "{e},{t}")?;
+    }
+    Ok(())
+}
+
+pub fn read_csv(path: &Path, n_types: usize) -> io::Result<EventStream> {
+    let r = BufReader::new(File::open(path)?);
+    let mut pairs = vec![];
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        if i == 0 && line.starts_with("type") {
+            continue;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(2, ',');
+        let bad = || io::Error::new(io::ErrorKind::InvalidData, format!("line {}", i + 1));
+        let e: i32 = parts.next().ok_or_else(bad)?.trim().parse().map_err(|_| bad())?;
+        let t: i32 = parts.next().ok_or_else(bad)?.trim().parse().map_err(|_| bad())?;
+        pairs.push((e, t));
+    }
+    Ok(EventStream::from_pairs(pairs, n_types))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_i32<R: Read>(r: &mut R) -> io::Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(i32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EventStream {
+        EventStream::from_pairs(vec![(0, 1), (1, 3), (2, 3), (0, 9)], 3)
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("epgs_test_roundtrip.bin");
+        let s = sample();
+        write_binary(&s, &path).unwrap();
+        let r = read_binary(&path).unwrap();
+        assert_eq!(s, r);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("epgs_test_roundtrip.csv");
+        let s = sample();
+        write_csv(&s, &path).unwrap();
+        let r = read_csv(&path, 3).unwrap();
+        assert_eq!(s, r);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("epgs_test_bad_magic.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_binary(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

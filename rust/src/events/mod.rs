@@ -1,0 +1,184 @@
+//! Event-stream substrate: the spike-train data model (paper Def. 2.1).
+//!
+//! An event stream is a time-ordered sequence of (event type, tick) pairs.
+//! Event types are small non-negative integers (one per neuron/channel);
+//! times are integer ticks (1 tick = 1 ms in the datasets). Structure-of-
+//! arrays layout so chunks can be handed to the PJRT executables without
+//! reshuffling.
+
+pub mod io;
+
+/// Event type id. Real types are >= 0; negative values are kernel padding
+/// sentinels (see `runtime::manifest`).
+pub type EventType = i32;
+/// Time in integer ticks (ms).
+pub type Tick = i32;
+
+/// A time-sorted event stream (paper Definition 2.1).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EventStream {
+    pub types: Vec<EventType>,
+    pub times: Vec<Tick>,
+    /// Size of the event-type alphabet (neuron count).
+    pub n_types: usize,
+}
+
+impl EventStream {
+    pub fn new(n_types: usize) -> EventStream {
+        EventStream { types: vec![], times: vec![], n_types }
+    }
+
+    /// Build from pairs, sorting by time (stable: simultaneous events keep
+    /// insertion order, which the counting semantics observe).
+    pub fn from_pairs(mut pairs: Vec<(EventType, Tick)>, n_types: usize) -> EventStream {
+        pairs.sort_by_key(|&(_, t)| t);
+        let mut s = EventStream::new(n_types);
+        for (e, t) in pairs {
+            s.types.push(e);
+            s.times.push(t);
+        }
+        debug_assert!(s.check_sorted());
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.types.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.types.is_empty()
+    }
+
+    pub fn push(&mut self, e: EventType, t: Tick) {
+        debug_assert!(self.times.last().map(|&lt| lt <= t).unwrap_or(true));
+        self.types.push(e);
+        self.times.push(t);
+    }
+
+    /// First event time, or 0 for an empty stream.
+    pub fn t_begin(&self) -> Tick {
+        self.times.first().copied().unwrap_or(0)
+    }
+
+    /// Last event time, or 0 for an empty stream.
+    pub fn t_end(&self) -> Tick {
+        self.times.last().copied().unwrap_or(0)
+    }
+
+    /// Duration in ticks.
+    pub fn span(&self) -> Tick {
+        self.t_end() - self.t_begin()
+    }
+
+    pub fn check_sorted(&self) -> bool {
+        self.times.windows(2).all(|w| w[0] <= w[1])
+            && self.types.iter().all(|&e| e >= 0 && (e as usize) < self.n_types)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (EventType, Tick)> + '_ {
+        self.types.iter().copied().zip(self.times.iter().copied())
+    }
+
+    /// Events with time in `(t_from, t_to]` as a sub-stream (index range is
+    /// resolved by binary search — the stream is sorted).
+    pub fn window(&self, t_from: Tick, t_to: Tick) -> EventStream {
+        let lo = self.times.partition_point(|&t| t <= t_from);
+        let hi = self.times.partition_point(|&t| t <= t_to);
+        EventStream {
+            types: self.types[lo..hi].to_vec(),
+            times: self.times[lo..hi].to_vec(),
+            n_types: self.n_types,
+        }
+    }
+
+    /// Index of the first event with time > t.
+    pub fn first_after(&self, t: Tick) -> usize {
+        self.times.partition_point(|&x| x <= t)
+    }
+
+    /// Split into fixed-duration partitions (the chip-on-chip streaming
+    /// unit): each partition covers `(start + i*width, start + (i+1)*width]`.
+    pub fn partitions(&self, width: Tick) -> Vec<EventStream> {
+        assert!(width > 0);
+        if self.is_empty() {
+            return vec![];
+        }
+        let mut out = vec![];
+        let mut t0 = self.t_begin() - 1;
+        while t0 < self.t_end() {
+            out.push(self.window(t0, t0 + width));
+            t0 += width;
+        }
+        out
+    }
+
+    /// Per-type event counts (the level-1 mining pass).
+    pub fn type_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_types];
+        for &e in &self.types {
+            counts[e as usize] += 1;
+        }
+        counts
+    }
+
+    /// Mean event rate in events per 1000 ticks (Hz at ms ticks).
+    pub fn mean_rate_hz(&self) -> f64 {
+        if self.span() == 0 {
+            return 0.0;
+        }
+        self.len() as f64 / (self.span() as f64 / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EventStream {
+        EventStream::from_pairs(
+            vec![(0, 5), (1, 2), (2, 9), (0, 2), (1, 7)],
+            3,
+        )
+    }
+
+    #[test]
+    fn from_pairs_sorts_stably() {
+        let s = sample();
+        assert_eq!(s.times, vec![2, 2, 5, 7, 9]);
+        // stable: (1,2) inserted before (0,2) stays first
+        assert_eq!(s.types, vec![1, 0, 0, 1, 2]);
+        assert!(s.check_sorted());
+    }
+
+    #[test]
+    fn window_is_half_open_on_left() {
+        let s = sample();
+        let w = s.window(2, 7);
+        assert_eq!(w.times, vec![5, 7]);
+    }
+
+    #[test]
+    fn partitions_cover_everything() {
+        let s = sample();
+        let parts = s.partitions(3);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, s.len());
+        // partition boundaries respect (lo, hi]
+        assert_eq!(parts[0].times, vec![2, 2]);
+    }
+
+    #[test]
+    fn type_counts_and_rate() {
+        let s = sample();
+        assert_eq!(s.type_counts(), vec![2, 2, 1]);
+        assert!(s.mean_rate_hz() > 0.0);
+    }
+
+    #[test]
+    fn first_after_binary_search() {
+        let s = sample();
+        assert_eq!(s.first_after(1), 0);
+        assert_eq!(s.first_after(2), 2);
+        assert_eq!(s.first_after(9), 5);
+    }
+}

@@ -1,0 +1,207 @@
+//! Crossover model for Hybrid dispatch (paper §5.2.3, Table 1, Fig. 8).
+//!
+//! The hybrid algorithm (A1) runs PTPE when the episode count S exceeds a
+//! level-dependent crossover, else MapConcatenate:
+//!
+//!   S > MP * B_MP * T_B * f(N),   f(N) = a/N + b          (Eq. 2)
+//!
+//! The paper fits f to experimentally measured crossover points and finds
+//! `a/N + b` a better fit than `a*N + b` (Fig. 8). We do the same against
+//! crossovers measured on *this* substrate (`benches/table1_crossover.rs`)
+//! and ship the fitted constants as the default dispatch model.
+
+use crate::util::stats::{inverse_fit, linear_fit};
+
+/// The paper's experimentally determined crossover points (Table 1):
+/// number of episodes below which MapConcatenate wins, per level.
+pub const PAPER_TABLE1: &[(usize, f64)] =
+    &[(3, 415.0), (4, 190.0), (5, 200.0), (6, 100.0), (7, 100.0), (8, 60.0)];
+
+/// Fitted crossover model `crossover(N) = a/N + b`, clamped at 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrossoverModel {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl CrossoverModel {
+    /// Fit to measured (level, crossover) points with the paper's winning
+    /// `a/N + b` form.
+    pub fn fit(points: &[(usize, f64)]) -> CrossoverModel {
+        let xs: Vec<f64> = points.iter().map(|&(n, _)| n as f64).collect();
+        let ys: Vec<f64> = points.iter().map(|&(_, c)| c).collect();
+        let (a, b, _) = inverse_fit(&xs, &ys);
+        CrossoverModel { a, b }
+    }
+
+    /// Default model: fitted to the paper's Table 1.
+    pub fn paper_default() -> CrossoverModel {
+        Self::fit(PAPER_TABLE1)
+    }
+
+    /// Dispatch model fitted to crossovers measured on *this* substrate
+    /// (CPU-PJRT interpret mode; `benches/table1_crossover.rs`). The
+    /// serialized Pallas grid removes MapConcatenate's parallel-hardware
+    /// advantage, so crossovers are far smaller than the paper's GTX280
+    /// numbers — same a/N + b shape, different constants. This is what the
+    /// coordinator uses by default; see EXPERIMENTS.md §Perf.
+    pub fn substrate_default() -> CrossoverModel {
+        CrossoverModel { a: 165.3, b: -23.1 }
+    }
+
+    /// Predicted crossover (episode count) at level n.
+    pub fn crossover(&self, n: usize) -> f64 {
+        (self.a / n as f64 + self.b).max(0.0)
+    }
+
+    /// Hybrid dispatch decision (Alg. 2): true = run PTPE, false = run
+    /// MapConcatenate.
+    pub fn choose_ptpe(&self, n_episodes: usize, n: usize) -> bool {
+        // Levels 1-2 have no MapConcatenate advantage (Table 1 note:
+        // crossovers only exist for levels >= 3; tiny-N state machines are
+        // cheap enough that PTPE always wins unless there are almost no
+        // episodes).
+        if n < 3 {
+            return n_episodes as f64 > 1.0;
+        }
+        n_episodes as f64 > self.crossover(n)
+    }
+}
+
+/// Cost-based dispatch for this substrate — the Eq. 2 analog when the
+/// hardware is CPU-PJRT rather than a GTX280.
+///
+/// The paper's dispatch rule only needs S and N because on a real GPU the
+/// stream length divides out (both algorithms scan everything, in
+/// parallel). On the serialized interpret-mode substrate the economics
+/// change: PTPE's cost is quantized by full batches/chunks while
+/// MapConcatenate's scales linearly with S and scans ~2x the stream
+/// (boundary machines re-read the previous segment). The per-event
+/// coefficients below are calibrated from `benches/perf_kernels.rs` and
+/// `benches/table1_crossover.rs` on this build (EXPERIMENTS.md §Perf L3).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// episode lanes per PTPE batch (manifest m_episodes)
+    pub m_episodes: usize,
+    /// events per PTPE chunk (manifest c_chunk)
+    pub c_chunk: usize,
+    /// PTPE us per event per batch at level n: `a1_us_base + a1_us_per_n * n`
+    pub a1_us_base: f64,
+    pub a1_us_per_n: f64,
+    /// MapConcatenate us per scanned event per episode at level n
+    pub mc_us_base: f64,
+    pub mc_us_per_n: f64,
+}
+
+impl CostModel {
+    pub fn substrate_default(m_episodes: usize, c_chunk: usize) -> CostModel {
+        // Calibrated against single-call timings in benches/table1_crossover
+        // (S=1..16 probes, n=3/5/7): PTPE ~23.5/39.8/56 us per event-batch
+        // at n=3/5/7 (includes per-call literal/padding overhead), MapConcat
+        // ~15/34.8 us per scanned event per episode at n=3/5.
+        CostModel {
+            m_episodes,
+            c_chunk,
+            a1_us_base: -0.5,
+            a1_us_per_n: 8.0,
+            mc_us_base: -15.0,
+            mc_us_per_n: 10.0,
+        }
+    }
+
+    pub fn ptpe_us(&self, s: usize, n: usize, events: usize) -> f64 {
+        let batches = s.div_ceil(self.m_episodes).max(1);
+        let chunked = events.div_ceil(self.c_chunk).max(1) * self.c_chunk;
+        batches as f64 * chunked as f64 * (self.a1_us_base + self.a1_us_per_n * n as f64).max(1.0)
+    }
+
+    pub fn mapcat_us(&self, s: usize, n: usize, events: usize) -> f64 {
+        // boundary machines scan their own + the previous segment: ~2x
+        s as f64
+            * 2.0
+            * events as f64
+            * (self.mc_us_base + self.mc_us_per_n * n as f64).max(1.0)
+    }
+
+    /// true = PTPE, false = MapConcatenate.
+    pub fn choose_ptpe(&self, s: usize, n: usize, events: usize) -> bool {
+        self.ptpe_us(s, n, events) <= self.mapcat_us(s, n, events)
+    }
+}
+
+/// Goodness-of-fit comparison for Fig. 8: SSE of `a/N+b` vs `a*N+b`.
+pub fn fit_comparison(points: &[(usize, f64)]) -> (f64, f64) {
+    let xs: Vec<f64> = points.iter().map(|&(n, _)| n as f64).collect();
+    let ys: Vec<f64> = points.iter().map(|&(_, c)| c).collect();
+    let (_, _, sse_inv) = inverse_fit(&xs, &ys);
+    let (_, _, sse_lin) = linear_fit(&xs, &ys);
+    (sse_inv, sse_lin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fit_reproduces_fig8_preference() {
+        let (sse_inv, sse_lin) = fit_comparison(PAPER_TABLE1);
+        assert!(sse_inv < sse_lin, "a/N+b must fit Table 1 better (Fig. 8)");
+    }
+
+    #[test]
+    fn crossover_decreases_with_level() {
+        let m = CrossoverModel::paper_default();
+        assert!(m.crossover(3) > m.crossover(8));
+    }
+
+    #[test]
+    fn dispatch_matches_table1_direction() {
+        let m = CrossoverModel::paper_default();
+        // Well above the crossover: PTPE. Well below: MapConcatenate.
+        assert!(m.choose_ptpe(10_000, 4));
+        assert!(!m.choose_ptpe(10, 6));
+    }
+
+    #[test]
+    fn small_levels_default_to_ptpe() {
+        let m = CrossoverModel::paper_default();
+        assert!(m.choose_ptpe(100, 2));
+        assert!(m.choose_ptpe(100, 1));
+    }
+
+    #[test]
+    fn cost_model_prefers_mapcat_only_at_tiny_batches() {
+        let m = CostModel::substrate_default(512, 8192);
+        // one episode on a short stream: MapConcatenate's partial scan wins
+        assert!(!m.choose_ptpe(1, 3, 4000));
+        // a full batch: PTPE amortizes the chunk scan across 512 lanes
+        assert!(m.choose_ptpe(512, 3, 4000));
+        // long streams penalize MapConcatenate linearly
+        assert!(m.choose_ptpe(4, 3, 200_000));
+    }
+
+    #[test]
+    fn cost_model_ptpe_cost_quantized_by_batches() {
+        let m = CostModel::substrate_default(512, 8192);
+        // same cost anywhere inside one batch...
+        assert_eq!(m.ptpe_us(1, 4, 8000), m.ptpe_us(512, 4, 8000));
+        // ...doubles at the batch boundary
+        assert!(m.ptpe_us(513, 4, 8000) > 1.9 * m.ptpe_us(512, 4, 8000));
+    }
+
+    #[test]
+    fn cost_model_mapcat_scales_linearly_in_s() {
+        let m = CostModel::substrate_default(512, 8192);
+        let one = m.mapcat_us(1, 5, 10_000);
+        let ten = m.mapcat_us(10, 5, 10_000);
+        assert!((ten / one - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_roundtrip_on_synthetic_points() {
+        let pts: Vec<(usize, f64)> =
+            (3..=8).map(|n| (n, 600.0 / n as f64 + 25.0)).collect();
+        let m = CrossoverModel::fit(&pts);
+        assert!((m.a - 600.0).abs() < 1e-6 && (m.b - 25.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,15 @@
+//! Analytical GTX280 model — the substitute for the paper's hardware
+//! (DESIGN.md §5 substitution 1 and 3).
+//!
+//! Three roles:
+//! 1. **Occupancy / thread-block sizing** (§6.1.2): given an algorithm's
+//!    per-thread shared-memory and register footprint, how many threads
+//!    fit a multiprocessor — reproduces the paper's "only 32 threads/block
+//!    at N=6 for A1" arithmetic and the resource asymmetry driving the
+//!    two-pass approach.
+//! 2. **Hybrid dispatch** (Eq. 2): `S > MP * B_MP * T_B * f(N)` with
+//!    `f(N) = a/N + b` fitted to measured crossover points (Fig. 8).
+//! 3. **Profiler counters** (Fig. 10): pairs with `mining::telemetry`.
+
+pub mod occupancy;
+pub mod crossover;

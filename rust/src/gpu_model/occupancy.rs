@@ -1,0 +1,138 @@
+//! GTX280 occupancy arithmetic (paper §4, §5.3, §6.1.2).
+
+/// GTX280 machine description (paper Fig. 1 right, §6.1.2).
+#[derive(Clone, Copy, Debug)]
+pub struct Gpu {
+    pub multiprocessors: u32,
+    pub cores_per_mp: u32,
+    pub warp_size: u32,
+    pub shared_mem_per_mp: u32,
+    pub registers_per_mp: u32,
+    pub max_threads_per_block: u32,
+}
+
+pub const GTX280: Gpu = Gpu {
+    multiprocessors: 30,
+    cores_per_mp: 8,
+    warp_size: 32,
+    shared_mem_per_mp: 16 * 1024,
+    registers_per_mp: 16 * 1024,
+    max_threads_per_block: 512,
+};
+
+/// Per-thread resource footprint of a counting kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelResources {
+    pub shared_bytes_per_thread: u32,
+    pub registers_per_thread: u32,
+    pub local_bytes_per_thread: u32,
+}
+
+/// A1's footprint at episode size N: per-level bounded lists of K int32
+/// timestamps + list cursors in shared memory (the paper reports 220 B at
+/// N=5, K≈8: 4*5*8=160 B of lists + bookkeeping), 17 registers, 80 B of
+/// local-memory spill.
+pub fn a1_resources(n: usize, k: usize) -> KernelResources {
+    KernelResources {
+        shared_bytes_per_thread: (4 * n * k + 12 * n) as u32,
+        registers_per_thread: 17,
+        local_bytes_per_thread: 80,
+    }
+}
+
+/// A2's footprint: one int32 timestamp per level in registers, no local
+/// memory (paper §6.3: 13 registers, no local loads/stores).
+pub fn a2_resources(n: usize) -> KernelResources {
+    KernelResources {
+        shared_bytes_per_thread: (4 * n) as u32,
+        registers_per_thread: 13,
+        local_bytes_per_thread: 0,
+    }
+}
+
+impl Gpu {
+    /// Maximum threads per block under the shared-memory budget — the
+    /// paper's runtime parameter T (§6.1.2), rounded down to a warp
+    /// multiple (min one warp).
+    pub fn max_threads(&self, r: &KernelResources) -> u32 {
+        let by_shared = if r.shared_bytes_per_thread == 0 {
+            self.max_threads_per_block
+        } else {
+            self.shared_mem_per_mp / r.shared_bytes_per_thread
+        };
+        let by_regs = if r.registers_per_thread == 0 {
+            self.max_threads_per_block
+        } else {
+            self.registers_per_mp / r.registers_per_thread
+        };
+        let t = by_shared.min(by_regs).min(self.max_threads_per_block);
+        (t / self.warp_size).max(1) * self.warp_size
+    }
+
+    /// Blocks per multiprocessor for a block of `t_block` threads (B_MP in
+    /// Eq. 1) — bounded by shared memory.
+    pub fn blocks_per_mp(&self, r: &KernelResources, t_block: u32) -> u32 {
+        let shared_per_block = r.shared_bytes_per_thread * t_block;
+        if shared_per_block == 0 {
+            return 8;
+        }
+        (self.shared_mem_per_mp / shared_per_block).clamp(1, 8)
+    }
+
+    /// Paper Eq. 1 threshold: episodes needed to fully utilize the GPU.
+    pub fn full_utilization_threshold(&self, r: &KernelResources) -> u64 {
+        let t = self.max_threads(r);
+        let b = self.blocks_per_mp(r, t);
+        self.multiprocessors as u64 * b as u64 * t as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a1_threads_shrink_with_n_paper_6_1_2() {
+        // paper: N=1 allows 128 threads; by N=6 only 32 threads/block fit.
+        let t1 = GTX280.max_threads(&a1_resources(1, 8));
+        let t6 = GTX280.max_threads(&a1_resources(6, 8));
+        assert!(t1 >= 128, "t1 {t1}");
+        assert!(t6 <= 64, "t6 {t6}");
+        assert!(t6 >= 32);
+    }
+
+    #[test]
+    fn a1_at_n5_matches_paper_footprint_scale() {
+        // §5.3: "episode size 5 -> 220 bytes of shared memory"
+        let r = a1_resources(5, 8);
+        assert!((200..=260).contains(&r.shared_bytes_per_thread), "{r:?}");
+    }
+
+    #[test]
+    fn a2_allows_many_more_threads_than_a1() {
+        for n in 2..=8 {
+            let ta1 = GTX280.max_threads(&a1_resources(n, 8));
+            let ta2 = GTX280.max_threads(&a2_resources(n));
+            assert!(ta2 >= 2 * ta1, "n={n}: a2 {ta2} vs a1 {ta1}");
+        }
+    }
+
+    #[test]
+    fn utilization_threshold_positive_and_monotone() {
+        let th3 = GTX280.full_utilization_threshold(&a1_resources(3, 8));
+        let th7 = GTX280.full_utilization_threshold(&a1_resources(7, 8));
+        assert!(th3 > 0 && th7 > 0);
+        assert!(th3 >= th7, "more state => fewer resident threads");
+    }
+
+    #[test]
+    fn warp_rounding() {
+        let r = KernelResources {
+            shared_bytes_per_thread: 300,
+            registers_per_thread: 16,
+            local_bytes_per_thread: 0,
+        };
+        let t = GTX280.max_threads(&r);
+        assert_eq!(t % 32, 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! episodes-gpu: a three-layer (Rust + JAX + Pallas, AOT via PJRT)
+//! reproduction of *"Towards Chip-on-Chip Neuroscience: Fast Mining of
+//! Frequent Episodes Using Graphics Processors"* (Cao et al., 2009).
+//!
+//! - [`events`] / [`datasets`] — spike-train data model and generators.
+//! - [`episodes`] — serial episodes with inter-event constraints and
+//!   level-wise candidate generation.
+//! - [`mining`] — CPU reference algorithms (Algorithm 1, Algorithm 3, the
+//!   paper's multithreaded baseline, profiler telemetry).
+//! - [`gpu_model`] — analytical GTX280 model (occupancy, crossover fits,
+//!   Fig. 10 counters).
+//! - [`runtime`] — PJRT loading/execution of the AOT-compiled Pallas
+//!   counting kernels (`artifacts/*.hlo.txt`).
+//! - [`coordinator`] — the paper's system contribution: PTPE /
+//!   MapConcatenate / Hybrid dispatch, the two-pass A2+A1 elimination
+//!   pipeline, the level-wise miner, and the streaming ("chip-on-chip")
+//!   driver.
+//! - [`util`] — RNG, stats, CLI, bench and property-test harnesses.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod datasets;
+pub mod episodes;
+pub mod events;
+pub mod gpu_model;
+pub mod mining;
+pub mod runtime;
+pub mod util;

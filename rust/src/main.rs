@@ -1,0 +1,228 @@
+//! `epminer`: CLI front-end for the episodes-gpu miner.
+//!
+//! Subcommands:
+//!   mine      — level-wise mining over a named dataset
+//!   count     — count explicit episodes (debugging/inspection)
+//!   gen       — generate a dataset to a file (binary or csv)
+//!   info      — runtime/artifact information
+//!
+//! Examples:
+//!   epminer mine --dataset sym26 --theta 60 --mode two-pass
+//!   epminer gen --dataset 2-1-35 --out /tmp/d35.bin
+//!   epminer info
+
+use anyhow::{bail, Context, Result};
+
+use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
+use episodes_gpu::coordinator::{Coordinator, Strategy};
+use episodes_gpu::datasets;
+use episodes_gpu::episodes::{Episode, Interval};
+use episodes_gpu::events::io;
+use episodes_gpu::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("mine") => cmd_mine(&args),
+        Some("count") => cmd_count(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("reconstruct") => cmd_reconstruct(&args),
+        Some("raster") => cmd_raster(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: epminer <mine|count|gen|reconstruct|raster|profile|info> [options]\n\
+                 \n\
+                 mine        --dataset <sym26|2-1-33|2-1-34|2-1-35> --theta <u64>\n\
+                 \x20            [--mode two-pass|one-pass] [--strategy ptpe|mapconcat|hybrid|cpu|cpu-parallel]\n\
+                 \x20            [--max-level <n>] [--seed <u64>]\n\
+                 count       --dataset <name> --episode 0,1,2 --low 5 --high 15 [--seed <u64>]\n\
+                 gen         --dataset <name> --out <path> [--format bin|csv] [--seed <u64>]\n\
+                 reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
+                 raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
+                 profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
+                 info"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<(episodes_gpu::events::EventStream, String)> {
+    let name = args.get_or("dataset", "sym26").to_string();
+    let seed = args.get_u64("seed", 7);
+    let (stream, tag) =
+        datasets::by_name(&name, seed).with_context(|| format!("unknown dataset {name}"))?;
+    Ok((stream, tag.to_string()))
+}
+
+fn interval_from(args: &Args, stream_name: &str) -> Interval {
+    // dataset-appropriate default physiological delay band
+    let (dl, dh) = if stream_name == "sym26" { (5, 15) } else { (2, 10) };
+    Interval::new(args.get_i32("low", dl), args.get_i32("high", dh))
+}
+
+fn cmd_mine(args: &Args) -> Result<()> {
+    let (stream, name) = load_dataset(args)?;
+    println!(
+        "dataset {name}: {} events, {} types, {:.1}s span, {:.0} Hz mean",
+        stream.len(),
+        stream.n_types,
+        stream.span() as f64 / 1000.0,
+        stream.mean_rate_hz()
+    );
+    let theta = args.get_u64("theta", 100);
+    let iv = interval_from(args, &name);
+    let mode = match args.get_or("mode", "two-pass") {
+        "two-pass" => CountMode::TwoPass,
+        "one-pass" => {
+            let strategy = Strategy::parse(args.get_or("strategy", "hybrid"))
+                .context("bad --strategy")?;
+            CountMode::OnePass(strategy)
+        }
+        other => bail!("bad --mode {other}"),
+    };
+    let mut cfg = MineConfig::new(theta, vec![iv]);
+    cfg.mode = mode;
+    cfg.max_level = args.get_usize("max-level", 8);
+
+    let mut coord = Coordinator::open_default()?;
+    println!("runtime: platform={}", coord.rt.platform());
+    let t0 = std::time::Instant::now();
+    let result = coord.mine(&stream, &cfg)?;
+    println!("\nlevel  candidates  frequent  a2-culled  count-time");
+    for l in &result.levels {
+        println!(
+            "{:>5}  {:>10}  {:>8}  {:>9}  {:>9.3}s",
+            l.level, l.candidates, l.frequent, l.culled_by_a2, l.count_seconds
+        );
+    }
+    println!("\ntotal {:.3}s; metrics: {}", t0.elapsed().as_secs_f64(), coord.metrics.report());
+    let mut top: Vec<_> = result.frequent.iter().filter(|c| c.episode.n() >= 2).collect();
+    top.sort_by_key(|c| std::cmp::Reverse((c.episode.n(), c.count)));
+    println!("\ntop frequent episodes:");
+    for c in top.iter().take(12) {
+        println!("  [{}] {}", c.count, c.episode.display());
+    }
+    Ok(())
+}
+
+fn cmd_count(args: &Args) -> Result<()> {
+    let (stream, name) = load_dataset(args)?;
+    let ep_spec = args.get("episode").context("--episode 0,1,2 required")?;
+    let types: Vec<i32> = ep_spec
+        .split(',')
+        .map(|s| s.trim().parse::<i32>().context("bad --episode"))
+        .collect::<Result<_>>()?;
+    let iv = interval_from(args, &name);
+    let ep = Episode::new(types.clone(), vec![iv; types.len() - 1]);
+    let strategy = Strategy::parse(args.get_or("strategy", "hybrid")).context("bad --strategy")?;
+
+    let mut coord = Coordinator::open_default()?;
+    let counts = coord.count(std::slice::from_ref(&ep), &stream, strategy)?;
+    println!("{} -> {}", ep.display(), counts[0]);
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let (stream, name) = load_dataset(args)?;
+    let out = args.get("out").context("--out required")?;
+    let path = std::path::Path::new(out);
+    match args.get_or("format", "bin") {
+        "bin" => io::write_binary(&stream, path)?,
+        "csv" => io::write_csv(&stream, path)?,
+        other => bail!("bad --format {other}"),
+    }
+    println!("wrote {name} ({} events) to {out}", stream.len());
+    Ok(())
+}
+
+fn cmd_reconstruct(args: &Args) -> Result<()> {
+    use episodes_gpu::analysis::connectivity::Circuit;
+    use episodes_gpu::analysis::summarize::maximal_episodes;
+    let (stream, name) = load_dataset(args)?;
+    let theta = args.get_u64("theta", 60);
+    let iv = interval_from(args, &name);
+    let mut cfg = MineConfig::new(theta, vec![iv]);
+    cfg.max_level = args.get_usize("max-level", 8);
+    let mut coord = Coordinator::open_default()?;
+    let result = coord.mine(&stream, &cfg)?;
+
+    let maximal = maximal_episodes(&result.frequent, 0.5);
+    println!("frequent episodes: {} ({} maximal)", result.frequent.len(), maximal.len());
+    println!("\nmaximal episodes:");
+    for c in maximal.iter().take(15).filter(|c| c.episode.n() >= 2) {
+        println!("  [{:>4}] {}", c.count, c.episode.display());
+    }
+
+    let deep: Vec<_> =
+        result.frequent.iter().filter(|c| c.episode.n() >= 2).cloned().collect();
+    let circuit = Circuit::reconstruct(&deep).thresholded(theta);
+    println!("\nreconstructed functional edges ({}):", circuit.edges.len());
+    for e in circuit.edges.iter().take(20) {
+        println!("  {} -> {}  [support {}, delay ({},{}]]", e.from, e.to, e.support, e.t_low, e.t_high);
+    }
+    if let Some(path) = args.get("dot") {
+        std::fs::write(path, circuit.to_dot())?;
+        println!("\nwrote graphviz to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_raster(args: &Args) -> Result<()> {
+    use episodes_gpu::analysis::raster;
+    let (stream, name) = load_dataset(args)?;
+    let from = args.get_i32("from", stream.t_begin());
+    let to = args.get_i32("to", (stream.t_begin() + 2000).min(stream.t_end()));
+    let ep = args.get("episode").map(|spec| {
+        let types: Vec<i32> =
+            spec.split(',').map(|s| s.trim().parse().unwrap()).collect();
+        let iv = interval_from(args, &name);
+        Episode::new(types.clone(), vec![iv; types.len() - 1])
+    });
+    print!("{}", raster::render(&stream, from, to, 100, 30, ep.as_ref()));
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    use episodes_gpu::mining::telemetry::{profile_a1, profile_a2};
+    use episodes_gpu::util::rng::Rng;
+    let (stream, name) = load_dataset(args)?;
+    let n = args.get_usize("size", 4);
+    let count = args.get_usize("episodes", 256);
+    let iv = interval_from(args, &name);
+    let mut rng = Rng::new(args.get_u64("seed", 7));
+    let eps: Vec<Episode> = (0..count)
+        .map(|_| {
+            let types: Vec<i32> =
+                (0..n).map(|_| rng.range_i32(0, stream.n_types as i32 - 1)).collect();
+            Episode::new(types, vec![iv; n - 1])
+        })
+        .collect();
+    let c1 = profile_a1(&eps, &stream, 8);
+    let c2 = profile_a2(&eps, &stream);
+    println!("SIMT-warp profile, {count} episodes of size {n} over {name}:");
+    println!("  A1: branches={} divergent={} local_loads={} local_stores={}",
+        c1.branches, c1.divergent_branches, c1.local_loads, c1.local_stores);
+    println!("  A2: branches={} divergent={} local_loads={} local_stores={}",
+        c2.branches, c2.divergent_branches, c2.local_loads, c2.local_stores);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = episodes_gpu::runtime::Runtime::default_dir();
+    println!("artifact dir: {dir:?}");
+    let rt = episodes_gpu::runtime::Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    let m = rt.manifest();
+    println!("manifest: {m:?}");
+    Ok(())
+}

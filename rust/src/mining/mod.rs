@@ -1,0 +1,25 @@
+//! CPU reference mining algorithms.
+//!
+//! These are (a) the ground truth the accelerated path is tested against,
+//! (b) the paper's CPU baseline (§6.4) for the Fig. 11 comparison, and
+//! (c) the instrumented telemetry source for the GTX280 profiler model
+//! (Fig. 10).
+
+pub mod serial;
+pub mod cpu_parallel;
+pub mod telemetry;
+pub mod windows;
+
+use crate::episodes::Episode;
+use crate::events::EventStream;
+
+/// Count non-overlapped occurrences for every episode (serial Algorithm 1,
+/// unbounded lists — the exact reference).
+pub fn count_all_serial(episodes: &[Episode], stream: &EventStream) -> Vec<u64> {
+    episodes.iter().map(|e| serial::count_a1(e, stream)).collect()
+}
+
+/// Count under the relaxed constraints for every episode (Algorithm 3).
+pub fn count_all_a2_serial(episodes: &[Episode], stream: &EventStream) -> Vec<u64> {
+    episodes.iter().map(|e| serial::count_a2(e, stream)).collect()
+}

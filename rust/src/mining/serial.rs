@@ -1,0 +1,307 @@
+//! Serial counting algorithms, straight from the paper's pseudocode.
+//!
+//! `count_a1` is Algorithm 1 (exact, unbounded per-level occurrence
+//! lists); `count_a1_bounded` bounds the lists to the K most recent
+//! entries (bit-for-bit the semantics of the Pallas A1 kernel);
+//! `count_a2` is Algorithm 3 (relaxed constraints, single timestamp per
+//! level — Observation 5.1). These mirror `python/compile/kernels/ref.py`
+//! exactly; the shared fixtures in `rust/tests/cross_fixtures.rs` pin both
+//! sides together.
+
+use crate::episodes::Episode;
+use crate::events::{EventStream, Tick};
+
+/// Paper Algorithm 1: exact non-overlapped count with `(t_low, t_high]`
+/// inter-event constraints, unbounded lists.
+pub fn count_a1(ep: &Episode, stream: &EventStream) -> u64 {
+    let n = ep.n();
+    if n == 1 {
+        return stream.types.iter().filter(|&&e| e == ep.types[0]).count() as u64;
+    }
+    let mut count = 0u64;
+    let mut s: Vec<Vec<Tick>> = vec![vec![]; n];
+    for (e, t) in stream.iter() {
+        let mut completed = false;
+        for i in (0..n).rev() {
+            if e != ep.types[i] {
+                continue;
+            }
+            if i == 0 {
+                s[0].push(t);
+            } else {
+                let iv = &ep.intervals[i - 1];
+                // latest-first search, stop at the first satisfying entry
+                if s[i - 1].iter().rev().any(|&tp| iv.admits(t - tp)) {
+                    if i == n - 1 {
+                        count += 1;
+                        s.iter_mut().for_each(Vec::clear);
+                        completed = true;
+                    } else {
+                        s[i].push(t);
+                    }
+                }
+            }
+            if completed {
+                break;
+            }
+        }
+    }
+    count
+}
+
+/// Algorithm 1 with per-level lists bounded to the K most recent entries —
+/// the exact semantics of the GPU/Pallas A1 kernel.
+pub fn count_a1_bounded(ep: &Episode, stream: &EventStream, k: usize) -> u64 {
+    let n = ep.n();
+    if n == 1 {
+        return stream.types.iter().filter(|&&e| e == ep.types[0]).count() as u64;
+    }
+    let mut count = 0u64;
+    let mut s: Vec<Vec<Tick>> = vec![Vec::with_capacity(k + 1); n];
+    for (e, t) in stream.iter() {
+        let mut completed = false;
+        for i in (0..n).rev() {
+            if e != ep.types[i] {
+                continue;
+            }
+            if i == 0 {
+                push_bounded(&mut s[0], t, k);
+            } else {
+                let iv = &ep.intervals[i - 1];
+                if s[i - 1].iter().rev().any(|&tp| iv.admits(t - tp)) {
+                    if i == n - 1 {
+                        count += 1;
+                        s.iter_mut().for_each(Vec::clear);
+                        completed = true;
+                    } else {
+                        push_bounded(&mut s[i], t, k);
+                    }
+                }
+            }
+            if completed {
+                break;
+            }
+        }
+    }
+    count
+}
+
+#[inline]
+fn push_bounded(list: &mut Vec<Tick>, t: Tick, k: usize) {
+    list.push(t);
+    if list.len() > k {
+        list.remove(0);
+    }
+}
+
+/// Paper Algorithm 3: relaxed counting (upper bounds only), single
+/// timestamp per level. The effective relaxation is `[0, t_high]` — see
+/// the A2 kernel docs for why `d == 0` must be admitted.
+pub fn count_a2(ep: &Episode, stream: &EventStream) -> u64 {
+    let n = ep.n();
+    if n == 1 {
+        return stream.types.iter().filter(|&&e| e == ep.types[0]).count() as u64;
+    }
+    let mut count = 0u64;
+    let mut s: Vec<Option<Tick>> = vec![None; n];
+    for (e, t) in stream.iter() {
+        let mut completed = false;
+        for i in (0..n).rev() {
+            if e != ep.types[i] {
+                continue;
+            }
+            if i == 0 {
+                s[0] = Some(t);
+            } else if let Some(tp) = s[i - 1] {
+                let d = t - tp;
+                if 0 <= d && d <= ep.intervals[i - 1].t_high {
+                    if i == n - 1 {
+                        count += 1;
+                        s.iter_mut().for_each(|x| *x = None);
+                        completed = true;
+                    } else {
+                        s[i] = Some(t);
+                    }
+                }
+            }
+            if completed {
+                break;
+            }
+        }
+    }
+    count
+}
+
+/// MapConcatenate boundary-machine Map step on the CPU (reference for the
+/// Pallas kernel and the Concatenate input when running CPU-only).
+/// Returns, per segment, the N `(a, count, b)` machine tuples.
+pub fn mapcat_map(
+    ep: &Episode,
+    stream: &EventStream,
+    taus: &[Tick],
+    k: usize,
+) -> Vec<Vec<(Tick, u64, Tick)>> {
+    let n = ep.n();
+    assert!(n >= 2);
+    let sumh = ep.span_max();
+    let p_count = taus.len() - 1;
+    let mut out = Vec::with_capacity(p_count);
+    for p in 0..p_count {
+        let (tau_p, tau_p1) = (taus[p], taus[p + 1]);
+        let stop = tau_p1 + sumh;
+        let mut tuples = Vec::with_capacity(n);
+        for mk in 0..n {
+            let start: Tick = tau_p - ep.intervals[..mk].iter().map(|iv| iv.t_high).sum::<Tick>();
+            let mut s: Vec<Vec<Tick>> = vec![Vec::with_capacity(k + 1); n];
+            let (mut cnt, mut a, mut b) = (0u64, tau_p, tau_p1);
+            let (mut a_closed, mut frozen) = (false, false);
+            for (e, t) in stream.iter() {
+                // inclusive stop: a crossing occurrence can complete at
+                // exactly tau_{p+1} + sum(t_high) (first event exactly on
+                // the boundary). The paper's strict "<" (§5.2.2 step 4)
+                // loses it and desynchronizes the b == a chain.
+                if t > stop || frozen {
+                    break;
+                }
+                if t <= start {
+                    continue;
+                }
+                let mut completed = false;
+                for i in (0..n).rev() {
+                    if e != ep.types[i] {
+                        continue;
+                    }
+                    if i == 0 {
+                        push_bounded(&mut s[0], t, k);
+                    } else {
+                        let iv = &ep.intervals[i - 1];
+                        if s[i - 1].iter().rev().any(|&tp| iv.admits(t - tp)) {
+                            if i == n - 1 {
+                                completed = true;
+                            } else {
+                                push_bounded(&mut s[i], t, k);
+                            }
+                        }
+                    }
+                    if completed {
+                        break;
+                    }
+                }
+                if completed {
+                    s.iter_mut().for_each(Vec::clear);
+                    if tau_p < t && t <= tau_p1 {
+                        cnt += 1;
+                        // inclusive window, mirroring the crossing window
+                        if !a_closed && t <= tau_p + sumh {
+                            a = t;
+                        }
+                        a_closed = true;
+                    } else if t > tau_p1 {
+                        b = t;
+                        frozen = true;
+                    }
+                }
+            }
+            tuples.push((a, cnt, b));
+        }
+        out.push(tuples);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+    use crate::util::rng::Rng;
+
+    fn ep(types: Vec<i32>, lows: Vec<i32>, highs: Vec<i32>) -> Episode {
+        let ivs = lows
+            .into_iter()
+            .zip(highs)
+            .map(|(l, h)| Interval::new(l, h))
+            .collect();
+        Episode::new(types, ivs)
+    }
+
+    fn stream(pairs: Vec<(i32, i32)>) -> EventStream {
+        EventStream::from_pairs(pairs, 10)
+    }
+
+    #[test]
+    fn a1_basic_two_occurrences() {
+        let s = stream(vec![(0, 1), (1, 8), (2, 20), (0, 30), (1, 35), (2, 45)]);
+        let e = ep(vec![0, 1, 2], vec![0, 0], vec![10, 15]);
+        assert_eq!(count_a1(&e, &s), 2);
+    }
+
+    #[test]
+    fn a1_lower_bound_needs_older_entry() {
+        // most recent A fails t_low, older A satisfies — the list matters
+        let s = stream(vec![(0, 0), (0, 9), (1, 10)]);
+        let e = ep(vec![0, 1], vec![2], vec![10]);
+        assert_eq!(count_a1(&e, &s), 1);
+        assert_eq!(count_a1_bounded(&e, &s, 8), 1);
+        assert_eq!(count_a1_bounded(&e, &s, 1), 0); // K=1 truncates it away
+    }
+
+    #[test]
+    fn a1_event_cannot_chain_itself() {
+        let s = stream(vec![(0, 1), (0, 4)]);
+        let e = ep(vec![0, 0], vec![0], vec![10]);
+        assert_eq!(count_a1(&e, &s), 1);
+    }
+
+    #[test]
+    fn a2_dominates_a1_with_ties() {
+        // simultaneous events: A2 admits d == 0, A1 does not
+        let s = stream(vec![(0, 5), (1, 5)]);
+        let e = ep(vec![0, 1], vec![0], vec![10]);
+        assert_eq!(count_a1(&e, &s), 0);
+        assert_eq!(count_a2(&e, &s), 1);
+    }
+
+    #[test]
+    fn theorem_5_1_on_random_streams() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n_ev = 200;
+            let mut pairs = vec![];
+            let mut t = 0;
+            for _ in 0..n_ev {
+                t += rng.range_i32(0, 4);
+                pairs.push((rng.range_i32(0, 4), t));
+            }
+            let s = stream(pairs);
+            let n = rng.range_i32(2, 4) as usize;
+            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 4)).collect();
+            let lows: Vec<i32> = (0..n - 1).map(|_| rng.range_i32(0, 3)).collect();
+            let highs: Vec<i32> = lows.iter().map(|&l| l + rng.range_i32(1, 9)).collect();
+            let e = ep(types, lows, highs);
+            assert!(count_a2(&e, &s) >= count_a1(&e, &s), "{}", e.display());
+        }
+    }
+
+    #[test]
+    fn n1_episode_is_frequency() {
+        let s = stream(vec![(3, 1), (3, 2), (1, 3), (3, 9)]);
+        assert_eq!(count_a1(&Episode::single(3), &s), 3);
+        assert_eq!(count_a2(&Episode::single(3), &s), 3);
+    }
+
+    #[test]
+    fn mapcat_single_segment_machine0_equals_serial() {
+        let mut rng = Rng::new(5);
+        let mut pairs = vec![];
+        let mut t = 0;
+        for _ in 0..300 {
+            t += rng.range_i32(0, 3);
+            pairs.push((rng.range_i32(0, 3), t));
+        }
+        let s = stream(pairs);
+        let e = ep(vec![0, 1, 2], vec![1, 0], vec![8, 6]);
+        let taus = vec![s.t_begin() - 1, s.t_end()];
+        let tuples = mapcat_map(&e, &s, &taus, 8);
+        assert_eq!(tuples[0][0].1, count_a1_bounded(&e, &s, 8));
+    }
+}

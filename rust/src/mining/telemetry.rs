@@ -1,0 +1,287 @@
+//! Instrumented counting: the telemetry source for the GTX280 profiler
+//! model (Fig. 10 reproduction).
+//!
+//! We cannot run the CUDA Visual Profiler on this substrate, so we count
+//! the *algorithmic events* those hardware counters measure, simulating
+//! SIMT execution over warps of 32 episode-lanes:
+//!
+//! - **divergent branches**: a data-dependent branch (type-match test,
+//!   constraint-satisfaction test, completion test) whose outcome differs
+//!   across the active lanes of a warp — on the GTX280 every such branch
+//!   serializes both paths.
+//! - **local loads/stores**: A1's per-level occurrence lists exceed the
+//!   register budget (paper: 17 registers + 80 B local per A1 thread) and
+//!   spill to local memory, so every list probe is a local load and every
+//!   list update a local store. A2's single-timestamp state fits in
+//!   registers (13 registers, no local memory), so its counters are zero
+//!   by construction — matching the profiler numbers in Fig. 10(a).
+
+use crate::episodes::Episode;
+use crate::events::{EventStream, Tick};
+
+pub const WARP: usize = 32;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProfileCounters {
+    pub branches: u64,
+    pub divergent_branches: u64,
+    pub local_loads: u64,
+    pub local_stores: u64,
+}
+
+impl ProfileCounters {
+    pub fn add(&mut self, o: &ProfileCounters) {
+        self.branches += o.branches;
+        self.divergent_branches += o.divergent_branches;
+        self.local_loads += o.local_loads;
+        self.local_stores += o.local_stores;
+    }
+}
+
+/// Tally a warp-level branch: one branch instruction issued; divergent if
+/// both outcomes are present among active lanes.
+#[inline]
+fn tally_branch(c: &mut ProfileCounters, taken: u32, active: u32) {
+    debug_assert!(taken & !active == 0);
+    c.branches += 1;
+    if taken != 0 && taken != active {
+        c.divergent_branches += 1;
+    }
+}
+
+/// Profile Algorithm A1 (bounded lists, as on the GPU) over warps of 32
+/// episodes. Returns aggregated counters; counting results are discarded
+/// (use `serial::count_a1_bounded` for counts).
+pub fn profile_a1(episodes: &[Episode], stream: &EventStream, k: usize) -> ProfileCounters {
+    let mut total = ProfileCounters::default();
+    for warp in episodes.chunks(WARP) {
+        total.add(&profile_a1_warp(warp, stream, k));
+    }
+    total
+}
+
+fn profile_a1_warp(warp: &[Episode], stream: &EventStream, k: usize) -> ProfileCounters {
+    let mut c = ProfileCounters::default();
+    let lanes = warp.len();
+    let all: u32 = if lanes == 32 { u32::MAX } else { (1u32 << lanes) - 1 };
+    let max_n = warp.iter().map(|e| e.n()).max().unwrap_or(0);
+    let mut states: Vec<Vec<Vec<Tick>>> = warp.iter().map(|e| vec![vec![]; e.n()]).collect();
+    for (e, t) in stream.iter() {
+        let mut done: u32 = 0;
+        for i in (0..max_n).rev() {
+            // SIMT: every lane evaluates the level-i type-match branch.
+            let mut match_mask: u32 = 0;
+            for (l, ep) in warp.iter().enumerate() {
+                if i < ep.n() && ep.types[i] == e && done & (1 << l) == 0 {
+                    match_mask |= 1 << l;
+                }
+            }
+            tally_branch(&mut c, match_mask, all & !done);
+            if match_mask == 0 {
+                continue;
+            }
+            // Matching lanes probe their level i-1 list (local loads) and
+            // branch on whether a satisfying entry exists.
+            let mut sat_mask: u32 = 0;
+            for l in 0..lanes {
+                if match_mask & (1 << l) == 0 {
+                    continue;
+                }
+                let ep = &warp[l];
+                if i == 0 {
+                    push_bounded(&mut states[l][0], t, k);
+                    c.local_stores += 1;
+                    continue;
+                }
+                let iv = &ep.intervals[i - 1];
+                let mut found = false;
+                for &tp in states[l][i - 1].iter().rev() {
+                    c.local_loads += 1; // each probe reads a spilled slot
+                    if iv.admits(t - tp) {
+                        found = true;
+                        break;
+                    }
+                }
+                if found {
+                    sat_mask |= 1 << l;
+                }
+            }
+            if i == 0 {
+                continue;
+            }
+            tally_branch(&mut c, sat_mask, match_mask);
+            for l in 0..lanes {
+                if sat_mask & (1 << l) == 0 {
+                    continue;
+                }
+                let n = warp[l].n();
+                if i == n - 1 {
+                    // completion: clear all lists (stores) and consume event
+                    let cleared: u64 = states[l].iter().map(|v| v.len() as u64).sum();
+                    c.local_stores += cleared.max(1);
+                    states[l].iter_mut().for_each(Vec::clear);
+                    done |= 1 << l;
+                } else {
+                    push_bounded(&mut states[l][i], t, k);
+                    c.local_stores += 1;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Profile Algorithm A2 over warps of 32 episodes. A2's state is
+/// register-resident, so local loads/stores stay zero; only branch
+/// behavior is tallied.
+pub fn profile_a2(episodes: &[Episode], stream: &EventStream) -> ProfileCounters {
+    let mut total = ProfileCounters::default();
+    for warp in episodes.chunks(WARP) {
+        total.add(&profile_a2_warp(warp, stream));
+    }
+    total
+}
+
+fn profile_a2_warp(warp: &[Episode], stream: &EventStream) -> ProfileCounters {
+    let mut c = ProfileCounters::default();
+    let lanes = warp.len();
+    let all: u32 = if lanes == 32 { u32::MAX } else { (1u32 << lanes) - 1 };
+    let max_n = warp.iter().map(|e| e.n()).max().unwrap_or(0);
+    let mut states: Vec<Vec<Option<Tick>>> = warp.iter().map(|e| vec![None; e.n()]).collect();
+    for (e, t) in stream.iter() {
+        let mut done: u32 = 0;
+        for i in (0..max_n).rev() {
+            let mut match_mask: u32 = 0;
+            for (l, ep) in warp.iter().enumerate() {
+                if i < ep.n() && ep.types[i] == e && done & (1 << l) == 0 {
+                    match_mask |= 1 << l;
+                }
+            }
+            tally_branch(&mut c, match_mask, all & !done);
+            if match_mask == 0 {
+                continue;
+            }
+            let mut sat_mask: u32 = 0;
+            for l in 0..lanes {
+                if match_mask & (1 << l) == 0 {
+                    continue;
+                }
+                if i == 0 {
+                    states[l][0] = Some(t);
+                    continue;
+                }
+                let ep = &warp[l];
+                if let Some(tp) = states[l][i - 1] {
+                    let d = t - tp;
+                    if 0 <= d && d <= ep.intervals[i - 1].t_high {
+                        sat_mask |= 1 << l;
+                    }
+                }
+            }
+            if i == 0 {
+                continue;
+            }
+            tally_branch(&mut c, sat_mask, match_mask);
+            for l in 0..lanes {
+                if sat_mask & (1 << l) == 0 {
+                    continue;
+                }
+                let n = warp[l].n();
+                if i == n - 1 {
+                    states[l].iter_mut().for_each(|x| *x = None);
+                    done |= 1 << l;
+                } else {
+                    states[l][i] = Some(t);
+                }
+            }
+        }
+    }
+    c
+}
+
+#[inline]
+fn push_bounded(list: &mut Vec<Tick>, t: Tick, k: usize) {
+    list.push(t);
+    if list.len() > k {
+        list.remove(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+    use crate::util::rng::Rng;
+
+    fn world(seed: u64, n_eps: usize, n: usize) -> (Vec<Episode>, EventStream) {
+        let mut rng = Rng::new(seed);
+        let mut pairs = vec![];
+        let mut t = 0;
+        for _ in 0..800 {
+            t += rng.range_i32(0, 3);
+            pairs.push((rng.range_i32(0, 6), t));
+        }
+        let stream = EventStream::from_pairs(pairs, 7);
+        let eps = (0..n_eps)
+            .map(|_| {
+                let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 6)).collect();
+                let ivs = (0..n - 1)
+                    .map(|_| {
+                        let lo = rng.range_i32(0, 2);
+                        Interval::new(lo, lo + rng.range_i32(3, 10))
+                    })
+                    .collect();
+                Episode::new(types, ivs)
+            })
+            .collect();
+        (eps, stream)
+    }
+
+    #[test]
+    fn a2_has_no_local_memory_traffic() {
+        let (eps, stream) = world(1, 64, 4);
+        let c = profile_a2(&eps, &stream);
+        assert_eq!(c.local_loads, 0);
+        assert_eq!(c.local_stores, 0);
+        assert!(c.branches > 0);
+    }
+
+    #[test]
+    fn a1_has_local_memory_traffic() {
+        let (eps, stream) = world(2, 64, 4);
+        let c = profile_a1(&eps, &stream, 8);
+        assert!(c.local_loads > 0);
+        assert!(c.local_stores > 0);
+    }
+
+    #[test]
+    fn a1_diverges_more_than_a2_fig10b() {
+        // Fig. 10(b): A1's divergent-branch count exceeds A2's — the list
+        // search introduces extra data-dependent branching.
+        let (eps, stream) = world(3, 128, 5);
+        let c1 = profile_a1(&eps, &stream, 8);
+        let c2 = profile_a2(&eps, &stream);
+        assert!(
+            c1.divergent_branches + c1.local_loads > c2.divergent_branches,
+            "a1 {c1:?} vs a2 {c2:?}"
+        );
+    }
+
+    #[test]
+    fn divergence_zero_for_identical_lanes() {
+        // a warp of identical episodes never diverges
+        let (mut eps, stream) = world(4, 1, 3);
+        let proto = eps.pop().unwrap();
+        let eps: Vec<Episode> = (0..32).map(|_| proto.clone()).collect();
+        let c = profile_a1(&eps, &stream, 8);
+        assert_eq!(c.divergent_branches, 0);
+    }
+
+    #[test]
+    fn counters_scale_with_episode_count() {
+        let (eps, stream) = world(5, 64, 3);
+        let half = profile_a1(&eps[..32], &stream, 8);
+        let full = profile_a1(&eps, &stream, 8);
+        assert!(full.branches > half.branches);
+    }
+}

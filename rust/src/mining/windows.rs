@@ -1,0 +1,166 @@
+//! Window-based episode frequency (Mannila et al. [9]) — the *other*
+//! algorithm class the paper positions state-machine counting against
+//! (§3 Prior Work). Implemented as a comparison baseline: frequency is
+//! the number of width-`w` sliding windows (one per tick) containing at
+//! least one occurrence of the episode.
+//!
+//! The per-window definition here follows WINEPI for serial episodes
+//! *without* inter-event constraints beyond the window width itself —
+//! exactly the setting of [9] — so it is a semantic baseline, not a
+//! drop-in replacement for Algorithm 1 (the paper's point: non-overlapped
+//! state-machine counts are both cheaper and better suited to the
+//! neuroscience interpretation).
+
+use crate::episodes::Episode;
+use crate::events::{EventStream, Tick};
+
+/// Number of windows `(t, t + w]`, for t in [t_begin - w, t_end),
+/// containing an occurrence of the serial episode (types only; the
+/// window width is the only temporal constraint, per [9]).
+///
+/// Runs the standard WINEPI recognition trick in O(|stream| * N) per
+/// episode: track, for each episode prefix, the latest window start time
+/// at which the prefix completes; a window contains the episode iff the
+/// full-prefix completion is fresh enough.
+pub fn count_windows(ep: &Episode, stream: &EventStream, w: Tick) -> u64 {
+    assert!(w > 0);
+    if stream.is_empty() {
+        return 0;
+    }
+    let w_begin = stream.t_begin() - w; // first window start
+    // Find all minimal occurrences (O(|S| * N)), then count the union of
+    // the window-start intervals each occurrence covers: a window (s, s+w]
+    // contains occurrence [os, oe] iff oe - w <= s < os (s in ticks).
+    let occs = minimal_occurrences(ep, stream, w);
+    let mut intervals: Vec<(Tick, Tick)> = occs
+        .into_iter()
+        // (s, s+w] contains [os, oe] iff oe - w <= s <= os - 1
+        .map(|(os, oe)| ((oe - w).max(w_begin), os - 1))
+        .filter(|(lo, hi)| lo <= hi)
+        .collect();
+    intervals.sort_unstable();
+    let mut total: u64 = 0;
+    let mut cur: Option<(Tick, Tick)> = None;
+    for (lo, hi) in intervals {
+        match cur {
+            None => cur = Some((lo, hi)),
+            Some((clo, chi)) => {
+                if lo <= chi + 1 {
+                    cur = Some((clo, chi.max(hi)));
+                } else {
+                    total += (chi - clo + 1) as u64;
+                    cur = Some((lo, hi));
+                }
+            }
+        }
+    }
+    if let Some((clo, chi)) = cur {
+        total += (chi - clo + 1) as u64;
+    }
+    total
+}
+
+/// All minimal occurrences (start, end) of the episode with span < w:
+/// occurrences such that no other occurrence is strictly inside them.
+pub fn minimal_occurrences(ep: &Episode, stream: &EventStream, w: Tick) -> Vec<(Tick, Tick)> {
+    let n = ep.n();
+    if n == 1 {
+        return stream
+            .iter()
+            .filter(|&(e, _)| e == ep.types[0])
+            .map(|(_, t)| (t, t))
+            .collect();
+    }
+    const NONE: Tick = i32::MIN / 2;
+    // latest_start[i]: latest start time of an occurrence of prefix 0..=i
+    // ending at or before the current event
+    let mut latest_start: Vec<Tick> = vec![NONE; n];
+    let mut out = vec![];
+    for (e, t) in stream.iter() {
+        for i in (0..n).rev() {
+            if ep.types[i] != e {
+                continue;
+            }
+            if i == 0 {
+                latest_start[0] = t;
+            } else if latest_start[i - 1] != NONE && t - latest_start[i - 1] < w {
+                latest_start[i] = latest_start[i - 1];
+                if i == n - 1 {
+                    let s = latest_start[n - 1];
+                    // minimality: drop a previous occurrence that strictly
+                    // contains this one
+                    if let Some(&(ps, pe)) = out.last() {
+                        if ps <= s && t <= pe {
+                            out.pop();
+                        }
+                    }
+                    if out.last().map(|&(ps, pe)| !(s <= ps && pe <= t)).unwrap_or(true) {
+                        out.push((s, t));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Episode;
+
+    fn stream(pairs: Vec<(i32, i32)>) -> EventStream {
+        EventStream::from_pairs(pairs, 8)
+    }
+
+    fn ep(types: Vec<i32>) -> Episode {
+        let n = types.len();
+        Episode::new(
+            types,
+            vec![crate::episodes::Interval::new(0, 1_000_000); n - 1],
+        )
+    }
+
+    #[test]
+    fn single_occurrence_window_count() {
+        // A@10, B@12; w=5: windows (s, s+5] containing both: s in [7..9]
+        // -> 10-7=3 starts {7,8,9}
+        let s = stream(vec![(0, 10), (1, 12)]);
+        let c = count_windows(&ep(vec![0, 1]), &s, 5);
+        assert_eq!(c, 3);
+    }
+
+    #[test]
+    fn occurrence_wider_than_window_not_counted() {
+        let s = stream(vec![(0, 10), (1, 30)]);
+        assert_eq!(count_windows(&ep(vec![0, 1]), &s, 5), 0);
+    }
+
+    #[test]
+    fn overlapping_occurrences_union_windows() {
+        let s = stream(vec![(0, 10), (1, 12), (0, 13), (1, 15)]);
+        let c = count_windows(&ep(vec![0, 1]), &s, 5);
+        // occurrences (10,12) and (13,15): window starts [7,9] and [10,12]
+        // union = {7..12} = 6
+        assert_eq!(c, 6);
+    }
+
+    #[test]
+    fn minimal_occurrences_drop_containing() {
+        let s = stream(vec![(0, 1), (0, 5), (1, 7)]);
+        let occs = minimal_occurrences(&ep(vec![0, 1]), &s, 20);
+        assert_eq!(occs, vec![(5, 7)]); // (1,7) contains (5,7) -> dropped
+    }
+
+    #[test]
+    fn window_frequency_monotone_in_w() {
+        let s = stream(vec![(0, 5), (2, 7), (1, 9), (0, 20), (1, 26)]);
+        let e = ep(vec![0, 1]);
+        let mut prev = 0;
+        for w in [2, 4, 6, 8, 12] {
+            let c = count_windows(&e, &s, w);
+            assert!(c >= prev, "w={w}: {c} < {prev}");
+            prev = c;
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Batched execution of the counting artifacts: episode padding, event
+//! chunking, and automaton-state carry across chunk boundaries.
+//!
+//! The artifacts have static shapes (M episodes × C events); this module
+//! adapts arbitrary workloads to them: episode batches are padded with
+//! `ep_pad` lanes (which can never match an event), event chunks are
+//! padded with `ev_pad` events (which can never match an episode level),
+//! and the `(s, cnt)` automaton state returned by chunk i is fed as input
+//! to chunk i+1 — making the fixed-shape executable a streaming machine.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{lit_i32, vec_i32, Runtime};
+use crate::episodes::Episode;
+use crate::events::{EventStream, Tick};
+
+/// Counts for a uniform-size episode batch via the A1 (exact) artifacts.
+pub fn count_a1(rt: &Runtime, episodes: &[Episode], stream: &EventStream) -> Result<Vec<u64>> {
+    count_batched(rt, episodes, stream, Algo::A1)
+}
+
+/// Counts via the A2 (relaxed) artifacts. Episodes are interpreted as
+/// their relaxed counterparts α′ (only `t_high` is sent to the kernel).
+pub fn count_a2(rt: &Runtime, episodes: &[Episode], stream: &EventStream) -> Result<Vec<u64>> {
+    count_batched(rt, episodes, stream, Algo::A2)
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Algo {
+    A1,
+    A2,
+}
+
+fn count_batched(
+    rt: &Runtime,
+    episodes: &[Episode],
+    stream: &EventStream,
+    algo: Algo,
+) -> Result<Vec<u64>> {
+    if episodes.is_empty() {
+        return Ok(vec![]);
+    }
+    let n = episodes[0].n();
+    ensure!(episodes.iter().all(|e| e.n() == n), "mixed episode sizes in batch");
+    ensure!(rt.supports_n(n), "no artifact for episode size {n}");
+    let mf = *rt.manifest();
+    let (m, c, k) = (mf.m_episodes, mf.c_chunk, mf.k_slots);
+    let name = match algo {
+        Algo::A1 => format!("a1_n{n}"),
+        Algo::A2 => format!("a2_n{n}"),
+    };
+    let exe = rt.executable(&name)?;
+
+    let mut counts = Vec::with_capacity(episodes.len());
+    for batch in episodes.chunks(m) {
+        // --- episode tensors, padded to M lanes ---
+        let mut types = vec![mf.ep_pad; m * n];
+        let mut tlow = vec![0i32; m * (n - 1)];
+        let mut thigh = vec![0i32; m * (n - 1)];
+        for (j, ep) in batch.iter().enumerate() {
+            types[j * n..(j + 1) * n].copy_from_slice(&ep.types);
+            for (g, iv) in ep.intervals.iter().enumerate() {
+                tlow[j * (n - 1) + g] = iv.t_low;
+                thigh[j * (n - 1) + g] = iv.t_high;
+            }
+        }
+        let types_l = lit_i32(&types, &[m as i64, n as i64])?;
+        let tlow_l = lit_i32(&tlow, &[m as i64, (n - 1) as i64])?;
+        let thigh_l = lit_i32(&thigh, &[m as i64, (n - 1) as i64])?;
+
+        // --- carried automaton state ---
+        let state_len = match algo {
+            Algo::A1 => m * n * k,
+            Algo::A2 => m * n,
+        };
+        let state_dims: Vec<i64> = match algo {
+            Algo::A1 => vec![m as i64, n as i64, k as i64],
+            Algo::A2 => vec![m as i64, n as i64],
+        };
+        let mut s_l = lit_i32(&vec![mf.neg_sentinel; state_len], &state_dims)?;
+        let mut cnt_l = lit_i32(&vec![0i32; m], &[m as i64])?;
+
+        // --- stream chunks ---
+        let total = stream.len().max(1);
+        let n_chunks = total.div_ceil(c);
+        for ci in 0..n_chunks {
+            let lo = ci * c;
+            let hi = (lo + c).min(stream.len());
+            let mut ev = vec![mf.ev_pad; c];
+            let mut tm = vec![0i32; c];
+            if hi > lo {
+                ev[..hi - lo].copy_from_slice(&stream.types[lo..hi]);
+                tm[..hi - lo].copy_from_slice(&stream.times[lo..hi]);
+                let last = stream.times[hi - 1];
+                tm[hi - lo..].fill(last);
+            }
+            let ev_l = lit_i32(&ev, &[c as i64])?;
+            let tm_l = lit_i32(&tm, &[c as i64])?;
+
+            let inputs: Vec<&xla::Literal> = match algo {
+                Algo::A1 => vec![&types_l, &tlow_l, &thigh_l, &ev_l, &tm_l, &s_l, &cnt_l],
+                Algo::A2 => vec![&types_l, &thigh_l, &ev_l, &tm_l, &s_l, &cnt_l],
+            };
+            let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+            let mut parts = result.to_tuple()?;
+            ensure!(parts.len() == 2, "expected (s, cnt) tuple, got {}", parts.len());
+            cnt_l = parts.pop().unwrap();
+            s_l = parts.pop().unwrap();
+        }
+
+        let cnt = vec_i32(&cnt_l)?;
+        counts.extend(batch.iter().enumerate().map(|(j, _)| cnt[j] as u64));
+    }
+    Ok(counts)
+}
+
+/// MapConcatenate Map step on the accelerator: returns, per episode, per
+/// segment, the N `(a, count, b)` boundary-machine tuples. The stream must
+/// fit in one MapConcatenate chunk.
+pub fn mapcat_map(
+    rt: &Runtime,
+    episodes: &[Episode],
+    stream: &EventStream,
+    taus: &[Tick],
+) -> Result<Vec<Vec<Vec<(Tick, u64, Tick)>>>> {
+    if episodes.is_empty() {
+        return Ok(vec![]);
+    }
+    let n = episodes[0].n();
+    ensure!(episodes.iter().all(|e| e.n() == n), "mixed episode sizes in batch");
+    ensure!(n >= 2, "MapConcatenate needs n >= 2");
+    ensure!(rt.supports_n(n), "no artifact for episode size {n}");
+    let mf = *rt.manifest();
+    let (e_cap, p, c) = (mf.mc_episodes, mf.mc_segments, mf.mc_chunk);
+    ensure!(
+        taus.len() == p + 1,
+        "need exactly {} segment boundaries, got {}",
+        p + 1,
+        taus.len()
+    );
+    if stream.len() > c {
+        bail!("stream ({} events) exceeds MapConcatenate chunk {c}", stream.len());
+    }
+    let exe = rt.executable(&format!("mapcat_n{n}"))?;
+
+    // events padded past every window: pad time = taus[P] + 1
+    let mut ev = vec![mf.ev_pad; c];
+    let mut tm = vec![taus[p] + 1; c];
+    ev[..stream.len()].copy_from_slice(&stream.types);
+    tm[..stream.len()].copy_from_slice(&stream.times);
+    let ev_l = lit_i32(&ev, &[c as i64])?;
+    let tm_l = lit_i32(&tm, &[c as i64])?;
+    let taus_l = lit_i32(taus, &[(p + 1) as i64])?;
+    // scan-start index per segment: first event of the previous segment
+    let mut seg_lo = vec![0i32; p];
+    for i in 1..p {
+        seg_lo[i] = stream.first_after(taus[i - 1]) as i32;
+    }
+    let seglo_l = lit_i32(&seg_lo, &[p as i64])?;
+
+    let mut out = Vec::with_capacity(episodes.len());
+    for batch in episodes.chunks(e_cap) {
+        let mut types = vec![mf.ep_pad; e_cap * n];
+        let mut tlow = vec![0i32; e_cap * (n - 1)];
+        let mut thigh = vec![0i32; e_cap * (n - 1)];
+        for (j, ep) in batch.iter().enumerate() {
+            types[j * n..(j + 1) * n].copy_from_slice(&ep.types);
+            for (g, iv) in ep.intervals.iter().enumerate() {
+                tlow[j * (n - 1) + g] = iv.t_low;
+                thigh[j * (n - 1) + g] = iv.t_high;
+            }
+        }
+        let types_l = lit_i32(&types, &[e_cap as i64, n as i64])?;
+        let tlow_l = lit_i32(&tlow, &[e_cap as i64, (n - 1) as i64])?;
+        let thigh_l = lit_i32(&thigh, &[e_cap as i64, (n - 1) as i64])?;
+
+        let inputs = [&types_l, &tlow_l, &thigh_l, &ev_l, &tm_l, &taus_l, &seglo_l];
+        let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        ensure!(parts.len() == 3, "expected (a, cnt, b) tuple");
+        let a = vec_i32(&parts[0])?;
+        let cnt = vec_i32(&parts[1])?;
+        let b = vec_i32(&parts[2])?;
+
+        for (j, _) in batch.iter().enumerate() {
+            let mut per_seg = Vec::with_capacity(p);
+            for seg in 0..p {
+                let base = (j * p + seg) * n;
+                per_seg.push(
+                    (0..n)
+                        .map(|mk| (a[base + mk], cnt[base + mk] as u64, b[base + mk]))
+                        .collect::<Vec<_>>(),
+                );
+            }
+            out.push(per_seg);
+        }
+    }
+    Ok(out)
+}

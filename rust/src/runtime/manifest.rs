@@ -1,0 +1,118 @@
+//! Artifact manifest: the shape/constant contract between `aot.py` and
+//! the Rust runtime, as flat `key=value` lines (no serde offline).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Constants baked into the AOT artifacts (see `python/compile/model.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// episode lanes per A1/A2 executable call
+    pub m_episodes: usize,
+    /// events per A1/A2 chunk
+    pub c_chunk: usize,
+    /// episode lanes per Pallas grid program
+    pub ep_block: usize,
+    /// bounded occurrence-list length (A1 / MapConcatenate)
+    pub k_slots: usize,
+    /// episodes per MapConcatenate Map call
+    pub mc_episodes: usize,
+    /// MapConcatenate segment count P
+    pub mc_segments: usize,
+    /// events per MapConcatenate chunk
+    pub mc_chunk: usize,
+    /// episode sizes with artifacts: n_min..=n_max
+    pub n_min: usize,
+    pub n_max: usize,
+    /// empty-timestamp sentinel
+    pub neg_sentinel: i32,
+    /// event-chunk padding type
+    pub ev_pad: i32,
+    /// episode-batch padding type
+    pub ep_pad: i32,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("malformed manifest line: {line:?}");
+            };
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<i64> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing key {k}"))?
+                .parse::<i64>()
+                .with_context(|| format!("manifest key {k} not an integer"))
+        };
+        Ok(Manifest {
+            m_episodes: get("m_episodes")? as usize,
+            c_chunk: get("c_chunk")? as usize,
+            ep_block: get("ep_block")? as usize,
+            k_slots: get("k_slots")? as usize,
+            mc_episodes: get("mc_episodes")? as usize,
+            mc_segments: get("mc_segments")? as usize,
+            mc_chunk: get("mc_chunk")? as usize,
+            n_min: get("n_min")? as usize,
+            n_max: get("n_max")? as usize,
+            neg_sentinel: get("neg_sentinel")? as i32,
+            ev_pad: get("ev_pad")? as i32,
+            ep_pad: get("ep_pad")? as i32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+m_episodes=512
+c_chunk=8192
+ep_block=128
+k_slots=8
+mc_episodes=64
+mc_segments=64
+mc_chunk=65536
+n_min=2
+n_max=8
+
+# comment
+neg_sentinel=-1073741824
+ev_pad=-1
+ep_pad=-2
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.m_episodes, 512);
+        assert_eq!(m.neg_sentinel, -(1 << 30));
+        assert_eq!(m.ep_pad, -2);
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        assert!(Manifest::parse("m_episodes=1").is_err());
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let bad = SAMPLE.replace("k_slots=8", "k_slots 8");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

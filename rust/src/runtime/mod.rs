@@ -1,0 +1,134 @@
+//! PJRT runtime: loads the AOT-compiled Pallas counting kernels
+//! (`artifacts/*.hlo.txt`) and streams event data through them.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (jax ≥ 0.5 protos are rejected by xla_extension 0.5.1).
+//!
+//! Python never runs here: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod manifest;
+pub mod exec;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::Manifest;
+
+/// A PJRT client plus the compiled-executable cache over the artifact
+/// directory. One `Runtime` per process; executables compile lazily on
+/// first use and are reused across mining levels.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// compile wall-time per artifact, for metrics
+    compile_ns: RefCell<HashMap<String, u128>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default: `artifacts/` next to the
+    /// workspace root, override with env `EPISODES_GPU_ARTIFACTS`).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_ns: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact directory resolution used by binaries/examples/tests.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("EPISODES_GPU_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        // walk up from cwd looking for artifacts/manifest.txt
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    pub fn open_default() -> Result<Runtime> {
+        Self::new(&Self::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling on first use) the executable for `name`
+    /// (e.g. `a1_n3`).
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {path:?} missing — run `make artifacts`");
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exe = Rc::new(exe);
+        self.compile_ns
+            .borrow_mut()
+            .insert(name.to_string(), t0.elapsed().as_nanos());
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// (artifact, compile-time ns) pairs for everything compiled so far.
+    pub fn compile_times(&self) -> Vec<(String, u128)> {
+        let mut v: Vec<_> =
+            self.compile_ns.borrow().iter().map(|(k, &t)| (k.clone(), t)).collect();
+        v.sort();
+        v
+    }
+
+    /// Does this runtime have an artifact for episode size n?
+    pub fn supports_n(&self, n: usize) -> bool {
+        (self.manifest.n_min..=self.manifest.n_max).contains(&n)
+    }
+}
+
+/// Build an int32 literal of the given shape from a flat slice.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    if expected != data.len() as i64 {
+        bail!("shape {dims:?} wants {expected} elements, got {}", data.len());
+    }
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+/// Extract a Vec<i32> from an int32 literal.
+pub fn vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}

@@ -1,0 +1,150 @@
+//! Criterion-style micro/macro-benchmark harness (the offline crate set has
+//! no criterion). Used by all `[[bench]] harness = false` targets.
+//!
+//! Provides warmup, timed iterations, outlier-robust summaries, and a
+//! paper-table printer so every bench target can emit the rows/series the
+//! corresponding paper table or figure reports.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Configuration for one measurement.
+#[derive(Clone, Debug)]
+pub struct BenchCfg {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop early once this much wall time (ns) has been spent measuring.
+    pub budget_ns: u128,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg { warmup_iters: 1, min_iters: 3, max_iters: 30, budget_ns: 2_000_000_000 }
+    }
+}
+
+/// One benchmark measurement: iteration wall times + a scalar the workload
+/// returned on the last iteration (used to verify work wasn't optimized
+/// away and to report counts).
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    pub last_result: u64,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean / 1e6
+    }
+}
+
+/// Run `f` under the config; `f` returns a u64 sink value.
+pub fn bench<F: FnMut() -> u64>(name: &str, cfg: &BenchCfg, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(cfg.max_iters);
+    let mut last = 0u64;
+    let started = Instant::now();
+    for i in 0..cfg.max_iters {
+        let t0 = Instant::now();
+        last = std::hint::black_box(f());
+        times.push(t0.elapsed().as_nanos() as f64);
+        if i + 1 >= cfg.min_iters && started.elapsed().as_nanos() > cfg.budget_ns {
+            break;
+        }
+    }
+    Measurement { name: name.to_string(), summary: Summary::of(&times), last_result: last }
+}
+
+/// Pretty-print a table of rows, e.g. the series a paper figure plots.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
+            .collect();
+        println!("{}", hdr.join("  "));
+        println!("{}", "-".repeat(hdr.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.1}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1}us", ns / 1e3)
+    } else {
+        format!("{:.0}ns", ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_sinks() {
+        let cfg = BenchCfg { warmup_iters: 1, min_iters: 2, max_iters: 4, budget_ns: u128::MAX };
+        let m = bench("t", &cfg, || (0..1000u64).sum::<u64>());
+        assert_eq!(m.last_result, 499_500);
+        assert!(m.summary.n >= 2);
+    }
+
+    #[test]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.5us");
+        assert_eq!(fmt_ns(2_500_000.0), "2.5ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.00s");
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal CLI argument parser (the offline crate set has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
+    }
+
+    pub fn get_i32(&self, name: &str, default: i32) -> i32 {
+        self.get(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().expect("float option")).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["mine", "--theta", "300", "--dataset=sym26", "--verbose"]);
+        assert_eq!(a.positional, vec!["mine"]);
+        assert_eq!(a.get("theta"), Some("300"));
+        assert_eq!(a.get("dataset"), Some("sym26"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "5", "--rate=2.5"]);
+        assert_eq!(a.get_usize("n", 1), 5);
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+        assert_eq!(a.get_usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--fast", "run"]);
+        // "--fast run": `run` is consumed as fast's value per the grammar;
+        // use `--fast` last or `--fast=1`. Document by asserting behavior.
+        assert_eq!(a.get("fast"), Some("run"));
+    }
+}

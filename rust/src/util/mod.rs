@@ -1,0 +1,8 @@
+//! Hand-rolled utility substrates (the offline crate set has no rand /
+//! clap / criterion / proptest — see DESIGN.md §3).
+
+pub mod benchkit;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,128 @@
+//! Summary statistics for the bench harness and metrics.
+
+/// Summary of a sample of measurements (e.g. iteration times in ns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            median: percentile_sorted(&sorted, 50.0),
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Ordinary least squares y ~ a*x + b. Returns (a, b, sse).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    let a = if denom.abs() < 1e-12 { 0.0 } else { (n * sxy - sx * sy) / denom };
+    let b = (sy - a * sx) / n;
+    let sse = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (a * x + b);
+            e * e
+        })
+        .sum();
+    (a, b, sse)
+}
+
+/// Least squares for the paper's Fig. 8 form y ~ a/x + b. Returns (a, b, sse).
+pub fn inverse_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    let inv: Vec<f64> = xs.iter().map(|x| 1.0 / x).collect();
+    linear_fit(&inv, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 1.5811388).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&sorted, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 10.0);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.5 * x - 1.0).collect();
+        let (a, b, sse) = linear_fit(&xs, &ys);
+        assert!((a - 2.5).abs() < 1e-9 && (b + 1.0).abs() < 1e-9 && sse < 1e-9);
+    }
+
+    #[test]
+    fn inverse_fit_exact() {
+        // y = 400/x + 30 — the shape of the paper's crossover fit.
+        let xs = [3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 400.0 / x + 30.0).collect();
+        let (a, b, sse) = inverse_fit(&xs, &ys);
+        assert!((a - 400.0).abs() < 1e-6 && (b - 30.0).abs() < 1e-6 && sse < 1e-9);
+    }
+
+    #[test]
+    fn inverse_beats_linear_on_paper_table1() {
+        // Table 1: crossover points by level.
+        let xs = [3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let ys = [415.0, 190.0, 200.0, 100.0, 100.0, 60.0];
+        let (_, _, sse_inv) = inverse_fit(&xs, &ys);
+        let (_, _, sse_lin) = linear_fit(&xs, &ys);
+        assert!(sse_inv < sse_lin, "paper's a/N+b fit must win: {sse_inv} vs {sse_lin}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Cross-language fixtures: identical literals live in
+//! `python/tests/test_fixtures.py`. If either implementation drifts from
+//! the paper's semantics, the two suites diverge and one side fails.
+
+use episodes_gpu::episodes::{Episode, Interval};
+use episodes_gpu::events::EventStream;
+use episodes_gpu::mining::serial;
+
+const EV: [i32; 60] = [
+    5, 1, 2, 3, 4, 5, 0, 2, 0, 2, 0, 1, 4, 4, 3, 1, 1, 4, 4, 0, 5, 2, 0, 1, 2, 3, 2, 4, 3, 5, 1,
+    4, 5, 0, 5, 1, 5, 3, 2, 2, 5, 2, 1, 3, 0, 2, 4, 3, 4, 4, 3, 3, 5, 5, 4, 2, 1, 4, 3, 2,
+];
+const TM: [i32; 60] = [
+    2, 5, 5, 6, 9, 9, 9, 12, 13, 14, 17, 17, 20, 20, 21, 22, 22, 24, 27, 28, 29, 31, 34, 35, 38,
+    41, 44, 45, 46, 48, 48, 48, 49, 49, 52, 53, 56, 57, 59, 62, 64, 64, 64, 64, 64, 64, 65, 66,
+    66, 66, 66, 66, 69, 69, 72, 75, 75, 77, 77, 77,
+];
+
+fn fixture_stream() -> EventStream {
+    let pairs = EV.iter().copied().zip(TM.iter().copied()).collect();
+    EventStream::from_pairs(pairs, 6)
+}
+
+struct Case {
+    types: &'static [i32],
+    tlow: &'static [i32],
+    thigh: &'static [i32],
+    a1: u64,
+    a2: u64,
+}
+
+const CASES: [Case; 4] = [
+    Case { types: &[1, 1, 2], tlow: &[0, 0], thigh: &[10, 10], a1: 2, a2: 2 },
+    Case { types: &[5, 0, 3, 2], tlow: &[0, 0, 0], thigh: &[12, 12, 12], a1: 2, a2: 3 },
+    Case { types: &[4, 3], tlow: &[0], thigh: &[3], a1: 3, a2: 5 },
+    Case { types: &[2, 0, 1], tlow: &[1, 0], thigh: &[9, 12], a1: 4, a2: 4 },
+];
+
+fn episode(c: &Case) -> Episode {
+    let ivs = c
+        .tlow
+        .iter()
+        .zip(c.thigh)
+        .map(|(&l, &h)| Interval::new(l, h))
+        .collect();
+    Episode::new(c.types.to_vec(), ivs)
+}
+
+#[test]
+fn serial_a1_matches_python_fixtures() {
+    let s = fixture_stream();
+    for c in &CASES {
+        assert_eq!(serial::count_a1(&episode(c), &s), c.a1, "types {:?}", c.types);
+    }
+}
+
+#[test]
+fn bounded_a1_k8_matches_python_fixtures() {
+    let s = fixture_stream();
+    for c in &CASES {
+        assert_eq!(serial::count_a1_bounded(&episode(c), &s, 8), c.a1, "types {:?}", c.types);
+    }
+}
+
+#[test]
+fn serial_a2_matches_python_fixtures() {
+    let s = fixture_stream();
+    for c in &CASES {
+        assert_eq!(serial::count_a2(&episode(c), &s), c.a2, "types {:?}", c.types);
+    }
+}
+
+#[test]
+fn theorem_5_1_holds_on_fixtures() {
+    for c in &CASES {
+        assert!(c.a2 >= c.a1);
+    }
+}

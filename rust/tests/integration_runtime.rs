@@ -1,0 +1,194 @@
+//! Integration tests over the PJRT runtime: the accelerated counting path
+//! (AOT Pallas kernels) against the CPU references, over every artifact.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use episodes_gpu::coordinator::{Coordinator, Strategy};
+use episodes_gpu::episodes::{Episode, Interval};
+use episodes_gpu::events::EventStream;
+use episodes_gpu::mining::serial;
+use episodes_gpu::runtime::{exec, Runtime};
+use episodes_gpu::util::rng::Rng;
+
+fn gen_stream(rng: &mut Rng, n_events: usize, n_types: i32) -> EventStream {
+    let mut pairs = Vec::with_capacity(n_events);
+    let mut t = 0;
+    for _ in 0..n_events {
+        t += rng.range_i32(0, 4);
+        pairs.push((rng.range_i32(0, n_types - 1), t));
+    }
+    EventStream::from_pairs(pairs, n_types as usize)
+}
+
+fn gen_episodes(rng: &mut Rng, count: usize, n: usize, n_types: i32) -> Vec<Episode> {
+    (0..count)
+        .map(|_| {
+            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, n_types - 1)).collect();
+            let ivs: Vec<Interval> = (0..n - 1)
+                .map(|_| {
+                    let lo = rng.range_i32(0, 3);
+                    Interval::new(lo, lo + rng.range_i32(1, 10))
+                })
+                .collect();
+            Episode::new(types, ivs)
+        })
+        .collect()
+}
+
+#[test]
+fn a1_artifacts_match_cpu_reference_all_sizes() {
+    let rt = Runtime::open_default().expect("artifacts present");
+    let k = rt.manifest().k_slots;
+    let mut rng = Rng::new(0xA1);
+    let stream = gen_stream(&mut rng, 3000, 8);
+    for n in rt.manifest().n_min..=rt.manifest().n_max {
+        let eps = gen_episodes(&mut rng, 40, n, 8);
+        let got = exec::count_a1(&rt, &eps, &stream).unwrap();
+        for (i, ep) in eps.iter().enumerate() {
+            let want = serial::count_a1_bounded(ep, &stream, k);
+            assert_eq!(got[i], want, "n={n} ep {}", ep.display());
+        }
+    }
+}
+
+#[test]
+fn a2_artifacts_match_cpu_reference_all_sizes() {
+    let rt = Runtime::open_default().expect("artifacts present");
+    let mut rng = Rng::new(0xA2);
+    let stream = gen_stream(&mut rng, 3000, 8);
+    for n in rt.manifest().n_min..=rt.manifest().n_max {
+        let eps = gen_episodes(&mut rng, 40, n, 8);
+        let got = exec::count_a2(&rt, &eps, &stream).unwrap();
+        for (i, ep) in eps.iter().enumerate() {
+            let want = serial::count_a2(ep, &stream);
+            assert_eq!(got[i], want, "n={n} ep {}", ep.display());
+        }
+    }
+}
+
+#[test]
+fn chunk_carry_spans_multiple_chunks() {
+    // stream longer than one chunk: counts must match the single-pass CPU
+    // reference exactly (state carried across chunk boundaries)
+    let rt = Runtime::open_default().unwrap();
+    let c = rt.manifest().c_chunk;
+    let k = rt.manifest().k_slots;
+    let mut rng = Rng::new(0xCC);
+    let stream = gen_stream(&mut rng, 3 * c + 17, 6);
+    let eps = gen_episodes(&mut rng, 16, 3, 6);
+    let got = exec::count_a1(&rt, &eps, &stream).unwrap();
+    for (i, ep) in eps.iter().enumerate() {
+        assert_eq!(got[i], serial::count_a1_bounded(ep, &stream, k), "{}", ep.display());
+    }
+}
+
+#[test]
+fn batching_pads_beyond_m_episodes() {
+    let rt = Runtime::open_default().unwrap();
+    let m = rt.manifest().m_episodes;
+    let mut rng = Rng::new(0xBB);
+    let stream = gen_stream(&mut rng, 1000, 5);
+    let eps = gen_episodes(&mut rng, m + 37, 2, 5);
+    let got = exec::count_a2(&rt, &eps, &stream).unwrap();
+    assert_eq!(got.len(), eps.len());
+    for (i, ep) in eps.iter().enumerate() {
+        assert_eq!(got[i], serial::count_a2(ep, &stream), "{}", ep.display());
+    }
+}
+
+#[test]
+fn mapconcat_kernel_equals_cpu_map_and_serial_count() {
+    let rt = Runtime::open_default().unwrap();
+    let mf = *rt.manifest();
+    let mut rng = Rng::new(0x3C);
+    let stream = gen_stream(&mut rng, 20_000, 6);
+    let eps = gen_episodes(&mut rng, 8, 3, 6);
+    let t0 = stream.t_begin() - 1;
+    let t1 = stream.t_end();
+    let span = (t1 - t0) as i64;
+    let p = mf.mc_segments as i64;
+    let taus: Vec<i32> =
+        (0..p).map(|i| (t0 as i64 + span * i / p) as i32).chain([t1]).collect();
+
+    let got = exec::mapcat_map(&rt, &eps, &stream, &taus).unwrap();
+    for (j, ep) in eps.iter().enumerate() {
+        // kernel Map == CPU Map, tuple for tuple
+        let want = serial::mapcat_map(ep, &stream, &taus, mf.k_slots);
+        let got_t: Vec<Vec<(i32, u64, i32)>> = got[j].clone();
+        assert_eq!(got_t, want, "episode {}", ep.display());
+    }
+}
+
+#[test]
+fn coordinator_strategies_agree() {
+    let mut coord = Coordinator::open_default().unwrap();
+    let mut rng = Rng::new(0x57);
+    let stream = gen_stream(&mut rng, 8000, 6);
+    let eps = gen_episodes(&mut rng, 24, 3, 6);
+    let cpu = coord.count(&eps, &stream, Strategy::CpuSerial).unwrap();
+    let ptpe = coord.count(&eps, &stream, Strategy::PtpeA1).unwrap();
+    let hybrid = coord.count(&eps, &stream, Strategy::Hybrid).unwrap();
+    let par = coord.count(&eps, &stream, Strategy::CpuParallel).unwrap();
+    assert_eq!(cpu, ptpe);
+    assert_eq!(cpu, hybrid);
+    assert_eq!(cpu, par);
+}
+
+#[test]
+fn coordinator_mapconcat_agrees_or_falls_back() {
+    let mut coord = Coordinator::open_default().unwrap();
+    let mut rng = Rng::new(0x58);
+    let stream = gen_stream(&mut rng, 30_000, 6);
+    let eps = gen_episodes(&mut rng, 8, 4, 6);
+    let cpu = coord.count(&eps, &stream, Strategy::CpuSerial).unwrap();
+    let mc = coord.count(&eps, &stream, Strategy::MapConcat).unwrap();
+    assert_eq!(cpu, mc, "metrics: {}", coord.metrics.report());
+}
+
+#[test]
+fn two_pass_is_exact_at_threshold() {
+    let mut coord = Coordinator::open_default().unwrap();
+    let mut rng = Rng::new(0x2B);
+    let stream = gen_stream(&mut rng, 6000, 5);
+    let eps = gen_episodes(&mut rng, 64, 3, 5);
+    let theta = 10;
+    let out = coord.count_two_pass(&eps, &stream, theta).unwrap();
+    for (i, ep) in eps.iter().enumerate() {
+        let exact = serial::count_a1_bounded(ep, &stream, coord.rt.manifest().k_slots);
+        // frequency decision must be exact
+        assert_eq!(out.counts[i] >= theta, exact >= theta, "{}", ep.display());
+        // survivors carry exact counts
+        if out.relaxed_counts[i] >= theta {
+            assert_eq!(out.counts[i], exact, "{}", ep.display());
+        }
+        // Theorem 5.1 on the kernel path
+        assert!(out.relaxed_counts[i] >= exact);
+    }
+}
+
+#[test]
+fn mixed_size_batches_route_correctly() {
+    let mut coord = Coordinator::open_default().unwrap();
+    let mut rng = Rng::new(0x33);
+    let stream = gen_stream(&mut rng, 4000, 5);
+    let mut eps = gen_episodes(&mut rng, 10, 2, 5);
+    eps.extend(gen_episodes(&mut rng, 10, 4, 5));
+    eps.push(Episode::single(3));
+    let got = coord.count(&eps, &stream, Strategy::Hybrid).unwrap();
+    for (i, ep) in eps.iter().enumerate() {
+        let want = serial::count_a1_bounded(ep, &stream, coord.rt.manifest().k_slots);
+        assert_eq!(got[i], want, "{}", ep.display());
+    }
+}
+
+#[test]
+fn empty_and_single_event_streams() {
+    let rt = Runtime::open_default().unwrap();
+    let empty = EventStream::new(4);
+    let eps = vec![Episode::new(vec![0, 1], vec![Interval::new(0, 5)])];
+    let got = exec::count_a1(&rt, &eps, &empty).unwrap();
+    assert_eq!(got, vec![0]);
+    let single = EventStream::from_pairs(vec![(0, 5)], 4);
+    let got = exec::count_a1(&rt, &eps, &single).unwrap();
+    assert_eq!(got, vec![0]);
+}

@@ -1,0 +1,232 @@
+//! Property-based invariants over the CPU reference algorithms (the
+//! proptest-style suite; the accelerated path is pinned to these
+//! references in `integration_runtime.rs`).
+
+use episodes_gpu::coordinator::mapconcat::{concatenate_fold, concatenate_tree};
+use episodes_gpu::episodes::{candidates, Episode, Interval};
+use episodes_gpu::events::EventStream;
+use episodes_gpu::mining::{cpu_parallel, serial};
+use episodes_gpu::util::prop::{forall, small_size};
+use episodes_gpu::util::rng::Rng;
+
+fn gen_stream(rng: &mut Rng, max_events: usize, n_types: i32) -> EventStream {
+    let n = small_size(rng, max_events);
+    let mut pairs = Vec::with_capacity(n);
+    let mut t = 0;
+    for _ in 0..n {
+        t += rng.range_i32(0, 4);
+        pairs.push((rng.range_i32(0, n_types - 1), t));
+    }
+    EventStream::from_pairs(pairs, n_types as usize)
+}
+
+fn gen_episode(rng: &mut Rng, n_types: i32, max_n: usize) -> Episode {
+    let n = small_size(rng, max_n).max(2);
+    let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, n_types - 1)).collect();
+    let ivs: Vec<Interval> = (0..n - 1)
+        .map(|_| {
+            let lo = rng.range_i32(0, 3);
+            Interval::new(lo, lo + rng.range_i32(1, 10))
+        })
+        .collect();
+    Episode::new(types, ivs)
+}
+
+#[test]
+fn prop_theorem_5_1_a2_dominates_a1() {
+    forall("count(a2) >= count(a1)", 0xA2A1, 300, |rng| {
+        let s = gen_stream(rng, 400, 6);
+        let ep = gen_episode(rng, 6, 5);
+        let (a1, a2) = (serial::count_a1(&ep, &s), serial::count_a2(&ep, &s));
+        if a2 >= a1 {
+            Ok(())
+        } else {
+            Err(format!("{}: a1={a1} a2={a2}", ep.display()))
+        }
+    });
+}
+
+#[test]
+fn prop_bounded_list_monotone_in_k() {
+    // growing K can only recover occurrences, never lose them
+    forall("count_k <= count_{k+1} <= unbounded", 0xB0B0, 200, |rng| {
+        let s = gen_stream(rng, 300, 5);
+        let ep = gen_episode(rng, 5, 4);
+        let unbounded = serial::count_a1(&ep, &s);
+        let mut prev = 0;
+        for k in 1..=8 {
+            let c = serial::count_a1_bounded(&ep, &s, k);
+            if c < prev {
+                return Err(format!("{}: k={k} c={c} < prev={prev}", ep.display()));
+            }
+            prev = c;
+        }
+        if prev > unbounded {
+            return Err(format!("bounded {prev} > unbounded {unbounded}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_large_k_equals_unbounded() {
+    forall("count_k64 == unbounded", 0xCAFE, 200, |rng| {
+        let s = gen_stream(rng, 300, 5);
+        let ep = gen_episode(rng, 5, 4);
+        let b = serial::count_a1_bounded(&ep, &s, 64);
+        let u = serial::count_a1(&ep, &s);
+        if b == u { Ok(()) } else { Err(format!("{b} != {u}")) }
+    });
+}
+
+#[test]
+fn prop_mapconcat_equals_serial() {
+    // the MapConcatenate construction (Map boundary machines + fold)
+    // reproduces the single-machine count for any valid segmentation
+    forall("mapconcat == serial", 0x3A9C, 150, |rng| {
+        let s = gen_stream(rng, 500, 4);
+        if s.len() < 20 {
+            return Ok(());
+        }
+        let ep = gen_episode(rng, 4, 4);
+        let p = 1 << rng.below(4); // 1, 2, 4, 8 segments
+        let t0 = s.t_begin() as i64 - 1;
+        let t1 = s.t_end() as i64;
+        let span = t1 - t0;
+        if span / p < ep.span_max() as i64 + 1 {
+            return Ok(()); // infeasible segmentation — planner rejects these
+        }
+        let taus: Vec<i32> =
+            (0..p).map(|i| (t0 + span * i / p) as i32).chain([t1 as i32]).collect();
+        let tuples = serial::mapcat_map(&ep, &s, &taus, 8);
+        let (total, misses) = concatenate_fold(&tuples);
+        let want = serial::count_a1_bounded(&ep, &s, 8);
+        // Matched chains are exact; a mismatch must be flagged by a miss
+        // (the property the coordinator's PTPE-recount fallback rests on).
+        if total == want || misses > 0 {
+            Ok(())
+        } else {
+            Err(format!(
+                "silent mismatch {}: p={p} mapcat={total} serial={want}",
+                ep.display()
+            ))
+        }
+    });
+}
+
+#[test]
+fn prop_concatenate_tree_equals_fold() {
+    forall("tree == fold", 0x7EE, 150, |rng| {
+        let s = gen_stream(rng, 500, 4);
+        if s.len() < 20 {
+            return Ok(());
+        }
+        let ep = gen_episode(rng, 4, 4);
+        let p = 1 + rng.below(9) as i64; // non-powers-of-two too
+        let t0 = s.t_begin() as i64 - 1;
+        let span = s.t_end() as i64 - t0;
+        if span / p < 1 {
+            return Ok(());
+        }
+        let taus: Vec<i32> =
+            (0..p).map(|i| (t0 + span * i / p) as i32).chain([s.t_end()]).collect();
+        let tuples = serial::mapcat_map(&ep, &s, &taus, 8);
+        let (a, _) = concatenate_fold(&tuples);
+        let (b, _) = concatenate_tree(&tuples);
+        if a == b { Ok(()) } else { Err(format!("fold {a} != tree {b}")) }
+    });
+}
+
+#[test]
+fn prop_cpu_parallel_equals_serial() {
+    forall("parallel == serial", 0x9A11, 60, |rng| {
+        let s = gen_stream(rng, 400, 5);
+        let n_eps = small_size(rng, 40);
+        let eps: Vec<Episode> = (0..n_eps).map(|_| gen_episode(rng, 5, 4)).collect();
+        let par = cpu_parallel::count_all_parallel(&eps, &s, 1 + rng.below(6) as usize);
+        for (i, ep) in eps.iter().enumerate() {
+            let want = serial::count_a1(ep, &s);
+            if par[i] != want {
+                return Err(format!("{}: par={} serial={}", ep.display(), par[i], want));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_candidate_join_produces_valid_shapes() {
+    forall("join shapes", 0x0907, 100, |rng| {
+        let n_types = 4;
+        let n = 2 + rng.below(3) as usize;
+        let n_eps = small_size(rng, 25);
+        let iv_choices =
+            [Interval::new(0, 10), Interval::new(5, 15), Interval::new(2, 8)];
+        let mut seen = std::collections::HashSet::new();
+        let mut eps = vec![];
+        for _ in 0..n_eps {
+            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, n_types - 1)).collect();
+            let ivs: Vec<Interval> =
+                (0..n - 1).map(|_| *rng.choose(&iv_choices)).collect();
+            let ep = Episode::new(types, ivs);
+            if seen.insert((ep.types.clone(), ep.intervals.clone())) {
+                eps.push(ep);
+            }
+        }
+        let next = candidates::join(&eps);
+        for c in &next {
+            if c.n() != n + 1 {
+                return Err(format!("bad size {}", c.n()));
+            }
+            // head- and tail-drops must be in the frequent input set
+            let head = Episode::new(c.types[1..].to_vec(), c.intervals[1..].to_vec());
+            let tail =
+                Episode::new(c.types[..n].to_vec(), c.intervals[..n - 1].to_vec());
+            let in_set = |e: &Episode| {
+                eps.iter().any(|x| x.types == e.types && x.intervals == e.intervals)
+            };
+            if !in_set(&head) || !in_set(&tail) {
+                return Err(format!("candidate {} lacks frequent sub-episode", c.display()));
+            }
+        }
+        // completeness: count joinable pairs
+        let mut expect = 0;
+        for a in &eps {
+            for b in &eps {
+                if a.types[1..] == b.types[..n - 1] && a.intervals[1..] == b.intervals[..n - 2]
+                {
+                    expect += 1;
+                }
+            }
+        }
+        if next.len() != expect {
+            return Err(format!("join produced {} != {} joinable pairs", next.len(), expect));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_preserve_events() {
+    forall("partitions lossless", 0x9A77, 150, |rng| {
+        let s = gen_stream(rng, 500, 5);
+        if s.is_empty() {
+            return Ok(());
+        }
+        let width = 1 + rng.below(200) as i32;
+        let parts = s.partitions(width);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        if total != s.len() {
+            return Err(format!("{total} != {}", s.len()));
+        }
+        // windows are disjoint and ordered
+        let mut all_times = vec![];
+        for p in &parts {
+            all_times.extend(p.times.iter().copied());
+        }
+        if all_times != s.times {
+            return Err("event order not preserved".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,108 @@
+//! End-to-end mining over the datasets: the miner must recover the
+//! episodes the generators embed (and nothing structurally bogus), under
+//! both one-pass and two-pass counting.
+
+use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
+use episodes_gpu::coordinator::{Coordinator, Strategy};
+use episodes_gpu::datasets::{culture, sym26};
+
+#[test]
+fn sym26_recovers_both_embedded_chains() {
+    let cfg = sym26::Sym26Config::default();
+    let stream = sym26::generate(&cfg, 7);
+    let mut mine_cfg = MineConfig::new(60, cfg.interval_set());
+    mine_cfg.mode = CountMode::TwoPass;
+    let mut coord = Coordinator::open_default().unwrap();
+    let result = coord.mine(&stream, &mine_cfg).unwrap();
+    for embedded in cfg.embedded_episodes() {
+        assert!(
+            result.frequent.iter().any(|c| c.episode == embedded),
+            "missing embedded chain {}",
+            embedded.display()
+        );
+    }
+    // the deepest frequent episode should be exactly the long chain's size
+    let max_n = result.frequent.iter().map(|c| c.episode.n()).max().unwrap();
+    assert_eq!(max_n, cfg.long_chain.len());
+}
+
+#[test]
+fn one_pass_and_two_pass_find_the_same_frequent_sets() {
+    let cfg = sym26::Sym26Config::default();
+    let stream = sym26::generate(&cfg, 8);
+    let mut coord = Coordinator::open_default().unwrap();
+
+    let mut c1 = MineConfig::new(80, cfg.interval_set());
+    c1.mode = CountMode::OnePass(Strategy::Hybrid);
+    c1.max_level = 4;
+    let r1 = coord.mine(&stream, &c1).unwrap();
+
+    let mut c2 = c1.clone();
+    c2.mode = CountMode::TwoPass;
+    let r2 = coord.mine(&stream, &c2).unwrap();
+
+    let set1: std::collections::HashSet<_> =
+        r1.frequent.iter().map(|c| c.episode.clone()).collect();
+    let set2: std::collections::HashSet<_> =
+        r2.frequent.iter().map(|c| c.episode.clone()).collect();
+    assert_eq!(set1, set2);
+}
+
+/// Mining threshold that separates embedded synfire chains from chance
+/// in-burst coincidences at each culture age (see examples/culture_analysis).
+fn culture_theta(day: u32) -> u64 {
+    match day {
+        33 => 40,
+        34 => 85,
+        _ => 140,
+    }
+}
+
+#[test]
+fn culture_day35_mines_embedded_synfire_chains() {
+    let cfg = culture::CultureConfig::day(35);
+    let stream = culture::generate(&cfg, 11);
+    let mut mine_cfg = MineConfig::new(culture_theta(35), cfg.interval_set());
+    mine_cfg.max_level = 6;
+    let mut coord = Coordinator::open_default().unwrap();
+    let result = coord.mine(&stream, &mine_cfg).unwrap();
+    for c in &cfg.embedded_episodes() {
+        assert!(
+            result.frequent.iter().any(|x| x.episode == *c),
+            "missing {}",
+            c.display()
+        );
+    }
+}
+
+#[test]
+fn mining_structure_grows_with_culture_age_section_6_5() {
+    // §6.5: the same circuits strengthen as the culture matures — the
+    // miner sees every embedded chain at every age, with higher counts
+    // day over day.
+    let mut coord = Coordinator::open_default().unwrap();
+    let mut per_day: Vec<Vec<u64>> = vec![];
+    for day in [33u32, 35] {
+        let cfg = culture::CultureConfig::day(day);
+        let stream = culture::generate(&cfg, 11);
+        let mut mine_cfg = MineConfig::new(culture_theta(day), cfg.interval_set());
+        mine_cfg.max_level = 6;
+        let r = coord.mine(&stream, &mine_cfg).unwrap();
+        let counts: Vec<u64> = cfg
+            .embedded_episodes()
+            .iter()
+            .map(|ep| {
+                r.frequent
+                    .iter()
+                    .find(|c| c.episode == *ep)
+                    .map(|c| c.count)
+                    .unwrap_or(0)
+            })
+            .collect();
+        per_day.push(counts);
+    }
+    for (i, (&c33, &c35)) in per_day[0].iter().zip(&per_day[1]).enumerate() {
+        assert!(c33 > 0, "chain {i} missing on day 33");
+        assert!(c35 > c33, "chain {i}: day35 {c35} !> day33 {c33}");
+    }
+}
