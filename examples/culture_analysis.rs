@@ -1,19 +1,37 @@
 //! Mining evolving neuronal cultures (paper §6.5).
 //!
 //! Mines simulated developing-culture recordings (the 2-1-33/34/35
-//! analogs) day by day and reports how the set of frequent episodes —
-//! the proxy for reconstructed functional circuitry — grows as the
-//! culture matures, the phenomenon the paper's supplementary videos show.
+//! analogs) day by day — one `Session` per day's recording — and reports
+//! how the set of frequent episodes (the proxy for reconstructed
+//! functional circuitry) grows as the culture matures, the phenomenon the
+//! paper's supplementary videos show.
 //!
-//! Run: `make artifacts && cargo run --release --example culture_analysis`
+//! Run: `cargo run --release --example culture_analysis`
 
-use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
-use episodes_gpu::coordinator::Coordinator;
 use episodes_gpu::datasets::culture::{generate, CultureConfig};
 use episodes_gpu::util::benchkit::Table;
+use episodes_gpu::{MineError, Session};
 
-fn main() -> anyhow::Result<()> {
-    let mut coord = Coordinator::open_default()?;
+/// One day's mining session at that age's chance-separating threshold
+/// (chance pair counts grow with burst density; DESIGN.md §5 sub. 2).
+fn day_session(day: u32, seed: u64) -> Result<(CultureConfig, Session), MineError> {
+    let cfg = CultureConfig::day(day);
+    let stream = generate(&cfg, seed);
+    let theta = match day {
+        33 => 40,
+        34 => 85,
+        _ => 140,
+    };
+    let session = Session::builder()
+        .stream(stream)
+        .theta(theta)
+        .intervals(cfg.interval_set())
+        .max_level(6)
+        .build()?;
+    Ok((cfg, session))
+}
+
+fn main() -> Result<(), MineError> {
     let mut table = Table::new(
         "Culture development (simulated Wagenaar 2-1 analogs)",
         &["day", "events", "bursts/s", "freq-2", "freq-3", "freq>=4", "deepest", "mine-s"],
@@ -21,22 +39,11 @@ fn main() -> anyhow::Result<()> {
 
     let mut per_day: Vec<(u32, Vec<String>)> = vec![];
     for day in [33u32, 34, 35] {
-        let cfg = CultureConfig::day(day);
-        let stream = generate(&cfg, 11);
-        // thresholds that separate synfire structure from chance in-burst
-        // coincidences at each age (chance pair counts grow with burst
-        // density; see DESIGN.md §5 substitution 2)
-        let theta = match day {
-            33 => 40,
-            34 => 85,
-            _ => 140,
-        };
-        let mut mine_cfg = MineConfig::new(theta, cfg.interval_set());
-        mine_cfg.mode = CountMode::TwoPass;
-        mine_cfg.max_level = 6;
+        let (cfg, mut session) = day_session(day, 11)?;
+        let n_events = session.stream().len();
 
         let t0 = std::time::Instant::now();
-        let result = coord.mine(&stream, &mine_cfg)?;
+        let result = session.mine()?;
         let secs = t0.elapsed().as_secs_f64();
 
         let f2 = result.frequent.iter().filter(|c| c.episode.n() == 2).count();
@@ -45,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         let deepest = result.frequent.iter().map(|c| c.episode.n()).max().unwrap_or(0);
         table.row(vec![
             format!("2-1-{day}"),
-            stream.len().to_string(),
+            n_events.to_string(),
             format!("{:.2}", cfg.burst_hz),
             f2.to_string(),
             f3.to_string(),
@@ -75,13 +82,10 @@ fn main() -> anyhow::Result<()> {
 
     // circuit reconstruction on the final day (paper Fig. 1: episodes ->
     // functional connectivity), scored against the generator ground truth
-    let cfg = CultureConfig::day(35);
-    let stream = generate(&cfg, 11);
-    let mut mine_cfg = MineConfig::new(140, cfg.interval_set());
-    mine_cfg.mode = CountMode::TwoPass;
-    mine_cfg.max_level = 6;
-    let result = coord.mine(&stream, &mine_cfg)?;
-    let deep: Vec<_> = result.frequent.iter().filter(|c| c.episode.n() >= 2).cloned().collect();
+    let (cfg, mut session) = day_session(35, 11)?;
+    let result = session.mine()?;
+    let deep: Vec<_> =
+        result.frequent.iter().filter(|c| c.episode.n() >= 2).cloned().collect();
     let circuit = episodes_gpu::analysis::connectivity::Circuit::reconstruct(&deep);
     let score = circuit.score(&cfg.embedded_episodes());
     println!(

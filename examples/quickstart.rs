@@ -2,17 +2,18 @@
 //!
 //! Generates the paper's Sym26 synthetic dataset (26 neurons, 20 Hz basal
 //! Poisson, two embedded causal chains), runs the full level-wise two-pass
-//! (A2+A1) mining pipeline on the PJRT-executed Pallas kernels, and checks
-//! that the embedded chains are recovered. This is the workload of paper
-//! §6.2 at one support threshold; the recorded run lives in EXPERIMENTS.md.
+//! (A2+A1) mining pipeline through the `Session` facade, and checks that
+//! the embedded chains are recovered. The session picks the accelerated
+//! Hybrid backend when the PJRT runtime and artifacts are present
+//! (`make artifacts`) and the multithreaded CPU baseline otherwise — the
+//! workload of paper §6.2 at one support threshold either way.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
-use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
-use episodes_gpu::coordinator::Coordinator;
 use episodes_gpu::datasets::sym26::{generate, Sym26Config};
+use episodes_gpu::{MineError, Session};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), MineError> {
     let cfg = Sym26Config::default();
     let stream = generate(&cfg, 7);
     println!(
@@ -22,15 +23,16 @@ fn main() -> anyhow::Result<()> {
         stream.span() as f64 / 1000.0
     );
 
-    let mut coord = Coordinator::open_default()?;
-    println!("runtime: PJRT platform = {}\n", coord.rt.platform());
-
     let theta = 60;
-    let mut mine_cfg = MineConfig::new(theta, cfg.interval_set());
-    mine_cfg.mode = CountMode::TwoPass;
+    let mut session = Session::builder()
+        .stream(stream)
+        .theta(theta)
+        .intervals(cfg.interval_set())
+        .build()?;
+    println!("backend: {}\n", session.backend_name());
 
     let t0 = std::time::Instant::now();
-    let result = coord.mine(&stream, &mine_cfg)?;
+    let result = session.mine()?;
     let total = t0.elapsed();
 
     println!("level  candidates  frequent  a2-culled  count-time");
@@ -41,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\ntotal wall time: {:.2}s", total.as_secs_f64());
-    println!("coordinator metrics: {}\n", coord.metrics.report());
+    println!("session metrics: {}\n", session.metrics().report());
 
     // verify the generator's ground truth was recovered
     let mut ok = true;
@@ -55,7 +57,9 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-    anyhow::ensure!(ok, "embedded chains not recovered");
+    if !ok {
+        return Err(MineError::internal("embedded chains not recovered"));
+    }
     println!("\nquickstart OK");
     Ok(())
 }

@@ -12,6 +12,8 @@
 //!
 //! Run: `cargo bench --bench ablation_k_slots [-- --fast]`
 
+#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
+
 use std::time::Instant;
 
 use episodes_gpu::coordinator::mapconcat::{concatenate_fold, concatenate_tree};
@@ -25,7 +27,7 @@ use episodes_gpu::util::benchkit::Table;
 use episodes_gpu::util::cli::Args;
 use episodes_gpu::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), episodes_gpu::MineError> {
     let args = Args::from_env();
     let fast = args.flag("fast");
 

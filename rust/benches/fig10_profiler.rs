@@ -22,7 +22,7 @@ use episodes_gpu::util::benchkit::Table;
 use episodes_gpu::util::cli::Args;
 use episodes_gpu::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), episodes_gpu::MineError> {
     let args = Args::from_env();
     let fast = args.flag("fast");
     let cfg = CultureConfig::day(33);

@@ -10,6 +10,8 @@
 //!
 //! Run: `cargo bench --bench fig11_gpu_cpu [-- --fast]`
 
+#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
+
 use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
 use episodes_gpu::coordinator::{Coordinator, Strategy};
 use episodes_gpu::datasets::culture::{generate, CultureConfig};
@@ -17,7 +19,7 @@ use episodes_gpu::episodes::{candidates, Episode};
 use episodes_gpu::util::benchkit::{bench, BenchCfg, Table};
 use episodes_gpu::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), episodes_gpu::MineError> {
     let args = Args::from_env();
     let fast = args.flag("fast");
     let cfg = CultureConfig::day(35);

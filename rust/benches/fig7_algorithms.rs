@@ -9,6 +9,8 @@
 //! everywhere — PTPE wins at sizes with many candidates, MapConcatenate
 //! wins when few episodes leave lanes idle, and Hybrid tracks the winner.
 
+#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
+
 use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
 use episodes_gpu::coordinator::{Coordinator, Strategy};
 use episodes_gpu::datasets::sym26::{generate, Sym26Config};
@@ -46,7 +48,7 @@ fn level_candidates(
     per_level
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), episodes_gpu::MineError> {
     let args = Args::from_env();
     let fast = args.flag("fast");
     let cfg = Sym26Config::default();

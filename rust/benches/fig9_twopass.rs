@@ -11,6 +11,8 @@
 //!
 //! Run: `cargo bench --bench fig9_twopass [-- --fast]`
 
+#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
+
 use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
 use episodes_gpu::coordinator::{Coordinator, Strategy};
 use episodes_gpu::datasets::culture::{generate, CultureConfig};
@@ -24,7 +26,7 @@ fn level_candidate_sets(
     cfg: &CultureConfig,
     theta: u64,
     max_level: usize,
-) -> anyhow::Result<Vec<Vec<Episode>>> {
+) -> Result<Vec<Vec<Episode>>, episodes_gpu::MineError> {
     let mut mc = MineConfig::new(theta, cfg.interval_set());
     mc.mode = CountMode::TwoPass;
     mc.max_level = max_level;
@@ -51,7 +53,7 @@ fn level_candidate_sets(
     Ok(per_level)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), episodes_gpu::MineError> {
     let args = Args::from_env();
     let fast = args.flag("fast");
     let mut coord = Coordinator::open_default()?;

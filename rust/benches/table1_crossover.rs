@@ -19,6 +19,8 @@
 //!
 //! Run: `cargo bench --bench table1_crossover [-- --fast]`
 
+#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
+
 use episodes_gpu::coordinator::{Coordinator, Strategy};
 use episodes_gpu::datasets::sym26::{generate, Sym26Config};
 use episodes_gpu::episodes::{Episode, Interval};
@@ -60,7 +62,7 @@ fn fit_table(title: &str, series: &[(&str, Vec<(usize, f64)>)]) {
     fig8.print();
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), episodes_gpu::MineError> {
     let args = Args::from_env();
     let fast = args.flag("fast");
     let cfg = Sym26Config::default();

@@ -1,0 +1,327 @@
+//! Accelerated counting engines over the PJRT runtime: PTPE (§5.2.1),
+//! MapConcatenate (§5.2.2), and the Hybrid composition (§5.2.3, Alg. 2).
+//!
+//! All three keep the paper's CPU/GPU split: episode batching, padding and
+//! chunk carry happen in `runtime::exec`; segmentation planning and the
+//! Concatenate merge happen on the host (`coordinator::mapconcat`); only
+//! the inner counting loops run on the accelerator. Episode sizes without
+//! an artifact fall back to the CPU engines — callers see counts, not
+//! errors.
+
+use std::rc::Rc;
+
+use crate::backend::{count_grouped, group_by_size, uniform_size, CountBackend, CountReport};
+use crate::coordinator::{mapconcat, Metrics};
+use crate::episodes::Episode;
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::gpu_model::crossover::{CostModel, CrossoverModel};
+use crate::mining::{cpu_parallel, serial};
+use crate::runtime::{exec, Runtime};
+
+/// How a [`HybridBackend`] picks its inner engine per uniform batch.
+#[derive(Clone, Copy, Debug)]
+pub enum Dispatch {
+    /// the paper's Eq. 2 form: S > f(N) with f fitted to crossovers
+    Crossover(CrossoverModel),
+    /// stream-length-aware cost model calibrated on this substrate
+    /// (DESIGN.md §6; the default)
+    Cost(CostModel),
+}
+
+impl Dispatch {
+    /// true = run the PTPE-shaped engine, false = the MapConcatenate one.
+    pub fn choose_ptpe(&self, n_episodes: usize, n: usize, stream_len: usize) -> bool {
+        match self {
+            Dispatch::Crossover(m) => m.choose_ptpe(n_episodes, n),
+            Dispatch::Cost(m) => m.choose_ptpe(n_episodes, n, stream_len),
+        }
+    }
+}
+
+/// Relaxed (A2) counting shared by the accelerated engines: the A2
+/// artifact when one exists for the size, the serial CPU relaxation
+/// otherwise.
+fn count_relaxed_accel(
+    rt: &Runtime,
+    episodes: &[Episode],
+    stream: &EventStream,
+) -> Result<CountReport, MineError> {
+    let mut metrics = Metrics::default();
+    let counts = count_grouped(episodes, stream, &mut metrics, |n, group, m| {
+        if rt.supports_n(n) {
+            exec::count_a2(rt, group, stream)
+        } else {
+            m.cpu_fallbacks += 1;
+            Ok(group.iter().map(|e| serial::count_a2(e, stream)).collect())
+        }
+    })?;
+    Ok(CountReport { counts, culled: 0, metrics })
+}
+
+/// Per-thread-per-episode counting on the accelerator: one exact A1
+/// automaton per episode lane, batched and chunk-carried by the runtime.
+pub struct PtpeBackend {
+    rt: Rc<Runtime>,
+    cpu_threads: usize,
+}
+
+impl PtpeBackend {
+    pub fn new(rt: Rc<Runtime>, cpu_threads: usize) -> PtpeBackend {
+        PtpeBackend { rt, cpu_threads: cpu_threads.max(1) }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl CountBackend for PtpeBackend {
+    fn name(&self) -> &str {
+        "ptpe"
+    }
+
+    fn supports_n(&self, n: usize) -> bool {
+        n == 1 || self.rt.supports_n(n)
+    }
+
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        let mut metrics = Metrics::default();
+        let counts = count_grouped(episodes, stream, &mut metrics, |n, group, m| {
+            if !self.rt.supports_n(n) {
+                m.cpu_fallbacks += 1;
+                return Ok(cpu_parallel::count_all_parallel(group, stream, self.cpu_threads));
+            }
+            m.ptpe_calls += 1;
+            exec::count_a1(&self.rt, group, stream)
+        })?;
+        Ok(CountReport { counts, culled: 0, metrics })
+    }
+
+    fn count_relaxed(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        count_relaxed_accel(&self.rt, episodes, stream)
+    }
+}
+
+/// Segment-parallel Map on the accelerator plus the host-side Concatenate
+/// merge. Episodes whose boundary-machine chain lost synchronization (a
+/// flagged Concatenate miss) are recounted exactly via PTPE; infeasible
+/// segmentations fall back to PTPE wholesale, and unsupported sizes to the
+/// CPU baseline.
+pub struct MapConcatBackend {
+    rt: Rc<Runtime>,
+    cpu_threads: usize,
+}
+
+impl MapConcatBackend {
+    pub fn new(rt: Rc<Runtime>, cpu_threads: usize) -> MapConcatBackend {
+        MapConcatBackend { rt, cpu_threads: cpu_threads.max(1) }
+    }
+}
+
+impl CountBackend for MapConcatBackend {
+    fn name(&self) -> &str {
+        "mapconcat"
+    }
+
+    fn supports_n(&self, n: usize) -> bool {
+        n == 1 || self.rt.supports_n(n)
+    }
+
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        let mut metrics = Metrics::default();
+        let counts = count_grouped(episodes, stream, &mut metrics, |n, group, m| {
+            match mapconcat::plan(&self.rt, group, stream) {
+                Some(plan) if self.rt.supports_n(n) => {
+                    m.mapcat_calls += 1;
+                    let (mut counts, misses) =
+                        mapconcat::count(&self.rt, group, stream, &plan)?;
+                    // Matched chains are exact; a mismatch is always flagged
+                    // by a miss (see mapconcat::count) — recount those
+                    // episodes exactly via PTPE.
+                    let missed: Vec<usize> =
+                        (0..group.len()).filter(|&i| misses[i] > 0).collect();
+                    if !missed.is_empty() {
+                        m.concat_misses += missed.len() as u64;
+                        let subset: Vec<Episode> =
+                            missed.iter().map(|&i| group[i].clone()).collect();
+                        let exact = exec::count_a1(&self.rt, &subset, stream)?;
+                        for (&i, c) in missed.iter().zip(exact) {
+                            counts[i] = c;
+                        }
+                    }
+                    Ok(counts)
+                }
+                _ if self.rt.supports_n(n) => {
+                    // segmentation infeasible (stream too large / too short,
+                    // or constraint windows wider than a segment): PTPE.
+                    m.mapcat_fallbacks += 1;
+                    m.ptpe_calls += 1;
+                    exec::count_a1(&self.rt, group, stream)
+                }
+                _ => {
+                    m.mapcat_fallbacks += 1;
+                    m.cpu_fallbacks += 1;
+                    Ok(cpu_parallel::count_all_parallel(group, stream, self.cpu_threads))
+                }
+            }
+        })?;
+        Ok(CountReport { counts, culled: 0, metrics })
+    }
+
+    fn count_relaxed(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        count_relaxed_accel(&self.rt, episodes, stream)
+    }
+}
+
+/// Hybrid dispatch (Alg. 2): for each uniform-size batch, run the
+/// PTPE-shaped engine when the batch is large enough to fill its lanes,
+/// the MapConcatenate-shaped engine otherwise. Composes *any* two
+/// backends — tests inject CPU or mock engines on both sides.
+pub struct HybridBackend {
+    ptpe: Box<dyn CountBackend>,
+    mapcat: Box<dyn CountBackend>,
+    dispatch: Dispatch,
+}
+
+impl HybridBackend {
+    pub fn new(
+        ptpe: Box<dyn CountBackend>,
+        mapcat: Box<dyn CountBackend>,
+        dispatch: Dispatch,
+    ) -> HybridBackend {
+        HybridBackend { ptpe, mapcat, dispatch }
+    }
+
+    /// The standard composition: PTPE + MapConcatenate over a shared
+    /// runtime, dispatched by the substrate-calibrated cost model.
+    pub fn with_runtime(rt: Rc<Runtime>, cpu_threads: usize) -> HybridBackend {
+        let mf = rt.manifest();
+        let dispatch = Dispatch::Cost(CostModel::substrate_default(mf.m_episodes, mf.c_chunk));
+        HybridBackend::with_runtime_dispatch(rt, cpu_threads, dispatch)
+    }
+
+    pub fn with_runtime_dispatch(
+        rt: Rc<Runtime>,
+        cpu_threads: usize,
+        dispatch: Dispatch,
+    ) -> HybridBackend {
+        HybridBackend::new(
+            Box::new(PtpeBackend::new(rt.clone(), cpu_threads)),
+            Box::new(MapConcatBackend::new(rt, cpu_threads)),
+            dispatch,
+        )
+    }
+
+    pub fn dispatch(&self) -> Dispatch {
+        self.dispatch
+    }
+
+    pub fn set_dispatch(&mut self, dispatch: Dispatch) {
+        self.dispatch = dispatch;
+    }
+}
+
+impl CountBackend for HybridBackend {
+    fn name(&self) -> &str {
+        "hybrid"
+    }
+
+    fn supports_n(&self, n: usize) -> bool {
+        self.ptpe.supports_n(n) || self.mapcat.supports_n(n)
+    }
+
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        // Mining levels are uniform batches: dispatch the slice whole,
+        // no clone-and-scatter.
+        if let Some(n) = uniform_size(episodes) {
+            let ptpe = n < 2 || self.dispatch.choose_ptpe(episodes.len(), n, stream.len());
+            return if ptpe {
+                self.ptpe.count(episodes, stream)
+            } else {
+                self.mapcat.count(episodes, stream)
+            };
+        }
+        let mut out = vec![0u64; episodes.len()];
+        let mut metrics = Metrics::default();
+        for (indices, group) in group_by_size(episodes) {
+            let n = group[0].n();
+            let ptpe = n < 2 || self.dispatch.choose_ptpe(group.len(), n, stream.len());
+            let rep = if ptpe {
+                self.ptpe.count(&group, stream)?
+            } else {
+                self.mapcat.count(&group, stream)?
+            };
+            metrics.merge(&rep.metrics);
+            for (slot, c) in indices.into_iter().zip(rep.counts) {
+                out[slot] = c;
+            }
+        }
+        Ok(CountReport { counts: out, culled: 0, metrics })
+    }
+
+    fn count_relaxed(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        // The relaxed pass has a single accelerated form (A2); the PTPE
+        // side owns it.
+        self.ptpe.count_relaxed(episodes, stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::{CpuParallelBackend, CpuSerialBackend};
+    use crate::episodes::Interval;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hybrid_composes_arbitrary_backends() {
+        let mut rng = Rng::new(4);
+        let mut pairs = vec![];
+        let mut t = 0;
+        for _ in 0..300 {
+            t += rng.range_i32(0, 3);
+            pairs.push((rng.range_i32(0, 3), t));
+        }
+        let stream = EventStream::from_pairs(pairs, 4);
+        let iv = Interval::new(0, 8);
+        let eps: Vec<Episode> = (0..10)
+            .map(|i| Episode::new(vec![i % 4, (i + 1) % 4], vec![iv]))
+            .collect();
+
+        let mut hybrid = HybridBackend::new(
+            Box::new(CpuSerialBackend::new()),
+            Box::new(CpuParallelBackend::new(2)),
+            Dispatch::Crossover(CrossoverModel::paper_default()),
+        );
+        let got = hybrid.count(&eps, &stream).unwrap().counts;
+        let want = CpuSerialBackend::new().count(&eps, &stream).unwrap().counts;
+        assert_eq!(got, want);
+        assert!(hybrid.supports_n(7));
+        assert_eq!(hybrid.name(), "hybrid");
+    }
+}

@@ -1,0 +1,241 @@
+//! Pluggable counting engines: the abstraction the paper's CPU/GPU division
+//! of labor is written against.
+//!
+//! The mining driver (candidate generation, level loop, support filtering)
+//! lives on the host and talks to a [`CountBackend`] — *some* engine that
+//! can count non-overlapped occurrences of a batch of episodes over an
+//! event stream. Concrete engines:
+//!
+//! - [`cpu::CpuSerialBackend`] — Algorithm 1, one automaton at a time.
+//! - [`cpu::CpuParallelBackend`] — the paper's multithreaded baseline (§6.4).
+//! - [`accel::PtpeBackend`] — per-thread-per-episode on the PJRT runtime
+//!   (§5.2.1), CPU fallback for unsupported sizes.
+//! - [`accel::MapConcatBackend`] — segment-parallel Map + host Concatenate
+//!   (§5.2.2), PTPE/CPU fallback when segmentation is infeasible.
+//! - [`accel::HybridBackend`] — composes any two backends under the
+//!   crossover/cost dispatch rule (§5.2.3, Alg. 2).
+//! - [`two_pass::TwoPassBackend`] — wraps any backend with the A2+A1
+//!   elimination pipeline (§5.3): one-pass vs two-pass is backend
+//!   *composition*, not a parallel mode enum.
+//!
+//! New substrates (multi-GPU, sharded CPU pools, remote accelerators) slot
+//! in by implementing the trait; nothing in the lattice logic changes.
+
+pub mod accel;
+pub mod cpu;
+pub mod two_pass;
+
+use std::rc::Rc;
+
+use crate::coordinator::{Metrics, Strategy};
+use crate::episodes::Episode;
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::runtime::Runtime;
+
+/// What one counting call did: per-episode counts plus the work metrics
+/// accumulated while producing them.
+#[derive(Clone, Debug, Default)]
+pub struct CountReport {
+    /// Non-overlapped occurrence counts, in input episode order. Backends
+    /// that run an elimination pre-pass (see [`two_pass::TwoPassBackend`])
+    /// return exact counts for survivors and the sub-threshold relaxed
+    /// bound for culled candidates — the `count >= theta` decision is exact
+    /// either way.
+    pub counts: Vec<u64>,
+    /// Candidates eliminated by a relaxed pre-pass (0 for one-pass engines).
+    pub culled: u64,
+    /// Work-counter delta for this call (merge into session totals).
+    pub metrics: Metrics,
+}
+
+impl CountReport {
+    /// A plain one-pass report carrying only counts.
+    pub fn from_counts(counts: Vec<u64>) -> CountReport {
+        CountReport { counts, culled: 0, metrics: Metrics::default() }
+    }
+}
+
+/// A counting engine. Implementations may keep internal state (runtime
+/// handles, thread pools, caches) — hence `&mut self`.
+pub trait CountBackend {
+    /// Stable human-readable engine name (used in reports and errors).
+    fn name(&self) -> &str;
+
+    /// Can this engine count episodes of size `n` natively? Engines with a
+    /// CPU fallback still return `Ok` from [`CountBackend::count`] for
+    /// unsupported sizes; this query reports the *native* capability.
+    fn supports_n(&self, n: usize) -> bool;
+
+    /// Count every episode's non-overlapped occurrences. Episodes may mix
+    /// sizes; results return in input order.
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError>;
+
+    /// Count under the relaxed constraints α′ (paper Observation 5.1) —
+    /// the cheap upper-bound pass two-pass elimination builds on. The
+    /// default uses the exact counts, which are a sound (tight) upper
+    /// bound; engines with a cheaper A2 path override this.
+    fn count_relaxed(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        self.count(episodes, stream)
+    }
+}
+
+/// Group episode indices by episode size, preserving order within groups.
+/// Accelerator artifacts are compiled per size N, so uniform-size batches
+/// are the unit of dispatch.
+pub fn group_by_size(episodes: &[Episode]) -> Vec<(Vec<usize>, Vec<Episode>)> {
+    let mut groups: Vec<(usize, Vec<usize>)> = vec![];
+    for (i, ep) in episodes.iter().enumerate() {
+        match groups.iter_mut().find(|(n, _)| *n == ep.n()) {
+            Some((_, v)) => v.push(i),
+            None => groups.push((ep.n(), vec![i])),
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(_, idx)| {
+            let eps = idx.iter().map(|&i| episodes[i].clone()).collect();
+            (idx, eps)
+        })
+        .collect()
+}
+
+/// The single episode size of a batch, if it is uniform (and non-empty).
+/// Mining levels always produce uniform batches — the fast path the
+/// grouping shells below take to avoid cloning the candidate set.
+pub fn uniform_size(episodes: &[Episode]) -> Option<usize> {
+    let n = episodes.first()?.n();
+    episodes.iter().all(|e| e.n() == n).then_some(n)
+}
+
+/// Shared batching shell for per-size engines: groups a mixed batch by
+/// episode size, answers 1-node episodes from host-side type frequencies
+/// (no kernel exists or is needed for N=1), and scatters per-group results
+/// back into input order. `count_uniform` sees only uniform groups with
+/// n >= 2. Uniform batches (every mining level) pass through without the
+/// clone-and-scatter.
+pub fn count_grouped<F>(
+    episodes: &[Episode],
+    stream: &EventStream,
+    metrics: &mut Metrics,
+    mut count_uniform: F,
+) -> Result<Vec<u64>, MineError>
+where
+    F: FnMut(usize, &[Episode], &mut Metrics) -> Result<Vec<u64>, MineError>,
+{
+    metrics.episodes_counted += episodes.len() as u64;
+    let n1_counts = |group: &[Episode]| -> Vec<u64> {
+        let freq = stream.type_counts();
+        group.iter().map(|e| freq[e.types[0] as usize]).collect()
+    };
+    if let Some(n) = uniform_size(episodes) {
+        return if n == 1 {
+            Ok(n1_counts(episodes))
+        } else {
+            count_uniform(n, episodes, metrics)
+        };
+    }
+    let mut out = vec![0u64; episodes.len()];
+    for (indices, group) in group_by_size(episodes) {
+        let n = group[0].n();
+        let counts = if n == 1 {
+            n1_counts(&group)
+        } else {
+            count_uniform(n, &group, metrics)?
+        };
+        for (slot, c) in indices.into_iter().zip(counts) {
+            out[slot] = c;
+        }
+    }
+    Ok(out)
+}
+
+/// Build the backend for a named [`Strategy`]. Accelerated strategies need
+/// an open [`Runtime`]; CPU strategies ignore it.
+pub fn for_strategy(
+    strategy: Strategy,
+    rt: Option<Rc<Runtime>>,
+    cpu_threads: usize,
+) -> Result<Box<dyn CountBackend>, MineError> {
+    match strategy {
+        Strategy::CpuSerial => Ok(Box::new(cpu::CpuSerialBackend::new())),
+        Strategy::CpuParallel => Ok(Box::new(cpu::CpuParallelBackend::new(cpu_threads))),
+        Strategy::PtpeA1 => {
+            Ok(Box::new(accel::PtpeBackend::new(require_rt(rt)?, cpu_threads)))
+        }
+        Strategy::MapConcat => {
+            Ok(Box::new(accel::MapConcatBackend::new(require_rt(rt)?, cpu_threads)))
+        }
+        Strategy::Hybrid => {
+            Ok(Box::new(accel::HybridBackend::with_runtime(require_rt(rt)?, cpu_threads)))
+        }
+    }
+}
+
+fn require_rt(rt: Option<Rc<Runtime>>) -> Result<Rc<Runtime>, MineError> {
+    rt.ok_or_else(|| {
+        MineError::runtime_unavailable(
+            "this strategy counts on the accelerator; open a runtime with \
+             Runtime::open_default() or pick a cpu strategy",
+        )
+    })
+}
+
+/// The default engine: accelerated Hybrid when the PJRT runtime opens,
+/// otherwise the multithreaded CPU baseline. Mining is never blocked on
+/// the accelerator being present.
+pub fn default_backend(cpu_threads: usize) -> Box<dyn CountBackend> {
+    match Runtime::open_default() {
+        Ok(rt) => Box::new(accel::HybridBackend::with_runtime(Rc::new(rt), cpu_threads)),
+        Err(_) => Box::new(cpu::CpuParallelBackend::new(cpu_threads)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+
+    #[test]
+    fn group_by_size_preserves_order() {
+        let iv = Interval::new(0, 5);
+        let eps = vec![
+            Episode::single(0),
+            Episode::new(vec![1, 2], vec![iv]),
+            Episode::single(3),
+            Episode::new(vec![4, 5], vec![iv]),
+        ];
+        let groups = group_by_size(&eps);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].0, vec![0, 2]);
+        assert_eq!(groups[1].0, vec![1, 3]);
+    }
+
+    #[test]
+    fn count_grouped_answers_n1_on_host() {
+        let stream = EventStream::from_pairs(vec![(0, 1), (0, 3), (1, 5)], 2);
+        let eps = vec![Episode::single(0), Episode::single(1)];
+        let mut m = Metrics::default();
+        let counts = count_grouped(&eps, &stream, &mut m, |_, _, _| {
+            panic!("no uniform group expected for pure n=1 batches")
+        })
+        .unwrap();
+        assert_eq!(counts, vec![2, 1]);
+        assert_eq!(m.episodes_counted, 2);
+    }
+
+    #[test]
+    fn accelerated_strategy_without_runtime_is_unavailable() {
+        let err = for_strategy(Strategy::Hybrid, None, 2).err().unwrap();
+        assert!(matches!(err, MineError::RuntimeUnavailable { .. }));
+        assert!(for_strategy(Strategy::CpuSerial, None, 2).is_ok());
+    }
+}

@@ -1,0 +1,164 @@
+//! Two-pass elimination A2+A1 as backend composition (paper §5.3, Alg. 4).
+//!
+//! Pass 1 counts every candidate under the relaxed constraints α′ with the
+//! wrapped engine's cheap relaxed path; candidates whose relaxed count is
+//! below the support threshold are eliminated — sound because
+//! `count(α′) ≥ count(α)` (Theorem 5.1, property-tested in
+//! `rust/tests/invariants.rs`). Pass 2 runs the exact path on the
+//! survivors only. Wrapping *any* [`CountBackend`] this way is what the
+//! old `CountMode::TwoPass` enum used to hard-wire to the Hybrid engine.
+
+use crate::backend::{CountBackend, CountReport};
+use crate::coordinator::Metrics;
+use crate::episodes::Episode;
+use crate::error::MineError;
+use crate::events::EventStream;
+
+/// Full outcome of a two-pass count (the shape the Fig. 9 bench reports).
+#[derive(Clone, Debug)]
+pub struct TwoPassOutcome {
+    /// Per-episode counts: exact counts for survivors; the (relaxed,
+    /// sub-threshold) upper bound for culled candidates. Either way the
+    /// `count >= theta` decision is exact.
+    pub counts: Vec<u64>,
+    /// relaxed-pass counts for every candidate
+    pub relaxed_counts: Vec<u64>,
+    pub culled: u64,
+    pub survivors: u64,
+}
+
+/// Wraps an exact engine with the A2 elimination pre-pass at a fixed
+/// support threshold.
+pub struct TwoPassBackend {
+    inner: Box<dyn CountBackend>,
+    theta: u64,
+    name: String,
+}
+
+impl TwoPassBackend {
+    pub fn new(inner: Box<dyn CountBackend>, theta: u64) -> TwoPassBackend {
+        let name = format!("two-pass({})", inner.name());
+        TwoPassBackend { inner, theta, name }
+    }
+
+    pub fn theta(&self) -> u64 {
+        self.theta
+    }
+
+    /// Run both passes and return the full outcome plus the work metrics.
+    pub fn run(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<(TwoPassOutcome, Metrics), MineError> {
+        let relaxed_rep = self.inner.count_relaxed(episodes, stream)?;
+        let mut metrics = relaxed_rep.metrics;
+        // `episodes_counted` means episodes through the *exact* path (its
+        // 0.1 semantics); the relaxed pre-pass reports its work through
+        // a2_culled/a2_survivors below, so drop its tally here rather
+        // than double-counting survivors.
+        metrics.episodes_counted = 0;
+        let relaxed = relaxed_rep.counts;
+
+        let survivor_idx: Vec<usize> =
+            (0..episodes.len()).filter(|&i| relaxed[i] >= self.theta).collect();
+        let survivors: Vec<Episode> =
+            survivor_idx.iter().map(|&i| episodes[i].clone()).collect();
+        metrics.a2_culled += (episodes.len() - survivors.len()) as u64;
+        metrics.a2_survivors += survivors.len() as u64;
+
+        let exact_rep = self.inner.count(&survivors, stream)?;
+        metrics.merge(&exact_rep.metrics);
+
+        let mut counts = relaxed.clone();
+        for (&i, c) in survivor_idx.iter().zip(exact_rep.counts) {
+            counts[i] = c;
+        }
+        let outcome = TwoPassOutcome {
+            culled: (episodes.len() - survivor_idx.len()) as u64,
+            survivors: survivor_idx.len() as u64,
+            counts,
+            relaxed_counts: relaxed,
+        };
+        Ok((outcome, metrics))
+    }
+}
+
+impl CountBackend for TwoPassBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn supports_n(&self, n: usize) -> bool {
+        self.inner.supports_n(n)
+    }
+
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        let (outcome, metrics) = self.run(episodes, stream)?;
+        Ok(CountReport { counts: outcome.counts, culled: outcome.culled, metrics })
+    }
+
+    fn count_relaxed(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        self.inner.count_relaxed(episodes, stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::CpuSerialBackend;
+    use crate::episodes::Interval;
+    use crate::mining::serial;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_pass_is_exact_at_threshold() {
+        let mut rng = Rng::new(0x2B2B);
+        let mut pairs = vec![];
+        let mut t = 0;
+        for _ in 0..800 {
+            t += rng.range_i32(0, 3);
+            pairs.push((rng.range_i32(0, 4), t));
+        }
+        let stream = crate::events::EventStream::from_pairs(pairs, 5);
+        let eps: Vec<Episode> = (0..40)
+            .map(|_| {
+                let n = rng.range_i32(2, 4) as usize;
+                let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 4)).collect();
+                let ivs: Vec<Interval> = (0..n - 1)
+                    .map(|_| {
+                        let lo = rng.range_i32(0, 2);
+                        Interval::new(lo, lo + rng.range_i32(1, 8))
+                    })
+                    .collect();
+                Episode::new(types, ivs)
+            })
+            .collect();
+
+        let theta = 6;
+        let mut tp = TwoPassBackend::new(Box::new(CpuSerialBackend::new()), theta);
+        assert_eq!(tp.name(), "two-pass(cpu-serial)");
+        let (out, metrics) = tp.run(&eps, &stream).unwrap();
+        assert_eq!(out.culled + out.survivors, eps.len() as u64);
+        assert_eq!(metrics.a2_culled, out.culled);
+        for (i, ep) in eps.iter().enumerate() {
+            let exact = serial::count_a1(ep, &stream);
+            // frequency decision must be exact
+            assert_eq!(out.counts[i] >= theta, exact >= theta, "{}", ep.display());
+            // survivors carry exact counts
+            if out.relaxed_counts[i] >= theta {
+                assert_eq!(out.counts[i], exact, "{}", ep.display());
+            }
+            // Theorem 5.1
+            assert!(out.relaxed_counts[i] >= exact);
+        }
+    }
+}

@@ -9,9 +9,8 @@
 //! Concatenate kernel does in `q+1` levels); the two are property-tested
 //! equal.
 
-use anyhow::Result;
-
 use crate::episodes::Episode;
+use crate::error::MineError;
 use crate::events::{EventStream, Tick};
 use crate::runtime::{exec, Runtime};
 
@@ -65,7 +64,7 @@ pub fn count(
     episodes: &[Episode],
     stream: &EventStream,
     plan: &Plan,
-) -> Result<(Vec<u64>, Vec<u64>)> {
+) -> Result<(Vec<u64>, Vec<u64>), MineError> {
     let tuples = exec::mapcat_map(rt, episodes, stream, &plan.taus)?;
     let mut counts = Vec::with_capacity(episodes.len());
     let mut misses = Vec::with_capacity(episodes.len());

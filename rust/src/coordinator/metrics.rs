@@ -27,6 +27,21 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fold another metrics delta into this one (backends report per-call
+    /// deltas; sessions and coordinators accumulate them here).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.episodes_counted += other.episodes_counted;
+        self.ptpe_calls += other.ptpe_calls;
+        self.mapcat_calls += other.mapcat_calls;
+        self.mapcat_fallbacks += other.mapcat_fallbacks;
+        self.concat_misses += other.concat_misses;
+        self.cpu_fallbacks += other.cpu_fallbacks;
+        self.a2_culled += other.a2_culled;
+        self.a2_survivors += other.a2_survivors;
+        self.accel_time += other.accel_time;
+        self.host_time += other.host_time;
+    }
+
     pub fn report(&self) -> String {
         format!(
             "episodes={} ptpe_calls={} mapcat_calls={} mapcat_fallbacks={} \
@@ -55,5 +70,15 @@ mod tests {
         let mut m = Metrics::default();
         m.a2_culled = 42;
         assert!(m.report().contains("a2_culled=42"));
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics { ptpe_calls: 2, cpu_fallbacks: 1, ..Metrics::default() };
+        let b = Metrics { ptpe_calls: 3, a2_culled: 7, ..Metrics::default() };
+        a.merge(&b);
+        assert_eq!(a.ptpe_calls, 5);
+        assert_eq!(a.cpu_fallbacks, 1);
+        assert_eq!(a.a2_culled, 7);
     }
 }

@@ -1,15 +1,24 @@
-//! Level-wise frequent-episode mining driver (paper §5: candidate
-//! generation on the host alternating with counting on the accelerator).
+//! Level-wise mining configuration and reports.
+//!
+//! The mining loop itself lives in [`crate::session::mine_with_backend`]
+//! (one implementation for `Session`, streaming partitions, and the
+//! deprecated [`Coordinator::mine`] shim below); this module keeps the
+//! config/report types that benches and tests consume.
 
-use std::time::Instant;
-
-use anyhow::Result;
+use crate::backend::two_pass::TwoPassBackend;
+use crate::backend::CountBackend;
+use crate::episodes::{CountedEpisode, Interval};
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::session::{mine_with_backend, MineOptions};
 
 use super::{Coordinator, Strategy};
-use crate::episodes::{candidates, CountedEpisode, Episode, Interval};
-use crate::events::EventStream;
 
 /// Counting mode for each mining level.
+///
+/// Superseded by backend composition: one-pass is a bare engine, two-pass
+/// is [`TwoPassBackend`] wrapping it. Kept for the deprecated
+/// [`Coordinator::mine`] shim.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CountMode {
     /// one pass with the given strategy
@@ -43,6 +52,15 @@ impl MineConfig {
             max_candidates_per_level: 2_000_000,
         }
     }
+
+    pub(crate) fn options(&self) -> MineOptions {
+        MineOptions {
+            theta: self.theta,
+            intervals: self.intervals.clone(),
+            max_level: self.max_level,
+            max_candidates_per_level: self.max_candidates_per_level,
+        }
+    }
 }
 
 /// Per-level mining report (the numbers Figs. 7/9 are built from).
@@ -74,66 +92,37 @@ impl MineResult {
 }
 
 impl Coordinator {
-    /// Run the full level-wise mining loop.
-    pub fn mine(&mut self, stream: &EventStream, cfg: &MineConfig) -> Result<MineResult> {
-        let mut result = MineResult::default();
-        let mut frontier: Vec<Episode> = vec![];
-        for level in 1..=cfg.max_level {
-            let t_gen = Instant::now();
-            let cands = if level == 1 {
-                candidates::level1(stream.n_types)
-            } else {
-                candidates::next_level(&frontier, &cfg.intervals)
-            };
-            let gen_seconds = t_gen.elapsed().as_secs_f64();
-            if cands.is_empty() {
-                break;
-            }
-            anyhow::ensure!(
-                cands.len() <= cfg.max_candidates_per_level,
-                "level {level} generated {} candidates (> {} cap) — raise theta \
-                 or max_candidates_per_level",
-                cands.len(),
-                cfg.max_candidates_per_level
-            );
-
-            let t_count = Instant::now();
-            let (counts, culled) = match cfg.mode {
-                CountMode::OnePass(strategy) => {
-                    (self.count(&cands, stream, strategy)?, 0)
-                }
-                CountMode::TwoPass => {
-                    let out = self.count_two_pass(&cands, stream, cfg.theta)?;
-                    (out.counts, out.culled)
-                }
-            };
-            let count_seconds = t_count.elapsed().as_secs_f64();
-
-            frontier = cands
-                .iter()
-                .zip(&counts)
-                .filter(|(_, &c)| c >= cfg.theta)
-                .map(|(e, _)| e.clone())
-                .collect();
-            result.levels.push(LevelReport {
-                level,
-                candidates: cands.len(),
-                frequent: frontier.len(),
-                culled_by_a2: culled,
-                count_seconds,
-                gen_seconds,
-            });
-            result.frequent.extend(
-                cands
-                    .into_iter()
-                    .zip(counts)
-                    .filter(|(_, c)| *c >= cfg.theta)
-                    .map(|(episode, count)| CountedEpisode { episode, count }),
-            );
-            if frontier.is_empty() {
-                break;
+    /// The backend a [`MineConfig`]'s mode names (shared by the deprecated
+    /// mine/mine_stream shims).
+    pub(crate) fn mode_backend(
+        &self,
+        cfg: &MineConfig,
+    ) -> Result<Box<dyn CountBackend>, MineError> {
+        match cfg.mode {
+            CountMode::OnePass(strategy) => self.strategy_backend(strategy),
+            CountMode::TwoPass => {
+                let inner = self.strategy_backend(Strategy::Hybrid)?;
+                Ok(Box::new(TwoPassBackend::new(inner, cfg.theta)))
             }
         }
-        Ok(result)
+    }
+
+    pub(crate) fn mine_impl(
+        &mut self,
+        stream: &EventStream,
+        cfg: &MineConfig,
+    ) -> Result<MineResult, MineError> {
+        let mut backend = self.mode_backend(cfg)?;
+        mine_with_backend(backend.as_mut(), stream, &cfg.options(), &mut self.metrics)
+    }
+
+    /// Run the full level-wise mining loop.
+    #[deprecated(since = "0.2.0", note = "use Session::builder()...build()?.mine()")]
+    pub fn mine(
+        &mut self,
+        stream: &EventStream,
+        cfg: &MineConfig,
+    ) -> Result<MineResult, MineError> {
+        self.mine_impl(stream, cfg)
     }
 }

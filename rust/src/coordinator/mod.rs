@@ -1,11 +1,13 @@
-//! L3 coordinator: the paper's system contribution.
+//! L3 coordinator: the paper's system contribution, now expressed as
+//! backend composition.
 //!
-//! Owns algorithm dispatch (PTPE vs MapConcatenate vs Hybrid, paper §5.2),
-//! the two-pass A2+A1 elimination pipeline (§5.3), the level-wise mining
-//! driver (§5), and the streaming "chip-on-chip" partition processor (§1
-//! contribution 3). Counting executes on the PJRT runtime; candidate
-//! generation and concatenation stay here on the host — exactly the
-//! paper's CPU/GPU split.
+//! Algorithm dispatch (PTPE vs MapConcatenate vs Hybrid, paper §5.2), the
+//! two-pass A2+A1 elimination pipeline (§5.3) and the level-wise mining
+//! driver (§5) live in [`crate::backend`] and [`crate::session`]; this
+//! module keeps the strategy name menu, the run metrics, the streaming
+//! partition producer, and the old [`Coordinator`] entry points as thin
+//! **deprecated** shims so existing benches and tests migrate
+//! incrementally. New code should start from [`crate::Session`].
 
 pub mod mapconcat;
 pub mod metrics;
@@ -13,17 +15,21 @@ pub mod miner;
 pub mod streaming;
 pub mod two_pass;
 
-use anyhow::Result;
+use std::rc::Rc;
 
+use crate::backend::two_pass::{TwoPassBackend, TwoPassOutcome};
+use crate::backend::{self, accel, CountBackend};
 use crate::episodes::Episode;
+use crate::error::MineError;
 use crate::events::EventStream;
-use crate::gpu_model::crossover::{CostModel, CrossoverModel};
-use crate::mining::{cpu_parallel, serial};
-use crate::runtime::{exec, Runtime};
+use crate::gpu_model::crossover::CostModel;
+use crate::runtime::Runtime;
 
+pub use crate::backend::accel::Dispatch;
 pub use metrics::Metrics;
 
-/// Counting strategy (the paper's algorithm menu).
+/// Counting strategy (the paper's algorithm menu). Each name resolves to a
+/// [`CountBackend`] via [`crate::backend::for_strategy`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
     /// per-thread-per-episode on the accelerator, exact constraints (§5.2.1)
@@ -39,31 +45,48 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    pub fn parse(s: &str) -> Option<Strategy> {
-        Some(match s {
-            "ptpe" | "a1" => Strategy::PtpeA1,
-            "mapconcat" | "mc" => Strategy::MapConcat,
-            "hybrid" => Strategy::Hybrid,
-            "cpu" | "cpu-serial" => Strategy::CpuSerial,
-            "cpu-parallel" => Strategy::CpuParallel,
-            _ => return None,
-        })
+    /// Every accepted strategy name (aliases included).
+    pub const NAMES: &'static [&'static str] =
+        &["ptpe", "a1", "mapconcat", "mc", "hybrid", "cpu", "cpu-serial", "cpu-parallel"];
+
+    /// Parse a strategy name; unknown names report the full valid list.
+    pub fn parse(s: &str) -> Result<Strategy, MineError> {
+        match s {
+            "ptpe" | "a1" => Ok(Strategy::PtpeA1),
+            "mapconcat" | "mc" => Ok(Strategy::MapConcat),
+            "hybrid" => Ok(Strategy::Hybrid),
+            "cpu" | "cpu-serial" => Ok(Strategy::CpuSerial),
+            "cpu-parallel" => Ok(Strategy::CpuParallel),
+            _ => Err(MineError::UnknownStrategy {
+                given: s.to_string(),
+                valid: Strategy::NAMES,
+            }),
+        }
+    }
+
+    /// Does this strategy count on the accelerator (needs an open
+    /// [`Runtime`])?
+    pub fn needs_runtime(self) -> bool {
+        matches!(self, Strategy::PtpeA1 | Strategy::MapConcat | Strategy::Hybrid)
     }
 }
 
-/// How the Hybrid strategy picks PTPE vs MapConcatenate.
-#[derive(Clone, Copy, Debug)]
-pub enum Dispatch {
-    /// the paper's Eq. 2 form: S > f(N) with f fitted to crossovers
-    Crossover(CrossoverModel),
-    /// stream-length-aware cost model calibrated on this substrate
-    /// (DESIGN.md §6; the default)
-    Cost(CostModel),
+impl std::str::FromStr for Strategy {
+    type Err = MineError;
+
+    fn from_str(s: &str) -> Result<Strategy, MineError> {
+        Strategy::parse(s)
+    }
 }
 
-/// The coordinator: runtime handle + dispatch model + run metrics.
+/// The legacy coordinator: runtime handle + dispatch model + run metrics.
+///
+/// Deprecated in favor of [`crate::Session`] (which owns backend
+/// construction, per-level reporting and streaming partition mining); the
+/// methods below are thin shims over the same backend layer and will be
+/// removed after one release.
 pub struct Coordinator {
-    pub rt: Runtime,
+    pub rt: Rc<Runtime>,
     pub dispatch: Dispatch,
     pub metrics: Metrics,
     /// worker threads for the CPU-parallel strategy
@@ -75,7 +98,7 @@ impl Coordinator {
         let mf = rt.manifest();
         let cost = CostModel::substrate_default(mf.m_episodes, mf.c_chunk);
         Coordinator {
-            rt,
+            rt: Rc::new(rt),
             dispatch: Dispatch::Cost(cost),
             metrics: Metrics::default(),
             cpu_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
@@ -88,152 +111,98 @@ impl Coordinator {
         self
     }
 
-    pub fn open_default() -> Result<Coordinator> {
+    pub fn open_default() -> Result<Coordinator, MineError> {
         Ok(Coordinator::new(Runtime::open_default()?))
     }
 
+    /// Build the backend a strategy names, honoring this coordinator's
+    /// dispatch model for Hybrid. (The non-deprecated internal the shims
+    /// share.)
+    pub(crate) fn strategy_backend(
+        &self,
+        strategy: Strategy,
+    ) -> Result<Box<dyn CountBackend>, MineError> {
+        if strategy == Strategy::Hybrid {
+            return Ok(Box::new(accel::HybridBackend::with_runtime_dispatch(
+                self.rt.clone(),
+                self.cpu_threads,
+                self.dispatch,
+            )));
+        }
+        backend::for_strategy(strategy, Some(self.rt.clone()), self.cpu_threads)
+    }
+
     /// Count every episode's non-overlapped occurrences under the given
-    /// strategy. Episodes may mix sizes; they are grouped by size
-    /// internally and results return in input order.
+    /// strategy. Episodes may mix sizes; results return in input order.
+    #[deprecated(since = "0.2.0", note = "use Session::count or a CountBackend directly")]
     pub fn count(
         &mut self,
         episodes: &[Episode],
         stream: &EventStream,
         strategy: Strategy,
-    ) -> Result<Vec<u64>> {
-        let mut out = vec![0u64; episodes.len()];
-        for (indices, group) in group_by_size(episodes) {
-            let counts = self.count_uniform(&group, stream, strategy)?;
-            for (slot, c) in indices.into_iter().zip(counts) {
-                out[slot] = c;
-            }
-        }
-        Ok(out)
+    ) -> Result<Vec<u64>, MineError> {
+        let mut be = self.strategy_backend(strategy)?;
+        let report = be.count(episodes, stream)?;
+        self.metrics.merge(&report.metrics);
+        Ok(report.counts)
     }
 
-    /// Count a uniform-size group.
-    fn count_uniform(
+    /// Two-pass count at support threshold `theta` (paper CTh).
+    #[deprecated(since = "0.2.0", note = "use backend::two_pass::TwoPassBackend")]
+    pub fn count_two_pass(
         &mut self,
         episodes: &[Episode],
         stream: &EventStream,
-        strategy: Strategy,
-    ) -> Result<Vec<u64>> {
-        let n = episodes[0].n();
-        self.metrics.episodes_counted += episodes.len() as u64;
-        // 1-node episodes are plain frequencies — no kernel needed (§7 of
-        // DESIGN.md: N=1 handled on the host).
-        if n == 1 {
-            let freq = stream.type_counts();
-            return Ok(episodes.iter().map(|e| freq[e.types[0] as usize]).collect());
-        }
-        match strategy {
-            Strategy::CpuSerial => {
-                Ok(episodes.iter().map(|e| serial::count_a1(e, stream)).collect())
-            }
-            Strategy::CpuParallel => {
-                Ok(cpu_parallel::count_all_parallel(episodes, stream, self.cpu_threads))
-            }
-            Strategy::PtpeA1 => {
-                if !self.rt.supports_n(n) {
-                    self.metrics.cpu_fallbacks += 1;
-                    return Ok(cpu_parallel::count_all_parallel(
-                        episodes,
-                        stream,
-                        self.cpu_threads,
-                    ));
-                }
-                self.metrics.ptpe_calls += 1;
-                exec::count_a1(&self.rt, episodes, stream)
-            }
-            Strategy::MapConcat => self.count_mapconcat(episodes, stream),
-            Strategy::Hybrid => {
-                // Alg. 2: PTPE when S exceeds the level-dependent
-                // crossover, MapConcatenate otherwise.
-                let ptpe = match self.dispatch {
-                    Dispatch::Crossover(m) => m.choose_ptpe(episodes.len(), n),
-                    Dispatch::Cost(m) => m.choose_ptpe(episodes.len(), n, stream.len()),
-                };
-                if ptpe {
-                    self.count_uniform(episodes, stream, Strategy::PtpeA1)
-                } else {
-                    self.count_uniform(episodes, stream, Strategy::MapConcat)
-                }
-            }
-        }
+        theta: u64,
+    ) -> Result<TwoPassOutcome, MineError> {
+        let inner = self.strategy_backend(Strategy::Hybrid)?;
+        let mut tp = TwoPassBackend::new(inner, theta);
+        let (outcome, metrics) = tp.run(episodes, stream)?;
+        self.metrics.merge(&metrics);
+        Ok(outcome)
     }
 
-    fn count_mapconcat(
+    /// Pass 1 only: relaxed counts via the A2 path (CPU fallback for
+    /// unsupported sizes).
+    #[deprecated(since = "0.2.0", note = "use CountBackend::count_relaxed")]
+    pub fn count_relaxed(
         &mut self,
         episodes: &[Episode],
         stream: &EventStream,
-    ) -> Result<Vec<u64>> {
-        let n = episodes[0].n();
-        match mapconcat::plan(&self.rt, episodes, stream) {
-            Some(plan) if self.rt.supports_n(n) => {
-                self.metrics.mapcat_calls += 1;
-                let (mut counts, misses) =
-                    mapconcat::count(&self.rt, episodes, stream, &plan)?;
-                // Concatenate misses flag episodes whose boundary-machine
-                // chain lost synchronization (matched chains are exact;
-                // see mapconcat::count). Recount those exactly via PTPE.
-                let missed: Vec<usize> =
-                    (0..episodes.len()).filter(|&i| misses[i] > 0).collect();
-                if !missed.is_empty() {
-                    self.metrics.concat_misses += missed.len() as u64;
-                    let subset: Vec<Episode> =
-                        missed.iter().map(|&i| episodes[i].clone()).collect();
-                    let exact = exec::count_a1(&self.rt, &subset, stream)?;
-                    for (&i, c) in missed.iter().zip(exact) {
-                        counts[i] = c;
-                    }
-                }
-                Ok(counts)
-            }
-            _ => {
-                // segmentation infeasible (stream too large / too short, or
-                // constraint windows wider than a segment): PTPE fallback.
-                self.metrics.mapcat_fallbacks += 1;
-                self.count_uniform(episodes, stream, Strategy::PtpeA1)
-            }
-        }
+    ) -> Result<Vec<u64>, MineError> {
+        let mut be = self.strategy_backend(Strategy::Hybrid)?;
+        let report = be.count_relaxed(episodes, stream)?;
+        self.metrics.merge(&report.metrics);
+        Ok(report.counts)
     }
-}
-
-/// Group episode indices by episode size, preserving order within groups.
-fn group_by_size(episodes: &[Episode]) -> Vec<(Vec<usize>, Vec<Episode>)> {
-    let mut groups: Vec<(usize, Vec<usize>)> = vec![];
-    for (i, ep) in episodes.iter().enumerate() {
-        match groups.iter_mut().find(|(n, _)| *n == ep.n()) {
-            Some((_, v)) => v.push(i),
-            None => groups.push((ep.n(), vec![i])),
-        }
-    }
-    groups
-        .into_iter()
-        .map(|(_, idx)| {
-            let eps = idx.iter().map(|&i| episodes[i].clone()).collect();
-            (idx, eps)
-        })
-        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::episodes::Interval;
 
     #[test]
-    fn group_by_size_preserves_order() {
-        let iv = Interval::new(0, 5);
-        let eps = vec![
-            Episode::single(0),
-            Episode::new(vec![1, 2], vec![iv]),
-            Episode::single(3),
-            Episode::new(vec![4, 5], vec![iv]),
-        ];
-        let groups = group_by_size(&eps);
-        assert_eq!(groups.len(), 2);
-        assert_eq!(groups[0].0, vec![0, 2]);
-        assert_eq!(groups[1].0, vec![1, 3]);
+    fn strategy_parse_roundtrips_all_names() {
+        for &name in Strategy::NAMES {
+            assert!(Strategy::parse(name).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn strategy_parse_error_lists_valid_names() {
+        let err = Strategy::parse("warp-speed").err().unwrap();
+        let msg = err.to_string();
+        assert!(msg.contains("warp-speed"));
+        for &name in Strategy::NAMES {
+            assert!(msg.contains(name), "missing {name} in {msg}");
+        }
+    }
+
+    #[test]
+    fn needs_runtime_splits_cpu_from_accel() {
+        assert!(Strategy::Hybrid.needs_runtime());
+        assert!(Strategy::PtpeA1.needs_runtime());
+        assert!(!Strategy::CpuSerial.needs_runtime());
+        assert!(!Strategy::CpuParallel.needs_runtime());
     }
 }

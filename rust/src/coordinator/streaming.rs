@@ -7,14 +7,14 @@
 //! back at a configurable speed-up into a bounded channel; the miner
 //! consumes whole partitions and must finish each before the next arrives
 //! (the real-time criterion reported by `examples/streaming_realtime.rs`).
+//! Consume the receiver with [`crate::Session::mine_partitions`].
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver};
 use std::time::{Duration, Instant};
-
-use anyhow::Result;
 
 use super::miner::{MineConfig, MineResult};
 use super::Coordinator;
+use crate::error::MineError;
 use crate::events::{EventStream, Tick};
 
 /// A partition of the stream handed to the miner.
@@ -45,20 +45,62 @@ impl PartitionReport {
     }
 }
 
+/// Producer pacing and buffering knobs for [`spawn_producer_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct ProducerConfig {
+    /// Replay speed relative to real time (1.0 = real time). Values <= 1.0
+    /// are honored exactly — a real-time or slowed replay must sleep the
+    /// full partition duration or the real-time criterion it exists to
+    /// exercise is meaningless.
+    pub speedup: f64,
+    /// Bound of the partition channel (how many partitions may queue
+    /// before the producer blocks). The paper's setup is a 2-chip
+    /// hand-off; a small bound models the MEA-side buffer.
+    pub channel_bound: usize,
+    /// Upper bound on the inter-partition sleep, applied **only when
+    /// `speedup > 1.0`** (an accelerated replay is a test-bench
+    /// convenience, so capping its sleeps merely speeds the bench up; at
+    /// real-time speeds a cap would silently break pacing for partitions
+    /// wider than the cap).
+    pub max_wait: Duration,
+}
+
+impl Default for ProducerConfig {
+    fn default() -> ProducerConfig {
+        ProducerConfig {
+            speedup: 1.0,
+            channel_bound: 4,
+            max_wait: Duration::from_millis(500),
+        }
+    }
+}
+
 /// Spawn a producer thread that replays `stream` in `width_ticks`
-/// partitions, `speedup`× faster than real time (1.0 = real time).
+/// partitions at `speedup`× real time with default buffering.
 pub fn spawn_producer(
     stream: EventStream,
     width_ticks: Tick,
     speedup: f64,
 ) -> Receiver<Partition> {
-    let (tx, rx): (SyncSender<Partition>, Receiver<Partition>) = sync_channel(4);
+    spawn_producer_with(stream, width_ticks, ProducerConfig { speedup, ..Default::default() })
+}
+
+/// Spawn a producer thread with explicit pacing/buffering configuration.
+pub fn spawn_producer_with(
+    stream: EventStream,
+    width_ticks: Tick,
+    cfg: ProducerConfig,
+) -> Receiver<Partition> {
+    let (tx, rx) = sync_channel(cfg.channel_bound.max(1));
     std::thread::spawn(move || {
         let parts = stream.partitions(width_ticks);
         for (index, part) in parts.into_iter().enumerate() {
             let recording = Duration::from_millis(width_ticks as u64);
-            let wait = recording.div_f64(speedup.max(1e-9));
-            std::thread::sleep(wait.min(Duration::from_millis(500)));
+            let mut wait = recording.div_f64(cfg.speedup.max(1e-9));
+            if cfg.speedup > 1.0 {
+                wait = wait.min(cfg.max_wait);
+            }
+            std::thread::sleep(wait);
             if tx.send(Partition { index, recording, stream: part }).is_err() {
                 break; // consumer hung up
             }
@@ -69,15 +111,16 @@ pub fn spawn_producer(
 
 impl Coordinator {
     /// Mine each partition as it arrives; returns per-partition reports.
+    #[deprecated(since = "0.2.0", note = "use Session::mine_partitions")]
     pub fn mine_stream(
         &mut self,
         rx: Receiver<Partition>,
         cfg: &MineConfig,
-    ) -> Result<Vec<PartitionReport>> {
+    ) -> Result<Vec<PartitionReport>, MineError> {
         let mut reports = vec![];
         while let Ok(part) = rx.recv() {
             let t0 = Instant::now();
-            let result = self.mine(&part.stream, cfg)?;
+            let result = self.mine_impl(&part.stream, cfg)?;
             reports.push(PartitionReport {
                 index: part.index,
                 events: part.stream.len(),
@@ -88,5 +131,63 @@ impl Coordinator {
             });
         }
         Ok(reports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream_ms(total: Tick) -> EventStream {
+        let pairs: Vec<(i32, Tick)> = (1..=total).step_by(10).map(|t| (0, t)).collect();
+        EventStream::from_pairs(pairs, 1)
+    }
+
+    #[test]
+    fn accelerated_replay_caps_waits() {
+        // 4 partitions of 2000 ms at 1000x: waits are 2 ms, well under the
+        // cap — the whole replay must finish quickly.
+        let rx = spawn_producer_with(
+            stream_ms(8000),
+            2000,
+            ProducerConfig { speedup: 1000.0, ..Default::default() },
+        );
+        let t0 = Instant::now();
+        let parts: Vec<Partition> = rx.iter().collect();
+        assert_eq!(parts.len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn realtime_replay_is_not_capped() {
+        // One 1200 ms partition at real time must take >= ~1200 ms even
+        // though it exceeds the old hard-coded 500 ms cap.
+        let rx = spawn_producer_with(
+            stream_ms(1200),
+            1200,
+            ProducerConfig { speedup: 1.0, ..Default::default() },
+        );
+        let t0 = Instant::now();
+        let parts: Vec<Partition> = rx.iter().collect();
+        assert_eq!(parts.len(), 1);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(1100),
+            "real-time pacing was capped: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn channel_bound_is_configurable() {
+        // A bound of 1 with an instant producer: the producer can run at
+        // most one partition ahead of the consumer; all partitions still
+        // arrive.
+        let rx = spawn_producer_with(
+            stream_ms(5000),
+            500,
+            ProducerConfig { speedup: 1e6, channel_bound: 1, ..Default::default() },
+        );
+        let n = rx.iter().count();
+        assert_eq!(n, 10);
     }
 }

@@ -1,91 +1,11 @@
-//! Two-pass elimination A2+A1 (paper §5.3, Algorithm 4).
+//! Two-pass elimination A2+A1 (paper §5.3, Algorithm 4) — compatibility
+//! surface.
 //!
-//! Pass 1 counts every candidate under the relaxed constraints α′ with the
-//! cheap A2 kernel; candidates whose relaxed count is below the support
-//! threshold are eliminated — sound because `count(α′) ≥ count(α)`
-//! (Theorem 5.1, property-tested in `rust/tests/invariants.rs`). Pass 2
-//! runs the exact A1 kernel on the survivors only.
+//! The implementation moved to [`crate::backend::two_pass`], where the
+//! pipeline is a [`TwoPassBackend`](crate::backend::two_pass::TwoPassBackend)
+//! wrapping any exact engine; the old `Coordinator::count_two_pass` /
+//! `count_relaxed` entry points live on in `coordinator/mod.rs` as
+//! deprecated shims over it. This module re-exports the outcome type so
+//! `coordinator::two_pass::TwoPassOutcome` keeps resolving.
 
-use anyhow::Result;
-
-use super::{Coordinator, Strategy};
-use crate::episodes::Episode;
-use crate::events::EventStream;
-
-/// Result of a two-pass count.
-#[derive(Clone, Debug)]
-pub struct TwoPassOutcome {
-    /// Per-episode counts: exact A1 counts for survivors; the (relaxed,
-    /// sub-threshold) A2 upper bound for culled candidates. Either way the
-    /// `count >= theta` decision is exact.
-    pub counts: Vec<u64>,
-    /// relaxed-pass counts for every candidate
-    pub relaxed_counts: Vec<u64>,
-    pub culled: u64,
-    pub survivors: u64,
-}
-
-impl Coordinator {
-    /// Two-pass count at support threshold `theta` (paper CTh).
-    pub fn count_two_pass(
-        &mut self,
-        episodes: &[Episode],
-        stream: &EventStream,
-        theta: u64,
-    ) -> Result<TwoPassOutcome> {
-        let relaxed = self.count_relaxed(episodes, stream)?;
-        let survivor_idx: Vec<usize> =
-            (0..episodes.len()).filter(|&i| relaxed[i] >= theta).collect();
-        let survivors: Vec<Episode> =
-            survivor_idx.iter().map(|&i| episodes[i].clone()).collect();
-        self.metrics.a2_culled += (episodes.len() - survivors.len()) as u64;
-        self.metrics.a2_survivors += survivors.len() as u64;
-
-        let exact = self.count(&survivors, stream, Strategy::Hybrid)?;
-        let mut counts = relaxed.clone();
-        for (&i, c) in survivor_idx.iter().zip(exact) {
-            counts[i] = c;
-        }
-        Ok(TwoPassOutcome {
-            culled: (episodes.len() - survivor_idx.len()) as u64,
-            survivors: survivor_idx.len() as u64,
-            counts,
-            relaxed_counts: relaxed,
-        })
-    }
-
-    /// Pass 1: relaxed counts via the A2 artifacts (CPU fallback for
-    /// unsupported sizes).
-    pub fn count_relaxed(
-        &mut self,
-        episodes: &[Episode],
-        stream: &EventStream,
-    ) -> Result<Vec<u64>> {
-        use crate::mining::serial;
-        let mut out = vec![0u64; episodes.len()];
-        // group by size (A2 artifacts are per-N too)
-        let mut by_n: Vec<(usize, Vec<usize>)> = vec![];
-        for (i, ep) in episodes.iter().enumerate() {
-            match by_n.iter_mut().find(|(n, _)| *n == ep.n()) {
-                Some((_, v)) => v.push(i),
-                None => by_n.push((ep.n(), vec![i])),
-            }
-        }
-        for (n, idx) in by_n {
-            let group: Vec<Episode> = idx.iter().map(|&i| episodes[i].clone()).collect();
-            let counts = if n == 1 {
-                let freq = stream.type_counts();
-                group.iter().map(|e| freq[e.types[0] as usize]).collect()
-            } else if self.rt.supports_n(n) {
-                crate::runtime::exec::count_a2(&self.rt, &group, stream)?
-            } else {
-                self.metrics.cpu_fallbacks += 1;
-                group.iter().map(|e| serial::count_a2(e, stream)).collect()
-            };
-            for (&i, c) in idx.iter().zip(counts) {
-                out[i] = c;
-            }
-        }
-        Ok(out)
-    }
-}
+pub use crate::backend::two_pass::TwoPassOutcome;

@@ -8,11 +8,73 @@
 //!   bursts whose rate and size grow with culture age, plus synfire
 //!   chains that strengthen day over day. See DESIGN.md §5 for why this
 //!   substitution preserves what the experiments exercise.
+//!
+//! The [`REGISTRY`] is the single source of truth for dataset names and
+//! their default physiological delay bands — the CLI, the `Session`
+//! builder and the examples all resolve defaults through it instead of
+//! string-matching dataset names locally.
 
-pub mod sym26;
 pub mod culture;
+pub mod sym26;
 
-use crate::events::EventStream;
+use crate::episodes::Interval;
+use crate::events::{EventStream, Tick};
+
+/// A registered dataset: its canonical name and mining defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetInfo {
+    pub name: &'static str,
+    /// dataset-appropriate default inter-event constraint `(t_low, t_high]`
+    /// in ticks — the physiological delay band the generator embeds its
+    /// chains with (kept in sync with `Sym26Config` / `CultureConfig`).
+    pub default_interval: (Tick, Tick),
+    pub description: &'static str,
+}
+
+impl DatasetInfo {
+    pub fn default_interval(&self) -> Interval {
+        Interval::new(self.default_interval.0, self.default_interval.1)
+    }
+}
+
+/// Every dataset the CLI, examples and benches can name.
+pub const REGISTRY: &[DatasetInfo] = &[
+    DatasetInfo {
+        name: "sym26",
+        default_interval: (5, 15),
+        description: "paper §6.1.1 synthetic model: 26 Poisson neurons + 2 causal chains",
+    },
+    DatasetInfo {
+        name: "2-1-33",
+        default_interval: (2, 10),
+        description: "developing-culture analog, day-in-vitro 33",
+    },
+    DatasetInfo {
+        name: "2-1-34",
+        default_interval: (2, 10),
+        description: "developing-culture analog, day-in-vitro 34",
+    },
+    DatasetInfo {
+        name: "2-1-35",
+        default_interval: (2, 10),
+        description: "developing-culture analog, day-in-vitro 35",
+    },
+];
+
+/// Registry entry for a dataset name.
+pub fn info(name: &str) -> Option<&'static DatasetInfo> {
+    REGISTRY.iter().find(|d| d.name == name)
+}
+
+/// All registered dataset names, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|d| d.name).collect()
+}
+
+/// The dataset's default inter-event constraint, if the name is known.
+pub fn default_interval(name: &str) -> Option<Interval> {
+    info(name).map(|d| d.default_interval())
+}
 
 /// Named dataset selector used by the CLI, examples and benches.
 pub fn by_name(name: &str, seed: u64) -> Option<(EventStream, &'static str)> {
@@ -22,5 +84,26 @@ pub fn by_name(name: &str, seed: u64) -> Option<(EventStream, &'static str)> {
         "2-1-34" => Some((culture::generate(&culture::CultureConfig::day(34), seed), "2-1-34")),
         "2-1-35" => Some((culture::generate(&culture::CultureConfig::day(35), seed), "2-1-35")),
         _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_generatable_dataset() {
+        for d in REGISTRY {
+            assert!(by_name(d.name, 1).is_some(), "{} not generatable", d.name);
+        }
+    }
+
+    #[test]
+    fn default_intervals_match_generator_configs() {
+        let s = sym26::Sym26Config::default();
+        assert_eq!(default_interval("sym26"), Some(Interval::new(s.d_low, s.d_high)));
+        let c = culture::CultureConfig::day(35);
+        assert_eq!(default_interval("2-1-35"), Some(Interval::new(c.d_low, c.d_high)));
+        assert_eq!(default_interval("unknown"), None);
     }
 }

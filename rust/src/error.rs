@@ -1,0 +1,126 @@
+//! Typed error surface for the library crate.
+//!
+//! Every public library entry point returns `Result<_, MineError>`; binaries
+//! and benches may wrap it however they like at the edge. Variants are
+//! designed to be *actionable*: they carry the numbers and valid choices a
+//! caller needs to correct the problem, not just a message.
+
+use std::fmt;
+
+/// Library-wide error type.
+#[derive(Debug)]
+pub enum MineError {
+    /// A backend was asked to count an episode size it has no path for.
+    /// (The shipped backends fall back to CPU counting instead of raising
+    /// this; it surfaces only from direct low-level `runtime::exec` use.)
+    UnsupportedEpisodeSize { backend: String, n: usize },
+    /// A mining level generated more candidates than the configured cap —
+    /// the fail-fast guardrail against a too-low theta on bursty data.
+    CandidateExplosion { level: usize, candidates: usize, cap: usize },
+    /// The PJRT runtime (artifacts + client) could not be opened. CPU
+    /// backends remain fully functional without it.
+    RuntimeUnavailable { reason: String },
+    /// A `Session` was configured inconsistently (missing stream, zero
+    /// theta, bad max_level, ...).
+    InvalidConfig { what: String },
+    /// An unrecognized strategy name; `valid` lists every accepted name.
+    UnknownStrategy { given: String, valid: &'static [&'static str] },
+    /// An unrecognized dataset name; `valid` lists the registry.
+    UnknownDataset { given: String, valid: Vec<&'static str> },
+    /// An I/O failure, with what was being attempted.
+    Io { what: String, source: std::io::Error },
+    /// The accelerator path failed mid-execution (compile/execute/readback).
+    Accelerator { what: String },
+    /// An internal contract violation (a bug, not a user error).
+    Internal { what: String },
+}
+
+impl MineError {
+    pub fn invalid(what: impl Into<String>) -> MineError {
+        MineError::InvalidConfig { what: what.into() }
+    }
+
+    pub fn runtime_unavailable(reason: impl Into<String>) -> MineError {
+        MineError::RuntimeUnavailable { reason: reason.into() }
+    }
+
+    pub fn accel(what: impl Into<String>) -> MineError {
+        MineError::Accelerator { what: what.into() }
+    }
+
+    pub fn internal(what: impl Into<String>) -> MineError {
+        MineError::Internal { what: what.into() }
+    }
+
+    pub fn io(what: impl Into<String>, source: std::io::Error) -> MineError {
+        MineError::Io { what: what.into(), source }
+    }
+}
+
+impl fmt::Display for MineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MineError::UnsupportedEpisodeSize { backend, n } => {
+                write!(f, "backend {backend} has no counting path for episode size {n}")
+            }
+            MineError::CandidateExplosion { level, candidates, cap } => write!(
+                f,
+                "level {level} generated {candidates} candidates (> {cap} cap) — raise \
+                 theta or max_candidates_per_level"
+            ),
+            MineError::RuntimeUnavailable { reason } => {
+                write!(f, "PJRT runtime unavailable: {reason}")
+            }
+            MineError::InvalidConfig { what } => write!(f, "invalid configuration: {what}"),
+            MineError::UnknownStrategy { given, valid } => {
+                write!(f, "unknown strategy {given:?}; valid strategies: {}", valid.join(", "))
+            }
+            MineError::UnknownDataset { given, valid } => {
+                write!(f, "unknown dataset {given:?}; valid datasets: {}", valid.join(", "))
+            }
+            MineError::Io { what, source } => write!(f, "{what}: {source}"),
+            MineError::Accelerator { what } => write!(f, "accelerator error: {what}"),
+            MineError::Internal { what } => write!(f, "internal error: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for MineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MineError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for MineError {
+    fn from(e: xla::Error) -> MineError {
+        MineError::Accelerator { what: e.to_string() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = MineError::CandidateExplosion { level: 3, candidates: 10, cap: 5 };
+        let s = e.to_string();
+        assert!(s.contains("level 3") && s.contains("theta"), "{s}");
+
+        let e = MineError::UnknownStrategy { given: "warp".into(), valid: &["hybrid", "cpu"] };
+        assert!(e.to_string().contains("hybrid"));
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        use std::error::Error as _;
+        let e = MineError::io(
+            "reading x",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.source().is_some());
+    }
+}

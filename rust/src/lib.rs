@@ -2,7 +2,38 @@
 //! reproduction of *"Towards Chip-on-Chip Neuroscience: Fast Mining of
 //! Frequent Episodes Using Graphics Processors"* (Cao et al., 2009).
 //!
-//! - [`events`] / [`datasets`] — spike-train data model and generators.
+//! # Entry points
+//!
+//! The library's front door is the [`Session`] facade over the pluggable
+//! [`CountBackend`] counting engines — the abstraction that carries the
+//! paper's CPU/GPU division of labor (candidate generation on the host,
+//! counting on whatever substrate the backend wraps):
+//!
+//! ```no_run
+//! use episodes_gpu::Session;
+//!
+//! let mut session = Session::builder()
+//!     .dataset("sym26")      // or .stream(my_event_stream)
+//!     .theta(60)             // support threshold
+//!     .max_level(8)
+//!     .build()?;             // accelerated Hybrid if PJRT opens, CPU otherwise
+//! let result = session.mine()?;
+//! println!("{} frequent episodes ({})", result.frequent.len(), session.backend_name());
+//! # Ok::<(), episodes_gpu::MineError>(())
+//! ```
+//!
+//! Engines compose rather than enumerate: two-pass A2+A1 elimination is
+//! [`backend::two_pass::TwoPassBackend`] wrapping any exact engine, and
+//! Hybrid dispatch is [`backend::accel::HybridBackend`] wrapping any two.
+//! Custom engines (multi-GPU, sharded pools, mocks for tests) implement
+//! [`CountBackend`] and plug into [`SessionBuilder::backend`] — no PJRT
+//! runtime required. Every public library function returns
+//! [`MineError`], a typed, actionable error enum.
+//!
+//! # Layers
+//!
+//! - [`events`] / [`datasets`] — spike-train data model, generators, and
+//!   the dataset registry (names + default delay bands).
 //! - [`episodes`] — serial episodes with inter-event constraints and
 //!   level-wise candidate generation.
 //! - [`mining`] — CPU reference algorithms (Algorithm 1, Algorithm 3, the
@@ -10,19 +41,30 @@
 //! - [`gpu_model`] — analytical GTX280 model (occupancy, crossover fits,
 //!   Fig. 10 counters).
 //! - [`runtime`] — PJRT loading/execution of the AOT-compiled Pallas
-//!   counting kernels (`artifacts/*.hlo.txt`).
-//! - [`coordinator`] — the paper's system contribution: PTPE /
-//!   MapConcatenate / Hybrid dispatch, the two-pass A2+A1 elimination
-//!   pipeline, the level-wise miner, and the streaming ("chip-on-chip")
-//!   driver.
+//!   counting kernels (`artifacts/*.hlo.txt`). Absence is a runtime
+//!   condition ([`MineError::RuntimeUnavailable`]), never a build break.
+//! - [`backend`] — the counting engines: CPU serial/parallel, PTPE,
+//!   MapConcatenate, Hybrid composition, two-pass elimination.
+//! - [`session`] — the [`Session`] facade, its builder, and the level-wise
+//!   mining driver.
+//! - [`coordinator`] — strategy name menu, run metrics, the streaming
+//!   partition producer, and the deprecated pre-0.2 `Coordinator` shims.
 //! - [`util`] — RNG, stats, CLI, bench and property-test harnesses.
 
 pub mod analysis;
+pub mod backend;
 pub mod coordinator;
 pub mod datasets;
 pub mod episodes;
+pub mod error;
 pub mod events;
 pub mod gpu_model;
 pub mod mining;
 pub mod runtime;
+pub mod session;
 pub mod util;
+
+pub use backend::{CountBackend, CountReport};
+pub use coordinator::Strategy;
+pub use error::MineError;
+pub use session::{Session, SessionBuilder};

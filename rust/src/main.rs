@@ -10,24 +10,26 @@
 //!   epminer mine --dataset sym26 --theta 60 --mode two-pass
 //!   epminer gen --dataset 2-1-35 --out /tmp/d35.bin
 //!   epminer info
+//!
+//! Everything mining-shaped runs through the `Session` facade; `--strategy`
+//! picks a counting backend by name and falls back per `Session` defaults
+//! when the PJRT runtime/artifacts are absent.
 
-use anyhow::{bail, Context, Result};
-
-use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
-use episodes_gpu::coordinator::{Coordinator, Strategy};
+use episodes_gpu::coordinator::Strategy;
 use episodes_gpu::datasets;
 use episodes_gpu::episodes::{Episode, Interval};
 use episodes_gpu::events::io;
 use episodes_gpu::util::cli::Args;
+use episodes_gpu::{MineError, Session, SessionBuilder};
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-fn run() -> Result<()> {
+fn run() -> Result<(), MineError> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("mine") => cmd_mine(&args),
@@ -41,36 +43,70 @@ fn run() -> Result<()> {
             eprintln!(
                 "usage: epminer <mine|count|gen|reconstruct|raster|profile|info> [options]\n\
                  \n\
-                 mine        --dataset <sym26|2-1-33|2-1-34|2-1-35> --theta <u64>\n\
-                 \x20            [--mode two-pass|one-pass] [--strategy ptpe|mapconcat|hybrid|cpu|cpu-parallel]\n\
+                 mine        --dataset <{names}> --theta <u64>\n\
+                 \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
                  \x20            [--max-level <n>] [--seed <u64>]\n\
                  count       --dataset <name> --episode 0,1,2 --low 5 --high 15 [--seed <u64>]\n\
                  gen         --dataset <name> --out <path> [--format bin|csv] [--seed <u64>]\n\
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
                  raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
                  profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
-                 info"
+                 info",
+                names = datasets::names().join("|"),
+                strategies = Strategy::NAMES.join("|"),
             );
             std::process::exit(2);
         }
     }
 }
 
-fn load_dataset(args: &Args) -> Result<(episodes_gpu::events::EventStream, String)> {
+fn load_dataset(args: &Args) -> Result<(episodes_gpu::events::EventStream, String), MineError> {
     let name = args.get_or("dataset", "sym26").to_string();
     let seed = args.get_u64("seed", 7);
-    let (stream, tag) =
-        datasets::by_name(&name, seed).with_context(|| format!("unknown dataset {name}"))?;
-    Ok((stream, tag.to_string()))
+    match datasets::by_name(&name, seed) {
+        Some((stream, tag)) => Ok((stream, tag.to_string())),
+        None => Err(MineError::UnknownDataset { given: name, valid: datasets::names() }),
+    }
 }
 
-fn interval_from(args: &Args, stream_name: &str) -> Interval {
-    // dataset-appropriate default physiological delay band
-    let (dl, dh) = if stream_name == "sym26" { (5, 15) } else { (2, 10) };
-    Interval::new(args.get_i32("low", dl), args.get_i32("high", dh))
+/// Default delay band for a dataset comes from the registry; `--low` /
+/// `--high` override it.
+fn interval_from(args: &Args, dataset: &str) -> Interval {
+    let d = datasets::default_interval(dataset).unwrap_or_else(|| Interval::new(2, 10));
+    Interval::new(args.get_i32("low", d.t_low), args.get_i32("high", d.t_high))
 }
 
-fn cmd_mine(args: &Args) -> Result<()> {
+/// Shared `Session` setup for the mining-shaped subcommands.
+fn session_builder(
+    args: &Args,
+    stream: episodes_gpu::events::EventStream,
+    dataset: &str,
+    theta: u64,
+) -> Result<SessionBuilder, MineError> {
+    let mut b = Session::builder()
+        .stream(stream)
+        .theta(theta)
+        .interval(interval_from(args, dataset))
+        .max_level(args.get_usize("max-level", 8));
+    match args.get_or("mode", "two-pass") {
+        "two-pass" => {}
+        "one-pass" => b = b.one_pass(),
+        other => {
+            return Err(MineError::invalid(format!(
+                "bad --mode {other} (expected two-pass or one-pass)"
+            )))
+        }
+    }
+    // An explicit --strategy pins the backend (and fails hard if it needs
+    // an absent runtime); otherwise the Session default applies —
+    // accelerated Hybrid when the runtime opens, CPU-parallel fallback.
+    if let Some(s) = args.get("strategy") {
+        b = b.strategy(Strategy::parse(s)?);
+    }
+    Ok(b)
+}
+
+fn cmd_mine(args: &Args) -> Result<(), MineError> {
     let (stream, name) = load_dataset(args)?;
     println!(
         "dataset {name}: {} events, {} types, {:.1}s span, {:.0} Hz mean",
@@ -80,24 +116,11 @@ fn cmd_mine(args: &Args) -> Result<()> {
         stream.mean_rate_hz()
     );
     let theta = args.get_u64("theta", 100);
-    let iv = interval_from(args, &name);
-    let mode = match args.get_or("mode", "two-pass") {
-        "two-pass" => CountMode::TwoPass,
-        "one-pass" => {
-            let strategy = Strategy::parse(args.get_or("strategy", "hybrid"))
-                .context("bad --strategy")?;
-            CountMode::OnePass(strategy)
-        }
-        other => bail!("bad --mode {other}"),
-    };
-    let mut cfg = MineConfig::new(theta, vec![iv]);
-    cfg.mode = mode;
-    cfg.max_level = args.get_usize("max-level", 8);
+    let mut session = session_builder(args, stream, &name, theta)?.build()?;
+    println!("backend: {}", session.backend_name());
 
-    let mut coord = Coordinator::open_default()?;
-    println!("runtime: platform={}", coord.rt.platform());
     let t0 = std::time::Instant::now();
-    let result = coord.mine(&stream, &cfg)?;
+    let result = session.mine()?;
     println!("\nlevel  candidates  frequent  a2-culled  count-time");
     for l in &result.levels {
         println!(
@@ -105,7 +128,11 @@ fn cmd_mine(args: &Args) -> Result<()> {
             l.level, l.candidates, l.frequent, l.culled_by_a2, l.count_seconds
         );
     }
-    println!("\ntotal {:.3}s; metrics: {}", t0.elapsed().as_secs_f64(), coord.metrics.report());
+    println!(
+        "\ntotal {:.3}s; metrics: {}",
+        t0.elapsed().as_secs_f64(),
+        session.metrics().report()
+    );
     let mut top: Vec<_> = result.frequent.iter().filter(|c| c.episode.n() >= 2).collect();
     top.sort_by_key(|c| std::cmp::Reverse((c.episode.n(), c.count)));
     println!("\ntop frequent episodes:");
@@ -115,46 +142,55 @@ fn cmd_mine(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_count(args: &Args) -> Result<()> {
+fn cmd_count(args: &Args) -> Result<(), MineError> {
     let (stream, name) = load_dataset(args)?;
-    let ep_spec = args.get("episode").context("--episode 0,1,2 required")?;
+    let ep_spec = args
+        .get("episode")
+        .ok_or_else(|| MineError::invalid("--episode 0,1,2 required"))?;
     let types: Vec<i32> = ep_spec
         .split(',')
-        .map(|s| s.trim().parse::<i32>().context("bad --episode"))
-        .collect::<Result<_>>()?;
+        .map(|s| {
+            s.trim()
+                .parse::<i32>()
+                .map_err(|_| MineError::invalid(format!("bad --episode element {s:?}")))
+        })
+        .collect::<Result<_, _>>()?;
     let iv = interval_from(args, &name);
-    let ep = Episode::new(types.clone(), vec![iv; types.len() - 1]);
-    let strategy = Strategy::parse(args.get_or("strategy", "hybrid")).context("bad --strategy")?;
+    let n_nodes = types.len();
+    let ep = Episode::new(types, vec![iv; n_nodes - 1]);
 
-    let mut coord = Coordinator::open_default()?;
-    let counts = coord.count(std::slice::from_ref(&ep), &stream, strategy)?;
+    let mut b = Session::builder().stream(stream).theta(1).interval(iv).one_pass();
+    if let Some(s) = args.get("strategy") {
+        b = b.strategy(Strategy::parse(s)?);
+    }
+    let mut session = b.build()?;
+    let counts = session.count(std::slice::from_ref(&ep))?;
     println!("{} -> {}", ep.display(), counts[0]);
     Ok(())
 }
 
-fn cmd_gen(args: &Args) -> Result<()> {
+fn cmd_gen(args: &Args) -> Result<(), MineError> {
     let (stream, name) = load_dataset(args)?;
-    let out = args.get("out").context("--out required")?;
+    let out = args.get("out").ok_or_else(|| MineError::invalid("--out required"))?;
     let path = std::path::Path::new(out);
     match args.get_or("format", "bin") {
-        "bin" => io::write_binary(&stream, path)?,
-        "csv" => io::write_csv(&stream, path)?,
-        other => bail!("bad --format {other}"),
+        "bin" => io::write_binary(&stream, path)
+            .map_err(|e| MineError::io(format!("writing {out}"), e))?,
+        "csv" => io::write_csv(&stream, path)
+            .map_err(|e| MineError::io(format!("writing {out}"), e))?,
+        other => return Err(MineError::invalid(format!("bad --format {other} (bin|csv)"))),
     }
     println!("wrote {name} ({} events) to {out}", stream.len());
     Ok(())
 }
 
-fn cmd_reconstruct(args: &Args) -> Result<()> {
+fn cmd_reconstruct(args: &Args) -> Result<(), MineError> {
     use episodes_gpu::analysis::connectivity::Circuit;
     use episodes_gpu::analysis::summarize::maximal_episodes;
     let (stream, name) = load_dataset(args)?;
     let theta = args.get_u64("theta", 60);
-    let iv = interval_from(args, &name);
-    let mut cfg = MineConfig::new(theta, vec![iv]);
-    cfg.max_level = args.get_usize("max-level", 8);
-    let mut coord = Coordinator::open_default()?;
-    let result = coord.mine(&stream, &cfg)?;
+    let mut session = session_builder(args, stream, &name, theta)?.build()?;
+    let result = session.mine()?;
 
     let maximal = maximal_episodes(&result.frequent, 0.5);
     println!("frequent episodes: {} ({} maximal)", result.frequent.len(), maximal.len());
@@ -168,16 +204,20 @@ fn cmd_reconstruct(args: &Args) -> Result<()> {
     let circuit = Circuit::reconstruct(&deep).thresholded(theta);
     println!("\nreconstructed functional edges ({}):", circuit.edges.len());
     for e in circuit.edges.iter().take(20) {
-        println!("  {} -> {}  [support {}, delay ({},{}]]", e.from, e.to, e.support, e.t_low, e.t_high);
+        println!(
+            "  {} -> {}  [support {}, delay ({},{}]]",
+            e.from, e.to, e.support, e.t_low, e.t_high
+        );
     }
     if let Some(path) = args.get("dot") {
-        std::fs::write(path, circuit.to_dot())?;
+        std::fs::write(path, circuit.to_dot())
+            .map_err(|e| MineError::io(format!("writing {path}"), e))?;
         println!("\nwrote graphviz to {path}");
     }
     Ok(())
 }
 
-fn cmd_raster(args: &Args) -> Result<()> {
+fn cmd_raster(args: &Args) -> Result<(), MineError> {
     use episodes_gpu::analysis::raster;
     let (stream, name) = load_dataset(args)?;
     let from = args.get_i32("from", stream.t_begin());
@@ -186,13 +226,14 @@ fn cmd_raster(args: &Args) -> Result<()> {
         let types: Vec<i32> =
             spec.split(',').map(|s| s.trim().parse().unwrap()).collect();
         let iv = interval_from(args, &name);
-        Episode::new(types.clone(), vec![iv; types.len() - 1])
+        let n_nodes = types.len();
+        Episode::new(types, vec![iv; n_nodes - 1])
     });
     print!("{}", raster::render(&stream, from, to, 100, 30, ep.as_ref()));
     Ok(())
 }
 
-fn cmd_profile(args: &Args) -> Result<()> {
+fn cmd_profile(args: &Args) -> Result<(), MineError> {
     use episodes_gpu::mining::telemetry::{profile_a1, profile_a2};
     use episodes_gpu::util::rng::Rng;
     let (stream, name) = load_dataset(args)?;
@@ -217,12 +258,18 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info() -> Result<(), MineError> {
     let dir = episodes_gpu::runtime::Runtime::default_dir();
     println!("artifact dir: {dir:?}");
-    let rt = episodes_gpu::runtime::Runtime::new(&dir)?;
-    println!("platform: {}", rt.platform());
-    let m = rt.manifest();
-    println!("manifest: {m:?}");
+    match episodes_gpu::runtime::Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            println!("manifest: {:?}", rt.manifest());
+        }
+        Err(e) => {
+            println!("runtime: unavailable ({e})");
+            println!("mining still works on the CPU backends (cpu, cpu-parallel).");
+        }
+    }
     Ok(())
 }

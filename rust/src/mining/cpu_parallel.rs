@@ -24,6 +24,16 @@ pub fn count_all_parallel(
     stream: &EventStream,
     n_threads: usize,
 ) -> Vec<u64> {
+    scatter_parallel(episodes, n_threads, |eps| count_subset(eps, stream))
+}
+
+/// The worker-split shell shared by the parallel counting paths: chunk the
+/// episodes across `n_threads` scoped workers, run `per_chunk` on each
+/// subset, and scatter results back into episode order.
+pub fn scatter_parallel<F>(episodes: &[Episode], n_threads: usize, per_chunk: F) -> Vec<u64>
+where
+    F: Fn(&[Episode]) -> Vec<u64> + Sync,
+{
     assert!(n_threads > 0);
     let mut counts = vec![0u64; episodes.len()];
     let chunk = episodes.len().div_ceil(n_threads);
@@ -31,9 +41,10 @@ pub fn count_all_parallel(
         return counts;
     }
     std::thread::scope(|scope| {
+        let per_chunk = &per_chunk;
         let mut handles = vec![];
         for (ti, eps) in episodes.chunks(chunk).enumerate() {
-            let handle = scope.spawn(move || (ti, count_subset(eps, stream)));
+            let handle = scope.spawn(move || (ti, per_chunk(eps)));
             handles.push(handle);
         }
         for h in handles {

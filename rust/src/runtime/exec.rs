@@ -8,20 +8,27 @@
 //! and the `(s, cnt)` automaton state returned by chunk i is fed as input
 //! to chunk i+1 — making the fixed-shape executable a streaming machine.
 
-use anyhow::{bail, ensure, Result};
-
 use super::{lit_i32, vec_i32, Runtime};
 use crate::episodes::Episode;
+use crate::error::MineError;
 use crate::events::{EventStream, Tick};
 
 /// Counts for a uniform-size episode batch via the A1 (exact) artifacts.
-pub fn count_a1(rt: &Runtime, episodes: &[Episode], stream: &EventStream) -> Result<Vec<u64>> {
+pub fn count_a1(
+    rt: &Runtime,
+    episodes: &[Episode],
+    stream: &EventStream,
+) -> Result<Vec<u64>, MineError> {
     count_batched(rt, episodes, stream, Algo::A1)
 }
 
 /// Counts via the A2 (relaxed) artifacts. Episodes are interpreted as
 /// their relaxed counterparts α′ (only `t_high` is sent to the kernel).
-pub fn count_a2(rt: &Runtime, episodes: &[Episode], stream: &EventStream) -> Result<Vec<u64>> {
+pub fn count_a2(
+    rt: &Runtime,
+    episodes: &[Episode],
+    stream: &EventStream,
+) -> Result<Vec<u64>, MineError> {
     count_batched(rt, episodes, stream, Algo::A2)
 }
 
@@ -36,19 +43,23 @@ fn count_batched(
     episodes: &[Episode],
     stream: &EventStream,
     algo: Algo,
-) -> Result<Vec<u64>> {
+) -> Result<Vec<u64>, MineError> {
     if episodes.is_empty() {
         return Ok(vec![]);
     }
     let n = episodes[0].n();
-    ensure!(episodes.iter().all(|e| e.n() == n), "mixed episode sizes in batch");
-    ensure!(rt.supports_n(n), "no artifact for episode size {n}");
-    let mf = *rt.manifest();
-    let (m, c, k) = (mf.m_episodes, mf.c_chunk, mf.k_slots);
+    if !episodes.iter().all(|e| e.n() == n) {
+        return Err(MineError::internal("mixed episode sizes in batch"));
+    }
     let name = match algo {
         Algo::A1 => format!("a1_n{n}"),
         Algo::A2 => format!("a2_n{n}"),
     };
+    if !rt.supports_n(n) {
+        return Err(MineError::UnsupportedEpisodeSize { backend: format!("pjrt:{name}"), n });
+    }
+    let mf = *rt.manifest();
+    let (m, c, k) = (mf.m_episodes, mf.c_chunk, mf.k_slots);
     let exe = rt.executable(&name)?;
 
     let mut counts = Vec::with_capacity(episodes.len());
@@ -103,7 +114,12 @@ fn count_batched(
             };
             let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
             let mut parts = result.to_tuple()?;
-            ensure!(parts.len() == 2, "expected (s, cnt) tuple, got {}", parts.len());
+            if parts.len() != 2 {
+                return Err(MineError::accel(format!(
+                    "expected (s, cnt) tuple from {name}, got {} parts",
+                    parts.len()
+                )));
+            }
             cnt_l = parts.pop().unwrap();
             s_l = parts.pop().unwrap();
         }
@@ -122,24 +138,37 @@ pub fn mapcat_map(
     episodes: &[Episode],
     stream: &EventStream,
     taus: &[Tick],
-) -> Result<Vec<Vec<Vec<(Tick, u64, Tick)>>>> {
+) -> Result<Vec<Vec<Vec<(Tick, u64, Tick)>>>, MineError> {
     if episodes.is_empty() {
         return Ok(vec![]);
     }
     let n = episodes[0].n();
-    ensure!(episodes.iter().all(|e| e.n() == n), "mixed episode sizes in batch");
-    ensure!(n >= 2, "MapConcatenate needs n >= 2");
-    ensure!(rt.supports_n(n), "no artifact for episode size {n}");
+    if !episodes.iter().all(|e| e.n() == n) {
+        return Err(MineError::internal("mixed episode sizes in batch"));
+    }
+    if n < 2 {
+        return Err(MineError::internal("MapConcatenate needs n >= 2"));
+    }
+    if !rt.supports_n(n) {
+        return Err(MineError::UnsupportedEpisodeSize {
+            backend: format!("pjrt:mapcat_n{n}"),
+            n,
+        });
+    }
     let mf = *rt.manifest();
     let (e_cap, p, c) = (mf.mc_episodes, mf.mc_segments, mf.mc_chunk);
-    ensure!(
-        taus.len() == p + 1,
-        "need exactly {} segment boundaries, got {}",
-        p + 1,
-        taus.len()
-    );
+    if taus.len() != p + 1 {
+        return Err(MineError::internal(format!(
+            "need exactly {} segment boundaries, got {}",
+            p + 1,
+            taus.len()
+        )));
+    }
     if stream.len() > c {
-        bail!("stream ({} events) exceeds MapConcatenate chunk {c}", stream.len());
+        return Err(MineError::internal(format!(
+            "stream ({} events) exceeds MapConcatenate chunk {c}",
+            stream.len()
+        )));
     }
     let exe = rt.executable(&format!("mapcat_n{n}"))?;
 
@@ -177,7 +206,9 @@ pub fn mapcat_map(
         let inputs = [&types_l, &tlow_l, &thigh_l, &ev_l, &tm_l, &taus_l, &seglo_l];
         let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
         let parts = result.to_tuple()?;
-        ensure!(parts.len() == 3, "expected (a, cnt, b) tuple");
+        if parts.len() != 3 {
+            return Err(MineError::accel("expected (a, cnt, b) tuple from mapcat"));
+        }
         let a = vec_i32(&parts[0])?;
         let cnt = vec_i32(&parts[1])?;
         let b = vec_i32(&parts[2])?;

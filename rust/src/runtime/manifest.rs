@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::MineError;
 
 /// Constants baked into the AOT artifacts (see `python/compile/model.py`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,13 +35,16 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(path: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+    pub fn load(path: &Path) -> Result<Manifest, MineError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            MineError::runtime_unavailable(format!(
+                "reading manifest {path:?}: {e} (run `make artifacts`)"
+            ))
+        })?;
         Self::parse(&text)
     }
 
-    pub fn parse(text: &str) -> Result<Manifest> {
+    pub fn parse(text: &str) -> Result<Manifest, MineError> {
         let mut kv = HashMap::new();
         for line in text.lines() {
             let line = line.trim();
@@ -49,15 +52,21 @@ impl Manifest {
                 continue;
             }
             let Some((k, v)) = line.split_once('=') else {
-                bail!("malformed manifest line: {line:?}");
+                return Err(MineError::runtime_unavailable(format!(
+                    "malformed manifest line: {line:?}"
+                )));
             };
             kv.insert(k.trim().to_string(), v.trim().to_string());
         }
-        let get = |k: &str| -> Result<i64> {
+        let get = |k: &str| -> Result<i64, MineError> {
             kv.get(k)
-                .with_context(|| format!("manifest missing key {k}"))?
+                .ok_or_else(|| {
+                    MineError::runtime_unavailable(format!("manifest missing key {k}"))
+                })?
                 .parse::<i64>()
-                .with_context(|| format!("manifest key {k} not an integer"))
+                .map_err(|_| {
+                    MineError::runtime_unavailable(format!("manifest key {k} not an integer"))
+                })
         };
         Ok(Manifest {
             m_episodes: get("m_episodes")? as usize,

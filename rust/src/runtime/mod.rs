@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+use crate::error::MineError;
 
 pub use manifest::Manifest;
 
@@ -36,9 +36,11 @@ pub struct Runtime {
 impl Runtime {
     /// Open the artifact directory (default: `artifacts/` next to the
     /// workspace root, override with env `EPISODES_GPU_ARTIFACTS`).
-    pub fn new(dir: &Path) -> Result<Runtime> {
+    pub fn new(dir: &Path) -> Result<Runtime, MineError> {
         let manifest = Manifest::load(&dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| {
+            MineError::runtime_unavailable(format!("creating PJRT CPU client: {e}"))
+        })?;
         Ok(Runtime {
             client,
             dir: dir.to_path_buf(),
@@ -66,7 +68,7 @@ impl Runtime {
         }
     }
 
-    pub fn open_default() -> Result<Runtime> {
+    pub fn open_default() -> Result<Runtime, MineError> {
         Self::new(&Self::default_dir())
     }
 
@@ -80,22 +82,24 @@ impl Runtime {
 
     /// Fetch (compiling on first use) the executable for `name`
     /// (e.g. `a1_n3`).
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, MineError> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
         let path = self.dir.join(format!("{name}.hlo.txt"));
         if !path.exists() {
-            bail!("artifact {path:?} missing — run `make artifacts`");
+            return Err(MineError::runtime_unavailable(format!(
+                "artifact {path:?} missing — run `make artifacts`"
+            )));
         }
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {path:?}"))?;
+            .map_err(|e| MineError::accel(format!("parsing {path:?}: {e}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
+            .map_err(|e| MineError::accel(format!("compiling {name}: {e}")))?;
         let exe = Rc::new(exe);
         self.compile_ns
             .borrow_mut()
@@ -119,16 +123,19 @@ impl Runtime {
 }
 
 /// Build an int32 literal of the given shape from a flat slice.
-pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal, MineError> {
     let expected: i64 = dims.iter().product();
     if expected != data.len() as i64 {
-        bail!("shape {dims:?} wants {expected} elements, got {}", data.len());
+        return Err(MineError::internal(format!(
+            "shape {dims:?} wants {expected} elements, got {}",
+            data.len()
+        )));
     }
     let lit = xla::Literal::vec1(data);
     Ok(lit.reshape(dims)?)
 }
 
 /// Extract a Vec<i32> from an int32 literal.
-pub fn vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+pub fn vec_i32(lit: &xla::Literal) -> Result<Vec<i32>, MineError> {
     Ok(lit.to_vec::<i32>()?)
 }

@@ -1,0 +1,538 @@
+//! The `Session` facade: the library's front door.
+//!
+//! A session owns an event stream, a mining configuration, and a counting
+//! engine ([`CountBackend`]), built through a fluent builder:
+//!
+//! ```no_run
+//! use episodes_gpu::Session;
+//! use episodes_gpu::episodes::Interval;
+//!
+//! let mut session = Session::builder()
+//!     .dataset("sym26")
+//!     .theta(60)
+//!     .intervals(vec![Interval::new(5, 15)])
+//!     .max_level(8)
+//!     .build()?;
+//! let result = session.mine()?;
+//! for c in result.frequent_of_size(3) {
+//!     println!("[{}] {}", c.count, c.episode.display());
+//! }
+//! # Ok::<(), episodes_gpu::MineError>(())
+//! ```
+//!
+//! By default the session counts two-pass (A2 elimination + exact pass) on
+//! the accelerated Hybrid engine when the PJRT runtime opens, falling back
+//! to the multithreaded CPU baseline otherwise — mining never requires an
+//! accelerator. Callers can pin a [`Strategy`] by name, disable the
+//! elimination pass with [`SessionBuilder::one_pass`], or inject any
+//! custom [`CountBackend`] (including mocks — no runtime needed).
+
+use std::rc::Rc;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use crate::backend::two_pass::TwoPassBackend;
+use crate::backend::{self, CountBackend};
+use crate::coordinator::miner::{LevelReport, MineResult};
+use crate::coordinator::streaming::{Partition, PartitionReport};
+use crate::coordinator::{Metrics, Strategy};
+use crate::datasets;
+use crate::episodes::{candidates, CountedEpisode, Episode, Interval};
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::runtime::Runtime;
+
+/// Mining parameters shared by [`Session`] and the low-level
+/// [`mine_with_backend`] driver.
+#[derive(Clone, Debug)]
+pub struct MineOptions {
+    /// support threshold theta (non-overlapped occurrence count)
+    pub theta: u64,
+    /// the inter-event constraint set I (paper Problem 1)
+    pub intervals: Vec<Interval>,
+    /// stop after this episode size (the paper mines to ~7-8)
+    pub max_level: usize,
+    /// guardrail: abort a level whose candidate set exceeds this (a
+    /// too-low theta on bursty data grows the lattice combinatorially;
+    /// production systems must fail fast, not OOM)
+    pub max_candidates_per_level: usize,
+}
+
+/// The level-wise mining loop (paper §5): candidate generation on the host
+/// alternating with counting on whatever engine `backend` is. This is the
+/// single implementation behind `Session::mine`, streaming partitions, and
+/// the deprecated `Coordinator::mine` shim.
+pub fn mine_with_backend(
+    backend: &mut dyn CountBackend,
+    stream: &EventStream,
+    opts: &MineOptions,
+    metrics: &mut Metrics,
+) -> Result<MineResult, MineError> {
+    let mut result = MineResult::default();
+    let mut frontier: Vec<Episode> = vec![];
+    for level in 1..=opts.max_level {
+        let t_gen = Instant::now();
+        let cands = if level == 1 {
+            candidates::level1(stream.n_types)
+        } else {
+            candidates::next_level(&frontier, &opts.intervals)
+        };
+        let gen_seconds = t_gen.elapsed().as_secs_f64();
+        if cands.is_empty() {
+            break;
+        }
+        if cands.len() > opts.max_candidates_per_level {
+            return Err(MineError::CandidateExplosion {
+                level,
+                candidates: cands.len(),
+                cap: opts.max_candidates_per_level,
+            });
+        }
+
+        let t_count = Instant::now();
+        let report = backend.count(&cands, stream)?;
+        metrics.merge(&report.metrics);
+        let count_seconds = t_count.elapsed().as_secs_f64();
+        let counts = report.counts;
+
+        frontier = cands
+            .iter()
+            .zip(&counts)
+            .filter(|(_, &c)| c >= opts.theta)
+            .map(|(e, _)| e.clone())
+            .collect();
+        result.levels.push(LevelReport {
+            level,
+            candidates: cands.len(),
+            frequent: frontier.len(),
+            culled_by_a2: report.culled,
+            count_seconds,
+            gen_seconds,
+        });
+        result.frequent.extend(
+            cands
+                .into_iter()
+                .zip(counts)
+                .filter(|(_, c)| *c >= opts.theta)
+                .map(|(episode, count)| CountedEpisode { episode, count }),
+        );
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    Ok(result)
+}
+
+/// A mining session: stream + options + counting engine + run metrics.
+pub struct Session {
+    backend: Box<dyn CountBackend>,
+    stream: EventStream,
+    opts: MineOptions,
+    metrics: Metrics,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Run the full level-wise mining loop over the session's stream.
+    pub fn mine(&mut self) -> Result<MineResult, MineError> {
+        mine_with_backend(&mut *self.backend, &self.stream, &self.opts, &mut self.metrics)
+    }
+
+    /// Count explicit episodes over the session's stream (sizes may mix).
+    ///
+    /// Counts carry the session backend's semantics: under the default
+    /// two-pass engine, episodes whose relaxed (A2) count falls below
+    /// theta report that sub-threshold upper bound rather than their
+    /// exact count (the `>= theta` decision is exact either way). Build
+    /// with [`SessionBuilder::one_pass`] when exact counts for infrequent
+    /// episodes matter — e.g. when migrating from the 0.1
+    /// `Coordinator::count`, which was always exact.
+    pub fn count(&mut self, episodes: &[Episode]) -> Result<Vec<u64>, MineError> {
+        let report = self.backend.count(episodes, &self.stream)?;
+        self.metrics.merge(&report.metrics);
+        Ok(report.counts)
+    }
+
+    /// Chip-on-chip streaming (paper §1 contribution 3): mine each
+    /// partition as it arrives from a producer (see
+    /// `coordinator::streaming::spawn_producer_with`), returning
+    /// per-partition real-time reports.
+    pub fn mine_partitions(
+        &mut self,
+        rx: Receiver<Partition>,
+    ) -> Result<Vec<PartitionReport>, MineError> {
+        let mut reports = vec![];
+        while let Ok(part) = rx.recv() {
+            let t0 = Instant::now();
+            let result = mine_with_backend(
+                &mut *self.backend,
+                &part.stream,
+                &self.opts,
+                &mut self.metrics,
+            )?;
+            reports.push(PartitionReport {
+                index: part.index,
+                events: part.stream.len(),
+                frequent: result.frequent.len(),
+                mine_time: t0.elapsed(),
+                recording: part.recording,
+                result,
+            });
+        }
+        Ok(reports)
+    }
+
+    pub fn stream(&self) -> &EventStream {
+        &self.stream
+    }
+
+    pub fn options(&self) -> &MineOptions {
+        &self.opts
+    }
+
+    /// Cumulative work metrics across every call on this session.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The counting engine's name, e.g. `two-pass(hybrid)`.
+    pub fn backend_name(&self) -> &str {
+        self.backend.name()
+    }
+}
+
+/// Fluent builder for [`Session`]. See the module docs for the shape.
+pub struct SessionBuilder {
+    stream: Option<EventStream>,
+    dataset: Option<String>,
+    seed: u64,
+    theta: Option<u64>,
+    intervals: Option<Vec<Interval>>,
+    backend: Option<Box<dyn CountBackend>>,
+    strategy: Option<Strategy>,
+    two_pass: bool,
+    max_level: usize,
+    max_candidates_per_level: usize,
+    cpu_threads: usize,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> SessionBuilder {
+        SessionBuilder {
+            stream: None,
+            dataset: None,
+            seed: 7,
+            theta: None,
+            intervals: None,
+            backend: None,
+            strategy: None,
+            two_pass: true,
+            max_level: 8,
+            max_candidates_per_level: 2_000_000,
+            cpu_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Mine over an explicit event stream.
+    pub fn stream(mut self, stream: EventStream) -> Self {
+        self.stream = Some(stream);
+        self
+    }
+
+    /// Mine over a named dataset from the registry (`sym26`, `2-1-33`,
+    /// `2-1-34`, `2-1-35`); the dataset's default inter-event constraint
+    /// is used unless [`SessionBuilder::intervals`] overrides it.
+    pub fn dataset(mut self, name: impl Into<String>) -> Self {
+        self.dataset = Some(name.into());
+        self
+    }
+
+    /// Generator seed for [`SessionBuilder::dataset`] (default 7).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Support threshold (required, must be > 0).
+    pub fn theta(mut self, theta: u64) -> Self {
+        self.theta = Some(theta);
+        self
+    }
+
+    /// The inter-event constraint set I used for candidate generation.
+    pub fn intervals(mut self, intervals: Vec<Interval>) -> Self {
+        self.intervals = Some(intervals);
+        self
+    }
+
+    /// Convenience for a single-interval constraint set.
+    pub fn interval(self, interval: Interval) -> Self {
+        self.intervals(vec![interval])
+    }
+
+    /// Inject a counting engine directly (mutually exclusive with
+    /// [`SessionBuilder::strategy`]). The engine is still wrapped with
+    /// two-pass elimination unless [`SessionBuilder::one_pass`] is set.
+    pub fn backend(mut self, backend: Box<dyn CountBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Pick an engine by name. Accelerated strategies open the default
+    /// PJRT runtime at build time and fail with
+    /// [`MineError::RuntimeUnavailable`] if it is absent.
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    /// Disable the A2 elimination pre-pass (count exact-only, one pass).
+    pub fn one_pass(mut self) -> Self {
+        self.two_pass = false;
+        self
+    }
+
+    /// Enable/disable the A2 elimination pre-pass (default enabled).
+    pub fn two_pass(mut self, enabled: bool) -> Self {
+        self.two_pass = enabled;
+        self
+    }
+
+    /// Stop after this episode size (default 8).
+    pub fn max_level(mut self, max_level: usize) -> Self {
+        self.max_level = max_level;
+        self
+    }
+
+    /// Per-level candidate-count guardrail (default 2,000,000).
+    pub fn max_candidates_per_level(mut self, cap: usize) -> Self {
+        self.max_candidates_per_level = cap;
+        self
+    }
+
+    /// Worker threads for CPU engines and fallbacks.
+    pub fn cpu_threads(mut self, threads: usize) -> Self {
+        self.cpu_threads = threads.max(1);
+        self
+    }
+
+    pub fn build(self) -> Result<Session, MineError> {
+        let SessionBuilder {
+            stream,
+            dataset,
+            seed,
+            theta,
+            intervals,
+            backend,
+            strategy,
+            two_pass,
+            max_level,
+            max_candidates_per_level,
+            cpu_threads,
+        } = self;
+
+        let theta = theta
+            .ok_or_else(|| MineError::invalid("theta not set — call .theta(...)"))?;
+        if theta == 0 {
+            return Err(MineError::invalid(
+                "theta must be > 0 (a support threshold of 0 makes every episode frequent)",
+            ));
+        }
+        if max_level == 0 {
+            return Err(MineError::invalid("max_level must be >= 1"));
+        }
+        if max_candidates_per_level == 0 {
+            return Err(MineError::invalid("max_candidates_per_level must be >= 1"));
+        }
+
+        // Validate the dataset name whenever one was given, even alongside
+        // an explicit stream (where it only supplies interval defaults) —
+        // a typo should say "unknown dataset", not a misleading
+        // missing-intervals error later.
+        if let Some(name) = dataset.as_deref() {
+            if datasets::info(name).is_none() {
+                return Err(MineError::UnknownDataset {
+                    given: name.to_string(),
+                    valid: datasets::names(),
+                });
+            }
+        }
+        let (stream, dataset_name) = match (stream, dataset) {
+            (Some(s), d) => (s, d),
+            (None, Some(name)) => match datasets::by_name(&name, seed) {
+                Some((s, tag)) => (s, Some(tag.to_string())),
+                None => {
+                    return Err(MineError::UnknownDataset {
+                        given: name,
+                        valid: datasets::names(),
+                    })
+                }
+            },
+            (None, None) => {
+                return Err(MineError::invalid(
+                    "no event stream — call .stream(...) or .dataset(...)",
+                ))
+            }
+        };
+
+        let intervals = match intervals {
+            Some(iv) if !iv.is_empty() => iv,
+            Some(_) => {
+                return Err(MineError::invalid(
+                    "intervals must be non-empty — candidate generation needs \
+                     at least one inter-event constraint",
+                ))
+            }
+            None => match dataset_name.as_deref().and_then(datasets::default_interval) {
+                Some(iv) => vec![iv],
+                None => {
+                    return Err(MineError::invalid(
+                        "no inter-event constraint set — call .intervals(...) \
+                         (or .dataset(...) for the dataset default)",
+                    ))
+                }
+            },
+        };
+
+        let exact: Box<dyn CountBackend> = match (backend, strategy) {
+            (Some(_), Some(_)) => {
+                return Err(MineError::invalid(
+                    "set either .backend(...) or .strategy(...), not both",
+                ))
+            }
+            (Some(b), None) => b,
+            (None, Some(s)) => {
+                let rt = if s.needs_runtime() {
+                    Some(Rc::new(Runtime::open_default()?))
+                } else {
+                    None
+                };
+                backend::for_strategy(s, rt, cpu_threads)?
+            }
+            (None, None) => backend::default_backend(cpu_threads),
+        };
+        let backend: Box<dyn CountBackend> = if two_pass {
+            Box::new(TwoPassBackend::new(exact, theta))
+        } else {
+            exact
+        };
+
+        Ok(Session {
+            backend,
+            stream,
+            opts: MineOptions { theta, intervals, max_level, max_candidates_per_level },
+            metrics: Metrics::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_stream() -> EventStream {
+        EventStream::from_pairs(vec![(0, 1), (1, 4), (2, 8), (0, 20), (1, 24)], 3)
+    }
+
+    #[test]
+    fn builder_requires_a_stream() {
+        let err = Session::builder()
+            .theta(5)
+            .interval(Interval::new(0, 10))
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_theta() {
+        let err = Session::builder()
+            .stream(tiny_stream())
+            .theta(0)
+            .interval(Interval::new(0, 10))
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_max_level() {
+        let err = Session::builder()
+            .stream(tiny_stream())
+            .theta(1)
+            .interval(Interval::new(0, 10))
+            .max_level(0)
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_dataset() {
+        let err =
+            Session::builder().dataset("mea-9000").theta(5).build().err().unwrap();
+        match err {
+            MineError::UnknownDataset { given, valid } => {
+                assert_eq!(given, "mea-9000");
+                assert!(valid.contains(&"sym26"));
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn dataset_default_interval_is_used() {
+        let session = Session::builder()
+            .dataset("sym26")
+            .theta(60)
+            .strategy(Strategy::CpuSerial)
+            .build()
+            .unwrap();
+        assert_eq!(session.options().intervals, vec![Interval::new(5, 15)]);
+        assert_eq!(session.backend_name(), "two-pass(cpu-serial)");
+    }
+
+    #[test]
+    fn candidate_cap_surfaces_explosion() {
+        let mut session = Session::builder()
+            .stream(tiny_stream())
+            .theta(1)
+            .interval(Interval::new(0, 10))
+            .strategy(Strategy::CpuSerial)
+            .max_candidates_per_level(2)
+            .build()
+            .unwrap();
+        let err = session.mine().err().unwrap();
+        match err {
+            MineError::CandidateExplosion { level, candidates, cap } => {
+                assert_eq!(level, 1);
+                assert_eq!(candidates, 3); // level 1 = alphabet size
+                assert_eq!(cap, 2);
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn cpu_session_mines_end_to_end() {
+        let mut session = Session::builder()
+            .stream(tiny_stream())
+            .theta(1)
+            .interval(Interval::new(0, 10))
+            .strategy(Strategy::CpuParallel)
+            .max_level(3)
+            .build()
+            .unwrap();
+        let result = session.mine().unwrap();
+        assert!(!result.frequent.is_empty());
+        assert!(session.metrics().episodes_counted > 0);
+    }
+}

@@ -1,19 +1,27 @@
-//! End-to-end mining over the datasets: the miner must recover the
-//! episodes the generators embed (and nothing structurally bogus), under
-//! both one-pass and two-pass counting.
+//! End-to-end mining over the datasets through the `Session` facade: the
+//! miner must recover the episodes the generators embed (and nothing
+//! structurally bogus), under both one-pass and two-pass counting.
+//!
+//! These tests pin the CPU backends explicitly so they run (and mean the
+//! same thing) with or without the PJRT runtime present; the accelerated
+//! path is pinned to the CPU references in `integration_runtime.rs`.
 
-use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
-use episodes_gpu::coordinator::{Coordinator, Strategy};
+use episodes_gpu::coordinator::Strategy;
 use episodes_gpu::datasets::{culture, sym26};
+use episodes_gpu::Session;
 
 #[test]
 fn sym26_recovers_both_embedded_chains() {
     let cfg = sym26::Sym26Config::default();
     let stream = sym26::generate(&cfg, 7);
-    let mut mine_cfg = MineConfig::new(60, cfg.interval_set());
-    mine_cfg.mode = CountMode::TwoPass;
-    let mut coord = Coordinator::open_default().unwrap();
-    let result = coord.mine(&stream, &mine_cfg).unwrap();
+    let mut session = Session::builder()
+        .stream(stream)
+        .theta(60)
+        .intervals(cfg.interval_set())
+        .strategy(Strategy::CpuParallel)
+        .build()
+        .unwrap();
+    let result = session.mine().unwrap();
     for embedded in cfg.embedded_episodes() {
         assert!(
             result.frequent.iter().any(|c| c.episode == embedded),
@@ -30,16 +38,28 @@ fn sym26_recovers_both_embedded_chains() {
 fn one_pass_and_two_pass_find_the_same_frequent_sets() {
     let cfg = sym26::Sym26Config::default();
     let stream = sym26::generate(&cfg, 8);
-    let mut coord = Coordinator::open_default().unwrap();
 
-    let mut c1 = MineConfig::new(80, cfg.interval_set());
-    c1.mode = CountMode::OnePass(Strategy::Hybrid);
-    c1.max_level = 4;
-    let r1 = coord.mine(&stream, &c1).unwrap();
+    let mut one = Session::builder()
+        .stream(stream.clone())
+        .theta(80)
+        .intervals(cfg.interval_set())
+        .strategy(Strategy::CpuParallel)
+        .one_pass()
+        .max_level(4)
+        .build()
+        .unwrap();
+    let r1 = one.mine().unwrap();
 
-    let mut c2 = c1.clone();
-    c2.mode = CountMode::TwoPass;
-    let r2 = coord.mine(&stream, &c2).unwrap();
+    let mut two = Session::builder()
+        .stream(stream)
+        .theta(80)
+        .intervals(cfg.interval_set())
+        .strategy(Strategy::CpuParallel)
+        .max_level(4)
+        .build()
+        .unwrap();
+    let r2 = two.mine().unwrap();
+    assert!(two.metrics().a2_culled > 0, "two-pass should cull something");
 
     let set1: std::collections::HashSet<_> =
         r1.frequent.iter().map(|c| c.episode.clone()).collect();
@@ -58,14 +78,24 @@ fn culture_theta(day: u32) -> u64 {
     }
 }
 
+fn culture_session(day: u32) -> Session {
+    let cfg = culture::CultureConfig::day(day);
+    let stream = culture::generate(&cfg, 11);
+    Session::builder()
+        .stream(stream)
+        .theta(culture_theta(day))
+        .intervals(cfg.interval_set())
+        .strategy(Strategy::CpuParallel)
+        .max_level(6)
+        .build()
+        .unwrap()
+}
+
 #[test]
 fn culture_day35_mines_embedded_synfire_chains() {
     let cfg = culture::CultureConfig::day(35);
-    let stream = culture::generate(&cfg, 11);
-    let mut mine_cfg = MineConfig::new(culture_theta(35), cfg.interval_set());
-    mine_cfg.max_level = 6;
-    let mut coord = Coordinator::open_default().unwrap();
-    let result = coord.mine(&stream, &mine_cfg).unwrap();
+    let mut session = culture_session(35);
+    let result = session.mine().unwrap();
     for c in &cfg.embedded_episodes() {
         assert!(
             result.frequent.iter().any(|x| x.episode == *c),
@@ -80,14 +110,11 @@ fn mining_structure_grows_with_culture_age_section_6_5() {
     // §6.5: the same circuits strengthen as the culture matures — the
     // miner sees every embedded chain at every age, with higher counts
     // day over day.
-    let mut coord = Coordinator::open_default().unwrap();
     let mut per_day: Vec<Vec<u64>> = vec![];
     for day in [33u32, 35] {
         let cfg = culture::CultureConfig::day(day);
-        let stream = culture::generate(&cfg, 11);
-        let mut mine_cfg = MineConfig::new(culture_theta(day), cfg.interval_set());
-        mine_cfg.max_level = 6;
-        let r = coord.mine(&stream, &mine_cfg).unwrap();
+        let mut session = culture_session(day);
+        let r = session.mine().unwrap();
         let counts: Vec<u64> = cfg
             .embedded_episodes()
             .iter()

@@ -1,0 +1,285 @@
+//! Integration tests for the 0.2 public API: `Session` + `CountBackend`.
+//!
+//! Everything here runs without a PJRT runtime — the point of the
+//! redesign is that mining is decoupled from it. A custom mock backend is
+//! injected through the builder, error variants are matched structurally,
+//! and every CPU-capable backend is checked against the serial reference
+//! on a small Sym26 slice. Accelerated-backend equivalence is covered in
+//! `integration_runtime.rs` (skips when the runtime is absent).
+
+use std::rc::Rc;
+
+use episodes_gpu::backend::accel::{Dispatch, HybridBackend, PtpeBackend};
+use episodes_gpu::backend::cpu::{CpuParallelBackend, CpuSerialBackend};
+use episodes_gpu::backend::two_pass::TwoPassBackend;
+use episodes_gpu::backend::{self, CountBackend, CountReport};
+use episodes_gpu::coordinator::Strategy;
+use episodes_gpu::datasets::sym26::{generate, Sym26Config};
+use episodes_gpu::episodes::{candidates, Episode, Interval};
+use episodes_gpu::events::EventStream;
+use episodes_gpu::gpu_model::crossover::CrossoverModel;
+use episodes_gpu::mining::serial;
+use episodes_gpu::runtime::Runtime;
+use episodes_gpu::{MineError, Session};
+
+/// A counting engine that needs no runtime, no artifacts, no threads:
+/// every episode "occurs" a fixed number of times.
+struct MockBackend {
+    fixed: u64,
+}
+
+impl MockBackend {
+    fn new(fixed: u64) -> MockBackend {
+        MockBackend { fixed }
+    }
+}
+
+impl CountBackend for MockBackend {
+    fn name(&self) -> &str {
+        "mock"
+    }
+
+    fn supports_n(&self, _n: usize) -> bool {
+        true
+    }
+
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        _stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        Ok(CountReport::from_counts(vec![self.fixed; episodes.len()]))
+    }
+}
+
+fn tiny_stream() -> EventStream {
+    EventStream::from_pairs(
+        vec![(0, 1), (1, 5), (2, 9), (0, 30), (1, 36), (2, 40), (3, 50)],
+        4,
+    )
+}
+
+/// A ~5-second Sym26 slice plus the level-1/2 candidate population over it.
+fn sym26_slice() -> (EventStream, Vec<Episode>) {
+    let cfg = Sym26Config::default();
+    let full = generate(&cfg, 7);
+    let stream = full.window(full.t_begin() - 1, full.t_begin() + 5_000);
+    let iv = Interval::new(cfg.d_low, cfg.d_high);
+    let singles = candidates::level1(stream.n_types);
+    let mut eps = candidates::level2(&singles, &[iv]);
+    eps.truncate(120);
+    eps.extend(singles.into_iter().take(6));
+    (stream, eps)
+}
+
+// ---- builder validation -------------------------------------------------
+
+#[test]
+fn builder_missing_stream_is_invalid_config() {
+    let err = Session::builder().theta(5).interval(Interval::new(0, 9)).build().err().unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    assert!(err.to_string().contains("stream"), "{err}");
+}
+
+#[test]
+fn builder_zero_theta_is_invalid_config() {
+    let err = Session::builder()
+        .stream(tiny_stream())
+        .theta(0)
+        .interval(Interval::new(0, 9))
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    assert!(err.to_string().contains("theta"), "{err}");
+}
+
+#[test]
+fn builder_bad_max_level_is_invalid_config() {
+    let err = Session::builder()
+        .stream(tiny_stream())
+        .theta(2)
+        .interval(Interval::new(0, 9))
+        .max_level(0)
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+}
+
+#[test]
+fn builder_backend_and_strategy_conflict() {
+    let err = Session::builder()
+        .stream(tiny_stream())
+        .theta(2)
+        .interval(Interval::new(0, 9))
+        .backend(Box::new(MockBackend::new(1)))
+        .strategy(Strategy::CpuSerial)
+        .build()
+        .err()
+        .unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+}
+
+// ---- MineError variant mapping ------------------------------------------
+
+#[test]
+fn candidate_cap_overflow_is_candidate_explosion() {
+    let mut session = Session::builder()
+        .stream(tiny_stream())
+        .theta(1)
+        .interval(Interval::new(0, 10))
+        .strategy(Strategy::CpuSerial)
+        .max_candidates_per_level(3)
+        .build()
+        .unwrap();
+    match session.mine().err().unwrap() {
+        MineError::CandidateExplosion { level, candidates, cap } => {
+            assert_eq!(level, 1);
+            assert_eq!(candidates, 4); // the alphabet
+            assert_eq!(cap, 3);
+        }
+        other => panic!("wrong variant: {other}"),
+    }
+}
+
+#[test]
+fn strategy_parse_failure_lists_valid_names() {
+    let err = Strategy::parse("gpu-go-fast").err().unwrap();
+    match &err {
+        MineError::UnknownStrategy { given, valid } => {
+            assert_eq!(given, "gpu-go-fast");
+            assert!(valid.contains(&"hybrid") && valid.contains(&"cpu-parallel"));
+        }
+        other => panic!("wrong variant: {other}"),
+    }
+    let msg = err.to_string();
+    assert!(msg.contains("hybrid") && msg.contains("cpu-parallel"), "{msg}");
+}
+
+#[test]
+fn accelerated_strategy_without_runtime_is_runtime_unavailable() {
+    // Force runtime resolution away from any real artifact directory.
+    match Runtime::new(std::path::Path::new("/nonexistent/artifacts")) {
+        Ok(_) => (), // real runtime somehow present; nothing to assert
+        Err(e) => assert!(matches!(e, MineError::RuntimeUnavailable { .. }), "{e}"),
+    }
+    let err = backend::for_strategy(Strategy::PtpeA1, None, 2).err().unwrap();
+    assert!(matches!(err, MineError::RuntimeUnavailable { .. }), "{err}");
+}
+
+#[test]
+fn unsupported_size_falls_back_to_cpu_not_error() {
+    let (stream, _) = sym26_slice();
+    // A 12-node episode is beyond any artifact set (n_max is 8).
+    let iv = Interval::new(5, 15);
+    let big = Episode::new((0..12).collect(), vec![iv; 11]);
+
+    // The session default backend (accelerated when possible, CPU
+    // otherwise) must count it without error either way.
+    let mut session = Session::builder()
+        .stream(stream.clone())
+        .theta(1)
+        .interval(iv)
+        .one_pass()
+        .build()
+        .unwrap();
+    let counts = session.count(std::slice::from_ref(&big)).unwrap();
+    assert_eq!(counts[0], serial::count_a1(&big, &stream));
+
+    // And when a real runtime is present, the PTPE backend itself must
+    // answer with its CPU fallback (counted, not an error).
+    if let Ok(rt) = Runtime::open_default() {
+        let mut ptpe = PtpeBackend::new(Rc::new(rt), 2);
+        assert!(!ptpe.supports_n(12));
+        let rep = ptpe.count(std::slice::from_ref(&big), &stream).unwrap();
+        assert_eq!(rep.counts[0], serial::count_a1(&big, &stream));
+        assert!(rep.metrics.cpu_fallbacks > 0);
+    }
+}
+
+// ---- mock backend injection (no PJRT runtime anywhere) ------------------
+
+#[test]
+fn mock_backend_drives_a_full_session() {
+    let mut session = Session::builder()
+        .stream(tiny_stream())
+        .theta(10)
+        .interval(Interval::new(0, 10))
+        .one_pass()
+        .backend(Box::new(MockBackend::new(42)))
+        .max_level(2)
+        .build()
+        .unwrap();
+    assert_eq!(session.backend_name(), "mock");
+
+    let eps = vec![Episode::single(0), Episode::single(1)];
+    assert_eq!(session.count(&eps).unwrap(), vec![42, 42]);
+
+    // Mining through the mock: every candidate counts 42 >= theta 10, so
+    // both levels fill completely.
+    let result = session.mine().unwrap();
+    assert_eq!(result.levels.len(), 2);
+    assert!(result.frequent.iter().all(|c| c.count == 42));
+}
+
+#[test]
+fn two_pass_composes_over_a_mock() {
+    // Wrapping the mock in TwoPassBackend: relaxed pass (default = exact)
+    // culls nothing at theta <= 42, everything at theta > 42.
+    let stream = tiny_stream();
+    let eps = vec![
+        Episode::new(vec![0, 1], vec![Interval::new(0, 10)]),
+        Episode::new(vec![1, 2], vec![Interval::new(0, 10)]),
+    ];
+    let mut keep = TwoPassBackend::new(Box::new(MockBackend::new(42)), 40);
+    let rep = keep.count(&eps, &stream).unwrap();
+    assert_eq!(rep.culled, 0);
+    assert_eq!(rep.counts, vec![42, 42]);
+
+    let mut cull = TwoPassBackend::new(Box::new(MockBackend::new(42)), 50);
+    let rep = cull.count(&eps, &stream).unwrap();
+    assert_eq!(rep.culled, 2);
+}
+
+// ---- backend equivalence on a Sym26 slice -------------------------------
+
+#[test]
+fn all_cpu_capable_backends_agree_with_serial_reference() {
+    let (stream, eps) = sym26_slice();
+    let reference: Vec<u64> = CpuSerialBackend::new().count(&eps, &stream).unwrap().counts;
+
+    // cpu-parallel at several thread counts
+    for threads in [1, 2, 8] {
+        let got = CpuParallelBackend::new(threads).count(&eps, &stream).unwrap().counts;
+        assert_eq!(got, reference, "cpu-parallel x{threads}");
+    }
+
+    // hybrid composed over CPU engines: both dispatch arms must agree
+    let mut hybrid = HybridBackend::new(
+        Box::new(CpuSerialBackend::new()),
+        Box::new(CpuParallelBackend::new(4)),
+        Dispatch::Crossover(CrossoverModel::paper_default()),
+    );
+    assert_eq!(hybrid.count(&eps, &stream).unwrap().counts, reference, "hybrid(cpu,cpu)");
+
+    // two-pass over cpu-parallel: decisions exact, survivors exact
+    let theta = 8;
+    let mut tp = TwoPassBackend::new(Box::new(CpuParallelBackend::new(4)), theta);
+    let (out, _) = tp.run(&eps, &stream).unwrap();
+    for (i, _) in eps.iter().enumerate() {
+        assert_eq!(out.counts[i] >= theta, reference[i] >= theta, "episode {i}");
+        if out.relaxed_counts[i] >= theta {
+            assert_eq!(out.counts[i], reference[i], "episode {i}");
+        }
+    }
+
+    // the default backend (whatever substrate is available) agrees too
+    let mut default = backend::default_backend(4);
+    assert_eq!(
+        default.count(&eps, &stream).unwrap().counts,
+        reference,
+        "default backend {}",
+        default.name()
+    );
+}

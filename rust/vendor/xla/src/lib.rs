@@ -1,0 +1,184 @@
+//! Offline stand-in for the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The episodes-gpu runtime layer (`episodes_gpu::runtime`) is written
+//! against this API: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `compile` → `execute`. In environments
+//! without the PJRT shared library this stub keeps the crate building and
+//! testable — client construction fails with a descriptive error, which the
+//! library surfaces as `MineError::RuntimeUnavailable` and answers with its
+//! CPU counting backends.
+//!
+//! To enable the real accelerator path, patch this crate with the actual
+//! bindings in the workspace `Cargo.toml`:
+//!
+//! ```toml
+//! [patch.crates-io]
+//! # or a [patch."path"] entry pointing at the xla_extension-backed crate
+//! ```
+//!
+//! Host-side `Literal` bookkeeping (construction, reshape, readback) is
+//! implemented for real so unit tests of the batching layer can exercise
+//! shape validation without a device.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' catch-all error.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "xla stub: PJRT bindings are not linked into this build \
+                        (substitute the real `xla` crate via [patch] to enable \
+                        the accelerator path)";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::new(STUB_MSG))
+}
+
+/// PJRT client handle. Construction always fails in the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. Always unavailable in the stub build.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled, loaded executable. Unobtainable in the stub (the client
+/// cannot be constructed), but the type and its `execute` signature keep
+/// call sites compiling.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A device buffer returned by `execute`.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Element types readable out of a [`Literal`].
+pub trait NativeElement: Sized + Copy {
+    fn read_all(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeElement for i32 {
+    fn read_all(lit: &Literal) -> Result<Vec<i32>> {
+        Ok(lit.data.clone())
+    }
+}
+
+/// Host-side literal: flat i32 storage plus a shape. Fully functional so
+/// the batching layer's shape handling is testable without a device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Literal {
+    data: Vec<i32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1(data: &[i32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.data.len() as i64 {
+            return Err(Error::new(format!(
+                "reshape to {dims:?} wants {want} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeElement>(&self) -> Result<Vec<T>> {
+        T::read_all(self)
+    }
+
+    /// Destructure a tuple literal. Device tuples never exist in the stub
+    /// (nothing executes), so this reports unavailability.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub client must not construct");
+        assert!(err.to_string().contains("PJRT"));
+    }
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1, 2, 3, 4, 5, 6]);
+        let l2 = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(l2.shape(), &[2, 3]);
+        assert_eq!(l2.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+}
