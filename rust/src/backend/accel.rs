@@ -229,6 +229,22 @@ impl HybridBackend {
         )
     }
 
+    /// All-CPU hybrid, no runtime required: episode-axis workers
+    /// ([`crate::backend::cpu::CpuParallelBackend`]) when a batch has
+    /// enough candidates to fill the cores, stream-axis time shards
+    /// ([`crate::backend::sharded::ShardedBackend`]) when it does not —
+    /// the same few-episodes regime §5.2.3's dispatch sends to
+    /// MapConcatenate, transplanted to the host. Wrap it in
+    /// [`crate::backend::two_pass::TwoPassBackend`] for two-pass
+    /// elimination, as with any other engine.
+    pub fn cpu_sharded(threads: usize) -> HybridBackend {
+        HybridBackend::new(
+            Box::new(crate::backend::cpu::CpuParallelBackend::new(threads)),
+            Box::new(crate::backend::sharded::ShardedBackend::new(threads)),
+            Dispatch::Crossover(CrossoverModel::paper_default()),
+        )
+    }
+
     pub fn dispatch(&self) -> Dispatch {
         self.dispatch
     }
@@ -323,5 +339,31 @@ mod tests {
         assert_eq!(got, want);
         assert!(hybrid.supports_n(7));
         assert_eq!(hybrid.name(), "hybrid");
+    }
+
+    #[test]
+    fn cpu_sharded_hybrid_matches_serial_on_both_arms() {
+        let mut rng = Rng::new(8);
+        let mut pairs = vec![];
+        let mut t = 0;
+        for _ in 0..500 {
+            t += rng.range_i32(0, 3);
+            pairs.push((rng.range_i32(0, 3), t));
+        }
+        let stream = EventStream::from_pairs(pairs, 4);
+        let iv = Interval::new(0, 6);
+        // n=2 batch lands on the episode-axis arm (small levels always
+        // dispatch PTPE-shaped); a single n=3 episode sits far below the
+        // crossover and lands on the stream-axis arm.
+        let many: Vec<Episode> = (0..20)
+            .map(|i| Episode::new(vec![i % 4, (i + 1) % 4], vec![iv]))
+            .collect();
+        let few = vec![Episode::new(vec![0, 1, 2], vec![iv; 2])];
+        let mut hybrid = HybridBackend::cpu_sharded(4);
+        for eps in [&many, &few] {
+            let got = hybrid.count(eps, &stream).unwrap().counts;
+            let want = CpuSerialBackend::new().count(eps, &stream).unwrap().counts;
+            assert_eq!(got, want);
+        }
     }
 }

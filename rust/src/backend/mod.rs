@@ -7,7 +7,10 @@
 //! event stream. Concrete engines:
 //!
 //! - [`cpu::CpuSerialBackend`] — Algorithm 1, one automaton at a time.
-//! - [`cpu::CpuParallelBackend`] — the paper's multithreaded baseline (§6.4).
+//! - [`cpu::CpuParallelBackend`] — the paper's multithreaded baseline (§6.4),
+//!   parallel along the *episode* axis.
+//! - [`sharded::ShardedBackend`] — the MapConcatenate construction (§5.2.2)
+//!   on the CPU thread pool, parallel along the *stream* axis.
 //! - [`accel::PtpeBackend`] — per-thread-per-episode on the PJRT runtime
 //!   (§5.2.1), CPU fallback for unsupported sizes.
 //! - [`accel::MapConcatBackend`] — segment-parallel Map + host Concatenate
@@ -23,6 +26,7 @@
 
 pub mod accel;
 pub mod cpu;
+pub mod sharded;
 pub mod two_pass;
 
 use std::rc::Rc;
@@ -122,6 +126,11 @@ pub fn uniform_size(episodes: &[Episode]) -> Option<usize> {
 /// back into input order. `count_uniform` sees only uniform groups with
 /// n >= 2. Uniform batches (every mining level) pass through without the
 /// clone-and-scatter.
+///
+/// A 1-node episode whose type lies outside the stream's alphabet is a
+/// typed [`MineError::OutOfAlphabet`] — the frequency table is
+/// alphabet-sized, and `EventStream` only `debug_assert`s its alphabet, so
+/// indexing blindly here used to panic in release builds.
 pub fn count_grouped<F>(
     episodes: &[Episode],
     stream: &EventStream,
@@ -132,13 +141,23 @@ where
     F: FnMut(usize, &[Episode], &mut Metrics) -> Result<Vec<u64>, MineError>,
 {
     metrics.episodes_counted += episodes.len() as u64;
-    let n1_counts = |group: &[Episode]| -> Vec<u64> {
+    let n1_counts = |group: &[Episode]| -> Result<Vec<u64>, MineError> {
         let freq = stream.type_counts();
-        group.iter().map(|e| freq[e.types[0] as usize]).collect()
+        group
+            .iter()
+            .map(|e| {
+                let ty = e.types[0];
+                if ty < 0 || ty as usize >= stream.n_types {
+                    Err(MineError::OutOfAlphabet { type_id: ty, n_types: stream.n_types })
+                } else {
+                    Ok(freq[ty as usize])
+                }
+            })
+            .collect()
     };
     if let Some(n) = uniform_size(episodes) {
         return if n == 1 {
-            Ok(n1_counts(episodes))
+            n1_counts(episodes)
         } else {
             count_uniform(n, episodes, metrics)
         };
@@ -147,7 +166,7 @@ where
     for (indices, group) in group_by_size(episodes) {
         let n = group[0].n();
         let counts = if n == 1 {
-            n1_counts(&group)
+            n1_counts(&group)?
         } else {
             count_uniform(n, &group, metrics)?
         };
@@ -168,6 +187,7 @@ pub fn for_strategy(
     match strategy {
         Strategy::CpuSerial => Ok(Box::new(cpu::CpuSerialBackend::new())),
         Strategy::CpuParallel => Ok(Box::new(cpu::CpuParallelBackend::new(cpu_threads))),
+        Strategy::CpuSharded => Ok(Box::new(sharded::ShardedBackend::new(cpu_threads))),
         Strategy::PtpeA1 => {
             Ok(Box::new(accel::PtpeBackend::new(require_rt(rt)?, cpu_threads)))
         }
@@ -237,5 +257,29 @@ mod tests {
         let err = for_strategy(Strategy::Hybrid, None, 2).err().unwrap();
         assert!(matches!(err, MineError::RuntimeUnavailable { .. }));
         assert!(for_strategy(Strategy::CpuSerial, None, 2).is_ok());
+        assert!(for_strategy(Strategy::CpuSharded, None, 2).is_ok());
+    }
+
+    #[test]
+    fn count_grouped_out_of_alphabet_is_typed_error() {
+        let stream = EventStream::from_pairs(vec![(0, 1), (1, 5)], 2);
+        let mut m = Metrics::default();
+        // uniform n=1 batch with a type past the alphabet
+        let err = count_grouped(&[Episode::single(7)], &stream, &mut m, |_, _, _| {
+            panic!("n=1 must not reach count_uniform")
+        })
+        .err()
+        .unwrap();
+        assert!(
+            matches!(err, MineError::OutOfAlphabet { type_id: 7, n_types: 2 }),
+            "{err}"
+        );
+        // negative types are out of alphabet too, also on the mixed path
+        let iv = Interval::new(0, 5);
+        let mixed = vec![Episode::new(vec![0, 1], vec![iv]), Episode::single(-3)];
+        let err = count_grouped(&mixed, &stream, &mut m, |_, _, _| Ok(vec![0]))
+            .err()
+            .unwrap();
+        assert!(matches!(err, MineError::OutOfAlphabet { type_id: -3, .. }), "{err}");
     }
 }

@@ -1,0 +1,254 @@
+//! Stream-sharded CPU counting: MapConcatenate's data parallelism
+//! (paper §5.2.2) transplanted onto the host thread pool.
+//!
+//! [`cpu::CpuParallelBackend`](crate::backend::cpu::CpuParallelBackend)
+//! parallelizes along the *episode* axis: with T threads and S surviving
+//! candidates, late mining levels where S < T leave cores idle — exactly
+//! the regime the companion transformation paper (arXiv:0905.2203)
+//! identifies as the motivation for stream segmentation. This engine
+//! parallelizes along the *stream* axis instead: the event stream is split
+//! into per-thread time shards (planned by
+//! [`mapconcat::plan_even`](crate::coordinator::mapconcat::plan_even), the
+//! same feasibility rules the accelerator's segmentation uses), every
+//! shard runs the boundary-machine Map step concurrently
+//! ([`serial::mapcat_map`], the CPU reference for the Pallas Map kernel),
+//! and shard results are stitched with the host Concatenate fold.
+//!
+//! Exactness: matched `b == a` chains reproduce the single-machine count
+//! bit for bit, and a mismatch is always flagged by a nonzero miss count
+//! (the invariant `prop_mapcat_equals_serial` pins) — episodes with misses
+//! are recounted via the serial path, so reported counts always equal the
+//! serial reference at the engine's K (unbounded by default).
+
+use crate::backend::{count_grouped, CountBackend, CountReport};
+use crate::coordinator::mapconcat::{self, Plan};
+use crate::coordinator::Metrics;
+use crate::episodes::Episode;
+use crate::error::MineError;
+use crate::events::{EventStream, Tick};
+use crate::mining::{cpu_parallel, serial};
+
+/// Stream-axis CPU engine: one boundary-machine Map worker per time shard.
+pub struct ShardedBackend {
+    shards: usize,
+    k: usize,
+}
+
+impl ShardedBackend {
+    /// One time shard (and one Map worker thread) per `shards`, with
+    /// unbounded occurrence lists — counts equal `serial::count_a1`.
+    pub fn new(shards: usize) -> ShardedBackend {
+        ShardedBackend { shards: shards.max(1), k: usize::MAX }
+    }
+
+    /// Bound the per-level occurrence lists to the K most recent entries
+    /// (the accelerator kernel's semantics); counts then equal
+    /// `serial::count_a1_bounded` at the same K.
+    pub fn with_k(mut self, k: usize) -> ShardedBackend {
+        self.k = k.max(1);
+        self
+    }
+
+    /// The planned shard count (== Map worker threads).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+/// The exact serial reference at this engine's K (the miss-recount path
+/// and the fallback when the stream cannot be sharded).
+fn recount_serial(ep: &Episode, stream: &EventStream, k: usize) -> u64 {
+    if k == usize::MAX {
+        serial::count_a1(ep, stream)
+    } else {
+        serial::count_a1_bounded(ep, stream, k)
+    }
+}
+
+/// Run the Map step for every (shard, episode) pair, one scoped worker
+/// thread per shard. Returns `[shard][episode] -> N machine tuples`.
+///
+/// Each worker scans only its shard's time window plus a halo of the
+/// group's widest constraint window on both sides: boundary machine `mk`
+/// starts up to `sum(t_high)` before the shard boundary, and a crossing
+/// occurrence may complete up to `sum(t_high)` past it. The window
+/// sub-stream therefore contains every event the machines can touch, and
+/// the per-shard tuples are identical to a full-stream Map.
+fn map_shards(
+    group: &[Episode],
+    stream: &EventStream,
+    plan: &Plan,
+    k: usize,
+) -> Vec<Vec<Vec<(Tick, u64, Tick)>>> {
+    let halo: Tick = group.iter().map(|e| e.span_max()).max().unwrap_or(0);
+    let mut out = Vec::with_capacity(plan.taus.len() - 1);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(plan.taus.len() - 1);
+        for bounds in plan.taus.windows(2) {
+            handles.push(scope.spawn(move || {
+                let (lo, hi) = (bounds[0], bounds[1]);
+                let sub = stream.window(lo - halo, hi + halo);
+                group
+                    .iter()
+                    .map(|ep| serial::mapcat_map(ep, &sub, &[lo, hi], k).swap_remove(0))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            out.push(h.join().expect("shard worker panicked"));
+        }
+    });
+    out
+}
+
+impl CountBackend for ShardedBackend {
+    fn name(&self) -> &str {
+        "cpu-sharded"
+    }
+
+    fn supports_n(&self, _n: usize) -> bool {
+        true
+    }
+
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        let (shards, k) = (self.shards, self.k);
+        let mut metrics = Metrics::default();
+        let counts = count_grouped(episodes, stream, &mut metrics, |_n, group, m| {
+            let Some(plan) = mapconcat::plan_even(group, stream, shards) else {
+                // stream too short for the shard count, or a constraint
+                // window wider than a shard: episode-axis fallback.
+                m.cpu_fallbacks += 1;
+                return Ok(cpu_parallel::scatter_parallel(group, shards, |eps| {
+                    eps.iter().map(|e| recount_serial(e, stream, k)).collect()
+                }));
+            };
+            m.shard_map_calls += 1;
+            let per_shard = map_shards(group, stream, &plan, k);
+            let mut counts = Vec::with_capacity(group.len());
+            let mut missed: Vec<usize> = vec![];
+            for i in 0..group.len() {
+                let segments: Vec<Vec<(Tick, u64, Tick)>> =
+                    per_shard.iter().map(|s| s[i].clone()).collect();
+                let (total, misses) = mapconcat::concatenate_fold(&segments);
+                if misses > 0 {
+                    // A flagged miss means the chain may have desynchronized;
+                    // restore exactness via the serial reference.
+                    m.concat_misses += misses;
+                    missed.push(i);
+                }
+                counts.push(total);
+            }
+            if !missed.is_empty() {
+                // Recount flagged episodes across the worker pool (misses
+                // are rare by construction, but when they cluster a serial
+                // recount loop would forfeit all parallelism).
+                let subset: Vec<Episode> =
+                    missed.iter().map(|&i| group[i].clone()).collect();
+                let exact = cpu_parallel::scatter_parallel(&subset, shards, |eps| {
+                    eps.iter().map(|e| recount_serial(e, stream, k)).collect()
+                });
+                for (&i, c) in missed.iter().zip(exact) {
+                    counts[i] = c;
+                }
+            }
+            Ok(counts)
+        })?;
+        Ok(CountReport { counts, culled: 0, metrics })
+    }
+
+    fn count_relaxed(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        // The relaxed A2 pre-pass always sees the full candidate set (that
+        // is its job), which fills the episode axis by construction — so
+        // shard along episodes like the CPU baseline rather than building
+        // A2 boundary machines.
+        let counts = cpu_parallel::scatter_parallel(episodes, self.shards, |eps| {
+            eps.iter().map(|e| serial::count_a2(e, stream)).collect()
+        });
+        let mut report = CountReport::from_counts(counts);
+        report.metrics.episodes_counted = episodes.len() as u64;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+    use crate::util::rng::Rng;
+
+    fn world(seed: u64, n_events: usize) -> (Vec<Episode>, EventStream) {
+        let mut rng = Rng::new(seed);
+        let mut pairs = vec![];
+        let mut t = 0;
+        for _ in 0..n_events {
+            t += rng.range_i32(0, 3);
+            pairs.push((rng.range_i32(0, 4), t));
+        }
+        let stream = EventStream::from_pairs(pairs, 5);
+        let mut eps = vec![Episode::single(1)];
+        for _ in 0..6 {
+            let n = rng.range_i32(2, 4) as usize;
+            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 4)).collect();
+            let ivs: Vec<Interval> = (0..n - 1)
+                .map(|_| {
+                    let lo = rng.range_i32(0, 2);
+                    Interval::new(lo, lo + rng.range_i32(1, 6))
+                })
+                .collect();
+            eps.push(Episode::new(types, ivs));
+        }
+        (eps, stream)
+    }
+
+    #[test]
+    fn sharded_matches_serial_on_mixed_batch() {
+        let (eps, stream) = world(21, 900);
+        let want: Vec<u64> =
+            eps.iter().map(|e| serial::count_a1(e, &stream)).collect();
+        for shards in [1, 3, 8] {
+            let rep = ShardedBackend::new(shards).count(&eps, &stream).unwrap();
+            assert_eq!(rep.counts, want, "shards {shards}");
+            assert_eq!(rep.metrics.episodes_counted, eps.len() as u64);
+        }
+    }
+
+    #[test]
+    fn infeasible_sharding_falls_back_to_episode_axis() {
+        // 3-tick stream cannot be cut into 8 shards; counts must still be
+        // exact and the fallback must be visible in the metrics.
+        let stream = EventStream::from_pairs(vec![(0, 1), (1, 2), (0, 3), (1, 4)], 2);
+        let eps = vec![Episode::new(vec![0, 1], vec![Interval::new(0, 5)])];
+        let rep = ShardedBackend::new(8).count(&eps, &stream).unwrap();
+        assert_eq!(rep.counts, vec![serial::count_a1(&eps[0], &stream)]);
+        assert_eq!(rep.metrics.cpu_fallbacks, 1);
+        assert_eq!(rep.metrics.shard_map_calls, 0);
+    }
+
+    #[test]
+    fn bounded_k_matches_bounded_serial() {
+        let (eps, stream) = world(33, 700);
+        let want: Vec<u64> =
+            eps.iter().map(|e| serial::count_a1_bounded(e, &stream, 4)).collect();
+        let rep = ShardedBackend::new(4).with_k(4).count(&eps, &stream).unwrap();
+        assert_eq!(rep.counts, want);
+    }
+
+    #[test]
+    fn relaxed_dominates_exact() {
+        let (eps, stream) = world(5, 600);
+        let mut be = ShardedBackend::new(4);
+        let exact = be.count(&eps, &stream).unwrap().counts;
+        let relaxed = be.count_relaxed(&eps, &stream).unwrap().counts;
+        for (r, x) in relaxed.iter().zip(&exact) {
+            assert!(r >= x);
+        }
+    }
+}

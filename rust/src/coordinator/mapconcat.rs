@@ -28,10 +28,23 @@ pub struct Plan {
 ///   segment, which the Map kernel does not scan).
 pub fn plan(rt: &Runtime, episodes: &[Episode], stream: &EventStream) -> Option<Plan> {
     let mf = rt.manifest();
-    let p = mf.mc_segments as i64;
-    if stream.len() > mf.mc_chunk || stream.is_empty() {
+    if stream.len() > mf.mc_chunk {
         return None;
     }
+    plan_even(episodes, stream, mf.mc_segments)
+}
+
+/// The host-side core of [`plan`]: an even time segmentation into `p`
+/// segments with the same feasibility rules, but no manifest/runtime in
+/// sight — this is what the stream-sharded CPU backend plans its per-thread
+/// time shards with. `None` when the stream is empty, has fewer ticks than
+/// segments, or some episode's constraint window (`sum t_high`) is at
+/// least as wide as the narrowest segment.
+pub fn plan_even(episodes: &[Episode], stream: &EventStream, p: usize) -> Option<Plan> {
+    if p == 0 || stream.is_empty() {
+        return None;
+    }
+    let p = p as i64;
     let t0 = stream.t_begin() as i64 - 1;
     let t1 = stream.t_end() as i64;
     let span = t1 - t0;
@@ -77,10 +90,19 @@ pub fn count(
 }
 
 /// Left-fold Concatenate: start from segment 0's machine 0 (the true
-/// stream-start automaton) and chain `b == a` matches.
+/// stream-start automaton) and chain `b == a` matches. Degenerate inputs
+/// no longer panic: an empty segment list folds to `(0, 0)`, and a segment
+/// with no machines (which a well-formed Map never produces) is flagged as
+/// a miss — so callers that recount on `misses > 0` never trust a count
+/// built over a hollow segment.
 pub fn concatenate_fold(segments: &[Vec<(Tick, u64, Tick)>]) -> (u64, u64) {
-    let mut total = segments[0][0].1;
-    let mut cur_b = segments[0][0].2;
+    let Some(first) = segments.first() else {
+        return (0, 0);
+    };
+    let Some(&(_, mut total, mut cur_b)) = first.first() else {
+        // no machine 0 to anchor the chain: every step is unverifiable
+        return (0, segments.len() as u64);
+    };
     let mut misses = 0u64;
     for seg in &segments[1..] {
         match seg.iter().find(|(a, _, _)| *a == cur_b) {
@@ -90,8 +112,10 @@ pub fn concatenate_fold(segments: &[Vec<(Tick, u64, Tick)>]) -> (u64, u64) {
             }
             None => {
                 misses += 1;
-                total += seg[0].1;
-                cur_b = seg[0].2;
+                if let Some(&(_, c, b)) = seg.first() {
+                    total += c;
+                    cur_b = b;
+                }
             }
         }
     }
@@ -103,6 +127,9 @@ pub fn concatenate_fold(segments: &[Vec<(Tick, u64, Tick)>]) -> (u64, u64) {
 /// equal to the fold; used by the ablation bench to compare merge costs.
 pub fn concatenate_tree(segments: &[Vec<(Tick, u64, Tick)>]) -> (u64, u64) {
     let mut level: Vec<Vec<(Tick, u64, Tick)>> = segments.to_vec();
+    if level.is_empty() {
+        return (0, 0);
+    }
     let mut misses = 0u64;
     while level.len() > 1 {
         let mut next = Vec::with_capacity(level.len().div_ceil(2));
@@ -128,7 +155,7 @@ pub fn concatenate_tree(segments: &[Vec<(Tick, u64, Tick)>]) -> (u64, u64) {
         }
         level = next;
     }
-    (level[0][0].1, misses)
+    (level[0].first().map(|&(_, c, _)| c).unwrap_or(0), misses)
 }
 
 #[cfg(test)]

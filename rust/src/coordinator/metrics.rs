@@ -12,6 +12,8 @@ pub struct Metrics {
     pub mapcat_calls: u64,
     /// MapConcatenate plans that fell back to PTPE
     pub mapcat_fallbacks: u64,
+    /// stream-sharded Map invocations on the CPU thread pool
+    pub shard_map_calls: u64,
     /// Concatenate chain steps with no b==a match
     pub concat_misses: u64,
     /// episode sizes with no artifact, counted on CPU
@@ -34,6 +36,7 @@ impl Metrics {
         self.ptpe_calls += other.ptpe_calls;
         self.mapcat_calls += other.mapcat_calls;
         self.mapcat_fallbacks += other.mapcat_fallbacks;
+        self.shard_map_calls += other.shard_map_calls;
         self.concat_misses += other.concat_misses;
         self.cpu_fallbacks += other.cpu_fallbacks;
         self.a2_culled += other.a2_culled;
@@ -45,12 +48,13 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "episodes={} ptpe_calls={} mapcat_calls={} mapcat_fallbacks={} \
-             concat_misses={} cpu_fallbacks={} a2_culled={} a2_survivors={} \
-             accel={:?} host={:?}",
+             shard_map_calls={} concat_misses={} cpu_fallbacks={} a2_culled={} \
+             a2_survivors={} accel={:?} host={:?}",
             self.episodes_counted,
             self.ptpe_calls,
             self.mapcat_calls,
             self.mapcat_fallbacks,
+            self.shard_map_calls,
             self.concat_misses,
             self.cpu_fallbacks,
             self.a2_culled,

@@ -40,14 +40,28 @@ pub enum Strategy {
     Hybrid,
     /// serial CPU reference (Algorithm 1)
     CpuSerial,
-    /// the paper's multithreaded CPU baseline (§6.4)
+    /// the paper's multithreaded CPU baseline (§6.4), episode-axis workers
     CpuParallel,
+    /// stream-axis CPU sharding: the MapConcatenate construction (§5.2.2)
+    /// on the host thread pool — one boundary-machine Map worker per time
+    /// shard, host Concatenate stitch, serial recount on flagged misses
+    CpuSharded,
 }
 
 impl Strategy {
     /// Every accepted strategy name (aliases included).
-    pub const NAMES: &'static [&'static str] =
-        &["ptpe", "a1", "mapconcat", "mc", "hybrid", "cpu", "cpu-serial", "cpu-parallel"];
+    pub const NAMES: &'static [&'static str] = &[
+        "ptpe",
+        "a1",
+        "mapconcat",
+        "mc",
+        "hybrid",
+        "cpu",
+        "cpu-serial",
+        "cpu-parallel",
+        "cpu-sharded",
+        "sharded",
+    ];
 
     /// Parse a strategy name; unknown names report the full valid list.
     pub fn parse(s: &str) -> Result<Strategy, MineError> {
@@ -57,6 +71,7 @@ impl Strategy {
             "hybrid" => Ok(Strategy::Hybrid),
             "cpu" | "cpu-serial" => Ok(Strategy::CpuSerial),
             "cpu-parallel" => Ok(Strategy::CpuParallel),
+            "cpu-sharded" | "sharded" => Ok(Strategy::CpuSharded),
             _ => Err(MineError::UnknownStrategy {
                 given: s.to_string(),
                 valid: Strategy::NAMES,
@@ -204,5 +219,6 @@ mod tests {
         assert!(Strategy::PtpeA1.needs_runtime());
         assert!(!Strategy::CpuSerial.needs_runtime());
         assert!(!Strategy::CpuParallel.needs_runtime());
+        assert!(!Strategy::CpuSharded.needs_runtime());
     }
 }

@@ -93,9 +93,16 @@ pub fn spawn_producer_with(
 ) -> Receiver<Partition> {
     let (tx, rx) = sync_channel(cfg.channel_bound.max(1));
     std::thread::spawn(move || {
-        let parts = stream.partitions(width_ticks);
-        for (index, part) in parts.into_iter().enumerate() {
-            let recording = Duration::from_millis(width_ticks as u64);
+        let t_end = stream.t_end();
+        let parts = stream.partitions_with_starts(width_ticks);
+        for (index, (part_start, part)) in parts.into_iter().enumerate() {
+            // A partition covers (part_start, part_start + width], except
+            // the tail, which the recording ends inside. Stamping the tail
+            // with a full width would overstate its real-time budget (and
+            // pre-send sleep), letting `realtime_ok()` pass a miner that is
+            // actually too slow — use the actual covered span.
+            let covered = (t_end - part_start).clamp(0, width_ticks);
+            let recording = Duration::from_millis(covered as u64);
             let mut wait = recording.div_f64(cfg.speedup.max(1e-9));
             if cfg.speedup > 1.0 {
                 wait = wait.min(cfg.max_wait);
@@ -175,6 +182,33 @@ mod tests {
             "real-time pacing was capped: {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn tail_partition_recording_is_covered_span_not_width() {
+        // Events span (0, 1491]; width 1000 → two partitions, the second
+        // covering only 491 ms of recording. Budgeting it a full 1000 ms
+        // would let a 600 ms mine pass the real-time criterion it should
+        // fail.
+        let rx = spawn_producer_with(
+            stream_ms(1500),
+            1000,
+            ProducerConfig { speedup: 1e6, ..Default::default() },
+        );
+        let parts: Vec<Partition> = rx.iter().collect();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].recording, Duration::from_millis(1000));
+        assert_eq!(parts[1].recording, Duration::from_millis(491));
+
+        let report = PartitionReport {
+            index: 1,
+            events: parts[1].stream.len(),
+            frequent: 0,
+            mine_time: Duration::from_millis(600),
+            recording: parts[1].recording,
+            result: Default::default(),
+        };
+        assert!(!report.realtime_ok(), "600ms mine must miss a 491ms budget");
     }
 
     #[test]

@@ -14,6 +14,11 @@ pub enum MineError {
     /// (The shipped backends fall back to CPU counting instead of raising
     /// this; it surfaces only from direct low-level `runtime::exec` use.)
     UnsupportedEpisodeSize { backend: String, n: usize },
+    /// An episode references an event type outside the stream's alphabet
+    /// `0..n_types`. Counting it is a contract violation (the per-type
+    /// frequency table and watcher indexes are alphabet-sized), so it is
+    /// a typed error rather than a panic or a silent 0.
+    OutOfAlphabet { type_id: i32, n_types: usize },
     /// A mining level generated more candidates than the configured cap —
     /// the fail-fast guardrail against a too-low theta on bursty data.
     CandidateExplosion { level: usize, candidates: usize, cap: usize },
@@ -63,6 +68,11 @@ impl fmt::Display for MineError {
             MineError::UnsupportedEpisodeSize { backend, n } => {
                 write!(f, "backend {backend} has no counting path for episode size {n}")
             }
+            MineError::OutOfAlphabet { type_id, n_types } => write!(
+                f,
+                "episode event type {type_id} is outside the stream alphabet \
+                 0..{n_types} — was the stream built with the right n_types?"
+            ),
             MineError::CandidateExplosion { level, candidates, cap } => write!(
                 f,
                 "level {level} generated {candidates} candidates (> {cap} cap) — raise \

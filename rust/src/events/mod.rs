@@ -99,6 +99,15 @@ impl EventStream {
     /// Split into fixed-duration partitions (the chip-on-chip streaming
     /// unit): each partition covers `(start + i*width, start + (i+1)*width]`.
     pub fn partitions(&self, width: Tick) -> Vec<EventStream> {
+        self.partitions_with_starts(width).into_iter().map(|(_, p)| p).collect()
+    }
+
+    /// [`EventStream::partitions`], with each partition tagged with its
+    /// window start: partition `i` covers `(start, start + width]`. The
+    /// single source of partition boundaries — the streaming producer uses
+    /// the starts to stamp each partition's actually-covered recording
+    /// span (the tail usually ends before a full width).
+    pub fn partitions_with_starts(&self, width: Tick) -> Vec<(Tick, EventStream)> {
         assert!(width > 0);
         if self.is_empty() {
             return vec![];
@@ -106,7 +115,7 @@ impl EventStream {
         let mut out = vec![];
         let mut t0 = self.t_begin() - 1;
         while t0 < self.t_end() {
-            out.push(self.window(t0, t0 + width));
+            out.push((t0, self.window(t0, t0 + width)));
             t0 += width;
         }
         out
@@ -165,6 +174,17 @@ mod tests {
         assert_eq!(total, s.len());
         // partition boundaries respect (lo, hi]
         assert_eq!(parts[0].times, vec![2, 2]);
+    }
+
+    #[test]
+    fn partitions_with_starts_tag_window_starts() {
+        let s = sample(); // times 2..=9, so t0 = 1
+        let parts = s.partitions_with_starts(3);
+        let starts: Vec<Tick> = parts.iter().map(|&(t0, _)| t0).collect();
+        assert_eq!(starts, vec![1, 4, 7]);
+        for (t0, p) in &parts {
+            assert!(p.times.iter().all(|&t| *t0 < t && t <= t0 + 3));
+        }
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //!
 //! Engines compose rather than enumerate: two-pass A2+A1 elimination is
 //! [`backend::two_pass::TwoPassBackend`] wrapping any exact engine, and
-//! Hybrid dispatch is [`backend::accel::HybridBackend`] wrapping any two.
+//! Hybrid dispatch is [`backend::accel::HybridBackend`] wrapping any two
+//! (e.g. `HybridBackend::cpu_sharded` pairing episode-axis workers with
+//! stream-axis time shards, no accelerator involved).
 //! Custom engines (multi-GPU, sharded pools, mocks for tests) implement
 //! [`CountBackend`] and plug into [`SessionBuilder::backend`] — no PJRT
 //! runtime required. Every public library function returns
@@ -43,8 +45,10 @@
 //! - [`runtime`] — PJRT loading/execution of the AOT-compiled Pallas
 //!   counting kernels (`artifacts/*.hlo.txt`). Absence is a runtime
 //!   condition ([`MineError::RuntimeUnavailable`]), never a build break.
-//! - [`backend`] — the counting engines: CPU serial/parallel, PTPE,
-//!   MapConcatenate, Hybrid composition, two-pass elimination.
+//! - [`backend`] — the counting engines: CPU serial/parallel
+//!   (episode-axis), stream-sharded CPU (stream-axis time shards, strategy
+//!   `cpu-sharded`), PTPE, MapConcatenate, Hybrid composition, two-pass
+//!   elimination.
 //! - [`session`] — the [`Session`] facade, its builder, and the level-wise
 //!   mining driver.
 //! - [`coordinator`] — strategy name menu, run metrics, the streaming

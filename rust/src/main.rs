@@ -45,7 +45,7 @@ fn run() -> Result<(), MineError> {
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
-                 \x20            [--max-level <n>] [--seed <u64>]\n\
+                 \x20            [--max-level <n>] [--seed <u64>] [--threads <n>]\n\
                  count       --dataset <name> --episode 0,1,2 --low 5 --high 15 [--seed <u64>]\n\
                  gen         --dataset <name> --out <path> [--format bin|csv] [--seed <u64>]\n\
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
@@ -88,6 +88,11 @@ fn session_builder(
         .theta(theta)
         .interval(interval_from(args, dataset))
         .max_level(args.get_usize("max-level", 8));
+    // Worker threads for the CPU engines: episode-axis workers for
+    // cpu-parallel, time shards for cpu-sharded (default: all cores).
+    if args.get("threads").is_some() {
+        b = b.cpu_threads(args.get_usize("threads", 1));
+    }
     match args.get_or("mode", "two-pass") {
         "two-pass" => {}
         "one-pass" => b = b.one_pass(),

@@ -8,6 +8,8 @@
 //! exactly; the shared fixtures in `rust/tests/cross_fixtures.rs` pin both
 //! sides together.
 
+use std::collections::VecDeque;
+
 use crate::episodes::Episode;
 use crate::events::{EventStream, Tick};
 
@@ -50,14 +52,17 @@ pub fn count_a1(ep: &Episode, stream: &EventStream) -> u64 {
 }
 
 /// Algorithm 1 with per-level lists bounded to the K most recent entries —
-/// the exact semantics of the GPU/Pallas A1 kernel.
+/// the exact semantics of the GPU/Pallas A1 kernel. Requires `k >= 1`
+/// (a zero-slot automaton is meaningless; debug builds assert);
+/// `k == usize::MAX` never evicts, i.e. behaves as unbounded `count_a1`.
 pub fn count_a1_bounded(ep: &Episode, stream: &EventStream, k: usize) -> u64 {
+    debug_assert!(k >= 1, "bounded lists need at least one slot");
     let n = ep.n();
     if n == 1 {
         return stream.types.iter().filter(|&&e| e == ep.types[0]).count() as u64;
     }
     let mut count = 0u64;
-    let mut s: Vec<Vec<Tick>> = vec![Vec::with_capacity(k + 1); n];
+    let mut s: Vec<VecDeque<Tick>> = vec![bounded_list(k); n];
     for (e, t) in stream.iter() {
         let mut completed = false;
         for i in (0..n).rev() {
@@ -71,7 +76,7 @@ pub fn count_a1_bounded(ep: &Episode, stream: &EventStream, k: usize) -> u64 {
                 if s[i - 1].iter().rev().any(|&tp| iv.admits(t - tp)) {
                     if i == n - 1 {
                         count += 1;
-                        s.iter_mut().for_each(Vec::clear);
+                        s.iter_mut().for_each(VecDeque::clear);
                         completed = true;
                     } else {
                         push_bounded(&mut s[i], t, k);
@@ -86,12 +91,22 @@ pub fn count_a1_bounded(ep: &Episode, stream: &EventStream, k: usize) -> u64 {
     count
 }
 
+/// A fresh bounded occurrence list. Small K pre-allocates exactly;
+/// unbounded (`usize::MAX`) grows on demand.
 #[inline]
-fn push_bounded(list: &mut Vec<Tick>, t: Tick, k: usize) {
-    list.push(t);
-    if list.len() > k {
-        list.remove(0);
+fn bounded_list(k: usize) -> VecDeque<Tick> {
+    VecDeque::with_capacity(k.saturating_add(1).min(64))
+}
+
+/// Ring-buffer push: evicting the oldest entry is O(1), unlike the
+/// `Vec::remove(0)` memmove this hot path used to pay on every bounded
+/// push. `k == usize::MAX` never evicts.
+#[inline]
+fn push_bounded(list: &mut VecDeque<Tick>, t: Tick, k: usize) {
+    if list.len() >= k {
+        list.pop_front();
     }
+    list.push_back(t);
 }
 
 /// Paper Algorithm 3: relaxed counting (upper bounds only), single
@@ -143,6 +158,7 @@ pub fn mapcat_map(
 ) -> Vec<Vec<(Tick, u64, Tick)>> {
     let n = ep.n();
     assert!(n >= 2);
+    debug_assert!(k >= 1, "bounded lists need at least one slot");
     let sumh = ep.span_max();
     let p_count = taus.len() - 1;
     let mut out = Vec::with_capacity(p_count);
@@ -152,7 +168,7 @@ pub fn mapcat_map(
         let mut tuples = Vec::with_capacity(n);
         for mk in 0..n {
             let start: Tick = tau_p - ep.intervals[..mk].iter().map(|iv| iv.t_high).sum::<Tick>();
-            let mut s: Vec<Vec<Tick>> = vec![Vec::with_capacity(k + 1); n];
+            let mut s: Vec<VecDeque<Tick>> = vec![bounded_list(k); n];
             let (mut cnt, mut a, mut b) = (0u64, tau_p, tau_p1);
             let (mut a_closed, mut frozen) = (false, false);
             for (e, t) in stream.iter() {
@@ -188,7 +204,7 @@ pub fn mapcat_map(
                     }
                 }
                 if completed {
-                    s.iter_mut().for_each(Vec::clear);
+                    s.iter_mut().for_each(VecDeque::clear);
                     if tau_p < t && t <= tau_p1 {
                         cnt += 1;
                         // inclusive window, mirroring the crossing window
@@ -287,6 +303,26 @@ mod tests {
         let s = stream(vec![(3, 1), (3, 2), (1, 3), (3, 9)]);
         assert_eq!(count_a1(&Episode::single(3), &s), 3);
         assert_eq!(count_a2(&Episode::single(3), &s), 3);
+    }
+
+    #[test]
+    fn bounded_with_usize_max_equals_unbounded() {
+        let mut rng = Rng::new(77);
+        for _ in 0..20 {
+            let mut pairs = vec![];
+            let mut t = 0;
+            for _ in 0..250 {
+                t += rng.range_i32(0, 3);
+                pairs.push((rng.range_i32(0, 4), t));
+            }
+            let s = stream(pairs);
+            let n = rng.range_i32(2, 4) as usize;
+            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 4)).collect();
+            let lows: Vec<i32> = (0..n - 1).map(|_| rng.range_i32(0, 3)).collect();
+            let highs: Vec<i32> = lows.iter().map(|&l| l + rng.range_i32(1, 9)).collect();
+            let e = ep(types, lows, highs);
+            assert_eq!(count_a1_bounded(&e, &s, usize::MAX), count_a1(&e, &s));
+        }
     }
 
     #[test]

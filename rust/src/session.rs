@@ -150,7 +150,20 @@ impl Session {
     /// with [`SessionBuilder::one_pass`] when exact counts for infrequent
     /// episodes matter — e.g. when migrating from the 0.1
     /// `Coordinator::count`, which was always exact.
+    ///
+    /// Episodes referencing event types outside the stream's alphabet are
+    /// rejected with [`MineError::OutOfAlphabet`] before any backend runs
+    /// (mining only generates in-alphabet candidates; explicit episodes
+    /// come from callers and deserve validation, not a panic).
     pub fn count(&mut self, episodes: &[Episode]) -> Result<Vec<u64>, MineError> {
+        let n_types = self.stream.n_types;
+        for ep in episodes {
+            if let Some(&ty) =
+                ep.types.iter().find(|&&ty| ty < 0 || ty as usize >= n_types)
+            {
+                return Err(MineError::OutOfAlphabet { type_id: ty, n_types });
+            }
+        }
         let report = self.backend.count(episodes, &self.stream)?;
         self.metrics.merge(&report.metrics);
         Ok(report.counts)
@@ -534,5 +547,38 @@ mod tests {
         let result = session.mine().unwrap();
         assert!(!result.frequent.is_empty());
         assert!(session.metrics().episodes_counted > 0);
+    }
+
+    #[test]
+    fn sharded_session_mines_end_to_end() {
+        let mut session = Session::builder()
+            .stream(tiny_stream())
+            .theta(1)
+            .interval(Interval::new(0, 10))
+            .strategy(Strategy::CpuSharded)
+            .cpu_threads(4)
+            .max_level(3)
+            .build()
+            .unwrap();
+        assert_eq!(session.backend_name(), "two-pass(cpu-sharded)");
+        let result = session.mine().unwrap();
+        assert!(!result.frequent.is_empty());
+    }
+
+    #[test]
+    fn count_rejects_out_of_alphabet_episodes() {
+        let mut session = Session::builder()
+            .stream(tiny_stream()) // alphabet 0..3
+            .theta(1)
+            .interval(Interval::new(0, 10))
+            .strategy(Strategy::CpuSerial)
+            .build()
+            .unwrap();
+        let err = session.count(&[Episode::single(9)]).err().unwrap();
+        assert!(matches!(err, MineError::OutOfAlphabet { type_id: 9, n_types: 3 }), "{err}");
+        // any node out of range is rejected, not just N=1 heads
+        let bad = Episode::new(vec![0, 7], vec![Interval::new(0, 10)]);
+        let err = session.count(std::slice::from_ref(&bad)).err().unwrap();
+        assert!(matches!(err, MineError::OutOfAlphabet { type_id: 7, .. }), "{err}");
     }
 }

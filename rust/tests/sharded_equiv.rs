@@ -1,0 +1,172 @@
+//! Backend-equivalence suite for the stream-sharded CPU engine (the
+//! randomized tests CI runs with `--release`; see `.github/workflows`).
+//!
+//! The contract under test: [`ShardedBackend`] splits the stream into
+//! per-thread time shards, maps boundary machines per shard, stitches with
+//! the Concatenate fold, and recounts flagged misses serially — so its
+//! counts must equal the serial reference *exactly*, for every shard
+//! count, on both the unbounded (default) and bounded-K configurations,
+//! and the frequency decision must survive `TwoPassBackend` composition.
+
+use episodes_gpu::backend::sharded::ShardedBackend;
+use episodes_gpu::backend::two_pass::TwoPassBackend;
+use episodes_gpu::backend::CountBackend;
+use episodes_gpu::coordinator::mapconcat::{concatenate_fold, concatenate_tree};
+use episodes_gpu::episodes::{Episode, Interval};
+use episodes_gpu::events::{EventStream, Tick};
+use episodes_gpu::mining::serial;
+use episodes_gpu::util::prop::{forall, small_size};
+use episodes_gpu::util::rng::Rng;
+
+const SHARD_COUNTS: [usize; 5] = [1, 2, 4, 8, 16];
+
+fn gen_stream(rng: &mut Rng, n_events: usize, n_types: i32) -> EventStream {
+    let mut pairs = Vec::with_capacity(n_events);
+    let mut t = 0;
+    for _ in 0..n_events {
+        t += rng.range_i32(0, 3);
+        pairs.push((rng.range_i32(0, n_types - 1), t));
+    }
+    EventStream::from_pairs(pairs, n_types as usize)
+}
+
+fn gen_episode(rng: &mut Rng, n_types: i32) -> Episode {
+    let n = rng.range_i32(2, 4) as usize;
+    let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, n_types - 1)).collect();
+    let ivs: Vec<Interval> = (0..n - 1)
+        .map(|_| {
+            let lo = rng.range_i32(0, 2);
+            Interval::new(lo, lo + rng.range_i32(1, 8))
+        })
+        .collect();
+    Episode::new(types, ivs)
+}
+
+#[test]
+fn sharded_equals_serial_across_shard_counts() {
+    for seed in 0..6 {
+        let mut rng = Rng::new(seed);
+        let stream = gen_stream(&mut rng, 1500, 5);
+        let mut eps: Vec<Episode> = (0..10).map(|_| gen_episode(&mut rng, 5)).collect();
+        eps.push(Episode::single(2)); // mixed batch: n=1 rides the host path
+        let want: Vec<u64> =
+            eps.iter().map(|e| serial::count_a1(e, &stream)).collect();
+        for shards in SHARD_COUNTS {
+            let rep = ShardedBackend::new(shards).count(&eps, &stream).unwrap();
+            assert_eq!(rep.counts, want, "seed {seed} shards {shards}");
+        }
+    }
+}
+
+#[test]
+fn sharded_bounded_equals_bounded_serial_across_shard_counts() {
+    // bounded-K configuration: equivalence target is the kernel-semantics
+    // count_a1_bounded at the same K (miss-recount path uses it too)
+    for seed in 100..104 {
+        let mut rng = Rng::new(seed);
+        let stream = gen_stream(&mut rng, 1200, 4);
+        let eps: Vec<Episode> = (0..8).map(|_| gen_episode(&mut rng, 4)).collect();
+        for k in [1, 2, 8] {
+            let want: Vec<u64> =
+                eps.iter().map(|e| serial::count_a1_bounded(e, &stream, k)).collect();
+            for shards in SHARD_COUNTS {
+                let rep =
+                    ShardedBackend::new(shards).with_k(k).count(&eps, &stream).unwrap();
+                assert_eq!(rep.counts, want, "seed {seed} k {k} shards {shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_equals_serial_on_random_worlds() {
+    // randomized streams *and* randomized shard counts, including shard
+    // counts the planner must reject (stream too short → episode-axis
+    // fallback) — counts are exact either way
+    forall("sharded == serial", 0x51A2, 60, |rng| {
+        let stream = gen_stream(rng, 40 + small_size(rng, 1200), 5);
+        let eps: Vec<Episode> =
+            (0..1 + small_size(rng, 8)).map(|_| gen_episode(rng, 5)).collect();
+        let shards = 1 + rng.below(16) as usize;
+        let got = ShardedBackend::new(shards).count(&eps, &stream).unwrap().counts;
+        for (i, ep) in eps.iter().enumerate() {
+            let want = serial::count_a1(ep, &stream);
+            if got[i] != want {
+                return Err(format!(
+                    "{}: shards={shards} sharded={} serial={want}",
+                    ep.display(),
+                    got[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_two_pass_is_exact_at_threshold() {
+    // mirror of `two_pass_is_exact_at_threshold` with the sharded engine
+    // inside: the `count >= theta` decision of the composition must equal
+    // the serial reference on every randomized world
+    forall("two-pass(cpu-sharded) decision == serial", 0x2B5D, 30, |rng| {
+        let stream = gen_stream(rng, 800, 5);
+        let eps: Vec<Episode> = (0..20).map(|_| gen_episode(rng, 5)).collect();
+        let theta = 4u64;
+        let shards = 1 + rng.below(8) as usize;
+        let mut tp = TwoPassBackend::new(Box::new(ShardedBackend::new(shards)), theta);
+        let (out, _) = tp.run(&eps, &stream).map_err(|e| e.to_string())?;
+        for (i, ep) in eps.iter().enumerate() {
+            let exact = serial::count_a1(ep, &stream);
+            if (out.counts[i] >= theta) != (exact >= theta) {
+                return Err(format!(
+                    "{}: shards={shards} decision {} vs exact {exact} (theta {theta})",
+                    ep.display(),
+                    out.counts[i]
+                ));
+            }
+            if out.relaxed_counts[i] >= theta && out.counts[i] != exact {
+                return Err(format!(
+                    "{}: survivor count {} != exact {exact}",
+                    ep.display(),
+                    out.counts[i]
+                ));
+            }
+            if out.relaxed_counts[i] < exact {
+                return Err(format!(
+                    "{}: relaxed {} < exact {exact} (Theorem 5.1)",
+                    ep.display(),
+                    out.relaxed_counts[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn concatenate_fold_single_segment_is_machine_zero() {
+    let seg: Vec<Vec<(Tick, u64, Tick)>> = vec![vec![(0, 3, 17), (5, 1, 9)]];
+    assert_eq!(concatenate_fold(&seg), (3, 0));
+    assert_eq!(concatenate_tree(&seg), (3, 0));
+}
+
+#[test]
+fn concatenate_fold_all_miss_accumulates_machine_zero() {
+    // no b == a match anywhere: every chain step is a flagged miss and the
+    // fold falls back to machine 0 of each segment
+    let segs: Vec<Vec<(Tick, u64, Tick)>> =
+        vec![vec![(0, 2, 10)], vec![(99, 3, 20)], vec![(77, 4, 30)]];
+    assert_eq!(concatenate_fold(&segs), (9, 2));
+}
+
+#[test]
+fn concatenate_fold_empty_inputs_do_not_panic() {
+    let empty: Vec<Vec<(Tick, u64, Tick)>> = vec![];
+    assert_eq!(concatenate_fold(&empty), (0, 0));
+    assert_eq!(concatenate_tree(&empty), (0, 0));
+    // a hollow first segment cannot anchor the chain: the count is 0 but
+    // every step is flagged as a miss so miss-recounting callers never
+    // trust it as exact
+    let hollow: Vec<Vec<(Tick, u64, Tick)>> = vec![vec![], vec![(5, 3, 9)]];
+    assert_eq!(concatenate_fold(&hollow), (0, 2));
+}
