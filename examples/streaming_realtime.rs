@@ -22,12 +22,12 @@ use episodes_gpu::{MineError, Session};
 
 fn main() -> Result<(), MineError> {
     let args = Args::from_env();
-    let width_ms = args.get_i32("width-ms", 10_000);
-    let speedup = args.get_f64("speedup", 50.0);
+    let width_ms = args.get_i32("width-ms", 10_000)?;
+    let speedup = args.get_f64("speedup", 50.0)?;
     // per-partition threshold: scale the full-recording theta by the
     // partition fraction
-    let theta = args.get_u64("theta", 12);
-    let channel_bound = args.get_usize("channel-bound", 4);
+    let theta = args.get_u64("theta", 12)?;
+    let channel_bound = args.get_usize("channel-bound", 4)?;
 
     let cfg = Sym26Config::default();
     let stream = generate(&cfg, 21);
@@ -73,7 +73,7 @@ fn main() -> Result<(), MineError> {
         stream,
         width_ms,
         ProducerConfig { speedup, channel_bound, ..Default::default() },
-    );
+    )?;
     let reports = session.mine_partitions(rx)?;
 
     let mut table = Table::new(

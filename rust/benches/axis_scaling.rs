@@ -18,18 +18,26 @@ use episodes_gpu::backend::CountBackend;
 use episodes_gpu::episodes::{Episode, Interval};
 use episodes_gpu::events::EventStream;
 use episodes_gpu::util::benchkit::{bench, fmt_ns, BenchCfg, Table};
-use episodes_gpu::util::cli::Args;
+use episodes_gpu::util::cli::{exit_usage, Args};
 use episodes_gpu::util::rng::Rng;
+use episodes_gpu::MineError;
 
 fn main() {
     let args = Args::from_env();
-    let n_events = args.get_usize("events", 200_000);
-    let n_eps = args.get_usize("episodes", 4);
+    let n_events = args.get_usize("events", 200_000).unwrap_or_else(exit_usage);
+    let n_eps = args.get_usize("episodes", 4).unwrap_or_else(exit_usage);
     let threads: Vec<usize> = args
         .get_or("threads", "1,2,4,8")
         .split(',')
-        .map(|s| s.parse().expect("--threads takes a comma list of integers"))
-        .collect();
+        .map(|s| {
+            s.parse().map_err(|_| {
+                MineError::invalid(format!(
+                    "bad --threads element {s:?} (expected a comma list of integers)"
+                ))
+            })
+        })
+        .collect::<Result<_, _>>()
+        .unwrap_or_else(exit_usage);
 
     let mut rng = Rng::new(0x5A4D);
     let mut pairs = Vec::with_capacity(n_events);

@@ -18,12 +18,18 @@ use episodes_gpu::util::rng::Rng;
 
 fn main() -> Result<(), episodes_gpu::MineError> {
     let args = Args::from_env();
-    let iters = args.get_usize("iters", 5);
+    let iters = args.get_usize("iters", 5)?;
     let sizes: Vec<usize> = args
         .get_or("sizes", "2,3,4,5,8")
         .split(',')
-        .map(|s| s.parse().unwrap())
-        .collect();
+        .map(|s| {
+            s.parse().map_err(|_| {
+                episodes_gpu::MineError::invalid(format!(
+                    "bad --sizes element {s:?} (expected a comma list of integers)"
+                ))
+            })
+        })
+        .collect::<Result<_, _>>()?;
 
     let rt = Runtime::open_default()?;
     let mf = *rt.manifest();

@@ -81,16 +81,36 @@ pub fn spawn_producer(
     stream: EventStream,
     width_ticks: Tick,
     speedup: f64,
-) -> Receiver<Partition> {
+) -> Result<Receiver<Partition>, MineError> {
     spawn_producer_with(stream, width_ticks, ProducerConfig { speedup, ..Default::default() })
 }
 
 /// Spawn a producer thread with explicit pacing/buffering configuration.
+///
+/// A non-finite or non-positive `speedup` is rejected up front as
+/// [`MineError::InvalidConfig`]: silently clamping it (the pre-0.3
+/// behavior) turned a typo like `speedup: 0.0` into a ~31-year sleep per
+/// 1 s partition on a detached thread — the kind of failure that must
+/// surface at the call site, not hang the pipeline.
 pub fn spawn_producer_with(
     stream: EventStream,
     width_ticks: Tick,
     cfg: ProducerConfig,
-) -> Receiver<Partition> {
+) -> Result<Receiver<Partition>, MineError> {
+    if !cfg.speedup.is_finite() || cfg.speedup <= 0.0 {
+        return Err(MineError::invalid(format!(
+            "ProducerConfig::speedup must be finite and > 0, got {}",
+            cfg.speedup
+        )));
+    }
+    if width_ticks <= 0 {
+        // Same failure class, one parameter over: the partitioner's
+        // width assert would otherwise fire on the detached thread and
+        // silently yield an empty partition stream.
+        return Err(MineError::invalid(format!(
+            "partition width must be > 0 ticks, got {width_ticks}"
+        )));
+    }
     let (tx, rx) = sync_channel(cfg.channel_bound.max(1));
     std::thread::spawn(move || {
         let t_end = stream.t_end();
@@ -103,7 +123,7 @@ pub fn spawn_producer_with(
             // actually too slow — use the actual covered span.
             let covered = (t_end - part_start).clamp(0, width_ticks);
             let recording = Duration::from_millis(covered as u64);
-            let mut wait = recording.div_f64(cfg.speedup.max(1e-9));
+            let mut wait = recording.div_f64(cfg.speedup);
             if cfg.speedup > 1.0 {
                 wait = wait.min(cfg.max_wait);
             }
@@ -113,7 +133,7 @@ pub fn spawn_producer_with(
             }
         }
     });
-    rx
+    Ok(rx)
 }
 
 impl Coordinator {
@@ -158,7 +178,8 @@ mod tests {
             stream_ms(8000),
             2000,
             ProducerConfig { speedup: 1000.0, ..Default::default() },
-        );
+        )
+        .unwrap();
         let t0 = Instant::now();
         let parts: Vec<Partition> = rx.iter().collect();
         assert_eq!(parts.len(), 4);
@@ -173,7 +194,8 @@ mod tests {
             stream_ms(1200),
             1200,
             ProducerConfig { speedup: 1.0, ..Default::default() },
-        );
+        )
+        .unwrap();
         let t0 = Instant::now();
         let parts: Vec<Partition> = rx.iter().collect();
         assert_eq!(parts.len(), 1);
@@ -194,7 +216,8 @@ mod tests {
             stream_ms(1500),
             1000,
             ProducerConfig { speedup: 1e6, ..Default::default() },
-        );
+        )
+        .unwrap();
         let parts: Vec<Partition> = rx.iter().collect();
         assert_eq!(parts.len(), 2);
         assert_eq!(parts[0].recording, Duration::from_millis(1000));
@@ -212,6 +235,27 @@ mod tests {
     }
 
     #[test]
+    fn bad_speedups_are_rejected_up_front() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = spawn_producer_with(
+                stream_ms(100),
+                50,
+                ProducerConfig { speedup: bad, ..Default::default() },
+            )
+            .err()
+            .unwrap_or_else(|| panic!("speedup {bad} must be rejected"));
+            assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+        }
+        // tiny-but-positive finite speedups remain the caller's choice
+        assert!(spawn_producer(stream_ms(10), 1000, 1e6).is_ok());
+        // width is validated in the same up-front pass
+        for bad_width in [0, -5] {
+            let err = spawn_producer(stream_ms(100), bad_width, 10.0).err().unwrap();
+            assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+        }
+    }
+
+    #[test]
     fn channel_bound_is_configurable() {
         // A bound of 1 with an instant producer: the producer can run at
         // most one partition ahead of the consumer; all partitions still
@@ -220,7 +264,8 @@ mod tests {
             stream_ms(5000),
             500,
             ProducerConfig { speedup: 1e6, channel_bound: 1, ..Default::default() },
-        );
+        )
+        .unwrap();
         let n = rx.iter().count();
         assert_eq!(n, 10);
     }

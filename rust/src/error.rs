@@ -22,6 +22,10 @@ pub enum MineError {
     /// A mining level generated more candidates than the configured cap —
     /// the fail-fast guardrail against a too-low theta on bursty data.
     CandidateExplosion { level: usize, candidates: usize, cap: usize },
+    /// The mining service's admission queue is full. A bounded queue must
+    /// reject (so clients can back off) rather than buffer unboundedly;
+    /// `queue_depth` is the depth observed at rejection time.
+    Busy { queue_depth: usize, capacity: usize },
     /// The PJRT runtime (artifacts + client) could not be opened. CPU
     /// backends remain fully functional without it.
     RuntimeUnavailable { reason: String },
@@ -78,6 +82,11 @@ impl fmt::Display for MineError {
                 "level {level} generated {candidates} candidates (> {cap} cap) — raise \
                  theta or max_candidates_per_level"
             ),
+            MineError::Busy { queue_depth, capacity } => write!(
+                f,
+                "service busy: admission queue at capacity ({queue_depth}/{capacity}) — \
+                 back off and retry, or raise ServiceConfig::queue_capacity"
+            ),
             MineError::RuntimeUnavailable { reason } => {
                 write!(f, "PJRT runtime unavailable: {reason}")
             }
@@ -91,6 +100,52 @@ impl fmt::Display for MineError {
             MineError::Io { what, source } => write!(f, "{what}: {source}"),
             MineError::Accelerator { what } => write!(f, "accelerator error: {what}"),
             MineError::Internal { what } => write!(f, "internal error: {what}"),
+        }
+    }
+}
+
+/// Manual because `std::io::Error` is not `Clone`: the duplicate keeps the
+/// kind and message. Needed by the serving layer, where one execution's
+/// outcome fans out to every coalesced waiter.
+impl Clone for MineError {
+    fn clone(&self) -> MineError {
+        match self {
+            MineError::UnsupportedEpisodeSize { backend, n } => {
+                MineError::UnsupportedEpisodeSize { backend: backend.clone(), n: *n }
+            }
+            MineError::OutOfAlphabet { type_id, n_types } => {
+                MineError::OutOfAlphabet { type_id: *type_id, n_types: *n_types }
+            }
+            MineError::CandidateExplosion { level, candidates, cap } => {
+                MineError::CandidateExplosion {
+                    level: *level,
+                    candidates: *candidates,
+                    cap: *cap,
+                }
+            }
+            MineError::Busy { queue_depth, capacity } => {
+                MineError::Busy { queue_depth: *queue_depth, capacity: *capacity }
+            }
+            MineError::RuntimeUnavailable { reason } => {
+                MineError::RuntimeUnavailable { reason: reason.clone() }
+            }
+            MineError::InvalidConfig { what } => {
+                MineError::InvalidConfig { what: what.clone() }
+            }
+            MineError::UnknownStrategy { given, valid } => {
+                MineError::UnknownStrategy { given: given.clone(), valid }
+            }
+            MineError::UnknownDataset { given, valid } => {
+                MineError::UnknownDataset { given: given.clone(), valid: valid.clone() }
+            }
+            MineError::Io { what, source } => MineError::Io {
+                what: what.clone(),
+                source: std::io::Error::new(source.kind(), source.to_string()),
+            },
+            MineError::Accelerator { what } => {
+                MineError::Accelerator { what: what.clone() }
+            }
+            MineError::Internal { what } => MineError::Internal { what: what.clone() },
         }
     }
 }
@@ -122,6 +177,24 @@ mod tests {
 
         let e = MineError::UnknownStrategy { given: "warp".into(), valid: &["hybrid", "cpu"] };
         assert!(e.to_string().contains("hybrid"));
+    }
+
+    #[test]
+    fn clone_preserves_variant_and_io_kind() {
+        let e = MineError::Busy { queue_depth: 8, capacity: 8 };
+        assert!(matches!(e.clone(), MineError::Busy { queue_depth: 8, capacity: 8 }));
+
+        let e = MineError::io(
+            "reading x",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        match e.clone() {
+            MineError::Io { what, source } => {
+                assert_eq!(what, "reading x");
+                assert_eq!(source.kind(), std::io::ErrorKind::NotFound);
+            }
+            other => panic!("wrong variant: {other}"),
+        }
     }
 
     #[test]

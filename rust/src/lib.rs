@@ -51,6 +51,11 @@
 //!   elimination.
 //! - [`session`] — the [`Session`] facade, its builder, and the level-wise
 //!   mining driver.
+//! - [`serve`] — the multi-tenant mining service: a worker pool over the
+//!   engines with request coalescing, a sharded LRU result cache keyed by
+//!   exact stream fingerprint, bounded admission ([`MineError::Busy`]),
+//!   service metrics, and a closed-loop load generator
+//!   (`epminer serve-bench`, `benches/serve_load.rs`).
 //! - [`coordinator`] — strategy name menu, run metrics, the streaming
 //!   partition producer, and the deprecated pre-0.2 `Coordinator` shims.
 //! - [`util`] — RNG, stats, CLI, bench and property-test harnesses.
@@ -65,10 +70,12 @@ pub mod events;
 pub mod gpu_model;
 pub mod mining;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod util;
 
 pub use backend::{CountBackend, CountReport};
 pub use coordinator::Strategy;
 pub use error::MineError;
+pub use serve::{MineService, ServiceConfig};
 pub use session::{Session, SessionBuilder};

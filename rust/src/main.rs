@@ -1,14 +1,16 @@
 //! `epminer`: CLI front-end for the episodes-gpu miner.
 //!
 //! Subcommands:
-//!   mine      — level-wise mining over a named dataset
-//!   count     — count explicit episodes (debugging/inspection)
-//!   gen       — generate a dataset to a file (binary or csv)
-//!   info      — runtime/artifact information
+//!   mine        — level-wise mining over a named dataset
+//!   count       — count explicit episodes (debugging/inspection)
+//!   gen         — generate a dataset to a file (binary or csv)
+//!   serve-bench — load-test the multi-tenant mining service (serve/)
+//!   info        — runtime/artifact information
 //!
 //! Examples:
 //!   epminer mine --dataset sym26 --theta 60 --mode two-pass
 //!   epminer gen --dataset 2-1-35 --out /tmp/d35.bin
+//!   epminer serve-bench --smoke
 //!   epminer info
 //!
 //! Everything mining-shaped runs through the `Session` facade; `--strategy`
@@ -38,10 +40,11 @@ fn run() -> Result<(), MineError> {
         Some("reconstruct") => cmd_reconstruct(&args),
         Some("raster") => cmd_raster(&args),
         Some("profile") => cmd_profile(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: epminer <mine|count|gen|reconstruct|raster|profile|info> [options]\n\
+                "usage: epminer <mine|count|gen|reconstruct|raster|profile|serve-bench|info> [options]\n\
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
@@ -51,6 +54,9 @@ fn run() -> Result<(), MineError> {
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
                  raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
                  profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
+                 serve-bench [--clients <n>] [--requests <n>] [--workers <n>] [--queue <n>]\n\
+                 \x20            [--cache <entries>] [--strategy <name>] [--events <n>]\n\
+                 \x20            [--seed <u64>] [--smoke] — load-test the mining service\n\
                  info",
                 names = datasets::names().join("|"),
                 strategies = Strategy::NAMES.join("|"),
@@ -62,7 +68,7 @@ fn run() -> Result<(), MineError> {
 
 fn load_dataset(args: &Args) -> Result<(episodes_gpu::events::EventStream, String), MineError> {
     let name = args.get_or("dataset", "sym26").to_string();
-    let seed = args.get_u64("seed", 7);
+    let seed = args.get_u64("seed", 7)?;
     match datasets::by_name(&name, seed) {
         Some((stream, tag)) => Ok((stream, tag.to_string())),
         None => Err(MineError::UnknownDataset { given: name, valid: datasets::names() }),
@@ -71,9 +77,9 @@ fn load_dataset(args: &Args) -> Result<(episodes_gpu::events::EventStream, Strin
 
 /// Default delay band for a dataset comes from the registry; `--low` /
 /// `--high` override it.
-fn interval_from(args: &Args, dataset: &str) -> Interval {
+fn interval_from(args: &Args, dataset: &str) -> Result<Interval, MineError> {
     let d = datasets::default_interval(dataset).unwrap_or_else(|| Interval::new(2, 10));
-    Interval::new(args.get_i32("low", d.t_low), args.get_i32("high", d.t_high))
+    Ok(Interval::new(args.get_i32("low", d.t_low)?, args.get_i32("high", d.t_high)?))
 }
 
 /// Shared `Session` setup for the mining-shaped subcommands.
@@ -86,12 +92,12 @@ fn session_builder(
     let mut b = Session::builder()
         .stream(stream)
         .theta(theta)
-        .interval(interval_from(args, dataset))
-        .max_level(args.get_usize("max-level", 8));
+        .interval(interval_from(args, dataset)?)
+        .max_level(args.get_usize("max-level", 8)?);
     // Worker threads for the CPU engines: episode-axis workers for
     // cpu-parallel, time shards for cpu-sharded (default: all cores).
     if args.get("threads").is_some() {
-        b = b.cpu_threads(args.get_usize("threads", 1));
+        b = b.cpu_threads(args.get_usize("threads", 1)?);
     }
     match args.get_or("mode", "two-pass") {
         "two-pass" => {}
@@ -120,7 +126,7 @@ fn cmd_mine(args: &Args) -> Result<(), MineError> {
         stream.span() as f64 / 1000.0,
         stream.mean_rate_hz()
     );
-    let theta = args.get_u64("theta", 100);
+    let theta = args.get_u64("theta", 100)?;
     let mut session = session_builder(args, stream, &name, theta)?.build()?;
     println!("backend: {}", session.backend_name());
 
@@ -160,7 +166,7 @@ fn cmd_count(args: &Args) -> Result<(), MineError> {
                 .map_err(|_| MineError::invalid(format!("bad --episode element {s:?}")))
         })
         .collect::<Result<_, _>>()?;
-    let iv = interval_from(args, &name);
+    let iv = interval_from(args, &name)?;
     let n_nodes = types.len();
     let ep = Episode::new(types, vec![iv; n_nodes - 1]);
 
@@ -193,7 +199,7 @@ fn cmd_reconstruct(args: &Args) -> Result<(), MineError> {
     use episodes_gpu::analysis::connectivity::Circuit;
     use episodes_gpu::analysis::summarize::maximal_episodes;
     let (stream, name) = load_dataset(args)?;
-    let theta = args.get_u64("theta", 60);
+    let theta = args.get_u64("theta", 60)?;
     let mut session = session_builder(args, stream, &name, theta)?.build()?;
     let result = session.mine()?;
 
@@ -225,15 +231,24 @@ fn cmd_reconstruct(args: &Args) -> Result<(), MineError> {
 fn cmd_raster(args: &Args) -> Result<(), MineError> {
     use episodes_gpu::analysis::raster;
     let (stream, name) = load_dataset(args)?;
-    let from = args.get_i32("from", stream.t_begin());
-    let to = args.get_i32("to", (stream.t_begin() + 2000).min(stream.t_end()));
-    let ep = args.get("episode").map(|spec| {
-        let types: Vec<i32> =
-            spec.split(',').map(|s| s.trim().parse().unwrap()).collect();
-        let iv = interval_from(args, &name);
-        let n_nodes = types.len();
-        Episode::new(types, vec![iv; n_nodes - 1])
-    });
+    let from = args.get_i32("from", stream.t_begin())?;
+    let to = args.get_i32("to", (stream.t_begin() + 2000).min(stream.t_end()))?;
+    let ep = match args.get("episode") {
+        None => None,
+        Some(spec) => {
+            let types: Vec<i32> = spec
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<i32>().map_err(|_| {
+                        MineError::invalid(format!("bad --episode element {s:?}"))
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            let iv = interval_from(args, &name)?;
+            let n_nodes = types.len();
+            Some(Episode::new(types, vec![iv; n_nodes - 1]))
+        }
+    };
     print!("{}", raster::render(&stream, from, to, 100, 30, ep.as_ref()));
     Ok(())
 }
@@ -242,10 +257,10 @@ fn cmd_profile(args: &Args) -> Result<(), MineError> {
     use episodes_gpu::mining::telemetry::{profile_a1, profile_a2};
     use episodes_gpu::util::rng::Rng;
     let (stream, name) = load_dataset(args)?;
-    let n = args.get_usize("size", 4);
-    let count = args.get_usize("episodes", 256);
-    let iv = interval_from(args, &name);
-    let mut rng = Rng::new(args.get_u64("seed", 7));
+    let n = args.get_usize("size", 4)?;
+    let count = args.get_usize("episodes", 256)?;
+    let iv = interval_from(args, &name)?;
+    let mut rng = Rng::new(args.get_u64("seed", 7)?);
     let eps: Vec<Episode> = (0..count)
         .map(|_| {
             let types: Vec<i32> =
@@ -260,6 +275,67 @@ fn cmd_profile(args: &Args) -> Result<(), MineError> {
         c1.branches, c1.divergent_branches, c1.local_loads, c1.local_stores);
     println!("  A2: branches={} divergent={} local_loads={} local_stores={}",
         c2.branches, c2.divergent_branches, c2.local_loads, c2.local_stores);
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::serve::loadgen::{self, LoadGenConfig, Workload};
+    use episodes_gpu::serve::{MineService, ServiceConfig};
+
+    // --smoke shrinks everything so CI can exercise the full path in
+    // seconds; explicit flags still override either profile.
+    let smoke = args.flag("smoke");
+    let mut lg = if smoke { LoadGenConfig::smoke() } else { LoadGenConfig::default() };
+    lg.clients = args.get_usize("clients", lg.clients)?;
+    lg.requests_per_client = args.get_usize("requests", lg.requests_per_client)?;
+    lg.base_events = args.get_usize("events", lg.base_events)?;
+    lg.seed = args.get_u64("seed", lg.seed)?;
+
+    let d = ServiceConfig::default();
+    let sc = ServiceConfig {
+        workers: args.get_usize("workers", d.workers)?,
+        queue_capacity: args.get_usize("queue", d.queue_capacity)?,
+        cache_capacity: args.get_usize("cache", d.cache_capacity)?,
+        strategy: match args.get("strategy") {
+            Some(s) => Strategy::parse(s)?,
+            None => d.strategy,
+        },
+        ..d
+    };
+
+    println!(
+        "serve-bench: {} clients x {} requests over {} workers \
+         (queue {}, cache {}, strategy {:?})",
+        lg.clients,
+        lg.requests_per_client,
+        sc.workers,
+        sc.queue_capacity,
+        sc.cache_capacity,
+        sc.strategy,
+    );
+    let workload = Workload::build(&lg)?;
+    let service = MineService::start(sc)?;
+    let report = loadgen::run(&service, &workload, &lg);
+    let metrics = service.shutdown();
+
+    println!(
+        "\ncompleted {} rejected {} errors {} in {:.2}s -> {:.1} qps",
+        report.completed,
+        report.rejected,
+        report.errors,
+        report.wall.as_secs_f64(),
+        report.qps,
+    );
+    if let Some(lat) = &report.latency_ns {
+        println!(
+            "client latency: p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+            lat.median / 1e6,
+            lat.p95 / 1e6,
+            lat.p99 / 1e6,
+        );
+    }
+    println!("service: {}", metrics.report());
+    println!("\n{}", report.to_json());
     Ok(())
 }
 

@@ -1,0 +1,243 @@
+//! Sharded LRU result cache keyed by [`QueryKey`], verified by content.
+//!
+//! Results are cached under the exact stream fingerprint, so a hit can
+//! never be stale — there is no invalidation problem because a mutated or
+//! extended stream hashes to a different key. The fingerprint is only the
+//! *routing* identity, though: each entry keeps its [`Query`] and every
+//! lookup re-verifies exact semantic equality ([`Query::equivalent`]), so
+//! a fingerprint collision (FNV-style mixing is invertible, and tenants
+//! are untrusted) degrades to a miss/overwrite instead of serving one
+//! tenant another tenant's counts. Sharding (by fingerprint low bits)
+//! keeps lock contention off the submit hot path; eviction is LRU per
+//! shard via a last-used stamp and a scan, which is O(shard capacity)
+//! only on insertion into a full shard — fine at the few-hundred entry
+//! capacities a result cache wants (each entry is a full [`MineResult`],
+//! not a counter).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::miner::MineResult;
+
+use super::query::{Query, QueryKey};
+
+/// Hit/miss/eviction counters plus current occupancy, as one snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Shard {
+    /// monotonic per-shard use counter stamping recency
+    clock: u64,
+    entries: HashMap<QueryKey, Entry>,
+}
+
+struct Entry {
+    last_used: u64,
+    /// the query this result answers, for collision verification (streams
+    /// are `Arc`-shared, so this is cheap for repeat-heavy workloads)
+    query: Query,
+    result: Arc<MineResult>,
+}
+
+/// A sharded LRU cache of mining results. `capacity == 0` disables
+/// caching (every lookup misses, inserts are dropped).
+pub struct ResultCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ResultCache {
+    /// `capacity` total entries spread over `shards` (rounded up to a
+    /// power of two so the fingerprint's low bits select a shard).
+    pub fn new(capacity: usize, shards: usize) -> ResultCache {
+        let n_shards = shards.max(1).next_power_of_two();
+        let per_shard_capacity = if capacity == 0 { 0 } else { capacity.div_ceil(n_shards) };
+        ResultCache {
+            shards: (0..n_shards)
+                .map(|_| Mutex::new(Shard { clock: 0, entries: HashMap::new() }))
+                .collect(),
+            per_shard_capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &QueryKey) -> &Mutex<Shard> {
+        &self.shards[key.fingerprint() as usize & (self.shards.len() - 1)]
+    }
+
+    fn lookup(&self, key: &QueryKey, query: &Query) -> Option<Arc<MineResult>> {
+        if self.per_shard_capacity == 0 {
+            return None;
+        }
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.clock += 1;
+        let now = shard.clock;
+        match shard.entries.get_mut(key) {
+            Some(entry) if entry.query.equivalent(query) => {
+                entry.last_used = now;
+                Some(entry.result.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Look up `query`'s result, counting a hit or miss. A same-key entry
+    /// whose contents are not [`Query::equivalent`] is a miss.
+    pub fn get(&self, key: &QueryKey, query: &Query) -> Option<Arc<MineResult>> {
+        let found = self.lookup(key, query);
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// [`ResultCache::get`] without touching the hit/miss counters (still
+    /// freshens recency). The submit path uses this to re-check the cache
+    /// under the in-flight lock — a job can complete (cache insert, then
+    /// in-flight removal) between a counted miss and that lock, and the
+    /// re-check closes the window without double-counting the lookup.
+    pub fn peek(&self, key: &QueryKey, query: &Query) -> Option<Arc<MineResult>> {
+        self.lookup(key, query)
+    }
+
+    /// Insert (or replace) the result for `query`. A same-key entry for a
+    /// non-equivalent query is overwritten — the collision degrades to
+    /// thrash between the colliding tenants, never to a wrong answer.
+    pub fn insert(&self, key: QueryKey, query: Query, result: Arc<MineResult>) {
+        if self.per_shard_capacity == 0 {
+            return;
+        }
+        let mut shard = self.shard(&key).lock().unwrap();
+        shard.clock += 1;
+        let now = shard.clock;
+        if shard.entries.len() >= self.per_shard_capacity && !shard.entries.contains_key(&key)
+        {
+            let victim =
+                shard.entries.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                shard.entries.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.entries.insert(key, Entry { last_used: now, query, result });
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+    use crate::events::EventStream;
+
+    fn query(theta: u64) -> Query {
+        let stream = Arc::new(EventStream::from_pairs(vec![(0, 1), (1, 5)], 2));
+        Query::new(stream, theta, vec![Interval::new(0, 4)])
+    }
+
+    fn result() -> Arc<MineResult> {
+        Arc::new(MineResult::default())
+    }
+
+    fn put(cache: &ResultCache, q: &Query) {
+        cache.insert(q.key(), q.clone(), result());
+    }
+
+    #[test]
+    fn get_after_insert_hits() {
+        let cache = ResultCache::new(8, 2);
+        let q = query(3);
+        assert!(cache.get(&q.key(), &q).is_none());
+        put(&cache, &q);
+        assert!(cache.get(&q.key(), &q).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_used() {
+        // single shard, capacity 2: freshen q1, insert q3 → q2 evicted
+        let cache = ResultCache::new(2, 1);
+        let (q1, q2, q3) = (query(1), query(2), query(3));
+        put(&cache, &q1);
+        put(&cache, &q2);
+        assert!(cache.get(&q1.key(), &q1).is_some());
+        put(&cache, &q3);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(&q1.key(), &q1).is_some(), "freshened entry survives");
+        assert!(cache.get(&q2.key(), &q2).is_none(), "LRU entry evicted");
+        assert!(cache.get(&q3.key(), &q3).is_some());
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = ResultCache::new(0, 4);
+        let q = query(1);
+        put(&cache, &q);
+        assert!(cache.get(&q.key(), &q).is_none());
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn reinsert_updates_in_place_without_eviction() {
+        let cache = ResultCache::new(1, 1);
+        let q = query(1);
+        put(&cache, &q);
+        put(&cache, &q);
+        assert_eq!(cache.stats().evictions, 0);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn same_key_different_query_is_a_miss_not_an_alias() {
+        // Simulate a fingerprint collision by looking up a *different*
+        // query under q1's key: content verification must refuse the hit.
+        let cache = ResultCache::new(8, 1);
+        let (q1, q2) = (query(1), query(2));
+        put(&cache, &q1);
+        assert!(cache.get(&q1.key(), &q2).is_none(), "colliding lookup must miss");
+        assert!(cache.get(&q1.key(), &q1).is_some());
+    }
+}

@@ -1,0 +1,405 @@
+//! Closed-loop load generator for [`MineService`]: M client threads, each
+//! submitting and waiting (closed loop — a client has at most one request
+//! outstanding), drawing from a weighted scenario mix:
+//!
+//! - **hot repeats** — a small set of queries hit over and over (the
+//!   connectivity-inference pattern: many analyses over one recording);
+//!   after the first execution these are cache hits.
+//! - **theta sweeps** — the same stream at stepped support thresholds
+//!   (the parameter-scan pattern); every theta is a distinct key, but
+//!   clients step in lockstep so coalescing and caching both help.
+//! - **distinct datasets** — unique streams, guaranteed cache misses
+//!   (and, past cache capacity, evictions).
+//! - **sliding stream windows** — partitions of the base stream produced
+//!   by the existing chip-on-chip partition producer
+//!   ([`spawn_producer_with`]), the streaming re-mine pattern.
+//!
+//! The [`Workload`] (query universe) is built once and deterministically
+//! from the config seed, so the same scenario set can be replayed against
+//! the service, the serial baseline, or a direct `Session` — that replay
+//! is how the service-equivalence test and the `serve_load` bench are
+//! built.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::streaming::{spawn_producer_with, ProducerConfig};
+use crate::episodes::Interval;
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+use super::metrics::ServiceMetrics;
+use super::pool::MineService;
+use super::query::Query;
+
+/// Relative draw weights for the scenario mix (0 disables a scenario).
+#[derive(Clone, Copy, Debug)]
+pub struct MixWeights {
+    pub hot_repeat: u32,
+    pub theta_sweep: u32,
+    pub distinct: u32,
+    pub sliding_window: u32,
+}
+
+impl Default for MixWeights {
+    fn default() -> MixWeights {
+        MixWeights { hot_repeat: 60, theta_sweep: 20, distinct: 10, sliding_window: 10 }
+    }
+}
+
+impl MixWeights {
+    fn total(&self) -> u32 {
+        self.hot_repeat + self.theta_sweep + self.distinct + self.sliding_window
+    }
+}
+
+/// Load-generator shape: client count, per-client request count, the mix,
+/// and the synthetic-workload sizes.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub mix: MixWeights,
+    pub seed: u64,
+    /// events in the shared base stream (hot/sweep/sliding scenarios)
+    pub base_events: usize,
+    pub n_types: usize,
+    /// number of distinct hot queries
+    pub hot_set: usize,
+    /// theta sweep over `sweep_theta_lo ..= sweep_theta_hi` (stepped)
+    pub sweep_theta_lo: u64,
+    pub sweep_theta_hi: u64,
+    /// pool of unique-stream queries (clients cycle through it), each
+    /// with `distinct_events` events
+    pub distinct_pool: usize,
+    pub distinct_events: usize,
+    /// sliding-window width in ticks
+    pub window_ticks: i32,
+    pub max_level: usize,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> LoadGenConfig {
+        LoadGenConfig {
+            clients: 8,
+            requests_per_client: 50,
+            mix: MixWeights::default(),
+            seed: 0x5EED,
+            base_events: 20_000,
+            n_types: 8,
+            hot_set: 4,
+            sweep_theta_lo: 6,
+            sweep_theta_hi: 26,
+            distinct_pool: 32,
+            distinct_events: 2_000,
+            window_ticks: 4_000,
+            max_level: 4,
+        }
+    }
+}
+
+impl LoadGenConfig {
+    /// The shrunk profile behind every `--smoke` flag (CI, `epminer
+    /// serve-bench`, `benches/serve_load.rs`): one definition, so what CI
+    /// measures is what the CLI reports.
+    pub fn smoke() -> LoadGenConfig {
+        LoadGenConfig {
+            clients: 4,
+            requests_per_client: 25,
+            base_events: 6_000,
+            distinct_pool: 8,
+            distinct_events: 800,
+            window_ticks: 1_500,
+            ..LoadGenConfig::default()
+        }
+    }
+}
+
+/// The deterministic query universe the clients draw from.
+pub struct Workload {
+    pub hot: Vec<Query>,
+    pub sweep: Vec<Query>,
+    pub distinct: Vec<Query>,
+    pub sliding: Vec<Query>,
+}
+
+fn synth_stream(rng: &mut Rng, events: usize, n_types: usize) -> EventStream {
+    let mut pairs = Vec::with_capacity(events);
+    let mut t = 0;
+    for _ in 0..events {
+        t += rng.range_i32(1, 3);
+        pairs.push((rng.range_i32(0, n_types as i32 - 1), t));
+    }
+    EventStream::from_pairs(pairs, n_types)
+}
+
+impl Workload {
+    pub fn build(cfg: &LoadGenConfig) -> Result<Workload, MineError> {
+        if cfg.clients == 0 || cfg.requests_per_client == 0 {
+            return Err(MineError::invalid("loadgen needs clients >= 1 and requests >= 1"));
+        }
+        if cfg.mix.total() == 0 {
+            return Err(MineError::invalid("loadgen mix weights must not all be 0"));
+        }
+        if cfg.n_types < 2 || cfg.base_events == 0 {
+            return Err(MineError::invalid("loadgen needs n_types >= 2 and base_events >= 1"));
+        }
+        let mut rng = Rng::new(cfg.seed);
+        let iv = Interval::new(0, 6);
+        let base = Arc::new(synth_stream(&mut rng, cfg.base_events, cfg.n_types));
+
+        let hot = (0..cfg.hot_set.max(1))
+            .map(|i| {
+                Query::new(Arc::clone(&base), 8 + 4 * i as u64, vec![iv])
+                    .max_level(cfg.max_level)
+            })
+            .collect();
+
+        let lo = cfg.sweep_theta_lo.max(1);
+        let hi = cfg.sweep_theta_hi.max(lo);
+        let sweep = (lo..=hi)
+            .step_by(2)
+            .map(|theta| {
+                Query::new(Arc::clone(&base), theta, vec![iv]).max_level(cfg.max_level)
+            })
+            .collect();
+
+        let distinct = (0..cfg.distinct_pool.max(1))
+            .map(|_| {
+                let stream =
+                    Arc::new(synth_stream(&mut rng, cfg.distinct_events.max(1), cfg.n_types));
+                Query::new(stream, 4, vec![iv]).max_level(cfg.max_level)
+            })
+            .collect();
+
+        // Sliding windows come from the chip-on-chip partition producer
+        // (accelerated replay: the load generator wants the partitions,
+        // not the pacing).
+        let rx = spawn_producer_with(
+            (*base).clone(),
+            cfg.window_ticks.max(1),
+            ProducerConfig { speedup: 1e9, ..Default::default() },
+        )?;
+        let sliding: Vec<Query> = rx
+            .iter()
+            .filter(|p| !p.stream.is_empty())
+            .map(|p| {
+                Query::new(Arc::new(p.stream), 3, vec![iv]).max_level(cfg.max_level)
+            })
+            .collect();
+
+        Ok(Workload { hot, sweep, distinct, sliding })
+    }
+
+    /// Every query in the universe, for scenario-set replays (the
+    /// equivalence test mines each one directly and via the service).
+    pub fn all(&self) -> impl Iterator<Item = &Query> {
+        self.hot
+            .iter()
+            .chain(self.sweep.iter())
+            .chain(self.distinct.iter())
+            .chain(self.sliding.iter())
+    }
+}
+
+/// Aggregated outcome of one load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub wall: Duration,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    /// client-observed completed requests per second (cache hits
+    /// included — this is the number the ≥5x repeat-query criterion is
+    /// about)
+    pub qps: f64,
+    /// client-observed submit-to-result latency (ns), cache hits included
+    pub latency_ns: Option<Summary>,
+    /// the service's own snapshot, taken as the last client finished
+    pub service: ServiceMetrics,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> String {
+        let (p50, p95, p99) = match &self.latency_ns {
+            Some(s) => (s.median / 1e6, s.p95 / 1e6, s.p99 / 1e6),
+            None => (0.0, 0.0, 0.0),
+        };
+        format!(
+            "{{\"wall_s\":{:.3},\"completed\":{},\"rejected\":{},\"errors\":{},\
+             \"qps\":{:.2},\"client_latency_ms\":{{\"p50\":{:.3},\"p95\":{:.3},\
+             \"p99\":{:.3}}},\"service\":{}}}",
+            self.wall.as_secs_f64(),
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.qps,
+            p50,
+            p95,
+            p99,
+            self.service.to_json(),
+        )
+    }
+}
+
+#[derive(Default)]
+struct ClientStats {
+    completed: u64,
+    rejected: u64,
+    errors: u64,
+    latencies_ns: Vec<f64>,
+}
+
+/// Run the closed loop: `cfg.clients` threads, each issuing
+/// `cfg.requests_per_client` requests drawn from the mix, against a
+/// running service.
+pub fn run(service: &MineService, workload: &Workload, cfg: &LoadGenConfig) -> LoadReport {
+    let next_distinct = AtomicUsize::new(0);
+    let next_distinct = &next_distinct;
+    let t0 = Instant::now();
+    let stats: Vec<ClientStats> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|ci| {
+                scope.spawn(move || client_loop(ci, service, workload, cfg, next_distinct))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load client panicked")).collect()
+    });
+    let wall = t0.elapsed();
+
+    let mut latencies: Vec<f64> = vec![];
+    let (mut completed, mut rejected, mut errors) = (0, 0, 0);
+    for s in stats {
+        completed += s.completed;
+        rejected += s.rejected;
+        errors += s.errors;
+        latencies.extend(s.latencies_ns);
+    }
+    LoadReport {
+        wall,
+        completed,
+        rejected,
+        errors,
+        qps: completed as f64 / wall.as_secs_f64().max(1e-9),
+        latency_ns: Summary::of_opt(&latencies),
+        service: service.metrics(),
+    }
+}
+
+fn client_loop(
+    ci: usize,
+    service: &MineService,
+    workload: &Workload,
+    cfg: &LoadGenConfig,
+    next_distinct: &AtomicUsize,
+) -> ClientStats {
+    let mut rng = Rng::new(cfg.seed ^ (ci as u64 + 1).wrapping_mul(0xC11E57));
+    let mut stats = ClientStats::default();
+    // sweeps step in lockstep-ish: staggered starts, sequential advance
+    let mut sweep_i = ci;
+    // Workload::build rejects an all-zero mix; the max(1) keeps a caller
+    // who pairs a prebuilt workload with a zeroed config on the hot path
+    // instead of panicking in Rng::below.
+    let total = cfg.mix.total().max(1) as u64;
+    for _ in 0..cfg.requests_per_client {
+        let pick = rng.below(total) as u32;
+        let query = pick_query(workload, cfg, pick, &mut rng, &mut sweep_i, next_distinct);
+        let t = Instant::now();
+        match service.submit(query) {
+            Err(MineError::Busy { .. }) => stats.rejected += 1,
+            Err(_) => stats.errors += 1,
+            Ok(ticket) => match ticket.wait() {
+                Ok(_) => {
+                    stats.completed += 1;
+                    stats.latencies_ns.push(t.elapsed().as_nanos() as f64);
+                }
+                Err(_) => stats.errors += 1,
+            },
+        }
+    }
+    stats
+}
+
+fn pick_query(
+    workload: &Workload,
+    cfg: &LoadGenConfig,
+    pick: u32,
+    rng: &mut Rng,
+    sweep_i: &mut usize,
+    next_distinct: &AtomicUsize,
+) -> Query {
+    let m = &cfg.mix;
+    let sweep_edge = m.hot_repeat + m.theta_sweep;
+    let distinct_edge = sweep_edge + m.distinct;
+    if (m.hot_repeat..sweep_edge).contains(&pick) && !workload.sweep.is_empty() {
+        let q = workload.sweep[*sweep_i % workload.sweep.len()].clone();
+        *sweep_i += 1;
+        return q;
+    }
+    if (sweep_edge..distinct_edge).contains(&pick) && !workload.distinct.is_empty() {
+        let i = next_distinct.fetch_add(1, Ordering::Relaxed);
+        return workload.distinct[i % workload.distinct.len()].clone();
+    }
+    if pick >= distinct_edge && !workload.sliding.is_empty() {
+        return workload.sliding[rng.below(workload.sliding.len() as u64) as usize].clone();
+    }
+    // hot repeat, or the fallback when a drawn scenario's pool is empty
+    // (hot is never empty — Workload::build guarantees >= 1)
+    workload.hot[rng.below(workload.hot.len() as u64) as usize].clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> LoadGenConfig {
+        LoadGenConfig {
+            clients: 2,
+            requests_per_client: 4,
+            base_events: 1_000,
+            distinct_pool: 4,
+            distinct_events: 300,
+            window_ticks: 600,
+            max_level: 3,
+            ..LoadGenConfig::default()
+        }
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_non_empty() {
+        let cfg = tiny_cfg();
+        let a = Workload::build(&cfg).unwrap();
+        let b = Workload::build(&cfg).unwrap();
+        assert!(!a.hot.is_empty() && !a.sweep.is_empty());
+        assert!(!a.distinct.is_empty() && !a.sliding.is_empty());
+        let keys =
+            |w: &Workload| w.all().map(|q| q.key()).collect::<Vec<_>>();
+        assert_eq!(keys(&a), keys(&b), "same seed must replay the same universe");
+    }
+
+    #[test]
+    fn workload_rejects_degenerate_configs() {
+        let mut cfg = tiny_cfg();
+        cfg.mix = MixWeights { hot_repeat: 0, theta_sweep: 0, distinct: 0, sliding_window: 0 };
+        assert!(Workload::build(&cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.clients = 0;
+        assert!(Workload::build(&cfg).is_err());
+    }
+
+    #[test]
+    fn sliding_windows_come_from_the_partition_producer() {
+        let cfg = tiny_cfg();
+        let w = Workload::build(&cfg).unwrap();
+        // partitions cover disjoint spans of the base stream: total events
+        // across windows equal the base stream's (lossless round-trip)
+        let total: usize = w.sliding.iter().map(|q| q.stream.len()).sum();
+        assert_eq!(total, cfg.base_events);
+        for q in &w.sliding {
+            assert!(q.stream.span() <= cfg.window_ticks);
+        }
+    }
+}

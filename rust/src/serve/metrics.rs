@@ -1,0 +1,177 @@
+//! Service observability: the snapshot a [`MineService`] reports.
+//!
+//! Counters answer "is the pool keeping up" (throughput, queue depth,
+//! rejections), "is coalescing/caching working" (hit rate, coalesced
+//! joins), and "is the pool balanced" (per-worker utilization). Latency
+//! is summarized with [`Summary`] (p50/p95/p99 via `util::stats`), over a
+//! sliding window of the most recent executions so a long-lived service
+//! reports current behavior, not its lifetime average.
+//!
+//! [`MineService`]: super::pool::MineService
+
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+use super::cache::CacheStats;
+
+/// A point-in-time snapshot of service health. All counters are
+/// cumulative since start; `queue_depth` and `cache.entries` are current.
+#[derive(Clone, Debug)]
+pub struct ServiceMetrics {
+    /// admission attempts that passed validation (includes rejected)
+    pub submitted: u64,
+    /// executions that produced a result
+    pub completed: u64,
+    /// executions that produced an error
+    pub failed: u64,
+    /// submissions rejected by admission control (queue full)
+    pub rejected: u64,
+    /// submissions that joined an identical in-flight execution
+    pub coalesced: u64,
+    pub cache: CacheStats,
+    /// jobs currently waiting for a worker
+    pub queue_depth: usize,
+    pub uptime: Duration,
+    /// submit-to-completion latency (ns) over the most recent executions;
+    /// `None` before the first completion. Cache hits answer at submit
+    /// time and are not executions — client-observed latency including
+    /// hits is the load generator's side of the ledger.
+    pub latency_ns: Option<Summary>,
+    /// cumulative busy time per worker
+    pub worker_busy: Vec<Duration>,
+}
+
+impl ServiceMetrics {
+    /// Completed executions per second of uptime.
+    pub fn throughput_qps(&self) -> f64 {
+        let secs = self.uptime.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+
+    /// Fraction of uptime each worker spent executing queries.
+    pub fn worker_utilization(&self) -> Vec<f64> {
+        let secs = self.uptime.as_secs_f64().max(1e-9);
+        self.worker_busy.iter().map(|b| b.as_secs_f64() / secs).collect()
+    }
+
+    /// One-line human summary (the service analogue of
+    /// `Metrics::report`).
+    pub fn report(&self) -> String {
+        let lat = match &self.latency_ns {
+            Some(s) => format!(
+                "p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+                s.median / 1e6,
+                s.p95 / 1e6,
+                s.p99 / 1e6
+            ),
+            None => "no executions yet".to_string(),
+        };
+        format!(
+            "submitted={} completed={} failed={} rejected={} coalesced={} \
+             cache_hits={} cache_misses={} evictions={} hit_rate={:.1}% \
+             queue_depth={} qps={:.1} latency[{}] util=[{}]",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected,
+            self.coalesced,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.hit_rate() * 100.0,
+            self.queue_depth,
+            self.throughput_qps(),
+            lat,
+            self.worker_utilization()
+                .iter()
+                .map(|u| format!("{:.0}%", u * 100.0))
+                .collect::<Vec<_>>()
+                .join(" "),
+        )
+    }
+
+    /// Machine-readable summary (hand-rolled: the offline crate set has no
+    /// serde).
+    pub fn to_json(&self) -> String {
+        let (p50, p95, p99) = match &self.latency_ns {
+            Some(s) => (s.median / 1e6, s.p95 / 1e6, s.p99 / 1e6),
+            None => (0.0, 0.0, 0.0),
+        };
+        format!(
+            "{{\"submitted\":{},\"completed\":{},\"failed\":{},\"rejected\":{},\
+             \"coalesced\":{},\"cache_hits\":{},\"cache_misses\":{},\
+             \"cache_evictions\":{},\"cache_hit_rate\":{:.4},\"queue_depth\":{},\
+             \"uptime_s\":{:.3},\"qps\":{:.2},\"latency_ms\":{{\"p50\":{:.3},\
+             \"p95\":{:.3},\"p99\":{:.3}}},\"worker_utilization\":[{}]}}",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected,
+            self.coalesced,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.hit_rate(),
+            self.queue_depth,
+            self.uptime.as_secs_f64(),
+            self.throughput_qps(),
+            p50,
+            p95,
+            p99,
+            self.worker_utilization()
+                .iter()
+                .map(|u| format!("{u:.4}"))
+                .collect::<Vec<_>>()
+                .join(","),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot() -> ServiceMetrics {
+        ServiceMetrics {
+            submitted: 10,
+            completed: 6,
+            failed: 0,
+            rejected: 1,
+            coalesced: 1,
+            cache: CacheStats { hits: 2, misses: 8, evictions: 0, entries: 6 },
+            queue_depth: 0,
+            uptime: Duration::from_secs(2),
+            latency_ns: Summary::of_opt(&[1e6, 2e6, 3e6]),
+            worker_busy: vec![Duration::from_secs(1), Duration::from_millis(500)],
+        }
+    }
+
+    #[test]
+    fn derived_rates() {
+        let m = snapshot();
+        assert!((m.throughput_qps() - 3.0).abs() < 1e-9);
+        let util = m.worker_utilization();
+        assert!((util[0] - 0.5).abs() < 1e-9 && (util[1] - 0.25).abs() < 1e-9);
+        assert!((m.cache.hit_rate() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_and_json_carry_the_counters() {
+        let m = snapshot();
+        let r = m.report();
+        assert!(r.contains("rejected=1") && r.contains("p99="), "{r}");
+        let j = m.to_json();
+        assert!(j.contains("\"rejected\":1") && j.contains("\"p99\":"), "{j}");
+        // crude but effective: the JSON must be brace-balanced
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "{j}"
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! The serving layer: a multi-tenant mining service over the counting
+//! engines.
+//!
+//! The paper's chip-on-chip vision (§1, §6.5) is ultimately a *service* —
+//! one chip produces spike trains, the other answers mining queries fast
+//! enough to keep up — and the analyses built on this miner (theta sweeps,
+//! window scans, connectivity inference) fire many closely related
+//! queries per dataset. This module turns the single-caller `Session`
+//! world into that service:
+//!
+//! - [`pool::MineService`] — a pool of worker threads, each constructing
+//!   its counting engine thread-locally (sessions hold `Rc<Runtime>` and
+//!   do not cross threads; engines do not need to — workers build them in
+//!   place and run the shared `mine_with_backend` driver).
+//! - [`query::QueryKey`] — a canonical fingerprint over the exact stream
+//!   contents and every mining parameter; the identity for both request
+//!   coalescing (identical in-flight queries share one execution) and the
+//!   [`cache::ResultCache`] (sharded LRU with hit/miss/eviction
+//!   counters). Keyed on exact content, a cached result can never be
+//!   stale.
+//! - admission control — a bounded job queue that rejects with the typed
+//!   [`MineError::Busy`] instead of buffering unboundedly.
+//! - [`metrics::ServiceMetrics`] — throughput, queue depth, p50/p95/p99
+//!   latency, cache hit rate, per-worker utilization.
+//! - [`loadgen`] — a closed-loop load generator over a scenario mix (hot
+//!   repeats, theta sweeps, distinct datasets, sliding stream windows fed
+//!   by the partition producer), driving `epminer serve-bench` and
+//!   `benches/serve_load.rs`.
+//!
+//! [`MineError::Busy`]: crate::error::MineError::Busy
+
+pub mod cache;
+pub mod loadgen;
+pub mod metrics;
+pub mod pool;
+pub mod query;
+
+pub use cache::{CacheStats, ResultCache};
+pub use metrics::ServiceMetrics;
+pub use pool::{mine_direct, MineService, ServiceConfig, Ticket};
+pub use query::{Query, QueryKey};

@@ -1,0 +1,474 @@
+//! The multi-tenant mining service: a worker pool over the counting
+//! engines, with request coalescing, a result cache, and bounded
+//! admission.
+//!
+//! Layout of one query's life:
+//!
+//! ```text
+//! submit(query) ── key() ── cache? ──hit──> Ticket::Ready
+//!                    │
+//!                    ├── in-flight? ──yes──> Ticket joins that job (coalesced)
+//!                    │
+//!                    └── queue full? ──yes──> MineError::Busy (admission control)
+//!                                  └──no───> job queued ──> worker thread:
+//!                                            build engine (thread-local),
+//!                                            mine_with_backend, cache insert,
+//!                                            wake every coalesced waiter
+//! ```
+//!
+//! Workers construct engines, not sessions: [`crate::Session`] holds an
+//! `Rc<Runtime>` and is deliberately not `Send`, so each worker thread
+//! opens its own runtime handle (when the strategy is accelerated) and
+//! builds a fresh engine per job via [`crate::session::engine_for`],
+//! running the shared [`mine_with_backend`] driver directly. CPU engine
+//! construction is a few allocations; the per-job build is what lets
+//! theta-specific two-pass wrappers differ between jobs.
+
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::miner::MineResult;
+use crate::coordinator::{Metrics, Strategy};
+use crate::error::MineError;
+use crate::runtime::Runtime;
+use crate::session::{engine_for, mine_with_backend};
+use crate::util::stats::Summary;
+
+use super::cache::ResultCache;
+use super::metrics::ServiceMetrics;
+use super::query::{Query, QueryKey};
+
+/// Pool/cache/admission knobs for [`MineService::start`].
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// worker threads (each executes one query at a time)
+    pub workers: usize,
+    /// bounded job queue: submissions beyond this depth are rejected with
+    /// [`MineError::Busy`] instead of buffering unboundedly
+    pub queue_capacity: usize,
+    /// total result-cache entries (0 disables caching)
+    pub cache_capacity: usize,
+    /// cache shard count (rounded up to a power of two)
+    pub cache_shards: usize,
+    /// the engine every worker builds per job
+    pub strategy: Strategy,
+    /// threads *inside* each worker's engine. Default 1: the pool's
+    /// parallelism is across queries; nested engine threads oversubscribe
+    /// unless the workload is a few huge queries.
+    pub cpu_threads: usize,
+    /// how many recent execution latencies the metrics window keeps
+    pub latency_window: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            queue_capacity: 64,
+            cache_capacity: 256,
+            cache_shards: 8,
+            strategy: Strategy::CpuParallel,
+            cpu_threads: 1,
+            latency_window: 4096,
+        }
+    }
+}
+
+/// What one execution produced: the shared result, or an error each
+/// waiter receives a duplicate of.
+type JobOutcome = Result<Arc<MineResult>, MineError>;
+
+/// One admitted execution; coalesced waiters share it through the `Arc`.
+struct Job {
+    key: QueryKey,
+    query: Query,
+    submitted: Instant,
+    slot: Mutex<Option<JobOutcome>>,
+    done: Condvar,
+}
+
+impl Job {
+    fn resolve(&self, outcome: JobOutcome) {
+        let mut slot = self.slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(outcome);
+        }
+        drop(slot);
+        self.done.notify_all();
+    }
+}
+
+/// A claim on a query's result. `Ready` tickets were answered from the
+/// cache at submit time; `Pending` tickets resolve when the (possibly
+/// shared) execution completes.
+pub struct Ticket(TicketState);
+
+enum TicketState {
+    Ready(Arc<MineResult>),
+    Pending(Arc<Job>),
+}
+
+impl Ticket {
+    /// Block until the result is available. Coalesced waiters each get
+    /// the same `Arc`'d result (or a duplicate of the same error).
+    pub fn wait(self) -> Result<Arc<MineResult>, MineError> {
+        match self.0 {
+            TicketState::Ready(result) => Ok(result),
+            TicketState::Pending(job) => {
+                let mut slot = job.slot.lock().unwrap();
+                while slot.is_none() {
+                    slot = job.done.wait(slot).unwrap();
+                }
+                slot.as_ref().unwrap().clone()
+            }
+        }
+    }
+
+    /// Was this ticket answered from the cache at submit time?
+    pub fn from_cache(&self) -> bool {
+        matches!(self.0, TicketState::Ready(_))
+    }
+}
+
+struct QueueState {
+    jobs: VecDeque<Arc<Job>>,
+    /// test/ops hook: a paused pool admits and coalesces but does not
+    /// execute until [`MineService::resume`]
+    paused: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    queue_capacity: usize,
+    inflight: Mutex<HashMap<QueryKey, Arc<Job>>>,
+    cache: ResultCache,
+    strategy: Strategy,
+    cpu_threads: usize,
+    shutdown: AtomicBool,
+    started: Instant,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    coalesced: AtomicU64,
+    latencies_ns: Mutex<VecDeque<f64>>,
+    latency_window: usize,
+    busy_ns: Vec<AtomicU64>,
+}
+
+/// The service: start it, submit [`Query`]s from any thread, shut it down
+/// to drain. See the module docs for the data path.
+pub struct MineService {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl MineService {
+    pub fn start(cfg: ServiceConfig) -> Result<MineService, MineError> {
+        MineService::start_inner(cfg, false)
+    }
+
+    /// Start with the worker pool paused: submissions are admitted,
+    /// coalesced, and queued, but nothing executes until
+    /// [`MineService::resume`]. This makes queue-shape behavior
+    /// (coalescing, admission rejection, drain) deterministic for tests
+    /// and lets an operator warm the cache before opening the floodgates.
+    pub fn start_paused(cfg: ServiceConfig) -> Result<MineService, MineError> {
+        MineService::start_inner(cfg, true)
+    }
+
+    fn start_inner(cfg: ServiceConfig, paused: bool) -> Result<MineService, MineError> {
+        if cfg.workers == 0 {
+            return Err(MineError::invalid("ServiceConfig::workers must be >= 1"));
+        }
+        if cfg.queue_capacity == 0 {
+            return Err(MineError::invalid("ServiceConfig::queue_capacity must be >= 1"));
+        }
+        if cfg.strategy.needs_runtime() {
+            // Fail fast at start instead of failing every query later:
+            // workers open their own handles, but if the runtime cannot
+            // open here it will not open there either.
+            drop(Runtime::open_default()?);
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), paused }),
+            queue_cv: Condvar::new(),
+            queue_capacity: cfg.queue_capacity,
+            inflight: Mutex::new(HashMap::new()),
+            cache: ResultCache::new(cfg.cache_capacity, cfg.cache_shards),
+            strategy: cfg.strategy,
+            cpu_threads: cfg.cpu_threads.max(1),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            latencies_ns: Mutex::new(VecDeque::new()),
+            latency_window: cfg.latency_window.max(1),
+            busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for wi in 0..cfg.workers {
+            let worker_shared = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("mine-worker-{wi}"))
+                .spawn(move || worker_loop(wi, worker_shared));
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    // Tear the partial pool down rather than leaking the
+                    // already-spawned workers (and the Shared they pin)
+                    // parked on the condvar forever.
+                    {
+                        let _queue = shared.queue.lock().unwrap();
+                        shared.shutdown.store(true, Ordering::SeqCst);
+                    }
+                    shared.queue_cv.notify_all();
+                    for handle in workers {
+                        let _ = handle.join();
+                    }
+                    return Err(MineError::io("spawning service worker", e));
+                }
+            }
+        }
+        Ok(MineService { shared, workers })
+    }
+
+    /// Admit a query. Returns a [`Ticket`] (possibly already resolved
+    /// from the cache, possibly joined onto an identical in-flight
+    /// execution), or [`MineError::Busy`] when the job queue is full.
+    pub fn submit(&self, query: Query) -> Result<Ticket, MineError> {
+        query.validate()?;
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(MineError::invalid("service is shut down"));
+        }
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        let key = query.key();
+        if let Some(hit) = self.shared.cache.get(&key, &query) {
+            return Ok(Ticket(TicketState::Ready(hit)));
+        }
+        let mut inflight = self.shared.inflight.lock().unwrap();
+        // Coalesce only onto a *verified-equivalent* in-flight twin: the
+        // fingerprint routes, content equality decides (a crafted
+        // collision must never hand this tenant another tenant's result).
+        // On a collision mismatch the query runs standalone — queued but
+        // never registered in the in-flight map, which stays owned by the
+        // earlier job.
+        let mut register = true;
+        if let Some(job) = inflight.get(&key) {
+            if job.query.equivalent(&query) {
+                self.shared.coalesced.fetch_add(1, Ordering::Relaxed);
+                return Ok(Ticket(TicketState::Pending(Arc::clone(job))));
+            }
+            register = false;
+        }
+        // A job completes by inserting into the cache *then* leaving the
+        // in-flight map, so "not in flight" under this lock means any
+        // just-finished twin is already visible in the cache — re-check
+        // (uncounted) before paying for a fresh execution.
+        if let Some(hit) = self.shared.cache.peek(&key, &query) {
+            return Ok(Ticket(TicketState::Ready(hit)));
+        }
+        let job = Arc::new(Job {
+            key,
+            query,
+            submitted: Instant::now(),
+            slot: Mutex::new(None),
+            done: Condvar::new(),
+        });
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            if queue.jobs.len() >= self.shared.queue_capacity {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(MineError::Busy {
+                    queue_depth: queue.jobs.len(),
+                    capacity: self.shared.queue_capacity,
+                });
+            }
+            queue.jobs.push_back(Arc::clone(&job));
+        }
+        if register {
+            inflight.insert(key, Arc::clone(&job));
+        }
+        drop(inflight);
+        self.shared.queue_cv.notify_one();
+        Ok(Ticket(TicketState::Pending(job)))
+    }
+
+    /// Open a paused pool (no-op when already running).
+    pub fn resume(&self) {
+        self.shared.queue.lock().unwrap().paused = false;
+        self.shared.queue_cv.notify_all();
+    }
+
+    /// Point-in-time health snapshot.
+    pub fn metrics(&self) -> ServiceMetrics {
+        let latencies: Vec<f64> =
+            self.shared.latencies_ns.lock().unwrap().iter().copied().collect();
+        ServiceMetrics {
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            failed: self.shared.failed.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            coalesced: self.shared.coalesced.load(Ordering::Relaxed),
+            cache: self.shared.cache.stats(),
+            queue_depth: self.shared.queue.lock().unwrap().jobs.len(),
+            uptime: self.shared.started.elapsed(),
+            latency_ns: Summary::of_opt(&latencies),
+            worker_busy: self
+                .shared
+                .busy_ns
+                .iter()
+                .map(|b| std::time::Duration::from_nanos(b.load(Ordering::Relaxed)))
+                .collect(),
+        }
+    }
+
+    /// Graceful shutdown: stop admitting, let workers drain every queued
+    /// job (paused pools drain too), join them, and return the final
+    /// metrics snapshot.
+    pub fn shutdown(mut self) -> ServiceMetrics {
+        self.shutdown_inner();
+        self.metrics()
+    }
+
+    fn shutdown_inner(&mut self) {
+        {
+            // The store must happen under the queue mutex: a worker that
+            // just checked the flag (false) while holding the lock is
+            // guaranteed to reach `wait` before this store can proceed,
+            // so the notify below cannot be lost between its check and
+            // its sleep.
+            let _queue = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.shared.queue_cv.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+        // A submit racing the shutdown flag can enqueue after the workers
+        // drained; fail those tickets rather than leaving waiters hung.
+        let leftovers: Vec<Arc<Job>> =
+            self.shared.queue.lock().unwrap().jobs.drain(..).collect();
+        for job in leftovers {
+            self.shared.inflight.lock().unwrap().remove(&job.key);
+            job.resolve(Err(MineError::invalid("service shut down before the query ran")));
+        }
+    }
+}
+
+impl Drop for MineService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(wi: usize, shared: Arc<Shared>) {
+    // Thread-local runtime handle for accelerated strategies: `Rc` never
+    // crosses the thread boundary, each worker owns its own.
+    let (rt, rt_err): (Option<Rc<Runtime>>, Option<MineError>) =
+        if shared.strategy.needs_runtime() {
+            match Runtime::open_default() {
+                Ok(rt) => (Some(Rc::new(rt)), None),
+                Err(e) => (None, Some(e)),
+            }
+        } else {
+            (None, None)
+        };
+
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                let draining = shared.shutdown.load(Ordering::SeqCst);
+                if !queue.paused || draining {
+                    if let Some(job) = queue.jobs.pop_front() {
+                        break job;
+                    }
+                    if draining {
+                        return;
+                    }
+                }
+                queue = shared.queue_cv.wait(queue).unwrap();
+            }
+        };
+
+        let t0 = Instant::now();
+        let outcome = match &rt_err {
+            Some(e) => Err(e.clone()),
+            // Contain panics: an unwinding worker would die with the job
+            // unresolved and its in-flight entry stuck, hanging the
+            // submitter and every future identical query. A panic becomes
+            // a typed error on this job; the worker lives on.
+            None => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                execute(&job.query, shared.strategy, rt.clone(), shared.cpu_threads)
+            }))
+            .unwrap_or_else(|_| {
+                Err(MineError::internal("worker panicked while executing the query"))
+            }),
+        };
+        shared.busy_ns[wi].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        let outcome = match outcome {
+            Ok(result) => {
+                let result = Arc::new(result);
+                shared.cache.insert(job.key, job.query.clone(), Arc::clone(&result));
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+                Ok(result)
+            }
+            Err(e) => {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        };
+        {
+            let mut latencies = shared.latencies_ns.lock().unwrap();
+            if latencies.len() >= shared.latency_window {
+                latencies.pop_front();
+            }
+            latencies.push_back(job.submitted.elapsed().as_nanos() as f64);
+        }
+        // Leave the in-flight map only after the cache insert above, so a
+        // submit that finds the key absent here can trust the cache
+        // re-check (see `MineService::submit`). A standalone job from a
+        // collision mismatch was never registered — only evict the entry
+        // if it is actually this job, or a colliding twin's registration
+        // would be torn down mid-flight.
+        {
+            let mut inflight = shared.inflight.lock().unwrap();
+            if inflight.get(&job.key).is_some_and(|current| Arc::ptr_eq(current, &job)) {
+                inflight.remove(&job.key);
+            }
+        }
+        job.resolve(outcome);
+    }
+}
+
+/// Run one query to completion on a freshly built engine — also the
+/// serial "re-mine every request" baseline the service's repeat-query
+/// speedup is measured against (`benches/serve_load.rs`).
+pub fn mine_direct(
+    query: &Query,
+    strategy: Strategy,
+    cpu_threads: usize,
+) -> Result<MineResult, MineError> {
+    execute(query, strategy, None, cpu_threads)
+}
+
+fn execute(
+    query: &Query,
+    strategy: Strategy,
+    rt: Option<Rc<Runtime>>,
+    cpu_threads: usize,
+) -> Result<MineResult, MineError> {
+    let mut engine = engine_for(strategy, rt, query.two_pass, query.theta, cpu_threads)?;
+    let mut metrics = Metrics::default();
+    mine_with_backend(&mut *engine, &query.stream, &query.options(), &mut metrics)
+}

@@ -58,6 +58,33 @@ pub struct MineOptions {
     pub max_candidates_per_level: usize,
 }
 
+impl MineOptions {
+    /// The parameter invariants every mining entry point shares — one
+    /// validator behind both [`SessionBuilder::build`] and the serving
+    /// layer's admission check (`serve::Query::validate`), so the two
+    /// paths cannot drift.
+    pub fn validate(&self) -> Result<(), MineError> {
+        if self.theta == 0 {
+            return Err(MineError::invalid(
+                "theta must be > 0 (a support threshold of 0 makes every episode frequent)",
+            ));
+        }
+        if self.intervals.is_empty() {
+            return Err(MineError::invalid(
+                "intervals must be non-empty — candidate generation needs \
+                 at least one inter-event constraint",
+            ));
+        }
+        if self.max_level == 0 {
+            return Err(MineError::invalid("max_level must be >= 1"));
+        }
+        if self.max_candidates_per_level == 0 {
+            return Err(MineError::invalid("max_candidates_per_level must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 /// The level-wise mining loop (paper §5): candidate generation on the host
 /// alternating with counting on whatever engine `backend` is. This is the
 /// single implementation behind `Session::mine`, streaming partitions, and
@@ -121,6 +148,42 @@ pub fn mine_with_backend(
         }
     }
     Ok(result)
+}
+
+/// Build the counting engine a `(strategy, two_pass, theta)` configuration
+/// names — the same construction [`SessionBuilder::build`] performs,
+/// exposed for callers that drive [`mine_with_backend`] directly. The
+/// `serve` worker pool is the motivating caller: `Session` holds an
+/// `Rc<Runtime>` and is deliberately not `Send`, so service workers
+/// construct an engine on their own thread (passing a thread-local
+/// runtime handle, or `None` to have an accelerated strategy open one)
+/// and run the driver against it.
+pub fn engine_for(
+    strategy: Strategy,
+    rt: Option<Rc<Runtime>>,
+    two_pass: bool,
+    theta: u64,
+    cpu_threads: usize,
+) -> Result<Box<dyn CountBackend>, MineError> {
+    let rt = match rt {
+        Some(rt) => Some(rt),
+        None if strategy.needs_runtime() => Some(Rc::new(Runtime::open_default()?)),
+        None => None,
+    };
+    let exact = backend::for_strategy(strategy, rt, cpu_threads)?;
+    Ok(wrap_two_pass(exact, two_pass, theta))
+}
+
+fn wrap_two_pass(
+    exact: Box<dyn CountBackend>,
+    two_pass: bool,
+    theta: u64,
+) -> Box<dyn CountBackend> {
+    if two_pass {
+        Box::new(TwoPassBackend::new(exact, theta))
+    } else {
+        exact
+    }
 }
 
 /// A mining session: stream + options + counting engine + run metrics.
@@ -351,17 +414,6 @@ impl SessionBuilder {
 
         let theta = theta
             .ok_or_else(|| MineError::invalid("theta not set — call .theta(...)"))?;
-        if theta == 0 {
-            return Err(MineError::invalid(
-                "theta must be > 0 (a support threshold of 0 makes every episode frequent)",
-            ));
-        }
-        if max_level == 0 {
-            return Err(MineError::invalid("max_level must be >= 1"));
-        }
-        if max_candidates_per_level == 0 {
-            return Err(MineError::invalid("max_candidates_per_level must be >= 1"));
-        }
 
         // Validate the dataset name whenever one was given, even alongside
         // an explicit stream (where it only supplies interval defaults) —
@@ -393,14 +445,10 @@ impl SessionBuilder {
             }
         };
 
+        // An explicitly-set empty interval list reaches validate() below
+        // and reports the shared non-empty-intervals error.
         let intervals = match intervals {
-            Some(iv) if !iv.is_empty() => iv,
-            Some(_) => {
-                return Err(MineError::invalid(
-                    "intervals must be non-empty — candidate generation needs \
-                     at least one inter-event constraint",
-                ))
-            }
+            Some(iv) => iv,
             None => match dataset_name.as_deref().and_then(datasets::default_interval) {
                 Some(iv) => vec![iv],
                 None => {
@@ -411,36 +459,23 @@ impl SessionBuilder {
                 }
             },
         };
+        let opts = MineOptions { theta, intervals, max_level, max_candidates_per_level };
+        opts.validate()?;
 
-        let exact: Box<dyn CountBackend> = match (backend, strategy) {
+        let backend: Box<dyn CountBackend> = match (backend, strategy) {
             (Some(_), Some(_)) => {
                 return Err(MineError::invalid(
                     "set either .backend(...) or .strategy(...), not both",
                 ))
             }
-            (Some(b), None) => b,
-            (None, Some(s)) => {
-                let rt = if s.needs_runtime() {
-                    Some(Rc::new(Runtime::open_default()?))
-                } else {
-                    None
-                };
-                backend::for_strategy(s, rt, cpu_threads)?
+            (Some(b), None) => wrap_two_pass(b, two_pass, theta),
+            (None, Some(s)) => engine_for(s, None, two_pass, theta, cpu_threads)?,
+            (None, None) => {
+                wrap_two_pass(backend::default_backend(cpu_threads), two_pass, theta)
             }
-            (None, None) => backend::default_backend(cpu_threads),
-        };
-        let backend: Box<dyn CountBackend> = if two_pass {
-            Box::new(TwoPassBackend::new(exact, theta))
-        } else {
-            exact
         };
 
-        Ok(Session {
-            backend,
-            stream,
-            opts: MineOptions { theta, intervals, max_level, max_candidates_per_level },
-            metrics: Metrics::default(),
-        })
+        Ok(Session { backend, stream, opts, metrics: Metrics::default() })
     }
 }
 

@@ -1,8 +1,13 @@
 //! Minimal CLI argument parser (the offline crate set has no clap).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters return a usage error naming the offending flag and value
+//! (a malformed `--theta banana` is a user mistake, not a panic); binaries
+//! without a `Result` main can funnel that through [`exit_usage`].
 
 use std::collections::HashMap;
+
+use crate::error::MineError;
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -49,21 +54,44 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
+    /// Parse `--name`'s value, or return `default` when absent. A value
+    /// that fails to parse is a usage error naming the flag and the value.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+        expected: &str,
+    ) -> Result<T, MineError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                MineError::invalid(format!("bad --{name} value {v:?} (expected {expected})"))
+            }),
+        }
     }
 
-    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, MineError> {
+        self.get_parsed(name, default, "an unsigned integer")
     }
 
-    pub fn get_i32(&self, name: &str, default: i32) -> i32 {
-        self.get(name).map(|v| v.parse().expect("integer option")).unwrap_or(default)
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, MineError> {
+        self.get_parsed(name, default, "an unsigned integer")
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name).map(|v| v.parse().expect("float option")).unwrap_or(default)
+    pub fn get_i32(&self, name: &str, default: i32) -> Result<i32, MineError> {
+        self.get_parsed(name, default, "an integer")
     }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, MineError> {
+        self.get_parsed(name, default, "a number")
+    }
+}
+
+/// Exit(2) with the usage error — the edge handler for bench binaries
+/// whose `main` does not return `Result`.
+pub fn exit_usage<T>(e: MineError) -> T {
+    eprintln!("error: {e}");
+    std::process::exit(2)
 }
 
 #[cfg(test)]
@@ -87,9 +115,23 @@ mod tests {
     #[test]
     fn typed_getters() {
         let a = parse(&["--n", "5", "--rate=2.5"]);
-        assert_eq!(a.get_usize("n", 1), 5);
-        assert_eq!(a.get_f64("rate", 0.0), 2.5);
-        assert_eq!(a.get_usize("missing", 9), 9);
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn malformed_value_is_usage_error_not_panic() {
+        let a = parse(&["--theta", "banana", "--rate=fast"]);
+        let err = a.get_u64("theta", 1).err().unwrap();
+        let msg = err.to_string();
+        assert!(msg.contains("--theta") && msg.contains("banana"), "{msg}");
+        let msg = a.get_f64("rate", 0.0).err().unwrap().to_string();
+        assert!(msg.contains("--rate") && msg.contains("fast"), "{msg}");
+        // negative values are malformed for unsigned getters
+        let a = parse(&["--n=-3"]);
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_i32("n", 1).unwrap(), -3);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 impl Summary {
@@ -32,6 +33,17 @@ impl Summary {
             min: sorted[0],
             max: sorted[n - 1],
             p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+
+    /// [`Summary::of`], tolerating an empty sample (`None`) — the shape a
+    /// metrics snapshot wants when nothing has been measured yet.
+    pub fn of_opt(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(samples))
         }
     }
 }
@@ -89,6 +101,14 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.stddev - 1.5811388).abs() < 1e-6);
+        // p99 interpolates between the top two samples: rank 3.96
+        assert!((s.p99 - 4.96).abs() < 1e-9, "{}", s.p99);
+    }
+
+    #[test]
+    fn of_opt_handles_empty() {
+        assert!(Summary::of_opt(&[]).is_none());
+        assert_eq!(Summary::of_opt(&[2.0]).unwrap().p99, 2.0);
     }
 
     #[test]

@@ -208,24 +208,47 @@ fn prop_candidate_join_produces_valid_shapes() {
 
 #[test]
 fn prop_partitions_preserve_events() {
-    forall("partitions lossless", 0x9A77, 150, |rng| {
+    // The serving layer's sliding-window scenario re-mines
+    // `partitions_with_starts` output, so the round-trip must be exact:
+    // concatenating the partitions reproduces the stream event-for-event
+    // (types *and* times — no boundary loss, no duplication), every
+    // partition stays inside its tagged (start, start + width] window,
+    // and consecutive starts advance by exactly one width.
+    forall("partitions_with_starts round-trips", 0x9A77, 200, |rng| {
         let s = gen_stream(rng, 500, 5);
         if s.is_empty() {
             return Ok(());
         }
-        let width = 1 + rng.below(200) as i32;
-        let parts = s.partitions(width);
-        let total: usize = parts.iter().map(|p| p.len()).sum();
-        if total != s.len() {
-            return Err(format!("{total} != {}", s.len()));
+        // random widths, occasionally wider than the whole recording
+        let width = if rng.chance(0.1) {
+            s.span() + 1 + rng.below(100) as i32
+        } else {
+            1 + rng.below(200) as i32
+        };
+        let parts = s.partitions_with_starts(width);
+        let mut types = vec![];
+        let mut times = vec![];
+        for (start, p) in &parts {
+            if let Some(&t) =
+                p.times.iter().find(|&&t| t <= *start || t > start + width)
+            {
+                return Err(format!(
+                    "event at t={t} leaked outside window ({start}, {}]",
+                    start + width
+                ));
+            }
+            types.extend(p.types.iter().copied());
+            times.extend(p.times.iter().copied());
         }
-        // windows are disjoint and ordered
-        let mut all_times = vec![];
-        for p in &parts {
-            all_times.extend(p.times.iter().copied());
+        if types != s.types || times != s.times {
+            return Err(format!(
+                "union of partitions != stream ({} events vs {}, width {width})",
+                times.len(),
+                s.len()
+            ));
         }
-        if all_times != s.times {
-            return Err("event order not preserved".into());
+        if let Some(w) = parts.windows(2).find(|w| w[1].0 - w[0].0 != width) {
+            return Err(format!("starts not width-spaced: {} -> {}", w[0].0, w[1].0));
         }
         Ok(())
     });

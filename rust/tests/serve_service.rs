@@ -1,0 +1,173 @@
+//! Service-level behavior: result equivalence against direct `Session`
+//! mining, deterministic coalescing/admission/drain via the paused pool,
+//! and cache semantics.
+
+use std::sync::Arc;
+
+use episodes_gpu::coordinator::Strategy;
+use episodes_gpu::episodes::Interval;
+use episodes_gpu::events::EventStream;
+use episodes_gpu::serve::loadgen::{self, LoadGenConfig, Workload};
+use episodes_gpu::serve::{MineService, Query, ServiceConfig};
+use episodes_gpu::{MineError, Session};
+
+fn small_workload_cfg() -> LoadGenConfig {
+    LoadGenConfig {
+        clients: 4,
+        requests_per_client: 12,
+        base_events: 2_500,
+        distinct_pool: 6,
+        distinct_events: 500,
+        window_ticks: 1_200,
+        max_level: 3,
+        ..LoadGenConfig::default()
+    }
+}
+
+fn cpu_service(workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        strategy: Strategy::CpuSerial,
+        ..ServiceConfig::default()
+    }
+}
+
+fn distinct_query(seed: i32) -> Query {
+    // tiny unique streams: the seed perturbs one tick, so every seed is a
+    // distinct QueryKey
+    let stream = Arc::new(EventStream::from_pairs(
+        vec![(0, 1), (1, 3 + seed), (0, 9 + seed), (1, 14 + seed)],
+        2,
+    ));
+    Query::new(stream, 1, vec![Interval::new(0, 8)]).max_level(2)
+}
+
+#[test]
+fn service_results_match_direct_session_mining() {
+    // The acceptance criterion: for every query in a mixed scenario set
+    // (hot, sweep, distinct, sliding windows), the service returns counts
+    // identical to a direct Session::mine.
+    let workload = Workload::build(&small_workload_cfg()).unwrap();
+    let service = MineService::start(cpu_service(3)).unwrap();
+    for (i, q) in workload.all().enumerate() {
+        let mut session = Session::builder()
+            .stream((*q.stream).clone())
+            .theta(q.theta)
+            .intervals(q.intervals.clone())
+            .max_level(q.max_level)
+            .strategy(Strategy::CpuSerial)
+            .build()
+            .unwrap();
+        let direct = session.mine().unwrap();
+        let served = service.submit(q.clone()).unwrap().wait().unwrap();
+        assert_eq!(served.frequent, direct.frequent, "query {i}: counts diverge");
+        let shape =
+            |r: &episodes_gpu::coordinator::miner::MineResult| -> Vec<(usize, usize, usize)> {
+                r.levels.iter().map(|l| (l.level, l.candidates, l.frequent)).collect()
+            };
+        assert_eq!(shape(&served), shape(&direct), "query {i}: level shapes diverge");
+    }
+    let m = service.shutdown();
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn repeat_queries_hit_the_cache() {
+    let service = MineService::start(cpu_service(2)).unwrap();
+    let q = distinct_query(0);
+    let first = service.submit(q.clone()).unwrap();
+    assert!(!first.from_cache());
+    let first = first.wait().unwrap();
+    let second = service.submit(q).unwrap();
+    assert!(second.from_cache(), "repeat must be answered from the cache");
+    let second = second.wait().unwrap();
+    assert_eq!(first.frequent, second.frequent);
+    let m = service.shutdown();
+    assert!(m.cache.hits >= 1, "{:?}", m.cache);
+    assert_eq!(m.completed, 1, "one execution serves both requests");
+}
+
+#[test]
+fn identical_inflight_queries_coalesce_into_one_execution() {
+    // Paused pool: submissions queue but nothing executes, so the five
+    // identical submissions below deterministically find the first one
+    // in flight.
+    let service = MineService::start_paused(cpu_service(1)).unwrap();
+    let q = distinct_query(1);
+    let tickets: Vec<_> =
+        (0..5).map(|_| service.submit(q.clone()).unwrap()).collect();
+    let m = service.metrics();
+    assert_eq!(m.queue_depth, 1, "five identical submissions, one queued job");
+    assert_eq!(m.coalesced, 4);
+    service.resume();
+    let mut results = tickets.into_iter().map(|t| t.wait().unwrap());
+    let first = results.next().unwrap();
+    for r in results {
+        assert!(Arc::ptr_eq(&first, &r), "coalesced waiters share one result");
+    }
+    let m = service.shutdown();
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn full_queue_rejects_with_typed_busy() {
+    let service = MineService::start_paused(ServiceConfig {
+        queue_capacity: 2,
+        ..cpu_service(1)
+    })
+    .unwrap();
+    let t1 = service.submit(distinct_query(2)).unwrap();
+    let t2 = service.submit(distinct_query(3)).unwrap();
+    let err = service.submit(distinct_query(4)).err().unwrap();
+    assert!(
+        matches!(err, MineError::Busy { queue_depth: 2, capacity: 2 }),
+        "{err}"
+    );
+    let m = service.metrics();
+    assert_eq!(m.rejected, 1);
+    service.resume();
+    assert!(t1.wait().is_ok() && t2.wait().is_ok());
+    service.shutdown();
+}
+
+#[test]
+fn shutdown_drains_queued_jobs() {
+    // Even a never-resumed pool must answer every admitted ticket on
+    // shutdown (drain, not abandon).
+    let service = MineService::start_paused(cpu_service(2)).unwrap();
+    let tickets: Vec<_> =
+        (0..3).map(|i| service.submit(distinct_query(10 + i)).unwrap()).collect();
+    let m = service.shutdown();
+    assert_eq!(m.completed, 3, "drain executes all queued jobs");
+    for t in tickets {
+        assert!(t.wait().is_ok());
+    }
+}
+
+#[test]
+fn invalid_queries_are_rejected_at_admission() {
+    let service = MineService::start(cpu_service(1)).unwrap();
+    let mut q = distinct_query(5);
+    q.theta = 0;
+    let err = service.submit(q).err().unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    let m = service.shutdown();
+    assert_eq!(m.submitted, 0, "validation failures never count as admitted");
+}
+
+#[test]
+fn loadgen_closed_loop_accounts_for_every_request() {
+    let cfg = small_workload_cfg();
+    let workload = Workload::build(&cfg).unwrap();
+    let service = MineService::start(cpu_service(3)).unwrap();
+    let report = loadgen::run(&service, &workload, &cfg);
+    let issued = (cfg.clients * cfg.requests_per_client) as u64;
+    assert_eq!(report.completed + report.rejected + report.errors, issued);
+    assert_eq!(report.errors, 0, "no query in the scenario set may error");
+    assert!(report.latency_ns.is_some());
+    let json = report.to_json();
+    assert!(json.contains("\"qps\":") && json.contains("\"p99\":"), "{json}");
+    let m = service.shutdown();
+    assert_eq!(m.worker_busy.len(), 3);
+    assert!(m.cache.hits + m.cache.misses > 0);
+}
