@@ -13,12 +13,23 @@
 //! their default physiological delay bands — the CLI, the `Session`
 //! builder and the examples all resolve defaults through it instead of
 //! string-matching dataset names locally.
+//!
+//! Beyond generator names, [`resolve`] accepts two path-based schemes so
+//! every mining surface (CLI subcommands, `Session::dataset`, the serve
+//! load generator) can run off disk:
+//!
+//! - `file:<path>` — a binary stream written by `events::io` (`epminer
+//!   gen --format bin`),
+//! - `log:<dir>` — a sealed [`crate::ingest::SpikeLog`] recording.
 
 pub mod culture;
 pub mod sym26;
 
+use std::path::Path;
+
 use crate::episodes::Interval;
-use crate::events::{EventStream, Tick};
+use crate::error::MineError;
+use crate::events::{io, EventStream, Tick};
 
 /// A registered dataset: its canonical name and mining defaults.
 #[derive(Clone, Copy, Debug)]
@@ -71,8 +82,34 @@ pub fn names() -> Vec<&'static str> {
     REGISTRY.iter().map(|d| d.name).collect()
 }
 
+/// The `file:<path>` scheme prefix: a binary stream on disk.
+pub const FILE_SCHEME: &str = "file:";
+/// The `log:<dir>` scheme prefix: a sealed ingest log.
+pub const LOG_SCHEME: &str = "log:";
+
+/// Is this a `file:`/`log:` spec rather than a registry name?
+pub fn is_path_scheme(spec: &str) -> bool {
+    spec.starts_with(FILE_SCHEME) || spec.starts_with(LOG_SCHEME)
+}
+
+/// Everything a dataset argument accepts, for error listings: the
+/// registry names plus the path-based scheme shapes.
+pub fn names_and_schemes() -> Vec<&'static str> {
+    let mut v = names();
+    v.push("file:<path.bin>");
+    v.push("log:<segment-dir>");
+    v
+}
+
 /// The dataset's default inter-event constraint, if the name is known.
+/// Path-based specs (`file:`/`log:`) carry no registry metadata, so they
+/// fall back to the generic physiological band `(2, 10]` rather than
+/// refusing to mine — `--low`/`--high` (or `.intervals(..)`) override it
+/// as usual.
 pub fn default_interval(name: &str) -> Option<Interval> {
+    if is_path_scheme(name) {
+        return Some(Interval::new(2, 10));
+    }
     info(name).map(|d| d.default_interval())
 }
 
@@ -87,6 +124,31 @@ pub fn by_name(name: &str, seed: u64) -> Option<(EventStream, &'static str)> {
     }
 }
 
+/// Resolve any dataset spec — a registry name, `file:<path>` (the
+/// `events::io` binary format), or `log:<dir>` (a sealed ingest log) —
+/// into a stream plus its display tag. The single entry point behind
+/// `Session::dataset`, the CLI subcommands, and the serve load
+/// generator, so every mining surface can run off disk. `seed` only
+/// matters for generator names; recordings are what they are.
+pub fn resolve(spec: &str, seed: u64) -> Result<(EventStream, String), MineError> {
+    if let Some(path) = spec.strip_prefix(FILE_SCHEME) {
+        let stream = io::load_binary(Path::new(path))?;
+        Ok((stream, spec.to_string()))
+    } else if let Some(dir) = spec.strip_prefix(LOG_SCHEME) {
+        let log = crate::ingest::SpikeLog::open(Path::new(dir))?;
+        let (stream, _) = log.read_all()?;
+        Ok((stream, spec.to_string()))
+    } else {
+        match by_name(spec, seed) {
+            Some((stream, tag)) => Ok((stream, tag.to_string())),
+            None => Err(MineError::UnknownDataset {
+                given: spec.to_string(),
+                valid: names_and_schemes(),
+            }),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +157,24 @@ mod tests {
     fn registry_covers_every_generatable_dataset() {
         for d in REGISTRY {
             assert!(by_name(d.name, 1).is_some(), "{} not generatable", d.name);
+        }
+    }
+
+    #[test]
+    fn path_schemes_fall_back_and_are_listed() {
+        // file-backed streams carry no registry metadata: a sensible
+        // default band, not a refusal (or worse, a panic)
+        assert_eq!(default_interval("file:/tmp/x.bin"), Some(Interval::new(2, 10)));
+        assert_eq!(default_interval("log:/tmp/recording"), Some(Interval::new(2, 10)));
+        assert!(is_path_scheme("log:anywhere") && !is_path_scheme("sym26"));
+        match resolve("warp-field", 1) {
+            Err(MineError::UnknownDataset { given, valid }) => {
+                assert_eq!(given, "warp-field");
+                assert!(valid.contains(&"sym26"));
+                assert!(valid.contains(&"file:<path.bin>"));
+                assert!(valid.contains(&"log:<segment-dir>"));
+            }
+            _ => panic!("unknown spec must list names and schemes"),
         }
     }
 

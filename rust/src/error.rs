@@ -38,6 +38,12 @@ pub enum MineError {
     UnknownDataset { given: String, valid: Vec<&'static str> },
     /// An I/O failure, with what was being attempted.
     Io { what: String, source: std::io::Error },
+    /// Durable data on disk failed validation (bad magic, torn write,
+    /// checksum mismatch, manifest/segment disagreement). Distinct from
+    /// [`MineError::Io`]: the bytes were readable, they just cannot be
+    /// trusted — and corrupt recordings must surface, never be silently
+    /// mined.
+    Corrupt { path: String, detail: String },
     /// The accelerator path failed mid-execution (compile/execute/readback).
     Accelerator { what: String },
     /// An internal contract violation (a bug, not a user error).
@@ -63,6 +69,10 @@ impl MineError {
 
     pub fn io(what: impl Into<String>, source: std::io::Error) -> MineError {
         MineError::Io { what: what.into(), source }
+    }
+
+    pub fn corrupt(path: impl Into<String>, detail: impl Into<String>) -> MineError {
+        MineError::Corrupt { path: path.into(), detail: detail.into() }
     }
 }
 
@@ -98,6 +108,11 @@ impl fmt::Display for MineError {
                 write!(f, "unknown dataset {given:?}; valid datasets: {}", valid.join(", "))
             }
             MineError::Io { what, source } => write!(f, "{what}: {source}"),
+            MineError::Corrupt { path, detail } => write!(
+                f,
+                "corrupt on-disk data at {path}: {detail} — the recording is \
+                 quarantined from mining; restore it from a replica or re-ingest"
+            ),
             MineError::Accelerator { what } => write!(f, "accelerator error: {what}"),
             MineError::Internal { what } => write!(f, "internal error: {what}"),
         }
@@ -142,6 +157,9 @@ impl Clone for MineError {
                 what: what.clone(),
                 source: std::io::Error::new(source.kind(), source.to_string()),
             },
+            MineError::Corrupt { path, detail } => {
+                MineError::Corrupt { path: path.clone(), detail: detail.clone() }
+            }
             MineError::Accelerator { what } => {
                 MineError::Accelerator { what: what.clone() }
             }

@@ -2,15 +2,29 @@
 //!
 //! Binary layout (little-endian): magic `EPGS`, u32 version, u32 n_types,
 //! u64 n_events, then n_events × (i32 type, i32 time).
+//!
+//! The `read_*`/`write_*` functions speak `std::io::Error` (they are the
+//! low-level codec); the `load_*`/`save_*` wrappers return the library's
+//! typed [`MineError::Io`] carrying the path and operation, and are what
+//! the CLI and the dataset registry's `file:` scheme call. Neither path
+//! ever produces a stream the miners would have to re-validate: an event
+//! type outside `0..n_types` is rejected by both; unsorted *times* are
+//! rejected by the binary reader (the format is defined as time-sorted,
+//! so disorder means corruption) but re-sorted by the CSV reader (CSV is
+//! hand-editable interchange, and `EventStream::from_pairs` sorting
+//! stably is the friendlier contract there).
 
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use super::EventStream;
+use crate::error::MineError;
 
 const MAGIC: &[u8; 4] = b"EPGS";
 const VERSION: u32 = 1;
+/// magic + version + n_types + n_events
+const HEADER_LEN: u64 = 20;
 
 pub fn write_binary(stream: &EventStream, path: &Path) -> io::Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
@@ -26,27 +40,47 @@ pub fn write_binary(stream: &EventStream, path: &Path) -> io::Result<()> {
 }
 
 pub fn read_binary(path: &Path) -> io::Result<EventStream> {
-    let mut r = BufReader::new(File::open(path)?);
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+        return Err(invalid("bad magic"));
     }
     let version = read_u32(&mut r)?;
     if version != VERSION {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad version"));
+        return Err(invalid("bad version"));
     }
     let n_types = read_u32(&mut r)? as usize;
-    let n_events = read_u64(&mut r)? as usize;
+    if n_types == 0 {
+        return Err(invalid("n_types must be > 0"));
+    }
+    let n_events = read_u64(&mut r)?;
+    // Validate the advertised count against the actual file size *before*
+    // any `reserve`: a corrupt header must produce an error, not an
+    // unbounded allocation (and a short file must fail here, not midway
+    // through a partial read).
+    let body = file_len.saturating_sub(HEADER_LEN);
+    if n_events.checked_mul(8) != Some(body) {
+        return Err(invalid(format!(
+            "header advertises {n_events} events but the file has {body} body bytes"
+        )));
+    }
+    let n_events = n_events as usize;
     let mut s = EventStream::new(n_types);
     s.types.reserve(n_events);
     s.times.reserve(n_events);
     for _ in 0..n_events {
-        s.types.push(read_i32(&mut r)?);
+        let e = read_i32(&mut r)?;
+        if e < 0 || e as usize >= n_types {
+            return Err(invalid(format!("event type {e} outside alphabet 0..{n_types}")));
+        }
+        s.types.push(e);
         s.times.push(read_i32(&mut r)?);
     }
     if !s.check_sorted() {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "unsorted stream"));
+        return Err(invalid("unsorted stream"));
     }
     Ok(s)
 }
@@ -62,6 +96,9 @@ pub fn write_csv(stream: &EventStream, path: &Path) -> io::Result<()> {
 }
 
 pub fn read_csv(path: &Path, n_types: usize) -> io::Result<EventStream> {
+    if n_types == 0 {
+        return Err(invalid("n_types must be > 0"));
+    }
     let r = BufReader::new(File::open(path)?);
     let mut pairs = vec![];
     for (i, line) in r.lines().enumerate() {
@@ -73,12 +110,47 @@ pub fn read_csv(path: &Path, n_types: usize) -> io::Result<EventStream> {
             continue;
         }
         let mut parts = line.splitn(2, ',');
-        let bad = || io::Error::new(io::ErrorKind::InvalidData, format!("line {}", i + 1));
+        let bad = || invalid(format!("line {}", i + 1));
         let e: i32 = parts.next().ok_or_else(bad)?.trim().parse().map_err(|_| bad())?;
         let t: i32 = parts.next().ok_or_else(bad)?.trim().parse().map_err(|_| bad())?;
+        if e < 0 || e as usize >= n_types {
+            return Err(invalid(format!(
+                "line {}: event type {e} outside alphabet 0..{n_types}",
+                i + 1
+            )));
+        }
         pairs.push((e, t));
     }
     Ok(EventStream::from_pairs(pairs, n_types))
+}
+
+/// [`read_binary`] behind the library's typed error surface: failures
+/// name the path and operation ([`MineError::Io`]).
+pub fn load_binary(path: &Path) -> Result<EventStream, MineError> {
+    read_binary(path)
+        .map_err(|e| MineError::io(format!("reading binary stream {}", path.display()), e))
+}
+
+/// [`write_binary`], typed.
+pub fn save_binary(stream: &EventStream, path: &Path) -> Result<(), MineError> {
+    write_binary(stream, path)
+        .map_err(|e| MineError::io(format!("writing binary stream {}", path.display()), e))
+}
+
+/// [`read_csv`], typed.
+pub fn load_csv(path: &Path, n_types: usize) -> Result<EventStream, MineError> {
+    read_csv(path, n_types)
+        .map_err(|e| MineError::io(format!("reading CSV stream {}", path.display()), e))
+}
+
+/// [`write_csv`], typed.
+pub fn save_csv(stream: &EventStream, path: &Path) -> Result<(), MineError> {
+    write_csv(stream, path)
+        .map_err(|e| MineError::io(format!("writing CSV stream {}", path.display()), e))
+}
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
 }
 
 fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
@@ -102,15 +174,34 @@ fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{forall, small_size};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("epgs_io_{}_{name}", std::process::id()))
+    }
 
     fn sample() -> EventStream {
         EventStream::from_pairs(vec![(0, 1), (1, 3), (2, 3), (0, 9)], 3)
     }
 
+    /// Random valid stream: small alphabet, non-decreasing times.
+    fn random_stream(rng: &mut Rng) -> EventStream {
+        let n_types = small_size(rng, 8);
+        let n_events = rng.below(200) as usize; // empty streams included
+        let mut s = EventStream::new(n_types);
+        let mut t = rng.range_i32(-50, 50);
+        for _ in 0..n_events {
+            t += rng.range_i32(0, 4);
+            s.push(rng.range_i32(0, n_types as i32 - 1), t);
+        }
+        s
+    }
+
     #[test]
     fn binary_roundtrip() {
-        let dir = std::env::temp_dir();
-        let path = dir.join("epgs_test_roundtrip.bin");
+        let path = tmp("roundtrip.bin");
         let s = sample();
         write_binary(&s, &path).unwrap();
         let r = read_binary(&path).unwrap();
@@ -120,8 +211,7 @@ mod tests {
 
     #[test]
     fn csv_roundtrip() {
-        let dir = std::env::temp_dir();
-        let path = dir.join("epgs_test_roundtrip.csv");
+        let path = tmp("roundtrip.csv");
         let s = sample();
         write_csv(&s, &path).unwrap();
         let r = read_csv(&path, 3).unwrap();
@@ -130,11 +220,151 @@ mod tests {
     }
 
     #[test]
+    fn randomized_roundtrips_are_lossless() {
+        let bin = tmp("prop.bin");
+        let csv = tmp("prop.csv");
+        forall("io roundtrip", 0xD15C, 60, |rng| {
+            let s = random_stream(rng);
+            write_binary(&s, &bin).map_err(|e| e.to_string())?;
+            let back = read_binary(&bin).map_err(|e| e.to_string())?;
+            if back != s {
+                return Err(format!("binary roundtrip lost data ({} events)", s.len()));
+            }
+            write_csv(&s, &csv).map_err(|e| e.to_string())?;
+            let back = read_csv(&csv, s.n_types).map_err(|e| e.to_string())?;
+            if back != s {
+                return Err(format!("csv roundtrip lost data ({} events)", s.len()));
+            }
+            Ok(())
+        });
+        std::fs::remove_file(bin).ok();
+        std::fs::remove_file(csv).ok();
+    }
+
+    #[test]
     fn bad_magic_rejected() {
-        let dir = std::env::temp_dir();
-        let path = dir.join("epgs_test_bad_magic.bin");
+        let path = tmp("bad_magic.bin");
         std::fs::write(&path, b"NOPE....").unwrap();
         assert!(read_binary(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let path = tmp("bad_version.bin");
+        write_binary(&sample(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 9; // version lives at offset 4
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = read_binary(&path).unwrap_err().to_string();
+        assert!(msg.contains("version"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_body_rejected_without_allocation() {
+        let path = tmp("truncated.bin");
+        write_binary(&sample(), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let msg = read_binary(&path).unwrap_err().to_string();
+        assert!(msg.contains("body bytes"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn oversized_n_events_rejected_before_reserve() {
+        // a 4-event body whose header claims u64::MAX events: must be a
+        // clean error, not a multi-exabyte reserve
+        let path = tmp("oversized.bin");
+        write_binary(&sample(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12..20].copy_from_slice(&u64::MAX.to_le_bytes()); // n_events at offset 12
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = read_binary(&path).unwrap_err().to_string();
+        assert!(msg.contains("advertises"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn zero_n_types_rejected() {
+        let path = tmp("zero_types.bin");
+        write_binary(&sample(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&0u32.to_le_bytes()); // n_types at offset 8
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = read_binary(&path).unwrap_err().to_string();
+        assert!(msg.contains("n_types"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unsorted_payload_rejected() {
+        // events live at offset 20, 8 bytes each, time at +4: swap the
+        // first two events' times to break ordering
+        let path = tmp("unsorted.bin");
+        write_binary(&sample(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[24..28].copy_from_slice(&9i32.to_le_bytes());
+        bytes[32..36].copy_from_slice(&1i32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = read_binary(&path).unwrap_err().to_string();
+        assert!(msg.contains("unsorted"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn out_of_alphabet_type_rejected() {
+        let path = tmp("bad_type.bin");
+        write_binary(&sample(), &path).unwrap(); // alphabet 0..3
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20..24].copy_from_slice(&7i32.to_le_bytes()); // first event's type
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = read_binary(&path).unwrap_err().to_string();
+        assert!(msg.contains("alphabet"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_out_of_alphabet_and_garbage() {
+        let path = tmp("bad.csv");
+        std::fs::write(&path, "type,time\n0,1\n9,2\n").unwrap();
+        let msg = read_csv(&path, 3).unwrap_err().to_string();
+        assert!(msg.contains("alphabet"), "{msg}");
+        std::fs::write(&path, "type,time\n0,banana\n").unwrap();
+        assert!(read_csv(&path, 3).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_resorts_but_binary_rejects_disorder() {
+        // CSV is hand-editable interchange: out-of-order lines are
+        // stably re-sorted, not rejected (the binary format, by
+        // contrast, treats disorder as corruption — see
+        // `unsorted_payload_rejected`)
+        let path = tmp("disorder.csv");
+        std::fs::write(&path, "type,time\n0,9\n1,3\n").unwrap();
+        let s = read_csv(&path, 3).unwrap();
+        assert_eq!(s.times, vec![3, 9]);
+        assert_eq!(s.types, vec![1, 0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn typed_wrappers_name_the_path() {
+        let missing = tmp("does_not_exist.bin");
+        let err = load_binary(&missing).unwrap_err();
+        match &err {
+            MineError::Io { what, source } => {
+                assert!(what.contains("does_not_exist"), "{what}");
+                assert_eq!(source.kind(), io::ErrorKind::NotFound);
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+
+        let path = tmp("typed.bin");
+        save_binary(&sample(), &path).unwrap();
+        assert_eq!(load_binary(&path).unwrap(), sample());
         std::fs::remove_file(path).ok();
     }
 }

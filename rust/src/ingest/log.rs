@@ -1,0 +1,421 @@
+//! [`SpikeLog`]: a manifest of sealed segments with crash-safe open.
+//!
+//! The manifest (`MANIFEST` in the log directory) is the commit point of
+//! the whole layer. It is a small text file — one header line, one line
+//! per sealed segment — replaced atomically (write `MANIFEST.tmp`, fsync,
+//! rename) every time a segment seals. The recovery contract follows
+//! directly:
+//!
+//! - **a segment is sealed iff the manifest lists it.** Seal order is
+//!   segment-file fsync (+ directory fsync) → manifest replace, so a
+//!   listed segment's bytes are durable.
+//! - **open trusts the manifest, verifies the files — and is read-only.**
+//!   Every listed segment must exist with a structurally valid footer
+//!   matching its manifest line; any disagreement is
+//!   [`MineError::Corrupt`] — sealed data that went bad must surface,
+//!   not shrink silently. Open never mutates the directory, so readers
+//!   can run concurrently with an active ingest (and off read-only
+//!   media) without racing the writer's seal protocol.
+//! - **unlisted `*.seg` files are torn tails.** A crash between segment
+//!   write and manifest replace leaves one. Open *detects* them (they
+//!   are reported in the [`RecoveryReport`] and can never be mined —
+//!   reads go only through the manifest); attaching the single writer
+//!   ([`SpikeLog::ingestor`]) *quarantines* them (renames to
+//!   `<file>.quarantined`, never clobbering an earlier copy), preserving
+//!   the bytes for forensics before the seal sequence reuses the name.
+//! - a leftover `MANIFEST.tmp` is an un-committed replacement: the old
+//!   manifest is authoritative; the writer discards the tmp at attach.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::MineError;
+use crate::events::Tick;
+
+use super::segment::{self, Ingestor, RollPolicy, SegmentMeta};
+
+const MANIFEST: &str = "MANIFEST";
+const MANIFEST_TMP: &str = "MANIFEST.tmp";
+const MANIFEST_MAGIC: &str = "EPGLOG";
+const MANIFEST_VERSION: u32 = 1;
+/// Suffix quarantined torn-tail segments get on recovery.
+pub const QUARANTINE_SUFFIX: &str = ".quarantined";
+
+/// What [`SpikeLog::open`] detected (open itself never mutates the
+/// directory; [`SpikeLog::ingestor`] performs the quarantine).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// unlisted (torn-tail) segment files detected at open: never mined,
+    /// still on disk under their original names
+    pub torn_tails: Vec<String>,
+    /// torn tails renamed to `<file>.quarantined` at writer attach
+    pub quarantined: Vec<String>,
+    /// a leftover `MANIFEST.tmp` from an interrupted seal (the old
+    /// manifest is authoritative; the writer discards it at attach)
+    pub stale_tmp_manifest: bool,
+}
+
+impl RecoveryReport {
+    pub fn is_clean(&self) -> bool {
+        self.torn_tails.is_empty() && self.quarantined.is_empty() && !self.stale_tmp_manifest
+    }
+}
+
+/// A durable, append-only spike recording: an ordered list of sealed,
+/// checksummed segments under one directory. Write through
+/// [`SpikeLog::ingestor`]; read through the range-query API in
+/// [`super::read`].
+pub struct SpikeLog {
+    dir: PathBuf,
+    n_types: usize,
+    segments: Vec<SegmentMeta>,
+    recovery: RecoveryReport,
+}
+
+impl SpikeLog {
+    /// Create a fresh, empty log at `dir` (created if absent). Refuses to
+    /// clobber an existing log — open that instead.
+    pub fn create(dir: &Path, n_types: usize) -> Result<SpikeLog, MineError> {
+        if n_types == 0 {
+            return Err(MineError::invalid("SpikeLog alphabet must have n_types >= 1"));
+        }
+        std::fs::create_dir_all(dir).map_err(|e| {
+            MineError::io(format!("creating log directory {}", dir.display()), e)
+        })?;
+        if dir.join(MANIFEST).exists() {
+            return Err(MineError::invalid(format!(
+                "a spike log already exists at {} — use SpikeLog::open",
+                dir.display()
+            )));
+        }
+        let log = SpikeLog {
+            dir: dir.to_path_buf(),
+            n_types,
+            segments: vec![],
+            recovery: RecoveryReport::default(),
+        };
+        log.write_manifest()?;
+        Ok(log)
+    }
+
+    /// Open an existing log read-only: verify every sealed segment
+    /// against the manifest and *detect* crash debris without touching
+    /// the directory (see the module docs for the recovery contract —
+    /// the quarantine itself runs when [`SpikeLog::ingestor`] attaches).
+    pub fn open(dir: &Path) -> Result<SpikeLog, MineError> {
+        // Scan the directory BEFORE reading the manifest: with a writer
+        // running concurrently, a segment sealed between the two steps is
+        // then already listed by the (later-read) manifest and cannot be
+        // misclassified as a torn tail. The reverse order would flag a
+        // just-sealed segment as torn — and a later writer attach from
+        // that handle would quarantine committed data. A file appearing
+        // after the scan is simply not reported this open.
+        let mut seg_files: Vec<String> = vec![];
+        let dir_entries = std::fs::read_dir(dir).map_err(|e| {
+            MineError::io(format!("scanning log directory {}", dir.display()), e)
+        })?;
+        for dent in dir_entries {
+            let dent = dent.map_err(|e| {
+                MineError::io(format!("scanning log directory {}", dir.display()), e)
+            })?;
+            let name = dent.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".seg") {
+                seg_files.push(name);
+            }
+        }
+
+        let manifest_path = dir.join(MANIFEST);
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            MineError::io(format!("reading log manifest {}", manifest_path.display()), e)
+        })?;
+        let shown = manifest_path.display().to_string();
+        let (n_types, entries) = parse_manifest(&text, &shown)?;
+
+        // An interrupted manifest replacement leaves a tmp behind; the
+        // rename never happened, so MANIFEST stays authoritative. Only
+        // detect it here — open is read-only, the writer cleans up.
+        let mut recovery = RecoveryReport {
+            stale_tmp_manifest: dir.join(MANIFEST_TMP).exists(),
+            ..RecoveryReport::default()
+        };
+
+        // Verify every sealed segment's structure against its manifest
+        // line — including a digest of the footer histogram, which
+        // alphabet-projection pruning trusts without reading the event
+        // columns. (Full data checksums are verified at read time,
+        // keeping open O(segments) — see `segment::read_meta`.)
+        let mut segments: Vec<SegmentMeta> = Vec::with_capacity(entries.len());
+        for entry in &entries {
+            let meta = segment::read_meta(&dir.join(&entry.file), entry.seq)?;
+            let matches = meta.file == entry.file
+                && meta.n_events == entry.n_events
+                && meta.t_min == entry.t_min
+                && meta.t_max == entry.t_max
+                && meta.checksum == entry.checksum
+                && segment::hist_fnv(&meta.hist) == entry.hist_fnv;
+            if !matches {
+                return Err(MineError::corrupt(
+                    dir.join(&entry.file).display().to_string(),
+                    "segment footer disagrees with its manifest line",
+                ));
+            }
+            if meta.n_types != n_types {
+                return Err(MineError::corrupt(
+                    &shown,
+                    format!(
+                        "segment {} has {} types but the log header says {n_types}",
+                        meta.file, meta.n_types
+                    ),
+                ));
+            }
+            if let Some(p) = segments.last() {
+                if p.seq >= meta.seq || p.t_max > meta.t_min {
+                    return Err(MineError::corrupt(
+                        &shown,
+                        format!("segments {} and {} violate seq/time ordering", p.file, meta.file),
+                    ));
+                }
+            }
+            segments.push(meta);
+        }
+
+        // Unlisted segment files were being written when a crash hit (or
+        // were sealed but never committed) — either way they are not part
+        // of the recording and are never mined (reads go only through the
+        // manifest). Detection only; the writer quarantines at attach.
+        let listed: Vec<&str> = segments.iter().map(|m| m.file.as_str()).collect();
+        recovery.torn_tails =
+            seg_files.into_iter().filter(|name| !listed.contains(&name.as_str())).collect();
+        recovery.torn_tails.sort();
+
+        Ok(SpikeLog { dir: dir.to_path_buf(), n_types, segments, recovery })
+    }
+
+    /// Attach the single writer. The ingestor owns the log until
+    /// [`Ingestor::finish`] hands it back. Attaching asserts write
+    /// exclusivity, so this is where crash debris is repaired: torn-tail
+    /// segments are quarantined (renamed `<file>.quarantined`, counter-
+    /// suffixed rather than clobbering an earlier copy) and a stale
+    /// `MANIFEST.tmp` is discarded.
+    pub fn ingestor(mut self, policy: RollPolicy) -> Result<Ingestor, MineError> {
+        self.repair_for_writing()?;
+        Ingestor::new(self, policy)
+    }
+
+    /// The writer-attach half of crash recovery (see [`SpikeLog::ingestor`]).
+    fn repair_for_writing(&mut self) -> Result<(), MineError> {
+        // Stale-handle guard: if another writer advanced the log since
+        // this handle was opened, quarantining "torn" files or sealing
+        // from this view would drop committed segments. Refuse instead.
+        let dst = self.dir.join(MANIFEST);
+        let on_disk = std::fs::read_to_string(&dst).map_err(|e| {
+            MineError::io(format!("re-reading log manifest {}", dst.display()), e)
+        })?;
+        let (n_types, entries) = parse_manifest(&on_disk, &dst.display().to_string())?;
+        let unchanged = n_types == self.n_types
+            && entries.len() == self.segments.len()
+            && entries.iter().zip(&self.segments).all(|(e, m)| {
+                e.seq == m.seq
+                    && e.file == m.file
+                    && e.n_events == m.n_events
+                    && e.t_min == m.t_min
+                    && e.t_max == m.t_max
+                    && e.checksum == m.checksum
+                    && e.hist_fnv == segment::hist_fnv(&m.hist)
+            });
+        if !unchanged {
+            return Err(MineError::invalid(format!(
+                "spike log at {} changed since this handle was opened (another \
+                 writer?) — reopen it before attaching a writer",
+                self.dir.display()
+            )));
+        }
+
+        for name in std::mem::take(&mut self.recovery.torn_tails) {
+            let from = self.dir.join(&name);
+            // never clobber an earlier quarantined copy of the same name
+            // (seal retries reuse seq numbers): suffix a counter until
+            // the destination is free
+            let mut to = self.dir.join(format!("{name}{QUARANTINE_SUFFIX}"));
+            let mut copy = 1;
+            while to.exists() {
+                to = self.dir.join(format!("{name}{QUARANTINE_SUFFIX}.{copy}"));
+                copy += 1;
+            }
+            std::fs::rename(&from, &to).map_err(|e| {
+                MineError::io(format!("quarantining torn segment {}", from.display()), e)
+            })?;
+            self.recovery.quarantined.push(name);
+        }
+        if self.recovery.stale_tmp_manifest {
+            let tmp = self.dir.join(MANIFEST_TMP);
+            std::fs::remove_file(&tmp).map_err(|e| {
+                MineError::io(format!("removing stale {}", tmp.display()), e)
+            })?;
+            self.recovery.stale_tmp_manifest = false;
+        }
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.n_types
+    }
+
+    /// Sealed segments, seq order.
+    pub fn segments(&self) -> &[SegmentMeta] {
+        &self.segments
+    }
+
+    /// Total sealed events.
+    pub fn len(&self) -> usize {
+        self.segments.iter().map(|m| m.n_events).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// First sealed event time (None for an empty log).
+    pub fn t_begin(&self) -> Option<Tick> {
+        self.segments.first().map(|m| m.t_min)
+    }
+
+    /// Last sealed event time (None for an empty log).
+    pub fn t_end(&self) -> Option<Tick> {
+        self.segments.last().map(|m| m.t_max)
+    }
+
+    /// Crash debris the last open detected, and what the writer attach
+    /// (if any) repaired.
+    pub fn recovery(&self) -> &RecoveryReport {
+        &self.recovery
+    }
+
+    pub(crate) fn next_seq(&self) -> u64 {
+        self.segments.last().map(|m| m.seq + 1).unwrap_or(0)
+    }
+
+    /// Record a freshly written segment: append to the in-memory list and
+    /// atomically replace the manifest. This is the seal commit point.
+    pub(crate) fn commit_segment(&mut self, meta: SegmentMeta) -> Result<(), MineError> {
+        debug_assert_eq!(meta.seq, self.next_seq());
+        self.segments.push(meta);
+        if let Err(e) = self.write_manifest() {
+            // the segment file exists but was never committed; forget it
+            // so the in-memory view matches the durable one
+            self.segments.pop();
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn write_manifest(&self) -> Result<(), MineError> {
+        use std::io::Write;
+        let mut text = format!("{MANIFEST_MAGIC} {MANIFEST_VERSION} {}\n", self.n_types);
+        for m in &self.segments {
+            text.push_str(&format!(
+                "{} {} {} {} {} {:016x} {:016x}\n",
+                m.seq,
+                m.file,
+                m.n_events,
+                m.t_min,
+                m.t_max,
+                m.checksum,
+                segment::hist_fnv(&m.hist),
+            ));
+        }
+        let tmp = self.dir.join(MANIFEST_TMP);
+        let ctx = |op: &str, p: &Path| format!("{op} {}", p.display());
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| MineError::io(ctx("creating", &tmp), e))?;
+        f.write_all(text.as_bytes()).map_err(|e| MineError::io(ctx("writing", &tmp), e))?;
+        f.sync_all().map_err(|e| MineError::io(ctx("syncing", &tmp), e))?;
+        drop(f);
+        let dst = self.dir.join(MANIFEST);
+        std::fs::rename(&tmp, &dst)
+            .map_err(|e| MineError::io(ctx("replacing manifest", &dst), e))?;
+        // the rename itself is a directory mutation: fsync the directory
+        // or a power cut can roll the commit back after we reported it
+        fsync_dir(&self.dir)
+    }
+}
+
+/// fsync a directory so renames/creates inside it survive power loss —
+/// the other half of every atomic-replace protocol (file fsync makes the
+/// *bytes* durable; this makes the *name* durable).
+pub(crate) fn fsync_dir(dir: &Path) -> Result<(), MineError> {
+    let f = std::fs::File::open(dir)
+        .map_err(|e| MineError::io(format!("opening directory {}", dir.display()), e))?;
+    f.sync_all()
+        .map_err(|e| MineError::io(format!("syncing directory {}", dir.display()), e))
+}
+
+/// One parsed manifest line: the fields the manifest persists. The full
+/// histogram lives only in segment footers (open re-reads it from there
+/// and checks it against `hist_fnv`).
+struct ManifestEntry {
+    seq: u64,
+    file: String,
+    n_events: usize,
+    t_min: Tick,
+    t_max: Tick,
+    checksum: u64,
+    hist_fnv: u64,
+}
+
+fn parse_manifest(text: &str, shown: &str) -> Result<(usize, Vec<ManifestEntry>), MineError> {
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| MineError::corrupt(shown, "empty manifest"))?;
+    let mut h = header.split_whitespace();
+    if h.next() != Some(MANIFEST_MAGIC) {
+        return Err(MineError::corrupt(shown, "bad manifest magic"));
+    }
+    let version: u32 = h
+        .next()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| MineError::corrupt(shown, "unreadable manifest version"))?;
+    if version != MANIFEST_VERSION {
+        return Err(MineError::corrupt(
+            shown,
+            format!("unsupported manifest version {version} (expected {MANIFEST_VERSION})"),
+        ));
+    }
+    let n_types: usize = h
+        .next()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .ok_or_else(|| MineError::corrupt(shown, "unreadable manifest n_types"))?;
+
+    let mut entries = vec![];
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let bad =
+            || MineError::corrupt(shown, format!("unreadable manifest line {}", i + 2));
+        let mut parts = line.split_whitespace();
+        let seq: u64 = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+        let file = parts.next().ok_or_else(bad)?.to_string();
+        let n_events: usize = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+        let t_min: Tick = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+        let t_max: Tick = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+        let checksum = parts
+            .next()
+            .and_then(|v| u64::from_str_radix(v, 16).ok())
+            .ok_or_else(bad)?;
+        let hist_fnv = parts
+            .next()
+            .and_then(|v| u64::from_str_radix(v, 16).ok())
+            .ok_or_else(bad)?;
+        if parts.next().is_some() {
+            return Err(bad());
+        }
+        entries.push(ManifestEntry { seq, file, n_events, t_min, t_max, checksum, hist_fnv });
+    }
+    Ok((n_types, entries))
+}

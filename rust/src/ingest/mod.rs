@@ -1,0 +1,41 @@
+//! Durable ingest: a segmented, append-only spike-train log with crash
+//! recovery, time-range queries, and replay into the mining layers.
+//!
+//! The paper's chip-on-chip loop (§1, §6.5) hands partitions from the
+//! acquisition chip straight to the miner; everything upstream of this
+//! module mines a partition and drops it. This module closes the loop
+//! with *state*: the same partition feed (or any time-sorted stream)
+//! lands in an on-disk recording that can be re-mined at a different
+//! theta, sliced by time range or electrode subset, replayed into the
+//! serving layer, or audited after a crash — the workflow of the
+//! companion temporal-data-mining papers, where one recording is mined
+//! under many parameter settings.
+//!
+//! Three pieces:
+//!
+//! - [`segment`] — the columnar on-disk unit: event columns plus a footer
+//!   (time bounds, per-type histogram, checksum) that makes each segment
+//!   self-describing and self-verifying. [`Ingestor`] buffers appends and
+//!   seals segments per a [`RollPolicy`], bridging directly from the
+//!   `coordinator::streaming` partition producer.
+//! - [`log`] — [`SpikeLog`]: the manifest of sealed segments, replaced
+//!   atomically at every seal, with crash-safe recovery (read-only open
+//!   detects torn tails and never mines them; attaching the writer
+//!   quarantines them; corrupt sealed data surfaces as
+//!   [`MineError::Corrupt`](crate::MineError::Corrupt)).
+//! - [`read`] — [`RangeQuery`]: time-range + alphabet-projection reads
+//!   that use footers to prune whole segments before any I/O, and
+//!   materialize a sorted [`EventStream`](crate::events::EventStream)
+//!   any `Session` or `MineService` can mine.
+//!
+//! Surfaced as `epminer ingest` / `epminer log-mine`, and as the
+//! `file:`/`log:` dataset schemes every mining subcommand and the serve
+//! load generator accept.
+
+pub mod log;
+pub mod read;
+pub mod segment;
+
+pub use log::{RecoveryReport, SpikeLog};
+pub use read::{RangeQuery, ReadStats};
+pub use segment::{Ingestor, RollPolicy, SegmentMeta};

@@ -1,0 +1,163 @@
+//! Range-addressable reads over a [`SpikeLog`]: time windows and
+//! alphabet projections, pruned by segment footers.
+//!
+//! The reading contract mirrors the in-memory slicing the miners already
+//! use: a time range selects events in `(t_from, t_to]` exactly like
+//! [`EventStream::window`], and an alphabet projection keeps events whose
+//! type is in the requested set *without renumbering* — episode mining
+//! over a projection reports the same global electrode ids the full
+//! recording would. The materialized stream is therefore byte-for-byte
+//! the stream `stream.window(..)` + type filter would produce, which is
+//! what makes "mine the log range" provably equivalent to "mine the
+//! in-memory slice" (see `tests/ingest_log.rs`).
+//!
+//! Footers prune I/O before it happens: a segment whose `[t_min, t_max]`
+//! misses the range, or whose histogram shows none of the projected
+//! types, is skipped without reading its event columns. [`ReadStats`]
+//! reports how much work pruning saved — `benches/ingest_replay.rs`
+//! measures the same numbers as wall time.
+
+use crate::error::MineError;
+use crate::events::{EventStream, EventType, Tick};
+
+use super::log::SpikeLog;
+use super::segment;
+
+/// What to read: an optional time range (half-open on the left, like
+/// [`EventStream::window`]) and an optional alphabet projection.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RangeQuery {
+    /// keep events with `t > t_from` (None: from the beginning)
+    pub t_from: Option<Tick>,
+    /// keep events with `t <= t_to` (None: to the end)
+    pub t_to: Option<Tick>,
+    /// keep events whose type is listed (None: every type). Types keep
+    /// their global ids — a projection narrows the stream, not the
+    /// alphabet.
+    pub alphabet: Option<Vec<EventType>>,
+}
+
+impl RangeQuery {
+    /// The whole recording.
+    pub fn all() -> RangeQuery {
+        RangeQuery::default()
+    }
+
+    /// Restrict to the time window `(t_from, t_to]`.
+    pub fn range(mut self, t_from: Tick, t_to: Tick) -> RangeQuery {
+        self.t_from = Some(t_from);
+        self.t_to = Some(t_to);
+        self
+    }
+
+    /// Project onto the given event types (e.g. electrodes `{3, 7, 9}`).
+    pub fn types(mut self, types: Vec<EventType>) -> RangeQuery {
+        self.alphabet = Some(types);
+        self
+    }
+}
+
+/// How much a query read — and how much the footers let it skip.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReadStats {
+    pub segments_total: usize,
+    pub segments_read: usize,
+    /// skipped because `[t_min, t_max]` misses the time range
+    pub pruned_by_time: usize,
+    /// skipped because the histogram has no event of any projected type
+    pub pruned_by_alphabet: usize,
+    /// events decoded from the segments actually read
+    pub events_scanned: usize,
+    /// events in the materialized result
+    pub events_returned: usize,
+}
+
+impl SpikeLog {
+    /// Materialize the queried slice of the recording as a sorted
+    /// [`EventStream`] ready for `Session` / `MineService`. Every segment
+    /// actually read is checksum-verified first; corrupt sealed data is
+    /// [`MineError::Corrupt`], never a partial answer.
+    pub fn read(&self, query: &RangeQuery) -> Result<(EventStream, ReadStats), MineError> {
+        let n_types = self.n_types();
+        let mask = match &query.alphabet {
+            None => None,
+            Some(types) => {
+                let mut mask = vec![false; n_types];
+                for &ty in types {
+                    if ty < 0 || ty as usize >= n_types {
+                        return Err(MineError::OutOfAlphabet { type_id: ty, n_types });
+                    }
+                    mask[ty as usize] = true;
+                }
+                Some(mask)
+            }
+        };
+        if let (Some(from), Some(to)) = (query.t_from, query.t_to) {
+            if from > to {
+                return Err(MineError::invalid(format!(
+                    "empty time range: t_from {from} > t_to {to}"
+                )));
+            }
+        }
+
+        let mut out = EventStream::new(n_types);
+        let mut stats = ReadStats { segments_total: self.segments().len(), ..Default::default() };
+        for meta in self.segments() {
+            let miss_low = query.t_from.is_some_and(|from| meta.t_max <= from);
+            let miss_high = query.t_to.is_some_and(|to| meta.t_min > to);
+            if miss_low || miss_high {
+                stats.pruned_by_time += 1;
+                continue;
+            }
+            if let Some(types) = &query.alphabet {
+                if !meta.touches_types(types) {
+                    stats.pruned_by_alphabet += 1;
+                    continue;
+                }
+            }
+            let seg = segment::read_segment(&self.dir().join(&meta.file), meta)?;
+            stats.segments_read += 1;
+            stats.events_scanned += seg.len();
+            // Fast path: a segment the footer proves is entirely inside
+            // the time range, with no projection, copies column-wise —
+            // only range-edge segments pay the per-event filter.
+            let contained = query.t_from.map_or(true, |from| from < meta.t_min)
+                && query.t_to.map_or(true, |to| meta.t_max <= to);
+            if contained && mask.is_none() {
+                out.types.extend_from_slice(&seg.types);
+                out.times.extend_from_slice(&seg.times);
+                continue;
+            }
+            for (ty, t) in seg.iter() {
+                if query.t_from.is_some_and(|from| t <= from) {
+                    continue;
+                }
+                if query.t_to.is_some_and(|to| t > to) {
+                    continue;
+                }
+                if let Some(mask) = &mask {
+                    if !mask[ty as usize] {
+                        continue;
+                    }
+                }
+                out.push(ty, t);
+            }
+        }
+        stats.events_returned = out.len();
+        Ok((out, stats))
+    }
+
+    /// The whole recording as one stream.
+    pub fn read_all(&self) -> Result<(EventStream, ReadStats), MineError> {
+        self.read(&RangeQuery::all())
+    }
+
+    /// The time window `(t_from, t_to]` as one stream.
+    pub fn read_range(
+        &self,
+        t_from: Tick,
+        t_to: Tick,
+    ) -> Result<(EventStream, ReadStats), MineError> {
+        self.read(&RangeQuery::all().range(t_from, t_to))
+    }
+}

@@ -1,0 +1,523 @@
+//! On-disk segment format and the [`Ingestor`] that seals them.
+//!
+//! A segment is one immutable, columnar chunk of a spike recording
+//! (little-endian throughout):
+//!
+//! ```text
+//! offset 0   magic    b"EPSG"
+//!        4   version  u32 (= 1)
+//!        8   n_types  u32
+//!       12   n_events u64
+//!       20   types    [i32; n_events]     (columnar: all types, then
+//!       20+4n times   [i32; n_events]      all times — mmap-friendly)
+//! footer:    t_min    i32                 (first event time)
+//!            t_max    i32                 (last event time)
+//!            hist     [u64; n_types]      (per-type event counts)
+//!            checksum u64                 (FNV-1a over every prior byte)
+//!            trailer  b"GSPE"
+//! ```
+//!
+//! The footer makes a sealed segment self-describing: readers prune whole
+//! segments on time range (`t_min`/`t_max`) or alphabet projection
+//! (`hist`) without touching the event columns, and the checksum turns a
+//! torn or bit-rotted file into a typed [`MineError::Corrupt`] instead of
+//! a silently wrong mining answer. [`read_meta`] validates structure only
+//! (magics, version, exact length) so opening a log is O(segments);
+//! [`read_segment`] re-verifies the full checksum before any event
+//! reaches a miner.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::sync::mpsc::Receiver;
+
+use crate::coordinator::streaming::Partition;
+use crate::error::MineError;
+use crate::events::{EventStream, EventType, Tick};
+
+use super::log::SpikeLog;
+
+pub(crate) const MAGIC: &[u8; 4] = b"EPSG";
+pub(crate) const TRAILER: &[u8; 4] = b"GSPE";
+pub(crate) const VERSION: u32 = 1;
+pub(crate) const HEADER_LEN: usize = 20;
+
+/// Bytes after the event columns: t_min + t_max + hist + checksum + trailer.
+pub(crate) fn footer_len(n_types: usize) -> usize {
+    4 + 4 + 8 * n_types + 8 + 4
+}
+
+/// Exact on-disk size of a sealed segment.
+pub(crate) fn segment_len(n_events: usize, n_types: usize) -> usize {
+    HEADER_LEN + 8 * n_events + footer_len(n_types)
+}
+
+/// Canonical file name for a segment sequence number.
+pub fn segment_file_name(seq: u64) -> String {
+    format!("segment-{seq:06}.seg")
+}
+
+/// FNV-1a over a byte slice — the segment checksum. Not cryptographic;
+/// it detects torn writes and bit rot, which is the failure model here
+/// (adversarial tenants meet content verification at the serve layer,
+/// not the storage layer).
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-64 over a histogram's little-endian bytes. Persisted in each
+/// manifest line so `SpikeLog::open` can cross-check the footer
+/// histogram — the field alphabet-projection pruning trusts — without
+/// re-hashing the event columns (that full checksum runs at read time).
+pub(crate) fn hist_fnv(hist: &[u64]) -> u64 {
+    let mut bytes = Vec::with_capacity(8 * hist.len());
+    for &c in hist {
+        bytes.extend_from_slice(&c.to_le_bytes());
+    }
+    fnv64(&bytes)
+}
+
+/// Everything the footer records about a sealed segment, plus its
+/// sequence number and file name. This is the unit the manifest lists
+/// and the unit range queries prune on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentMeta {
+    /// position in the log (strictly increasing, gap-free after recovery)
+    pub seq: u64,
+    /// file name within the log directory
+    pub file: String,
+    pub n_types: usize,
+    pub n_events: usize,
+    /// first event time in the segment
+    pub t_min: Tick,
+    /// last event time in the segment
+    pub t_max: Tick,
+    /// per-type event counts (alphabet-projection pruning)
+    pub hist: Vec<u64>,
+    /// FNV-1a over every byte preceding the checksum field
+    pub checksum: u64,
+}
+
+impl SegmentMeta {
+    /// Does any event of any of `types` occur in this segment?
+    pub fn touches_types(&self, types: &[EventType]) -> bool {
+        types.iter().any(|&ty| {
+            ty >= 0 && (ty as usize) < self.hist.len() && self.hist[ty as usize] > 0
+        })
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(buf: &mut Vec<u8>, v: i32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+fn get_u64(buf: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(buf[off..off + 8].try_into().unwrap())
+}
+
+fn get_i32(buf: &[u8], off: usize) -> i32 {
+    i32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+/// Serialize, checksum, write, and fsync one segment. The stream must be
+/// non-empty, time-sorted, and in-alphabet (the [`Ingestor`] guarantees
+/// all three; this is the low-level writer under it).
+pub fn write_segment(dir: &Path, seq: u64, stream: &EventStream) -> Result<SegmentMeta, MineError> {
+    debug_assert!(!stream.is_empty() && stream.check_sorted());
+    let file = segment_file_name(seq);
+    let path = dir.join(&file);
+    let n = stream.len();
+    let mut buf = Vec::with_capacity(segment_len(n, stream.n_types));
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u32(&mut buf, stream.n_types as u32);
+    put_u64(&mut buf, n as u64);
+    for &ty in &stream.types {
+        put_i32(&mut buf, ty);
+    }
+    for &t in &stream.times {
+        put_i32(&mut buf, t);
+    }
+    put_i32(&mut buf, stream.t_begin());
+    put_i32(&mut buf, stream.t_end());
+    let hist = stream.type_counts();
+    for &c in &hist {
+        put_u64(&mut buf, c);
+    }
+    let checksum = fnv64(&buf);
+    put_u64(&mut buf, checksum);
+    buf.extend_from_slice(TRAILER);
+
+    let ctx = |op: &str| format!("{op} segment {}", path.display());
+    let mut f = File::create(&path).map_err(|e| MineError::io(ctx("creating"), e))?;
+    f.write_all(&buf).map_err(|e| MineError::io(ctx("writing"), e))?;
+    // fsync file *and directory* before the manifest ever names this
+    // file: sealing order is segment durable -> manifest replaced, so a
+    // manifest entry implies both the bytes and the directory entry that
+    // reaches them survived the crash.
+    f.sync_all().map_err(|e| MineError::io(ctx("syncing"), e))?;
+    super::log::fsync_dir(dir)?;
+
+    Ok(SegmentMeta {
+        seq,
+        file,
+        n_types: stream.n_types,
+        n_events: n,
+        t_min: stream.t_begin(),
+        t_max: stream.t_end(),
+        hist,
+        checksum,
+    })
+}
+
+/// Validate the 20-byte header: magic, version, n_types > 0. Returns
+/// `(n_types, advertised n_events)` — the count is *not* trusted until
+/// the caller checks it against the actual file length.
+fn parse_header(bytes: &[u8], shown: &str) -> Result<(usize, u64), MineError> {
+    debug_assert!(bytes.len() >= HEADER_LEN);
+    if &bytes[0..4] != MAGIC {
+        return Err(MineError::corrupt(shown, "bad segment magic"));
+    }
+    let version = get_u32(bytes, 4);
+    if version != VERSION {
+        return Err(MineError::corrupt(
+            shown,
+            format!("unsupported segment version {version} (expected {VERSION})"),
+        ));
+    }
+    let n_types = get_u32(bytes, 8) as usize;
+    if n_types == 0 {
+        return Err(MineError::corrupt(shown, "n_types must be > 0"));
+    }
+    Ok((n_types, get_u64(bytes, 12)))
+}
+
+/// The length equation every intact segment satisfies; a torn tail shows
+/// up right here as a mismatch.
+fn check_length(
+    file_len: u64,
+    n_types: usize,
+    n_events64: u64,
+    shown: &str,
+) -> Result<usize, MineError> {
+    let expected = (n_events64 as u128)
+        .checked_mul(8)
+        .map(|b| b + (HEADER_LEN + footer_len(n_types)) as u128);
+    if expected != Some(file_len as u128) {
+        return Err(MineError::corrupt(
+            shown,
+            format!(
+                "file is {file_len} bytes but the header advertises {n_events64} \
+                 events over {n_types} types — torn write?"
+            ),
+        ));
+    }
+    if n_events64 == 0 {
+        return Err(MineError::corrupt(shown, "segment has zero events"));
+    }
+    Ok(n_events64 as usize)
+}
+
+/// Parse a footer slice (exactly `footer_len(n_types)` bytes).
+fn parse_footer(
+    foot: &[u8],
+    n_types: usize,
+    shown: &str,
+) -> Result<(Tick, Tick, Vec<u64>, u64), MineError> {
+    debug_assert_eq!(foot.len(), footer_len(n_types));
+    if &foot[foot.len() - 4..] != TRAILER {
+        return Err(MineError::corrupt(shown, "bad segment trailer — torn write?"));
+    }
+    let t_min = get_i32(foot, 0);
+    let t_max = get_i32(foot, 4);
+    let hist: Vec<u64> = (0..n_types).map(|i| get_u64(foot, 8 + 8 * i)).collect();
+    let checksum = get_u64(foot, 8 + 8 * n_types);
+    Ok((t_min, t_max, hist, checksum))
+}
+
+fn file_name_of(shown: &str) -> String {
+    Path::new(shown)
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| shown.to_string())
+}
+
+/// Structural validation + footer read, without touching the event
+/// columns or verifying the data checksum: only the fixed-size header
+/// and footer are read, so opening a log is O(segments) regardless of
+/// how many events they hold ([`read_segment`] verifies the checksum
+/// before any event is handed to a miner). Any structural problem —
+/// short file, bad magic/version, length disagreeing with the
+/// advertised event count — is [`MineError::Corrupt`].
+pub fn read_meta(path: &Path, seq: u64) -> Result<SegmentMeta, MineError> {
+    use std::io::{Read, Seek, SeekFrom};
+    let shown = path.display().to_string();
+    let ctx = || format!("reading segment header/footer {shown}");
+    let mut f = File::open(path).map_err(|e| MineError::io(ctx(), e))?;
+    let file_len = f.metadata().map_err(|e| MineError::io(ctx(), e))?.len();
+    if file_len < HEADER_LEN as u64 {
+        return Err(MineError::corrupt(
+            &shown,
+            format!("{file_len} bytes is shorter than the {HEADER_LEN}-byte header"),
+        ));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    f.read_exact(&mut header).map_err(|e| MineError::io(ctx(), e))?;
+    let (n_types, n_events64) = parse_header(&header, &shown)?;
+    let n_events = check_length(file_len, n_types, n_events64, &shown)?;
+    let flen = footer_len(n_types);
+    f.seek(SeekFrom::End(-(flen as i64))).map_err(|e| MineError::io(ctx(), e))?;
+    let mut foot = vec![0u8; flen];
+    f.read_exact(&mut foot).map_err(|e| MineError::io(ctx(), e))?;
+    let (t_min, t_max, hist, checksum) = parse_footer(&foot, n_types, &shown)?;
+    Ok(SegmentMeta {
+        seq,
+        file: file_name_of(&shown),
+        n_types,
+        n_events,
+        t_min,
+        t_max,
+        hist,
+        checksum,
+    })
+}
+
+/// Whole-buffer variant of [`read_meta`], for [`read_segment`], which
+/// needs the full file in memory anyway.
+fn parse_meta(bytes: &[u8], shown: &str, seq: u64) -> Result<SegmentMeta, MineError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(MineError::corrupt(
+            shown,
+            format!("{} bytes is shorter than the {HEADER_LEN}-byte header", bytes.len()),
+        ));
+    }
+    let (n_types, n_events64) = parse_header(bytes, shown)?;
+    let n_events = check_length(bytes.len() as u64, n_types, n_events64, shown)?;
+    let foot = &bytes[HEADER_LEN + 8 * n_events..];
+    let (t_min, t_max, hist, checksum) = parse_footer(foot, n_types, shown)?;
+    Ok(SegmentMeta {
+        seq,
+        file: file_name_of(shown),
+        n_types,
+        n_events,
+        t_min,
+        t_max,
+        hist,
+        checksum,
+    })
+}
+
+/// Read one sealed segment back, verifying the checksum and every stream
+/// invariant (sorted times, in-alphabet types, footer consistent with the
+/// columns) before returning it. `expect` is the manifest's view of the
+/// segment; any disagreement is [`MineError::Corrupt`].
+pub fn read_segment(path: &Path, expect: &SegmentMeta) -> Result<EventStream, MineError> {
+    let shown = path.display().to_string();
+    let bytes = std::fs::read(path)
+        .map_err(|e| MineError::io(format!("reading segment {shown}"), e))?;
+    let meta = parse_meta(&bytes, &shown, expect.seq)?;
+    if meta != *expect {
+        return Err(MineError::corrupt(
+            &shown,
+            "segment footer disagrees with the manifest entry that sealed it",
+        ));
+    }
+    let data_end = bytes.len() - 8 - 4;
+    let stored = get_u64(&bytes, data_end);
+    let actual = fnv64(&bytes[..data_end]);
+    if stored != actual {
+        return Err(MineError::corrupt(
+            &shown,
+            format!("checksum mismatch (stored {stored:016x}, computed {actual:016x})"),
+        ));
+    }
+    let mut stream = EventStream::new(meta.n_types);
+    stream.types.reserve(meta.n_events);
+    stream.times.reserve(meta.n_events);
+    for i in 0..meta.n_events {
+        stream.types.push(get_i32(&bytes, HEADER_LEN + 4 * i));
+    }
+    let times_base = HEADER_LEN + 4 * meta.n_events;
+    for i in 0..meta.n_events {
+        stream.times.push(get_i32(&bytes, times_base + 4 * i));
+    }
+    if !stream.check_sorted() {
+        return Err(MineError::corrupt(&shown, "event columns are unsorted or out of alphabet"));
+    }
+    if stream.t_begin() != meta.t_min
+        || stream.t_end() != meta.t_max
+        || stream.type_counts() != meta.hist
+    {
+        return Err(MineError::corrupt(&shown, "footer statistics disagree with the event columns"));
+    }
+    Ok(stream)
+}
+
+/// When the in-memory buffer seals into a segment. Both limits apply;
+/// whichever trips first rolls the segment.
+#[derive(Clone, Copy, Debug)]
+pub struct RollPolicy {
+    /// seal once this many events are buffered
+    pub max_events: usize,
+    /// seal once the buffered span reaches this many ticks
+    pub max_width_ticks: Tick,
+}
+
+impl Default for RollPolicy {
+    fn default() -> RollPolicy {
+        // ~64 KiB of event columns per segment, or a minute of recording
+        // at ms ticks — small enough that range queries prune usefully,
+        // large enough that footers are noise.
+        RollPolicy { max_events: 8_192, max_width_ticks: 60_000 }
+    }
+}
+
+impl RollPolicy {
+    fn validate(&self) -> Result<(), MineError> {
+        if self.max_events == 0 {
+            return Err(MineError::invalid("RollPolicy::max_events must be >= 1"));
+        }
+        if self.max_width_ticks <= 0 {
+            return Err(MineError::invalid("RollPolicy::max_width_ticks must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+/// The write half of a [`SpikeLog`]: buffers appends, seals segments per
+/// the [`RollPolicy`], and commits each seal to the manifest atomically.
+///
+/// The ingestor *owns* the log while writing (single-writer by
+/// construction); [`Ingestor::finish`] seals the remainder and hands the
+/// log back for reading. Appends must be time-ordered across the whole
+/// log — the invariant that makes every segment and every cross-segment
+/// concatenation a valid [`EventStream`] without re-sorting.
+pub struct Ingestor {
+    log: SpikeLog,
+    policy: RollPolicy,
+    buf: EventStream,
+    appended: u64,
+}
+
+impl Ingestor {
+    pub(crate) fn new(log: SpikeLog, policy: RollPolicy) -> Result<Ingestor, MineError> {
+        policy.validate()?;
+        let n_types = log.n_types();
+        Ok(Ingestor { log, policy, buf: EventStream::new(n_types), appended: 0 })
+    }
+
+    /// Smallest time the next append may carry (monotonic across sealed
+    /// segments and the buffer).
+    fn floor_time(&self) -> Option<Tick> {
+        self.buf.times.last().copied().or(self.log.t_end())
+    }
+
+    /// Append one event. Types outside the log's alphabet are
+    /// [`MineError::OutOfAlphabet`]; out-of-order times are
+    /// [`MineError::InvalidConfig`] (the producer contract is a
+    /// time-ordered spike feed — see `coordinator::streaming`).
+    pub fn append(&mut self, ty: EventType, t: Tick) -> Result<(), MineError> {
+        let n_types = self.log.n_types();
+        if ty < 0 || ty as usize >= n_types {
+            return Err(MineError::OutOfAlphabet { type_id: ty, n_types });
+        }
+        if let Some(floor) = self.floor_time() {
+            if t < floor {
+                return Err(MineError::invalid(format!(
+                    "ingest appends must be time-ordered: event at tick {t} after \
+                     tick {floor} was already recorded"
+                )));
+            }
+        }
+        self.buf.push(ty, t);
+        self.appended += 1;
+        self.roll_if_due()
+    }
+
+    /// Append a whole time-sorted stream (alphabet must match the log's).
+    pub fn append_stream(&mut self, stream: &EventStream) -> Result<(), MineError> {
+        if stream.n_types != self.log.n_types() {
+            return Err(MineError::invalid(format!(
+                "stream alphabet ({} types) does not match the log's ({})",
+                stream.n_types,
+                self.log.n_types()
+            )));
+        }
+        for (ty, t) in stream.iter() {
+            self.append(ty, t)?;
+        }
+        Ok(())
+    }
+
+    /// Bridge from the chip-on-chip streaming producer: drain a partition
+    /// channel (until the producer hangs up) into the log. Returns the
+    /// number of events ingested.
+    pub fn ingest_partitions(&mut self, rx: Receiver<Partition>) -> Result<usize, MineError> {
+        let mut events = 0;
+        while let Ok(part) = rx.recv() {
+            events += part.stream.len();
+            self.append_stream(&part.stream)?;
+        }
+        Ok(events)
+    }
+
+    fn roll_if_due(&mut self) -> Result<(), MineError> {
+        if self.buf.len() >= self.policy.max_events
+            || self.buf.span() >= self.policy.max_width_ticks
+        {
+            self.seal()?;
+        }
+        Ok(())
+    }
+
+    /// Force-seal the buffered events into a segment now (no-op when the
+    /// buffer is empty). Sealing is atomic at the manifest replacement: a
+    /// crash before it leaves an unlisted file the next open quarantines.
+    ///
+    /// On failure the buffer is kept intact, so a transient error (disk
+    /// momentarily full, say) is retryable — the events are not lost. A
+    /// half-written segment file from the failed attempt is harmless:
+    /// unlisted, it is quarantined by the next open, and a retried seal
+    /// under the same seq simply rewrites it.
+    pub fn seal(&mut self) -> Result<(), MineError> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let meta = write_segment(self.log.dir(), self.log.next_seq(), &self.buf)?;
+        self.log.commit_segment(meta)?;
+        self.buf = EventStream::new(self.log.n_types());
+        Ok(())
+    }
+
+    /// Events appended so far (buffered + sealed).
+    pub fn events_appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Events buffered but not yet sealed.
+    pub fn events_buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Seal the remainder and hand the log back for reading.
+    pub fn finish(mut self) -> Result<SpikeLog, MineError> {
+        self.seal()?;
+        Ok(self.log)
+    }
+}

@@ -51,6 +51,14 @@
 //!   elimination.
 //! - [`session`] — the [`Session`] facade, its builder, and the level-wise
 //!   mining driver.
+//! - [`ingest`] — the durable spike log: checksummed columnar segments
+//!   sealed by an [`ingest::Ingestor`] (fed directly from the streaming
+//!   partition producer), a crash-recovering [`ingest::SpikeLog`]
+//!   manifest (read-only open; torn tails quarantined at writer
+//!   attach), and
+//!   footer-pruned time-range / electrode-projection queries that replay
+//!   recorded history into `Session` or the serving layer (`epminer
+//!   ingest`, `epminer log-mine`, the `file:`/`log:` dataset schemes).
 //! - [`serve`] — the multi-tenant mining service: a worker pool over the
 //!   engines with request coalescing, a sharded LRU result cache keyed by
 //!   exact stream fingerprint, bounded admission ([`MineError::Busy`]),
@@ -68,6 +76,7 @@ pub mod episodes;
 pub mod error;
 pub mod events;
 pub mod gpu_model;
+pub mod ingest;
 pub mod mining;
 pub mod runtime;
 pub mod serve;

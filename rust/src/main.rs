@@ -1,15 +1,21 @@
 //! `epminer`: CLI front-end for the episodes-gpu miner.
 //!
 //! Subcommands:
-//!   mine        — level-wise mining over a named dataset
+//!   mine        — level-wise mining over a dataset (name, file: or log:)
 //!   count       — count explicit episodes (debugging/inspection)
 //!   gen         — generate a dataset to a file (binary or csv)
+//!   ingest      — replay a dataset through the streaming producer into a
+//!                 durable segmented spike log (ingest/)
+//!   log-mine    — time-range / electrode-projection mining over a log
 //!   serve-bench — load-test the multi-tenant mining service (serve/)
 //!   info        — runtime/artifact information
 //!
 //! Examples:
 //!   epminer mine --dataset sym26 --theta 60 --mode two-pass
 //!   epminer gen --dataset 2-1-35 --out /tmp/d35.bin
+//!   epminer mine --dataset file:/tmp/d35.bin --theta 40
+//!   epminer ingest --dataset sym26 --out /tmp/rec
+//!   epminer log-mine --log /tmp/rec --from 10000 --to 30000 --types 3,7,9 --theta 20
 //!   epminer serve-bench --smoke
 //!   epminer info
 //!
@@ -37,6 +43,8 @@ fn run() -> Result<(), MineError> {
         Some("mine") => cmd_mine(&args),
         Some("count") => cmd_count(&args),
         Some("gen") => cmd_gen(&args),
+        Some("ingest") => cmd_ingest(&args),
+        Some("log-mine") => cmd_log_mine(&args),
         Some("reconstruct") => cmd_reconstruct(&args),
         Some("raster") => cmd_raster(&args),
         Some("profile") => cmd_profile(&args),
@@ -44,20 +52,27 @@ fn run() -> Result<(), MineError> {
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: epminer <mine|count|gen|reconstruct|raster|profile|serve-bench|info> [options]\n\
+                "usage: epminer <mine|count|gen|ingest|log-mine|reconstruct|raster|profile|serve-bench|info> [options]\n\
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
                  \x20            [--max-level <n>] [--seed <u64>] [--threads <n>]\n\
                  count       --dataset <name> --episode 0,1,2 --low 5 --high 15 [--seed <u64>]\n\
                  gen         --dataset <name> --out <path> [--format bin|csv] [--seed <u64>]\n\
+                 ingest      --dataset <name> --out <dir> [--append] [--segment-events <n>]\n\
+                 \x20            [--segment-width <ticks>] [--width <ticks>] [--speedup <x>]\n\
+                 \x20            — replay through the streaming producer into a durable log\n\
+                 log-mine    --log <dir> --theta <u64> [--from <tick> --to <tick>]\n\
+                 \x20            [--types 3,7,9] — range/projection mining over recorded history\n\
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
                  raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
                  profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
                  serve-bench [--clients <n>] [--requests <n>] [--workers <n>] [--queue <n>]\n\
                  \x20            [--cache <entries>] [--strategy <name>] [--events <n>]\n\
-                 \x20            [--seed <u64>] [--smoke] — load-test the mining service\n\
-                 info",
+                 \x20            [--dataset <spec>] [--seed <u64>] [--smoke] — load-test the service\n\
+                 info\n\
+                 \n\
+                 --dataset also accepts file:<path.bin> and log:<segment-dir>",
                 names = datasets::names().join("|"),
                 strategies = Strategy::NAMES.join("|"),
             );
@@ -67,12 +82,9 @@ fn run() -> Result<(), MineError> {
 }
 
 fn load_dataset(args: &Args) -> Result<(episodes_gpu::events::EventStream, String), MineError> {
-    let name = args.get_or("dataset", "sym26").to_string();
+    let spec = args.get_or("dataset", "sym26");
     let seed = args.get_u64("seed", 7)?;
-    match datasets::by_name(&name, seed) {
-        Some((stream, tag)) => Ok((stream, tag.to_string())),
-        None => Err(MineError::UnknownDataset { given: name, valid: datasets::names() }),
-    }
+    datasets::resolve(spec, seed)
 }
 
 /// Default delay band for a dataset comes from the registry; `--low` /
@@ -132,6 +144,17 @@ fn cmd_mine(args: &Args) -> Result<(), MineError> {
 
     let t0 = std::time::Instant::now();
     let result = session.mine()?;
+    print_levels(&result);
+    println!(
+        "\ntotal {:.3}s; metrics: {}",
+        t0.elapsed().as_secs_f64(),
+        session.metrics().report()
+    );
+    print_top_episodes(&result);
+    Ok(())
+}
+
+fn print_levels(result: &episodes_gpu::coordinator::miner::MineResult) {
     println!("\nlevel  candidates  frequent  a2-culled  count-time");
     for l in &result.levels {
         println!(
@@ -139,18 +162,15 @@ fn cmd_mine(args: &Args) -> Result<(), MineError> {
             l.level, l.candidates, l.frequent, l.culled_by_a2, l.count_seconds
         );
     }
-    println!(
-        "\ntotal {:.3}s; metrics: {}",
-        t0.elapsed().as_secs_f64(),
-        session.metrics().report()
-    );
+}
+
+fn print_top_episodes(result: &episodes_gpu::coordinator::miner::MineResult) {
     let mut top: Vec<_> = result.frequent.iter().filter(|c| c.episode.n() >= 2).collect();
     top.sort_by_key(|c| std::cmp::Reverse((c.episode.n(), c.count)));
     println!("\ntop frequent episodes:");
     for c in top.iter().take(12) {
         println!("  [{}] {}", c.count, c.episode.display());
     }
-    Ok(())
 }
 
 fn cmd_count(args: &Args) -> Result<(), MineError> {
@@ -185,13 +205,137 @@ fn cmd_gen(args: &Args) -> Result<(), MineError> {
     let out = args.get("out").ok_or_else(|| MineError::invalid("--out required"))?;
     let path = std::path::Path::new(out);
     match args.get_or("format", "bin") {
-        "bin" => io::write_binary(&stream, path)
-            .map_err(|e| MineError::io(format!("writing {out}"), e))?,
-        "csv" => io::write_csv(&stream, path)
-            .map_err(|e| MineError::io(format!("writing {out}"), e))?,
+        "bin" => io::save_binary(&stream, path)?,
+        "csv" => io::save_csv(&stream, path)?,
         other => return Err(MineError::invalid(format!("bad --format {other} (bin|csv)"))),
     }
     println!("wrote {name} ({} events) to {out}", stream.len());
+    Ok(())
+}
+
+fn cmd_ingest(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::coordinator::streaming::{spawn_producer_with, ProducerConfig};
+    use episodes_gpu::ingest::{RollPolicy, SpikeLog};
+
+    let (stream, name) = load_dataset(args)?;
+    let out = args.get("out").ok_or_else(|| MineError::invalid("--out <dir> required"))?;
+    let policy = RollPolicy {
+        max_events: args.get_usize("segment-events", 8_192)?,
+        max_width_ticks: args.get_i32("segment-width", 10_000)?,
+    };
+    // Replay through the chip-on-chip partition producer (accelerated by
+    // default — `--speedup 1` replays the recording in real time, which
+    // is the acquisition-side simulation).
+    let width = args.get_i32("width", 5_000)?;
+    let speedup = args.get_f64("speedup", 1e9)?;
+    let total = stream.len();
+    let n_types = stream.n_types;
+    println!(
+        "ingesting {name}: {total} events over {} types, partition width {width} ticks",
+        n_types
+    );
+
+    let rx = spawn_producer_with(stream, width, ProducerConfig { speedup, ..Default::default() })?;
+    // --append attaches to an existing log (continuing its seq/time line
+    // and running the writer-side crash repair: torn tails quarantined,
+    // stale MANIFEST.tmp discarded); default is a fresh log.
+    let out_path = std::path::Path::new(out);
+    let log = if args.flag("append") {
+        let log = SpikeLog::open(out_path)?;
+        if log.n_types() != n_types {
+            return Err(MineError::invalid(format!(
+                "log at {out} records {} types but dataset {name} has {n_types}",
+                log.n_types()
+            )));
+        }
+        log
+    } else {
+        SpikeLog::create(out_path, n_types)?
+    };
+    let mut ingestor = log.ingestor(policy)?;
+    let t0 = std::time::Instant::now();
+    let events = ingestor.ingest_partitions(rx)?;
+    let log = ingestor.finish()?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    println!(
+        "sealed {} segments ({events} events) at {out} in {secs:.3}s — {:.0} events/s",
+        log.segments().len(),
+        events as f64 / secs.max(1e-9),
+    );
+    for m in log.segments().iter().take(8) {
+        println!(
+            "  seg {:>4}  {:>8} events  ticks [{}, {}]  checksum {:016x}",
+            m.seq, m.n_events, m.t_min, m.t_max, m.checksum
+        );
+    }
+    if log.segments().len() > 8 {
+        println!("  ... {} more", log.segments().len() - 8);
+    }
+    Ok(())
+}
+
+fn cmd_log_mine(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::ingest::{RangeQuery, SpikeLog};
+
+    let dir = args.get("log").ok_or_else(|| MineError::invalid("--log <dir> required"))?;
+    let log = SpikeLog::open(std::path::Path::new(dir))?;
+    let rec = log.recovery();
+    if !rec.torn_tails.is_empty() {
+        println!(
+            "recovery: {} torn segment file(s) detected — never mined; run \
+             `epminer ingest --append --out {dir}` to quarantine: {}",
+            rec.torn_tails.len(),
+            rec.torn_tails.join(", ")
+        );
+    }
+    if rec.stale_tmp_manifest {
+        println!("recovery: stale MANIFEST.tmp from an interrupted seal (manifest wins)");
+    }
+
+    let mut query = RangeQuery::all();
+    if args.get("from").is_some() {
+        query.t_from = Some(args.get_i32("from", 0)?);
+    }
+    if args.get("to").is_some() {
+        query.t_to = Some(args.get_i32("to", 0)?);
+    }
+    if let Some(spec) = args.get("types") {
+        let types: Vec<i32> = spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<i32>()
+                    .map_err(|_| MineError::invalid(format!("bad --types element {s:?}")))
+            })
+            .collect::<Result<_, _>>()?;
+        query.alphabet = Some(types);
+    }
+
+    let (stream, stats) = log.read(&query)?;
+    println!(
+        "log {dir}: {} sealed segments, {} events; query read {}/{} segments \
+         ({} pruned by time, {} by alphabet) -> {} events",
+        stats.segments_total,
+        log.len(),
+        stats.segments_read,
+        stats.segments_total,
+        stats.pruned_by_time,
+        stats.pruned_by_alphabet,
+        stats.events_returned,
+    );
+    if stream.is_empty() {
+        println!("nothing to mine in the queried range");
+        return Ok(());
+    }
+
+    let theta = args.get_u64("theta", 20)?;
+    let spec = format!("log:{dir}");
+    let mut session = session_builder(args, stream, &spec, theta)?.build()?;
+    println!("backend: {}", session.backend_name());
+    let result = session.mine()?;
+    print_levels(&result);
+    print_top_episodes(&result);
     Ok(())
 }
 
@@ -290,6 +434,10 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
     lg.requests_per_client = args.get_usize("requests", lg.requests_per_client)?;
     lg.base_events = args.get_usize("events", lg.base_events)?;
     lg.seed = args.get_u64("seed", lg.seed)?;
+    // `--dataset sym26` / `--dataset log:/path`: drive the hot/sweep/
+    // sliding scenarios from a named or recorded stream instead of the
+    // synthetic one.
+    lg.base_dataset = args.get("dataset").map(|s| s.to_string());
 
     let d = ServiceConfig::default();
     let sc = ServiceConfig {

@@ -64,7 +64,14 @@ pub struct LoadGenConfig {
     pub requests_per_client: usize,
     pub mix: MixWeights,
     pub seed: u64,
-    /// events in the shared base stream (hot/sweep/sliding scenarios)
+    /// When set, the shared base stream (hot/sweep/sliding scenarios)
+    /// comes from this dataset spec via [`crate::datasets::resolve`] —
+    /// any registry name, `file:<path>`, or `log:<dir>` — so the load
+    /// generator can replay recorded history instead of a synthetic
+    /// stream. `base_events`/`n_types` then only shape the distinct-pool
+    /// scenario.
+    pub base_dataset: Option<String>,
+    /// events in the synthetic base stream (when `base_dataset` is None)
     pub base_events: usize,
     pub n_types: usize,
     /// number of distinct hot queries
@@ -88,6 +95,7 @@ impl Default for LoadGenConfig {
             requests_per_client: 50,
             mix: MixWeights::default(),
             seed: 0x5EED,
+            base_dataset: None,
             base_events: 20_000,
             n_types: 8,
             hot_set: 4,
@@ -149,7 +157,18 @@ impl Workload {
         }
         let mut rng = Rng::new(cfg.seed);
         let iv = Interval::new(0, 6);
-        let base = Arc::new(synth_stream(&mut rng, cfg.base_events, cfg.n_types));
+        let base = match &cfg.base_dataset {
+            Some(spec) => {
+                let (stream, _) = crate::datasets::resolve(spec, cfg.seed)?;
+                if stream.is_empty() {
+                    return Err(MineError::invalid(format!(
+                        "base dataset {spec} resolved to an empty stream"
+                    )));
+                }
+                Arc::new(stream)
+            }
+            None => Arc::new(synth_stream(&mut rng, cfg.base_events, cfg.n_types)),
+        };
 
         let hot = (0..cfg.hot_set.max(1))
             .map(|i| {

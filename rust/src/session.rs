@@ -321,8 +321,10 @@ impl SessionBuilder {
     }
 
     /// Mine over a named dataset from the registry (`sym26`, `2-1-33`,
-    /// `2-1-34`, `2-1-35`); the dataset's default inter-event constraint
-    /// is used unless [`SessionBuilder::intervals`] overrides it.
+    /// `2-1-34`, `2-1-35`), a binary stream on disk (`file:<path>`), or a
+    /// sealed ingest log (`log:<dir>`); the dataset's default inter-event
+    /// constraint is used unless [`SessionBuilder::intervals`] overrides
+    /// it (path-backed streams default to the generic `(2, 10]` band).
     pub fn dataset(mut self, name: impl Into<String>) -> Self {
         self.dataset = Some(name.into());
         self
@@ -418,26 +420,22 @@ impl SessionBuilder {
         // Validate the dataset name whenever one was given, even alongside
         // an explicit stream (where it only supplies interval defaults) —
         // a typo should say "unknown dataset", not a misleading
-        // missing-intervals error later.
+        // missing-intervals error later. `file:`/`log:` specs pass here
+        // and surface path problems as typed I/O errors at resolve time.
         if let Some(name) = dataset.as_deref() {
-            if datasets::info(name).is_none() {
+            if !datasets::is_path_scheme(name) && datasets::info(name).is_none() {
                 return Err(MineError::UnknownDataset {
                     given: name.to_string(),
-                    valid: datasets::names(),
+                    valid: datasets::names_and_schemes(),
                 });
             }
         }
         let (stream, dataset_name) = match (stream, dataset) {
             (Some(s), d) => (s, d),
-            (None, Some(name)) => match datasets::by_name(&name, seed) {
-                Some((s, tag)) => (s, Some(tag.to_string())),
-                None => {
-                    return Err(MineError::UnknownDataset {
-                        given: name,
-                        valid: datasets::names(),
-                    })
-                }
-            },
+            (None, Some(name)) => {
+                let (s, tag) = datasets::resolve(&name, seed)?;
+                (s, Some(tag))
+            }
             (None, None) => {
                 return Err(MineError::invalid(
                     "no event stream — call .stream(...) or .dataset(...)",

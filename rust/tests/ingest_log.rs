@@ -1,0 +1,509 @@
+//! The ingest layer's acceptance property: recovery + mining equivalence.
+//!
+//! After ingesting a random stream (directly or via the streaming
+//! partition producer) and simulating a torn tail write, reopening the
+//! `SpikeLog` recovers exactly the sealed segments; and `Session::mine`
+//! over any queried time range / alphabet projection returns a result
+//! identical to mining the equivalent in-memory slice of the original
+//! stream — including when served through `MineService` from a
+//! log-backed scenario.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use episodes_gpu::coordinator::streaming::{spawn_producer_with, ProducerConfig};
+use episodes_gpu::coordinator::Strategy;
+use episodes_gpu::datasets;
+use episodes_gpu::episodes::Interval;
+use episodes_gpu::events::{io, EventStream, EventType, Tick};
+use episodes_gpu::ingest::{RangeQuery, RollPolicy, SpikeLog};
+use episodes_gpu::serve::loadgen::{LoadGenConfig, Workload};
+use episodes_gpu::serve::{MineService, ServiceConfig};
+use episodes_gpu::util::prop::{forall, small_size};
+use episodes_gpu::util::rng::Rng;
+use episodes_gpu::{MineError, Session};
+
+/// Fresh scratch directory (removed first, so reruns start clean).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("epgs_ingest_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Random valid stream: small alphabet, non-decreasing times, bursty
+/// enough that segments get non-trivial histograms.
+fn random_stream(rng: &mut Rng, max_events: usize) -> EventStream {
+    let n_types = small_size(rng, 6);
+    let n_events = small_size(rng, max_events);
+    let mut s = EventStream::new(n_types);
+    let mut t = rng.range_i32(0, 20);
+    for _ in 0..n_events {
+        t += rng.range_i32(0, 3);
+        s.push(rng.range_i32(0, n_types as i32 - 1), t);
+    }
+    s
+}
+
+fn random_policy(rng: &mut Rng) -> RollPolicy {
+    RollPolicy {
+        max_events: small_size(rng, 64),
+        max_width_ticks: small_size(rng, 50) as Tick,
+    }
+}
+
+/// The in-memory equivalent of a log range query: window + projection
+/// over the original stream, alphabet ids preserved.
+fn slice_in_memory(stream: &EventStream, q: &RangeQuery) -> EventStream {
+    let mut out = EventStream::new(stream.n_types);
+    for (ty, t) in stream.iter() {
+        if q.t_from.is_some_and(|from| t <= from) {
+            continue;
+        }
+        if q.t_to.is_some_and(|to| t > to) {
+            continue;
+        }
+        if let Some(types) = &q.alphabet {
+            if !types.contains(&ty) {
+                continue;
+            }
+        }
+        out.push(ty, t);
+    }
+    out
+}
+
+/// `(episode display, count)` — the order-insensitive shape two mining
+/// runs are compared on.
+type CountedShape = (String, u64);
+
+fn mine_cpu(stream: EventStream, theta: u64) -> Result<Vec<CountedShape>, MineError> {
+    if stream.is_empty() {
+        return Ok(vec![]);
+    }
+    let mut session = Session::builder()
+        .stream(stream)
+        .theta(theta)
+        .interval(Interval::new(0, 4))
+        .strategy(Strategy::CpuSerial)
+        .max_level(3)
+        .build()?;
+    let result = session.mine()?;
+    Ok(result
+        .frequent
+        .iter()
+        .map(|c| (c.episode.display(), c.count))
+        .collect())
+}
+
+#[test]
+fn ingest_seal_recover_equivalence_property() {
+    let base = scratch("prop");
+    let mut case_no = 0u64;
+    forall("ingest recover+equivalence", 0x1065, 25, |rng| {
+        case_no += 1;
+        let dir = base.join(format!("case{case_no}"));
+        let stream = random_stream(rng, 300);
+        let policy = random_policy(rng);
+
+        // ingest the whole stream, sealing per the random roll policy
+        let mut ingestor = SpikeLog::create(&dir, stream.n_types)
+            .map_err(|e| e.to_string())?
+            .ingestor(policy)
+            .map_err(|e| e.to_string())?;
+        ingestor.append_stream(&stream).map_err(|e| e.to_string())?;
+        let log = ingestor.finish().map_err(|e| e.to_string())?;
+        let sealed: Vec<_> = log.segments().to_vec();
+        if log.len() != stream.len() {
+            return Err(format!("sealed {} of {} events", log.len(), stream.len()));
+        }
+
+        // simulate a torn tail: a partial segment file that never made
+        // the manifest (crash between file write and manifest replace)
+        let torn_name = format!("segment-{:06}.seg", sealed.len() as u64 + 7);
+        let donor = dir.join(&sealed[0].file);
+        let bytes = std::fs::read(&donor).map_err(|e| e.to_string())?;
+        let cut = 1 + rng.below(bytes.len() as u64 - 1) as usize;
+        std::fs::write(dir.join(&torn_name), &bytes[..cut]).map_err(|e| e.to_string())?;
+
+        // reopen (read-only): exactly the sealed segments survive; the
+        // torn tail is detected but never mined and never touched
+        let log = SpikeLog::open(&dir).map_err(|e| e.to_string())?;
+        if log.segments() != sealed.as_slice() {
+            return Err("recovered segment set differs from the sealed set".into());
+        }
+        if log.recovery().torn_tails != vec![torn_name.clone()] {
+            return Err(format!(
+                "expected torn tail {torn_name} detected, got {:?}",
+                log.recovery().torn_tails
+            ));
+        }
+        if !dir.join(&torn_name).exists() {
+            return Err("read-only open must not touch the torn tail".into());
+        }
+        let (all, _) = log.read_all().map_err(|e| e.to_string())?;
+        if all != stream {
+            return Err("read_all must reproduce the ingested stream".into());
+        }
+
+        // random range + projection queries: the materialized slice and
+        // its mining result match the in-memory equivalent exactly
+        for _ in 0..3 {
+            let span_lo = stream.t_begin() - 2;
+            let span_hi = stream.t_end() + 2;
+            let a = rng.range_i32(span_lo, span_hi);
+            let b = rng.range_i32(span_lo, span_hi);
+            let (from, to) = (a.min(b), a.max(b));
+            let mut q = RangeQuery::all().range(from, to);
+            if rng.chance(0.5) {
+                let keep: Vec<EventType> = (0..stream.n_types as i32)
+                    .filter(|_| rng.chance(0.6))
+                    .collect();
+                if !keep.is_empty() {
+                    q.alphabet = Some(keep);
+                }
+            }
+            let (got, stats) = log.read(&q).map_err(|e| e.to_string())?;
+            let want = slice_in_memory(&stream, &q);
+            if got != want {
+                return Err(format!(
+                    "range ({from}, {to}] projection {:?}: log read diverges \
+                     ({} vs {} events)",
+                    q.alphabet,
+                    got.len(),
+                    want.len()
+                ));
+            }
+            if stats.segments_read + stats.pruned_by_time + stats.pruned_by_alphabet
+                != stats.segments_total
+            {
+                return Err("read stats must account for every segment".into());
+            }
+            let mined_log = mine_cpu(got, 2).map_err(|e| e.to_string())?;
+            let mined_mem = mine_cpu(want, 2).map_err(|e| e.to_string())?;
+            if mined_log != mined_mem {
+                return Err("mining the log slice diverged from the in-memory slice".into());
+            }
+        }
+
+        // attaching the writer quarantines the torn tail (bytes kept
+        // aside for forensics, name freed for the next seal)
+        let log = log
+            .ingestor(policy)
+            .map_err(|e| e.to_string())?
+            .finish()
+            .map_err(|e| e.to_string())?;
+        if log.recovery().quarantined != vec![torn_name.clone()] {
+            return Err(format!(
+                "expected {torn_name} quarantined at attach, got {:?}",
+                log.recovery().quarantined
+            ));
+        }
+        if !dir.join(format!("{torn_name}.quarantined")).exists() {
+            return Err("quarantined bytes must be preserved for forensics".into());
+        }
+        if dir.join(&torn_name).exists() {
+            return Err("quarantine must free the torn segment's name".into());
+        }
+        if log.segments() != sealed.as_slice() {
+            return Err("writer attach must not change the sealed set".into());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn streaming_producer_feeds_the_ingestor_losslessly() {
+    let dir = scratch("producer");
+    let mut rng = Rng::new(42);
+    let mut stream = random_stream(&mut rng, 2_000);
+    while stream.span() < 50 {
+        // ensure several partitions' worth of span
+        let t = stream.t_end() + 1;
+        stream.push(0, t);
+    }
+    let rx = spawn_producer_with(
+        stream.clone(),
+        10,
+        ProducerConfig { speedup: 1e9, ..Default::default() },
+    )
+    .unwrap();
+    let mut ingestor = SpikeLog::create(&dir, stream.n_types)
+        .unwrap()
+        .ingestor(RollPolicy { max_events: 64, max_width_ticks: 25 })
+        .unwrap();
+    let events = ingestor.ingest_partitions(rx).unwrap();
+    let log = ingestor.finish().unwrap();
+    assert_eq!(events, stream.len());
+    assert!(log.segments().len() > 1, "several segments expected");
+    let (back, _) = log.read_all().unwrap();
+    assert_eq!(back, stream, "partition-fed ingest must be lossless and ordered");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_sealed_segments_surface_as_typed_errors() {
+    let dir = scratch("corrupt");
+    let stream = EventStream::from_pairs((0..200).map(|i| (i % 3, i)).collect(), 3);
+    let mut ingestor = SpikeLog::create(&dir, 3)
+        .unwrap()
+        .ingestor(RollPolicy { max_events: 50, max_width_ticks: 1_000 })
+        .unwrap();
+    ingestor.append_stream(&stream).unwrap();
+    let log = ingestor.finish().unwrap();
+    let victim = dir.join(&log.segments()[1].file);
+    drop(log);
+
+    // flip one event byte: structure (length, magics) stays valid, so
+    // open succeeds — but reading the segment must fail the checksum
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes[25] ^= 0xFF;
+    std::fs::write(&victim, &bytes).unwrap();
+    let log = SpikeLog::open(&dir).unwrap();
+    let err = log.read_all().err().expect("bit rot must not mine silently");
+    assert!(matches!(err, MineError::Corrupt { .. }), "{err}");
+
+    // truncate the same sealed segment: now even open must refuse — the
+    // manifest names data that is structurally gone
+    std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+    let err = SpikeLog::open(&dir).err().expect("torn sealed segment must fail open");
+    assert!(matches!(err, MineError::Corrupt { .. }), "{err}");
+
+    // remove it entirely: typed I/O error naming the path
+    std::fs::remove_file(&victim).unwrap();
+    let err = SpikeLog::open(&dir).err().expect("missing sealed segment must fail open");
+    assert!(matches!(err, MineError::Io { .. } | MineError::Corrupt { .. }), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn histogram_tampering_is_caught_at_open() {
+    // alphabet-projection pruning trusts the footer histogram without
+    // reading the event columns, so the manifest carries a digest of it:
+    // a flipped hist byte must fail open, not silently drop events from
+    // projected queries
+    let dir = scratch("hist");
+    let mut ingestor = SpikeLog::create(&dir, 3).unwrap().ingestor(RollPolicy::default()).unwrap();
+    for t in 0..50 {
+        ingestor.append(t % 3, t).unwrap();
+    }
+    let log = ingestor.finish().unwrap();
+    let victim = dir.join(&log.segments()[0].file);
+    drop(log);
+
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let hist_off = 20 + 8 * 50 + 8; // header + event columns + t_min/t_max
+    bytes[hist_off] ^= 0xFF;
+    std::fs::write(&victim, &bytes).unwrap();
+    let err = SpikeLog::open(&dir).err().expect("tampered histogram must fail open");
+    assert!(matches!(err, MineError::Corrupt { .. }), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ingestor_enforces_order_and_alphabet() {
+    let dir = scratch("invariants");
+    let mut ingestor = SpikeLog::create(&dir, 2)
+        .unwrap()
+        .ingestor(RollPolicy::default())
+        .unwrap();
+    ingestor.append(0, 10).unwrap();
+    let err = ingestor.append(1, 9).err().unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    let err = ingestor.append(5, 11).err().unwrap();
+    assert!(matches!(err, MineError::OutOfAlphabet { type_id: 5, n_types: 2 }), "{err}");
+    // equal times are fine (simultaneous spikes on different electrodes)
+    ingestor.append(1, 10).unwrap();
+
+    // order is enforced across seals too: after finishing and reopening,
+    // the floor is the last sealed time
+    let log = ingestor.finish().unwrap();
+    let mut ingestor = SpikeLog::open(log.dir()).unwrap().ingestor(RollPolicy::default()).unwrap();
+    let err = ingestor.append(0, 3).err().unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+    ingestor.append(0, 10).unwrap();
+    let log = ingestor.finish().unwrap();
+    assert_eq!(log.len(), 3);
+    std::fs::remove_dir_all(log.dir()).ok();
+}
+
+#[test]
+fn create_refuses_to_clobber_and_open_requires_a_manifest() {
+    let dir = scratch("clobber");
+    let log = SpikeLog::create(&dir, 2).unwrap();
+    drop(log);
+    let err = SpikeLog::create(&dir, 2).err().unwrap();
+    assert!(matches!(err, MineError::InvalidConfig { .. }), "{err}");
+
+    let empty = scratch("no_manifest");
+    std::fs::create_dir_all(&empty).unwrap();
+    let err = SpikeLog::open(&empty).err().unwrap();
+    assert!(matches!(err, MineError::Io { .. }), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&empty).ok();
+}
+
+#[test]
+fn log_scheme_mines_through_session_and_registry() {
+    let dir = scratch("scheme");
+    let stream = EventStream::from_pairs((0..400).map(|i| (i % 4, i / 2)).collect(), 4);
+    let mut ingestor = SpikeLog::create(&dir, 4)
+        .unwrap()
+        .ingestor(RollPolicy { max_events: 100, max_width_ticks: 10_000 })
+        .unwrap();
+    ingestor.append_stream(&stream).unwrap();
+    drop(ingestor.finish().unwrap());
+
+    let spec = format!("log:{}", dir.display());
+    let (resolved, tag) = datasets::resolve(&spec, 7).unwrap();
+    assert_eq!(resolved, stream);
+    assert_eq!(tag, spec);
+
+    // the file: scheme round-trips through events::io's typed wrappers
+    let bin = dir.join("export.bin");
+    io::save_binary(&stream, &bin).unwrap();
+    let file_spec = format!("file:{}", bin.display());
+    let (resolved, _) = datasets::resolve(&file_spec, 7).unwrap();
+    assert_eq!(resolved, stream);
+
+    // and both drive a Session end to end (dataset default interval
+    // falls back to the generic band for path-backed specs)
+    let mut session = Session::builder()
+        .dataset(&spec)
+        .theta(5)
+        .strategy(Strategy::CpuSerial)
+        .max_level(2)
+        .build()
+        .unwrap();
+    let via_log = session.mine().unwrap();
+    let mut session = Session::builder()
+        .stream(stream)
+        .theta(5)
+        .interval(Interval::new(2, 10))
+        .strategy(Strategy::CpuSerial)
+        .max_level(2)
+        .build()
+        .unwrap();
+    let direct = session.mine().unwrap();
+    assert_eq!(via_log.frequent, direct.frequent);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mine_service_serves_log_backed_scenarios_identically() {
+    // the end of the acceptance property: a log-backed loadgen scenario
+    // set, served through MineService, matches direct Session mining
+    let dir = scratch("serve");
+    let mut rng = Rng::new(0xFEED);
+    let mut pairs = vec![];
+    let mut t = 0;
+    for _ in 0..3_000 {
+        t += rng.range_i32(1, 3);
+        pairs.push((rng.range_i32(0, 5), t));
+    }
+    let stream = EventStream::from_pairs(pairs, 6);
+    let mut ingestor = SpikeLog::create(&dir, 6)
+        .unwrap()
+        .ingestor(RollPolicy { max_events: 512, max_width_ticks: 2_000 })
+        .unwrap();
+    ingestor.append_stream(&stream).unwrap();
+    drop(ingestor.finish().unwrap());
+
+    let lg = LoadGenConfig {
+        clients: 2,
+        requests_per_client: 6,
+        base_dataset: Some(format!("log:{}", dir.display())),
+        distinct_pool: 4,
+        distinct_events: 400,
+        window_ticks: 1_500,
+        max_level: 3,
+        ..LoadGenConfig::default()
+    };
+    let workload = Workload::build(&lg).unwrap();
+    // hot/sweep/sliding scenarios all run off the recorded stream
+    assert_eq!(*workload.hot[0].stream, stream);
+    let total_window_events: usize = workload.sliding.iter().map(|q| q.stream.len()).sum();
+    assert_eq!(total_window_events, stream.len());
+
+    let service = MineService::start(ServiceConfig {
+        workers: 2,
+        strategy: Strategy::CpuSerial,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    for (i, q) in workload.all().enumerate() {
+        let served = service.submit(q.clone()).unwrap().wait().unwrap();
+        let mut session = Session::builder()
+            .stream((*q.stream).clone())
+            .theta(q.theta)
+            .intervals(q.intervals.clone())
+            .max_level(q.max_level)
+            .strategy(Strategy::CpuSerial)
+            .build()
+            .unwrap();
+        let direct = session.mine().unwrap();
+        assert_eq!(served.frequent, direct.frequent, "query {i}: counts diverge");
+    }
+    let metrics = service.shutdown();
+    assert_eq!(metrics.failed, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn range_pruning_skips_segment_io() {
+    let dir = scratch("prune");
+    let stream = EventStream::from_pairs((0..4_000).map(|i| (i % 5, i)).collect(), 5);
+    let mut ingestor = SpikeLog::create(&dir, 5)
+        .unwrap()
+        .ingestor(RollPolicy { max_events: 250, max_width_ticks: 100_000 })
+        .unwrap();
+    ingestor.append_stream(&stream).unwrap();
+    let log = ingestor.finish().unwrap();
+    assert_eq!(log.segments().len(), 16);
+
+    let (got, stats) = log.read_range(1_000, 1_200).unwrap();
+    assert_eq!(got, stream.window(1_000, 1_200));
+    assert!(
+        stats.pruned_by_time >= 13,
+        "a 200-tick range must prune most of 16 segments, pruned {}",
+        stats.pruned_by_time
+    );
+    assert!(stats.segments_read <= 3);
+
+    // projection pruning: type 4 never fires in a crafted second log
+    let dir2 = scratch("prune_alpha");
+    let mut ingestor = SpikeLog::create(&dir2, 5)
+        .unwrap()
+        .ingestor(RollPolicy { max_events: 100, max_width_ticks: 100_000 })
+        .unwrap();
+    // first half fires types {0,1}, second half {2,3}
+    for i in 0..200 {
+        ingestor.append(if i < 100 { i % 2 } else { 2 + i % 2 }, i).unwrap();
+    }
+    let log2 = ingestor.finish().unwrap();
+    let (only23, stats) = log2.read(&RangeQuery::all().types(vec![2, 3])).unwrap();
+    assert!(only23.types.iter().all(|&ty| ty == 2 || ty == 3));
+    assert_eq!(only23.len(), 100);
+    assert!(stats.pruned_by_alphabet >= 1, "histogram pruning must skip {{0,1}}-only segments");
+    let err = log2.read(&RangeQuery::all().types(vec![9])).err().unwrap();
+    assert!(matches!(err, MineError::OutOfAlphabet { type_id: 9, n_types: 5 }), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn arc_streams_flow_from_log_reads_into_queries() {
+    // glue check: a log-read stream is a normal EventStream; wrapping it
+    // for the serve layer needs no copying gymnastics
+    let dir = scratch("arc");
+    let mut ingestor = SpikeLog::create(&dir, 2).unwrap().ingestor(RollPolicy::default()).unwrap();
+    for t in 0..50 {
+        ingestor.append(t % 2, t).unwrap();
+    }
+    let log = ingestor.finish().unwrap();
+    let (stream, _) = log.read_all().unwrap();
+    let q = episodes_gpu::serve::Query::new(Arc::new(stream), 2, vec![Interval::new(0, 3)]);
+    assert!(q.validate().is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
