@@ -1,177 +1,11 @@
-//! Ablations over the design choices DESIGN.md §6 calls out:
+//! Ablations: bounded-K exactness, fold-vs-tree merge cost, dispatch
+//! rules — registered as the `ablation_k_slots` suite in
+//! `episodes_gpu::bench`. The suite body lives in
+//! `src/bench/suites/ablation.rs`.
 //!
-//! 1. **Bounded list depth K** — exactness vs footprint: fraction of
-//!    random and neural-like episodes whose bounded count diverges from
-//!    the unbounded Algorithm 1, per K.
-//! 2. **Concatenate fold vs log-tree** — merge cost of the two
-//!    implementations at growing segment counts (the GPU needs the tree;
-//!    the host fold is O(P) with small constants).
-//! 3. **Hybrid dispatch rules** — paper Eq. 2 crossover form vs the
-//!    substrate cost model, scored by how often each picks the truly
-//!    faster strategy.
-//!
-//! Run: `cargo bench --bench ablation_k_slots [-- --fast]`
+//! Run: `cargo bench --bench ablation_k_slots
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
-#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
-
-use std::time::Instant;
-
-use episodes_gpu::coordinator::mapconcat::{concatenate_fold, concatenate_tree};
-use episodes_gpu::coordinator::{Coordinator, Strategy};
-use episodes_gpu::datasets::sym26::{generate, Sym26Config};
-use episodes_gpu::episodes::{Episode, Interval};
-use episodes_gpu::events::EventStream;
-use episodes_gpu::gpu_model::crossover::{CostModel, CrossoverModel};
-use episodes_gpu::mining::serial;
-use episodes_gpu::util::benchkit::Table;
-use episodes_gpu::util::cli::Args;
-use episodes_gpu::util::rng::Rng;
-
-fn main() -> Result<(), episodes_gpu::MineError> {
-    let args = Args::from_env();
-    let fast = args.flag("fast");
-
-    // --- 1. K ablation ---
-    let mut rng = Rng::new(0xAB1A);
-    let cfg = Sym26Config::default();
-    let sym = generate(&cfg, 7);
-    let trials = if fast { 60 } else { 300 };
-    let mut ktab = Table::new(
-        "Ablation: bounded list depth K vs exactness (vs unbounded Alg. 1)",
-        &["K", "divergent (dense random)", "divergent (Sym26)", "state bytes/lane (N=5)"],
-    );
-    // dense random stream: the worst case for truncation
-    let mut pairs = vec![];
-    let mut t = 0;
-    for _ in 0..6000 {
-        t += rng.range_i32(0, 2);
-        pairs.push((rng.range_i32(0, 3), t));
-    }
-    let dense = EventStream::from_pairs(pairs, 4);
-    for k in [1usize, 2, 4, 8, 16] {
-        let mut div_dense = 0;
-        let mut div_sym = 0;
-        for _ in 0..trials {
-            let n = rng.range_i32(2, 4) as usize;
-            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 3)).collect();
-            let ivs: Vec<Interval> = (0..n - 1)
-                .map(|_| {
-                    let lo = rng.range_i32(0, 3);
-                    Interval::new(lo, lo + rng.range_i32(1, 10))
-                })
-                .collect();
-            let ep = Episode::new(types, ivs);
-            if serial::count_a1_bounded(&ep, &dense, k) != serial::count_a1(&ep, &dense) {
-                div_dense += 1;
-            }
-            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 25)).collect();
-            let ep = Episode::new(types, vec![Interval::new(5, 15); n - 1]);
-            if serial::count_a1_bounded(&ep, &sym, k) != serial::count_a1(&ep, &sym) {
-                div_sym += 1;
-            }
-        }
-        ktab.row(vec![
-            k.to_string(),
-            format!("{:.1}%", 100.0 * div_dense as f64 / trials as f64),
-            format!("{:.1}%", 100.0 * div_sym as f64 / trials as f64),
-            (4 * 5 * k).to_string(),
-        ]);
-    }
-    ktab.print();
-
-    // --- 2. fold vs tree merge cost ---
-    let ep = Episode::new(vec![0, 1, 2], vec![Interval::new(5, 15); 2]);
-    let mut mtab = Table::new(
-        "Ablation: Concatenate fold vs log-tree merge cost (host-side)",
-        &["segments", "fold", "tree", "counts equal"],
-    );
-    for p in [8usize, 64, 512, 4096] {
-        let taus: Vec<i32> = {
-            let t0 = sym.t_begin() as i64 - 1;
-            let span = sym.t_end() as i64 - t0;
-            (0..p as i64)
-                .map(|i| (t0 + span * i / p as i64) as i32)
-                .chain([sym.t_end()])
-                .collect()
-        };
-        let tuples = serial::mapcat_map(&ep, &sym, &taus, 8);
-        let reps = if fast { 50 } else { 500 };
-        let t0 = Instant::now();
-        let mut f = (0, 0);
-        for _ in 0..reps {
-            f = std::hint::black_box(concatenate_fold(&tuples));
-        }
-        let fold_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
-        let t0 = Instant::now();
-        let mut tr = (0, 0);
-        for _ in 0..reps {
-            tr = std::hint::black_box(concatenate_tree(&tuples));
-        }
-        let tree_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
-        mtab.row(vec![
-            p.to_string(),
-            format!("{:.1}us", fold_ns / 1e3),
-            format!("{:.1}us", tree_ns / 1e3),
-            (f.0 == tr.0).to_string(),
-        ]);
-    }
-    mtab.print();
-
-    // --- 3. dispatch-rule ablation ---
-    let mut coord = Coordinator::open_default()?;
-    let window = sym.window(sym.t_begin() - 1, sym.t_begin() + 20_000);
-    let mf = *coord.rt.manifest();
-    let cost = CostModel::substrate_default(mf.m_episodes, mf.c_chunk);
-    let paper = CrossoverModel::paper_default();
-    let substrate = CrossoverModel::substrate_default();
-    let mut dtab = Table::new(
-        "Ablation: Hybrid dispatch rules vs ground truth (which is faster)",
-        &["S", "N", "truth", "paper Eq.2", "substrate a/N+b", "cost model"],
-    );
-    let mut scores = [0usize; 3];
-    let mut total = 0usize;
-    let probe_s: &[usize] = if fast { &[2, 64] } else { &[1, 4, 16, 64, 256] };
-    let probe_n: &[usize] = if fast { &[3, 6] } else { &[3, 4, 6, 8] };
-    for &n in probe_n {
-        for &s in probe_s {
-            let eps: Vec<Episode> = (0..s)
-                .map(|_| {
-                    let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 25)).collect();
-                    Episode::new(types, vec![Interval::new(5, 15); n - 1])
-                })
-                .collect();
-            let t0 = Instant::now();
-            coord.count(&eps, &window, Strategy::PtpeA1)?;
-            let pt = t0.elapsed();
-            let t0 = Instant::now();
-            coord.count(&eps, &window, Strategy::MapConcat)?;
-            let mc = t0.elapsed();
-            let truth = pt <= mc;
-            let picks = [
-                paper.choose_ptpe(s, n),
-                substrate.choose_ptpe(s, n),
-                cost.choose_ptpe(s, n, window.len()),
-            ];
-            for (i, &p) in picks.iter().enumerate() {
-                if p == truth {
-                    scores[i] += 1;
-                }
-            }
-            total += 1;
-            dtab.row(vec![
-                s.to_string(),
-                n.to_string(),
-                if truth { "PTPE" } else { "MC" }.into(),
-                if picks[0] { "PTPE" } else { "MC" }.into(),
-                if picks[1] { "PTPE" } else { "MC" }.into(),
-                if picks[2] { "PTPE" } else { "MC" }.into(),
-            ]);
-        }
-    }
-    dtab.print();
-    println!(
-        "\ndispatch accuracy: paper {}/{total}, substrate-crossover {}/{total}, cost-model {}/{total}",
-        scores[0], scores[1], scores[2]
-    );
-    Ok(())
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("ablation_k_slots")
 }

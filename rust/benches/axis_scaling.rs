@@ -1,94 +1,10 @@
-//! Episode-axis vs stream-axis CPU scaling (the tentpole metric for the
-//! sharded backend).
-//!
-//! The workload is the regime that motivates stream sharding: *few*
-//! surviving candidates over a *long* stream — exactly what late mining
-//! levels look like. Episode-axis workers (`CpuParallelBackend`) can use
-//! at most `episodes` threads there; stream-axis shards (`ShardedBackend`)
-//! keep every core busy regardless of the candidate count. Flip
-//! `--episodes` up and `--events` down to watch the advantage invert —
-//! that inversion is what `HybridBackend::cpu_sharded` dispatches on.
+//! Episode-axis vs stream-axis CPU scaling — registered as the
+//! `axis_scaling` suite in `episodes_gpu::bench`. The suite body lives in
+//! `src/bench/suites/axis_scaling.rs`.
 //!
 //! Run: `cargo bench --bench axis_scaling
-//!        [-- --events 200000 --episodes 4 --threads 1,2,4,8]`
-
-use episodes_gpu::backend::cpu::CpuParallelBackend;
-use episodes_gpu::backend::sharded::ShardedBackend;
-use episodes_gpu::backend::CountBackend;
-use episodes_gpu::episodes::{Episode, Interval};
-use episodes_gpu::events::EventStream;
-use episodes_gpu::util::benchkit::{bench, fmt_ns, BenchCfg, Table};
-use episodes_gpu::util::cli::{exit_usage, Args};
-use episodes_gpu::util::rng::Rng;
-use episodes_gpu::MineError;
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
 fn main() {
-    let args = Args::from_env();
-    let n_events = args.get_usize("events", 200_000).unwrap_or_else(exit_usage);
-    let n_eps = args.get_usize("episodes", 4).unwrap_or_else(exit_usage);
-    let threads: Vec<usize> = args
-        .get_or("threads", "1,2,4,8")
-        .split(',')
-        .map(|s| {
-            s.parse().map_err(|_| {
-                MineError::invalid(format!(
-                    "bad --threads element {s:?} (expected a comma list of integers)"
-                ))
-            })
-        })
-        .collect::<Result<_, _>>()
-        .unwrap_or_else(exit_usage);
-
-    let mut rng = Rng::new(0x5A4D);
-    let mut pairs = Vec::with_capacity(n_events);
-    let mut t = 0;
-    for _ in 0..n_events {
-        t += rng.range_i32(1, 3);
-        pairs.push((rng.range_i32(0, 7), t));
-    }
-    let stream = EventStream::from_pairs(pairs, 8);
-    let iv = Interval::new(0, 6);
-    let eps: Vec<Episode> = (0..n_eps as i32)
-        .map(|i| Episode::new(vec![i % 8, (i + 1) % 8, (i + 2) % 8], vec![iv; 2]))
-        .collect();
-
-    let cfg = BenchCfg::default();
-    let mut table = Table::new(
-        &format!("axis scaling: {n_eps} episodes x {n_events} events"),
-        &["threads", "episode-axis", "stream-axis", "stream/episode speedup"],
-    );
-    let mut baselines = (0.0, 0.0);
-    for &th in &threads {
-        let ep_axis = bench(&format!("episode-axis x{th}"), &cfg, || {
-            let rep = CpuParallelBackend::new(th).count(&eps, &stream).unwrap();
-            rep.counts.iter().sum()
-        });
-        let st_axis = bench(&format!("stream-axis x{th}"), &cfg, || {
-            let rep = ShardedBackend::new(th).count(&eps, &stream).unwrap();
-            rep.counts.iter().sum()
-        });
-        assert_eq!(ep_axis.last_result, st_axis.last_result, "engines disagree");
-        if th == threads[0] {
-            baselines = (ep_axis.summary.mean, st_axis.summary.mean);
-        }
-        table.row(vec![
-            format!("{th}"),
-            format!(
-                "{} ({:.2}x)",
-                fmt_ns(ep_axis.summary.mean),
-                baselines.0 / ep_axis.summary.mean
-            ),
-            format!(
-                "{} ({:.2}x)",
-                fmt_ns(st_axis.summary.mean),
-                baselines.1 / st_axis.summary.mean
-            ),
-            format!("{:.2}x", ep_axis.summary.mean / st_axis.summary.mean),
-        ]);
-    }
-    table.print();
-    println!(
-        "\nepisode-axis self-speedup saturates at min(threads, {n_eps} episodes); \
-         stream-axis keeps scaling with threads."
-    );
+    episodes_gpu::bench::cli::bench_binary_main("axis_scaling")
 }

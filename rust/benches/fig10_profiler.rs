@@ -1,102 +1,10 @@
-//! Fig. 10 reproduction: A1 vs A2 profiler counters on the 2-1-33 analog
-//! at support threshold ~1650-equivalent.
+//! Fig. 10 reproduction: A1 vs A2 profiler counters + GTX280 occupancy —
+//! registered as the `fig10_profiler` suite in `episodes_gpu::bench`. The
+//! suite body lives in `src/bench/suites/fig10.rs`.
 //!
-//! The paper used the CUDA Visual Profiler; this substrate has no such
-//! hardware, so the counters come from the analytical GTX280 model fed by
-//! instrumented SIMT-warp simulation (`mining::telemetry`, DESIGN.md §5
-//! substitution 3):
-//!   (a) local-memory loads/stores — A1 spills its occurrence lists
-//!       (paper: 17 regs + 80 B local/thread), A2 is register-resident
-//!       (13 regs, zero local traffic);
-//!   (b) divergent branches per warp of 32 episode lanes.
-//! Also prints the occupancy table (threads/block by episode size,
-//! §6.1.2) that motivates the two-pass design.
-//!
-//! Run: `cargo bench --bench fig10_profiler [-- --fast]`
+//! Run: `cargo bench --bench fig10_profiler
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
-use episodes_gpu::datasets::culture::{generate, CultureConfig};
-use episodes_gpu::episodes::{candidates, Episode, Interval};
-use episodes_gpu::gpu_model::occupancy::{a1_resources, a2_resources, GTX280};
-use episodes_gpu::mining::telemetry::{profile_a1, profile_a2};
-use episodes_gpu::util::benchkit::Table;
-use episodes_gpu::util::cli::Args;
-use episodes_gpu::util::rng::Rng;
-
-fn main() -> Result<(), episodes_gpu::MineError> {
-    let args = Args::from_env();
-    let fast = args.flag("fast");
-    let cfg = CultureConfig::day(33);
-    let stream = generate(&cfg, 11);
-    let stream = if fast {
-        stream.window(stream.t_begin() - 1, stream.t_begin() + 20_000)
-    } else {
-        stream
-    };
-    let k = 8;
-
-    // candidate population per episode size: the level-2 cross product
-    // joined upward via actual counts, as in the paper's run
-    let iv = Interval::new(cfg.d_low, cfg.d_high);
-    let mut rng = Rng::new(0xF16);
-    let mut t = Table::new(
-        "Fig 10: A1 vs A2 profiler counters (2-1-33 analog, SIMT warp simulation)",
-        &["size", "episodes", "A1 local ld/st", "A2 local ld/st", "A1 divergent", "A2 divergent"],
-    );
-    let sizes: Vec<usize> = if fast { vec![2, 3] } else { vec![2, 3, 4, 5] };
-    for n in sizes {
-        // representative candidate batch at this size: random type
-        // sequences over the culture alphabet with the physiological
-        // constraint (what the counting phase sees mid-lattice)
-        let count = if fast { 64 } else { 256 };
-        let eps: Vec<Episode> = if n == 2 {
-            candidates::level2(&candidates::level1(stream.n_types), &[iv])
-                .into_iter()
-                .take(count)
-                .collect()
-        } else {
-            (0..count)
-                .map(|_| {
-                    let types: Vec<i32> =
-                        (0..n).map(|_| rng.range_i32(0, stream.n_types as i32 - 1)).collect();
-                    Episode::new(types, vec![iv; n - 1])
-                })
-                .collect()
-        };
-        let c1 = profile_a1(&eps, &stream, k);
-        let c2 = profile_a2(&eps, &stream);
-        t.row(vec![
-            n.to_string(),
-            eps.len().to_string(),
-            format!("{}/{}", c1.local_loads, c1.local_stores),
-            format!("{}/{}", c2.local_loads, c2.local_stores),
-            c1.divergent_branches.to_string(),
-            c2.divergent_branches.to_string(),
-        ]);
-    }
-    t.print();
-
-    // occupancy table (the paper's §6.1.2 thread-budget arithmetic)
-    let mut occ = Table::new(
-        "GTX280 occupancy model: max threads/block and full-utilization threshold",
-        &["size", "A1 shared B/thr", "A1 T_B", "A1 S*", "A2 shared B/thr", "A2 T_B", "A2 S*"],
-    );
-    for n in 1..=8 {
-        let r1 = a1_resources(n, k);
-        let r2 = a2_resources(n);
-        occ.row(vec![
-            n.to_string(),
-            r1.shared_bytes_per_thread.to_string(),
-            GTX280.max_threads(&r1).to_string(),
-            GTX280.full_utilization_threshold(&r1).to_string(),
-            r2.shared_bytes_per_thread.to_string(),
-            GTX280.max_threads(&r2).to_string(),
-            GTX280.full_utilization_threshold(&r2).to_string(),
-        ]);
-    }
-    occ.print();
-    println!(
-        "\nshape check (paper Fig 10): A2 local traffic == 0 everywhere; \
-         A1 local traffic and divergence grow with episode size."
-    );
-    Ok(())
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("fig10_profiler")
 }

@@ -1,91 +1,10 @@
-//! Fig. 11 reproduction: accelerated counting vs the optimized CPU
-//! baseline, across support thresholds on the 2-1-35 analog.
+//! Fig. 11 reproduction: two-pass counting vs the 4-thread CPU baseline —
+//! registered as the `fig11_gpu_cpu` suite in `episodes_gpu::bench`. The
+//! suite body lives in `src/bench/suites/fig11.rs`.
 //!
-//! The paper's comparison: GPU two-pass (A2+A1) vs a 4-thread CPU
-//! implementation of Algorithm 1 with the event-type acceleration
-//! structure (§6.4), speedups up to ~15x. Here the "GPU" is the
-//! CPU-PJRT-executed vectorized Pallas kernel; the shape to reproduce is
-//! batched-vectorized counting beating the scalar multithreaded baseline,
-//! with the gap growing as the candidate count rises (lower thresholds).
-//!
-//! Run: `cargo bench --bench fig11_gpu_cpu [-- --fast]`
+//! Run: `cargo bench --bench fig11_gpu_cpu
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
-#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
-
-use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
-use episodes_gpu::coordinator::{Coordinator, Strategy};
-use episodes_gpu::datasets::culture::{generate, CultureConfig};
-use episodes_gpu::episodes::{candidates, Episode};
-use episodes_gpu::util::benchkit::{bench, BenchCfg, Table};
-use episodes_gpu::util::cli::Args;
-
-fn main() -> Result<(), episodes_gpu::MineError> {
-    let args = Args::from_env();
-    let fast = args.flag("fast");
-    let cfg = CultureConfig::day(35);
-    let stream = generate(&cfg, 11);
-    let mut coord = Coordinator::open_default()?;
-    coord.cpu_threads = 4; // the paper's quad-core baseline
-    let bcfg = BenchCfg {
-        warmup_iters: 1,
-        min_iters: 2,
-        max_iters: if fast { 3 } else { 4 },
-        budget_ns: 8_000_000_000,
-    };
-
-    let thetas: &[u64] = if fast { &[200] } else { &[140, 200, 320] };
-    let mut t = Table::new(
-        "Fig 11: accelerated two-pass vs 4-thread CPU baseline (2-1-35)",
-        &["theta", "episodes", "cpu-4t", "accel(two-pass)", "speedup"],
-    );
-    for &th in thetas {
-        // build the candidate population the counting phase sees
-        let mut mc = MineConfig::new(th, cfg.interval_set());
-        mc.mode = CountMode::TwoPass;
-        mc.max_level = 5;
-        let result = coord.mine(&stream, &mc)?;
-        let mut frontier: Vec<Episode> = vec![];
-        let mut all: Vec<Episode> = vec![];
-        for level in 1..=5 {
-            let cands = if level == 1 {
-                candidates::level1(stream.n_types)
-            } else {
-                candidates::next_level(&frontier, &cfg.interval_set())
-            };
-            if cands.is_empty() {
-                break;
-            }
-            if level >= 2 {
-                all.extend(cands.iter().cloned());
-            }
-            frontier = result
-                .frequent
-                .iter()
-                .filter(|c| c.episode.n() == level)
-                .map(|c| c.episode.clone())
-                .collect();
-        }
-        if all.is_empty() {
-            continue;
-        }
-        let cpu = bench("cpu", &bcfg, || {
-            coord.count(&all, &stream, Strategy::CpuParallel).unwrap().iter().sum()
-        })
-        .summary
-        .median;
-        let accel = bench("accel", &bcfg, || {
-            coord.count_two_pass(&all, &stream, th).unwrap().counts.iter().sum()
-        })
-        .summary
-        .median;
-        t.row(vec![
-            th.to_string(),
-            all.len().to_string(),
-            format!("{:.1}ms", cpu / 1e6),
-            format!("{:.1}ms", accel / 1e6),
-            format!("{:.2}x", cpu / accel),
-        ]);
-    }
-    t.print();
-    Ok(())
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("fig11_gpu_cpu")
 }

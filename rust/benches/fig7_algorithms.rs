@@ -1,151 +1,11 @@
-//! Fig. 7 reproduction: PTPE vs MapConcatenate vs Hybrid on Sym26.
+//! Fig. 7 reproduction: PTPE vs MapConcatenate vs Hybrid on Sym26 —
+//! registered as the `fig7_algorithms` suite in `episodes_gpu::bench`
+//! (shared measurement loop, `BENCH_fig7_algorithms.json`, baseline
+//! gating). The suite body lives in `src/bench/suites/fig7.rs`.
 //!
-//! (a) execution time per episode size at one support threshold;
-//! (b) Hybrid speedup over PTPE and over MapConcatenate across support
-//!     thresholds.
-//!
-//! Run: `cargo bench --bench fig7_algorithms`  (add `-- --fast` for a
-//! smaller sweep). Paper shape to reproduce: neither pure strategy wins
-//! everywhere — PTPE wins at sizes with many candidates, MapConcatenate
-//! wins when few episodes leave lanes idle, and Hybrid tracks the winner.
+//! Run: `cargo bench --bench fig7_algorithms
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
-#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
-
-use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
-use episodes_gpu::coordinator::{Coordinator, Strategy};
-use episodes_gpu::datasets::sym26::{generate, Sym26Config};
-use episodes_gpu::episodes::{candidates, Episode};
-use episodes_gpu::util::benchkit::{bench, BenchCfg, Table};
-use episodes_gpu::util::cli::Args;
-
-/// Rebuild each level's candidate set exactly as the miner generated it
-/// (level-1 alphabet, then joins over the mined frequent sets).
-fn level_candidates(
-    result: &episodes_gpu::coordinator::miner::MineResult,
-    n_types: usize,
-    i_set: &[episodes_gpu::episodes::Interval],
-    max_level: usize,
-) -> Vec<Vec<Episode>> {
-    let mut per_level = vec![];
-    let mut frontier: Vec<Episode> = vec![];
-    for level in 1..=max_level {
-        let cands = if level == 1 {
-            candidates::level1(n_types)
-        } else {
-            candidates::next_level(&frontier, i_set)
-        };
-        if cands.is_empty() {
-            break;
-        }
-        frontier = result
-            .frequent
-            .iter()
-            .filter(|c| c.episode.n() == level)
-            .map(|c| c.episode.clone())
-            .collect();
-        per_level.push(cands);
-    }
-    per_level
-}
-
-fn main() -> Result<(), episodes_gpu::MineError> {
-    let args = Args::from_env();
-    let fast = args.flag("fast");
-    let cfg = Sym26Config::default();
-    let stream = generate(&cfg, 7);
-    let mut coord = Coordinator::open_default()?;
-
-    let theta = 60;
-    let mut mine_cfg = MineConfig::new(theta, cfg.interval_set());
-    mine_cfg.mode = CountMode::TwoPass;
-    let result = coord.mine(&stream, &mine_cfg)?;
-    let per_level = level_candidates(&result, stream.n_types, &cfg.interval_set(), 8);
-
-    let bcfg = BenchCfg {
-        warmup_iters: 1,
-        min_iters: if fast { 2 } else { 3 },
-        max_iters: if fast { 3 } else { 5 },
-        budget_ns: 5_000_000_000,
-    };
-
-    // --- Fig 7(a): execution time by episode size ---
-    // Candidate sets are sampled down to one PTPE batch (512): running
-    // MapConcatenate over a 17k-episode level costs ~2*S*C kernel loop
-    // steps and takes minutes on this substrate; its disadvantage at large
-    // S is already unambiguous at the cap (see EXPERIMENTS.md Fig 7 note).
-    let cap = 512usize;
-    let mut ta = Table::new(
-        &format!("Fig 7(a): execution time by episode size (Sym26, theta={theta}, cap {cap})"),
-        &["size", "episodes", "PTPE", "MapConcat", "Hybrid", "winner"],
-    );
-    for (li, cands) in per_level.iter().enumerate() {
-        let n = li + 1;
-        if n < 2 || cands.is_empty() {
-            continue;
-        }
-        let cands: Vec<Episode> = cands.iter().take(cap).cloned().collect();
-        let cands = &cands;
-        let mut times = vec![];
-        for strat in [Strategy::PtpeA1, Strategy::MapConcat, Strategy::Hybrid] {
-            let m = bench(&format!("n{n}"), &bcfg, || {
-                coord.count(cands, &stream, strat).unwrap().iter().sum()
-            });
-            times.push(m.summary.median);
-        }
-        let winner = ["PTPE", "MapConcat", "Hybrid"][times
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0];
-        ta.row(vec![
-            n.to_string(),
-            cands.len().to_string(),
-            format!("{:.1}ms", times[0] / 1e6),
-            format!("{:.1}ms", times[1] / 1e6),
-            format!("{:.1}ms", times[2] / 1e6),
-            winner.to_string(),
-        ]);
-    }
-    ta.print();
-
-    // --- Fig 7(b): Hybrid speedup across support thresholds ---
-    let thetas: &[u64] = if fast { &[40, 80] } else { &[40, 60, 120] };
-    let mut tb = Table::new(
-        "Fig 7(b): Hybrid speedup over PTPE / MapConcatenate by support threshold",
-        &["theta", "episodes(n>=2)", "PTPE", "MapConcat", "Hybrid", "vsPTPE", "vsMC"],
-    );
-    for &th in thetas {
-        let mut mc = MineConfig::new(th, cfg.interval_set());
-        mc.mode = CountMode::TwoPass;
-        mc.max_level = 5;
-        let r = coord.mine(&stream, &mc)?;
-        let all_cands: Vec<Episode> = level_candidates(&r, stream.n_types, &cfg.interval_set(), 5)
-            .into_iter()
-            .skip(1) // counting work is levels >= 2
-            .flat_map(|lvl| lvl.into_iter().take(512)) // same cap as 7(a)
-            .collect();
-        if all_cands.is_empty() {
-            continue;
-        }
-        let mut med = vec![];
-        for strat in [Strategy::PtpeA1, Strategy::MapConcat, Strategy::Hybrid] {
-            let m = bench("theta", &bcfg, || {
-                coord.count(&all_cands, &stream, strat).unwrap().iter().sum()
-            });
-            med.push(m.summary.median);
-        }
-        tb.row(vec![
-            th.to_string(),
-            all_cands.len().to_string(),
-            format!("{:.1}ms", med[0] / 1e6),
-            format!("{:.1}ms", med[1] / 1e6),
-            format!("{:.1}ms", med[2] / 1e6),
-            format!("{:.2}x", med[0] / med[2]),
-            format!("{:.2}x", med[1] / med[2]),
-        ]);
-    }
-    tb.print();
-    println!("\nmetrics: {}", coord.metrics.report());
-    Ok(())
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("fig7_algorithms")
 }

@@ -1,147 +1,10 @@
-//! Fig. 9 reproduction: one-pass (A1/Hybrid) vs two-pass (A2+A1) counting.
+//! Fig. 9 reproduction: one-pass vs two-pass (A2+A1) counting —
+//! registered as the `fig9_twopass` suite in `episodes_gpu::bench`. The
+//! suite body lives in `src/bench/suites/fig9.rs`.
 //!
-//! (a) execution time by episode size on the day-35 culture at one
-//!     support threshold, with the elimination fraction per level;
-//! (b) two-pass speedup over one-pass across support thresholds on all
-//!     three culture datasets.
-//!
-//! Paper shape to reproduce: two-pass wins wherever the A2 pass culls a
-//! large fraction of candidates (paper: 99.9% culled at size 4 =>
-//! 3.6x on that size, 1.2x-2.8x overall).
-//!
-//! Run: `cargo bench --bench fig9_twopass [-- --fast]`
+//! Run: `cargo bench --bench fig9_twopass
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
-#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
-
-use episodes_gpu::coordinator::miner::{CountMode, MineConfig};
-use episodes_gpu::coordinator::{Coordinator, Strategy};
-use episodes_gpu::datasets::culture::{generate, CultureConfig};
-use episodes_gpu::episodes::{candidates, Episode};
-use episodes_gpu::util::benchkit::{bench, BenchCfg, Table};
-use episodes_gpu::util::cli::Args;
-
-fn level_candidate_sets(
-    coord: &mut Coordinator,
-    stream: &episodes_gpu::events::EventStream,
-    cfg: &CultureConfig,
-    theta: u64,
-    max_level: usize,
-) -> Result<Vec<Vec<Episode>>, episodes_gpu::MineError> {
-    let mut mc = MineConfig::new(theta, cfg.interval_set());
-    mc.mode = CountMode::TwoPass;
-    mc.max_level = max_level;
-    let result = coord.mine(stream, &mc)?;
-    let mut per_level = vec![];
-    let mut frontier: Vec<Episode> = vec![];
-    for level in 1..=max_level {
-        let cands = if level == 1 {
-            candidates::level1(stream.n_types)
-        } else {
-            candidates::next_level(&frontier, &cfg.interval_set())
-        };
-        if cands.is_empty() {
-            break;
-        }
-        frontier = result
-            .frequent
-            .iter()
-            .filter(|c| c.episode.n() == level)
-            .map(|c| c.episode.clone())
-            .collect();
-        per_level.push(cands);
-    }
-    Ok(per_level)
-}
-
-fn main() -> Result<(), episodes_gpu::MineError> {
-    let args = Args::from_env();
-    let fast = args.flag("fast");
-    let mut coord = Coordinator::open_default()?;
-    let bcfg = BenchCfg {
-        warmup_iters: 1,
-        min_iters: 2,
-        max_iters: if fast { 3 } else { 4 },
-        budget_ns: 4_000_000_000,
-    };
-
-    // --- Fig 9(a): per-size breakdown on day 35 ---
-    let cfg35 = CultureConfig::day(35);
-    let stream35 = generate(&cfg35, 11);
-    let theta35 = 140;
-    let per_level = level_candidate_sets(&mut coord, &stream35, &cfg35, theta35, 6)?;
-    let mut ta = Table::new(
-        &format!("Fig 9(a): one-pass vs two-pass by episode size (2-1-35, theta={theta35})"),
-        &["size", "episodes", "one-pass", "two-pass", "culled", "culled%", "speedup"],
-    );
-    for (li, cands) in per_level.iter().enumerate() {
-        let n = li + 1;
-        if n < 2 || cands.is_empty() {
-            continue;
-        }
-        let one = bench("one", &bcfg, || {
-            coord.count(cands, &stream35, Strategy::Hybrid).unwrap().iter().sum()
-        })
-        .summary
-        .median;
-        let mut culled = 0u64;
-        let two = bench("two", &bcfg, || {
-            let out = coord.count_two_pass(cands, &stream35, theta35).unwrap();
-            culled = out.culled;
-            out.counts.iter().sum()
-        })
-        .summary
-        .median;
-        ta.row(vec![
-            n.to_string(),
-            cands.len().to_string(),
-            format!("{:.1}ms", one / 1e6),
-            format!("{:.1}ms", two / 1e6),
-            culled.to_string(),
-            format!("{:.1}%", 100.0 * culled as f64 / cands.len() as f64),
-            format!("{:.2}x", one / two),
-        ]);
-    }
-    ta.print();
-
-    // --- Fig 9(b): overall speedup across datasets and thresholds ---
-    let mut tb = Table::new(
-        "Fig 9(b): two-pass speedup over one-pass (all culture datasets)",
-        &["dataset", "theta", "episodes", "one-pass", "two-pass", "speedup"],
-    );
-    let days: &[(u32, &[u64])] = if fast {
-        &[(35, &[140, 200])]
-    } else {
-        &[(33, &[40, 90]), (34, &[85, 180]), (35, &[140, 300])]
-    };
-    for &(day, thetas) in days {
-        let cfg = CultureConfig::day(day);
-        let stream = generate(&cfg, 11);
-        for &th in thetas {
-            let per_level = level_candidate_sets(&mut coord, &stream, &cfg, th, 5)?;
-            let all: Vec<Episode> = per_level.into_iter().skip(1).flatten().collect();
-            if all.is_empty() {
-                continue;
-            }
-            let one = bench("one", &bcfg, || {
-                coord.count(&all, &stream, Strategy::Hybrid).unwrap().iter().sum()
-            })
-            .summary
-            .median;
-            let two = bench("two", &bcfg, || {
-                coord.count_two_pass(&all, &stream, th).unwrap().counts.iter().sum()
-            })
-            .summary
-            .median;
-            tb.row(vec![
-                format!("2-1-{day}"),
-                th.to_string(),
-                all.len().to_string(),
-                format!("{:.1}ms", one / 1e6),
-                format!("{:.1}ms", two / 1e6),
-                format!("{:.2}x", one / two),
-            ]);
-        }
-    }
-    tb.print();
-    Ok(())
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("fig9_twopass")
 }

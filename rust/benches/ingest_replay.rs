@@ -1,184 +1,10 @@
-//! Ingest throughput and range-query replay: the tentpole metrics for
-//! the `ingest/` layer.
+//! Durable-log ingest throughput and footer-pruned replay — registered
+//! as the `ingest_replay` suite in `episodes_gpu::bench`. The suite body
+//! lives in `src/bench/suites/ingest_replay.rs`.
 //!
-//! Phase 1 measures ingest events/s, both direct (`append_stream`) and
-//! through the chip-on-chip partition producer (the acquisition path) —
-//! the number that says whether the durable log can keep up with an MEA
-//! feed in real time.
-//!
-//! Phase 2 measures what segment footers buy at query time: mining a
-//! narrow time window via a *cold* full-log read versus a *pruned* range
-//! query that skips non-overlapping segments before any I/O. The two
-//! paths must return identical results (asserted); pruning must actually
-//! skip segments (asserted).
-//!
-//! Run: `cargo bench --bench ingest_replay [-- --smoke]`
-
-use std::path::PathBuf;
-use std::time::Instant;
-
-use episodes_gpu::coordinator::streaming::{spawn_producer_with, ProducerConfig};
-use episodes_gpu::coordinator::Strategy;
-use episodes_gpu::episodes::Interval;
-use episodes_gpu::events::EventStream;
-use episodes_gpu::ingest::{RollPolicy, SpikeLog};
-use episodes_gpu::util::benchkit::Table;
-use episodes_gpu::util::cli::{exit_usage, Args};
-use episodes_gpu::util::rng::Rng;
-use episodes_gpu::Session;
-
-fn scratch(tag: &str) -> PathBuf {
-    let dir =
-        std::env::temp_dir().join(format!("ingest_replay_{}_{tag}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
-    dir
-}
-
-fn synth_stream(seed: u64, events: usize, n_types: usize) -> EventStream {
-    let mut rng = Rng::new(seed);
-    let mut pairs = Vec::with_capacity(events);
-    let mut t = 0;
-    for _ in 0..events {
-        t += rng.range_i32(1, 3);
-        pairs.push((rng.range_i32(0, n_types as i32 - 1), t));
-    }
-    EventStream::from_pairs(pairs, n_types)
-}
-
-fn mine_counts(stream: EventStream, theta: u64) -> usize {
-    let mut session = Session::builder()
-        .stream(stream)
-        .theta(theta)
-        .interval(Interval::new(0, 4))
-        .strategy(Strategy::CpuParallel)
-        .max_level(3)
-        .build()
-        .unwrap_or_else(exit_usage);
-    session.mine().unwrap_or_else(exit_usage).frequent.len()
-}
+//! Run: `cargo bench --bench ingest_replay
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
 fn main() {
-    let args = Args::from_env();
-    let smoke = args.flag("smoke");
-    let events = args
-        .get_usize("events", if smoke { 40_000 } else { 400_000 })
-        .unwrap_or_else(exit_usage);
-    let n_types = 12;
-    let policy = RollPolicy {
-        max_events: args.get_usize("segment-events", 4_096).unwrap_or_else(exit_usage),
-        max_width_ticks: 1_000_000_000,
-    };
-    let stream = synth_stream(0x1065, events, n_types);
-    println!(
-        "ingest_replay: {} events over {} types, segments of {} events{}",
-        stream.len(),
-        n_types,
-        policy.max_events,
-        if smoke { " [smoke]" } else { "" },
-    );
-
-    // Phase 1a: direct ingest throughput.
-    let dir_direct = scratch("direct");
-    let t0 = Instant::now();
-    let mut ingestor = SpikeLog::create(&dir_direct, n_types)
-        .unwrap_or_else(exit_usage)
-        .ingestor(policy)
-        .unwrap_or_else(exit_usage);
-    ingestor.append_stream(&stream).unwrap_or_else(exit_usage);
-    let log = ingestor.finish().unwrap_or_else(exit_usage);
-    let direct_secs = t0.elapsed().as_secs_f64();
-    let n_segments = log.segments().len();
-    drop(log);
-
-    // Phase 1b: ingest through the partition producer (accelerated
-    // replay; the pacing is the producer's, the disk work is ours).
-    let dir_stream = scratch("streamed");
-    let width = (stream.span() / 64).max(1);
-    let rx = spawn_producer_with(
-        stream.clone(),
-        width,
-        ProducerConfig { speedup: 1e9, ..Default::default() },
-    )
-    .unwrap_or_else(exit_usage);
-    let t0 = Instant::now();
-    let mut ingestor = SpikeLog::create(&dir_stream, n_types)
-        .unwrap_or_else(exit_usage)
-        .ingestor(policy)
-        .unwrap_or_else(exit_usage);
-    let streamed = ingestor.ingest_partitions(rx).unwrap_or_else(exit_usage);
-    let log = ingestor.finish().unwrap_or_else(exit_usage);
-    let streamed_secs = t0.elapsed().as_secs_f64();
-    assert_eq!(streamed, stream.len(), "producer-fed ingest must be lossless");
-
-    let mut table = Table::new(
-        &format!("ingest throughput ({} events, {n_segments} segments)", stream.len()),
-        &["path", "wall", "events/s"],
-    );
-    table.row(vec![
-        "append_stream".into(),
-        format!("{direct_secs:.3}s"),
-        format!("{:.0}", stream.len() as f64 / direct_secs.max(1e-9)),
-    ]);
-    table.row(vec![
-        "partition producer".into(),
-        format!("{streamed_secs:.3}s"),
-        format!("{:.0}", streamed as f64 / streamed_secs.max(1e-9)),
-    ]);
-    table.print();
-
-    // Phase 2: cold full-read mining vs footer-pruned range mining over
-    // a narrow window (~1/16 of the recording).
-    let span = stream.span();
-    let from = stream.t_begin() + span / 2;
-    let to = from + span / 16;
-    let theta = if smoke { 8 } else { 40 };
-
-    let t0 = Instant::now();
-    let (full, cold_stats) = log.read_all().unwrap_or_else(exit_usage);
-    let cold_window = full.window(from, to);
-    let cold_frequent = mine_counts(cold_window.clone(), theta);
-    let cold_secs = t0.elapsed().as_secs_f64();
-
-    let t0 = Instant::now();
-    let (pruned_window, pruned_stats) = log.read_range(from, to).unwrap_or_else(exit_usage);
-    let pruned_frequent = mine_counts(pruned_window.clone(), theta);
-    let pruned_secs = t0.elapsed().as_secs_f64();
-
-    assert_eq!(pruned_window, cold_window, "pruned range read must equal the cold slice");
-    assert_eq!(pruned_frequent, cold_frequent, "range mining must not depend on the path");
-    assert!(
-        pruned_stats.pruned_by_time > 0,
-        "footer pruning must skip segments outside ({from}, {to}]"
-    );
-
-    let mut table = Table::new(
-        &format!(
-            "range-query mining over ticks ({from}, {to}] — {} of {} segments read",
-            pruned_stats.segments_read, pruned_stats.segments_total
-        ),
-        &["path", "segments read", "events scanned", "wall", "frequent"],
-    );
-    table.row(vec![
-        "cold full read".into(),
-        format!("{}", cold_stats.segments_read),
-        format!("{}", cold_stats.events_scanned),
-        format!("{cold_secs:.3}s"),
-        format!("{cold_frequent}"),
-    ]);
-    table.row(vec![
-        "footer-pruned".into(),
-        format!("{}", pruned_stats.segments_read),
-        format!("{}", pruned_stats.events_scanned),
-        format!("{pruned_secs:.3}s"),
-        format!("{pruned_frequent}"),
-    ]);
-    table.print();
-    println!(
-        "\npruned replay: {:.1}x less I/O, {:.1}x wall speedup vs cold full read",
-        cold_stats.events_scanned as f64 / pruned_stats.events_scanned.max(1) as f64,
-        cold_secs / pruned_secs.max(1e-9),
-    );
-
-    std::fs::remove_dir_all(&dir_direct).ok();
-    std::fs::remove_dir_all(&dir_stream).ok();
+    episodes_gpu::bench::cli::bench_binary_main("ingest_replay")
 }

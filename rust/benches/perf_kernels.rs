@@ -1,89 +1,10 @@
-//! §Perf microbenchmarks: isolated kernel-execution throughput for the
-//! counting artifacts, separated from one-time compilation.
+//! Isolated kernel-execution throughput per counting artifact —
+//! registered as the `perf_kernels` suite in `episodes_gpu::bench`. The
+//! suite body lives in `src/bench/suites/perf_kernels.rs`.
 //!
-//! Reports, per (algo, N): artifact compile time, per-call wall time over
-//! a full chunk, and throughput in episode-events/s (lanes × events /
-//! time) — the L1 metric the perf pass optimizes (EXPERIMENTS.md §Perf).
-//!
-//! Run: `cargo bench --bench perf_kernels [-- --sizes 3,5 --iters 5]`
+//! Run: `cargo bench --bench perf_kernels
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
-use std::time::Instant;
-
-use episodes_gpu::episodes::{Episode, Interval};
-use episodes_gpu::events::EventStream;
-use episodes_gpu::runtime::{exec, Runtime};
-use episodes_gpu::util::benchkit::Table;
-use episodes_gpu::util::cli::Args;
-use episodes_gpu::util::rng::Rng;
-
-fn main() -> Result<(), episodes_gpu::MineError> {
-    let args = Args::from_env();
-    let iters = args.get_usize("iters", 5)?;
-    let sizes: Vec<usize> = args
-        .get_or("sizes", "2,3,4,5,8")
-        .split(',')
-        .map(|s| {
-            s.parse().map_err(|_| {
-                episodes_gpu::MineError::invalid(format!(
-                    "bad --sizes element {s:?} (expected a comma list of integers)"
-                ))
-            })
-        })
-        .collect::<Result<_, _>>()?;
-
-    let rt = Runtime::open_default()?;
-    let mf = *rt.manifest();
-    let mut rng = Rng::new(0x9E4F);
-
-    // exactly one full chunk of events and one full batch of episodes
-    let mut pairs = vec![];
-    let mut t = 0;
-    for _ in 0..mf.c_chunk {
-        t += rng.range_i32(0, 3);
-        pairs.push((rng.range_i32(0, 25), t));
-    }
-    let stream = EventStream::from_pairs(pairs, 26);
-
-    let mut table = Table::new(
-        "L1 kernel throughput (one full batch x one full chunk)",
-        &["artifact", "compile", "run(med)", "ep-events/s", "us/event-batch"],
-    );
-    for &n in &sizes {
-        let iv = Interval::new(5, 15);
-        let eps: Vec<Episode> = (0..mf.m_episodes)
-            .map(|_| {
-                let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 25)).collect();
-                Episode::new(types, vec![iv; n - 1])
-            })
-            .collect();
-        for algo in ["a2", "a1"] {
-            let name = format!("{algo}_n{n}");
-            let t0 = Instant::now();
-            rt.executable(&name)?; // compile once
-            let compile = t0.elapsed();
-            let mut runs = vec![];
-            for _ in 0..iters {
-                let t0 = Instant::now();
-                let counts = if algo == "a1" {
-                    exec::count_a1(&rt, &eps, &stream)?
-                } else {
-                    exec::count_a2(&rt, &eps, &stream)?
-                };
-                std::hint::black_box(counts);
-                runs.push(t0.elapsed().as_secs_f64());
-            }
-            runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let med = runs[runs.len() / 2];
-            let ep_events = (mf.m_episodes * mf.c_chunk) as f64;
-            table.row(vec![
-                name,
-                format!("{:.2}s", compile.as_secs_f64()),
-                format!("{:.1}ms", med * 1e3),
-                format!("{:.1}M", ep_events / med / 1e6),
-                format!("{:.2}", med * 1e6 / mf.c_chunk as f64),
-            ]);
-        }
-    }
-    table.print();
-    Ok(())
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("perf_kernels")
 }

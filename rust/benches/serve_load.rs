@@ -1,105 +1,11 @@
-//! Service throughput under a multi-client load: the tentpole metric for
-//! the `serve/` layer.
+//! Multi-tenant service throughput under closed-loop load (includes the
+//! >= 5x repeat-query acceptance floor) — registered as the `serve_load`
+//! suite in `episodes_gpu::bench`. The suite body lives in
+//! `src/bench/suites/serve_load.rs`.
 //!
-//! Phase 1 measures the pre-service world — a serial loop that re-mines
-//! every repeated query from scratch (what every caller did before the
-//! service existed). Phase 2 replays a hot-repeat workload through
-//! `MineService` (coalescing + result cache) and reports the repeat-query
-//! throughput ratio, which must clear 5x, plus p50/p95/p99 latency and
-//! the cache hit rate. Phase 3 runs the full mixed scenario set (hot
-//! repeats, theta sweeps, distinct datasets, sliding windows) for the
-//! realistic-traffic picture and a JSON-able summary line.
-//!
-//! Run: `cargo bench --bench serve_load [-- --smoke]`
-
-use std::time::Instant;
-
-use episodes_gpu::serve::loadgen::{self, LoadGenConfig, MixWeights, Workload};
-use episodes_gpu::serve::{mine_direct, MineService, ServiceConfig};
-use episodes_gpu::util::benchkit::Table;
-use episodes_gpu::util::cli::{exit_usage, Args};
+//! Run: `cargo bench --bench serve_load
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
 fn main() {
-    let args = Args::from_env();
-    let smoke = args.flag("smoke");
-    let lg = if smoke { LoadGenConfig::smoke() } else { LoadGenConfig::default() };
-    let sc = ServiceConfig {
-        workers: args.get_usize("workers", 4).unwrap_or_else(exit_usage),
-        ..ServiceConfig::default()
-    };
-    let workload = Workload::build(&lg).unwrap_or_else(exit_usage);
-
-    // Phase 1: serial re-mine baseline over the hot repeats (enough
-    // repeats for a stable qps estimate; the point is cost-per-request).
-    let serial_requests = if smoke { 12 } else { 20 };
-    let t0 = Instant::now();
-    for i in 0..serial_requests {
-        let q = &workload.hot[i % workload.hot.len()];
-        mine_direct(q, sc.strategy, sc.cpu_threads).unwrap_or_else(exit_usage);
-    }
-    let serial_qps = serial_requests as f64 / t0.elapsed().as_secs_f64();
-
-    // Phase 2: the same hot-repeat pattern through the service.
-    let hot_lg = LoadGenConfig {
-        mix: MixWeights { hot_repeat: 1, theta_sweep: 0, distinct: 0, sliding_window: 0 },
-        ..lg.clone()
-    };
-    let service = MineService::start(sc.clone()).unwrap_or_else(exit_usage);
-    let hot_report = loadgen::run(&service, &workload, &hot_lg);
-    let hot_metrics = service.shutdown();
-    let speedup = hot_report.qps / serial_qps;
-
-    let mut table = Table::new(
-        &format!(
-            "repeat-query throughput: {} clients x {} requests, {} workers",
-            hot_lg.clients, hot_lg.requests_per_client, sc.workers
-        ),
-        &["path", "qps", "p50", "p95", "p99", "hit rate"],
-    );
-    table.row(vec![
-        "serial re-mine".into(),
-        format!("{serial_qps:.1}"),
-        "-".into(),
-        "-".into(),
-        "-".into(),
-        "-".into(),
-    ]);
-    let (p50, p95, p99) = match &hot_report.latency_ns {
-        Some(s) => (s.median / 1e6, s.p95 / 1e6, s.p99 / 1e6),
-        None => (0.0, 0.0, 0.0),
-    };
-    table.row(vec![
-        "MineService".into(),
-        format!("{:.1}", hot_report.qps),
-        format!("{p50:.3}ms"),
-        format!("{p95:.3}ms"),
-        format!("{p99:.3}ms"),
-        format!("{:.1}%", hot_metrics.cache.hit_rate() * 100.0),
-    ]);
-    table.print();
-    println!(
-        "\nrepeat-query speedup: {speedup:.1}x (coalescing + cache over serial re-mine; \
-         acceptance floor 5x)"
-    );
-    assert!(
-        speedup >= 5.0,
-        "service repeat-query throughput must beat serial re-mine by >= 5x, got {speedup:.1}x"
-    );
-
-    // Phase 3: the full mixed scenario set.
-    let service = MineService::start(sc).unwrap_or_else(exit_usage);
-    let report = loadgen::run(&service, &workload, &lg);
-    let metrics = service.shutdown();
-    println!(
-        "\nmixed scenario mix ({} clients x {} requests): {:.1} qps, \
-         {} completed / {} rejected / {} errors",
-        lg.clients,
-        lg.requests_per_client,
-        report.qps,
-        report.completed,
-        report.rejected,
-        report.errors,
-    );
-    println!("service: {}", metrics.report());
-    println!("\n{}", report.to_json());
+    episodes_gpu::bench::cli::bench_binary_main("serve_load")
 }

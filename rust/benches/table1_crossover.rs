@@ -1,160 +1,11 @@
-//! Table 1 + Fig. 8 reproduction: PTPE/MapConcatenate crossover points by
-//! episode size, and the f(N) = a/N + b vs a*N + b fit comparison.
+//! Table 1 + Fig. 8 reproduction: strategy crossover points and the
+//! f(N) fit comparison — registered as the `table1_crossover` suite in
+//! `episodes_gpu::bench`. The suite body lives in
+//! `src/bench/suites/table1.rs`.
 //!
-//! Two views, per DESIGN.md §5 substitution 1:
-//!
-//! 1. **Measured on this substrate** — PTPE and MapConcatenate timed on
-//!    growing episode-batch sizes S; the crossover is the S where PTPE
-//!    first wins. Interpret-mode PJRT serializes the Pallas grid, so the
-//!    segment-parallelism that gives MapConcatenate its paper-scale wins
-//!    has no physical parallelism to exploit here: measured crossovers are
-//!    small (driven by PTPE's fixed full-batch cost vs MapConcatenate's
-//!    partial-scan structure). The *direction* (crossover falls as N
-//!    rises) still reproduces.
-//! 2. **GTX280 analytical model** — the paper's Eq. 1 utilization
-//!    threshold `MP * B_MP * T_B` per level from the occupancy model,
-//!    scaled by the paper's own f(N): reproduces Table 1's magnitudes.
-//!
-//! Both series are fitted with a/N + b and a*N + b (Fig. 8).
-//!
-//! Run: `cargo bench --bench table1_crossover [-- --fast]`
+//! Run: `cargo bench --bench table1_crossover
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
 
-#![allow(deprecated)] // Coordinator shims: migrating to Session incrementally
-
-use episodes_gpu::coordinator::{Coordinator, Strategy};
-use episodes_gpu::datasets::sym26::{generate, Sym26Config};
-use episodes_gpu::episodes::{Episode, Interval};
-use episodes_gpu::gpu_model::crossover::{fit_comparison, CrossoverModel, PAPER_TABLE1};
-use episodes_gpu::gpu_model::occupancy::{a1_resources, GTX280};
-use episodes_gpu::util::benchkit::{bench, BenchCfg, Table};
-use episodes_gpu::util::cli::Args;
-use episodes_gpu::util::rng::Rng;
-use episodes_gpu::util::stats::{inverse_fit, linear_fit};
-
-fn episodes_of_size(rng: &mut Rng, n: usize, count: usize, n_types: i32) -> Vec<Episode> {
-    let iv = Interval::new(5, 15);
-    (0..count)
-        .map(|_| {
-            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, n_types - 1)).collect();
-            Episode::new(types, vec![iv; n - 1])
-        })
-        .collect()
-}
-
-fn fit_table(title: &str, series: &[(&str, Vec<(usize, f64)>)]) {
-    let mut fig8 = Table::new(
-        title,
-        &["points", "a/N+b (a, b, SSE)", "a*N+b (a, b, SSE)", "better"],
-    );
-    for (name, pts) in series {
-        let xs: Vec<f64> = pts.iter().map(|&(n, _)| n as f64).collect();
-        let ys: Vec<f64> = pts.iter().map(|&(_, c)| c).collect();
-        let (ai, bi, si) = inverse_fit(&xs, &ys);
-        let (al, bl, sl) = linear_fit(&xs, &ys);
-        let (sse_inv, sse_lin) = fit_comparison(pts);
-        fig8.row(vec![
-            name.to_string(),
-            format!("({ai:.1}, {bi:.1}, {si:.1})"),
-            format!("({al:.1}, {bl:.1}, {sl:.1})"),
-            if sse_inv <= sse_lin { "a/N+b".into() } else { "a*N+b".into() },
-        ]);
-    }
-    fig8.print();
-}
-
-fn main() -> Result<(), episodes_gpu::MineError> {
-    let args = Args::from_env();
-    let fast = args.flag("fast");
-    let cfg = Sym26Config::default();
-    // the crossover regime is probed on a partition-sized stream — the
-    // workload MapConcatenate targets (few episodes over one partition)
-    let full = generate(&cfg, 7);
-    let stream = full.window(full.t_begin() - 1, full.t_begin() + 20_000);
-    let mut coord = Coordinator::open_default()?;
-    let mut rng = Rng::new(0x7AB1E1);
-
-    let bcfg = BenchCfg {
-        warmup_iters: 1,
-        min_iters: 2,
-        max_iters: if fast { 3 } else { 5 },
-        budget_ns: 1_500_000_000,
-    };
-    let probes: Vec<usize> =
-        if fast { vec![1, 4, 16] } else { vec![1, 2, 4, 8, 16, 32, 64] };
-    let sizes: Vec<usize> = if fast { vec![3, 5, 7] } else { vec![3, 4, 5, 6, 7, 8] };
-
-    let mut measured: Vec<(usize, f64)> = vec![];
-    let mut table = Table::new(
-        "Table 1 (measured): crossover points on this substrate",
-        &["size", "crossover", "detail (S: ptpe-ms/mapcat-ms)"],
-    );
-    for &n in &sizes {
-        let mut detail = String::new();
-        let mut crossover: Option<f64> = None;
-        let mut prev_s: Option<usize> = None;
-        for &s in &probes {
-            let eps = episodes_of_size(&mut rng, n, s, stream.n_types as i32);
-            let pt = bench("p", &bcfg, || {
-                coord.count(&eps, &stream, Strategy::PtpeA1).unwrap().iter().sum()
-            })
-            .summary
-            .median;
-            let mc = bench("m", &bcfg, || {
-                coord.count(&eps, &stream, Strategy::MapConcat).unwrap().iter().sum()
-            })
-            .summary
-            .median;
-            detail.push_str(&format!("{s}:{:.0}/{:.0} ", pt / 1e6, mc / 1e6));
-            if crossover.is_none() && pt <= mc {
-                crossover = Some(match prev_s {
-                    Some(p) => (p + s) as f64 / 2.0,
-                    None => 0.5,
-                });
-            }
-            prev_s = Some(s);
-        }
-        let c = crossover.unwrap_or(*probes.last().unwrap() as f64 * 2.0);
-        measured.push((n, c));
-        table.row(vec![n.to_string(), format!("{c:.1}"), detail]);
-    }
-    table.print();
-
-    // --- GTX280 analytical model: Eq. 1/2 utilization thresholds ---
-    let mut model_tab = Table::new(
-        "Table 1 (GTX280 model): utilization threshold MP*B_MP*T_B by level",
-        &["size", "T_B (A1)", "S* = MP*B_MP*T_B", "paper crossover"],
-    );
-    let mut model_pts: Vec<(usize, f64)> = vec![];
-    for &(n, paper_c) in PAPER_TABLE1 {
-        let r = a1_resources(n, coord.rt.manifest().k_slots);
-        let tb = GTX280.max_threads(&r);
-        let s_star = GTX280.full_utilization_threshold(&r);
-        model_pts.push((n, s_star as f64));
-        model_tab.row(vec![
-            n.to_string(),
-            tb.to_string(),
-            s_star.to_string(),
-            format!("{paper_c:.0}"),
-        ]);
-    }
-    model_tab.print();
-
-    // --- Fig 8: functional-form comparison across all three series ---
-    fit_table(
-        "Fig 8: crossover fits (lower SSE wins)",
-        &[
-            ("measured (this substrate)", measured.clone()),
-            ("GTX280 model S*", model_pts),
-            ("paper Table 1", PAPER_TABLE1.to_vec()),
-        ],
-    );
-
-    let model = CrossoverModel::fit(&measured);
-    println!(
-        "\nfitted dispatch model for this substrate: crossover(N) = {:.1}/N + {:.1}",
-        model.a, model.b
-    );
-    let paper = CrossoverModel::paper_default();
-    println!("paper-default dispatch model: crossover(N) = {:.1}/N + {:.1}", paper.a, paper.b);
-    Ok(())
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("table1_crossover")
 }

@@ -1,0 +1,317 @@
+//! Baseline comparison: the regression gate behind `epminer bench
+//! --check` and CI's perf-smoke job.
+//!
+//! Wall-time benches are noisy, so the gate is deliberately coarse: a
+//! scenario regresses only when its median exceeds the baseline median by
+//! more than a *relative tolerance* (per-scenario `tolerance` in the
+//! baseline file, else [`CheckConfig::default_tolerance`]). Improvements
+//! past the same band are reported, never failed — refresh the baseline
+//! to bank them. A baseline scenario the current run no longer produces
+//! is a failure (a silently vanished measurement is how regressions hide),
+//! unless the run explicitly lists it as skipped.
+
+use super::schema::SuiteResult;
+
+/// Knobs for one comparison.
+#[derive(Clone, Debug)]
+pub struct CheckConfig {
+    /// Relative tolerance when the baseline scenario carries none:
+    /// `1.0` fails a scenario whose median exceeds 2x baseline.
+    pub default_tolerance: f64,
+}
+
+impl Default for CheckConfig {
+    fn default() -> CheckConfig {
+        CheckConfig { default_tolerance: 1.0 }
+    }
+}
+
+/// Outcome of comparing one scenario against its baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// current median > baseline * (1 + tolerance) — fails the gate
+    Regression,
+    /// current median < baseline / (1 + tolerance) — reported, passes
+    Improvement,
+    WithinNoise,
+    /// in the baseline, absent from the current run — fails the gate
+    MissingScenario,
+    /// in the baseline, listed in the current run's skip list — passes
+    SkippedScenario,
+    /// in the current run, absent from the baseline — reported, passes
+    NewScenario,
+}
+
+impl Verdict {
+    pub fn fails(self) -> bool {
+        matches!(self, Verdict::Regression | Verdict::MissingScenario)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Regression => "REGRESSION",
+            Verdict::Improvement => "improvement",
+            Verdict::WithinNoise => "ok",
+            Verdict::MissingScenario => "MISSING",
+            Verdict::SkippedScenario => "skipped",
+            Verdict::NewScenario => "new",
+        }
+    }
+}
+
+/// One comparison row.
+#[derive(Clone, Debug)]
+pub struct CheckEntry {
+    pub name: String,
+    pub verdict: Verdict,
+    /// current median / baseline median (None when not comparable)
+    pub ratio: Option<f64>,
+    /// the tolerance applied
+    pub tolerance: f64,
+}
+
+/// The full comparison for one suite.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    pub suite: String,
+    pub entries: Vec<CheckEntry>,
+    /// set when the runs are not comparable at all (profile mismatch);
+    /// a non-empty value fails the gate with this explanation
+    pub incomparable: Option<String>,
+}
+
+impl CheckReport {
+    pub fn passed(&self) -> bool {
+        self.incomparable.is_none() && !self.entries.iter().any(|e| e.verdict.fails())
+    }
+
+    pub fn regressions(&self) -> usize {
+        self.entries.iter().filter(|e| e.verdict.fails()).count()
+    }
+
+    /// Human-readable report, one line per non-quiet entry plus a summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some(why) = &self.incomparable {
+            out.push_str(&format!("check {}: NOT COMPARABLE — {why}\n", self.suite));
+            return out;
+        }
+        for e in &self.entries {
+            // within-noise rows are the common case; keep the report short
+            if e.verdict == Verdict::WithinNoise {
+                continue;
+            }
+            match e.ratio {
+                Some(r) => out.push_str(&format!(
+                    "  {:<12} {}  ({:.2}x baseline, tolerance {:.0}%)\n",
+                    e.verdict.label(),
+                    e.name,
+                    r,
+                    e.tolerance * 100.0
+                )),
+                None => out.push_str(&format!("  {:<12} {}\n", e.verdict.label(), e.name)),
+            }
+        }
+        let fails = self.regressions();
+        let ok = self.entries.iter().filter(|e| !e.verdict.fails()).count();
+        out.push_str(&format!(
+            "check {}: {} ({} compared/noted, {} failing)\n",
+            self.suite,
+            if fails == 0 { "PASS" } else { "FAIL" },
+            ok,
+            fails
+        ));
+        out
+    }
+}
+
+/// Compare a fresh run against a committed baseline.
+pub fn check_suite(
+    current: &SuiteResult,
+    baseline: &SuiteResult,
+    cfg: &CheckConfig,
+) -> CheckReport {
+    let mut report =
+        CheckReport { suite: current.suite.clone(), entries: vec![], incomparable: None };
+    if current.suite != baseline.suite {
+        report.incomparable = Some(format!(
+            "baseline is for suite {:?}, current run is {:?}",
+            baseline.suite, current.suite
+        ));
+        return report;
+    }
+    // Comparing a --smoke run against a full baseline (or debug against
+    // release) gates on noise, not regressions — refuse loudly.
+    if current.env.smoke != baseline.env.smoke {
+        report.incomparable = Some(format!(
+            "baseline was recorded with smoke={}, current run has smoke={} — \
+             rerun with the matching profile or refresh the baseline",
+            baseline.env.smoke, current.env.smoke
+        ));
+        return report;
+    }
+    if current.env.profile != baseline.env.profile {
+        report.incomparable = Some(format!(
+            "baseline was built with the {} profile, current run with {}",
+            baseline.env.profile, current.env.profile
+        ));
+        return report;
+    }
+
+    for base in &baseline.scenarios {
+        let tolerance = base.tolerance.unwrap_or(cfg.default_tolerance).max(0.0);
+        let entry = match current.scenario(&base.name) {
+            None => CheckEntry {
+                name: base.name.clone(),
+                verdict: if current.is_skipped(&base.name) {
+                    Verdict::SkippedScenario
+                } else {
+                    Verdict::MissingScenario
+                },
+                ratio: None,
+                tolerance,
+            },
+            Some(cur) => {
+                let ratio = if base.median_ns > 0.0 {
+                    cur.median_ns / base.median_ns
+                } else {
+                    1.0
+                };
+                let verdict = if ratio > 1.0 + tolerance {
+                    Verdict::Regression
+                } else if ratio < 1.0 / (1.0 + tolerance) {
+                    Verdict::Improvement
+                } else {
+                    Verdict::WithinNoise
+                };
+                CheckEntry { name: base.name.clone(), verdict, ratio: Some(ratio), tolerance }
+            }
+        };
+        report.entries.push(entry);
+    }
+    for cur in &current.scenarios {
+        if baseline.scenario(&cur.name).is_none() {
+            report.entries.push(CheckEntry {
+                name: cur.name.clone(),
+                verdict: Verdict::NewScenario,
+                ratio: None,
+                tolerance: cfg.default_tolerance,
+            });
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::schema::sample_suite;
+
+    fn cfg() -> CheckConfig {
+        CheckConfig::default()
+    }
+
+    fn verdict_of(report: &CheckReport, name: &str) -> Verdict {
+        report.entries.iter().find(|e| e.name == name).map(|e| e.verdict).unwrap()
+    }
+
+    #[test]
+    fn identical_runs_pass_within_noise() {
+        let r = sample_suite();
+        let rep = check_suite(&r, &r, &cfg());
+        assert!(rep.passed(), "{}", rep.render());
+        assert!(rep.entries.iter().all(|e| {
+            e.verdict == Verdict::WithinNoise || e.verdict == Verdict::SkippedScenario
+        }));
+    }
+
+    #[test]
+    fn artificially_tightened_baseline_fails() {
+        let current = sample_suite();
+        let mut baseline = sample_suite();
+        // tighten: pretend the baseline was 10x faster than reality
+        for s in &mut baseline.scenarios {
+            s.median_ns /= 10.0;
+            s.tolerance = Some(1.0);
+        }
+        let rep = check_suite(&current, &baseline, &cfg());
+        assert!(!rep.passed(), "{}", rep.render());
+        assert_eq!(verdict_of(&rep, "threads1/episode_axis"), Verdict::Regression);
+        assert!(rep.regressions() >= 1);
+        assert!(rep.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn improvement_is_reported_not_failed() {
+        let mut current = sample_suite();
+        for s in &mut current.scenarios {
+            s.median_ns /= 10.0;
+        }
+        let rep = check_suite(&current, &sample_suite(), &cfg());
+        assert!(rep.passed(), "{}", rep.render());
+        assert_eq!(verdict_of(&rep, "threads1/episode_axis"), Verdict::Improvement);
+    }
+
+    #[test]
+    fn per_scenario_tolerance_overrides_default() {
+        let mut current = sample_suite();
+        let baseline = sample_suite();
+        // threads4/stream_axis carries tolerance 1.5 in the sample: a 2.2x
+        // median is within its band but past the 1.0 default
+        for s in &mut current.scenarios {
+            s.median_ns *= 2.2;
+        }
+        let rep = check_suite(&current, &baseline, &cfg());
+        assert_eq!(verdict_of(&rep, "threads1/episode_axis"), Verdict::Regression);
+        assert_eq!(verdict_of(&rep, "threads4/stream_axis"), Verdict::WithinNoise);
+    }
+
+    #[test]
+    fn missing_scenario_fails_unless_skipped() {
+        let mut current = sample_suite();
+        current.scenarios.remove(0); // drop threads1/episode_axis
+        let rep = check_suite(&current, &sample_suite(), &cfg());
+        assert_eq!(verdict_of(&rep, "threads1/episode_axis"), Verdict::MissingScenario);
+        assert!(!rep.passed());
+
+        // ...but an explicit skip (e.g. runtime unavailable) passes
+        current
+            .skipped
+            .push(crate::bench::schema::SkippedScenario {
+                name: "threads1/episode_axis".into(),
+                reason: "runtime unavailable".into(),
+            });
+        let rep = check_suite(&current, &sample_suite(), &cfg());
+        assert_eq!(verdict_of(&rep, "threads1/episode_axis"), Verdict::SkippedScenario);
+        assert!(rep.passed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn new_scenarios_are_noted_and_pass() {
+        let mut current = sample_suite();
+        let mut extra = current.scenarios[0].clone();
+        extra.name = "threads16/stream_axis".into();
+        current.scenarios.push(extra);
+        let rep = check_suite(&current, &sample_suite(), &cfg());
+        assert!(rep.passed());
+        assert_eq!(verdict_of(&rep, "threads16/stream_axis"), Verdict::NewScenario);
+    }
+
+    #[test]
+    fn profile_and_smoke_mismatches_refuse_to_compare() {
+        let current = sample_suite();
+        let mut baseline = sample_suite();
+        baseline.env.smoke = false;
+        let rep = check_suite(&current, &baseline, &cfg());
+        assert!(!rep.passed());
+        assert!(rep.render().contains("NOT COMPARABLE"));
+
+        let mut baseline = sample_suite();
+        baseline.env.profile = "debug".into();
+        assert!(!check_suite(&current, &baseline, &cfg()).passed());
+
+        let mut baseline = sample_suite();
+        baseline.suite = "other".into();
+        assert!(!check_suite(&current, &baseline, &cfg()).passed());
+    }
+}

@@ -1,0 +1,240 @@
+//! The shared command-line driver behind `epminer bench` and every
+//! `benches/<suite>.rs` binary (which are thin registrants: one line of
+//! `main` delegating here).
+//!
+//! Flags:
+//!
+//! - `--suite <name|a,b|all>` — which suites to run (binaries pin one)
+//! - `--smoke` — the reduced CI workload (`--fast` is a deprecated alias)
+//! - `--json-out <dir>` — write `BENCH_<suite>.json` per suite
+//! - `--check <baseline.json|dir>` — compare against committed baselines;
+//!   a directory is expected to hold `<suite>.json` files
+//! - `--tolerance <rel>` — default relative tolerance for `--check`
+//!   (per-scenario `tolerance` in the baseline wins)
+//!
+//! Exit status: 0 all suites ran and all checks passed; 1 a suite failed
+//! or a check regressed; 2 usage error.
+
+use std::path::Path;
+
+use crate::error::MineError;
+use crate::util::benchkit::{fmt_ns, Table};
+use crate::util::cli::Args;
+
+use super::check::{check_suite, CheckConfig};
+use super::schema::SuiteResult;
+use super::{find, run_suite, SuiteDef, SUITES};
+
+/// Entry point for `epminer bench`. Returns whether everything passed.
+pub fn run_from_args(args: &Args) -> Result<bool, MineError> {
+    let selection = args.get_or("suite", "all").to_string();
+    run_selection(&selection, args)
+}
+
+/// Entry point for a `benches/<suite>.rs` binary: run exactly that suite
+/// with the shared flags, then exit with the shared status convention.
+pub fn bench_binary_main(suite: &str) -> ! {
+    let args = Args::from_env();
+    match run_selection(suite, &args) {
+        Ok(true) => std::process::exit(0),
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Flags the harness understands. `bench` rides along because `cargo
+/// bench` appends `--bench` to the binaries it launches.
+const KNOWN_FLAGS: &[&str] = &["suite", "smoke", "fast", "json-out", "check", "tolerance", "bench"];
+
+fn run_selection(selection: &str, args: &Args) -> Result<bool, MineError> {
+    for name in args.given() {
+        if !KNOWN_FLAGS.contains(&name) {
+            // the first bench generation had per-binary tuning flags
+            // (--events, --threads, --sizes, ...); ignoring one silently
+            // would measure a different workload than the one asked for
+            eprintln!(
+                "warning: --{name} is not a bench-harness flag and was ignored \
+                 (known: {})",
+                KNOWN_FLAGS.join(", ")
+            );
+        }
+    }
+    let smoke = args.smoke();
+    let json_out = args.get("json-out");
+    let check = args.get("check");
+    let check_cfg = CheckConfig {
+        default_tolerance: args.get_f64("tolerance", CheckConfig::default().default_tolerance)?,
+    };
+
+    let defs: Vec<&'static SuiteDef> = if selection == "all" {
+        SUITES.iter().collect()
+    } else {
+        selection
+            .split(',')
+            .map(|name| {
+                find(name.trim()).ok_or_else(|| {
+                    MineError::invalid(format!(
+                        "unknown suite {name:?} (valid: all, {})",
+                        SUITES.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+                    ))
+                })
+            })
+            .collect::<Result<_, _>>()?
+    };
+
+    let mut all_ok = true;
+    for def in defs {
+        println!(
+            "\n== suite {} — {}{} ==",
+            def.name,
+            def.description,
+            if smoke { " [smoke]" } else { "" }
+        );
+        let result = match run_suite(def, smoke) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("suite {} FAILED: {e}", def.name);
+                all_ok = false;
+                continue;
+            }
+        };
+        print_result(&result);
+        if let Some(dir) = json_out {
+            let path = Path::new(dir).join(format!("BENCH_{}.json", def.name));
+            std::fs::write(&path, result.to_json())
+                .map_err(|e| MineError::io(format!("writing {}", path.display()), e))?;
+            println!("wrote {}", path.display());
+        }
+        if let Some(base_path) = check {
+            match load_baseline(base_path, def.name)? {
+                None => println!(
+                    "no baseline for {} under {base_path} — check skipped",
+                    def.name
+                ),
+                Some(baseline) => {
+                    let report = check_suite(&result, &baseline, &check_cfg);
+                    print!("{}", report.render());
+                    if !report.passed() {
+                        all_ok = false;
+                    }
+                }
+            }
+        }
+    }
+    Ok(all_ok)
+}
+
+/// Resolve the baseline for one suite: a direct file, or
+/// `<dir>/<suite>.json` when `path` is a directory. `Ok(None)` only when
+/// an *existing* baselines directory has no file for this suite (new
+/// suites land before their baselines); a `--check` path that exists as
+/// neither file nor directory is a usage error — a typo must not
+/// silently disable the regression gate.
+fn load_baseline(path: &str, suite: &str) -> Result<Option<SuiteResult>, MineError> {
+    let p = Path::new(path);
+    if !p.exists() {
+        return Err(MineError::invalid(format!(
+            "--check path {path:?} does not exist (expected a baseline file or a \
+             directory of <suite>.json baselines)"
+        )));
+    }
+    let file = if p.is_dir() { p.join(format!("{suite}.json")) } else { p.to_path_buf() };
+    if !file.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&file)
+        .map_err(|e| MineError::io(format!("reading baseline {}", file.display()), e))?;
+    let baseline = SuiteResult::from_json(&text).map_err(|e| {
+        MineError::invalid(format!("baseline {}: {e}", file.display()))
+    })?;
+    Ok(Some(baseline))
+}
+
+fn print_result(result: &SuiteResult) {
+    let mut table = Table::new(
+        &format!(
+            "{} ({} scenario{}, commit {}, {} profile, runtime {})",
+            result.suite,
+            result.scenarios.len(),
+            if result.scenarios.len() == 1 { "" } else { "s" },
+            result.env.commit,
+            result.env.profile,
+            result.env.runtime
+        ),
+        &["scenario", "iters", "median", "p95", "throughput"],
+    );
+    for s in &result.scenarios {
+        let throughput = match (s.events_per_s, s.items_per_s, s.item_unit.as_deref()) {
+            (Some(ev), Some(it), Some(unit)) => {
+                format!("{} events/s, {} {unit}/s", si(ev), si(it))
+            }
+            (Some(ev), _, _) => format!("{} events/s", si(ev)),
+            (None, Some(it), Some(unit)) => format!("{} {unit}/s", si(it)),
+            _ => "-".to_string(),
+        };
+        table.row(vec![
+            s.name.clone(),
+            s.iters.to_string(),
+            fmt_ns(s.median_ns),
+            fmt_ns(s.p95_ns),
+            throughput,
+        ]);
+    }
+    table.print();
+    for s in &result.skipped {
+        println!("  skipped {}: {}", s.name, s.reason);
+    }
+}
+
+/// Compact SI-ish magnitude formatting for throughput cells.
+fn si(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_scales() {
+        assert_eq!(si(12.34), "12.3");
+        assert_eq!(si(1_500.0), "1.5k");
+        assert_eq!(si(2_500_000.0), "2.50M");
+        assert_eq!(si(3.1e9), "3.10G");
+    }
+
+    #[test]
+    fn load_baseline_absent_is_none() {
+        let dir = std::env::temp_dir().join(format!("bench_cli_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = load_baseline(dir.to_str().unwrap(), "no_such_suite").unwrap();
+        assert!(out.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_baseline_nonexistent_check_path_is_an_error() {
+        // a typoed --check path must fail loudly, not skip the gate
+        let err = load_baseline("/no/such/baselines-dir", "axis_scaling").err().unwrap();
+        assert!(err.to_string().contains("does not exist"), "{err}");
+    }
+
+    #[test]
+    fn unknown_suite_is_usage_error() {
+        let args = Args::parse(["--suite".to_string(), "warp".to_string()]);
+        let err = run_from_args(&args).err().unwrap();
+        assert!(err.to_string().contains("warp"), "{err}");
+        assert!(err.to_string().contains("axis_scaling"), "{err}");
+    }
+}

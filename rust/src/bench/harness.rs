@@ -1,0 +1,235 @@
+//! The shared measurement loop every suite runs through.
+//!
+//! A suite body receives a [`SuiteCtx`] and calls [`SuiteCtx::measure`]
+//! (repeated timed iterations via [`crate::util::benchkit::bench`]:
+//! warmup, median/p95, early stop on a wall-time budget) or
+//! [`SuiteCtx::record`] (single-shot phases like a full ingest run, where
+//! repetition is built into the workload). Either way the scenario lands
+//! in the same versioned schema, so `BENCH_<suite>.json` looks identical
+//! whether the number came from a micro- or a macro-measurement.
+
+use std::time::Instant;
+
+use crate::util::benchkit::{bench, BenchCfg};
+use crate::util::stats::Summary;
+
+use super::schema::{ScenarioResult, SkippedScenario};
+
+/// Per-iteration workload size, for throughput derivation. `events` is
+/// stream events scanned; `items`/`item_unit` is the scenario's natural
+/// unit (episodes counted, requests served, segments merged).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Work {
+    pub events: u64,
+    pub items: u64,
+    pub item_unit: Option<&'static str>,
+}
+
+impl Work {
+    /// No meaningful throughput (pure-latency scenario).
+    pub fn none() -> Work {
+        Work::default()
+    }
+
+    /// `events` stream events per iteration.
+    pub fn events(events: u64) -> Work {
+        Work { events, items: 0, item_unit: None }
+    }
+
+    /// The counting shape: a batch of `episodes` over `events` events.
+    pub fn counting(events: u64, episodes: u64) -> Work {
+        Work { events, items: episodes, item_unit: Some("episodes") }
+    }
+
+    /// `items` of some named unit per iteration (requests, segments, ...).
+    pub fn items(items: u64, unit: &'static str) -> Work {
+        Work { events: 0, items, item_unit: Some(unit) }
+    }
+
+    /// Add an event count to an item-shaped workload.
+    pub fn with_events(mut self, events: u64) -> Work {
+        self.events = events;
+        self
+    }
+}
+
+/// Accumulates one suite run: config, measured scenarios, skips.
+pub struct SuiteCtx {
+    pub smoke: bool,
+    /// the default measurement config (suites may pass their own to
+    /// [`SuiteCtx::measure_with`] for scenarios with unusual costs)
+    pub cfg: BenchCfg,
+    results: Vec<ScenarioResult>,
+    skipped: Vec<SkippedScenario>,
+}
+
+impl SuiteCtx {
+    pub fn new(smoke: bool) -> SuiteCtx {
+        let cfg = if smoke {
+            // CI profile: enough repeats for a median, bounded wall time
+            BenchCfg { warmup_iters: 1, min_iters: 2, max_iters: 5, budget_ns: 1_000_000_000 }
+        } else {
+            BenchCfg { warmup_iters: 1, min_iters: 3, max_iters: 15, budget_ns: 4_000_000_000 }
+        };
+        SuiteCtx { smoke, cfg, results: vec![], skipped: vec![] }
+    }
+
+    /// Run `f` under the shared measurement loop and record the scenario.
+    /// Returns the recorded result (copy out what you need; the borrow
+    /// ends at the call site).
+    pub fn measure<F: FnMut() -> u64>(&mut self, name: &str, work: Work, f: F) -> &ScenarioResult {
+        let cfg = self.cfg.clone();
+        self.measure_with(name, work, &cfg, f)
+    }
+
+    /// [`SuiteCtx::measure`] with an explicit measurement config.
+    pub fn measure_with<F: FnMut() -> u64>(
+        &mut self,
+        name: &str,
+        work: Work,
+        cfg: &BenchCfg,
+        f: F,
+    ) -> &ScenarioResult {
+        let m = bench(name, cfg, f);
+        self.push(from_summary(name, work, &m.summary, m.last_result))
+    }
+
+    /// Record a scenario measured once, externally (`elapsed` covers the
+    /// whole workload described by `work`).
+    pub fn record(
+        &mut self,
+        name: &str,
+        work: Work,
+        elapsed_ns: f64,
+        sink: u64,
+    ) -> &ScenarioResult {
+        let summary = Summary::of(&[elapsed_ns.max(1.0)]);
+        self.push(from_summary(name, work, &summary, sink))
+    }
+
+    /// Time `f` once and record it (convenience over [`SuiteCtx::record`]).
+    pub fn record_run<T>(
+        &mut self,
+        name: &str,
+        work: Work,
+        sink: u64,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let elapsed = t0.elapsed().as_nanos() as f64;
+        self.record(name, work, elapsed, sink);
+        out
+    }
+
+    /// Mark a scenario (or, with name `"*"`, the whole suite) as not
+    /// runnable in this environment.
+    pub fn skip(&mut self, name: &str, reason: impl Into<String>) {
+        self.skipped.push(SkippedScenario { name: name.to_string(), reason: reason.into() });
+    }
+
+    /// Narrate a suite-level observation (printed, not serialized).
+    pub fn note(&mut self, msg: impl AsRef<str>) {
+        println!("  note: {}", msg.as_ref());
+    }
+
+    /// The median of an already-recorded scenario (suites derive speedup
+    /// ratios and crossover points from these).
+    pub fn median_ns(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.median_ns)
+    }
+
+    pub fn results(&self) -> &[ScenarioResult] {
+        &self.results
+    }
+
+    pub fn skipped(&self) -> &[SkippedScenario] {
+        &self.skipped
+    }
+
+    pub(crate) fn into_parts(self) -> (Vec<ScenarioResult>, Vec<SkippedScenario>) {
+        (self.results, self.skipped)
+    }
+
+    fn push(&mut self, r: ScenarioResult) -> &ScenarioResult {
+        assert!(
+            self.results.iter().all(|p| p.name != r.name),
+            "duplicate scenario name {:?} — scenario names are the baseline identity",
+            r.name
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+}
+
+fn from_summary(name: &str, work: Work, summary: &Summary, sink: u64) -> ScenarioResult {
+    let per_second = |count: u64| {
+        if count > 0 && summary.median > 0.0 {
+            Some(count as f64 * 1e9 / summary.median)
+        } else {
+            None
+        }
+    };
+    ScenarioResult {
+        name: name.to_string(),
+        iters: summary.n,
+        median_ns: summary.median,
+        mean_ns: summary.mean,
+        p95_ns: summary.p95,
+        min_ns: summary.min,
+        max_ns: summary.max,
+        events_per_s: per_second(work.events),
+        items_per_s: per_second(work.items),
+        item_unit: if work.items > 0 { work.item_unit.map(|s| s.to_string()) } else { None },
+        sink,
+        tolerance: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_records_throughput_and_sink() {
+        let mut ctx = SuiteCtx::new(true);
+        ctx.measure("sum", Work::counting(1000, 4), || (0..1000u64).sum::<u64>());
+        let r = &ctx.results()[0];
+        assert_eq!(r.name, "sum");
+        assert_eq!(r.sink, 499_500);
+        assert!(r.iters >= 2);
+        assert!(r.median_ns > 0.0);
+        let ev = r.events_per_s.unwrap();
+        assert!((ev - 1000.0 * 1e9 / r.median_ns).abs() < 1e-6);
+        assert_eq!(r.item_unit.as_deref(), Some("episodes"));
+    }
+
+    #[test]
+    fn record_is_single_shot() {
+        let mut ctx = SuiteCtx::new(true);
+        ctx.record("ingest", Work::events(50_000), 2.0e9, 50_000);
+        let r = &ctx.results()[0];
+        assert_eq!(r.iters, 1);
+        assert_eq!(r.median_ns, 2.0e9);
+        assert!((r.events_per_s.unwrap() - 25_000.0).abs() < 1e-6);
+        assert!(r.items_per_s.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate scenario name")]
+    fn duplicate_names_panic() {
+        let mut ctx = SuiteCtx::new(true);
+        ctx.record("x", Work::none(), 1.0, 0);
+        ctx.record("x", Work::none(), 1.0, 0);
+    }
+
+    #[test]
+    fn median_lookup_and_skip_list() {
+        let mut ctx = SuiteCtx::new(true);
+        ctx.record("a", Work::none(), 5.0, 0);
+        ctx.skip("b", "no runtime");
+        assert_eq!(ctx.median_ns("a"), Some(5.0));
+        assert_eq!(ctx.median_ns("b"), None);
+        assert_eq!(ctx.skipped()[0].name, "b");
+    }
+}

@@ -1,0 +1,165 @@
+//! The unified perf harness: a scenario registry over every benchmark in
+//! the repo, a shared measurement loop, a versioned machine-readable
+//! result schema, and baseline regression gating.
+//!
+//! The paper's headline claim is throughput, and its companion work is an
+//! exercise in disciplined measurement across algorithm variants — so the
+//! repro treats measurement as a subsystem, not an afterthought. Every
+//! bench target registers here as a *suite*:
+//!
+//! - [`SUITES`] — the registry; `benches/<name>.rs` binaries and the
+//!   `epminer bench` subcommand both resolve suites from it.
+//! - [`harness::SuiteCtx`] — the shared measurement loop (warmup +
+//!   repeats, median/p95 wall time, throughput in events/s and an
+//!   item rate) plus single-shot recording for macro phases.
+//! - [`schema::SuiteResult`] — the versioned JSON document written to
+//!   `BENCH_<suite>.json` (environment capture: commit, host, threads,
+//!   build profile, runtime availability).
+//! - [`check`] — noise-tolerant comparison against committed baselines
+//!   (`benches/baselines/<suite>.json`): fail on regression, report on
+//!   improvement. CI's perf-smoke job runs `epminer bench --suite all
+//!   --smoke --json-out . --check benches/baselines`.
+//!
+//! Suites that need the accelerator runtime degrade explicitly: scenarios
+//! they cannot run land in the result's `skipped` list (so `--check`
+//! knows a missing scenario was declared, not lost).
+
+pub mod check;
+pub mod cli;
+pub mod harness;
+pub mod schema;
+pub mod suites;
+
+use crate::error::MineError;
+
+pub use check::{check_suite, CheckConfig, CheckReport, Verdict};
+pub use harness::{SuiteCtx, Work};
+pub use schema::{EnvInfo, ScenarioResult, SuiteResult, SCHEMA_VERSION};
+
+/// One registered suite: a name (also the `BENCH_<name>.json` identity),
+/// a one-line description, and the suite body.
+pub struct SuiteDef {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub run: fn(&mut SuiteCtx) -> Result<(), MineError>,
+}
+
+/// Every registered suite, in the order `--suite all` runs them.
+pub const SUITES: &[SuiteDef] = &[
+    SuiteDef {
+        name: "fig7_algorithms",
+        description: "PTPE vs MapConcatenate vs Hybrid on Sym26 (paper Fig. 7)",
+        run: suites::fig7::run,
+    },
+    SuiteDef {
+        name: "fig9_twopass",
+        description: "one-pass vs two-pass A2+A1 elimination (paper Fig. 9)",
+        run: suites::fig9::run,
+    },
+    SuiteDef {
+        name: "fig10_profiler",
+        description: "A1 vs A2 SIMT profiler counters + occupancy (paper Fig. 10)",
+        run: suites::fig10::run,
+    },
+    SuiteDef {
+        name: "fig11_gpu_cpu",
+        description: "two-pass counting vs the 4-thread CPU baseline (paper Fig. 11)",
+        run: suites::fig11::run,
+    },
+    SuiteDef {
+        name: "table1_crossover",
+        description: "strategy crossover points by episode size (paper Table 1 / Fig. 8)",
+        run: suites::table1::run,
+    },
+    SuiteDef {
+        name: "perf_kernels",
+        description: "isolated kernel-execution throughput per counting artifact",
+        run: suites::perf_kernels::run,
+    },
+    SuiteDef {
+        name: "ablation_k_slots",
+        description: "bounded-K exactness, fold-vs-tree merge, dispatch rules",
+        run: suites::ablation::run,
+    },
+    SuiteDef {
+        name: "axis_scaling",
+        description: "episode-axis vs stream-axis CPU scaling (sharded backend)",
+        run: suites::axis_scaling::run,
+    },
+    SuiteDef {
+        name: "serve_load",
+        description: "multi-tenant service throughput under closed-loop load",
+        run: suites::serve_load::run,
+    },
+    SuiteDef {
+        name: "ingest_replay",
+        description: "durable-log ingest throughput and footer-pruned replay",
+        run: suites::ingest_replay::run,
+    },
+];
+
+/// Look a suite up by name.
+pub fn find(name: &str) -> Option<&'static SuiteDef> {
+    SUITES.iter().find(|s| s.name == name)
+}
+
+/// Run one suite to a schema document. A panicking scenario is contained
+/// here (mapped to [`MineError::Internal`]) so one broken suite cannot
+/// take down a `--suite all` run.
+pub fn run_suite(def: &SuiteDef, smoke: bool) -> Result<SuiteResult, MineError> {
+    let mut ctx = SuiteCtx::new(smoke);
+    let outcome =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (def.run)(&mut ctx)));
+    match outcome {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => return Err(e),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("non-string panic payload");
+            return Err(MineError::internal(format!("suite {} panicked: {msg}", def.name)));
+        }
+    }
+    let (scenarios, skipped) = ctx.into_parts();
+    let created_unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Ok(SuiteResult {
+        schema_version: SCHEMA_VERSION,
+        suite: def.name.to_string(),
+        created_unix,
+        env: EnvInfo::capture(smoke),
+        scenarios,
+        skipped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_complete() {
+        let names: Vec<&str> = SUITES.iter().map(|s| s.name).collect();
+        for (i, n) in names.iter().enumerate() {
+            assert!(!names[i + 1..].contains(n), "duplicate suite {n}");
+            assert!(find(n).is_some());
+        }
+        assert_eq!(SUITES.len(), 10, "every bench target registers exactly once");
+        assert!(find("nonexistent").is_none());
+    }
+
+    #[test]
+    fn panicking_suite_is_contained() {
+        let def = SuiteDef {
+            name: "boom",
+            description: "test",
+            run: |_| panic!("scenario exploded"),
+        };
+        let err = run_suite(&def, true).err().unwrap();
+        assert!(err.to_string().contains("scenario exploded"), "{err}");
+    }
+}

@@ -1,0 +1,437 @@
+//! Versioned, machine-readable bench result schema.
+//!
+//! Every suite run serializes to one `BENCH_<suite>.json` document:
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "suite": "axis_scaling",
+//!   "created_unix": 1753776000,
+//!   "env": { "commit": "...", "host": "...", "os": "linux-x86_64",
+//!            "threads": 8, "profile": "release", "runtime": "unavailable",
+//!            "smoke": true },
+//!   "scenarios": [ { "name": "threads1/episode_axis", "iters": 3,
+//!                    "median_ns": 1.2e7, ... } ],
+//!   "skipped":   [ { "name": "*", "reason": "runtime unavailable" } ]
+//! }
+//! ```
+//!
+//! The same schema is committed under `benches/baselines/` and compared by
+//! [`crate::bench::check`]; baselines may additionally carry a
+//! per-scenario `tolerance`.
+
+use crate::error::MineError;
+use crate::util::json::{opt_num, opt_str, Json};
+
+/// Bump when the JSON layout changes incompatibly; `from_json` refuses
+/// other versions rather than misreading them.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One suite run: environment capture plus every measured scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuiteResult {
+    pub schema_version: u64,
+    pub suite: String,
+    /// unix seconds at the end of the run
+    pub created_unix: u64,
+    pub env: EnvInfo,
+    pub scenarios: Vec<ScenarioResult>,
+    /// Scenarios this environment could not run (e.g. accelerator suites
+    /// without a PJRT runtime). `--check` treats a baseline scenario that
+    /// is skipped here as not-comparable instead of missing. The name
+    /// `"*"` skips a whole suite.
+    pub skipped: Vec<SkippedScenario>,
+}
+
+/// Where and how a suite ran — the context a wall-time number is
+/// meaningless without.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvInfo {
+    /// `git rev-parse --short HEAD` (or `GITHUB_SHA`), "unknown" offline
+    pub commit: String,
+    pub host: String,
+    /// `std::env::consts::{OS, ARCH}`
+    pub os: String,
+    /// available hardware parallelism
+    pub threads: usize,
+    /// "release" or "debug" (from `cfg!(debug_assertions)`)
+    pub profile: String,
+    /// "pjrt" when the accelerator runtime opens, "unavailable" otherwise
+    pub runtime: String,
+    pub smoke: bool,
+}
+
+impl EnvInfo {
+    /// Best-effort capture of the current environment.
+    pub fn capture(smoke: bool) -> EnvInfo {
+        let commit = std::env::var("GITHUB_SHA")
+            .ok()
+            .map(|s| s.chars().take(12).collect::<String>())
+            .or_else(git_head)
+            .unwrap_or_else(|| "unknown".to_string());
+        let host = std::env::var("HOSTNAME")
+            .ok()
+            .filter(|h| !h.is_empty())
+            .or_else(hostname_cmd)
+            .unwrap_or_else(|| "unknown".to_string());
+        // probing the runtime means loading the artifact manifest and
+        // standing up a PJRT client; cache the answer process-wide so a
+        // --suite all run does not repeat it per suite
+        static RUNTIME_AVAILABLE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        let available =
+            *RUNTIME_AVAILABLE.get_or_init(|| crate::runtime::Runtime::open_default().is_ok());
+        let runtime = if available { "pjrt" } else { "unavailable" }.to_string();
+        EnvInfo {
+            commit,
+            host,
+            os: format!("{}-{}", std::env::consts::OS, std::env::consts::ARCH),
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            profile: if cfg!(debug_assertions) { "debug" } else { "release" }.to_string(),
+            runtime,
+            smoke,
+        }
+    }
+}
+
+fn git_head() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let s = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+fn hostname_cmd() -> Option<String> {
+    let out = std::process::Command::new("hostname").output().ok()?;
+    let s = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// One measured scenario: robust wall-time summary plus throughput in the
+/// units the workload defines (events scanned per second, and an optional
+/// item rate — episodes, requests, segments — named by `item_unit`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioResult {
+    pub name: String,
+    /// measured iterations behind the summary
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// stream events processed per second (median-based), when the
+    /// workload has a meaningful event count
+    pub events_per_s: Option<f64>,
+    /// item throughput (median-based); `item_unit` names the item
+    pub items_per_s: Option<f64>,
+    pub item_unit: Option<String>,
+    /// last iteration's sink value (verifies work wasn't optimized away)
+    pub sink: u64,
+    /// Baseline files only: relative tolerance `--check` applies to this
+    /// scenario (e.g. 1.0 = fail when the median exceeds 2x baseline).
+    /// Absent in fresh run output; `--check` falls back to its default.
+    pub tolerance: Option<f64>,
+}
+
+/// A scenario the current environment declined to run, with the reason.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SkippedScenario {
+    pub name: String,
+    pub reason: String,
+}
+
+impl SuiteResult {
+    pub fn to_json_value(&self) -> Json {
+        Json::Obj(vec![
+            ("schema_version".into(), Json::Num(self.schema_version as f64)),
+            ("suite".into(), Json::Str(self.suite.clone())),
+            ("created_unix".into(), Json::Num(self.created_unix as f64)),
+            (
+                "env".into(),
+                Json::Obj(vec![
+                    ("commit".into(), Json::Str(self.env.commit.clone())),
+                    ("host".into(), Json::Str(self.env.host.clone())),
+                    ("os".into(), Json::Str(self.env.os.clone())),
+                    ("threads".into(), Json::Num(self.env.threads as f64)),
+                    ("profile".into(), Json::Str(self.env.profile.clone())),
+                    ("runtime".into(), Json::Str(self.env.runtime.clone())),
+                    ("smoke".into(), Json::Bool(self.env.smoke)),
+                ]),
+            ),
+            (
+                "scenarios".into(),
+                Json::Arr(self.scenarios.iter().map(scenario_to_json).collect()),
+            ),
+            (
+                "skipped".into(),
+                Json::Arr(
+                    self.skipped
+                        .iter()
+                        .map(|s| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(s.name.clone())),
+                                ("reason".into(), Json::Str(s.reason.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Pretty-rendered document, the `BENCH_<suite>.json` file format.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().render_pretty()
+    }
+
+    /// Parse a `BENCH_<suite>.json` / baseline document. Refuses unknown
+    /// schema versions.
+    pub fn from_json(text: &str) -> Result<SuiteResult, MineError> {
+        let v = Json::parse(text)?;
+        let version = v
+            .req("schema_version")?
+            .as_u64()
+            .ok_or_else(|| MineError::invalid("schema_version must be an integer"))?;
+        if version != SCHEMA_VERSION {
+            return Err(MineError::invalid(format!(
+                "unsupported bench schema version {version} (this build reads \
+                 {SCHEMA_VERSION})"
+            )));
+        }
+        let env_v = v.req("env")?;
+        let env = EnvInfo {
+            commit: req_str(env_v, "commit")?,
+            host: req_str(env_v, "host")?,
+            os: req_str(env_v, "os")?,
+            threads: req_u64(env_v, "threads")? as usize,
+            profile: req_str(env_v, "profile")?,
+            runtime: req_str(env_v, "runtime")?,
+            smoke: env_v
+                .req("smoke")?
+                .as_bool()
+                .ok_or_else(|| MineError::invalid("env.smoke must be a boolean"))?,
+        };
+        let scenarios = v
+            .req("scenarios")?
+            .as_arr()
+            .ok_or_else(|| MineError::invalid("scenarios must be an array"))?
+            .iter()
+            .map(scenario_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let skipped = match v.get("skipped") {
+            None => vec![],
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| MineError::invalid("skipped must be an array"))?
+                .iter()
+                .map(|s| {
+                    Ok(SkippedScenario {
+                        name: req_str(s, "name")?,
+                        reason: req_str(s, "reason")?,
+                    })
+                })
+                .collect::<Result<Vec<_>, MineError>>()?,
+        };
+        Ok(SuiteResult {
+            schema_version: version,
+            suite: req_str(&v, "suite")?,
+            created_unix: req_u64(&v, "created_unix")?,
+            env,
+            scenarios,
+            skipped,
+        })
+    }
+
+    pub fn scenario(&self, name: &str) -> Option<&ScenarioResult> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    /// Is `name` covered by this run's skip list? Skip entries match
+    /// exactly, or by prefix when they end in `*` (`"*"` skips the whole
+    /// suite, `"accel_*"` a family of scenarios).
+    pub fn is_skipped(&self, name: &str) -> bool {
+        self.skipped.iter().any(|s| match s.name.strip_suffix('*') {
+            Some(prefix) => name.starts_with(prefix),
+            None => s.name == name,
+        })
+    }
+}
+
+fn scenario_to_json(s: &ScenarioResult) -> Json {
+    let mut fields = vec![
+        ("name".into(), Json::Str(s.name.clone())),
+        ("iters".into(), Json::Num(s.iters as f64)),
+        ("median_ns".into(), Json::Num(s.median_ns)),
+        ("mean_ns".into(), Json::Num(s.mean_ns)),
+        ("p95_ns".into(), Json::Num(s.p95_ns)),
+        ("min_ns".into(), Json::Num(s.min_ns)),
+        ("max_ns".into(), Json::Num(s.max_ns)),
+        ("events_per_s".into(), opt_num(s.events_per_s)),
+        ("items_per_s".into(), opt_num(s.items_per_s)),
+        ("item_unit".into(), opt_str(s.item_unit.as_deref())),
+        ("sink".into(), Json::Num(s.sink as f64)),
+    ];
+    if let Some(tol) = s.tolerance {
+        fields.push(("tolerance".into(), Json::Num(tol)));
+    }
+    Json::Obj(fields)
+}
+
+fn scenario_from_json(v: &Json) -> Result<ScenarioResult, MineError> {
+    Ok(ScenarioResult {
+        name: req_str(v, "name")?,
+        iters: req_u64(v, "iters")? as usize,
+        median_ns: req_f64(v, "median_ns")?,
+        mean_ns: req_f64(v, "mean_ns")?,
+        p95_ns: req_f64(v, "p95_ns")?,
+        min_ns: req_f64(v, "min_ns")?,
+        max_ns: req_f64(v, "max_ns")?,
+        events_per_s: opt_f64(v, "events_per_s"),
+        items_per_s: opt_f64(v, "items_per_s"),
+        item_unit: v.get("item_unit").and_then(|x| x.as_str()).map(|s| s.to_string()),
+        sink: req_u64(v, "sink")?,
+        tolerance: opt_f64(v, "tolerance"),
+    })
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String, MineError> {
+    v.req(key)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| MineError::invalid(format!("{key} must be a string")))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64, MineError> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| MineError::invalid(format!("{key} must be a number")))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, MineError> {
+    v.req(key)?
+        .as_u64()
+        .ok_or_else(|| MineError::invalid(format!("{key} must be a non-negative integer")))
+}
+
+fn opt_f64(v: &Json, key: &str) -> Option<f64> {
+    v.get(key).and_then(|x| x.as_f64())
+}
+
+/// A fully-populated result for schema/check unit tests.
+#[cfg(test)]
+pub(crate) fn sample_suite() -> SuiteResult {
+    SuiteResult {
+        schema_version: SCHEMA_VERSION,
+        suite: "axis_scaling".into(),
+        created_unix: 1_753_776_000,
+        env: EnvInfo {
+            commit: "abc123def456".into(),
+            host: "ci-runner".into(),
+            os: "linux-x86_64".into(),
+            threads: 8,
+            profile: "release".into(),
+            runtime: "unavailable".into(),
+            smoke: true,
+        },
+        scenarios: vec![
+            ScenarioResult {
+                name: "threads1/episode_axis".into(),
+                iters: 5,
+                median_ns: 1.25e7,
+                mean_ns: 1.3e7,
+                p95_ns: 1.5e7,
+                min_ns: 1.2e7,
+                max_ns: 1.6e7,
+                events_per_s: Some(2.4e6),
+                items_per_s: Some(320.0),
+                item_unit: Some("episodes".into()),
+                sink: 42,
+                tolerance: None,
+            },
+            ScenarioResult {
+                name: "threads4/stream_axis".into(),
+                iters: 3,
+                median_ns: 4.0e6,
+                mean_ns: 4.1e6,
+                p95_ns: 4.4e6,
+                min_ns: 3.9e6,
+                max_ns: 4.5e6,
+                events_per_s: None,
+                items_per_s: None,
+                item_unit: None,
+                sink: 0,
+                tolerance: Some(1.5),
+            },
+        ],
+        skipped: vec![SkippedScenario {
+            name: "threads8/stream_axis".into(),
+            reason: "not enough cores".into(),
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SuiteResult {
+        sample_suite()
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let r = sample();
+        let text = r.to_json();
+        let back = SuiteResult::from_json(&text).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn rejects_wrong_schema_version() {
+        let mut r = sample();
+        r.schema_version = SCHEMA_VERSION + 1;
+        let err = SuiteResult::from_json(&r.to_json()).err().unwrap();
+        assert!(err.to_string().contains("schema version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_required_fields() {
+        let text = r#"{"schema_version": 1, "suite": "x"}"#;
+        assert!(SuiteResult::from_json(text).is_err());
+    }
+
+    #[test]
+    fn skip_list_supports_wildcard() {
+        let mut r = sample();
+        assert!(r.is_skipped("threads8/stream_axis"));
+        assert!(!r.is_skipped("threads1/episode_axis"));
+        r.skipped = vec![SkippedScenario { name: "*".into(), reason: "no runtime".into() }];
+        assert!(r.is_skipped("anything/at_all"));
+        r.skipped =
+            vec![SkippedScenario { name: "accel_*".into(), reason: "no runtime".into() }];
+        assert!(r.is_skipped("accel_n3_s8/ptpe"));
+        assert!(!r.is_skipped("cpu_n3_s8/episode_axis"));
+    }
+
+    #[test]
+    fn env_capture_is_well_formed() {
+        let env = EnvInfo::capture(true);
+        assert!(env.smoke);
+        assert!(!env.os.is_empty());
+        assert!(env.threads >= 1);
+        assert!(env.profile == "debug" || env.profile == "release");
+    }
+}

@@ -1,0 +1,181 @@
+//! Ablations over the design choices the substrate makes:
+//!
+//! 1. **Bounded list depth K** — cost and exactness of bounded A1 vs the
+//!    unbounded reference, on a dense adversarial stream and on Sym26
+//!    (the sink carries the divergence count; the notes the fraction).
+//! 2. **Concatenate fold vs log-tree** — merge cost of the two stitch
+//!    implementations at growing segment counts.
+//! 3. **Hybrid dispatch rules** — paper Eq. 2 crossover form vs the
+//!    substrate cost model, scored by how often each picks the truly
+//!    faster accelerator strategy (runtime only; skipped otherwise).
+
+use crate::backend::{self, CountBackend};
+use crate::coordinator::mapconcat::{concatenate_fold, concatenate_tree};
+use crate::coordinator::Strategy;
+use crate::datasets::sym26::{generate, Sym26Config};
+use crate::episodes::{Episode, Interval};
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::gpu_model::crossover::{CostModel, CrossoverModel};
+use crate::mining::serial;
+use crate::util::rng::Rng;
+
+use super::super::harness::{SuiteCtx, Work};
+use super::{head_window, open_runtime, random_episodes};
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let mut rng = Rng::new(0xAB1A);
+    let cfg = Sym26Config::default();
+    let sym = generate(&cfg, 7);
+
+    // --- 1. K ablation: bounded-list cost and exactness ---
+    // dense random stream: the worst case for truncation
+    let mut pairs = vec![];
+    let mut t = 0;
+    for _ in 0..6_000 {
+        t += rng.range_i32(0, 2);
+        pairs.push((rng.range_i32(0, 3), t));
+    }
+    let dense = EventStream::from_pairs(pairs, 4);
+
+    let trials = if ctx.smoke { 20 } else { 120 };
+    // the randomized episode population is fixed up front so every K (and
+    // the unbounded reference) counts the same episodes
+    let dense_eps: Vec<Episode> = (0..trials)
+        .map(|_| {
+            let n = rng.range_i32(2, 4) as usize;
+            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, 3)).collect();
+            let ivs: Vec<Interval> = (0..n - 1)
+                .map(|_| {
+                    let lo = rng.range_i32(0, 3);
+                    Interval::new(lo, lo + rng.range_i32(1, 10))
+                })
+                .collect();
+            Episode::new(types, ivs)
+        })
+        .collect();
+    let sym_eps: Vec<Episode> = (0..trials)
+        .map(|_| {
+            let n = rng.range_i32(2, 4) as usize;
+            random_episodes(&mut rng, n, 1, 26, Interval::new(5, 15)).remove(0)
+        })
+        .collect();
+    let dense_exact: Vec<u64> =
+        dense_eps.iter().map(|ep| serial::count_a1(ep, &dense)).collect();
+    let sym_exact: Vec<u64> = sym_eps.iter().map(|ep| serial::count_a1(ep, &sym)).collect();
+
+    let ks: &[usize] = if ctx.smoke { &[1, 4, 16] } else { &[1, 2, 4, 8, 16] };
+    for &k in ks {
+        let dense_work =
+            Work::counting((dense.len() * trials) as u64, trials as u64);
+        ctx.measure(&format!("k{k}/bounded_dense"), dense_work, || {
+            let mut divergent = 0u64;
+            for (ep, &exact) in dense_eps.iter().zip(&dense_exact) {
+                if serial::count_a1_bounded(ep, &dense, k) != exact {
+                    divergent += 1;
+                }
+            }
+            divergent
+        });
+        let sym_work = Work::counting((sym.len() * trials) as u64, trials as u64);
+        ctx.measure(&format!("k{k}/bounded_sym26"), sym_work, || {
+            let mut divergent = 0u64;
+            for (ep, &exact) in sym_eps.iter().zip(&sym_exact) {
+                if serial::count_a1_bounded(ep, &sym, k) != exact {
+                    divergent += 1;
+                }
+            }
+            divergent
+        });
+        let dd = ctx.results().iter().find(|r| r.name == format!("k{k}/bounded_dense"));
+        let ds = ctx.results().iter().find(|r| r.name == format!("k{k}/bounded_sym26"));
+        let (dd, ds) = (dd.map(|r| r.sink).unwrap_or(0), ds.map(|r| r.sink).unwrap_or(0));
+        ctx.note(format!(
+            "K={k}: divergent {:.1}% (dense), {:.1}% (Sym26); state {} B/lane at N=5",
+            100.0 * dd as f64 / trials as f64,
+            100.0 * ds as f64 / trials as f64,
+            4 * 5 * k
+        ));
+    }
+
+    // --- 2. Concatenate fold vs log-tree merge cost ---
+    let ep = Episode::new(vec![0, 1, 2], vec![Interval::new(5, 15); 2]);
+    let ps: &[usize] = if ctx.smoke { &[64, 512] } else { &[8, 64, 512, 4096] };
+    for &p in ps {
+        let taus: Vec<i32> = {
+            let t0 = sym.t_begin() as i64 - 1;
+            let span = sym.t_end() as i64 - t0;
+            (0..p as i64)
+                .map(|i| (t0 + span * i / p as i64) as i32)
+                .chain([sym.t_end()])
+                .collect()
+        };
+        let tuples = serial::mapcat_map(&ep, &sym, &taus, 8);
+        let work = Work::items(p as u64, "segments");
+        ctx.measure(&format!("merge_p{p}/fold"), work, || concatenate_fold(&tuples).0);
+        ctx.measure(&format!("merge_p{p}/tree"), work, || concatenate_tree(&tuples).0);
+        let fold = ctx.results().iter().find(|r| r.name == format!("merge_p{p}/fold"));
+        let tree = ctx.results().iter().find(|r| r.name == format!("merge_p{p}/tree"));
+        let (fs, ts) = (fold.map(|r| r.sink), tree.map(|r| r.sink));
+        if fs != ts {
+            return Err(MineError::internal(format!(
+                "fold and tree merges disagree at P={p}: {fs:?} vs {ts:?}"
+            )));
+        }
+    }
+
+    // --- 3. dispatch-rule ablation (accelerator strategies) ---
+    let rt = match open_runtime() {
+        Some(rt) => rt,
+        None => {
+            ctx.skip("dispatch_*", "accelerator runtime unavailable");
+            ctx.note("dispatch-rule ablation skipped: no PJRT runtime");
+            return Ok(());
+        }
+    };
+    let window = head_window(&sym, 20_000);
+    let mf = *rt.manifest();
+    let cost = CostModel::substrate_default(mf.m_episodes, mf.c_chunk);
+    let paper = CrossoverModel::paper_default();
+    let substrate = CrossoverModel::substrate_default();
+    let probe_s: &[usize] = if ctx.smoke { &[2, 64] } else { &[1, 4, 16, 64, 256] };
+    let probe_n: &[usize] = if ctx.smoke { &[3, 6] } else { &[3, 4, 6, 8] };
+    let mut scores = [0usize; 3];
+    let mut total = 0usize;
+    for &n in probe_n {
+        for &s in probe_s {
+            let eps = random_episodes(&mut rng, n, s, 26, Interval::new(5, 15));
+            let work = Work::counting(window.len() as u64, s as u64);
+            let mut ptpe =
+                backend::for_strategy(Strategy::PtpeA1, Some(rt.clone()), 4)?;
+            ctx.measure(&format!("dispatch_s{s}_n{n}/ptpe"), work, || {
+                ptpe.count(&eps, &window).unwrap().counts.iter().sum()
+            });
+            let mut mc =
+                backend::for_strategy(Strategy::MapConcat, Some(rt.clone()), 4)?;
+            ctx.measure(&format!("dispatch_s{s}_n{n}/mapconcat"), work, || {
+                mc.count(&eps, &window).unwrap().counts.iter().sum()
+            });
+            let pt = ctx.median_ns(&format!("dispatch_s{s}_n{n}/ptpe")).unwrap();
+            let mcn = ctx.median_ns(&format!("dispatch_s{s}_n{n}/mapconcat")).unwrap();
+            let truth = pt <= mcn;
+            let picks = [
+                paper.choose_ptpe(s, n),
+                substrate.choose_ptpe(s, n),
+                cost.choose_ptpe(s, n, window.len()),
+            ];
+            for (i, &pick) in picks.iter().enumerate() {
+                if pick == truth {
+                    scores[i] += 1;
+                }
+            }
+            total += 1;
+        }
+    }
+    ctx.note(format!(
+        "dispatch accuracy: paper {}/{total}, substrate-crossover {}/{total}, \
+         cost-model {}/{total}",
+        scores[0], scores[1], scores[2]
+    ));
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Fig. 10 reproduction: A1 vs A2 profiler counters on the 2-1-33 analog.
+//!
+//! No CUDA Visual Profiler exists on this substrate; the counters come
+//! from the instrumented SIMT-warp simulation (`mining::telemetry`) and
+//! the analytical GTX280 occupancy model. The measured scenarios time the
+//! simulation itself (it is the Fig. 10 hot path); the counters ride
+//! along in the sink and the notes, and the occupancy table prints after.
+//!
+//! Pure CPU — this suite runs in every environment.
+
+use crate::datasets::culture::{generate, CultureConfig};
+use crate::episodes::{candidates, Episode, Interval};
+use crate::error::MineError;
+use crate::gpu_model::occupancy::{a1_resources, a2_resources, GTX280};
+use crate::mining::telemetry::{profile_a1, profile_a2};
+use crate::util::benchkit::Table;
+use crate::util::rng::Rng;
+
+use super::super::harness::{SuiteCtx, Work};
+use super::head_window;
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let cfg = CultureConfig::day(33);
+    let full = generate(&cfg, 11);
+    let stream = if ctx.smoke { head_window(&full, 20_000) } else { full };
+    let k = 8;
+    let iv = Interval::new(cfg.d_low, cfg.d_high);
+    let mut rng = Rng::new(0xF16);
+
+    let sizes: &[usize] = if ctx.smoke { &[2, 3] } else { &[2, 3, 4, 5] };
+    let count = if ctx.smoke { 64 } else { 256 };
+    for &n in sizes {
+        // representative candidate batch at this size: the level-2 cross
+        // product, or random type sequences mid-lattice
+        let eps: Vec<Episode> = if n == 2 {
+            candidates::level2(&candidates::level1(stream.n_types), &[iv])
+                .into_iter()
+                .take(count)
+                .collect()
+        } else {
+            (0..count)
+                .map(|_| {
+                    let types: Vec<i32> =
+                        (0..n).map(|_| rng.range_i32(0, stream.n_types as i32 - 1)).collect();
+                    Episode::new(types, vec![iv; n - 1])
+                })
+                .collect()
+        };
+        let work = Work::counting(stream.len() as u64, eps.len() as u64);
+        ctx.measure(&format!("n{n}/a1_profile"), work, || {
+            let c = profile_a1(&eps, &stream, k);
+            c.local_loads + c.local_stores + c.divergent_branches
+        });
+        ctx.measure(&format!("n{n}/a2_profile"), work, || {
+            let c = profile_a2(&eps, &stream);
+            c.local_loads + c.local_stores + c.divergent_branches
+        });
+        let c1 = profile_a1(&eps, &stream, k);
+        let c2 = profile_a2(&eps, &stream);
+        ctx.note(format!(
+            "n={n}: A1 local ld/st {}/{}, divergent {}; A2 local ld/st {}/{}, divergent {}",
+            c1.local_loads,
+            c1.local_stores,
+            c1.divergent_branches,
+            c2.local_loads,
+            c2.local_stores,
+            c2.divergent_branches
+        ));
+        if c2.local_loads + c2.local_stores != 0 {
+            return Err(MineError::internal(
+                "A2 must be register-resident (zero local traffic) — telemetry model broke",
+            ));
+        }
+    }
+
+    // occupancy table (the paper's §6.1.2 thread-budget arithmetic)
+    let mut occ = Table::new(
+        "GTX280 occupancy model: max threads/block and full-utilization threshold",
+        &["size", "A1 shared B/thr", "A1 T_B", "A1 S*", "A2 shared B/thr", "A2 T_B", "A2 S*"],
+    );
+    for n in 1..=8 {
+        let r1 = a1_resources(n, k);
+        let r2 = a2_resources(n);
+        occ.row(vec![
+            n.to_string(),
+            r1.shared_bytes_per_thread.to_string(),
+            GTX280.max_threads(&r1).to_string(),
+            GTX280.full_utilization_threshold(&r1).to_string(),
+            r2.shared_bytes_per_thread.to_string(),
+            GTX280.max_threads(&r2).to_string(),
+            GTX280.full_utilization_threshold(&r2).to_string(),
+        ]);
+    }
+    occ.print();
+    ctx.note(
+        "shape check (paper Fig 10): A2 local traffic == 0 everywhere; \
+         A1 local traffic and divergence grow with episode size",
+    );
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Durable-log ingest throughput and range-query replay — the tentpole
+//! metrics for the `ingest/` layer.
+//!
+//! `ingest/*` measures events/s into the segmented spike log, both direct
+//! (`append_stream`) and through the chip-on-chip partition producer (the
+//! acquisition path). `replay/*` measures what segment footers buy at
+//! query time: mining a narrow window via a cold full-log read versus a
+//! footer-pruned range query. The two paths must return identical results
+//! and pruning must actually skip segments — violations fail the suite.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::coordinator::streaming::{spawn_producer_with, ProducerConfig};
+use crate::coordinator::Strategy;
+use crate::episodes::Interval;
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::ingest::{RollPolicy, SpikeLog};
+use crate::Session;
+
+use super::super::harness::{SuiteCtx, Work};
+use super::synth_stream;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bench_ingest_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn mine_counts(stream: EventStream, theta: u64) -> Result<usize, MineError> {
+    let mut session = Session::builder()
+        .stream(stream)
+        .theta(theta)
+        .interval(Interval::new(0, 4))
+        .strategy(Strategy::CpuParallel)
+        .max_level(3)
+        .build()?;
+    Ok(session.mine()?.frequent.len())
+}
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let events = if ctx.smoke { 40_000 } else { 400_000 };
+    let n_types = 12;
+    let policy = RollPolicy { max_events: 4_096, max_width_ticks: 1_000_000_000 };
+    let stream = synth_stream(0x1065, events, n_types);
+
+    // Phase 1a: direct ingest throughput.
+    let dir_direct = scratch("direct");
+    let t0 = Instant::now();
+    let mut ingestor = SpikeLog::create(&dir_direct, n_types)?.ingestor(policy)?;
+    ingestor.append_stream(&stream)?;
+    let log = ingestor.finish()?;
+    let direct_ns = t0.elapsed().as_nanos() as f64;
+    let n_segments = log.segments().len();
+    ctx.record(
+        "ingest/append_stream",
+        Work::items(n_segments as u64, "segments").with_events(stream.len() as u64),
+        direct_ns,
+        stream.len() as u64,
+    );
+    drop(log);
+
+    // Phase 1b: ingest through the partition producer (accelerated
+    // replay; the pacing is the producer's, the disk work is ours).
+    let dir_stream = scratch("streamed");
+    let width = (stream.span() / 64).max(1);
+    let rx = spawn_producer_with(
+        stream.clone(),
+        width,
+        ProducerConfig { speedup: 1e9, ..Default::default() },
+    )?;
+    let t0 = Instant::now();
+    let mut ingestor = SpikeLog::create(&dir_stream, n_types)?.ingestor(policy)?;
+    let streamed = ingestor.ingest_partitions(rx)?;
+    let log = ingestor.finish()?;
+    let streamed_ns = t0.elapsed().as_nanos() as f64;
+    if streamed != stream.len() {
+        return Err(MineError::internal(format!(
+            "producer-fed ingest must be lossless: {streamed} of {} events",
+            stream.len()
+        )));
+    }
+    ctx.record(
+        "ingest/partition_producer",
+        Work::items(log.segments().len() as u64, "segments")
+            .with_events(streamed as u64),
+        streamed_ns,
+        streamed as u64,
+    );
+    ctx.note(format!(
+        "{} events into {} segments; direct {:.0} events/s, via producer {:.0} events/s",
+        stream.len(),
+        n_segments,
+        stream.len() as f64 / (direct_ns / 1e9),
+        streamed as f64 / (streamed_ns / 1e9)
+    ));
+
+    // Phase 2: cold full-read mining vs footer-pruned range mining over a
+    // narrow window (~1/16 of the recording).
+    let span = stream.span();
+    let from = stream.t_begin() + span / 2;
+    let to = from + span / 16;
+    let theta = if ctx.smoke { 8 } else { 40 };
+
+    let t0 = Instant::now();
+    let (full, cold_stats) = log.read_all()?;
+    let cold_window = full.window(from, to);
+    let cold_frequent = mine_counts(cold_window.clone(), theta)?;
+    let cold_ns = t0.elapsed().as_nanos() as f64;
+    ctx.record(
+        "replay/cold_full_read",
+        Work::items(cold_stats.segments_read as u64, "segments")
+            .with_events(cold_stats.events_scanned as u64),
+        cold_ns,
+        cold_frequent as u64,
+    );
+
+    let t0 = Instant::now();
+    let (pruned_window, pruned_stats) = log.read_range(from, to)?;
+    let pruned_frequent = mine_counts(pruned_window.clone(), theta)?;
+    let pruned_ns = t0.elapsed().as_nanos() as f64;
+    ctx.record(
+        "replay/footer_pruned",
+        Work::items(pruned_stats.segments_read as u64, "segments")
+            .with_events(pruned_stats.events_scanned as u64),
+        pruned_ns,
+        pruned_frequent as u64,
+    );
+
+    if pruned_window != cold_window {
+        return Err(MineError::internal("pruned range read must equal the cold slice"));
+    }
+    if pruned_frequent != cold_frequent {
+        return Err(MineError::internal("range mining must not depend on the read path"));
+    }
+    if pruned_stats.pruned_by_time == 0 {
+        return Err(MineError::internal(format!(
+            "footer pruning must skip segments outside ({from}, {to}]"
+        )));
+    }
+    ctx.note(format!(
+        "pruned replay: {:.1}x less I/O, {:.1}x wall speedup vs cold full read \
+         ({} of {} segments read)",
+        cold_stats.events_scanned as f64 / pruned_stats.events_scanned.max(1) as f64,
+        cold_ns / pruned_ns.max(1.0),
+        pruned_stats.segments_read,
+        pruned_stats.segments_total
+    ));
+
+    std::fs::remove_dir_all(&dir_direct).ok();
+    std::fs::remove_dir_all(&dir_stream).ok();
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! The registered suite bodies — one module per bench target, all thin
+//! over [`crate::bench::harness::SuiteCtx`].
+//!
+//! Shared conventions:
+//!
+//! - scenario names are `group/variant` (e.g. `size3/ptpe`,
+//!   `threads4/stream_axis`); they are the identity baselines key on, so
+//!   they must be deterministic for a given (smoke, runtime) environment.
+//! - `--smoke` shrinks the workload (windowed streams, fewer sweep
+//!   points), never the meaning: a smoke scenario measures the same code
+//!   path as its full-mode sibling.
+//! - suites that need the PJRT runtime probe it once and declare what
+//!   they cannot run via [`SuiteCtx::skip`] rather than erroring, so
+//!   `--suite all` is green on CPU-only environments and `--check` can
+//!   tell "declared skip" from "lost measurement".
+
+pub mod ablation;
+pub mod axis_scaling;
+pub mod fig10;
+pub mod fig11;
+pub mod fig7;
+pub mod fig9;
+pub mod ingest_replay;
+pub mod perf_kernels;
+pub mod serve_load;
+pub mod table1;
+
+use std::rc::Rc;
+
+use crate::backend::{self, CountBackend};
+use crate::coordinator::{Metrics, Strategy};
+use crate::episodes::{candidates, Episode, Interval};
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::runtime::Runtime;
+use crate::session::{mine_with_backend, MineOptions};
+use crate::util::rng::Rng;
+
+thread_local! {
+    // One runtime standup (artifact manifest + PJRT client + executable
+    // cache) shared by every suite a `--suite all` run executes on this
+    // thread, instead of one per suite.
+    static RUNTIME: Option<Rc<Runtime>> = Runtime::open_default().ok().map(Rc::new);
+}
+
+/// The shared accelerator runtime handle, if this environment has one.
+pub(crate) fn open_runtime() -> Option<Rc<Runtime>> {
+    RUNTIME.with(|rt| rt.clone())
+}
+
+pub(crate) fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
+/// The best exact engine this environment offers: accelerated Hybrid when
+/// the runtime opens, episode-axis CPU workers otherwise.
+pub(crate) fn best_exact_engine(
+    rt: &Option<Rc<Runtime>>,
+    threads: usize,
+) -> Result<Box<dyn CountBackend>, MineError> {
+    match rt {
+        Some(rt) => backend::for_strategy(Strategy::Hybrid, Some(rt.clone()), threads),
+        None => backend::for_strategy(Strategy::CpuParallel, None, threads),
+    }
+}
+
+/// Mine the stream, then rebuild each level's candidate set exactly as
+/// the level-wise miner generated it (level-1 alphabet, joins over the
+/// mined frequent sets) — the candidate populations the counting suites
+/// measure over.
+pub(crate) fn level_candidate_sets(
+    engine: &mut dyn CountBackend,
+    stream: &EventStream,
+    intervals: &[Interval],
+    theta: u64,
+    max_level: usize,
+) -> Result<Vec<Vec<Episode>>, MineError> {
+    let opts = MineOptions {
+        theta,
+        intervals: intervals.to_vec(),
+        max_level,
+        max_candidates_per_level: 2_000_000,
+    };
+    let mut metrics = Metrics::default();
+    let result = mine_with_backend(engine, stream, &opts, &mut metrics)?;
+    let mut per_level = vec![];
+    let mut frontier: Vec<Episode> = vec![];
+    for level in 1..=max_level {
+        let cands = if level == 1 {
+            candidates::level1(stream.n_types)
+        } else {
+            candidates::next_level(&frontier, intervals)
+        };
+        if cands.is_empty() {
+            break;
+        }
+        frontier = result
+            .frequent
+            .iter()
+            .filter(|c| c.episode.n() == level)
+            .map(|c| c.episode.clone())
+            .collect();
+        per_level.push(cands);
+    }
+    Ok(per_level)
+}
+
+/// Random episodes of size `n` over an alphabet, all links constrained by
+/// `iv` — the synthetic candidate batches the kernel/crossover suites use.
+pub(crate) fn random_episodes(
+    rng: &mut Rng,
+    n: usize,
+    count: usize,
+    n_types: i32,
+    iv: Interval,
+) -> Vec<Episode> {
+    (0..count)
+        .map(|_| {
+            let types: Vec<i32> = (0..n).map(|_| rng.range_i32(0, n_types - 1)).collect();
+            Episode::new(types, vec![iv; n - 1])
+        })
+        .collect()
+}
+
+/// A dense synthetic stream: `events` events over `n_types` types with
+/// 1–3 tick gaps (the axis-scaling / ingest workload shape).
+pub(crate) fn synth_stream(seed: u64, events: usize, n_types: usize) -> EventStream {
+    let mut rng = Rng::new(seed);
+    let mut pairs = Vec::with_capacity(events);
+    let mut t = 0;
+    for _ in 0..events {
+        t += rng.range_i32(1, 3);
+        pairs.push((rng.range_i32(0, n_types as i32 - 1), t));
+    }
+    EventStream::from_pairs(pairs, n_types)
+}
+
+/// Window the first `ticks` of a stream (the smoke-mode shrink).
+pub(crate) fn head_window(stream: &EventStream, ticks: i32) -> EventStream {
+    stream.window(stream.t_begin() - 1, stream.t_begin() + ticks)
+}

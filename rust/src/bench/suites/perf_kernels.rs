@@ -1,0 +1,80 @@
+//! Isolated kernel-execution throughput for the counting artifacts,
+//! separated from one-time compilation: per (algo, N), artifact compile
+//! time (recorded once) and per-call wall time over one full batch x one
+//! full chunk, in episode-events/s — the L1 metric the perf pass
+//! optimizes.
+//!
+//! Entirely about the PJRT executables, so the suite is skipped
+//! (declared) when the runtime is unavailable.
+
+use std::time::Instant;
+
+use crate::episodes::Interval;
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::runtime::exec;
+use crate::util::rng::Rng;
+
+use super::super::harness::{SuiteCtx, Work};
+use super::{open_runtime, random_episodes};
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let rt = match open_runtime() {
+        Some(rt) => rt,
+        None => {
+            ctx.skip(
+                "*",
+                "accelerator runtime unavailable (kernel suite measures PJRT \
+                 executables)",
+            );
+            ctx.note("skipped: no PJRT runtime in this environment");
+            return Ok(());
+        }
+    };
+    let mf = *rt.manifest();
+    let mut rng = Rng::new(0x9E4F);
+
+    // exactly one full chunk of events and one full batch of episodes
+    let mut pairs = vec![];
+    let mut t = 0;
+    for _ in 0..mf.c_chunk {
+        t += rng.range_i32(0, 3);
+        pairs.push((rng.range_i32(0, 25), t));
+    }
+    let stream = EventStream::from_pairs(pairs, 26);
+    let iv = Interval::new(5, 15);
+
+    let sizes: &[usize] = if ctx.smoke { &[3] } else { &[2, 3, 4, 5, 8] };
+    for &n in sizes {
+        let eps = random_episodes(&mut rng, n, mf.m_episodes, 26, iv);
+        for algo in ["a2", "a1"] {
+            let artifact = format!("{algo}_n{n}");
+            let t0 = Instant::now();
+            rt.executable(&artifact)?; // compile once, cached afterwards
+            let compile_ns = t0.elapsed().as_nanos() as f64;
+            ctx.record(&format!("{artifact}/compile"), Work::none(), compile_ns, 0);
+
+            let work =
+                Work::counting(mf.c_chunk as u64, mf.m_episodes as u64);
+            let rt_ref = &rt;
+            let eps_ref = &eps;
+            let stream_ref = &stream;
+            ctx.measure(&format!("{artifact}/run"), work, move || {
+                let counts = if algo == "a1" {
+                    exec::count_a1(rt_ref, eps_ref, stream_ref).unwrap()
+                } else {
+                    exec::count_a2(rt_ref, eps_ref, stream_ref).unwrap()
+                };
+                counts.iter().sum()
+            });
+            let med = ctx.median_ns(&format!("{artifact}/run")).unwrap();
+            let ep_events = (mf.m_episodes * mf.c_chunk) as f64;
+            ctx.note(format!(
+                "{artifact}: {:.1}M episode-events/s ({:.2} us/event-batch)",
+                ep_events / med * 1e9 / 1e6,
+                med / 1e3 / mf.c_chunk as f64
+            ));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Service throughput under multi-client load — the tentpole metric for
+//! the `serve/` layer.
+//!
+//! `hot/serial_remine` measures the pre-service world (a serial loop
+//! re-mining every repeated query from scratch); `hot/service` replays
+//! the same hot-repeat pattern through `MineService` (coalescing + result
+//! cache). The repeat-query throughput ratio must clear 5x — that floor
+//! is this suite's acceptance criterion and fails the run when missed.
+//! `mixed/service` runs the full scenario mix for the realistic-traffic
+//! picture.
+
+use std::time::Instant;
+
+use crate::error::MineError;
+use crate::serve::loadgen::{self, LoadGenConfig, MixWeights, Workload};
+use crate::serve::{mine_direct, MineService, ServiceConfig};
+
+use super::super::harness::{SuiteCtx, Work};
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let lg = if ctx.smoke { LoadGenConfig::smoke() } else { LoadGenConfig::default() };
+    let sc = ServiceConfig { workers: 4, ..ServiceConfig::default() };
+    let workload = Workload::build(&lg)?;
+
+    // Phase 1: serial re-mine baseline over the hot repeats (enough
+    // repeats for a stable rate; the point is cost-per-request).
+    let serial_requests: usize = if ctx.smoke { 12 } else { 20 };
+    let t0 = Instant::now();
+    for i in 0..serial_requests {
+        let q = &workload.hot[i % workload.hot.len()];
+        mine_direct(q, sc.strategy, sc.cpu_threads)?;
+    }
+    let serial_ns = t0.elapsed().as_nanos() as f64;
+    ctx.record(
+        "hot/serial_remine",
+        Work::items(serial_requests as u64, "requests"),
+        serial_ns,
+        serial_requests as u64,
+    );
+    let serial_qps = serial_requests as f64 / (serial_ns / 1e9);
+
+    // Phase 2: the same hot-repeat pattern through the service.
+    let hot_lg = LoadGenConfig {
+        mix: MixWeights { hot_repeat: 1, theta_sweep: 0, distinct: 0, sliding_window: 0 },
+        ..lg.clone()
+    };
+    let service = MineService::start(sc.clone())?;
+    let hot_report = loadgen::run(&service, &workload, &hot_lg);
+    let hot_metrics = service.shutdown();
+    ctx.record(
+        "hot/service",
+        Work::items(hot_report.completed, "requests"),
+        hot_report.wall.as_nanos() as f64,
+        hot_report.completed,
+    );
+    let speedup = hot_report.qps / serial_qps;
+    ctx.note(format!(
+        "repeat-query speedup: {speedup:.1}x (cache hit rate {:.1}%, acceptance floor 5x)",
+        hot_metrics.cache.hit_rate() * 100.0
+    ));
+    if let Some(lat) = &hot_report.latency_ns {
+        ctx.note(format!(
+            "hot client latency: p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms",
+            lat.median / 1e6,
+            lat.p95 / 1e6,
+            lat.p99 / 1e6
+        ));
+    }
+    if hot_report.errors > 0 {
+        return Err(MineError::internal(format!(
+            "{} hot-path requests errored under load",
+            hot_report.errors
+        )));
+    }
+    if speedup < 5.0 {
+        return Err(MineError::internal(format!(
+            "service repeat-query throughput must beat serial re-mine by >= 5x, \
+             got {speedup:.1}x"
+        )));
+    }
+
+    // Phase 3: the full mixed scenario set.
+    let service = MineService::start(sc)?;
+    let report = loadgen::run(&service, &workload, &lg);
+    let metrics = service.shutdown();
+    ctx.record(
+        "mixed/service",
+        Work::items(report.completed, "requests"),
+        report.wall.as_nanos() as f64,
+        report.completed,
+    );
+    ctx.note(format!(
+        "mixed mix ({} clients x {} requests): {:.1} qps, {} completed / {} rejected / \
+         {} errors; {}",
+        lg.clients,
+        lg.requests_per_client,
+        report.qps,
+        report.completed,
+        report.rejected,
+        report.errors,
+        metrics.report()
+    ));
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Table 1 + Fig. 8 reproduction: strategy crossover points by episode
+//! size, and the f(N) = a/N + b vs a*N + b fit comparison.
+//!
+//! Three series:
+//!
+//! 1. **CPU-measured (always runs)** — episode-axis workers vs the
+//!    stream-axis sharded backend on growing batch sizes S; the crossover
+//!    is the S where the episode axis first wins. This is the dispatch
+//!    decision `HybridBackend::cpu_sharded` makes, measured.
+//! 2. **Accelerator-measured (runtime only)** — PTPE vs MapConcatenate,
+//!    the paper's own crossover; skipped (declared) without a runtime.
+//! 3. **GTX280 analytical model** — the paper's Eq. 1 utilization
+//!    threshold per level; instant, printed with the fits.
+//!
+//! All series are fitted with a/N + b and a*N + b (Fig. 8's comparison).
+
+use crate::backend::cpu::CpuParallelBackend;
+use crate::backend::sharded::ShardedBackend;
+use crate::backend::{self, CountBackend};
+use crate::coordinator::Strategy;
+use crate::datasets::sym26::{generate, Sym26Config};
+use crate::episodes::Interval;
+use crate::error::MineError;
+use crate::gpu_model::crossover::{fit_comparison, CrossoverModel, PAPER_TABLE1};
+use crate::gpu_model::occupancy::{a1_resources, GTX280};
+use crate::util::rng::Rng;
+
+use super::super::harness::{SuiteCtx, Work};
+use super::{head_window, open_runtime, random_episodes};
+
+/// Threads for the CPU series: fixed so scenario identity (and baseline
+/// comparability) does not depend on the host's core count.
+const CPU_THREADS: usize = 4;
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let rt = open_runtime();
+    let cfg = Sym26Config::default();
+    // the crossover regime is probed on a partition-sized stream — the
+    // workload the segment-parallel construction targets
+    let full = generate(&cfg, 7);
+    let stream = head_window(&full, 20_000);
+    let iv = Interval::new(5, 15);
+    let mut rng = Rng::new(0x7AB1E1);
+
+    let sizes: &[usize] = if ctx.smoke { &[3, 5] } else { &[3, 4, 5, 6, 7, 8] };
+    let probes: &[usize] = if ctx.smoke { &[1, 8, 64] } else { &[1, 2, 4, 8, 16, 32, 64] };
+
+    // --- series 1: CPU episode-axis vs stream-axis (always) ---
+    let mut cpu_measured: Vec<(usize, f64)> = vec![];
+    for &n in sizes {
+        let mut crossover: Option<f64> = None;
+        let mut prev_s: Option<usize> = None;
+        for &s in probes {
+            let eps = random_episodes(&mut rng, n, s, stream.n_types as i32, iv);
+            let work = Work::counting(stream.len() as u64, s as u64);
+            let mut ep_axis = CpuParallelBackend::new(CPU_THREADS);
+            ctx.measure(&format!("cpu_n{n}_s{s}/episode_axis"), work, || {
+                ep_axis.count(&eps, &stream).unwrap().counts.iter().sum()
+            });
+            let mut st_axis = ShardedBackend::new(CPU_THREADS);
+            ctx.measure(&format!("cpu_n{n}_s{s}/stream_axis"), work, || {
+                st_axis.count(&eps, &stream).unwrap().counts.iter().sum()
+            });
+            let ep_ns = ctx.median_ns(&format!("cpu_n{n}_s{s}/episode_axis")).unwrap();
+            let st_ns = ctx.median_ns(&format!("cpu_n{n}_s{s}/stream_axis")).unwrap();
+            if crossover.is_none() && ep_ns <= st_ns {
+                crossover = Some(match prev_s {
+                    Some(p) => (p + s) as f64 / 2.0,
+                    None => 0.5,
+                });
+            }
+            prev_s = Some(s);
+        }
+        let c = crossover.unwrap_or(*probes.last().unwrap() as f64 * 2.0);
+        cpu_measured.push((n, c));
+        ctx.note(format!("cpu crossover at size {n}: S = {c:.1}"));
+    }
+
+    // --- series 2: accelerator PTPE vs MapConcatenate (runtime only) ---
+    let mut accel_measured: Vec<(usize, f64)> = vec![];
+    match &rt {
+        None => {
+            ctx.skip("accel_*", "accelerator runtime unavailable");
+            ctx.note("accelerator crossover series skipped: no PJRT runtime");
+        }
+        Some(rt) => {
+            for &n in sizes {
+                let mut crossover: Option<f64> = None;
+                let mut prev_s: Option<usize> = None;
+                for &s in probes {
+                    let eps = random_episodes(&mut rng, n, s, stream.n_types as i32, iv);
+                    let work = Work::counting(stream.len() as u64, s as u64);
+                    let mut ptpe = backend::for_strategy(
+                        Strategy::PtpeA1,
+                        Some(rt.clone()),
+                        CPU_THREADS,
+                    )?;
+                    ctx.measure(&format!("accel_n{n}_s{s}/ptpe"), work, || {
+                        ptpe.count(&eps, &stream).unwrap().counts.iter().sum()
+                    });
+                    let mut mc = backend::for_strategy(
+                        Strategy::MapConcat,
+                        Some(rt.clone()),
+                        CPU_THREADS,
+                    )?;
+                    ctx.measure(&format!("accel_n{n}_s{s}/mapconcat"), work, || {
+                        mc.count(&eps, &stream).unwrap().counts.iter().sum()
+                    });
+                    let pt = ctx.median_ns(&format!("accel_n{n}_s{s}/ptpe")).unwrap();
+                    let mcn = ctx.median_ns(&format!("accel_n{n}_s{s}/mapconcat")).unwrap();
+                    if crossover.is_none() && pt <= mcn {
+                        crossover = Some(match prev_s {
+                            Some(p) => (p + s) as f64 / 2.0,
+                            None => 0.5,
+                        });
+                    }
+                    prev_s = Some(s);
+                }
+                let c = crossover.unwrap_or(*probes.last().unwrap() as f64 * 2.0);
+                accel_measured.push((n, c));
+                ctx.note(format!("accel crossover at size {n}: S = {c:.1}"));
+            }
+        }
+    }
+
+    // --- series 3: GTX280 analytical model + Fig. 8 fits ---
+    let k_slots = match &rt {
+        Some(rt) => rt.manifest().k_slots,
+        None => 8,
+    };
+    let mut model_pts: Vec<(usize, f64)> = vec![];
+    for &(n, paper_c) in PAPER_TABLE1 {
+        let r = a1_resources(n, k_slots);
+        let s_star = GTX280.full_utilization_threshold(&r);
+        model_pts.push((n, s_star as f64));
+        ctx.note(format!(
+            "GTX280 model size {n}: S* = {s_star} (paper crossover {paper_c:.0})"
+        ));
+    }
+
+    let mut series: Vec<(&str, &[(usize, f64)])> = vec![
+        ("cpu measured (this substrate)", &cpu_measured),
+        ("GTX280 model S*", &model_pts),
+        ("paper Table 1", PAPER_TABLE1),
+    ];
+    if !accel_measured.is_empty() {
+        series.push(("accel measured (this substrate)", &accel_measured));
+    }
+    for (name, pts) in series {
+        let (sse_inv, sse_lin) = fit_comparison(pts);
+        ctx.note(format!(
+            "Fig 8 fit, {name}: SSE a/N+b = {sse_inv:.1}, a*N+b = {sse_lin:.1} -> {} wins",
+            if sse_inv <= sse_lin { "a/N+b" } else { "a*N+b" }
+        ));
+    }
+    let model = CrossoverModel::fit(&cpu_measured);
+    ctx.note(format!(
+        "fitted cpu dispatch model: crossover(N) = {:.1}/N + {:.1}",
+        model.a, model.b
+    ));
+    Ok(())
+}

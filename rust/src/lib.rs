@@ -66,10 +66,16 @@
 //!   (`epminer serve-bench`, `benches/serve_load.rs`).
 //! - [`coordinator`] — strategy name menu, run metrics, the streaming
 //!   partition producer, and the deprecated pre-0.2 `Coordinator` shims.
-//! - [`util`] — RNG, stats, CLI, bench and property-test harnesses.
+//! - [`bench`] — the unified perf harness: a suite registry every bench
+//!   target registers into, a shared measurement loop, the versioned
+//!   `BENCH_<suite>.json` result schema with environment capture, and
+//!   noise-tolerant baseline checking (`epminer bench --suite all --smoke
+//!   --check benches/baselines` is CI's perf regression gate).
+//! - [`util`] — RNG, stats, CLI, JSON, bench and property-test harnesses.
 
 pub mod analysis;
 pub mod backend;
+pub mod bench;
 pub mod coordinator;
 pub mod datasets;
 pub mod episodes;

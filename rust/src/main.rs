@@ -8,6 +8,8 @@
 //!                 durable segmented spike log (ingest/)
 //!   log-mine    — time-range / electrode-projection mining over a log
 //!   serve-bench — load-test the multi-tenant mining service (serve/)
+//!   bench       — run registered perf suites (machine-readable output,
+//!                 baseline regression checking; see bench/)
 //!   info        — runtime/artifact information
 //!
 //! Examples:
@@ -17,6 +19,7 @@
 //!   epminer ingest --dataset sym26 --out /tmp/rec
 //!   epminer log-mine --log /tmp/rec --from 10000 --to 30000 --types 3,7,9 --theta 20
 //!   epminer serve-bench --smoke
+//!   epminer bench --suite all --smoke --json-out . --check benches/baselines
 //!   epminer info
 //!
 //! Everything mining-shaped runs through the `Session` facade; `--strategy`
@@ -49,10 +52,11 @@ fn run() -> Result<(), MineError> {
         Some("raster") => cmd_raster(&args),
         Some("profile") => cmd_profile(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: epminer <mine|count|gen|ingest|log-mine|reconstruct|raster|profile|serve-bench|info> [options]\n\
+                "usage: epminer <mine|count|gen|ingest|log-mine|reconstruct|raster|profile|serve-bench|bench|info> [options]\n\
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
@@ -70,11 +74,20 @@ fn run() -> Result<(), MineError> {
                  serve-bench [--clients <n>] [--requests <n>] [--workers <n>] [--queue <n>]\n\
                  \x20            [--cache <entries>] [--strategy <name>] [--events <n>]\n\
                  \x20            [--dataset <spec>] [--seed <u64>] [--smoke] — load-test the service\n\
+                 bench       [--suite <{suites}|all>] [--smoke]\n\
+                 \x20            [--json-out <dir>] [--check <baseline.json|dir>]\n\
+                 \x20            [--tolerance <rel>] — run perf suites, write BENCH_<suite>.json,\n\
+                 \x20            gate against committed baselines\n\
                  info\n\
                  \n\
                  --dataset also accepts file:<path.bin> and log:<segment-dir>",
                 names = datasets::names().join("|"),
                 strategies = Strategy::NAMES.join("|"),
+                suites = episodes_gpu::bench::SUITES
+                    .iter()
+                    .map(|s| s.name)
+                    .collect::<Vec<_>>()
+                    .join("|"),
             );
             std::process::exit(2);
         }
@@ -484,6 +497,16 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
     }
     println!("service: {}", metrics.report());
     println!("\n{}", report.to_json());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<(), MineError> {
+    // run_from_args reports per-suite tables/check verdicts itself; a
+    // false return means a suite failed or a baseline check regressed.
+    if !episodes_gpu::bench::cli::run_from_args(args)? {
+        eprintln!("bench: FAILED (suite error or baseline regression)");
+        std::process::exit(1);
+    }
     Ok(())
 }
 

@@ -2,8 +2,7 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional args.
 //! Typed getters return a usage error naming the offending flag and value
-//! (a malformed `--theta banana` is a user mistake, not a panic); binaries
-//! without a `Result` main can funnel that through [`exit_usage`].
+//! (a malformed `--theta banana` is a user mistake, not a panic).
 
 use std::collections::HashMap;
 
@@ -85,13 +84,29 @@ impl Args {
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, MineError> {
         self.get_parsed(name, default, "a number")
     }
-}
 
-/// Exit(2) with the usage error — the edge handler for bench binaries
-/// whose `main` does not return `Result`.
-pub fn exit_usage<T>(e: MineError) -> T {
-    eprintln!("error: {e}");
-    std::process::exit(2)
+    /// Every provided option and flag name, for callers that reject or
+    /// warn on arguments they do not understand (a silently ignored
+    /// `--events 1000000` measures a different workload than the one the
+    /// user asked for).
+    pub fn given(&self) -> impl Iterator<Item = &str> {
+        self.options
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.flags.iter().map(|s| s.as_str()))
+    }
+
+    /// The canonical reduced-workload flag: `--smoke`. The first bench
+    /// generation called it `--fast`; that spelling still works as a
+    /// deprecated alias (with a stderr warning) so existing scripts and CI
+    /// invocations keep running while they migrate.
+    pub fn smoke(&self) -> bool {
+        if self.flag("fast") {
+            eprintln!("warning: --fast is deprecated, use --smoke");
+            return true;
+        }
+        self.flag("smoke")
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +147,21 @@ mod tests {
         let a = parse(&["--n=-3"]);
         assert!(a.get_usize("n", 1).is_err());
         assert_eq!(a.get_i32("n", 1).unwrap(), -3);
+    }
+
+    #[test]
+    fn given_lists_every_option_and_flag() {
+        let a = parse(&["--theta", "300", "--dataset=sym26", "--verbose"]);
+        let mut names: Vec<&str> = a.given().collect();
+        names.sort_unstable();
+        assert_eq!(names, vec!["dataset", "theta", "verbose"]);
+    }
+
+    #[test]
+    fn smoke_accepts_deprecated_fast_alias() {
+        assert!(parse(&["--smoke"]).smoke());
+        assert!(parse(&["--fast"]).smoke());
+        assert!(!parse(&["--thorough"]).smoke());
     }
 
     #[test]

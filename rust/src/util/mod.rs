@@ -3,6 +3,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

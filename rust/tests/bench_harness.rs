@@ -1,0 +1,140 @@
+//! The bench harness contract: registry completeness, schema round-trip
+//! through real files, `--check` verdict logic (including the acceptance
+//! criterion that an artificially tightened baseline demonstrably fails),
+//! and one registered suite run end-to-end through the shared measurement
+//! loop.
+
+use std::path::PathBuf;
+
+use episodes_gpu::bench::{
+    check_suite, find, run_suite, CheckConfig, SuiteResult, Verdict, SCHEMA_VERSION, SUITES,
+};
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("bench_harness_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn registry_covers_every_bench_target() {
+    // the Cargo [[bench]] targets, which must stay in lockstep with the
+    // registry (each bench main is a thin registrant over its suite)
+    let expected = [
+        "fig7_algorithms",
+        "fig9_twopass",
+        "fig10_profiler",
+        "fig11_gpu_cpu",
+        "table1_crossover",
+        "perf_kernels",
+        "ablation_k_slots",
+        "axis_scaling",
+        "serve_load",
+        "ingest_replay",
+    ];
+    assert_eq!(SUITES.len(), expected.len());
+    for name in expected {
+        let def = find(name).unwrap_or_else(|| panic!("suite {name} not registered"));
+        assert!(!def.description.is_empty());
+    }
+}
+
+#[test]
+fn smoke_run_round_trips_and_self_checks() {
+    // axis_scaling is pure CPU and cheap in smoke mode: the end-to-end
+    // proof that a registered scenario flows measurement -> schema ->
+    // file -> parse -> check
+    let def = find("axis_scaling").unwrap();
+    let result = run_suite(def, true).expect("axis_scaling smoke run");
+
+    assert_eq!(result.schema_version, SCHEMA_VERSION);
+    assert_eq!(result.suite, "axis_scaling");
+    assert!(result.env.smoke);
+    assert!(!result.scenarios.is_empty());
+    let mut names: Vec<&str> = result.scenarios.iter().map(|s| s.name.as_str()).collect();
+    assert!(names.contains(&"threads1/episode_axis"), "{names:?}");
+    assert!(names.contains(&"threads1/stream_axis"), "{names:?}");
+    let n_before = names.len();
+    names.sort();
+    names.dedup();
+    assert_eq!(names.len(), n_before, "scenario names must be unique");
+    for s in &result.scenarios {
+        assert!(s.median_ns > 0.0, "{}: empty measurement", s.name);
+        assert!(s.iters >= 1);
+        assert!(s.events_per_s.unwrap() > 0.0, "{}: counting work declared", s.name);
+        assert_eq!(s.item_unit.as_deref(), Some("episodes"));
+    }
+
+    // file round-trip
+    let dir = scratch("roundtrip");
+    let path = dir.join("BENCH_axis_scaling.json");
+    std::fs::write(&path, result.to_json()).unwrap();
+    let back = SuiteResult::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(back, result);
+
+    // a fresh run checked against itself is within noise
+    let report = check_suite(&result, &back, &CheckConfig::default());
+    assert!(report.passed(), "{}", report.render());
+
+    // ...and an artificially tightened baseline demonstrably fails
+    let mut tightened = back.clone();
+    for s in &mut tightened.scenarios {
+        s.median_ns /= 100.0;
+        s.tolerance = Some(1.0);
+    }
+    let report = check_suite(&result, &tightened, &CheckConfig::default());
+    assert!(!report.passed(), "tightened baseline must fail:\n{}", report.render());
+    assert!(report.regressions() >= 1);
+    assert!(
+        report.entries.iter().any(|e| e.verdict == Verdict::Regression),
+        "{}",
+        report.render()
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn committed_baselines_parse_and_match_registry() {
+    // every committed baseline must stay schema-valid, claim the suite it
+    // is named for, and use the smoke/release profile CI checks against
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benches/baselines");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).expect("benches/baselines directory") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let stem = path.file_stem().unwrap().to_str().unwrap().to_string();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let baseline = SuiteResult::from_json(&text)
+            .unwrap_or_else(|e| panic!("baseline {stem}: {e}"));
+        assert_eq!(baseline.suite, stem, "baseline file name must match its suite");
+        assert!(find(&baseline.suite).is_some(), "baseline {stem} names unknown suite");
+        assert!(baseline.env.smoke, "committed baselines gate the --smoke profile");
+        assert_eq!(baseline.env.profile, "release");
+        for s in &baseline.scenarios {
+            assert!(s.median_ns > 0.0, "{stem}/{}", s.name);
+            assert!(
+                s.tolerance.is_some(),
+                "{stem}/{}: committed baselines carry explicit tolerances",
+                s.name
+            );
+        }
+        found += 1;
+    }
+    assert_eq!(found, SUITES.len(), "one committed baseline per registered suite");
+}
+
+#[test]
+fn check_refuses_profile_mismatch() {
+    let def = find("axis_scaling").unwrap();
+    let current = run_suite(def, true).unwrap();
+    let mut full_baseline = current.clone();
+    full_baseline.env.smoke = false;
+    let report = check_suite(&current, &full_baseline, &CheckConfig::default());
+    assert!(!report.passed());
+    assert!(report.render().contains("NOT COMPARABLE"), "{}", report.render());
+}
