@@ -1,0 +1,10 @@
+//! Incremental sliding-window commits vs batch re-mine — registered as
+//! the `stream_incremental` suite in `episodes_gpu::bench`. The suite
+//! body lives in `src/bench/suites/stream_incremental.rs`.
+//!
+//! Run: `cargo bench --bench stream_incremental
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
+
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("stream_incremental")
+}

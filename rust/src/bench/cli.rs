@@ -10,7 +10,12 @@
 //! - `--check <baseline.json|dir>` — compare against committed baselines;
 //!   a directory is expected to hold `<suite>.json` files
 //! - `--tolerance <rel>` — default relative tolerance for `--check`
-//!   (per-scenario `tolerance` in the baseline wins)
+//!   (per-scenario `tolerance` in the baseline wins); with
+//!   `--write-baseline`, the tolerance stamped into every scenario
+//! - `--write-baseline <dir>` — write each suite's result as a baseline
+//!   (`<dir>/<suite>.json`, per-scenario `tolerance` included) — the
+//!   refresh path for `benches/baselines/`: run the suites on the
+//!   reference machine, write over the committed files, review the diff
 //!
 //! Exit status: 0 all suites ran and all checks passed; 1 a suite failed
 //! or a check regressed; 2 usage error.
@@ -47,7 +52,8 @@ pub fn bench_binary_main(suite: &str) -> ! {
 
 /// Flags the harness understands. `bench` rides along because `cargo
 /// bench` appends `--bench` to the binaries it launches.
-const KNOWN_FLAGS: &[&str] = &["suite", "smoke", "fast", "json-out", "check", "tolerance", "bench"];
+const KNOWN_FLAGS: &[&str] =
+    &["suite", "smoke", "fast", "json-out", "check", "tolerance", "write-baseline", "bench"];
 
 fn run_selection(selection: &str, args: &Args) -> Result<bool, MineError> {
     for name in args.given() {
@@ -65,6 +71,7 @@ fn run_selection(selection: &str, args: &Args) -> Result<bool, MineError> {
     let smoke = args.smoke();
     let json_out = args.get("json-out");
     let check = args.get("check");
+    let write_baseline = args.get("write-baseline");
     let check_cfg = CheckConfig {
         default_tolerance: args.get_f64("tolerance", CheckConfig::default().default_tolerance)?,
     };
@@ -108,6 +115,10 @@ fn run_selection(selection: &str, args: &Args) -> Result<bool, MineError> {
                 .map_err(|e| MineError::io(format!("writing {}", path.display()), e))?;
             println!("wrote {}", path.display());
         }
+        if let Some(dir) = write_baseline {
+            let path = write_baseline_file(dir, &result, check_cfg.default_tolerance)?;
+            println!("wrote baseline {path}");
+        }
         if let Some(base_path) = check {
             match load_baseline(base_path, def.name)? {
                 None => println!(
@@ -125,6 +136,27 @@ fn run_selection(selection: &str, args: &Args) -> Result<bool, MineError> {
         }
     }
     Ok(all_ok)
+}
+
+/// Write one suite's result as a baseline file: `<dir>/<suite>.json` with
+/// `tolerance` stamped into every scenario (the value `--tolerance` set,
+/// else the check default), so a refreshed baseline gates at the band the
+/// refresher chose rather than whatever each future checker passes.
+fn write_baseline_file(
+    dir: &str,
+    result: &SuiteResult,
+    tolerance: f64,
+) -> Result<String, MineError> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| MineError::io(format!("creating baseline dir {dir}"), e))?;
+    let mut baseline = result.clone();
+    for s in &mut baseline.scenarios {
+        s.tolerance = Some(tolerance);
+    }
+    let path = Path::new(dir).join(format!("{}.json", result.suite));
+    std::fs::write(&path, baseline.to_json())
+        .map_err(|e| MineError::io(format!("writing {}", path.display()), e))?;
+    Ok(path.display().to_string())
 }
 
 /// Resolve the baseline for one suite: a direct file, or
@@ -228,6 +260,19 @@ mod tests {
         // a typoed --check path must fail loudly, not skip the gate
         let err = load_baseline("/no/such/baselines-dir", "axis_scaling").err().unwrap();
         assert!(err.to_string().contains("does not exist"), "{err}");
+    }
+
+    #[test]
+    fn write_baseline_stamps_tolerance_into_every_scenario() {
+        let dir = std::env::temp_dir().join(format!("bench_wb_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let result = crate::bench::schema::sample_suite();
+        let path = write_baseline_file(dir.to_str().unwrap(), &result, 2.5).unwrap();
+        assert!(path.ends_with("axis_scaling.json"), "{path}");
+        let back = SuiteResult::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.suite, result.suite);
+        assert!(back.scenarios.iter().all(|s| s.tolerance == Some(2.5)));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

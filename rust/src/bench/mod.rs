@@ -96,6 +96,11 @@ pub const SUITES: &[SuiteDef] = &[
         description: "durable-log ingest throughput and footer-pruned replay",
         run: suites::ingest_replay::run,
     },
+    SuiteDef {
+        name: "stream_incremental",
+        description: "incremental sliding-window commits vs batch re-mine (stream/)",
+        run: suites::stream_incremental::run,
+    },
 ];
 
 /// Look a suite up by name.
@@ -148,7 +153,7 @@ mod tests {
             assert!(!names[i + 1..].contains(n), "duplicate suite {n}");
             assert!(find(n).is_some());
         }
-        assert_eq!(SUITES.len(), 10, "every bench target registers exactly once");
+        assert_eq!(SUITES.len(), 11, "every bench target registers exactly once");
         assert!(find("nonexistent").is_none());
     }
 

@@ -23,6 +23,7 @@ pub mod fig9;
 pub mod ingest_replay;
 pub mod perf_kernels;
 pub mod serve_load;
+pub mod stream_incremental;
 pub mod table1;
 
 use std::rc::Rc;

@@ -1,0 +1,124 @@
+//! Incremental sliding-window mining vs batch re-mine — the tentpole
+//! metrics for the `stream/` layer.
+//!
+//! The claim under test: once a window is warm, an [`IncrementalMiner`]
+//! commit costs work proportional to the *arriving* segment (halo-dirty
+//! partitions only), while a cold re-mine of the same window scales with
+//! the *window*. So `w{N}/incremental_update` should stay near-flat as N
+//! grows and `w{N}/batch_remine` should grow with N — the asymptotic win
+//! the live-mining path (`epminer watch`, serve/ subscriptions) is built
+//! on. Every measured window also cross-checks the incremental frequent
+//! set against a cold one-pass serial mine of the exact window stream;
+//! divergence fails the suite, so the speedup is never bought with
+//! approximation.
+//!
+//! [`IncrementalMiner`]: crate::stream::IncrementalMiner
+
+use crate::coordinator::Strategy;
+use crate::episodes::Interval;
+use crate::error::MineError;
+use crate::events::Tick;
+use crate::stream::{IncrementalConfig, IncrementalMiner};
+use crate::Session;
+
+use super::super::harness::{SuiteCtx, Work};
+use super::synth_stream;
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let n_types = 10;
+    let max_level = 3;
+    let theta = if ctx.smoke { 4 } else { 12 };
+    let windows: &[usize] = if ctx.smoke { &[4, 8] } else { &[8, 16, 32] };
+    let seg_width: Tick = if ctx.smoke { 400 } else { 1_000 };
+    let iv = Interval::new(0, 6);
+
+    // Enough segments to warm the widest window and feed every measured
+    // update iteration (warmup + max_iters, per window). synth_stream's
+    // 1-3 tick gaps average ~2 ticks/event, so `need * seg_width` events
+    // span ~2x the required ticks — a comfortable margin.
+    let feed = ctx.cfg.warmup_iters + ctx.cfg.max_iters;
+    let need = windows.iter().max().unwrap() + feed + 1;
+    let stream = synth_stream(0x57E4, need * seg_width as usize, n_types);
+    let segs = stream.partitions(seg_width);
+    if segs.len() < need {
+        return Err(MineError::internal(format!(
+            "workload too short: {} segments of {need} needed",
+            segs.len()
+        )));
+    }
+
+    for &w in windows {
+        let cfg = IncrementalConfig::new(theta, vec![iv])
+            .max_level(max_level)
+            .window_segments(w);
+        let mut miner = IncrementalMiner::new(n_types, cfg)?;
+        let mut next = 0usize;
+        for _ in 0..w {
+            miner.push_segment(segs[next].clone())?;
+            next += 1;
+        }
+        let seg_events = segs[next].len() as u64;
+
+        // Slide the warm window by one segment per iteration: retire the
+        // expired prefix, fold in the arriving suffix, re-cascade only
+        // where the frequency frontier moved.
+        ctx.measure(&format!("w{w}/incremental_update"), Work::events(seg_events), || {
+            let seg = segs[next].clone();
+            next += 1;
+            let update = miner.push_segment(seg).expect("incremental commit");
+            update.frequent.len() as u64
+        });
+
+        // The comparison point: a cold one-pass serial mine of the very
+        // window the miner now holds (one-pass CpuSerial is the exact
+        // reference the incremental counting path generalizes).
+        let window = miner.window_stream();
+        let window_events = window.len() as u64;
+        ctx.measure(&format!("w{w}/batch_remine"), Work::events(window_events), || {
+            let mut session = Session::builder()
+                .stream(window.clone())
+                .theta(theta)
+                .interval(iv)
+                .strategy(Strategy::CpuSerial)
+                .one_pass()
+                .max_level(max_level)
+                .build()
+                .expect("batch session");
+            session.mine().expect("batch mine").frequent.len() as u64
+        });
+
+        // Exactness gate: the incremental frequent set must equal the
+        // batch re-mine of the same window, episode for episode, count
+        // for count, in the same level-wise candidate order.
+        let mut session = Session::builder()
+            .stream(window.clone())
+            .theta(theta)
+            .interval(iv)
+            .strategy(Strategy::CpuSerial)
+            .one_pass()
+            .max_level(max_level)
+            .build()?;
+        let batch = session.mine()?;
+        if batch.frequent != **miner.frequent() {
+            return Err(MineError::internal(format!(
+                "w{w}: incremental frequent set diverged from batch re-mine \
+                 ({} vs {} episodes)",
+                miner.frequent().len(),
+                batch.frequent.len()
+            )));
+        }
+
+        let inc = ctx.median_ns(&format!("w{w}/incremental_update")).unwrap_or(0.0);
+        let batch_ns = ctx.median_ns(&format!("w{w}/batch_remine")).unwrap_or(0.0);
+        ctx.note(format!(
+            "w{w}: window {} events, update {:.2}ms vs re-mine {:.2}ms \
+             ({:.1}x), results identical",
+            window_events,
+            inc / 1e6,
+            batch_ns / 1e6,
+            batch_ns / inc.max(1.0),
+        ));
+    }
+
+    Ok(())
+}

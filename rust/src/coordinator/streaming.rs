@@ -21,6 +21,11 @@ use crate::events::{EventStream, Tick};
 #[derive(Clone, Debug)]
 pub struct Partition {
     pub index: usize,
+    /// window start: this partition covers the ticks `(start, start + width]`
+    /// (the tail may end early — see `recording`). Incremental consumers
+    /// ([`crate::Session::mine_incremental`]) need the absolute position;
+    /// batch consumers mine `stream` and never look.
+    pub start: Tick,
     /// wall-clock duration this partition represents
     pub recording: Duration,
     pub stream: EventStream,
@@ -128,7 +133,7 @@ pub fn spawn_producer_with(
                 wait = wait.min(cfg.max_wait);
             }
             std::thread::sleep(wait);
-            if tx.send(Partition { index, recording, stream: part }).is_err() {
+            if tx.send(Partition { index, start: part_start, recording, stream: part }).is_err() {
                 break; // consumer hung up
             }
         }
@@ -222,6 +227,9 @@ mod tests {
         assert_eq!(parts.len(), 2);
         assert_eq!(parts[0].recording, Duration::from_millis(1000));
         assert_eq!(parts[1].recording, Duration::from_millis(491));
+        // start stamps the absolute window: partition i covers
+        // (start, start + width] with start spaced by the width
+        assert_eq!(parts[1].start, parts[0].start + 1000);
 
         let report = PartitionReport {
             index: 1,

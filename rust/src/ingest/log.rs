@@ -256,6 +256,39 @@ impl SpikeLog {
         Ok(())
     }
 
+    /// Re-read the manifest and fold newly sealed segments into this
+    /// handle's view. Safe concurrent with the active writer (it reuses
+    /// [`SpikeLog::open`]'s scan-before-manifest ordering) and strictly
+    /// append-only: a log whose committed prefix changed under this
+    /// handle (rewritten, truncated, or recreated) is refused rather than
+    /// silently re-synced, because a tailing miner has already folded the
+    /// old prefix into live state. Returns how many segments were added.
+    pub fn refresh(&mut self) -> Result<usize, MineError> {
+        let fresh = SpikeLog::open(&self.dir)?;
+        if fresh.n_types != self.n_types {
+            return Err(MineError::corrupt(
+                self.dir.display().to_string(),
+                format!(
+                    "log alphabet changed from {} to {} types under a live reader",
+                    self.n_types, fresh.n_types
+                ),
+            ));
+        }
+        let prefix_intact = fresh.segments.len() >= self.segments.len()
+            && self.segments.iter().zip(&fresh.segments).all(|(old, new)| old == new);
+        if !prefix_intact {
+            return Err(MineError::corrupt(
+                self.dir.display().to_string(),
+                "sealed segments changed under a live reader — the log was \
+                 rewritten or truncated; reopen it from scratch",
+            ));
+        }
+        let added = fresh.segments.len() - self.segments.len();
+        self.segments = fresh.segments;
+        self.recovery = fresh.recovery;
+        Ok(added)
+    }
+
     pub fn dir(&self) -> &Path {
         &self.dir
     }

@@ -26,16 +26,19 @@
 //! - [`read`] — [`RangeQuery`]: time-range + alphabet-projection reads
 //!   that use footers to prune whole segments before any I/O, and
 //!   materialize a sorted [`EventStream`](crate::events::EventStream)
-//!   any `Session` or `MineService` can mine.
+//!   any `Session` or `MineService` can mine. [`TailReader`] is the live
+//!   counterpart: poll the manifest for newly sealed segments
+//!   ([`SpikeLog::refresh`], safe concurrent with the writer) and feed
+//!   them to the incremental miner in `stream/`.
 //!
-//! Surfaced as `epminer ingest` / `epminer log-mine`, and as the
-//! `file:`/`log:` dataset schemes every mining subcommand and the serve
-//! load generator accept.
+//! Surfaced as `epminer ingest` / `epminer log-mine` / `epminer watch`,
+//! and as the `file:`/`log:` dataset schemes every mining subcommand and
+//! the serve load generator accept.
 
 pub mod log;
 pub mod read;
 pub mod segment;
 
 pub use log::{RecoveryReport, SpikeLog};
-pub use read::{RangeQuery, ReadStats};
+pub use read::{RangeQuery, ReadStats, TailReader};
 pub use segment::{Ingestor, RollPolicy, SegmentMeta};

@@ -21,7 +21,7 @@ use crate::error::MineError;
 use crate::events::{EventStream, EventType, Tick};
 
 use super::log::SpikeLog;
-use super::segment;
+use super::segment::{self, SegmentMeta};
 
 /// What to read: an optional time range (half-open on the left, like
 /// [`EventStream::window`]) and an optional alphabet projection.
@@ -159,5 +159,59 @@ impl SpikeLog {
         t_to: Tick,
     ) -> Result<(EventStream, ReadStats), MineError> {
         self.read(&RangeQuery::all().range(t_from, t_to))
+    }
+
+    /// Tail the log from the start of the recording: the first
+    /// [`TailReader::poll`] replays every already-sealed segment, then
+    /// each subsequent poll surfaces only what sealed since. This is the
+    /// live-mining feed — `stream::LogWatcher` drives an incremental
+    /// miner off it, one commit per sealed segment.
+    pub fn tail(self) -> TailReader {
+        TailReader { log: self, cursor: 0 }
+    }
+
+    /// Tail only segments sealed *after* this call (skip history).
+    pub fn tail_from_end(self) -> TailReader {
+        let cursor = self.segments().len();
+        TailReader { log: self, cursor }
+    }
+}
+
+/// A cursor over a [`SpikeLog`]'s sealed-segment sequence. Each
+/// [`TailReader::poll`] refreshes the manifest view
+/// ([`SpikeLog::refresh`] — append-only, safe concurrent with the
+/// writer) and materializes every newly sealed segment as a
+/// checksum-verified [`EventStream`].
+pub struct TailReader {
+    log: SpikeLog,
+    cursor: usize,
+}
+
+impl TailReader {
+    /// Newly sealed segments since the last poll, in seal order. Empty
+    /// when the reader is caught up.
+    pub fn poll(&mut self) -> Result<Vec<(SegmentMeta, EventStream)>, MineError> {
+        self.log.refresh()?;
+        let mut out = vec![];
+        for meta in &self.log.segments()[self.cursor..] {
+            let seg = segment::read_segment(&self.log.dir().join(&meta.file), meta)?;
+            out.push((meta.clone(), seg));
+        }
+        self.cursor = self.log.segments().len();
+        Ok(out)
+    }
+
+    /// Segments already surfaced by [`TailReader::poll`].
+    pub fn position(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn log(&self) -> &SpikeLog {
+        &self.log
+    }
+
+    /// Hand the log handle back (e.g. to run range queries).
+    pub fn into_log(self) -> SpikeLog {
+        self.log
     }
 }

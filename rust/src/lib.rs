@@ -59,10 +59,19 @@
 //!   footer-pruned time-range / electrode-projection queries that replay
 //!   recorded history into `Session` or the serving layer (`epminer
 //!   ingest`, `epminer log-mine`, the `file:`/`log:` dataset schemes).
+//! - [`stream`] — incremental sliding-window mining: an
+//!   [`stream::IncrementalMiner`] that carries per-partition automaton
+//!   state across arriving segments (recomputing only halo-dirty
+//!   partitions, re-generating candidates only when an episode crosses
+//!   theta), commit diffs of the frequent set, and a
+//!   [`stream::LogWatcher`] that tails a live [`ingest::SpikeLog`]
+//!   (`epminer watch`). Every commit is provably identical to a cold
+//!   batch mine of the current window.
 //! - [`serve`] — the multi-tenant mining service: a worker pool over the
 //!   engines with request coalescing, a sharded LRU result cache keyed by
 //!   exact stream fingerprint, bounded admission ([`MineError::Busy`]),
-//!   service metrics, and a closed-loop load generator
+//!   service metrics, live-update subscriptions pushing frequent-set
+//!   diffs to waiters, and a closed-loop load generator
 //!   (`epminer serve-bench`, `benches/serve_load.rs`).
 //! - [`coordinator`] — strategy name menu, run metrics, the streaming
 //!   partition producer, and the deprecated pre-0.2 `Coordinator` shims.
@@ -87,6 +96,7 @@ pub mod mining;
 pub mod runtime;
 pub mod serve;
 pub mod session;
+pub mod stream;
 pub mod util;
 
 pub use backend::{CountBackend, CountReport};

@@ -7,6 +7,8 @@
 //!   ingest      — replay a dataset through the streaming producer into a
 //!                 durable segmented spike log (ingest/)
 //!   log-mine    — time-range / electrode-projection mining over a log
+//!   watch       — tail a live log and mine incrementally (stream/), one
+//!                 commit + frequent-set diff per sealed segment
 //!   serve-bench — load-test the multi-tenant mining service (serve/)
 //!   bench       — run registered perf suites (machine-readable output,
 //!                 baseline regression checking; see bench/)
@@ -18,6 +20,7 @@
 //!   epminer mine --dataset file:/tmp/d35.bin --theta 40
 //!   epminer ingest --dataset sym26 --out /tmp/rec
 //!   epminer log-mine --log /tmp/rec --from 10000 --to 30000 --types 3,7,9 --theta 20
+//!   epminer watch --log /tmp/rec --theta 20 --window 8 --follow
 //!   epminer serve-bench --smoke
 //!   epminer bench --suite all --smoke --json-out . --check benches/baselines
 //!   epminer info
@@ -48,6 +51,7 @@ fn run() -> Result<(), MineError> {
         Some("gen") => cmd_gen(&args),
         Some("ingest") => cmd_ingest(&args),
         Some("log-mine") => cmd_log_mine(&args),
+        Some("watch") => cmd_watch(&args),
         Some("reconstruct") => cmd_reconstruct(&args),
         Some("raster") => cmd_raster(&args),
         Some("profile") => cmd_profile(&args),
@@ -56,7 +60,7 @@ fn run() -> Result<(), MineError> {
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: epminer <mine|count|gen|ingest|log-mine|reconstruct|raster|profile|serve-bench|bench|info> [options]\n\
+                "usage: epminer <mine|count|gen|ingest|log-mine|watch|reconstruct|raster|profile|serve-bench|bench|info> [options]\n\
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
@@ -68,16 +72,22 @@ fn run() -> Result<(), MineError> {
                  \x20            — replay through the streaming producer into a durable log\n\
                  log-mine    --log <dir> --theta <u64> [--from <tick> --to <tick>]\n\
                  \x20            [--types 3,7,9] — range/projection mining over recorded history\n\
+                 watch       --log <dir> --theta <u64> [--window <segments>] [--follow]\n\
+                 \x20            [--poll-ms <n>] [--max-commits <n>] [--low <t> --high <t>]\n\
+                 \x20            [--max-level <n>] [--k <n>] — incremental live mining: replay\n\
+                 \x20            sealed history, then push a frequent-set diff per new segment\n\
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
                  raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
                  profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
                  serve-bench [--clients <n>] [--requests <n>] [--workers <n>] [--queue <n>]\n\
                  \x20            [--cache <entries>] [--strategy <name>] [--events <n>]\n\
-                 \x20            [--dataset <spec>] [--seed <u64>] [--smoke] — load-test the service\n\
+                 \x20            [--dataset <spec>] [--seed <u64>] [--subscribers <n>] [--smoke]\n\
+                 \x20            — load-test the service (with a live push feed when\n\
+                 \x20            --subscribers > 0)\n\
                  bench       [--suite <{suites}|all>] [--smoke]\n\
                  \x20            [--json-out <dir>] [--check <baseline.json|dir>]\n\
-                 \x20            [--tolerance <rel>] — run perf suites, write BENCH_<suite>.json,\n\
-                 \x20            gate against committed baselines\n\
+                 \x20            [--tolerance <rel>] [--write-baseline <dir>] — run perf suites,\n\
+                 \x20            write BENCH_<suite>.json, gate against committed baselines\n\
                  info\n\
                  \n\
                  --dataset also accepts file:<path.bin> and log:<segment-dir>",
@@ -328,15 +338,25 @@ fn cmd_log_mine(args: &Args) -> Result<(), MineError> {
     let (stream, stats) = log.read(&query)?;
     println!(
         "log {dir}: {} sealed segments, {} events; query read {}/{} segments \
-         ({} pruned by time, {} by alphabet) -> {} events",
+         ({} pruned by time, {} by alphabet) -> scanned {} events, returned {}",
         stats.segments_total,
         log.len(),
         stats.segments_read,
         stats.segments_total,
         stats.pruned_by_time,
         stats.pruned_by_alphabet,
+        stats.events_scanned,
         stats.events_returned,
     );
+    // Pruning efficacy: how much I/O the segment footers saved this query.
+    let pruned = stats.pruned_by_time + stats.pruned_by_alphabet;
+    if stats.segments_total > 0 {
+        println!(
+            "pruning: skipped {pruned}/{} segments ({:.0}%) without reading their columns",
+            stats.segments_total,
+            100.0 * pruned as f64 / stats.segments_total as f64,
+        );
+    }
     if stream.is_empty() {
         println!("nothing to mine in the queried range");
         return Ok(());
@@ -350,6 +370,62 @@ fn cmd_log_mine(args: &Args) -> Result<(), MineError> {
     print_levels(&result);
     print_top_episodes(&result);
     Ok(())
+}
+
+fn cmd_watch(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::stream::{IncrementalConfig, LogWatcher};
+
+    let dir = args.get("log").ok_or_else(|| MineError::invalid("--log <dir> required"))?;
+    let theta = args.get_u64("theta", 20)?;
+    // No dataset registry entry to consult here — the generic path-scheme
+    // default band (2, 10] applies unless --low/--high override it.
+    let iv = Interval::new(args.get_i32("low", 2)?, args.get_i32("high", 10)?);
+    let window = args.get_usize("window", 0)?;
+    let mut cfg = IncrementalConfig::new(theta, vec![iv])
+        .max_level(args.get_usize("max-level", 8)?)
+        .window_segments(window);
+    if args.get("k").is_some() {
+        cfg = cfg.bounded_k(args.get_usize("k", usize::MAX)?);
+    }
+    let follow = args.flag("follow");
+    let poll_ms = args.get_u64("poll-ms", 200)?;
+    let max_commits = args.get_u64("max-commits", 0)?;
+
+    let mut watcher = LogWatcher::new(std::path::Path::new(dir), cfg)?;
+    match window {
+        0 => println!("watching {dir}: theta {theta}, unbounded window"),
+        n => println!("watching {dir}: theta {theta}, sliding window of {n} segments"),
+    }
+
+    let mut commits = 0u64;
+    loop {
+        let updates = watcher.poll()?;
+        for u in &updates {
+            println!("{}", u.report());
+            for e in u.diff.entered.iter().take(8) {
+                println!("  + [{}] {}", e.count, e.episode.display());
+            }
+            for e in u.diff.left.iter().take(8) {
+                println!("  - [{}] {}", e.count, e.episode.display());
+            }
+            for c in u.diff.count_changed.iter().take(8) {
+                println!("  ~ {} {} -> {}", c.episode.display(), c.previous, c.current);
+            }
+            commits += 1;
+            if max_commits > 0 && commits >= max_commits {
+                return Ok(());
+            }
+        }
+        if updates.is_empty() {
+            if !follow {
+                // caught up with the sealed history; without --follow the
+                // watch is a one-shot replay
+                println!("caught up after {commits} commit(s)");
+                return Ok(());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(poll_ms));
+        }
+    }
 }
 
 fn cmd_reconstruct(args: &Args) -> Result<(), MineError> {
@@ -451,6 +527,7 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
     // sliding scenarios from a named or recorded stream instead of the
     // synthetic one.
     lg.base_dataset = args.get("dataset").map(|s| s.to_string());
+    lg.subscribers = args.get_usize("subscribers", lg.subscribers)?;
 
     let d = ServiceConfig::default();
     let sc = ServiceConfig {
@@ -493,6 +570,12 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
             lat.median / 1e6,
             lat.p95 / 1e6,
             lat.p99 / 1e6,
+        );
+    }
+    if lg.subscribers > 0 {
+        println!(
+            "live push: {} commits published, {} received across {} subscribers",
+            report.updates_published, report.updates_received, lg.subscribers,
         );
     }
     println!("service: {}", metrics.report());

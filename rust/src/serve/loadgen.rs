@@ -20,7 +20,7 @@
 //! is how the service-equivalence test and the `serve_load` bench are
 //! built.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -33,7 +33,10 @@ use crate::util::stats::Summary;
 
 use super::metrics::ServiceMetrics;
 use super::pool::MineService;
-use super::query::Query;
+use super::query::{Query, SubscribeQuery};
+
+/// Topic the loadgen's live publisher pushes incremental commits to.
+pub const LIVE_TOPIC: &str = "loadgen/live";
 
 /// Relative draw weights for the scenario mix (0 disables a scenario).
 #[derive(Clone, Copy, Debug)]
@@ -86,6 +89,12 @@ pub struct LoadGenConfig {
     /// sliding-window width in ticks
     pub window_ticks: i32,
     pub max_level: usize,
+    /// live-subscription side channel: when > 0, a publisher thread
+    /// drives an incremental miner over the sliding partitions and
+    /// publishes each commit to [`LIVE_TOPIC`], while this many
+    /// subscriber threads (one tenant each) drain the pushed updates
+    /// concurrently with the query load
+    pub subscribers: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -105,6 +114,7 @@ impl Default for LoadGenConfig {
             distinct_events: 2_000,
             window_ticks: 4_000,
             max_level: 4,
+            subscribers: 0,
         }
     }
 }
@@ -237,6 +247,13 @@ pub struct LoadReport {
     pub qps: f64,
     /// client-observed submit-to-result latency (ns), cache hits included
     pub latency_ns: Option<Summary>,
+    /// incremental commits the live publisher pushed (0 when
+    /// `cfg.subscribers == 0`)
+    pub updates_published: u64,
+    /// updates drained across all subscriber threads — at most
+    /// `subscribers * updates_published`, less whatever the bounded
+    /// per-subscription buffers dropped under load
+    pub updates_received: u64,
     /// the service's own snapshot, taken as the last client finished
     pub service: ServiceMetrics,
 }
@@ -250,7 +267,8 @@ impl LoadReport {
         format!(
             "{{\"wall_s\":{:.3},\"completed\":{},\"rejected\":{},\"errors\":{},\
              \"qps\":{:.2},\"client_latency_ms\":{{\"p50\":{:.3},\"p95\":{:.3},\
-             \"p99\":{:.3}}},\"service\":{}}}",
+             \"p99\":{:.3}}},\"updates_published\":{},\"updates_received\":{},\
+             \"service\":{}}}",
             self.wall.as_secs_f64(),
             self.completed,
             self.rejected,
@@ -259,6 +277,8 @@ impl LoadReport {
             p50,
             p95,
             p99,
+            self.updates_published,
+            self.updates_received,
             self.service.to_json(),
         )
     }
@@ -274,18 +294,61 @@ struct ClientStats {
 
 /// Run the closed loop: `cfg.clients` threads, each issuing
 /// `cfg.requests_per_client` requests drawn from the mix, against a
-/// running service.
+/// running service. With `cfg.subscribers > 0` a live publisher drives an
+/// incremental miner over the sliding partitions and the subscribers drain
+/// the pushed commits concurrently — so the report measures query
+/// throughput with the push path active, not in isolation.
 pub fn run(service: &MineService, workload: &Workload, cfg: &LoadGenConfig) -> LoadReport {
     let next_distinct = AtomicUsize::new(0);
     let next_distinct = &next_distinct;
+    let live_done = AtomicBool::new(false);
+    let live_done = &live_done;
     let t0 = Instant::now();
-    let stats: Vec<ClientStats> = std::thread::scope(|scope| {
+    let (stats, updates_published, updates_received) = std::thread::scope(|scope| {
+        // Subscriptions are registered before the publisher starts so no
+        // commit can slip by unobserved; each subscriber is its own tenant
+        // (the per-tenant cap is a fairness control, not a fleet limit).
+        let subs: Vec<_> = (0..cfg.subscribers)
+            .map(|si| {
+                let sub = service.subscribe(SubscribeQuery::new(format!("live-{si}"), LIVE_TOPIC));
+                scope.spawn(move || {
+                    let Ok(sub) = sub else { return 0u64 };
+                    let mut got = 0u64;
+                    loop {
+                        if sub.recv_timeout(Duration::from_millis(25)).is_some() {
+                            got += 1;
+                            continue;
+                        }
+                        // Timed out empty: exit once the feed is over and
+                        // the backlog is drained (or the service shut the
+                        // subscription down under us).
+                        if sub.is_closed()
+                            || (live_done.load(Ordering::Acquire) && sub.backlog() == 0)
+                        {
+                            return got;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let publisher = (cfg.subscribers > 0).then(|| {
+            scope.spawn(move || {
+                let n = publish_live(service, workload, cfg);
+                live_done.store(true, Ordering::Release);
+                n
+            })
+        });
         let handles: Vec<_> = (0..cfg.clients)
             .map(|ci| {
                 scope.spawn(move || client_loop(ci, service, workload, cfg, next_distinct))
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("load client panicked")).collect()
+        let stats: Vec<ClientStats> =
+            handles.into_iter().map(|h| h.join().expect("load client panicked")).collect();
+        let published = publisher.map_or(0, |h| h.join().expect("live publisher panicked"));
+        let received: u64 =
+            subs.into_iter().map(|h| h.join().expect("live subscriber panicked")).sum();
+        (stats, published, received)
     });
     let wall = t0.elapsed();
 
@@ -304,8 +367,39 @@ pub fn run(service: &MineService, workload: &Workload, cfg: &LoadGenConfig) -> L
         errors,
         qps: completed as f64 / wall.as_secs_f64().max(1e-9),
         latency_ns: Summary::of_opt(&latencies),
+        updates_published,
+        updates_received,
         service: service.metrics(),
     }
+}
+
+/// Replay the sliding partitions through an [`IncrementalMiner`] in arrival
+/// order, publishing every commit to [`LIVE_TOPIC`]. Returns the commit
+/// count. The sliding queries use theta 3 and the (0, 6] interval — the
+/// miner mirrors them so subscribers see the frequent sets a sliding-window
+/// client would compute, arriving as diffs instead of re-mines.
+///
+/// [`IncrementalMiner`]: crate::stream::IncrementalMiner
+fn publish_live(service: &MineService, workload: &Workload, cfg: &LoadGenConfig) -> u64 {
+    let Some(first) = workload.sliding.first() else { return 0 };
+    let mcfg = crate::stream::IncrementalConfig::new(3, vec![Interval::new(0, 6)])
+        .max_level(cfg.max_level)
+        .window_segments(4);
+    let mut miner = match crate::stream::IncrementalMiner::new(first.stream.n_types, mcfg) {
+        Ok(m) => m,
+        Err(_) => return 0,
+    };
+    let mut published = 0u64;
+    for q in &workload.sliding {
+        match miner.push_segment((*q.stream).clone()) {
+            Ok(update) => {
+                service.publish(LIVE_TOPIC, update);
+                published += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    published
 }
 
 fn client_loop(

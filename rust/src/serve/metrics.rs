@@ -40,6 +40,16 @@ pub struct ServiceMetrics {
     pub latency_ns: Option<Summary>,
     /// cumulative busy time per worker
     pub worker_busy: Vec<Duration>,
+    /// live-update subscriptions currently registered
+    pub subscriptions_active: usize,
+    /// subscribe attempts rejected by the per-tenant cap
+    pub subscriptions_rejected: u64,
+    /// incremental commits pushed through [`publish`]
+    ///
+    /// [`publish`]: super::pool::MineService::publish
+    pub updates_published: u64,
+    /// updates evicted from full subscriber mailboxes (slow consumers)
+    pub updates_dropped: u64,
 }
 
 impl ServiceMetrics {
@@ -74,7 +84,8 @@ impl ServiceMetrics {
         format!(
             "submitted={} completed={} failed={} rejected={} coalesced={} \
              cache_hits={} cache_misses={} evictions={} hit_rate={:.1}% \
-             queue_depth={} qps={:.1} latency[{}] util=[{}]",
+             queue_depth={} subs={} subs_rejected={} pushed={} dropped={} \
+             qps={:.1} latency[{}] util=[{}]",
             self.submitted,
             self.completed,
             self.failed,
@@ -85,6 +96,10 @@ impl ServiceMetrics {
             self.cache.evictions,
             self.cache.hit_rate() * 100.0,
             self.queue_depth,
+            self.subscriptions_active,
+            self.subscriptions_rejected,
+            self.updates_published,
+            self.updates_dropped,
             self.throughput_qps(),
             lat,
             self.worker_utilization()
@@ -106,6 +121,8 @@ impl ServiceMetrics {
             "{{\"submitted\":{},\"completed\":{},\"failed\":{},\"rejected\":{},\
              \"coalesced\":{},\"cache_hits\":{},\"cache_misses\":{},\
              \"cache_evictions\":{},\"cache_hit_rate\":{:.4},\"queue_depth\":{},\
+             \"subscriptions_active\":{},\"subscriptions_rejected\":{},\
+             \"updates_published\":{},\"updates_dropped\":{},\
              \"uptime_s\":{:.3},\"qps\":{:.2},\"latency_ms\":{{\"p50\":{:.3},\
              \"p95\":{:.3},\"p99\":{:.3}}},\"worker_utilization\":[{}]}}",
             self.submitted,
@@ -118,6 +135,10 @@ impl ServiceMetrics {
             self.cache.evictions,
             self.cache.hit_rate(),
             self.queue_depth,
+            self.subscriptions_active,
+            self.subscriptions_rejected,
+            self.updates_published,
+            self.updates_dropped,
             self.uptime.as_secs_f64(),
             self.throughput_qps(),
             p50,
@@ -148,6 +169,10 @@ mod tests {
             uptime: Duration::from_secs(2),
             latency_ns: Summary::of_opt(&[1e6, 2e6, 3e6]),
             worker_busy: vec![Duration::from_secs(1), Duration::from_millis(500)],
+            subscriptions_active: 2,
+            subscriptions_rejected: 1,
+            updates_published: 7,
+            updates_dropped: 3,
         }
     }
 
@@ -165,8 +190,13 @@ mod tests {
         let m = snapshot();
         let r = m.report();
         assert!(r.contains("rejected=1") && r.contains("p99="), "{r}");
+        assert!(r.contains("subs=2") && r.contains("dropped=3"), "{r}");
         let j = m.to_json();
         assert!(j.contains("\"rejected\":1") && j.contains("\"p99\":"), "{j}");
+        assert!(
+            j.contains("\"subscriptions_active\":2") && j.contains("\"updates_dropped\":3"),
+            "{j}"
+        );
         // crude but effective: the JSON must be brace-balanced
         assert_eq!(
             j.matches('{').count(),

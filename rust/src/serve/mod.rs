@@ -20,6 +20,14 @@
 //!   stale.
 //! - admission control — a bounded job queue that rejects with the typed
 //!   [`MineError::Busy`] instead of buffering unboundedly.
+//! - live subscriptions — [`MineService::subscribe`] registers a
+//!   [`query::SubscribeQuery`] (tenant + topic + buffer) and
+//!   [`MineService::publish`] pushes each incremental-mining
+//!   [`CommitUpdate`](crate::stream::CommitUpdate) to every matching
+//!   [`pool::Subscription`] as a frequent-set diff. Per-tenant
+//!   subscription caps extend the bounded-admission story to long-lived
+//!   feeds; full mailboxes drop oldest (every update carries the full
+//!   set, so consumers resynchronize from the latest).
 //! - [`metrics::ServiceMetrics`] — throughput, queue depth, p50/p95/p99
 //!   latency, cache hit rate, per-worker utilization.
 //! - [`loadgen`] — a closed-loop load generator over a scenario mix (hot
@@ -37,5 +45,5 @@ pub mod query;
 
 pub use cache::{CacheStats, ResultCache};
 pub use metrics::ServiceMetrics;
-pub use pool::{mine_direct, MineService, ServiceConfig, Ticket};
-pub use query::{Query, QueryKey};
+pub use pool::{mine_direct, MineService, ServiceConfig, Subscription, Ticket};
+pub use query::{Query, QueryKey, SubscribeQuery};

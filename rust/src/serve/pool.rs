@@ -29,7 +29,7 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::miner::MineResult;
 use crate::coordinator::{Metrics, Strategy};
@@ -38,9 +38,11 @@ use crate::runtime::Runtime;
 use crate::session::{engine_for, mine_with_backend};
 use crate::util::stats::Summary;
 
+use crate::stream::CommitUpdate;
+
 use super::cache::ResultCache;
 use super::metrics::ServiceMetrics;
-use super::query::{Query, QueryKey};
+use super::query::{Query, QueryKey, SubscribeQuery};
 
 /// Pool/cache/admission knobs for [`MineService::start`].
 #[derive(Clone, Debug)]
@@ -62,6 +64,11 @@ pub struct ServiceConfig {
     pub cpu_threads: usize,
     /// how many recent execution latencies the metrics window keeps
     pub latency_window: usize,
+    /// live-update subscriptions one tenant may hold at once; the next
+    /// [`MineService::subscribe`] beyond this is rejected with
+    /// [`MineError::Busy`] (the subscription analogue of the bounded job
+    /// queue)
+    pub max_subscriptions_per_tenant: usize,
 }
 
 impl Default for ServiceConfig {
@@ -74,6 +81,7 @@ impl Default for ServiceConfig {
             strategy: Strategy::CpuParallel,
             cpu_threads: 1,
             latency_window: 4096,
+            max_subscriptions_per_tenant: 4,
         }
     }
 }
@@ -141,6 +149,31 @@ struct QueueState {
     paused: bool,
 }
 
+/// One subscriber's mailbox. Publishers push under the mutex and notify;
+/// the subscriber drains via [`Subscription::try_recv`] /
+/// [`Subscription::recv_timeout`]. A full mailbox drops its *oldest*
+/// update — a slow consumer loses history (each update carries the full
+/// frequent set, so the latest is always sufficient to resynchronize) and
+/// never blocks the publisher or other subscribers.
+struct SubShared {
+    queue: Mutex<VecDeque<Arc<CommitUpdate>>>,
+    cv: Condvar,
+    closed: AtomicBool,
+    buffer: usize,
+}
+
+struct SubEntry {
+    tenant: String,
+    topic: String,
+    shared: Arc<SubShared>,
+}
+
+#[derive(Default)]
+struct HubState {
+    subs: HashMap<u64, SubEntry>,
+    next_id: u64,
+}
+
 struct Shared {
     queue: Mutex<QueueState>,
     queue_cv: Condvar,
@@ -159,6 +192,11 @@ struct Shared {
     latencies_ns: Mutex<VecDeque<f64>>,
     latency_window: usize,
     busy_ns: Vec<AtomicU64>,
+    hub: Mutex<HubState>,
+    max_subs_per_tenant: usize,
+    subs_rejected: AtomicU64,
+    updates_published: AtomicU64,
+    updates_dropped: AtomicU64,
 }
 
 /// The service: start it, submit [`Query`]s from any thread, shut it down
@@ -213,6 +251,11 @@ impl MineService {
             latencies_ns: Mutex::new(VecDeque::new()),
             latency_window: cfg.latency_window.max(1),
             busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            hub: Mutex::new(HubState::default()),
+            max_subs_per_tenant: cfg.max_subscriptions_per_tenant.max(1),
+            subs_rejected: AtomicU64::new(0),
+            updates_published: AtomicU64::new(0),
+            updates_dropped: AtomicU64::new(0),
         });
         let mut workers = Vec::with_capacity(cfg.workers);
         for wi in 0..cfg.workers {
@@ -302,6 +345,71 @@ impl MineService {
         Ok(Ticket(TicketState::Pending(job)))
     }
 
+    /// Join a live-update topic. The returned [`Subscription`] receives
+    /// every [`CommitUpdate`] subsequently [`publish`](MineService::publish)ed
+    /// to that topic (as frequent-set diffs — entered / left /
+    /// count-changed — plus the full set for resynchronization). A tenant
+    /// already holding [`ServiceConfig::max_subscriptions_per_tenant`]
+    /// live subscriptions is rejected with [`MineError::Busy`], mirroring
+    /// the bounded job queue: `queue_depth` reports the tenant's active
+    /// subscriptions, `capacity` the cap.
+    pub fn subscribe(&self, query: SubscribeQuery) -> Result<Subscription, MineError> {
+        query.validate()?;
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(MineError::invalid("service is shut down"));
+        }
+        let mut hub = self.shared.hub.lock().unwrap();
+        let active = hub.subs.values().filter(|s| s.tenant == query.tenant).count();
+        if active >= self.shared.max_subs_per_tenant {
+            self.shared.subs_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(MineError::Busy {
+                queue_depth: active,
+                capacity: self.shared.max_subs_per_tenant,
+            });
+        }
+        let sub = Arc::new(SubShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            buffer: query.buffer,
+        });
+        let id = hub.next_id;
+        hub.next_id += 1;
+        hub.subs.insert(
+            id,
+            SubEntry { tenant: query.tenant, topic: query.topic, shared: Arc::clone(&sub) },
+        );
+        drop(hub);
+        Ok(Subscription { id, sub, service: Arc::clone(&self.shared) })
+    }
+
+    /// Push one incremental-mining commit to every subscriber of `topic`
+    /// (typically called by whatever drives a
+    /// [`stream::LogWatcher`](crate::stream::LogWatcher) or
+    /// [`stream::IncrementalMiner`](crate::stream::IncrementalMiner)).
+    /// Subscribers share one `Arc` of the update. Full mailboxes drop
+    /// their oldest entry rather than blocking. Returns how many
+    /// subscribers were handed the update.
+    pub fn publish(&self, topic: &str, update: CommitUpdate) -> usize {
+        let update = Arc::new(update);
+        let hub = self.shared.hub.lock().unwrap();
+        let mut delivered = 0;
+        for entry in hub.subs.values().filter(|s| s.topic == topic) {
+            let mut queue = entry.shared.queue.lock().unwrap();
+            while queue.len() >= entry.shared.buffer {
+                queue.pop_front();
+                self.shared.updates_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            queue.push_back(Arc::clone(&update));
+            drop(queue);
+            entry.shared.cv.notify_all();
+            delivered += 1;
+        }
+        drop(hub);
+        self.shared.updates_published.fetch_add(1, Ordering::Relaxed);
+        delivered
+    }
+
     /// Open a paused pool (no-op when already running).
     pub fn resume(&self) {
         self.shared.queue.lock().unwrap().paused = false;
@@ -328,6 +436,10 @@ impl MineService {
                 .iter()
                 .map(|b| std::time::Duration::from_nanos(b.load(Ordering::Relaxed)))
                 .collect(),
+            subscriptions_active: self.shared.hub.lock().unwrap().subs.len(),
+            subscriptions_rejected: self.shared.subs_rejected.load(Ordering::Relaxed),
+            updates_published: self.shared.updates_published.load(Ordering::Relaxed),
+            updates_dropped: self.shared.updates_dropped.load(Ordering::Relaxed),
         }
     }
 
@@ -361,6 +473,73 @@ impl MineService {
             self.shared.inflight.lock().unwrap().remove(&job.key);
             job.resolve(Err(MineError::invalid("service shut down before the query ran")));
         }
+        // Close every live subscription so blocked receivers return
+        // instead of waiting out their timeouts on a dead service.
+        let mut hub = self.shared.hub.lock().unwrap();
+        for entry in hub.subs.values() {
+            entry.shared.closed.store(true, Ordering::SeqCst);
+            entry.shared.cv.notify_all();
+        }
+        hub.subs.clear();
+    }
+}
+
+/// A live claim on a topic's update feed, handed out by
+/// [`MineService::subscribe`]. Dropping it unregisters the subscription
+/// (freeing the tenant's slot); service shutdown closes it remotely.
+pub struct Subscription {
+    id: u64,
+    sub: Arc<SubShared>,
+    service: Arc<Shared>,
+}
+
+impl Subscription {
+    /// The next buffered update, without blocking.
+    pub fn try_recv(&self) -> Option<Arc<CommitUpdate>> {
+        self.sub.queue.lock().unwrap().pop_front()
+    }
+
+    /// Block until an update arrives, the subscription closes, or the
+    /// timeout elapses. Returns `None` on close/timeout — check
+    /// [`Subscription::is_closed`] to tell the two apart.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Arc<CommitUpdate>> {
+        let deadline = Instant::now() + timeout;
+        let mut queue = self.sub.queue.lock().unwrap();
+        loop {
+            if let Some(update) = queue.pop_front() {
+                return Some(update);
+            }
+            if self.sub.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (q, timed_out) =
+                self.sub.cv.wait_timeout(queue, deadline - now).unwrap();
+            queue = q;
+            if timed_out.timed_out() && queue.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Updates currently buffered and undelivered.
+    pub fn backlog(&self) -> usize {
+        self.sub.queue.lock().unwrap().len()
+    }
+
+    /// True once the service shut down (buffered updates may still be
+    /// drained with [`Subscription::try_recv`]).
+    pub fn is_closed(&self) -> bool {
+        self.sub.closed.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for Subscription {
+    fn drop(&mut self) {
+        self.service.hub.lock().unwrap().subs.remove(&self.id);
     }
 }
 

@@ -133,6 +133,50 @@ impl Query {
     }
 }
 
+/// A live-update subscription request: which tenant is asking, which
+/// topic of [`CommitUpdate`](crate::stream::CommitUpdate)s they want
+/// pushed, and how many undelivered updates may buffer before the oldest
+/// is dropped (slow consumers lose history, never block the publisher).
+///
+/// Topics name incremental feeds — by convention the watched log
+/// directory or load-generator scenario (e.g. `"logs/array7"`). A
+/// subscription matches exactly one topic.
+#[derive(Clone, Debug)]
+pub struct SubscribeQuery {
+    /// tenant identity, counted against
+    /// [`ServiceConfig::max_subscriptions_per_tenant`](super::ServiceConfig)
+    pub tenant: String,
+    /// the update feed to join (exact match)
+    pub topic: String,
+    /// per-subscription buffer of undelivered updates (oldest dropped on
+    /// overflow)
+    pub buffer: usize,
+}
+
+impl SubscribeQuery {
+    pub fn new(tenant: impl Into<String>, topic: impl Into<String>) -> SubscribeQuery {
+        SubscribeQuery { tenant: tenant.into(), topic: topic.into(), buffer: 64 }
+    }
+
+    pub fn buffer(mut self, buffer: usize) -> SubscribeQuery {
+        self.buffer = buffer;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), MineError> {
+        if self.tenant.is_empty() {
+            return Err(MineError::invalid("SubscribeQuery::tenant must be non-empty"));
+        }
+        if self.topic.is_empty() {
+            return Err(MineError::invalid("SubscribeQuery::topic must be non-empty"));
+        }
+        if self.buffer == 0 {
+            return Err(MineError::invalid("SubscribeQuery::buffer must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 /// The canonical query identity: a 64-bit fingerprint plus two cheap
 /// fields carried verbatim, so a fingerprint collision must also match
 /// stream length and theta before two distinct queries could alias. (A
@@ -252,6 +296,14 @@ mod tests {
 
         let q = base().max_level(0);
         assert!(matches!(q.validate(), Err(MineError::InvalidConfig { .. })));
+    }
+
+    #[test]
+    fn subscribe_query_validation() {
+        assert!(SubscribeQuery::new("t1", "logs/a").validate().is_ok());
+        assert!(SubscribeQuery::new("", "logs/a").validate().is_err());
+        assert!(SubscribeQuery::new("t1", "").validate().is_err());
+        assert!(SubscribeQuery::new("t1", "logs/a").buffer(0).validate().is_err());
     }
 
     #[test]

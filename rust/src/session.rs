@@ -261,6 +261,50 @@ impl Session {
         Ok(reports)
     }
 
+    /// Incremental streaming (the `stream/` layer's answer to
+    /// [`Session::mine_partitions`]): fold each arriving partition into a
+    /// sliding window of the last `window_segments` partitions (0 =
+    /// unbounded) and return one [`CommitUpdate`](crate::stream::CommitUpdate)
+    /// per partition — the frequent set of the *window*, kept current by
+    /// the [`IncrementalMiner`](crate::stream::IncrementalMiner) at a cost
+    /// proportional to what changed instead of a full re-mine.
+    ///
+    /// The incremental engine is its own exact counting path (one-pass
+    /// Algorithm-1 semantics); the session's backend/two-pass settings do
+    /// not apply. Empty partitions (silent stretches of the recording)
+    /// are skipped — they seal no segment.
+    pub fn mine_incremental(
+        &self,
+        rx: Receiver<Partition>,
+        window_segments: usize,
+    ) -> Result<Vec<crate::stream::CommitUpdate>, MineError> {
+        let mut miner: Option<crate::stream::IncrementalMiner> = None;
+        let mut updates = vec![];
+        while let Ok(part) = rx.recv() {
+            if part.stream.is_empty() {
+                continue;
+            }
+            let m = match &mut miner {
+                Some(m) => m,
+                None => {
+                    let cfg = crate::stream::IncrementalConfig::new(
+                        self.opts.theta,
+                        self.opts.intervals.clone(),
+                    )
+                    .max_level(self.opts.max_level)
+                    .max_candidates_per_level(self.opts.max_candidates_per_level)
+                    .window_segments(window_segments);
+                    miner.insert(crate::stream::IncrementalMiner::new(
+                        part.stream.n_types,
+                        cfg,
+                    )?)
+                }
+            };
+            updates.push(m.push_segment(part.stream)?);
+        }
+        Ok(updates)
+    }
+
     pub fn stream(&self) -> &EventStream {
         &self.stream
     }

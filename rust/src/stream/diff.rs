@@ -1,0 +1,201 @@
+//! Commit updates and frequent-set diffs: what an incremental commit
+//! publishes.
+//!
+//! Every [`IncrementalMiner::push_segment`] produces a [`CommitUpdate`]:
+//! the full frequent set after the commit (shared via `Arc` so the serve
+//! layer can fan one update out to many subscribers without copying),
+//! plus a [`FrequentDiff`] against the previous commit — episodes that
+//! *entered* the frequent set, episodes that *left* it, and episodes whose
+//! count *changed* while staying frequent. Subscribers that only render
+//! deltas read the diff; subscribers that need the complete answer read
+//! `frequent`.
+//!
+//! [`IncrementalMiner::push_segment`]: super::incremental::IncrementalMiner::push_segment
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::episodes::{CountedEpisode, Episode};
+use crate::events::Tick;
+
+/// A frequent episode whose count moved between two commits.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CountChange {
+    pub episode: Episode,
+    pub previous: u64,
+    pub current: u64,
+}
+
+/// Set difference between two consecutive frequent sets.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FrequentDiff {
+    /// frequent now, not frequent at the previous commit (with current counts)
+    pub entered: Vec<CountedEpisode>,
+    /// frequent at the previous commit, not anymore (with their last counts)
+    pub left: Vec<CountedEpisode>,
+    /// frequent at both commits with a different count
+    pub count_changed: Vec<CountChange>,
+}
+
+impl FrequentDiff {
+    /// Diff `next` against `prev`. Order is deterministic: `entered` and
+    /// `count_changed` follow `next`'s (level-then-generation) order,
+    /// `left` follows `prev`'s.
+    pub fn between(prev: &[CountedEpisode], next: &[CountedEpisode]) -> FrequentDiff {
+        let prev_counts: HashMap<&Episode, u64> =
+            prev.iter().map(|c| (&c.episode, c.count)).collect();
+        let next_set: HashMap<&Episode, u64> =
+            next.iter().map(|c| (&c.episode, c.count)).collect();
+        let mut diff = FrequentDiff::default();
+        for c in next {
+            match prev_counts.get(&c.episode) {
+                None => diff.entered.push(c.clone()),
+                Some(&old) if old != c.count => diff.count_changed.push(CountChange {
+                    episode: c.episode.clone(),
+                    previous: old,
+                    current: c.count,
+                }),
+                Some(_) => {}
+            }
+        }
+        for c in prev {
+            if !next_set.contains_key(&c.episode) {
+                diff.left.push(c.clone());
+            }
+        }
+        diff
+    }
+
+    /// No membership or count movement at all.
+    pub fn is_empty(&self) -> bool {
+        self.entered.is_empty() && self.left.is_empty() && self.count_changed.is_empty()
+    }
+
+    /// Compact human form, e.g. `+3 -1 ~2`.
+    pub fn summary(&self) -> String {
+        format!(
+            "+{} -{} ~{}",
+            self.entered.len(),
+            self.left.len(),
+            self.count_changed.len()
+        )
+    }
+}
+
+/// Work accounting for one incremental commit — the numbers that prove
+/// (or disprove) the update cost is proportional to arriving data.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CommitStats {
+    /// events in the segment this commit folded in
+    pub events_added: usize,
+    /// events dropped off the expired end of the window
+    pub events_retired: usize,
+    /// segments dropped off the expired end of the window
+    pub segments_retired: usize,
+    /// boundary-machine Map computations ran (episode × partition pairs)
+    pub partitions_recomputed: usize,
+    /// events scanned by those Map computations (the real per-update cost)
+    pub events_rescanned: usize,
+    /// concatenate-fold chain misses flagged across all tracked episodes
+    pub concat_misses: u64,
+    /// episodes recounted serially over the whole window (miss fallback)
+    pub serial_recounts: usize,
+    /// mining levels whose candidate set had to be regenerated because the
+    /// frontier below them moved across theta (0 = fully reused)
+    pub candidate_regens: usize,
+    /// episodes with cached automaton state after the commit
+    pub tracked_episodes: usize,
+}
+
+/// What one [`IncrementalMiner`] commit produced: the window it now
+/// covers, the full frequent set, the diff against the previous commit,
+/// and the work accounting.
+///
+/// [`IncrementalMiner`]: super::incremental::IncrementalMiner
+#[derive(Clone, Debug)]
+pub struct CommitUpdate {
+    /// 1-based commit number (== segments pushed so far)
+    pub seq: u64,
+    /// window lower boundary: events with `t > window_start` are covered
+    pub window_start: Tick,
+    /// window upper boundary (inclusive)
+    pub window_end: Tick,
+    /// segments currently in the window
+    pub window_segments: usize,
+    /// events currently in the window
+    pub window_events: usize,
+    /// the complete frequent set after this commit, level-then-generation
+    /// order (identical to a batch re-mine of the window)
+    pub frequent: Arc<Vec<CountedEpisode>>,
+    pub diff: FrequentDiff,
+    pub stats: CommitStats,
+}
+
+impl CommitUpdate {
+    /// One-line human summary for logs and the `epminer watch` output.
+    pub fn report(&self) -> String {
+        format!(
+            "commit {} window ({}, {}] segs={} events={} frequent={} diff[{}] \
+             recomputed={} rescanned={} misses={} recounts={} regens={}",
+            self.seq,
+            self.window_start,
+            self.window_end,
+            self.window_segments,
+            self.window_events,
+            self.frequent.len(),
+            self.diff.summary(),
+            self.stats.partitions_recomputed,
+            self.stats.events_rescanned,
+            self.stats.concat_misses,
+            self.stats.serial_recounts,
+            self.stats.candidate_regens,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::Interval;
+
+    fn counted(ty: i32, count: u64) -> CountedEpisode {
+        CountedEpisode { episode: Episode::single(ty), count }
+    }
+
+    #[test]
+    fn diff_classifies_all_three_movements() {
+        let prev = vec![counted(0, 5), counted(1, 7), counted(2, 9)];
+        let next = vec![counted(1, 8), counted(2, 9), counted(3, 4)];
+        let d = FrequentDiff::between(&prev, &next);
+        assert_eq!(d.entered, vec![counted(3, 4)]);
+        assert_eq!(d.left, vec![counted(0, 5)]);
+        assert_eq!(
+            d.count_changed,
+            vec![CountChange { episode: Episode::single(1), previous: 7, current: 8 }]
+        );
+        assert!(!d.is_empty());
+        assert_eq!(d.summary(), "+1 -1 ~1");
+    }
+
+    #[test]
+    fn identical_sets_diff_empty() {
+        let eps = vec![
+            counted(0, 5),
+            CountedEpisode {
+                episode: Episode::new(vec![0, 1], vec![Interval::new(0, 10)]),
+                count: 3,
+            },
+        ];
+        let d = FrequentDiff::between(&eps, &eps);
+        assert!(d.is_empty());
+        assert_eq!(d.summary(), "+0 -0 ~0");
+    }
+
+    #[test]
+    fn diff_against_empty_is_all_entered() {
+        let next = vec![counted(0, 2), counted(1, 3)];
+        let d = FrequentDiff::between(&[], &next);
+        assert_eq!(d.entered.len(), 2);
+        assert!(d.left.is_empty() && d.count_changed.is_empty());
+    }
+}

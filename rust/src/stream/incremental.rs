@@ -1,0 +1,633 @@
+//! The incremental sliding-window miner: boundary-machine state carried
+//! across *arriving* segments.
+//!
+//! The batch engines re-mine a window from scratch; this engine keeps,
+//! per tracked episode, the per-partition `(a, count, b)` boundary-machine
+//! tuples the MapConcatenate Map step produces (`serial::mapcat_map`, the
+//! same machinery `backend/sharded.rs` runs across *spatial* time shards)
+//! and updates only the tuples a commit can actually change:
+//!
+//! - the **new** partition (the arriving segment) is always computed;
+//! - partitions whose **forward halo** (`tau_{p+1} + span_max`) reached
+//!   beyond the previous window end are recomputed — their machines could
+//!   not yet see the events that just arrived (their `b` completion may
+//!   now exist);
+//! - when the window slides, partitions whose **back halo**
+//!   (`tau_p - span_max`) reached into the retired prefix are recomputed
+//!   against the shrunk window, and the first partition is recomputed
+//!   unconditionally (its lower boundary `tau_0` moves to
+//!   `t_min - 1` of the new first segment).
+//!
+//! Every other cached tuple is provably identical to what a batch Map
+//! over the current window would produce, because a machine's tuple is a
+//! function of exactly the events in `(start, tau_{p+1} + span_max]` and
+//! neither endpoint's contents changed. Counts come from
+//! [`mapconcat::concatenate_fold`] over the tuple chain; a flagged miss
+//! (the chain failed to re-anchor) falls back to the serial reference
+//! over the materialized window — so counts are exact at every commit,
+//! which makes the incremental frequent set *identical* to a cold batch
+//! re-mine (`tests/stream_incremental.rs` pins this at every commit).
+//!
+//! Candidate generation is gated on frontier movement: each level's
+//! candidate set is cached keyed on the exact frontier that generated it,
+//! so as long as no episode crosses theta the level-wise generation is
+//! skipped entirely (`CommitStats::candidate_regens == 0`) and a commit
+//! costs only the tuple updates above — work proportional to the arriving
+//! segment (plus halo), not the window.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
+
+use crate::coordinator::mapconcat;
+use crate::episodes::{candidates, CountedEpisode, Episode, Interval};
+use crate::error::MineError;
+use crate::events::{EventStream, Tick};
+use crate::mining::serial;
+use crate::session::MineOptions;
+
+use super::diff::{CommitStats, CommitUpdate, FrequentDiff};
+
+/// Configuration for an [`IncrementalMiner`] — the `MineOptions`
+/// parameters plus the sliding-window length and the occurrence-list
+/// bound.
+#[derive(Clone, Debug)]
+pub struct IncrementalConfig {
+    /// support threshold theta (must be > 0)
+    pub theta: u64,
+    /// the inter-event constraint set I (must be non-empty)
+    pub intervals: Vec<Interval>,
+    /// stop after this episode size (default 8)
+    pub max_level: usize,
+    /// per-level candidate guardrail (default 2,000,000)
+    pub max_candidates_per_level: usize,
+    /// sliding window length in segments; 0 = unbounded (never retire)
+    pub window_segments: usize,
+    /// bounded occurrence-list K (`usize::MAX` = unbounded, the serial
+    /// reference; a finite K reproduces the GPU kernel semantics of
+    /// `serial::count_a1_bounded`)
+    pub k: usize,
+}
+
+impl IncrementalConfig {
+    pub fn new(theta: u64, intervals: Vec<Interval>) -> IncrementalConfig {
+        IncrementalConfig {
+            theta,
+            intervals,
+            max_level: 8,
+            max_candidates_per_level: 2_000_000,
+            window_segments: 0,
+            k: usize::MAX,
+        }
+    }
+
+    pub fn max_level(mut self, max_level: usize) -> IncrementalConfig {
+        self.max_level = max_level;
+        self
+    }
+
+    pub fn max_candidates_per_level(mut self, cap: usize) -> IncrementalConfig {
+        self.max_candidates_per_level = cap;
+        self
+    }
+
+    /// Slide over the most recent `n` segments (0 = grow forever).
+    pub fn window_segments(mut self, n: usize) -> IncrementalConfig {
+        self.window_segments = n;
+        self
+    }
+
+    /// Bound occurrence lists to the K most recent entries.
+    pub fn bounded_k(mut self, k: usize) -> IncrementalConfig {
+        self.k = k;
+        self
+    }
+
+    fn options(&self) -> MineOptions {
+        MineOptions {
+            theta: self.theta,
+            intervals: self.intervals.clone(),
+            max_level: self.max_level,
+            max_candidates_per_level: self.max_candidates_per_level,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), MineError> {
+        self.options().validate()?;
+        if self.k == 0 {
+            return Err(MineError::invalid("IncrementalConfig::k must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// One arriving segment held in the window.
+struct SegEntry {
+    stream: EventStream,
+    hist: Vec<u64>,
+}
+
+/// Cached automaton state for one tracked episode (size >= 2): one tuple
+/// column per window partition, parallel to the segment deque, plus the
+/// folded count as of the last commit.
+struct Tracked {
+    tuples: VecDeque<Vec<(Tick, u64, Tick)>>,
+    count: u64,
+}
+
+/// A cached candidate level: the exact frontier that generated it, and
+/// what `candidates::next_level` produced from it. Reused verbatim while
+/// the frontier below is unchanged — the theta-crossing gate.
+struct CachedLevel {
+    source_frontier: Vec<Episode>,
+    cands: Vec<Episode>,
+}
+
+/// The incremental sliding-window mining engine. Feed arriving segments
+/// with [`IncrementalMiner::push_segment`]; each push commits and returns
+/// a [`CommitUpdate`] whose frequent set equals a batch re-mine of the
+/// current window.
+pub struct IncrementalMiner {
+    cfg: IncrementalConfig,
+    n_types: usize,
+    segs: VecDeque<SegEntry>,
+    /// partition boundaries, `segs.len() + 1` entries once non-empty:
+    /// `taus[0] = segs[0].t_min - 1`, `taus[i] = segs[i-1].t_max`
+    taus: Vec<Tick>,
+    /// per-type window counts (level-1 support, pure histogram deltas)
+    counts1: Vec<u64>,
+    tracked: HashMap<Episode, Tracked>,
+    /// cached candidate sets for levels >= 2 (index `level - 2`)
+    cached_levels: Vec<CachedLevel>,
+    frequent: Arc<Vec<CountedEpisode>>,
+    commit_seq: u64,
+}
+
+impl IncrementalMiner {
+    pub fn new(n_types: usize, cfg: IncrementalConfig) -> Result<IncrementalMiner, MineError> {
+        if n_types == 0 {
+            return Err(MineError::invalid("IncrementalMiner alphabet must have n_types >= 1"));
+        }
+        cfg.validate()?;
+        Ok(IncrementalMiner {
+            cfg,
+            n_types,
+            segs: VecDeque::new(),
+            taus: vec![],
+            counts1: vec![0; n_types],
+            tracked: HashMap::new(),
+            cached_levels: vec![],
+            frequent: Arc::new(vec![]),
+            commit_seq: 0,
+        })
+    }
+
+    /// The frequent set as of the last commit.
+    pub fn frequent(&self) -> &Arc<Vec<CountedEpisode>> {
+        &self.frequent
+    }
+
+    /// Commits so far (== segments pushed).
+    pub fn commits(&self) -> u64 {
+        self.commit_seq
+    }
+
+    /// Window boundaries `(start, end]`, or `None` before the first push.
+    pub fn window_bounds(&self) -> Option<(Tick, Tick)> {
+        match self.taus.as_slice() {
+            [] => None,
+            taus => Some((taus[0], *taus.last().unwrap())),
+        }
+    }
+
+    /// Materialize the current window as one sorted stream — what a batch
+    /// re-mine of "the same data" means (the equivalence tests compare
+    /// against a cold `Session::mine` over exactly this stream).
+    pub fn window_stream(&self) -> EventStream {
+        materialize(&self.segs, self.n_types)
+    }
+
+    /// Fold one arriving segment into the window and commit. The segment
+    /// must be time-sorted, in-alphabet, non-empty, and start at or after
+    /// the previous segment's last tick — the same contiguity the ingest
+    /// log guarantees for sealed segments.
+    pub fn push_segment(&mut self, seg: EventStream) -> Result<CommitUpdate, MineError> {
+        self.validate_segment(&seg)?;
+        let mut stats = CommitStats { events_added: seg.len(), ..CommitStats::default() };
+
+        // -- structural update: append, then retire expired prefix segments
+        let old_end = self.taus.last().copied();
+        let hist = seg.type_counts();
+        for (ty, c) in hist.iter().enumerate() {
+            self.counts1[ty] += c;
+        }
+        if self.segs.is_empty() {
+            self.taus.push(seg.t_begin() - 1);
+        }
+        self.taus.push(seg.t_end());
+        self.segs.push_back(SegEntry { stream: seg, hist });
+
+        let mut segments_retired = 0usize;
+        while self.cfg.window_segments > 0 && self.segs.len() > self.cfg.window_segments {
+            let old = self.segs.pop_front().expect("window cannot be empty here");
+            for (ty, c) in old.hist.iter().enumerate() {
+                self.counts1[ty] -= c;
+            }
+            stats.events_retired += old.stream.len();
+            segments_retired += 1;
+            self.taus.remove(0);
+        }
+        if segments_retired > 0 {
+            // the window's lower boundary is always t_min - 1 of its first
+            // segment: a shared boundary tick between the retired and the
+            // surviving segment must stay *inside* the window
+            self.taus[0] = self.segs.front().unwrap().stream.t_begin() - 1;
+        }
+        stats.segments_retired = segments_retired;
+
+        // -- refresh the cached tuples of every tracked episode
+        let window_len: usize = self.segs.iter().map(|s| s.stream.len()).sum();
+        let mut window_cache: Option<EventStream> = None;
+        let partitions = self.taus.len() - 1;
+        for (ep, state) in self.tracked.iter_mut() {
+            for _ in 0..segments_retired {
+                state.tuples.pop_front();
+            }
+            state.tuples.push_back(vec![]); // the new partition's slot
+            debug_assert_eq!(state.tuples.len(), partitions);
+            let sumh = ep.span_max();
+            for p in 0..partitions {
+                let forward_reaches_new_data =
+                    old_end.map_or(true, |end| self.taus[p + 1] + sumh >= end);
+                let back_reaches_retired_data = segments_retired > 0
+                    && (p == 0 || self.taus[p] - sumh <= self.taus[0]);
+                if forward_reaches_new_data || back_reaches_retired_data {
+                    state.tuples[p] = map_partition(
+                        &self.segs, &self.taus, self.n_types, ep, p, self.cfg.k, &mut stats,
+                    );
+                }
+            }
+            state.count = fold_or_recount(
+                ep,
+                state,
+                &self.segs,
+                self.n_types,
+                self.cfg.k,
+                &mut window_cache,
+                &mut stats,
+            );
+        }
+
+        // -- level-wise cascade, candidate generation gated on frontier
+        //    movement (mirrors session::mine_with_backend exactly: break
+        //    on empty candidates/frontier, explosion guardrail intact)
+        let mut frequent: Vec<CountedEpisode> = vec![];
+        let mut frontier: Vec<Episode> = vec![];
+        let mut active: HashSet<Episode> = HashSet::new();
+        let mut levels_reached = 0usize;
+        for level in 1..=self.cfg.max_level {
+            let cands: Vec<Episode> = if level == 1 {
+                candidates::level1(self.n_types)
+            } else {
+                let idx = level - 2;
+                let cached = self
+                    .cached_levels
+                    .get(idx)
+                    .filter(|c| c.source_frontier == frontier);
+                match cached {
+                    Some(c) => c.cands.clone(),
+                    None => {
+                        stats.candidate_regens += 1;
+                        let cands = candidates::next_level(&frontier, &self.cfg.intervals);
+                        let entry = CachedLevel {
+                            source_frontier: frontier.clone(),
+                            cands: cands.clone(),
+                        };
+                        if idx < self.cached_levels.len() {
+                            self.cached_levels[idx] = entry;
+                        } else {
+                            self.cached_levels.push(entry);
+                        }
+                        cands
+                    }
+                }
+            };
+            if cands.is_empty() {
+                break;
+            }
+            if cands.len() > self.cfg.max_candidates_per_level {
+                return Err(MineError::CandidateExplosion {
+                    level,
+                    candidates: cands.len(),
+                    cap: self.cfg.max_candidates_per_level,
+                });
+            }
+            levels_reached = level;
+
+            let mut counts: Vec<u64> = Vec::with_capacity(cands.len());
+            for ep in &cands {
+                if ep.n() == 1 {
+                    counts.push(self.counts1[ep.types[0] as usize]);
+                    continue;
+                }
+                active.insert(ep.clone());
+                if !self.tracked.contains_key(ep) {
+                    // a brand-new candidate: build its automaton state
+                    // across the whole window once; subsequent commits
+                    // update it incrementally
+                    let mut tuples = VecDeque::with_capacity(partitions);
+                    for p in 0..partitions {
+                        tuples.push_back(map_partition(
+                            &self.segs, &self.taus, self.n_types, ep, p, self.cfg.k, &mut stats,
+                        ));
+                    }
+                    let mut state = Tracked { tuples, count: 0 };
+                    state.count = fold_or_recount(
+                        ep,
+                        &mut state,
+                        &self.segs,
+                        self.n_types,
+                        self.cfg.k,
+                        &mut window_cache,
+                        &mut stats,
+                    );
+                    self.tracked.insert(ep.clone(), state);
+                }
+                counts.push(self.tracked[ep].count);
+            }
+
+            frontier = cands
+                .iter()
+                .zip(&counts)
+                .filter(|(_, &c)| c >= self.cfg.theta)
+                .map(|(e, _)| e.clone())
+                .collect();
+            frequent.extend(
+                cands
+                    .into_iter()
+                    .zip(counts)
+                    .filter(|(_, c)| *c >= self.cfg.theta)
+                    .map(|(episode, count)| CountedEpisode { episode, count }),
+            );
+            if frontier.is_empty() {
+                break;
+            }
+        }
+        // drop caches for levels the cascade no longer reaches, and evict
+        // episodes that are no longer candidates anywhere (bounded memory)
+        self.cached_levels.truncate(levels_reached.saturating_sub(1));
+        self.tracked.retain(|ep, _| active.contains(ep));
+        stats.tracked_episodes = self.tracked.len();
+
+        // -- commit: diff against the previous frequent set and publish
+        let frequent = Arc::new(frequent);
+        let diff = FrequentDiff::between(&self.frequent, &frequent);
+        self.frequent = Arc::clone(&frequent);
+        self.commit_seq += 1;
+        Ok(CommitUpdate {
+            seq: self.commit_seq,
+            window_start: self.taus[0],
+            window_end: *self.taus.last().unwrap(),
+            window_segments: self.segs.len(),
+            window_events: window_len,
+            frequent,
+            diff,
+            stats,
+        })
+    }
+
+    fn validate_segment(&self, seg: &EventStream) -> Result<(), MineError> {
+        if seg.n_types != self.n_types {
+            return Err(MineError::invalid(format!(
+                "segment alphabet has {} types but the miner was built for {}",
+                seg.n_types, self.n_types
+            )));
+        }
+        if seg.is_empty() {
+            return Err(MineError::invalid(
+                "cannot push an empty segment (sealed log segments are never empty)",
+            ));
+        }
+        if let Some(&ty) =
+            seg.types.iter().find(|&&ty| ty < 0 || ty as usize >= self.n_types)
+        {
+            return Err(MineError::OutOfAlphabet { type_id: ty, n_types: self.n_types });
+        }
+        if !seg.times.windows(2).all(|w| w[0] <= w[1]) {
+            return Err(MineError::invalid(
+                "segment must be time-sorted (build it with EventStream::from_pairs)",
+            ));
+        }
+        if let Some(&end) = self.taus.last() {
+            if seg.t_begin() < end {
+                return Err(MineError::invalid(format!(
+                    "segment starts at {} but the window already covers through {} — \
+                     segments must arrive in time order (the ingest log guarantees this)",
+                    seg.t_begin(),
+                    end
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Concatenate the window's events inside `(t_from, t_to]` — the halo
+/// sub-stream a partition's boundary machines scan. Segments are
+/// time-ordered and non-overlapping (shared boundary ticks excepted), so
+/// per-segment binary-searched windows concatenate sorted.
+fn window_slice(
+    segs: &VecDeque<SegEntry>,
+    n_types: usize,
+    t_from: Tick,
+    t_to: Tick,
+) -> EventStream {
+    let mut out = EventStream::new(n_types);
+    for seg in segs {
+        if seg.stream.t_end() <= t_from {
+            continue;
+        }
+        if seg.stream.t_begin() > t_to {
+            break;
+        }
+        let w = seg.stream.window(t_from, t_to);
+        out.types.extend_from_slice(&w.types);
+        out.times.extend_from_slice(&w.times);
+    }
+    out
+}
+
+fn materialize(segs: &VecDeque<SegEntry>, n_types: usize) -> EventStream {
+    let mut out = EventStream::new(n_types);
+    for seg in segs {
+        out.types.extend_from_slice(&seg.stream.types);
+        out.times.extend_from_slice(&seg.stream.times);
+    }
+    out
+}
+
+/// Run the boundary-machine Map for one `(episode, partition)` pair over
+/// the halo sub-stream — `backend/sharded.rs`'s per-shard idiom, scanning
+/// O(partition + 2·halo) events regardless of window size.
+fn map_partition(
+    segs: &VecDeque<SegEntry>,
+    taus: &[Tick],
+    n_types: usize,
+    ep: &Episode,
+    p: usize,
+    k: usize,
+    stats: &mut CommitStats,
+) -> Vec<(Tick, u64, Tick)> {
+    let sumh = ep.span_max();
+    let (lo, hi) = (taus[p], taus[p + 1]);
+    let sub = window_slice(segs, n_types, lo - sumh, hi + sumh);
+    stats.partitions_recomputed += 1;
+    stats.events_rescanned += sub.len();
+    serial::mapcat_map(ep, &sub, &[lo, hi], k).swap_remove(0)
+}
+
+/// Chain the cached tuple columns with the Concatenate fold; on a flagged
+/// miss, restore exactness via the serial reference over the materialized
+/// window (built at most once per commit, shared across episodes).
+fn fold_or_recount(
+    ep: &Episode,
+    state: &mut Tracked,
+    segs: &VecDeque<SegEntry>,
+    n_types: usize,
+    k: usize,
+    window_cache: &mut Option<EventStream>,
+    stats: &mut CommitStats,
+) -> u64 {
+    let (total, misses) = mapconcat::concatenate_fold(state.tuples.make_contiguous());
+    if misses == 0 {
+        return total;
+    }
+    stats.concat_misses += misses;
+    stats.serial_recounts += 1;
+    let window = window_cache.get_or_insert_with(|| materialize(segs, n_types));
+    if k == usize::MAX {
+        serial::count_a1(ep, window)
+    } else {
+        serial::count_a1_bounded(ep, window, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(theta: u64) -> IncrementalConfig {
+        IncrementalConfig::new(theta, vec![Interval::new(0, 6)]).max_level(3)
+    }
+
+    fn seg(pairs: Vec<(i32, Tick)>) -> EventStream {
+        EventStream::from_pairs(pairs, 3)
+    }
+
+    #[test]
+    fn rejects_bad_segments() {
+        let mut m = IncrementalMiner::new(3, cfg(1)).unwrap();
+        assert!(m.push_segment(EventStream::new(3)).is_err(), "empty");
+        assert!(m.push_segment(EventStream::new(2)).is_err(), "alphabet size");
+        let mut bad = EventStream::new(3);
+        bad.types = vec![0, 9];
+        bad.times = vec![1, 2];
+        assert!(matches!(
+            m.push_segment(bad),
+            Err(MineError::OutOfAlphabet { type_id: 9, .. })
+        ));
+        m.push_segment(seg(vec![(0, 10), (1, 12)])).unwrap();
+        // time going backwards across segments is rejected
+        assert!(m.push_segment(seg(vec![(0, 5)])).is_err());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(IncrementalMiner::new(0, cfg(1)).is_err());
+        assert!(IncrementalMiner::new(3, cfg(0)).is_err());
+        assert!(IncrementalMiner::new(3, cfg(1).bounded_k(0)).is_err());
+        assert!(IncrementalMiner::new(3, cfg(1).bounded_k(4)).is_ok());
+    }
+
+    #[test]
+    fn window_slides_and_counts1_track_histograms() {
+        let mut m = IncrementalMiner::new(3, cfg(2).window_segments(2)).unwrap();
+        m.push_segment(seg(vec![(0, 1), (1, 3)])).unwrap();
+        m.push_segment(seg(vec![(0, 11), (2, 13)])).unwrap();
+        let u = m.push_segment(seg(vec![(1, 21), (2, 23)])).unwrap();
+        assert_eq!(u.window_segments, 2);
+        assert_eq!(u.stats.segments_retired, 1);
+        assert_eq!(u.stats.events_retired, 2);
+        // the retired segment's (0,1),(1,3) are gone from level-1 counts
+        assert_eq!(m.counts1, vec![1, 1, 2]);
+        assert_eq!(m.window_bounds(), Some((10, 23)));
+        assert_eq!(m.window_stream().times, vec![11, 13, 21, 23]);
+    }
+
+    #[test]
+    fn candidate_generation_is_gated_on_frontier_movement() {
+        // a steady periodic pattern: after warmup the frontier stops
+        // moving, and commits must stop regenerating candidates
+        let mut m = IncrementalMiner::new(3, cfg(2).window_segments(3)).unwrap();
+        let mut regens_late = 0;
+        for i in 0..8 {
+            let base = 100 * i;
+            let u = m
+                .push_segment(seg(vec![
+                    (0, base + 1),
+                    (1, base + 3),
+                    (0, base + 10),
+                    (1, base + 12),
+                    (2, base + 50),
+                ]))
+                .unwrap();
+            if i >= 4 {
+                regens_late += u.stats.candidate_regens;
+                assert!(u.diff.is_empty(), "steady state must not move: {:?}", u.diff);
+            }
+        }
+        assert_eq!(regens_late, 0, "steady frontier must reuse cached candidates");
+    }
+
+    #[test]
+    fn explosion_guardrail_matches_batch() {
+        let cfg = IncrementalConfig::new(1, vec![Interval::new(0, 6)])
+            .max_level(3)
+            .max_candidates_per_level(2);
+        let mut m = IncrementalMiner::new(3, cfg).unwrap();
+        let err = m.push_segment(seg(vec![(0, 1), (1, 2), (2, 3)])).err().unwrap();
+        assert!(matches!(
+            err,
+            MineError::CandidateExplosion { level: 1, candidates: 3, cap: 2 }
+        ));
+    }
+
+    #[test]
+    fn randomized_counts_match_serial_reference() {
+        // the full equivalence property lives in tests/stream_incremental.rs;
+        // this in-crate smoke pins the count path (fold + miss recount)
+        // against count_a1 over the materialized window at every commit
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(seed);
+            let mut m = IncrementalMiner::new(3, cfg(2).window_segments(3)).unwrap();
+            let mut t = 0;
+            for _ in 0..6 {
+                let mut pairs = vec![];
+                for _ in 0..40 {
+                    t += rng.range_i32(0, 4);
+                    pairs.push((rng.range_i32(0, 2), t));
+                }
+                let update = m.push_segment(seg(pairs)).unwrap();
+                let window = m.window_stream();
+                for c in update.frequent.iter() {
+                    assert_eq!(
+                        c.count,
+                        serial::count_a1(&c.episode, &window),
+                        "seed {seed} episode {}",
+                        c.episode.display()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Incremental sliding-window mining: keep the frequent-episode set of a
+//! *moving* recording window current as segments arrive, at a cost
+//! proportional to what changed — not to the window.
+//!
+//! Everything upstream mines a fixed stream from scratch. This layer
+//! generalizes the paper's map-concatenate decomposition (§5.3) from
+//! *spatial* partitions mined in parallel to *temporal* partitions
+//! arriving over time: each sealed segment is a new partition appended to
+//! the window, and the per-partition automaton tuples the batch miner
+//! would compute for the old partitions are still valid — they only need
+//! recomputing where the new data's halo reaches. Sliding the window is
+//! the same argument run backwards: retire the expired prefix's tuples
+//! and counts, re-anchor the first partition, and fold.
+//!
+//! Three pieces:
+//!
+//! - [`incremental`] — [`IncrementalMiner`]: the engine. Caches per-episode
+//!   per-partition machine tuples, recomputes only halo-dirty partitions on
+//!   each commit, folds with `concatenate_fold`, and re-runs candidate
+//!   generation only when an episode actually crosses the theta boundary.
+//!   The invariant (enforced by `tests/stream_incremental.rs`): after every
+//!   commit the frequent set is *identical* to a cold batch mine of the
+//!   current window.
+//! - [`diff`] — what a commit produced: [`CommitUpdate`] with the new
+//!   frequent set, a [`FrequentDiff`] (entered / left / count-changed)
+//!   against the previous commit, and [`CommitStats`] accounting for how
+//!   much work the commit actually did.
+//! - [`watch`] — [`LogWatcher`]: ties an
+//!   [`ingest::TailReader`](crate::ingest::TailReader) to the miner so a
+//!   live [`SpikeLog`](crate::ingest::SpikeLog) directory becomes a feed
+//!   of commits. `epminer watch` is the CLI face;
+//!   `serve::MineService::publish` pushes commits to subscribers.
+
+pub mod diff;
+pub mod incremental;
+pub mod watch;
+
+pub use diff::{CommitStats, CommitUpdate, CountChange, FrequentDiff};
+pub use incremental::{IncrementalConfig, IncrementalMiner};
+pub use watch::LogWatcher;

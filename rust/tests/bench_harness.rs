@@ -33,6 +33,7 @@ fn registry_covers_every_bench_target() {
         "axis_scaling",
         "serve_load",
         "ingest_replay",
+        "stream_incremental",
     ];
     assert_eq!(SUITES.len(), expected.len());
     for name in expected {

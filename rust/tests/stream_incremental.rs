@@ -1,0 +1,309 @@
+//! The stream/ acceptance criteria: at every commit point the incremental
+//! frequent-episode set (episodes, counts, order) equals a cold batch
+//! re-mine of the exact window the miner holds — across randomized segment
+//! widths, thetas near frequency boundaries, sliding-window sizes, and
+//! bounded-K counting — plus the deterministic subscription-diff behavior
+//! of the serve/ push path (registry caps, bounded buffers, shutdown).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use episodes_gpu::backend::sharded::ShardedBackend;
+use episodes_gpu::coordinator::Strategy;
+use episodes_gpu::episodes::{CountedEpisode, Interval};
+use episodes_gpu::events::EventStream;
+use episodes_gpu::serve::{MineService, ServiceConfig, SubscribeQuery};
+use episodes_gpu::stream::{CommitUpdate, IncrementalConfig, IncrementalMiner};
+use episodes_gpu::util::rng::Rng;
+use episodes_gpu::{MineError, Session};
+
+/// Cold one-pass serial mine of `window` — the exact batch reference the
+/// incremental engine must match commit for commit.
+fn cold_mine(
+    window: &EventStream,
+    theta: u64,
+    iv: Interval,
+    max_level: usize,
+) -> Vec<CountedEpisode> {
+    let mut session = Session::builder()
+        .stream(window.clone())
+        .theta(theta)
+        .interval(iv)
+        .strategy(Strategy::CpuSerial)
+        .one_pass()
+        .max_level(max_level)
+        .build()
+        .unwrap();
+    session.mine().unwrap().frequent
+}
+
+/// The bounded-K batch reference: a sharded engine with K-bounded
+/// occurrence lists (counts equal `serial::count_a1_bounded`), one-pass.
+fn cold_mine_bounded(
+    window: &EventStream,
+    theta: u64,
+    iv: Interval,
+    max_level: usize,
+    k: usize,
+) -> Vec<CountedEpisode> {
+    let mut session = Session::builder()
+        .stream(window.clone())
+        .theta(theta)
+        .interval(iv)
+        .backend(Box::new(ShardedBackend::new(2).with_k(k)))
+        .one_pass()
+        .max_level(max_level)
+        .build()
+        .unwrap();
+    session.mine().unwrap().frequent
+}
+
+/// One random segment: `len` events with 1-4 tick gaps starting after `t`.
+fn random_segment(rng: &mut Rng, t: &mut i32, len: usize, n_types: usize) -> EventStream {
+    let mut pairs = Vec::with_capacity(len);
+    for _ in 0..len {
+        *t += rng.range_i32(1, 4);
+        pairs.push((rng.range_i32(0, n_types as i32 - 1), *t));
+    }
+    EventStream::from_pairs(pairs, n_types)
+}
+
+#[test]
+fn incremental_equals_cold_batch_mine_at_every_commit() {
+    // Randomized sweep: segment widths vary per push (including 1-event
+    // slivers), windows slide across segment boundaries, and theta is
+    // drawn small enough to sit near the frequency boundary of a short
+    // window — the regime where a stale count or a missed retire flips an
+    // episode across theta and diverges the frontier.
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xA11CE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let n_types = 2 + (seed % 3) as usize;
+        let theta = 2 + seed % 3;
+        let window_segments = 2 + (seed % 3) as usize;
+        let iv = Interval::new(0, 4 + (seed % 3) as i32);
+        let cfg = IncrementalConfig::new(theta, vec![iv])
+            .max_level(3)
+            .window_segments(window_segments);
+        let mut miner = IncrementalMiner::new(n_types, cfg).unwrap();
+        let mut t = 0i32;
+        for step in 0..10 {
+            let len = 1 + rng.below(40) as usize;
+            let seg = random_segment(&mut rng, &mut t, len, n_types);
+            let update = miner.push_segment(seg).unwrap();
+            let window = miner.window_stream();
+            let batch = cold_mine(&window, theta, iv, 3);
+            assert_eq!(
+                *update.frequent, batch,
+                "seed {seed} step {step}: incremental commit diverged from \
+                 batch re-mine of ({}, {}]",
+                update.window_start, update.window_end
+            );
+            assert_eq!(update.window_events, window.len(), "seed {seed} step {step}");
+        }
+    }
+}
+
+#[test]
+fn bounded_k_incremental_matches_bounded_k_batch() {
+    // With K-bounded occurrence slots the counts are a different (still
+    // deterministic) semantics — the incremental path must implement
+    // exactly the batch bounded-K semantics, not approximate it.
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(0xB07B5 ^ seed);
+        let n_types = 3;
+        let theta = 2;
+        let k = 1 + (seed % 2) as usize;
+        let iv = Interval::new(0, 5);
+        let cfg = IncrementalConfig::new(theta, vec![iv])
+            .max_level(3)
+            .window_segments(3)
+            .bounded_k(k);
+        let mut miner = IncrementalMiner::new(n_types, cfg).unwrap();
+        let mut t = 0i32;
+        for step in 0..8 {
+            let len = 5 + rng.below(25) as usize;
+            let seg = random_segment(&mut rng, &mut t, len, n_types);
+            let update = miner.push_segment(seg).unwrap();
+            let batch = cold_mine_bounded(&miner.window_stream(), theta, iv, 3, k);
+            assert_eq!(
+                *update.frequent, batch,
+                "seed {seed} step {step} K={k}: bounded-K divergence"
+            );
+        }
+    }
+}
+
+#[test]
+fn diff_stream_replays_to_the_final_frequent_set() {
+    // The push path's contract: applying entered/left/count-changed diffs
+    // in commit order reconstructs each commit's frequent set — that is
+    // what makes pushing diffs instead of full sets sound.
+    let mut rng = Rng::new(0xD1FF);
+    let iv = Interval::new(0, 6);
+    let cfg = IncrementalConfig::new(3, vec![iv]).max_level(2).window_segments(3);
+    let mut miner = IncrementalMiner::new(3, cfg).unwrap();
+    let mut t = 0i32;
+    let mut view: Vec<CountedEpisode> = vec![];
+    for _ in 0..8 {
+        let len = 10 + rng.below(20) as usize;
+        let seg = random_segment(&mut rng, &mut t, len, 3);
+        let update = miner.push_segment(seg).unwrap();
+        // apply the diff to the view: drop left, upsert entered/changed
+        view.retain(|c| !update.diff.left.iter().any(|l| l.episode == c.episode));
+        for e in &update.diff.entered {
+            view.push(e.clone());
+        }
+        for ch in &update.diff.count_changed {
+            let slot = view
+                .iter_mut()
+                .find(|c| c.episode == ch.episode)
+                .expect("count_changed episode must already be in the view");
+            assert_eq!(slot.count, ch.previous, "stale previous count in diff");
+            slot.count = ch.current;
+        }
+        let mut want: Vec<CountedEpisode> = (*update.frequent).clone();
+        let key = |c: &CountedEpisode| format!("{:?}", c.episode);
+        view.sort_by_key(&key);
+        want.sort_by_key(&key);
+        assert_eq!(view, want, "diff replay diverged at commit {}", update.seq);
+    }
+}
+
+// ---- subscription push path (deterministic via the paused pool) ----
+
+fn paused_service(max_subs: usize) -> MineService {
+    MineService::start_paused(ServiceConfig {
+        workers: 1,
+        strategy: Strategy::CpuSerial,
+        max_subscriptions_per_tenant: max_subs,
+        ..ServiceConfig::default()
+    })
+    .unwrap()
+}
+
+/// A real commit sequence to publish: three commits over a 2-segment
+/// window whose diffs are non-trivial (episodes enter, change, leave).
+fn commit_sequence() -> Vec<CommitUpdate> {
+    let iv = Interval::new(0, 6);
+    let cfg = IncrementalConfig::new(2, vec![iv]).max_level(2).window_segments(2);
+    let mut miner = IncrementalMiner::new(2, cfg).unwrap();
+    let segs = [
+        vec![(0, 1), (1, 3), (0, 5), (1, 7)],
+        vec![(0, 11), (1, 13), (0, 15), (1, 17)],
+        vec![(0, 21), (0, 23), (0, 25), (0, 27)],
+    ];
+    segs.iter()
+        .map(|pairs| miner.push_segment(EventStream::from_pairs(pairs.clone(), 2)).unwrap())
+        .collect()
+}
+
+#[test]
+fn subscribers_receive_every_commit_in_order_as_diffs() {
+    let service = paused_service(4);
+    let sub = service.subscribe(SubscribeQuery::new("tenant-a", "live")).unwrap();
+    let other_topic = service.subscribe(SubscribeQuery::new("tenant-a", "other")).unwrap();
+    let updates = commit_sequence();
+    for u in &updates {
+        let delivered = service.publish("live", u.clone());
+        assert_eq!(delivered, 1, "exactly the matching-topic subscriber");
+    }
+    for want in &updates {
+        let got = sub.recv_timeout(Duration::from_secs(5)).expect("pushed commit");
+        assert_eq!(got.seq, want.seq, "commits arrive in publish order");
+        assert_eq!(got.frequent, want.frequent);
+        assert_eq!(got.diff.entered, want.diff.entered);
+        assert_eq!(got.diff.left, want.diff.left);
+        assert_eq!(got.diff.count_changed, want.diff.count_changed);
+    }
+    assert!(sub.try_recv().is_none(), "no phantom commits");
+    assert!(other_topic.try_recv().is_none(), "topics are isolated");
+    let m = service.metrics();
+    assert_eq!(m.subscriptions_active, 2);
+    assert_eq!(m.updates_published, updates.len() as u64);
+    assert_eq!(m.updates_dropped, 0);
+    service.resume();
+    service.shutdown();
+    assert!(sub.is_closed(), "shutdown closes subscriptions");
+    assert!(sub.recv_timeout(Duration::from_millis(10)).is_none());
+}
+
+#[test]
+fn per_tenant_subscription_cap_is_enforced_and_freed_on_drop() {
+    let service = paused_service(2);
+    let s1 = service.subscribe(SubscribeQuery::new("t", "live")).unwrap();
+    let _s2 = service.subscribe(SubscribeQuery::new("t", "live")).unwrap();
+    let err = service.subscribe(SubscribeQuery::new("t", "live")).err().unwrap();
+    assert!(
+        matches!(err, MineError::Busy { queue_depth: 2, capacity: 2 }),
+        "cap exceeded must be typed Busy: {err}"
+    );
+    // other tenants are unaffected by t's cap
+    let _other = service.subscribe(SubscribeQuery::new("u", "live")).unwrap();
+    // dropping a subscription frees its slot
+    drop(s1);
+    let _s3 = service.subscribe(SubscribeQuery::new("t", "live")).unwrap();
+    let m = service.metrics();
+    assert_eq!(m.subscriptions_rejected, 1);
+    assert_eq!(m.subscriptions_active, 3);
+    service.resume();
+    service.shutdown();
+}
+
+#[test]
+fn slow_subscriber_buffer_drops_oldest_keeps_newest() {
+    let service = paused_service(4);
+    let sub = service
+        .subscribe(SubscribeQuery::new("slow", "live").buffer(1))
+        .unwrap();
+    let updates = commit_sequence();
+    for u in &updates {
+        service.publish("live", u.clone());
+    }
+    assert_eq!(sub.backlog(), 1, "buffer of 1 holds only the newest commit");
+    let got = sub.try_recv().expect("newest commit retained");
+    assert_eq!(got.seq, updates.last().unwrap().seq);
+    assert!(sub.try_recv().is_none());
+    let m = service.metrics();
+    assert_eq!(m.updates_dropped, (updates.len() - 1) as u64);
+    service.resume();
+    service.shutdown();
+}
+
+#[test]
+fn loadgen_live_feed_publishes_and_subscribers_drain() {
+    // End to end through the load generator: publisher thread drives the
+    // incremental miner over the sliding partitions, subscriber threads
+    // drain the pushed commits while query load runs.
+    use episodes_gpu::serve::loadgen::{self, LoadGenConfig, Workload};
+    let cfg = LoadGenConfig {
+        clients: 2,
+        requests_per_client: 4,
+        base_events: 1_500,
+        distinct_pool: 4,
+        distinct_events: 300,
+        window_ticks: 700,
+        max_level: 3,
+        subscribers: 2,
+        ..LoadGenConfig::default()
+    };
+    let workload = Workload::build(&cfg).unwrap();
+    let service = MineService::start(ServiceConfig {
+        workers: 2,
+        strategy: Strategy::CpuSerial,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let report = loadgen::run(&service, &workload, &cfg);
+    service.shutdown();
+    assert_eq!(report.updates_published, workload.sliding.len() as u64);
+    // both subscribers were registered before the publisher started and
+    // drain until the feed ends: nothing may be lost short of buffer
+    // drops, and these buffers (64) far exceed the commit count
+    assert_eq!(report.updates_received, 2 * report.updates_published);
+    assert_eq!(report.errors, 0);
+    let json = report.to_json();
+    assert!(
+        json.contains("\"updates_published\":") && json.contains("\"updates_received\":"),
+        "{json}"
+    );
+}
