@@ -8,9 +8,10 @@
 //! Every gap's interval is drawn from the run's constraint set `I`
 //! (paper Problem 1); |I| = 1 in all of the paper's experiments.
 
-use std::collections::HashSet;
+use std::collections::HashMap;
 
 use super::{Episode, Interval};
+use crate::error::MineError;
 use crate::events::EventType;
 
 /// Level-1 candidates: one single-node episode per event type.
@@ -44,7 +45,10 @@ pub fn join(frequent: &[Episode]) -> Vec<Episode> {
     }
     let n = frequent[0].n();
     debug_assert!(frequent.iter().all(|e| e.n() == n));
-    let set: HashSet<(&[EventType], &[Interval])> =
+    // The prune set only backs the debug_assert below; release builds
+    // must not pay an O(F) hash-set build per level for it.
+    #[cfg(debug_assertions)]
+    let set: std::collections::HashSet<(&[EventType], &[Interval])> =
         frequent.iter().map(|e| (e.types.as_slice(), e.intervals.as_slice())).collect();
     let mut out = vec![];
     for a in frequent {
@@ -58,6 +62,7 @@ pub fn join(frequent: &[Episode]) -> Vec<Episode> {
                 // anti-monotone prune: the head-dropped sub-episode is b,
                 // the tail-dropped one is a — both frequent by construction.
                 // (kept explicit for clarity with |I| > 1 interval sets)
+                #[cfg(debug_assertions)]
                 debug_assert!(set.contains(&(b.types.as_slice(), b.intervals.as_slice())));
                 out.push(Episode::new(types, intervals));
             }
@@ -78,8 +83,94 @@ pub fn next_level(frequent: &[Episode], i_set: &[Interval]) -> Vec<Episode> {
     }
 }
 
+/// [`level2`] with the candidate-cap guardrail enforced *before*
+/// materialization: the full cross is exactly `|F1|² · |I|` candidates, so
+/// a too-low theta on a wide alphabet fails fast with the typed
+/// [`MineError::CandidateExplosion`] instead of OOMing first.
+pub fn level2_capped(
+    frequent1: &[Episode],
+    i_set: &[Interval],
+    cap: usize,
+) -> Result<Vec<Episode>, MineError> {
+    let candidates = frequent1
+        .len()
+        .saturating_mul(frequent1.len())
+        .saturating_mul(i_set.len());
+    if candidates > cap {
+        return Err(MineError::CandidateExplosion { level: 2, candidates, cap });
+    }
+    Ok(level2(frequent1, i_set))
+}
+
+/// Bucketed suffix-prefix join with the candidate cap enforced before
+/// materialization. Frequent episodes are hashed by their (N-1)-node
+/// prefix key; each episode's suffix key probes the bucket map, so the
+/// exact output size is the sum of probed bucket sizes — known in
+/// O(F) before a single candidate `Vec` is allocated. Generation then
+/// walks the same buckets, emitting exactly [`join`]'s candidates in
+/// exactly [`join`]'s order (a in input order, matching b in input
+/// order) in O(F + output) instead of O(F²).
+pub fn join_capped(frequent: &[Episode], cap: usize) -> Result<Vec<Episode>, MineError> {
+    if frequent.is_empty() {
+        return Ok(vec![]);
+    }
+    let n = frequent[0].n();
+    debug_assert!(frequent.iter().all(|e| e.n() == n));
+    let mut buckets: HashMap<(&[EventType], &[Interval]), Vec<u32>> = HashMap::new();
+    for (bi, b) in frequent.iter().enumerate() {
+        buckets
+            .entry((&b.types[..n - 1], &b.intervals[..n - 2]))
+            .or_default()
+            .push(bi as u32);
+    }
+    let mut candidates = 0usize;
+    for a in frequent {
+        if let Some(bs) = buckets.get(&(&a.types[1..], &a.intervals[1..])) {
+            candidates += bs.len();
+        }
+    }
+    if candidates > cap {
+        return Err(MineError::CandidateExplosion { level: n + 1, candidates, cap });
+    }
+    let mut out = Vec::with_capacity(candidates);
+    for a in frequent {
+        if let Some(bs) = buckets.get(&(&a.types[1..], &a.intervals[1..])) {
+            for &bi in bs {
+                let b = &frequent[bi as usize];
+                let mut types = a.types.clone();
+                types.push(b.types[n - 1]);
+                let mut intervals = a.intervals.clone();
+                intervals.push(*b.intervals.last().unwrap());
+                out.push(Episode::new(types, intervals));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// [`next_level`] with the candidate cap enforced inside generation:
+/// same episodes in the same order, but the typed
+/// [`MineError::CandidateExplosion`] (with the exact would-be candidate
+/// count) is returned *before* the output is materialized.
+pub fn next_level_capped(
+    frequent: &[Episode],
+    i_set: &[Interval],
+    cap: usize,
+) -> Result<Vec<Episode>, MineError> {
+    if frequent.is_empty() {
+        return Ok(vec![]);
+    }
+    if frequent[0].n() == 1 {
+        level2_capped(frequent, i_set, cap)
+    } else {
+        join_capped(frequent, cap)
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use std::collections::HashSet;
+
     use super::*;
 
     fn iv() -> Interval {
@@ -129,6 +220,49 @@ mod tests {
         assert_eq!(c.len(), 1);
         assert_eq!(c[0].types, vec![0, 1, 2]);
         assert_eq!(c[0].intervals, vec![Interval::new(0, 10), Interval::new(5, 20)]);
+    }
+
+    #[test]
+    fn capped_level2_reports_exact_size_before_materializing() {
+        let l1 = level1(3);
+        let ivs = [iv(), Interval::new(5, 20)];
+        match level2_capped(&l1, &ivs, 17) {
+            Err(MineError::CandidateExplosion { level, candidates, cap }) => {
+                assert_eq!((level, candidates, cap), (2, 18, 17));
+            }
+            other => panic!("expected explosion, got {other:?}"),
+        }
+        assert_eq!(level2_capped(&l1, &ivs, 18).unwrap(), level2(&l1, &ivs));
+    }
+
+    #[test]
+    fn bucketed_join_matches_quadratic_join_exactly() {
+        // a mixed frequent set (some pairs missing, two interval choices)
+        // must join identically — content *and* order
+        let i1 = Interval::new(0, 10);
+        let i2 = Interval::new(5, 20);
+        let mut f = vec![];
+        for a in 0..4 {
+            for b in 0..4 {
+                for &g in &[i1, i2] {
+                    if (a + 2 * b + g.t_low) % 3 != 0 {
+                        f.push(Episode::new(vec![a, b], vec![g]));
+                    }
+                }
+            }
+        }
+        let legacy = join(&f);
+        assert!(!legacy.is_empty());
+        let bucketed = join_capped(&f, usize::MAX).unwrap();
+        assert_eq!(bucketed, legacy);
+        // the cap fires with the exact would-be size, before generation
+        let err = join_capped(&f, legacy.len() - 1).unwrap_err();
+        match err {
+            MineError::CandidateExplosion { level, candidates, cap } => {
+                assert_eq!((level, candidates, cap), (3, legacy.len(), legacy.len() - 1));
+            }
+            other => panic!("expected explosion, got {other:?}"),
+        }
     }
 
     #[test]

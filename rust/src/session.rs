@@ -102,7 +102,13 @@ pub fn mine_with_backend(
         let cands = if level == 1 {
             candidates::level1(stream.n_types)
         } else {
-            candidates::next_level(&frontier, &opts.intervals)
+            // the cap is enforced inside generation (fail fast, before the
+            // candidate Vec is materialized)
+            candidates::next_level_capped(
+                &frontier,
+                &opts.intervals,
+                opts.max_candidates_per_level,
+            )?
         };
         let gen_seconds = t_gen.elapsed().as_secs_f64();
         if cands.is_empty() {

@@ -297,7 +297,13 @@ impl IncrementalMiner {
                     Some(c) => c.cands.clone(),
                     None => {
                         stats.candidate_regens += 1;
-                        let cands = candidates::next_level(&frontier, &self.cfg.intervals);
+                        // cap enforced inside generation: fail fast before
+                        // the candidate Vec is materialized
+                        let cands = candidates::next_level_capped(
+                            &frontier,
+                            &self.cfg.intervals,
+                            self.cfg.max_candidates_per_level,
+                        )?;
                         let entry = CachedLevel {
                             source_frontier: frontier.clone(),
                             cands: cands.clone(),
