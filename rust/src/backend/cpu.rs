@@ -3,7 +3,7 @@
 //! episode sizes natively (no per-size grouping needed) and never fail —
 //! they are the floor every other backend falls back to.
 
-use crate::backend::{CountBackend, CountReport};
+use crate::backend::{CountBackend, CountReport, EpisodeBatch};
 use crate::episodes::Episode;
 use crate::error::MineError;
 use crate::events::EventStream;
@@ -50,6 +50,24 @@ impl CountBackend for CpuSerialBackend {
             episodes.iter().map(|e| serial::count_a2(e, stream)).collect(),
         );
         report.metrics.episodes_counted = episodes.len() as u64;
+        Ok(report)
+    }
+
+    fn count_batch(
+        &mut self,
+        batch: &EpisodeBatch<'_>,
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        // Walk the arena view with one reusable scratch episode instead
+        // of materializing the whole block.
+        let mut scratch = Episode { types: vec![], intervals: vec![] };
+        let mut counts = Vec::with_capacity(batch.len());
+        for i in 0..batch.len() {
+            batch.materialize_into(i, &mut scratch);
+            counts.push(serial::count_a1(&scratch, stream));
+        }
+        let mut report = CountReport::from_counts(counts);
+        report.metrics.episodes_counted = batch.len() as u64;
         Ok(report)
     }
 }

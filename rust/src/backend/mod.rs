@@ -32,6 +32,7 @@ pub mod two_pass;
 use std::rc::Rc;
 
 use crate::coordinator::{Metrics, Strategy};
+use crate::episodes::arena::{CandidateChunk, EpisodeArena};
 use crate::episodes::Episode;
 use crate::error::MineError;
 use crate::events::EventStream;
@@ -57,6 +58,57 @@ impl CountReport {
     /// A plain one-pass report carrying only counts.
     pub fn from_counts(counts: Vec<u64>) -> CountReport {
         CountReport { counts, culled: 0, metrics: Metrics::default() }
+    }
+}
+
+/// One bounded block of arena-generated candidates, presented to
+/// backends without forcing per-episode materialization: rows live in
+/// the chunk's SoA columns, and
+/// [`EpisodeBatch::materialize_into`] walks the arena's parent links
+/// into a caller-owned scratch episode on demand. All rows share one
+/// episode size ([`EpisodeBatch::n`]) — arena levels are uniform, which
+/// is exactly the per-size dispatch unit accelerator backends want.
+pub struct EpisodeBatch<'a> {
+    arena: &'a EpisodeArena,
+    chunk: &'a CandidateChunk,
+}
+
+impl<'a> EpisodeBatch<'a> {
+    /// View a chunk generated against `arena`'s current top block (i.e.
+    /// inside the [`EpisodeArena::generate_next`] sink, before the next
+    /// level's block is pushed).
+    pub fn new(arena: &'a EpisodeArena, chunk: &'a CandidateChunk) -> EpisodeBatch<'a> {
+        EpisodeBatch { arena, chunk }
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunk.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunk.is_empty()
+    }
+
+    /// The episode size shared by every row in the batch.
+    pub fn n(&self) -> usize {
+        self.arena.num_levels() + 1
+    }
+
+    /// Materialize row `i` into a reusable scratch episode.
+    pub fn materialize_into(&self, i: usize, ep: &mut Episode) {
+        self.arena.materialize_chunk_row(self.chunk, i, ep);
+    }
+
+    /// Materialize the whole batch — the default-path bridge for engines
+    /// that count `&[Episode]` slices.
+    pub fn to_episodes(&self) -> Vec<Episode> {
+        let mut scratch = Episode { types: vec![], intervals: vec![] };
+        (0..self.len())
+            .map(|i| {
+                self.materialize_into(i, &mut scratch);
+                scratch.clone()
+            })
+            .collect()
     }
 }
 
@@ -89,6 +141,19 @@ pub trait CountBackend {
         stream: &EventStream,
     ) -> Result<CountReport, MineError> {
         self.count(episodes, stream)
+    }
+
+    /// Count one arena-generated candidate block. The default
+    /// materializes the block and defers to [`CountBackend::count`] —
+    /// correct for every engine; engines that can walk the SoA view with
+    /// a scratch episode (see `cpu::CpuSerialBackend`) override this to
+    /// skip the per-episode allocation entirely.
+    fn count_batch(
+        &mut self,
+        batch: &EpisodeBatch<'_>,
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        self.count(&batch.to_episodes(), stream)
     }
 }
 

@@ -81,6 +81,7 @@ pub(crate) fn level_candidate_sets(
         intervals: intervals.to_vec(),
         max_level,
         max_candidates_per_level: 2_000_000,
+        candidate_block: crate::session::DEFAULT_CANDIDATE_BLOCK,
     };
     let mut metrics = Metrics::default();
     let result = mine_with_backend(engine, stream, &opts, &mut metrics)?;

@@ -59,6 +59,7 @@ impl MineConfig {
             intervals: self.intervals.clone(),
             max_level: self.max_level,
             max_candidates_per_level: self.max_candidates_per_level,
+            candidate_block: crate::session::DEFAULT_CANDIDATE_BLOCK,
         }
     }
 }

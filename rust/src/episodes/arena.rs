@@ -1,0 +1,518 @@
+//! Flat structure-of-arrays episode lattice: the arena-backed candidate
+//! engine behind `session::mine_with_backend`.
+//!
+//! Level-wise generation used to materialize every candidate as an owned
+//! [`Episode`] — two heap `Vec`s per candidate — and join frequent sets
+//! with an O(F²) scan. At realistic multi-electrode-array scales (10³–10⁴
+//! types) level 2 alone is 10⁶–10⁸ candidates, so the representation, not
+//! counting, becomes the bottleneck (ROADMAP item 5; the BFS-extension
+//! idiom of the Pangolin/GPU graph-mining exemplars). The arena stores
+//! the whole lattice as parallel columns instead:
+//!
+//! ```text
+//! blocks[0] (1-node)  last_type: [t0 t1 t2 ...]              (links unused)
+//! blocks[1] (2-node)  last_type | last_iv | parent | suffix
+//! blocks[2] (3-node)  last_type | last_iv | parent | suffix
+//!      ...                 parent/suffix are rows in blocks[k-1]
+//! ```
+//!
+//! A stored episode is one row: its last node type, the interned id of
+//! its last gap interval ([`EpisodeArena::intervals`] is the run's
+//! constraint set `I`), a `parent` link to the row holding its
+//! tail-dropped prefix, and a `suffix` link to the row holding its
+//! head-dropped suffix — [`ROW_BYTES`] bytes, no per-episode allocation.
+//! Full episodes are materialized only on demand by walking parent links.
+//!
+//! The dual links turn the suffix-prefix join into integer bucketing.
+//! For same-size episodes `a`, `b` stored in the top block, the join
+//! condition "a's last N-1 nodes equal b's first N-1 nodes (types *and*
+//! gaps)" is exactly `suffix(a) == parent(b)`: both links point into the
+//! previous block, blocks hold no duplicate episodes (by induction from
+//! the duplicate-free singles), so row equality is episode equality.
+//! Bucketing frontier rows by `parent` value and probing with `suffix`
+//! values is a counting sort — O(F + output), no hashing, and the exact
+//! output size is known *before* anything is emitted
+//! ([`EpisodeArena::next_level_count`]), which is what lets the mining
+//! loop fail fast on `max_candidates_per_level` during generation.
+//!
+//! Generation streams candidates in bounded [`CandidateChunk`] blocks
+//! (the `candidate_block` knob) so peak memory for a level is O(block +
+//! frequent) rather than O(candidates). Chunk emission order is exactly
+//! the legacy generator's order: `a` in frontier order, matching `b` in
+//! frontier order, interval innermost at level 2 — so results and
+//! reports are byte-identical to the pre-arena engine.
+
+use super::{Episode, Interval};
+use crate::error::MineError;
+use crate::events::{EventStream, EventType};
+
+/// Flat storage cost of one stored candidate row: `last_type` (4) +
+/// `last_iv` (2) + `parent` (4) + `suffix` (4) bytes.
+pub const ROW_BYTES: usize = std::mem::size_of::<EventType>()
+    + std::mem::size_of::<u16>()
+    + 2 * std::mem::size_of::<u32>();
+
+/// Link value used in the singles block, which has no previous level.
+pub const NO_LINK: u32 = u32::MAX;
+
+/// One lattice level: parallel columns, one row per stored episode.
+/// Rows in `blocks[k]` are (k+1)-node episodes; `parent`/`suffix` index
+/// `blocks[k-1]`.
+#[derive(Clone, Debug, Default)]
+pub struct LevelBlock {
+    /// type of the episode's last node
+    pub last_type: Vec<EventType>,
+    /// interned id (into the arena's constraint set) of the last gap;
+    /// 0 and meaningless in the singles block
+    pub last_iv: Vec<u16>,
+    /// row of the tail-dropped prefix in the previous block
+    pub parent: Vec<u32>,
+    /// row of the head-dropped suffix in the previous block
+    pub suffix: Vec<u32>,
+}
+
+impl LevelBlock {
+    pub fn len(&self) -> usize {
+        self.last_type.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.last_type.is_empty()
+    }
+
+    pub fn push(&mut self, last_type: EventType, last_iv: u16, parent: u32, suffix: u32) {
+        self.last_type.push(last_type);
+        self.last_iv.push(last_iv);
+        self.parent.push(parent);
+        self.suffix.push(suffix);
+    }
+
+    /// Append every row of a generated chunk (the incremental miner
+    /// stores full candidate blocks; the batch loop appends survivors
+    /// row by row instead).
+    pub fn extend_from_chunk(&mut self, chunk: &CandidateChunk) {
+        self.last_type.extend_from_slice(&chunk.last_type);
+        self.last_iv.extend_from_slice(&chunk.last_iv);
+        self.parent.extend_from_slice(&chunk.parent);
+        self.suffix.extend_from_slice(&chunk.suffix);
+    }
+}
+
+/// A bounded block of generated candidates: SoA columns parallel by row,
+/// `parent`/`suffix` indexing the arena's *top* block at generation time.
+/// One buffer is reused across sink calls — copy out what must survive.
+#[derive(Clone, Debug, Default)]
+pub struct CandidateChunk {
+    pub last_type: Vec<EventType>,
+    pub last_iv: Vec<u16>,
+    pub parent: Vec<u32>,
+    pub suffix: Vec<u32>,
+}
+
+impl CandidateChunk {
+    pub fn len(&self) -> usize {
+        self.last_type.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.last_type.is_empty()
+    }
+
+    fn clear(&mut self) {
+        self.last_type.clear();
+        self.last_iv.clear();
+        self.parent.clear();
+        self.suffix.clear();
+    }
+
+    fn push(&mut self, last_type: EventType, last_iv: u16, parent: u32, suffix: u32) {
+        self.last_type.push(last_type);
+        self.last_iv.push(last_iv);
+        self.parent.push(parent);
+        self.suffix.push(suffix);
+    }
+}
+
+/// The episode lattice: the run's interned interval constraint set plus
+/// one [`LevelBlock`] per stored level. See the module docs for layout
+/// and join semantics.
+#[derive(Clone, Debug)]
+pub struct EpisodeArena {
+    intervals: Vec<Interval>,
+    blocks: Vec<LevelBlock>,
+}
+
+impl EpisodeArena {
+    /// New arena for one mining run. `i_set` is interned once; every
+    /// stored gap is a `u16` id into it (an alphabet of interval
+    /// constraints wider than `u16` is not a realistic configuration and
+    /// is rejected by assertion).
+    pub fn new(i_set: &[Interval]) -> EpisodeArena {
+        assert!(
+            i_set.len() <= u16::MAX as usize,
+            "interval constraint set too large to intern ({} > {})",
+            i_set.len(),
+            u16::MAX
+        );
+        EpisodeArena { intervals: i_set.to_vec(), blocks: vec![] }
+    }
+
+    /// The interned constraint set, in id order.
+    pub fn intervals(&self) -> &[Interval] {
+        &self.intervals
+    }
+
+    /// Number of stored levels (episodes of size 1..=num_levels).
+    pub fn num_levels(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn block(&self, level_block: usize) -> &LevelBlock {
+        &self.blocks[level_block]
+    }
+
+    pub fn block_len(&self, level_block: usize) -> usize {
+        self.blocks.get(level_block).map_or(0, LevelBlock::len)
+    }
+
+    /// Install the singles block (must be the first block pushed). Order
+    /// matters: every later level's emission order follows it.
+    pub fn push_singles(&mut self, types: impl IntoIterator<Item = EventType>) {
+        assert!(self.blocks.is_empty(), "singles must be the first block");
+        let mut block = LevelBlock::default();
+        for ty in types {
+            block.push(ty, 0, NO_LINK, NO_LINK);
+        }
+        self.blocks.push(block);
+    }
+
+    /// Append the next level's block. Rows' `parent`/`suffix` must index
+    /// the current top block (i.e. come from [`EpisodeArena::generate_next`]
+    /// chunks emitted against it).
+    pub fn push_block(&mut self, block: LevelBlock) {
+        assert!(!self.blocks.is_empty(), "push_singles first");
+        self.blocks.push(block);
+    }
+
+    /// Drop every block above `keep` levels (the incremental miner's
+    /// cascade invalidation: refs into a rebuilt block are meaningless,
+    /// so a regen at level L discards everything deeper).
+    pub fn truncate_blocks(&mut self, keep: usize) {
+        self.blocks.truncate(keep);
+    }
+
+    /// Exact number of candidates the next generation step will emit
+    /// from `frontier` (rows of the top block) — O(frontier), computed
+    /// before anything is materialized. Level 2 is the full cross
+    /// `|frontier|² · |I|`; deeper levels sum the join buckets.
+    pub fn next_level_count(&self, frontier: &[u32]) -> usize {
+        let top = self.blocks.len().checked_sub(1).expect("push_singles first");
+        if top == 0 {
+            return frontier
+                .len()
+                .saturating_mul(frontier.len())
+                .saturating_mul(self.intervals.len());
+        }
+        let blk = &self.blocks[top];
+        let mut bucket_sizes = vec![0usize; self.blocks[top - 1].len()];
+        for &b in frontier {
+            bucket_sizes[blk.parent[b as usize] as usize] += 1;
+        }
+        frontier
+            .iter()
+            .map(|&a| bucket_sizes[blk.suffix[a as usize] as usize])
+            .sum()
+    }
+
+    /// Stream the next level's candidates in chunks of at most
+    /// `block_size` rows. `frontier` holds the frequent rows of the top
+    /// block, in the order counting saw them; emitted `parent`/`suffix`
+    /// links index that same block. Emission order matches the legacy
+    /// generator exactly (see module docs). The chunk buffer is reused
+    /// between sink calls.
+    pub fn generate_next<F>(
+        &self,
+        frontier: &[u32],
+        block_size: usize,
+        mut sink: F,
+    ) -> Result<(), MineError>
+    where
+        F: FnMut(&CandidateChunk) -> Result<(), MineError>,
+    {
+        let top = self.blocks.len().checked_sub(1).expect("push_singles first");
+        let block_size = block_size.max(1);
+        let mut chunk = CandidateChunk::default();
+        let blk = &self.blocks[top];
+        if top == 0 {
+            // level 2: full cross product × interval set (legacy order:
+            // a-major, then b, interval innermost)
+            for &a in frontier {
+                for &b in frontier {
+                    for iv in 0..self.intervals.len() as u16 {
+                        chunk.push(blk.last_type[b as usize], iv, a, b);
+                        if chunk.len() >= block_size {
+                            sink(&chunk)?;
+                            chunk.clear();
+                        }
+                    }
+                }
+            }
+        } else {
+            // deeper levels: counting-sort frontier rows into buckets by
+            // parent link, probe each row's suffix link. Within a bucket
+            // rows keep frontier order, so emission order matches the
+            // legacy quadratic join (a-major, b in frontier order).
+            let domain = self.blocks[top - 1].len();
+            let mut start = vec![0u32; domain + 1];
+            for &b in frontier {
+                start[blk.parent[b as usize] as usize + 1] += 1;
+            }
+            for i in 0..domain {
+                start[i + 1] += start[i];
+            }
+            let mut bucketed = vec![0u32; frontier.len()];
+            let mut cursor = start.clone();
+            for &b in frontier {
+                let p = blk.parent[b as usize] as usize;
+                bucketed[cursor[p] as usize] = b;
+                cursor[p] += 1;
+            }
+            for &a in frontier {
+                let s = blk.suffix[a as usize] as usize;
+                for &b in &bucketed[start[s] as usize..cursor[s] as usize] {
+                    chunk.push(blk.last_type[b as usize], blk.last_iv[b as usize], a, b);
+                    if chunk.len() >= block_size {
+                        sink(&chunk)?;
+                        chunk.clear();
+                    }
+                }
+            }
+        }
+        if !chunk.is_empty() {
+            sink(&chunk)?;
+        }
+        Ok(())
+    }
+
+    /// Materialize a stored row into a reusable scratch episode (types
+    /// and gaps in episode order) by walking parent links.
+    pub fn materialize_into(&self, level_block: usize, row: usize, ep: &mut Episode) {
+        ep.types.clear();
+        ep.intervals.clear();
+        self.extend_with_chain(level_block, row, ep);
+        ep.types.reverse();
+        ep.intervals.reverse();
+    }
+
+    /// Materialize a stored row as an owned [`Episode`].
+    pub fn episode(&self, level_block: usize, row: usize) -> Episode {
+        let mut ep = Episode { types: vec![], intervals: vec![] };
+        self.materialize_into(level_block, row, &mut ep);
+        ep
+    }
+
+    /// Materialize row `i` of a chunk generated from the *current* top
+    /// block (its links index that block — call before pushing the next
+    /// level's block).
+    pub fn materialize_chunk_row(&self, chunk: &CandidateChunk, i: usize, ep: &mut Episode) {
+        ep.types.clear();
+        ep.intervals.clear();
+        ep.types.push(chunk.last_type[i]);
+        ep.intervals.push(self.intervals[chunk.last_iv[i] as usize]);
+        self.extend_with_chain(self.blocks.len() - 1, chunk.parent[i] as usize, ep);
+        ep.types.reverse();
+        ep.intervals.reverse();
+    }
+
+    /// Append the chain ending at (`level_block`, `row`) in *reverse*
+    /// episode order; callers reverse once at the end.
+    fn extend_with_chain(&self, level_block: usize, row: usize, ep: &mut Episode) {
+        let mut b = level_block;
+        let mut r = row;
+        loop {
+            let blk = &self.blocks[b];
+            ep.types.push(blk.last_type[r]);
+            if b == 0 {
+                break;
+            }
+            ep.intervals.push(self.intervals[blk.last_iv[r] as usize]);
+            r = blk.parent[r] as usize;
+            b -= 1;
+        }
+    }
+}
+
+/// Frequency-sorted alphabet remapping: a bijective relabeling where
+/// dense id = rank by descending level-1 count (ties broken by ascending
+/// original id), so counting and pruning at levels ≥ 2 walk the densest
+/// types in the smallest id range (cache-friendly, and the natural order
+/// for device-side type tables). Relabeling never changes a count — only
+/// type *equality* and event times matter to the automata — and reports
+/// invert the map, so results are expressed in original ids end to end.
+#[derive(Clone, Debug)]
+pub struct AlphabetRemap {
+    dense_of: Vec<EventType>,
+    orig_of: Vec<EventType>,
+}
+
+impl AlphabetRemap {
+    /// Build from per-type level-1 counts (index = original type id).
+    pub fn from_counts(counts: &[u64]) -> AlphabetRemap {
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+        let mut dense_of = vec![0; counts.len()];
+        let orig_of: Vec<EventType> = order.iter().map(|&o| o as EventType).collect();
+        for (dense, &orig) in order.iter().enumerate() {
+            dense_of[orig] = dense as EventType;
+        }
+        AlphabetRemap { dense_of, orig_of }
+    }
+
+    /// The identity relabeling (used where remapping is disabled).
+    pub fn identity(n_types: usize) -> AlphabetRemap {
+        let ids: Vec<EventType> = (0..n_types as EventType).collect();
+        AlphabetRemap { dense_of: ids.clone(), orig_of: ids }
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.dense_of.len()
+    }
+
+    /// original id → dense id
+    pub fn dense(&self, orig: EventType) -> EventType {
+        self.dense_of[orig as usize]
+    }
+
+    /// dense id → original id
+    pub fn orig(&self, dense: EventType) -> EventType {
+        self.orig_of[dense as usize]
+    }
+
+    /// A relabeled clone of the stream: same times, same alphabet size,
+    /// every event type mapped to its dense id.
+    pub fn apply(&self, stream: &EventStream) -> EventStream {
+        let mut out = EventStream::new(stream.n_types);
+        out.types = stream.types.iter().map(|&t| self.dense_of[t as usize]).collect();
+        out.times = stream.times.clone();
+        out
+    }
+
+    /// Rewrite a dense-id episode back into original ids (in place).
+    pub fn invert_episode(&self, ep: &mut Episode) {
+        for t in &mut ep.types {
+            *t = self.orig_of[*t as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::episodes::candidates;
+
+    fn ivs() -> Vec<Interval> {
+        vec![Interval::new(0, 10), Interval::new(5, 20)]
+    }
+
+    /// Drive the arena and the legacy generator side by side for a few
+    /// levels, pruning the same survivor subset at each level, and
+    /// assert episode-for-episode (order included) equality.
+    #[test]
+    fn arena_generation_matches_legacy_level_by_level() {
+        let i_set = ivs();
+        let n_types = 5;
+        let mut arena = EpisodeArena::new(&i_set);
+        arena.push_singles(0..n_types as EventType);
+        let mut legacy_frontier = candidates::level1(n_types);
+
+        for level in 2..=5 {
+            let legacy_cands = candidates::next_level(&legacy_frontier, &i_set);
+            let top = arena.num_levels() - 1;
+            let frontier: Vec<u32> = (0..arena.block_len(top) as u32).collect();
+            assert_eq!(arena.next_level_count(&frontier), legacy_cands.len(), "level {level}");
+
+            let mut got: Vec<Episode> = vec![];
+            let mut block = LevelBlock::default();
+            let mut scratch = Episode { types: vec![], intervals: vec![] };
+            arena
+                .generate_next(&frontier, 7, |chunk| {
+                    for i in 0..chunk.len() {
+                        arena.materialize_chunk_row(chunk, i, &mut scratch);
+                        got.push(scratch.clone());
+                    }
+                    block.extend_from_chunk(chunk);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(got, legacy_cands, "level {level} candidates diverge");
+            arena.push_block(block);
+
+            // prune to every third candidate (same subset on both sides)
+            let keep: Vec<usize> = (0..legacy_cands.len()).step_by(3).collect();
+            legacy_frontier = keep.iter().map(|&i| legacy_cands[i].clone()).collect();
+            let survivors: Vec<u32> = keep.iter().map(|&i| i as u32).collect();
+            let new_top = arena.num_levels() - 1;
+            let mut pruned = LevelBlock::default();
+            let full = arena.block(new_top).clone();
+            for &i in &survivors {
+                let i = i as usize;
+                pruned.push(full.last_type[i], full.last_iv[i], full.parent[i], full.suffix[i]);
+            }
+            // rebuild the top block as survivors only (batch-mode shape);
+            // parent/suffix still index the block below, which is intact
+            arena.truncate_blocks(new_top);
+            arena.push_block(pruned);
+            if legacy_frontier.is_empty() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn materialize_walks_links() {
+        let i_set = ivs();
+        let mut arena = EpisodeArena::new(&i_set);
+        arena.push_singles([3, 7]);
+        // 3 -(0,10]-> 7 stored as row 0 of block 1
+        let mut b1 = LevelBlock::default();
+        b1.push(7, 0, 0, 1);
+        arena.push_block(b1);
+        // (3 -(0,10]-> 7) -(5,20]-> 3
+        let mut b2 = LevelBlock::default();
+        b2.push(3, 1, 0, 0);
+        arena.push_block(b2);
+        assert_eq!(arena.episode(0, 1), Episode::single(7));
+        assert_eq!(
+            arena.episode(2, 0),
+            Episode::new(vec![3, 7, 3], vec![Interval::new(0, 10), Interval::new(5, 20)])
+        );
+    }
+
+    #[test]
+    fn remap_sorts_densest_first_and_inverts() {
+        let remap = AlphabetRemap::from_counts(&[5, 40, 40, 2]);
+        // counts sort 1,2 (40) ahead of 0 (5) ahead of 3 (2); ties by id
+        assert_eq!(remap.dense(1), 0);
+        assert_eq!(remap.dense(2), 1);
+        assert_eq!(remap.dense(0), 2);
+        assert_eq!(remap.dense(3), 3);
+        for ty in 0..4 {
+            assert_eq!(remap.orig(remap.dense(ty)), ty);
+        }
+        let stream = EventStream::from_pairs(vec![(0, 1), (1, 2), (3, 5)], 4);
+        let dense = remap.apply(&stream);
+        assert_eq!(dense.types, vec![2, 0, 3]);
+        assert_eq!(dense.times, stream.times);
+        assert_eq!(dense.n_types, 4);
+        let ep = Episode::new(vec![0, 1], vec![Interval::new(0, 5)]);
+        let mut dense_ep = ep.clone();
+        dense_ep.types = vec![remap.dense(0), remap.dense(1)];
+        remap.invert_episode(&mut dense_ep);
+        assert_eq!(dense_ep, ep);
+    }
+
+    #[test]
+    fn row_bytes_is_fourteen() {
+        assert_eq!(ROW_BYTES, 14);
+    }
+}

@@ -1,6 +1,8 @@
 //! Episode substrate: serial episodes with inter-event constraints
-//! (paper Def. 2.2 / Problem 1) and level-wise candidate generation.
+//! (paper Def. 2.2 / Problem 1), level-wise candidate generation, and the
+//! flat SoA candidate arena ([`arena`]) the mining loop generates into.
 
+pub mod arena;
 pub mod candidates;
 
 use crate::events::{EventType, Tick};

@@ -109,6 +109,9 @@ impl Query {
             intervals: self.intervals.clone(),
             max_level: self.max_level,
             max_candidates_per_level: self.max_candidates_per_level,
+            // an execution knob, not a semantic parameter: results are
+            // block-size-invariant, so it stays out of Query / QueryKey
+            candidate_block: crate::session::DEFAULT_CANDIDATE_BLOCK,
         }
     }
 

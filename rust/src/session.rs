@@ -32,15 +32,22 @@ use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
 use crate::backend::two_pass::TwoPassBackend;
-use crate::backend::{self, CountBackend};
+use crate::backend::{self, CountBackend, EpisodeBatch};
 use crate::coordinator::miner::{LevelReport, MineResult};
 use crate::coordinator::streaming::{Partition, PartitionReport};
 use crate::coordinator::{Metrics, Strategy};
 use crate::datasets;
+use crate::episodes::arena::{AlphabetRemap, EpisodeArena, LevelBlock};
 use crate::episodes::{candidates, CountedEpisode, Episode, Interval};
 use crate::error::MineError;
-use crate::events::EventStream;
+use crate::events::{EventStream, EventType};
 use crate::runtime::Runtime;
+
+/// Default candidate block size for streamed generation: large enough to
+/// amortize per-batch backend dispatch, small enough that a level's peak
+/// memory stays O(block + frequent) even when the level itself is 10⁶+
+/// candidates.
+pub const DEFAULT_CANDIDATE_BLOCK: usize = 65_536;
 
 /// Mining parameters shared by [`Session`] and the low-level
 /// [`mine_with_backend`] driver.
@@ -56,6 +63,12 @@ pub struct MineOptions {
     /// too-low theta on bursty data grows the lattice combinatorially;
     /// production systems must fail fast, not OOM)
     pub max_candidates_per_level: usize,
+    /// streamed-generation block size: candidates are emitted and
+    /// counted in blocks of at most this many rows (default
+    /// [`DEFAULT_CANDIDATE_BLOCK`]); under a two-pass engine the A2
+    /// elimination runs per block, so culled candidates never exist as
+    /// materialized episodes at all
+    pub candidate_block: usize,
 }
 
 impl MineOptions {
@@ -81,6 +94,9 @@ impl MineOptions {
         if self.max_candidates_per_level == 0 {
             return Err(MineError::invalid("max_candidates_per_level must be >= 1"));
         }
+        if self.candidate_block == 0 {
+            return Err(MineError::invalid("candidate_block must be >= 1"));
+        }
         Ok(())
     }
 }
@@ -89,6 +105,20 @@ impl MineOptions {
 /// alternating with counting on whatever engine `backend` is. This is the
 /// single implementation behind `Session::mine`, streaming partitions, and
 /// the deprecated `Coordinator::mine` shim.
+///
+/// Level 1 runs in original type ids over the caller's stream. Levels ≥ 2
+/// run on the arena-backed candidate engine (`episodes::arena`): the
+/// alphabet is frequency-sorted into dense ids (a bijection — automaton
+/// counts only depend on type *equality* and event times, so per-episode
+/// counts are invariant, and reports are inverted back to original ids),
+/// candidates live as flat SoA rows with integer parent/suffix links, and
+/// generation streams bounded chunks through
+/// [`CountBackend::count_batch`]. Peak memory per level is O(block +
+/// frequent) instead of O(candidates); `max_candidates_per_level` fires
+/// from the exact O(frontier) size pre-pass *before* anything is
+/// materialized; and the per-level [`LevelReport`] numbers (candidates,
+/// frequent, culled) are identical to the legacy owned-`Vec` generator's,
+/// in the same order.
 pub fn mine_with_backend(
     backend: &mut dyn CountBackend,
     stream: &EventStream,
@@ -96,62 +126,126 @@ pub fn mine_with_backend(
     metrics: &mut Metrics,
 ) -> Result<MineResult, MineError> {
     let mut result = MineResult::default();
-    let mut frontier: Vec<Episode> = vec![];
-    for level in 1..=opts.max_level {
+
+    // -- level 1: original ids, whole-level counting (the level-1 path is
+    //    answered from host-side type frequencies by every engine)
+    let t_gen = Instant::now();
+    let cands1 = candidates::level1(stream.n_types);
+    let gen_seconds = t_gen.elapsed().as_secs_f64();
+    if cands1.is_empty() {
+        return Ok(result);
+    }
+    if cands1.len() > opts.max_candidates_per_level {
+        return Err(MineError::CandidateExplosion {
+            level: 1,
+            candidates: cands1.len(),
+            cap: opts.max_candidates_per_level,
+        });
+    }
+    let t_count = Instant::now();
+    let report = backend.count(&cands1, stream)?;
+    metrics.merge(&report.metrics);
+    let count_seconds = t_count.elapsed().as_secs_f64();
+    let counts1 = report.counts;
+
+    let frequent1: Vec<EventType> = cands1
+        .iter()
+        .zip(&counts1)
+        .filter(|(_, &c)| c >= opts.theta)
+        .map(|(e, _)| e.types[0])
+        .collect();
+    result.levels.push(LevelReport {
+        level: 1,
+        candidates: cands1.len(),
+        frequent: frequent1.len(),
+        culled_by_a2: report.culled,
+        count_seconds,
+        gen_seconds,
+    });
+    result.frequent.extend(
+        cands1
+            .into_iter()
+            .zip(counts1.iter().copied())
+            .filter(|(_, c)| *c >= opts.theta)
+            .map(|(episode, count)| CountedEpisode { episode, count }),
+    );
+    if frequent1.is_empty() || opts.max_level == 1 {
+        return Ok(result);
+    }
+
+    // -- levels >= 2: dense alphabet, arena-streamed candidate blocks.
+    //    The frontier enters the arena in ascending *original* id order,
+    //    which keeps every level's emission order identical to the legacy
+    //    generator's regardless of the relabeling.
+    let remap = AlphabetRemap::from_counts(&counts1);
+    let dense_stream = remap.apply(stream);
+    let mut arena = EpisodeArena::new(&opts.intervals);
+    arena.push_singles(frequent1.iter().map(|&ty| remap.dense(ty)));
+
+    let mut scratch = Episode { types: vec![], intervals: vec![] };
+    for level in 2..=opts.max_level {
+        let top = arena.num_levels() - 1;
+        let frontier: Vec<u32> = (0..arena.block_len(top) as u32).collect();
+
         let t_gen = Instant::now();
-        let cands = if level == 1 {
-            candidates::level1(stream.n_types)
-        } else {
-            // the cap is enforced inside generation (fail fast, before the
-            // candidate Vec is materialized)
-            candidates::next_level_capped(
-                &frontier,
-                &opts.intervals,
-                opts.max_candidates_per_level,
-            )?
-        };
-        let gen_seconds = t_gen.elapsed().as_secs_f64();
-        if cands.is_empty() {
+        let total = arena.next_level_count(&frontier);
+        if total == 0 {
             break;
         }
-        if cands.len() > opts.max_candidates_per_level {
+        if total > opts.max_candidates_per_level {
             return Err(MineError::CandidateExplosion {
                 level,
-                candidates: cands.len(),
+                candidates: total,
                 cap: opts.max_candidates_per_level,
             });
         }
 
-        let t_count = Instant::now();
-        let report = backend.count(&cands, stream)?;
-        metrics.merge(&report.metrics);
-        let count_seconds = t_count.elapsed().as_secs_f64();
-        let counts = report.counts;
+        let mut gen_seconds = t_gen.elapsed().as_secs_f64();
+        let mut count_seconds = 0.0f64;
+        let mut culled = 0u64;
+        let mut survivors = LevelBlock::default();
+        let mut frequent: Vec<CountedEpisode> = vec![];
+        let mut t_mark = Instant::now();
+        arena.generate_next(&frontier, opts.candidate_block, |chunk| {
+            gen_seconds += t_mark.elapsed().as_secs_f64();
+            let t_chunk = Instant::now();
+            let batch = EpisodeBatch::new(&arena, chunk);
+            let rep = backend.count_batch(&batch, &dense_stream)?;
+            metrics.merge(&rep.metrics);
+            culled += rep.culled;
+            for (i, &c) in rep.counts.iter().enumerate() {
+                if c >= opts.theta {
+                    survivors.push(
+                        chunk.last_type[i],
+                        chunk.last_iv[i],
+                        chunk.parent[i],
+                        chunk.suffix[i],
+                    );
+                    batch.materialize_into(i, &mut scratch);
+                    let mut episode = scratch.clone();
+                    remap.invert_episode(&mut episode);
+                    frequent.push(CountedEpisode { episode, count: c });
+                }
+            }
+            count_seconds += t_chunk.elapsed().as_secs_f64();
+            t_mark = Instant::now();
+            Ok(())
+        })?;
 
-        frontier = cands
-            .iter()
-            .zip(&counts)
-            .filter(|(_, &c)| c >= opts.theta)
-            .map(|(e, _)| e.clone())
-            .collect();
+        let n_frequent = frequent.len();
         result.levels.push(LevelReport {
             level,
-            candidates: cands.len(),
-            frequent: frontier.len(),
-            culled_by_a2: report.culled,
+            candidates: total,
+            frequent: n_frequent,
+            culled_by_a2: culled,
             count_seconds,
             gen_seconds,
         });
-        result.frequent.extend(
-            cands
-                .into_iter()
-                .zip(counts)
-                .filter(|(_, c)| *c >= opts.theta)
-                .map(|(episode, count)| CountedEpisode { episode, count }),
-        );
-        if frontier.is_empty() {
+        result.frequent.append(&mut frequent);
+        if n_frequent == 0 {
             break;
         }
+        arena.push_block(survivors);
     }
     Ok(result)
 }
@@ -342,6 +436,7 @@ pub struct SessionBuilder {
     two_pass: bool,
     max_level: usize,
     max_candidates_per_level: usize,
+    candidate_block: usize,
     cpu_threads: usize,
 }
 
@@ -358,6 +453,7 @@ impl Default for SessionBuilder {
             two_pass: true,
             max_level: 8,
             max_candidates_per_level: 2_000_000,
+            candidate_block: DEFAULT_CANDIDATE_BLOCK,
             cpu_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
         }
     }
@@ -443,6 +539,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Streamed-generation block size (default
+    /// [`DEFAULT_CANDIDATE_BLOCK`]): candidates are emitted and counted
+    /// in blocks of at most this many rows, bounding a level's peak
+    /// memory at O(block + frequent).
+    pub fn candidate_block(mut self, block: usize) -> Self {
+        self.candidate_block = block;
+        self
+    }
+
     /// Worker threads for CPU engines and fallbacks.
     pub fn cpu_threads(mut self, threads: usize) -> Self {
         self.cpu_threads = threads.max(1);
@@ -461,6 +566,7 @@ impl SessionBuilder {
             two_pass,
             max_level,
             max_candidates_per_level,
+            candidate_block,
             cpu_threads,
         } = self;
 
@@ -507,7 +613,13 @@ impl SessionBuilder {
                 }
             },
         };
-        let opts = MineOptions { theta, intervals, max_level, max_candidates_per_level };
+        let opts = MineOptions {
+            theta,
+            intervals,
+            max_level,
+            max_candidates_per_level,
+            candidate_block,
+        };
         opts.validate()?;
 
         let backend: Box<dyn CountBackend> = match (backend, strategy) {

@@ -28,22 +28,29 @@
 //! which makes the incremental frequent set *identical* to a cold batch
 //! re-mine (`tests/stream_incremental.rs` pins this at every commit).
 //!
-//! Candidate generation is gated on frontier movement: each level's
-//! candidate set is cached keyed on the exact frontier that generated it,
-//! so as long as no episode crosses theta the level-wise generation is
-//! skipped entirely (`CommitStats::candidate_regens == 0`) and a commit
-//! costs only the tuple updates above — work proportional to the arriving
-//! segment (plus halo), not the window.
+//! Candidate generation is gated on frontier movement: the candidate
+//! lattice lives in an [`EpisodeArena`] (block `L-1` = level L's full
+//! candidate set as flat SoA rows), and each block is keyed on the exact
+//! frontier rows that generated it. As long as no episode crosses theta
+//! the level-wise generation is skipped entirely
+//! (`CommitStats::candidate_regens == 0`) and a commit costs only the
+//! tuple updates above — work proportional to the arriving segment (plus
+//! halo), not the window. When a frontier *does* move at level L, the
+//! arena is truncated and rebuilt from L down: row refs into a rebuilt
+//! block are meaningless, so deeper cached levels cannot survive the
+//! regeneration (the cascade re-derives them, producing identical rows
+//! whenever the deeper frontiers end up unchanged).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use crate::coordinator::mapconcat;
-use crate::episodes::{candidates, CountedEpisode, Episode, Interval};
+use crate::episodes::arena::{EpisodeArena, LevelBlock};
+use crate::episodes::{CountedEpisode, Episode, Interval};
 use crate::error::MineError;
-use crate::events::{EventStream, Tick};
+use crate::events::{EventStream, EventType, Tick};
 use crate::mining::serial;
-use crate::session::MineOptions;
+use crate::session::{MineOptions, DEFAULT_CANDIDATE_BLOCK};
 
 use super::diff::{CommitStats, CommitUpdate, FrequentDiff};
 
@@ -108,6 +115,7 @@ impl IncrementalConfig {
             intervals: self.intervals.clone(),
             max_level: self.max_level,
             max_candidates_per_level: self.max_candidates_per_level,
+            candidate_block: DEFAULT_CANDIDATE_BLOCK,
         }
     }
 
@@ -134,14 +142,6 @@ struct Tracked {
     count: u64,
 }
 
-/// A cached candidate level: the exact frontier that generated it, and
-/// what `candidates::next_level` produced from it. Reused verbatim while
-/// the frontier below is unchanged — the theta-crossing gate.
-struct CachedLevel {
-    source_frontier: Vec<Episode>,
-    cands: Vec<Episode>,
-}
-
 /// The incremental sliding-window mining engine. Feed arriving segments
 /// with [`IncrementalMiner::push_segment`]; each push commits and returns
 /// a [`CommitUpdate`] whose frequent set equals a batch re-mine of the
@@ -156,8 +156,15 @@ pub struct IncrementalMiner {
     /// per-type window counts (level-1 support, pure histogram deltas)
     counts1: Vec<u64>,
     tracked: HashMap<Episode, Tracked>,
-    /// cached candidate sets for levels >= 2 (index `level - 2`)
-    cached_levels: Vec<CachedLevel>,
+    /// the candidate lattice: block 0 is the full alphabet as singles
+    /// (row == type id), block `L-1` is level L's full candidate set as
+    /// flat SoA rows
+    arena: EpisodeArena,
+    /// cache keys for levels >= 2 (index `level - 2`): the exact frontier
+    /// — surviving row refs into the block below — that generated block
+    /// `level - 1`. The block is reused verbatim while its frontier is
+    /// unchanged; this is the theta-crossing gate.
+    cached_frontiers: Vec<Vec<u32>>,
     frequent: Arc<Vec<CountedEpisode>>,
     commit_seq: u64,
 }
@@ -168,6 +175,8 @@ impl IncrementalMiner {
             return Err(MineError::invalid("IncrementalMiner alphabet must have n_types >= 1"));
         }
         cfg.validate()?;
+        let mut arena = EpisodeArena::new(&cfg.intervals);
+        arena.push_singles(0..n_types as EventType);
         Ok(IncrementalMiner {
             cfg,
             n_types,
@@ -175,7 +184,8 @@ impl IncrementalMiner {
             taus: vec![],
             counts1: vec![0; n_types],
             tracked: HashMap::new(),
-            cached_levels: vec![],
+            arena,
+            cached_frontiers: vec![],
             frequent: Arc::new(vec![]),
             commit_seq: 0,
         })
@@ -281,106 +291,118 @@ impl IncrementalMiner {
         //    movement (mirrors session::mine_with_backend exactly: break
         //    on empty candidates/frontier, explosion guardrail intact)
         let mut frequent: Vec<CountedEpisode> = vec![];
-        let mut frontier: Vec<Episode> = vec![];
+        let mut frontier_refs: Vec<u32> = vec![];
         let mut active: HashSet<Episode> = HashSet::new();
         let mut levels_reached = 0usize;
+        let mut scratch = Episode { types: vec![], intervals: vec![] };
         for level in 1..=self.cfg.max_level {
-            let cands: Vec<Episode> = if level == 1 {
-                candidates::level1(self.n_types)
-            } else {
+            if level >= 2 {
                 let idx = level - 2;
-                let cached = self
-                    .cached_levels
-                    .get(idx)
-                    .filter(|c| c.source_frontier == frontier);
-                match cached {
-                    Some(c) => c.cands.clone(),
-                    None => {
-                        stats.candidate_regens += 1;
-                        // cap enforced inside generation: fail fast before
-                        // the candidate Vec is materialized
-                        let cands = candidates::next_level_capped(
-                            &frontier,
-                            &self.cfg.intervals,
-                            self.cfg.max_candidates_per_level,
-                        )?;
-                        let entry = CachedLevel {
-                            source_frontier: frontier.clone(),
-                            cands: cands.clone(),
-                        };
-                        if idx < self.cached_levels.len() {
-                            self.cached_levels[idx] = entry;
-                        } else {
-                            self.cached_levels.push(entry);
-                        }
-                        cands
+                if self.cached_frontiers.get(idx) != Some(&frontier_refs) {
+                    stats.candidate_regens += 1;
+                    // the frontier moved: this block and every deeper one
+                    // were generated from stale rows, and row refs into a
+                    // rebuilt block are meaningless, so the cache cannot
+                    // survive below the regeneration point — truncate and
+                    // rebuild from here down (the cascade re-derives the
+                    // deeper blocks, identically whenever their frontiers
+                    // end up unchanged)
+                    self.arena.truncate_blocks(level - 1);
+                    self.cached_frontiers.truncate(idx);
+                    // cap enforced before generation: the bucket pre-pass
+                    // knows the exact output size, so fail fast before a
+                    // single row is materialized
+                    let total = self.arena.next_level_count(&frontier_refs);
+                    if total > self.cfg.max_candidates_per_level {
+                        return Err(MineError::CandidateExplosion {
+                            level,
+                            candidates: total,
+                            cap: self.cfg.max_candidates_per_level,
+                        });
                     }
+                    let mut block = LevelBlock::default();
+                    self.arena.generate_next(&frontier_refs, total.max(1), |chunk| {
+                        block.extend_from_chunk(chunk);
+                        Ok(())
+                    })?;
+                    self.arena.push_block(block);
+                    self.cached_frontiers.push(frontier_refs.clone());
                 }
-            };
-            if cands.is_empty() {
+            }
+            let n_cands = self.arena.block_len(level - 1);
+            if n_cands == 0 {
                 break;
             }
-            if cands.len() > self.cfg.max_candidates_per_level {
+            if n_cands > self.cfg.max_candidates_per_level {
                 return Err(MineError::CandidateExplosion {
                     level,
-                    candidates: cands.len(),
+                    candidates: n_cands,
                     cap: self.cfg.max_candidates_per_level,
                 });
             }
             levels_reached = level;
 
-            let mut counts: Vec<u64> = Vec::with_capacity(cands.len());
-            for ep in &cands {
-                if ep.n() == 1 {
-                    counts.push(self.counts1[ep.types[0] as usize]);
-                    continue;
+            let mut counts: Vec<u64> = Vec::with_capacity(n_cands);
+            if level == 1 {
+                // singles rows are the alphabet in order (row == type id):
+                // level-1 support is the counts1 histogram, never tracked
+                for &ty in &self.arena.block(0).last_type {
+                    counts.push(self.counts1[ty as usize]);
                 }
-                active.insert(ep.clone());
-                if !self.tracked.contains_key(ep) {
-                    // a brand-new candidate: build its automaton state
-                    // across the whole window once; subsequent commits
-                    // update it incrementally
-                    let mut tuples = VecDeque::with_capacity(partitions);
-                    for p in 0..partitions {
-                        tuples.push_back(map_partition(
-                            &self.segs, &self.taus, self.n_types, ep, p, self.cfg.k, &mut stats,
-                        ));
+            } else {
+                for row in 0..n_cands {
+                    self.arena.materialize_into(level - 1, row, &mut scratch);
+                    active.insert(scratch.clone());
+                    if !self.tracked.contains_key(&scratch) {
+                        // a brand-new candidate: build its automaton state
+                        // across the whole window once; subsequent commits
+                        // update it incrementally
+                        let mut tuples = VecDeque::with_capacity(partitions);
+                        for p in 0..partitions {
+                            tuples.push_back(map_partition(
+                                &self.segs,
+                                &self.taus,
+                                self.n_types,
+                                &scratch,
+                                p,
+                                self.cfg.k,
+                                &mut stats,
+                            ));
+                        }
+                        let mut state = Tracked { tuples, count: 0 };
+                        state.count = fold_or_recount(
+                            &scratch,
+                            &mut state,
+                            &self.segs,
+                            self.n_types,
+                            self.cfg.k,
+                            &mut window_cache,
+                            &mut stats,
+                        );
+                        self.tracked.insert(scratch.clone(), state);
                     }
-                    let mut state = Tracked { tuples, count: 0 };
-                    state.count = fold_or_recount(
-                        ep,
-                        &mut state,
-                        &self.segs,
-                        self.n_types,
-                        self.cfg.k,
-                        &mut window_cache,
-                        &mut stats,
-                    );
-                    self.tracked.insert(ep.clone(), state);
+                    counts.push(self.tracked[&scratch].count);
                 }
-                counts.push(self.tracked[ep].count);
             }
 
-            frontier = cands
-                .iter()
-                .zip(&counts)
-                .filter(|(_, &c)| c >= self.cfg.theta)
-                .map(|(e, _)| e.clone())
+            frontier_refs = (0..n_cands as u32)
+                .filter(|&row| counts[row as usize] >= self.cfg.theta)
                 .collect();
-            frequent.extend(
-                cands
-                    .into_iter()
-                    .zip(counts)
-                    .filter(|(_, c)| *c >= self.cfg.theta)
-                    .map(|(episode, count)| CountedEpisode { episode, count }),
-            );
-            if frontier.is_empty() {
+            for &row in &frontier_refs {
+                frequent.push(CountedEpisode {
+                    episode: self.arena.episode(level - 1, row as usize),
+                    count: counts[row as usize],
+                });
+            }
+            if frontier_refs.is_empty() {
                 break;
             }
         }
-        // drop caches for levels the cascade no longer reaches, and evict
-        // episodes that are no longer candidates anywhere (bounded memory)
-        self.cached_levels.truncate(levels_reached.saturating_sub(1));
+        // drop blocks and cache keys for levels the cascade no longer
+        // reaches, and evict episodes that are no longer candidates
+        // anywhere (bounded memory)
+        self.arena.truncate_blocks(levels_reached.max(1));
+        self.cached_frontiers.truncate(levels_reached.saturating_sub(1));
         self.tracked.retain(|ep, _| active.contains(ep));
         stats.tracked_episodes = self.tracked.len();
 
