@@ -1,0 +1,10 @@
+//! Arena bucketed candidate generation vs the legacy quadratic join —
+//! registered as the `candidate_scaling` suite in `episodes_gpu::bench`.
+//! The suite body lives in `src/bench/suites/candidate_scaling.rs`.
+//!
+//! Run: `cargo bench --bench candidate_scaling
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
+
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("candidate_scaling")
+}

@@ -101,6 +101,11 @@ pub const SUITES: &[SuiteDef] = &[
         description: "incremental sliding-window commits vs batch re-mine (stream/)",
         run: suites::stream_incremental::run,
     },
+    SuiteDef {
+        name: "candidate_scaling",
+        description: "arena bucketed generation vs legacy quadratic join (huge alphabets)",
+        run: suites::candidate_scaling::run,
+    },
 ];
 
 /// Look a suite up by name.
@@ -153,7 +158,7 @@ mod tests {
             assert!(!names[i + 1..].contains(n), "duplicate suite {n}");
             assert!(find(n).is_some());
         }
-        assert_eq!(SUITES.len(), 11, "every bench target registers exactly once");
+        assert_eq!(SUITES.len(), 12, "every bench target registers exactly once");
         assert!(find("nonexistent").is_none());
     }
 

@@ -1,0 +1,160 @@
+//! Arena-backed candidate generation vs the legacy quadratic join — the
+//! tentpole metrics for the huge-alphabet candidate engine.
+//!
+//! Two claims under test. First, the bucketed arena join generates a
+//! level-3 candidate set (K³ candidates from a full K² level-2 lattice)
+//! strictly faster than the retained O(F²) [`candidates::join`] scan of
+//! the same frequent set — the asymptotic win the engine exists for.
+//! Second, the block-streamed mining loop digests the `huge-alphabet`
+//! dataset (512 types, Zipf-skewed) end to end with a small
+//! `candidate_block`, exercising remap + arena + streamed counting on the
+//! workload shape the paper's 10³–10⁴-electrode regime implies. Both the
+//! generation scenarios cross-check content equality against the legacy
+//! join before any timing is trusted; a mismatch or a lost speedup fails
+//! the suite rather than recording a number.
+
+use crate::coordinator::Strategy;
+use crate::datasets::huge::{self, HugeConfig};
+use crate::episodes::arena::{EpisodeArena, LevelBlock, ROW_BYTES};
+use crate::episodes::{candidates, Episode};
+use crate::error::MineError;
+use crate::events::EventType;
+use crate::Session;
+
+use super::super::harness::{SuiteCtx, Work};
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    // Frontier width for the generation scenarios: a full K-type level-2
+    // lattice joins into exactly K³ level-3 candidates, so K picks the
+    // output scale (64k smoke / 262k full) without touching the shape.
+    let k: usize = if ctx.smoke { 40 } else { 64 };
+    let cfg = if ctx.smoke {
+        HugeConfig::smoke()
+    } else {
+        HugeConfig::default()
+    };
+    let i_set = cfg.interval_set();
+
+    // Arena with the full level-2 lattice installed: singles 0..K, then
+    // the K² cross as one block (identity frontier at each step).
+    let mut arena = EpisodeArena::new(&i_set);
+    arena.push_singles(0..k as EventType);
+    let singles: Vec<u32> = (0..k as u32).collect();
+    let mut level2 = LevelBlock::default();
+    arena.generate_next(&singles, 65_536, |chunk| {
+        level2.extend_from_chunk(chunk);
+        Ok(())
+    })?;
+    arena.push_block(level2);
+    let frontier: Vec<u32> = (0..arena.block_len(1) as u32).collect();
+    let expected = arena.next_level_count(&frontier);
+
+    // The legacy path's input: the same K² frequent set as heap-allocated
+    // episodes, built exactly as the pre-arena miner did.
+    let legacy_input = candidates::level2(&candidates::level1(k), &i_set);
+
+    // Exactness gate: the arena's level-3 output must equal the legacy
+    // join's, candidate for candidate, in the same order — the timing
+    // below compares two routes to one answer or it compares nothing.
+    let legacy_out = candidates::join(&legacy_input);
+    if legacy_out.len() != expected {
+        return Err(MineError::internal(format!(
+            "arena predicts {expected} level-3 candidates, legacy join made {}",
+            legacy_out.len()
+        )));
+    }
+    let mut row = 0usize;
+    let mut scratch = Episode { types: vec![], intervals: vec![] };
+    arena.generate_next(&frontier, 65_536, |chunk| {
+        for i in 0..chunk.len() {
+            arena.materialize_chunk_row(chunk, i, &mut scratch);
+            if scratch != legacy_out[row] {
+                return Err(MineError::internal(format!(
+                    "arena candidate {row} is {} but legacy join made {}",
+                    scratch.display(),
+                    legacy_out[row].display()
+                )));
+            }
+            row += 1;
+        }
+        Ok(())
+    })?;
+    drop(legacy_out);
+
+    // The engine under test: bucketed suffix-prefix join over the arena,
+    // emitting flat SoA rows in bounded chunks — O(F + output).
+    ctx.measure("gen/arena_bucketed", Work::items(expected as u64, "candidates"), || {
+        let mut out = LevelBlock::default();
+        arena
+            .generate_next(&frontier, 65_536, |chunk| {
+                out.extend_from_chunk(chunk);
+                Ok(())
+            })
+            .expect("arena generation");
+        out.len() as u64
+    });
+
+    // The reference point: the retained O(F²) all-pairs scan over the
+    // same frequent set, materializing Vec-backed episodes.
+    ctx.measure("join/legacy_quadratic", Work::items(expected as u64, "candidates"), || {
+        candidates::join(&legacy_input).len() as u64
+    });
+
+    let arena_ns = ctx.median_ns("gen/arena_bucketed").unwrap_or(f64::MAX);
+    let legacy_ns = ctx.median_ns("join/legacy_quadratic").unwrap_or(0.0);
+    if arena_ns >= legacy_ns {
+        return Err(MineError::internal(format!(
+            "bucketed arena join lost to the quadratic scan: {:.2}ms vs {:.2}ms \
+             over {expected} candidates",
+            arena_ns / 1e6,
+            legacy_ns / 1e6
+        )));
+    }
+    // a heap-backed 3-node candidate: two Vec headers plus 3 types + 2 gaps
+    let legacy_bytes = std::mem::size_of::<Episode>()
+        + 3 * std::mem::size_of::<EventType>()
+        + 2 * std::mem::size_of::<crate::episodes::Interval>();
+    ctx.note(format!(
+        "K={k}: {expected} level-3 candidates, arena {:.2}ms vs legacy {:.2}ms \
+         ({:.1}x), {ROW_BYTES} B/candidate vs ~{legacy_bytes} B heap-backed",
+        arena_ns / 1e6,
+        legacy_ns / 1e6,
+        legacy_ns / arena_ns.max(1.0),
+    ));
+
+    // End to end on the huge-alphabet dataset: level-1 counting picks the
+    // theta that keeps the densest ~48 types frequent, then the
+    // block-streamed loop (deliberately small candidate_block, so a
+    // level-2 lattice of ~2.3k candidates streams in several blocks)
+    // remaps, generates, and counts through to level 2.
+    let stream = huge::generate(&cfg, 0xA1F);
+    let mut counts = stream.type_counts();
+    counts.sort_unstable_by_key(|&c| std::cmp::Reverse(c));
+    let theta = counts[47.min(counts.len() - 1)].max(1);
+    let frequent_types = counts.iter().filter(|&&c| c >= theta).count() as u64;
+    let events = stream.len() as u64;
+    ctx.measure(
+        "mine/block_streamed",
+        Work::counting(events, frequent_types * frequent_types),
+        || {
+            let mut session = Session::builder()
+                .stream(stream.clone())
+                .theta(theta)
+                .intervals(i_set.clone())
+                .strategy(Strategy::CpuSerial)
+                .one_pass()
+                .max_level(2)
+                .candidate_block(1024)
+                .build()
+                .expect("huge-alphabet session");
+            session.mine().expect("huge-alphabet mine").frequent.len() as u64
+        },
+    );
+    ctx.note(format!(
+        "huge-alphabet: {events} events over {} types, theta {theta} keeps \
+         {frequent_types} types frequent",
+        stream.n_types
+    ));
+
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! Huge-alphabet synthetic: the arena/remap workload.
+//!
+//! The paper's arrays have 26–64 electrodes, but the arena-backed
+//! candidate engine exists for the 10³–10⁴-type regime where level-2 is
+//! millions of candidates. This generator stands in for such a recording:
+//! `n_types` (default 512) event types firing as a long-tailed
+//! background — squaring a uniform draw gives a Zipf-ish rate profile, so
+//! a handful of types carry most of the mass while the tail is sparse
+//! (exactly the shape the frequency-sorted [`AlphabetRemap`] exploits) —
+//! plus a few embedded causal chains over mid-frequency types that a
+//! miner with the right theta recovers as frequent episodes.
+//!
+//! [`AlphabetRemap`]: crate::episodes::arena::AlphabetRemap
+
+use crate::episodes::{Episode, Interval};
+use crate::events::{EventStream, Tick};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct HugeConfig {
+    pub n_types: usize,
+    /// background events to generate (cascade events ride on top)
+    pub events: usize,
+    /// number of embedded causal chains
+    pub chains: usize,
+    /// nodes per embedded chain
+    pub chain_len: usize,
+    /// one cascade is injected every this many background events,
+    /// round-robin across the chains
+    pub inject_every: usize,
+    /// inter-event delay window (d_low, d_high] in ticks
+    pub d_low: Tick,
+    pub d_high: Tick,
+}
+
+impl Default for HugeConfig {
+    fn default() -> Self {
+        HugeConfig {
+            n_types: 512,
+            events: 200_000,
+            chains: 4,
+            chain_len: 4,
+            inject_every: 50,
+            d_low: 2,
+            d_high: 10,
+        }
+    }
+}
+
+impl HugeConfig {
+    /// The CI-sized profile: same alphabet and chain structure, a tenth
+    /// of the events — small enough for the perf-smoke job, same code
+    /// paths as the full workload.
+    pub fn smoke() -> Self {
+        HugeConfig { events: 20_000, ..HugeConfig::default() }
+    }
+
+    /// The embedded chains as node sequences: disjoint runs of
+    /// mid-frequency types (ids from `n_types / 8` up), so the planted
+    /// structure is neither drowned by the densest background types nor
+    /// starved in the sparse tail.
+    pub fn embedded_chains(&self) -> Vec<Vec<i32>> {
+        let base = (self.n_types / 8) as i32;
+        (0..self.chains)
+            .map(|c| {
+                let start = base + (c * self.chain_len) as i32;
+                (start..start + self.chain_len as i32).collect()
+            })
+            .collect()
+    }
+
+    /// The episodes the generator embeds, with the matching constraint.
+    pub fn embedded_episodes(&self) -> Vec<Episode> {
+        let iv = Interval::new(self.d_low, self.d_high);
+        self.embedded_chains()
+            .into_iter()
+            .map(|chain| {
+                let links = chain.len() - 1;
+                Episode::new(chain, vec![iv; links])
+            })
+            .collect()
+    }
+
+    /// The constraint set `I` a miner should use on this data.
+    pub fn interval_set(&self) -> Vec<Interval> {
+        vec![Interval::new(self.d_low, self.d_high)]
+    }
+}
+
+/// Generate a huge-alphabet stream.
+pub fn generate(cfg: &HugeConfig, seed: u64) -> EventStream {
+    assert!(
+        cfg.n_types / 8 + cfg.chains * cfg.chain_len <= cfg.n_types,
+        "embedded chains must fit inside the alphabet"
+    );
+    let mut rng = Rng::new(seed);
+    let chains = cfg.embedded_chains();
+    let mut pairs: Vec<(i32, Tick)> = Vec::with_capacity(cfg.events);
+    let mut t: Tick = 0;
+    let mut next_chain = 0usize;
+    for i in 0..cfg.events {
+        t += rng.range_i32(1, 3);
+        // squaring the uniform skews mass toward low ids: the long-tailed
+        // per-type rate profile of a real dense array
+        let u = rng.f64();
+        let ty = ((u * u * cfg.n_types as f64) as i32).min(cfg.n_types as i32 - 1);
+        pairs.push((ty, t));
+        if cfg.chains > 0 && cfg.inject_every > 0 && i % cfg.inject_every == 0 {
+            let chain = &chains[next_chain % chains.len()];
+            next_chain += 1;
+            let mut ct = t;
+            pairs.push((chain[0], ct));
+            for &node in &chain[1..] {
+                // delay uniform in (d_low, d_high]
+                ct += rng.range_i32(cfg.d_low + 1, cfg.d_high);
+                pairs.push((node, ct));
+            }
+        }
+    }
+    EventStream::from_pairs(pairs, cfg.n_types)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::serial;
+
+    #[test]
+    fn volume_and_alphabet() {
+        let cfg = HugeConfig::default();
+        let s = generate(&cfg, 1);
+        assert_eq!(s.n_types, 512);
+        assert!(s.check_sorted());
+        // background + ~events/inject_every cascades of chain_len nodes
+        let planted = cfg.events / cfg.inject_every * cfg.chain_len;
+        assert!(s.len() >= cfg.events && s.len() <= cfg.events + planted + cfg.chain_len);
+        let smoke = generate(&HugeConfig::smoke(), 1);
+        assert!(smoke.len() < s.len() / 5, "smoke profile must be CI-sized");
+    }
+
+    #[test]
+    fn background_is_long_tailed() {
+        let s = generate(&HugeConfig::default(), 2);
+        let counts = s.type_counts();
+        // the u² draw concentrates mass at low ids: the densest type must
+        // dwarf a deep-tail type (this is what the alphabet remap sorts by)
+        assert!(
+            counts[0] > 5 * counts[400].max(1),
+            "type 0 fired {} vs type 400 {}",
+            counts[0],
+            counts[400]
+        );
+    }
+
+    #[test]
+    fn embedded_chains_are_minable() {
+        let cfg = HugeConfig::default();
+        let s = generate(&cfg, 3);
+        let per_chain = cfg.events / cfg.inject_every / cfg.chains;
+        for ep in cfg.embedded_episodes() {
+            let count = serial::count_a1(&ep, &s);
+            assert!(
+                count as usize > per_chain / 2,
+                "{} occurred {count}, planted ~{per_chain}",
+                ep.display()
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&HugeConfig::default(), 9);
+        let b = generate(&HugeConfig::default(), 9);
+        assert_eq!(a, b);
+        let c = generate(&HugeConfig::default(), 10);
+        assert_ne!(a, c);
+    }
+}

@@ -8,6 +8,9 @@
 //!   bursts whose rate and size grow with culture age, plus synfire
 //!   chains that strengthen day over day. See DESIGN.md §5 for why this
 //!   substitution preserves what the experiments exercise.
+//! - `huge`: a 512-type Zipf-skewed background with embedded causal
+//!   chains — the huge-alphabet workload the arena-backed candidate
+//!   engine and frequency-sorted alphabet remap are built for.
 //!
 //! The [`REGISTRY`] is the single source of truth for dataset names and
 //! their default physiological delay bands — the CLI, the `Session`
@@ -23,6 +26,7 @@
 //! - `log:<dir>` — a sealed [`crate::ingest::SpikeLog`] recording.
 
 pub mod culture;
+pub mod huge;
 pub mod sym26;
 
 use std::path::Path;
@@ -69,6 +73,11 @@ pub const REGISTRY: &[DatasetInfo] = &[
         name: "2-1-35",
         default_interval: (2, 10),
         description: "developing-culture analog, day-in-vitro 35",
+    },
+    DatasetInfo {
+        name: "huge-alphabet",
+        default_interval: (2, 10),
+        description: "512-type Zipf-skewed background + embedded chains (arena/remap workload)",
     },
 ];
 
@@ -120,6 +129,9 @@ pub fn by_name(name: &str, seed: u64) -> Option<(EventStream, &'static str)> {
         "2-1-33" => Some((culture::generate(&culture::CultureConfig::day(33), seed), "2-1-33")),
         "2-1-34" => Some((culture::generate(&culture::CultureConfig::day(34), seed), "2-1-34")),
         "2-1-35" => Some((culture::generate(&culture::CultureConfig::day(35), seed), "2-1-35")),
+        "huge-alphabet" => {
+            Some((huge::generate(&huge::HugeConfig::default(), seed), "huge-alphabet"))
+        }
         _ => None,
     }
 }
@@ -184,6 +196,8 @@ mod tests {
         assert_eq!(default_interval("sym26"), Some(Interval::new(s.d_low, s.d_high)));
         let c = culture::CultureConfig::day(35);
         assert_eq!(default_interval("2-1-35"), Some(Interval::new(c.d_low, c.d_high)));
+        let h = huge::HugeConfig::default();
+        assert_eq!(default_interval("huge-alphabet"), Some(Interval::new(h.d_low, h.d_high)));
         assert_eq!(default_interval("unknown"), None);
     }
 }

@@ -34,6 +34,7 @@ fn registry_covers_every_bench_target() {
         "serve_load",
         "ingest_replay",
         "stream_incremental",
+        "candidate_scaling",
     ];
     assert_eq!(SUITES.len(), expected.len());
     for name in expected {
