@@ -1,0 +1,231 @@
+//! The arena-backed candidate engine's acceptance criteria: the
+//! block-streamed generate-count-prune loop (SoA arena + bucketed joins +
+//! frequency-sorted alphabet remap) must be observationally identical to
+//! the legacy per-episode loop it replaced — same frequent episodes in
+//! the same order with the same exact counts, same per-level candidate
+//! and survivor tallies, and the same typed error when the candidate cap
+//! fires — across randomized streams, alphabet sizes from 3 to 512,
+//! one- and two-interval constraint sets, and both counting modes.
+
+use episodes_gpu::backend::cpu::CpuSerialBackend;
+use episodes_gpu::backend::two_pass::TwoPassBackend;
+use episodes_gpu::coordinator::Strategy;
+use episodes_gpu::datasets::huge::{self, HugeConfig};
+use episodes_gpu::episodes::{candidates, CountedEpisode, Episode, Interval};
+use episodes_gpu::events::EventStream;
+use episodes_gpu::mining::serial;
+use episodes_gpu::util::rng::Rng;
+use episodes_gpu::{MineError, Session};
+
+/// The pre-arena mining loop, reimplemented test-locally over the public
+/// candidate generators and the serial counting reference: level-1
+/// alphabet scan, suffix-prefix joins over each frequent set, one exact
+/// count per heap-allocated candidate, theta filter — in the legacy
+/// generation order throughout. Returns the frequent set plus per-level
+/// (candidates, frequent) tallies.
+#[allow(clippy::type_complexity)]
+fn legacy_mine(
+    stream: &EventStream,
+    theta: u64,
+    i_set: &[Interval],
+    max_level: usize,
+    cap: usize,
+) -> Result<(Vec<CountedEpisode>, Vec<(usize, usize)>), MineError> {
+    let mut frequent = vec![];
+    let mut levels = vec![];
+    let mut frontier: Vec<Episode> = vec![];
+    for level in 1..=max_level {
+        let cands = if level == 1 {
+            candidates::level1(stream.n_types)
+        } else {
+            candidates::next_level(&frontier, i_set)
+        };
+        if cands.is_empty() {
+            break;
+        }
+        if cands.len() > cap {
+            return Err(MineError::CandidateExplosion { level, candidates: cands.len(), cap });
+        }
+        let mut survivors = vec![];
+        for ep in &cands {
+            let count = serial::count_a1(ep, stream);
+            if count >= theta {
+                survivors.push(CountedEpisode { episode: ep.clone(), count });
+            }
+        }
+        levels.push((cands.len(), survivors.len()));
+        frontier = survivors.iter().map(|c| c.episode.clone()).collect();
+        frequent.extend(survivors);
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    Ok((frequent, levels))
+}
+
+/// Mine through the library's arena-backed loop: one-pass serial, or the
+/// two-pass A2-elimination composite over the same serial engine.
+fn arena_mine(
+    stream: &EventStream,
+    theta: u64,
+    i_set: &[Interval],
+    max_level: usize,
+    cap: usize,
+    two_pass: bool,
+) -> Result<episodes_gpu::coordinator::miner::MineResult, MineError> {
+    let builder = Session::builder()
+        .stream(stream.clone())
+        .theta(theta)
+        .intervals(i_set.to_vec())
+        .max_level(max_level)
+        .max_candidates_per_level(cap)
+        .one_pass();
+    let builder = if two_pass {
+        let serial = Box::new(CpuSerialBackend::new());
+        builder.backend(Box::new(TwoPassBackend::new(serial, theta)))
+    } else {
+        builder.strategy(Strategy::CpuSerial)
+    };
+    builder.build()?.mine()
+}
+
+/// A random stream: `events` events over `n_types` types with 1-4 tick
+/// gaps — small alphabets at low theta put every level's frontier in
+/// motion across seeds.
+fn random_stream(seed: u64, events: usize, n_types: usize) -> EventStream {
+    let mut rng = Rng::new(seed);
+    let mut pairs = Vec::with_capacity(events);
+    let mut t = 0;
+    for _ in 0..events {
+        t += rng.range_i32(1, 4);
+        pairs.push((rng.range_i32(0, n_types as i32 - 1), t));
+    }
+    EventStream::from_pairs(pairs, n_types)
+}
+
+fn assert_equivalent(
+    stream: &EventStream,
+    theta: u64,
+    i_set: &[Interval],
+    max_level: usize,
+    tag: &str,
+) {
+    let (want_frequent, want_levels) =
+        legacy_mine(stream, theta, i_set, max_level, 2_000_000).unwrap();
+    for two_pass in [false, true] {
+        let got = arena_mine(stream, theta, i_set, max_level, 2_000_000, two_pass).unwrap();
+        assert_eq!(
+            got.frequent, want_frequent,
+            "{tag} two_pass={two_pass}: frequent set diverged from the legacy loop"
+        );
+        let got_levels: Vec<(usize, usize)> =
+            got.levels.iter().map(|l| (l.candidates, l.frequent)).collect();
+        assert_eq!(
+            got_levels, want_levels,
+            "{tag} two_pass={two_pass}: per-level candidate/survivor tallies diverged"
+        );
+    }
+}
+
+#[test]
+fn arena_matches_legacy_on_random_small_alphabets() {
+    // Alphabets 3 and 26, |I| in {1, 2}, levels to 5, thetas near the
+    // frequency boundary: the regime where generation order, prune
+    // decisions, and join bucketing all show through in the output.
+    let two_ivs = [Interval::new(0, 5), Interval::new(2, 9)];
+    for seed in 0..6u64 {
+        let one_iv = [Interval::new(0, 4 + (seed % 3) as i32)];
+        for &n_types in &[3usize, 26] {
+            let events = if n_types == 3 { 150 } else { 1_200 };
+            let stream = random_stream(0xC0FFEE ^ seed.wrapping_mul(0x9E37), events, n_types);
+            let theta = if n_types == 3 { 3 + seed % 3 } else { 6 + seed % 4 };
+            let tag = format!("seed {seed} alphabet {n_types}");
+            assert_equivalent(&stream, theta, &one_iv, 5, &format!("{tag} |I|=1"));
+            assert_equivalent(&stream, theta, &two_ivs, 4, &format!("{tag} |I|=2"));
+        }
+    }
+}
+
+#[test]
+fn arena_matches_legacy_on_huge_alphabet() {
+    // The workload the engine exists for: 512 types, Zipf-skewed, with
+    // theta pinned to the 16th-densest type so the level-2+ frontier is
+    // small enough for the quadratic legacy reference to stay tractable.
+    let cfg = HugeConfig::smoke();
+    let stream = huge::generate(&cfg, 0x512);
+    let mut counts = stream.type_counts();
+    counts.sort_unstable_by_key(|&c| std::cmp::Reverse(c));
+    let theta = counts[15].max(1);
+    let i_set = cfg.interval_set();
+    assert_equivalent(&stream, theta, &i_set, 3, "huge-alphabet");
+
+    // The remap inversion check, explicitly: every reported episode is in
+    // *original* type ids (the dense relabeling never leaks), and its
+    // count is the serial reference count over the *original* stream.
+    let result = arena_mine(&stream, theta, &i_set, 3, 2_000_000, false).unwrap();
+    assert!(result.frequent.iter().any(|c| c.episode.n() >= 2), "workload mined nothing");
+    for c in &result.frequent {
+        assert!(
+            c.episode.types.iter().all(|&ty| ty >= 0 && (ty as usize) < stream.n_types),
+            "leaked dense id in {:?}",
+            c.episode
+        );
+        assert_eq!(c.count, serial::count_a1(&c.episode, &stream), "{:?}", c.episode);
+    }
+}
+
+#[test]
+fn candidate_cap_errors_match_the_legacy_loop() {
+    // theta 1 on a dense 5-type stream explodes at level 2 (25 candidates)
+    // and, with a looser cap, at level 3 — the arena loop must fail fast
+    // with exactly the legacy loop's typed error, counting the would-be
+    // candidates before materializing any of them.
+    let stream = random_stream(0xCA9, 200, 5);
+    let i_set = [Interval::new(0, 6)];
+    for cap in [10usize, 30] {
+        let want = match legacy_mine(&stream, 1, &i_set, 4, cap) {
+            Err(MineError::CandidateExplosion { level, candidates, cap }) => {
+                (level, candidates, cap)
+            }
+            other => panic!("legacy loop must explode at cap {cap}, got {other:?}"),
+        };
+        for two_pass in [false, true] {
+            match arena_mine(&stream, 1, &i_set, 4, cap, two_pass) {
+                Err(MineError::CandidateExplosion { level, candidates, cap }) => {
+                    assert_eq!((level, candidates, cap), want, "two_pass={two_pass}");
+                }
+                other => panic!("arena loop must explode identically, got {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn block_size_does_not_change_results() {
+    // candidate_block is an execution knob: any block size, from
+    // one-candidate-at-a-time to everything-in-one-block, must produce
+    // byte-identical results and per-level reports.
+    let stream = random_stream(0xB10C, 800, 8);
+    let i_set = [Interval::new(0, 5)];
+    let theta = 5;
+    let reference = arena_mine(&stream, theta, &i_set, 4, 2_000_000, false).unwrap();
+    assert!(!reference.frequent.is_empty());
+    for block in [1usize, 7, 64, 1 << 20] {
+        let mut session = Session::builder()
+            .stream(stream.clone())
+            .theta(theta)
+            .intervals(i_set.to_vec())
+            .strategy(Strategy::CpuSerial)
+            .one_pass()
+            .max_level(4)
+            .candidate_block(block)
+            .build()
+            .unwrap();
+        let got = session.mine().unwrap();
+        assert_eq!(got.frequent, reference.frequent, "block {block}");
+        let tally = |r: &episodes_gpu::coordinator::miner::MineResult| -> Vec<(usize, usize)> {
+            r.levels.iter().map(|l| (l.candidates, l.frequent)).collect()
+        };
+        assert_eq!(tally(&got), tally(&reference), "block {block}");
+    }
+}

@@ -169,6 +169,40 @@ fn diff_stream_replays_to_the_final_frequent_set() {
     }
 }
 
+#[test]
+fn frontier_move_regenerates_candidates_and_stays_exact() {
+    // Arena-cached candidate generation: while the per-level frequency
+    // frontier is stable, a commit reuses the cached candidate blocks
+    // (candidate_regens == 0); the moment the frontier moves, the affected
+    // levels regenerate. Either way the frequent set must equal a cold
+    // batch re-mine at every single commit. Six segments of a 0->1 pattern
+    // hold the frontier still, then a 1->2 pattern pushes type 2 over
+    // theta and moves it.
+    let iv = Interval::new(0, 6);
+    let theta = 2;
+    let cfg = IncrementalConfig::new(theta, vec![iv]).max_level(3).window_segments(3);
+    let mut miner = IncrementalMiner::new(3, cfg).unwrap();
+    let seg = |base: i32, a: i32, b: i32| {
+        let pairs: Vec<(i32, i32)> =
+            (0..3).flat_map(|i| [(a, base + 4 * i + 1), (b, base + 4 * i + 3)]).collect();
+        EventStream::from_pairs(pairs, 3)
+    };
+    let mut saw_cached = false;
+    for step in 0..10 {
+        let (a, b) = if step < 6 { (0, 1) } else { (1, 2) };
+        let update = miner.push_segment(seg(20 * step, a, b)).unwrap();
+        let batch = cold_mine(&miner.window_stream(), theta, iv, 3);
+        assert_eq!(*update.frequent, batch, "step {step}: diverged from batch re-mine");
+        if (3..6).contains(&step) && update.stats.candidate_regens == 0 {
+            saw_cached = true;
+        }
+        if step == 6 {
+            assert!(update.stats.candidate_regens > 0, "frontier moved, cache must invalidate");
+        }
+    }
+    assert!(saw_cached, "steady-state commits must reuse cached candidate blocks");
+}
+
 // ---- subscription push path (deterministic via the paused pool) ----
 
 fn paused_service(max_subs: usize) -> MineService {
