@@ -36,8 +36,13 @@
 //!
 //! - [`events`] / [`datasets`] — spike-train data model, generators, and
 //!   the dataset registry (names + default delay bands).
-//! - [`episodes`] — serial episodes with inter-event constraints and
-//!   level-wise candidate generation.
+//! - [`episodes`] — serial episodes with inter-event constraints,
+//!   level-wise candidate generation, and the arena-backed candidate
+//!   engine: a flat SoA episode lattice ([`episodes::arena::EpisodeArena`],
+//!   14 B/candidate with parent + suffix links), bucketed O(F + output)
+//!   suffix-prefix joins, and the frequency-sorted alphabet remap that
+//!   keeps huge-alphabet pruning cache-friendly (every report is
+//!   inverted back to original type ids).
 //! - [`mining`] — CPU reference algorithms (Algorithm 1, Algorithm 3, the
 //!   paper's multithreaded baseline, profiler telemetry).
 //! - [`gpu_model`] — analytical GTX280 model (occupancy, crossover fits,
@@ -49,8 +54,9 @@
 //!   (episode-axis), stream-sharded CPU (stream-axis time shards, strategy
 //!   `cpu-sharded`), PTPE, MapConcatenate, Hybrid composition, two-pass
 //!   elimination.
-//! - [`session`] — the [`Session`] facade, its builder, and the level-wise
-//!   mining driver.
+//! - [`session`] — the [`Session`] facade, its builder, and the
+//!   block-streamed level-wise mining driver (generate-count-prune in
+//!   bounded candidate blocks, [`SessionBuilder::candidate_block`]).
 //! - [`ingest`] — the durable spike log: checksummed columnar segments
 //!   sealed by an [`ingest::Ingestor`] (fed directly from the streaming
 //!   partition producer), a crash-recovering [`ingest::SpikeLog`]
