@@ -1,0 +1,10 @@
+//! Scatter-gather distributed mining vs single-process — registered as
+//! the `cluster_scatter` suite in `episodes_gpu::bench`. The suite body
+//! lives in `src/bench/suites/cluster_scatter.rs`.
+//!
+//! Run: `cargo bench --bench cluster_scatter
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
+
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("cluster_scatter")
+}

@@ -106,6 +106,11 @@ pub const SUITES: &[SuiteDef] = &[
         description: "arena bucketed generation vs legacy quadratic join (huge alphabets)",
         run: suites::candidate_scaling::run,
     },
+    SuiteDef {
+        name: "cluster_scatter",
+        description: "scatter-gather distributed mining vs single-process (cluster/)",
+        run: suites::cluster_scatter::run,
+    },
 ];
 
 /// Look a suite up by name.
@@ -158,7 +163,7 @@ mod tests {
             assert!(!names[i + 1..].contains(n), "duplicate suite {n}");
             assert!(find(n).is_some());
         }
-        assert_eq!(SUITES.len(), 12, "every bench target registers exactly once");
+        assert_eq!(SUITES.len(), 13, "every bench target registers exactly once");
         assert!(find("nonexistent").is_none());
     }
 

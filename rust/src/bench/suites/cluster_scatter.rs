@@ -1,0 +1,156 @@
+//! Distributed scatter-gather mining over a segmented log — the tentpole
+//! metrics for the `cluster/` layer.
+//!
+//! `mine/single_process` is the one-machine baseline (`Session::mine`
+//! over the whole recording). `scatter/nodes1` and `scatter/nodes4` run
+//! the same query through `ScatterMiner` over a `LocalCluster` (threads
+//! as nodes, full wire codec, no sockets): nodes1 prices the protocol
+//! overhead, nodes4 the parallel win. Before anything is timed, the
+//! distributed result is checked byte-identical to the single-process
+//! mine — a divergence fails the suite, because a fast wrong answer is
+//! not a benchmark. The acceptance gate: 4-node scatter must beat
+//! single-node scatter on a multi-segment log. `saturation/curve` drives
+//! concurrent closed-loop clients through the coordinator for the
+//! latency-under-saturation picture.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::cluster::{LocalCluster, ScatterConfig, ScatterMiner};
+use crate::coordinator::miner::MineResult;
+use crate::coordinator::Strategy;
+use crate::episodes::Interval;
+use crate::error::MineError;
+use crate::ingest::{RollPolicy, SpikeLog};
+use crate::serve::loadgen::cluster_curve;
+use crate::serve::ServiceConfig;
+use crate::session::{MineOptions, DEFAULT_CANDIDATE_BLOCK};
+use crate::Session;
+
+use super::super::harness::{SuiteCtx, Work};
+use super::synth_stream;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bench_cluster_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The identity two mines are compared on: episodes with counts, in
+/// order, plus per-level tallies (timing fields excluded).
+fn shape(r: &MineResult) -> (Vec<(String, u64)>, Vec<(usize, usize, usize, u64)>) {
+    (
+        r.frequent.iter().map(|c| (c.episode.display(), c.count)).collect(),
+        r.levels
+            .iter()
+            .map(|l| (l.level, l.candidates, l.frequent, l.culled_by_a2))
+            .collect(),
+    )
+}
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    let events = if ctx.smoke { 30_000 } else { 200_000 };
+    let n_types = 10usize;
+    let theta = (events / n_types / 4) as u64;
+    let interval = Interval::new(0, 4);
+    let stream = synth_stream(0xC1A57E2, events, n_types);
+
+    let dir = scratch("log");
+    let mut ingestor = SpikeLog::create(&dir, n_types)?
+        .ingestor(RollPolicy { max_events: events / 16, max_width_ticks: 1_000_000_000 })?;
+    ingestor.append_stream(&stream)?;
+    let log = ingestor.finish()?;
+    let n_segments = log.segments().len();
+    if n_segments < 8 {
+        return Err(MineError::internal(format!(
+            "cluster fixture must span >= 8 segments, got {n_segments}"
+        )));
+    }
+    let opts = MineOptions {
+        theta,
+        intervals: vec![interval],
+        max_level: 3,
+        max_candidates_per_level: 2_000_000,
+        candidate_block: DEFAULT_CANDIDATE_BLOCK,
+    };
+    let node_service = || {
+        let d = ServiceConfig::default();
+        ServiceConfig { workers: 1, strategy: Strategy::CpuSerial, ..d }
+    };
+
+    // the one-machine ground truth, reused as the exactness reference
+    let mut single = Session::builder()
+        .stream(stream)
+        .theta(theta)
+        .interval(interval)
+        .strategy(Strategy::CpuSerial)
+        .max_level(3)
+        .max_candidates_per_level(2_000_000)
+        .build()?;
+    let want = single.mine()?;
+
+    let cluster1 = LocalCluster::start(&dir, 1, node_service())?;
+    let miner1 = ScatterMiner::connect(&dir, cluster1.links(), ScatterConfig::default())?;
+    let cluster4 = LocalCluster::start(&dir, 4, node_service())?;
+    let miner4 = ScatterMiner::connect(&dir, cluster4.links(), ScatterConfig::default())?;
+
+    // Exactness gate: the distributed answer must be byte-identical
+    // before any of its timings mean anything.
+    let got = miner4.mine_all(&opts, false, "bench")?;
+    if shape(&got) != shape(&want) {
+        return Err(MineError::internal(format!(
+            "distributed mine diverged from single-process: {} vs {} frequent episodes",
+            got.frequent.len(),
+            want.frequent.len()
+        )));
+    }
+    ctx.note(format!(
+        "exactness gate: {} frequent episodes over {n_segments} segments, \
+         4-node scatter == single-process",
+        want.frequent.len()
+    ));
+
+    let ev = events as u64;
+    ctx.measure("mine/single_process", Work::events(ev), || {
+        single.mine().expect("single-process mine").frequent.len() as u64
+    });
+    ctx.measure("scatter/nodes1", Work::events(ev), || {
+        miner1.mine_all(&opts, false, "bench").expect("1-node scatter").frequent.len() as u64
+    });
+    ctx.measure("scatter/nodes4", Work::events(ev), || {
+        miner4.mine_all(&opts, false, "bench").expect("4-node scatter").frequent.len() as u64
+    });
+
+    let n1 = ctx.median_ns("scatter/nodes1").unwrap_or(f64::MAX);
+    let n4 = ctx.median_ns("scatter/nodes4").unwrap_or(f64::MAX);
+    ctx.note(format!(
+        "scatter scaling: 4 nodes {:.1}ms vs 1 node {:.1}ms ({:.2}x)",
+        n4 / 1e6,
+        n1 / 1e6,
+        n1 / n4
+    ));
+    if n4 >= n1 {
+        return Err(MineError::internal(format!(
+            "4-node scatter must beat single-node on a {n_segments}-segment log: \
+             {:.1}ms vs {:.1}ms",
+            n4 / 1e6,
+            n1 / 1e6
+        )));
+    }
+
+    // Latency under saturation: closed-loop tenants against the 4-node
+    // coordinator; admission sheds instead of queueing unboundedly.
+    let steps: Vec<usize> = if ctx.smoke { vec![2] } else { vec![2, 4, 8] };
+    let t0 = Instant::now();
+    let points = cluster_curve(&miner4, &opts, false, &steps, 1);
+    let wall = t0.elapsed().as_nanos() as f64;
+    let completed: u64 = points.iter().map(|p| p.completed).sum();
+    ctx.record("saturation/curve", Work::items(completed, "mines"), wall, completed);
+    for p in &points {
+        ctx.note(p.report());
+    }
+    ctx.note(miner4.metrics().report());
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -1,0 +1,446 @@
+//! Tenant-aware admission for the scatter coordinator.
+//!
+//! The serving layer already bounds *queue depth* (`serve/pool.rs`
+//! rejects into [`MineError::Busy`] when its job queue fills). A
+//! coordinator fronting a whole cluster needs a second, tenant-shaped
+//! gate in front of that: one tenant issuing huge range queries must
+//! not starve everyone else's small ones, and when the cluster
+//! saturates, *who* waits should follow priority, not arrival order.
+//!
+//! [`AdmissionController`] is a counting gate with three rules:
+//!
+//! 1. **Quotas** — each tenant holds at most
+//!    [`TenantQuota::max_in_flight`] concurrent mines, and the
+//!    coordinator holds at most [`AdmissionConfig::total_in_flight`]
+//!    overall. Within quota, admission is immediate.
+//! 2. **Priority queue** — over-quota arrivals wait (bounded by
+//!    [`AdmissionConfig::queue_capacity`]). Releases grant the
+//!    highest-priority, earliest-arrived *eligible* waiter — a waiter
+//!    whose own tenant is still at quota never blocks a grantable one
+//!    behind it.
+//! 3. **Load shedding** — when the wait queue itself is full, either
+//!    the incoming request is rejected with a typed
+//!    [`MineError::Busy`], or — if the arrival outranks the
+//!    lowest-priority waiter — that waiter is shed (woken with `Busy`)
+//!    to make room. Shedding the cheapest victim under pressure is
+//!    what keeps high-priority latency flat while the cluster is
+//!    saturated; `sheds` in the metrics counts every such eviction or
+//!    rejection.
+//!
+//! Grants are RAII [`Permit`]s: dropping one releases the slot and
+//! wakes the queue, so an early return or panic in the mining path can
+//! never leak capacity.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::error::MineError;
+
+/// Per-tenant admission parameters. Higher `priority` wins queue
+/// position and survives shedding longer.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantQuota {
+    /// concurrent mines this tenant may hold
+    pub max_in_flight: usize,
+    /// queue rank (higher = served first, shed last)
+    pub priority: u8,
+}
+
+impl Default for TenantQuota {
+    fn default() -> TenantQuota {
+        TenantQuota { max_in_flight: 4, priority: 0 }
+    }
+}
+
+/// Coordinator-wide admission parameters.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// total concurrent mines across all tenants
+    pub total_in_flight: usize,
+    /// bounded wait queue for over-quota arrivals (0 = never queue:
+    /// over-quota arrivals shed immediately)
+    pub queue_capacity: usize,
+    /// quota applied to tenants with no explicit entry
+    pub default_quota: TenantQuota,
+    /// explicit per-tenant overrides
+    pub tenants: Vec<(String, TenantQuota)>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            total_in_flight: 16,
+            queue_capacity: 64,
+            default_quota: TenantQuota::default(),
+            tenants: Vec::new(),
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn validate(&self) -> Result<(), MineError> {
+        if self.total_in_flight == 0 {
+            return Err(MineError::invalid("AdmissionConfig::total_in_flight must be >= 1"));
+        }
+        if self.default_quota.max_in_flight == 0 {
+            return Err(MineError::invalid(
+                "AdmissionConfig::default_quota.max_in_flight must be >= 1",
+            ));
+        }
+        if let Some((t, _)) =
+            self.tenants.iter().find(|(_, q)| q.max_in_flight == 0)
+        {
+            return Err(MineError::invalid(format!(
+                "tenant {t:?} quota max_in_flight must be >= 1"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WaiterState {
+    Waiting,
+    Granted,
+    Shed,
+}
+
+struct Waiter {
+    id: u64,
+    tenant: String,
+    priority: u8,
+    state: WaiterState,
+}
+
+struct State {
+    total: usize,
+    per_tenant: HashMap<String, usize>,
+    waiters: Vec<Waiter>,
+    next_id: u64,
+    sheds: u64,
+}
+
+/// The tenant-aware counting gate. See the module docs for semantics.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    quotas: HashMap<String, TenantQuota>,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// An admitted slot. Dropping it releases capacity and wakes the
+/// highest-priority eligible waiter.
+pub struct Permit<'a> {
+    ctl: &'a AdmissionController,
+    tenant: String,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.ctl.release(&self.tenant);
+    }
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Result<AdmissionController, MineError> {
+        cfg.validate()?;
+        let quotas = cfg.tenants.iter().cloned().collect();
+        Ok(AdmissionController {
+            cfg,
+            quotas,
+            state: Mutex::new(State {
+                total: 0,
+                per_tenant: HashMap::new(),
+                waiters: Vec::new(),
+                next_id: 0,
+                sheds: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn quota(&self, tenant: &str) -> TenantQuota {
+        self.quotas.get(tenant).copied().unwrap_or(self.cfg.default_quota)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        // a panicked holder leaves counters consistent (every mutation
+        // completes under one lock acquisition), so poisoning is safe
+        // to strip
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn can_grant(&self, s: &State, tenant: &str) -> bool {
+        s.total < self.cfg.total_in_flight
+            && s.per_tenant.get(tenant).copied().unwrap_or(0)
+                < self.quota(tenant).max_in_flight
+    }
+
+    fn grant(&self, s: &mut State, tenant: &str) {
+        s.total += 1;
+        *s.per_tenant.entry(tenant.to_string()).or_insert(0) += 1;
+    }
+
+    /// Non-blocking admission: a permit if the tenant is within quota
+    /// right now, `None` otherwise. Never queues, never sheds.
+    pub fn try_admit(&self, tenant: &str) -> Option<Permit<'_>> {
+        let mut s = self.lock();
+        if self.can_grant(&s, tenant) {
+            self.grant(&mut s, tenant);
+            Some(Permit { ctl: self, tenant: tenant.to_string() })
+        } else {
+            None
+        }
+    }
+
+    /// Blocking admission: returns a permit once capacity frees, or
+    /// [`MineError::Busy`] if the wait queue is full (or this waiter is
+    /// shed by a higher-priority arrival while queued).
+    pub fn admit(&self, tenant: &str) -> Result<Permit<'_>, MineError> {
+        let priority = self.quota(tenant).priority;
+        let mut s = self.lock();
+        if self.can_grant(&s, tenant) {
+            self.grant(&mut s, tenant);
+            return Ok(Permit { ctl: self, tenant: tenant.to_string() });
+        }
+
+        if s.waiters.len() >= self.cfg.queue_capacity {
+            // full queue: shed the lowest-priority latest waiter if this
+            // arrival outranks it, else reject the arrival itself
+            let victim = s
+                .waiters
+                .iter_mut()
+                .filter(|w| w.state == WaiterState::Waiting)
+                .min_by_key(|w| (w.priority, std::cmp::Reverse(w.id)));
+            match victim {
+                Some(v) if v.priority < priority => {
+                    v.state = WaiterState::Shed;
+                    s.sheds += 1;
+                    self.cv.notify_all();
+                }
+                _ => {
+                    s.sheds += 1;
+                    let depth = s.waiters.len();
+                    return Err(MineError::Busy {
+                        queue_depth: depth,
+                        capacity: self.cfg.queue_capacity,
+                    });
+                }
+            }
+        }
+
+        let id = s.next_id;
+        s.next_id += 1;
+        s.waiters.push(Waiter {
+            id,
+            tenant: tenant.to_string(),
+            priority,
+            state: WaiterState::Waiting,
+        });
+
+        loop {
+            let outcome = s
+                .waiters
+                .iter()
+                .find(|w| w.id == id)
+                .map(|w| w.state)
+                .unwrap_or(WaiterState::Shed);
+            match outcome {
+                WaiterState::Waiting => s = self.cv.wait(s).unwrap_or_else(|p| p.into_inner()),
+                done => {
+                    s.waiters.retain(|w| w.id != id);
+                    return match done {
+                        WaiterState::Granted => {
+                            Ok(Permit { ctl: self, tenant: tenant.to_string() })
+                        }
+                        _ => {
+                            let depth = s.waiters.len();
+                            Err(MineError::Busy {
+                                queue_depth: depth,
+                                capacity: self.cfg.queue_capacity,
+                            })
+                        }
+                    };
+                }
+            }
+        }
+    }
+
+    fn release(&self, tenant: &str) {
+        let mut s = self.lock();
+        s.total = s.total.saturating_sub(1);
+        if let Some(n) = s.per_tenant.get_mut(tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                s.per_tenant.remove(tenant);
+            }
+        }
+        // grant every now-eligible waiter: highest priority first,
+        // earliest arrival breaking ties; ineligible (still over their
+        // own quota) waiters are skipped, not blocking
+        loop {
+            let next = s
+                .waiters
+                .iter()
+                .filter(|w| {
+                    w.state == WaiterState::Waiting && self.can_grant(&s, &w.tenant)
+                })
+                .max_by_key(|w| (w.priority, std::cmp::Reverse(w.id)))
+                .map(|w| w.id);
+            let Some(id) = next else { break };
+            let tenant = {
+                let w = s.waiters.iter_mut().find(|w| w.id == id).expect("waiter exists");
+                w.state = WaiterState::Granted;
+                w.tenant.clone()
+            };
+            self.grant(&mut s, &tenant);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Currently admitted mines.
+    pub fn in_flight(&self) -> usize {
+        self.lock().total
+    }
+
+    /// Waiters currently queued.
+    pub fn queued(&self) -> usize {
+        self.lock().waiters.iter().filter(|w| w.state == WaiterState::Waiting).count()
+    }
+
+    /// Cumulative shed + reject count (the saturation signal).
+    pub fn sheds(&self) -> u64 {
+        self.lock().sheds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ctl(total: usize, queue: usize, tenants: Vec<(String, TenantQuota)>) -> AdmissionController {
+        AdmissionController::new(AdmissionConfig {
+            total_in_flight: total,
+            queue_capacity: queue,
+            default_quota: TenantQuota { max_in_flight: 2, priority: 0 },
+            tenants,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn quotas_bound_each_tenant_and_the_total() {
+        let c = ctl(3, 8, vec![]);
+        let a1 = c.try_admit("a").unwrap();
+        let _a2 = c.try_admit("a").unwrap();
+        assert!(c.try_admit("a").is_none(), "tenant quota (2) reached");
+        let _b1 = c.try_admit("b").unwrap();
+        assert!(c.try_admit("b").is_none(), "total (3) reached");
+        drop(a1);
+        assert!(c.try_admit("b").is_some(), "release frees the total");
+    }
+
+    #[test]
+    fn full_queue_rejects_into_busy() {
+        let c = ctl(1, 0, vec![]);
+        let _hold = c.try_admit("a").unwrap();
+        match c.admit("b") {
+            Err(MineError::Busy { capacity: 0, .. }) => {}
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        assert_eq!(c.sheds(), 1);
+    }
+
+    #[test]
+    fn release_grants_by_priority_then_arrival() {
+        let quotas = vec![
+            ("lo".to_string(), TenantQuota { max_in_flight: 2, priority: 1 }),
+            ("hi".to_string(), TenantQuota { max_in_flight: 2, priority: 5 }),
+        ];
+        let c = Arc::new(ctl(1, 8, quotas));
+        let hold = c.try_admit("seed").unwrap();
+
+        let spawn_waiter = |tenant: &str| {
+            let c = Arc::clone(&c);
+            let tenant = tenant.to_string();
+            std::thread::spawn(move || {
+                let p = c.admit(&tenant).expect("granted eventually");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                drop(p);
+                tenant
+            })
+        };
+
+        let lo = spawn_waiter("lo");
+        // ensure lo is queued before hi arrives
+        while c.queued() < 1 {
+            std::thread::yield_now();
+        }
+        let hi = spawn_waiter("hi");
+        while c.queued() < 2 {
+            std::thread::yield_now();
+        }
+
+        drop(hold);
+        // both eventually complete; hi was granted first (it finishes
+        // strictly before lo can even start, since total=1)
+        hi.join().unwrap();
+        lo.join().unwrap();
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn higher_priority_arrival_sheds_the_lowest_waiter() {
+        let quotas = vec![
+            ("lo".to_string(), TenantQuota { max_in_flight: 2, priority: 0 }),
+            ("hi".to_string(), TenantQuota { max_in_flight: 2, priority: 9 }),
+        ];
+        let c = Arc::new(ctl(1, 1, quotas));
+        let hold = c.try_admit("seed").unwrap();
+
+        let c2 = Arc::clone(&c);
+        let lo = std::thread::spawn(move || c2.admit("lo"));
+        while c.queued() < 1 {
+            std::thread::yield_now();
+        }
+
+        // queue is full (capacity 1); hi outranks lo → lo is shed
+        let c3 = Arc::clone(&c);
+        let hi = std::thread::spawn(move || c3.admit("hi"));
+        let lo_result = lo.join().unwrap();
+        assert!(
+            matches!(lo_result, Err(MineError::Busy { .. })),
+            "low-priority waiter shed: {lo_result:?}"
+        );
+        assert_eq!(c.sheds(), 1);
+
+        drop(hold);
+        let hi_permit = hi.join().unwrap();
+        assert!(hi_permit.is_ok(), "high-priority waiter granted after release");
+    }
+
+    #[test]
+    fn permit_drop_is_exception_safe() {
+        let c = ctl(1, 4, vec![]);
+        {
+            let _p = c.try_admit("a").unwrap();
+            assert_eq!(c.in_flight(), 1);
+        }
+        assert_eq!(c.in_flight(), 0, "drop released the slot");
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(AdmissionController::new(AdmissionConfig {
+            total_in_flight: 0,
+            ..AdmissionConfig::default()
+        })
+        .is_err());
+        let bad = AdmissionConfig {
+            tenants: vec![("t".to_string(), TenantQuota { max_in_flight: 0, priority: 0 })],
+            ..AdmissionConfig::default()
+        };
+        assert!(AdmissionController::new(bad).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! Distributed mining: scatter-gather over log segments (ROADMAP item 3).
+//!
+//! The ingest log is the sharding unit the paper's pipeline was always
+//! pointing at: time-bounded, checksummed, individually-readable
+//! segments. This layer fans a `log:` range query out across mining
+//! nodes and merges the answers **byte-identical** to a single-process
+//! mine — the MapConcatenate stitch (paper §5.2.2), generalized across
+//! machines instead of GPU segments, with the same flagged-miss +
+//! recount exactness contract the in-process engines pin.
+//!
+//! The pieces, coordinator-side to node-side:
+//!
+//! - [`scatter`] — the coordinator ([`ScatterMiner`]): runs the exact
+//!   level-wise driver locally and distributes only the counting
+//!   (per-window `MapCount`/`RelaxedCount` RPCs with `span_max` halos),
+//!   with deadlines, bounded retry onto surviving nodes, hedged
+//!   duplicates for stragglers, and per-node latency metrics. Includes
+//!   the in-process [`LocalCluster`] harness (threads as nodes,
+//!   injectable drop/delay/corrupt/die faults) so tests and benches run
+//!   the full codec path without sockets.
+//! - [`node`] — the worker ([`ClusterNode`], `epminer node`): a
+//!   [`SpikeLog`](crate::ingest::SpikeLog) replica plus an embedded
+//!   [`MineService`](crate::serve::MineService), answering requests only
+//!   after verifying the coordinator's content fingerprint against its
+//!   own log.
+//! - [`proto`] — the length-prefixed JSON wire protocol: versioned
+//!   envelopes, typed [`MineError`](crate::error::MineError) round-trip,
+//!   hostile-input-safe decoding.
+//! - [`admission`] — tenant-aware coordinator admission: per-tenant
+//!   in-flight quotas, priority-then-arrival granting, bounded queueing
+//!   that sheds into typed `Busy`.
+
+pub mod admission;
+pub mod node;
+pub mod proto;
+pub mod scatter;
+
+pub use admission::{AdmissionConfig, AdmissionController, TenantQuota};
+pub use node::{ClusterNode, NodeState};
+pub use scatter::{
+    ClusterMetrics, ClusterNodeMetrics, Fault, LocalCluster, NodeLink, ScatterConfig,
+    ScatterMiner, TcpLink,
+};

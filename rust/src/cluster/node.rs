@@ -1,0 +1,293 @@
+//! The cluster worker: a mining node serving its local log copy.
+//!
+//! A node owns exactly three things — an opened [`SpikeLog`], one
+//! cached full read of it, and an embedded [`MineService`] — and
+//! answers the five [`Request`](super::proto::Request) shapes. The
+//! request dispatcher ([`NodeState::handle_frame`]) is transport-free:
+//! the TCP accept loop ([`ClusterNode`]) and the in-process
+//! `LocalCluster` test harness both feed it raw frame bytes, so fault
+//! injection in tests exercises the *same* codec and dispatch path
+//! production traffic takes.
+//!
+//! # Exactness obligations
+//!
+//! The scatter coordinator's merge is only byte-identical to a
+//! single-process mine if every node counts exactly what the
+//! coordinator planned:
+//!
+//! - **Fingerprint check** — every counting request names the windowed
+//!   stream it was planned against
+//!   ([`proto::range_fingerprint`](super::proto::range_fingerprint));
+//!   the node recomputes the fingerprint from its own log and refuses
+//!   a mismatch with [`MineError::Corrupt`]. A node holding a stale or
+//!   diverged log replica fails the sub-mine rather than merging wrong
+//!   counts. Verified fingerprints are cached per window, so the
+//!   O(events) check is paid once per (range, log-state), not per RPC.
+//! - **Clamped halos** — a `MapCount` for shard `(lo, hi]` scans
+//!   `(lo - halo, hi + halo]` *clamped to the query range*
+//!   `(t_from, t_to]`. The coordinator's reference stream is
+//!   range-windowed, so an unclamped halo would let a node see (and
+//!   count into boundary machines) events outside the query range that
+//!   the single-process mine never sees.
+//! - **Untrusted input** — episodes are alphabet-checked against the
+//!   node's log before counting (`mapcat_map` would panic, and
+//!   per-type tables would index out of bounds, on a hostile frame).
+
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::episodes::Episode;
+use crate::error::MineError;
+use crate::events::{EventStream, Tick};
+use crate::ingest::SpikeLog;
+use crate::mining::serial;
+use crate::serve::{MineService, Query, ServiceConfig};
+use crate::util::json::Json;
+
+use super::proto::{self, Request, Response, PROTO_VERSION};
+
+/// One worker's state: log + cached stream + embedded service.
+pub struct NodeState {
+    service: MineService,
+    inner: Mutex<NodeInner>,
+}
+
+struct NodeInner {
+    log: SpikeLog,
+    /// one full read of the log, shared by every counting request
+    stream: Arc<EventStream>,
+    /// windows whose [`range_fingerprint`](proto::range_fingerprint)
+    /// this log state has already been checked against
+    fingerprints: std::collections::HashMap<(Tick, Tick), u64>,
+}
+
+impl NodeState {
+    /// Open `log_dir` and start the embedded service.
+    pub fn open(log_dir: &Path, service: ServiceConfig) -> Result<NodeState, MineError> {
+        let log = SpikeLog::open(log_dir)?;
+        let (stream, _) = log.read_all()?;
+        let service = MineService::start(service)?;
+        Ok(NodeState {
+            service,
+            inner: Mutex::new(NodeInner {
+                log,
+                stream: Arc::new(stream),
+                fingerprints: std::collections::HashMap::new(),
+            }),
+        })
+    }
+
+    /// Pick up segments sealed since open (or the last refresh);
+    /// returns how many arrived. New data invalidates the cached
+    /// stream and every verified fingerprint.
+    pub fn refresh(&self) -> Result<usize, MineError> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let fresh = inner.log.refresh()?;
+        if fresh > 0 {
+            let (stream, _) = inner.log.read_all()?;
+            inner.stream = Arc::new(stream);
+            inner.fingerprints.clear();
+        }
+        Ok(fresh)
+    }
+
+    /// The embedded service (metrics, subscriptions).
+    pub fn service(&self) -> &MineService {
+        &self.service
+    }
+
+    /// Verify `fingerprint` names this log's `(t_from, t_to]` window,
+    /// returning the cached full stream on success.
+    fn checked_stream(
+        &self,
+        fingerprint: u64,
+        t_from: Tick,
+        t_to: Tick,
+    ) -> Result<Arc<EventStream>, MineError> {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let local = match inner.fingerprints.get(&(t_from, t_to)) {
+            Some(&fp) => fp,
+            None => {
+                let fp = proto::range_fingerprint(&inner.stream, t_from, t_to);
+                inner.fingerprints.insert((t_from, t_to), fp);
+                fp
+            }
+        };
+        if local != fingerprint {
+            return Err(MineError::corrupt(
+                inner.log.dir().display().to_string(),
+                format!(
+                    "log window ({t_from},{t_to}] fingerprint {local:016x} does not match \
+                     the coordinator's {fingerprint:016x} — node replica diverged?"
+                ),
+            ));
+        }
+        Ok(Arc::clone(&inner.stream))
+    }
+
+    fn validate_episodes(
+        episodes: &[Episode],
+        n_types: usize,
+        min_n: usize,
+    ) -> Result<(), MineError> {
+        for ep in episodes {
+            if ep.n() < min_n {
+                return Err(MineError::invalid(format!(
+                    "request episode has {} node(s); this RPC needs >= {min_n}",
+                    ep.n()
+                )));
+            }
+            if let Some(&ty) =
+                ep.types.iter().find(|&&t| t < 0 || t as usize >= n_types)
+            {
+                return Err(MineError::OutOfAlphabet { type_id: ty, n_types });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one request. Pure dispatch — no transport, no framing.
+    pub fn handle_request(&self, req: Request) -> Result<Response, MineError> {
+        match req {
+            Request::Ping => Ok(Response::Pong { version: PROTO_VERSION }),
+            Request::Metrics => {
+                let metrics = Json::parse(&self.service.metrics().to_json())?;
+                Ok(Response::Metrics { metrics })
+            }
+            Request::Mine { fingerprint, options, two_pass, t_from, t_to } => {
+                let full = self.checked_stream(fingerprint, t_from, t_to)?;
+                let mut query = Query::new(
+                    Arc::new(full.window(t_from, t_to)),
+                    options.theta,
+                    options.intervals,
+                );
+                query.max_level = options.max_level;
+                query.max_candidates_per_level = options.max_candidates_per_level;
+                query.two_pass = two_pass;
+                let result = self.service.submit(query)?.wait()?;
+                Ok(Response::Mine { result: (*result).clone() })
+            }
+            Request::MapCount { fingerprint, episodes, t_from, t_to, lo, hi, halo, k } => {
+                let full = self.checked_stream(fingerprint, t_from, t_to)?;
+                Self::validate_episodes(&episodes, full.n_types, 2)?;
+                if !(t_from <= lo && lo < hi && hi <= t_to) || halo < 0 || k == 0 {
+                    return Err(MineError::invalid(format!(
+                        "MapCount window ({lo},{hi}] halo {halo} k {k} is not inside \
+                         the query range ({t_from},{t_to}]"
+                    )));
+                }
+                // halo clamped to the query range: the single-process
+                // reference never sees events outside (t_from, t_to]
+                let sub = full
+                    .window(lo.saturating_sub(halo).max(t_from), hi.saturating_add(halo).min(t_to));
+                let machines = episodes
+                    .iter()
+                    .map(|ep| serial::mapcat_map(ep, &sub, &[lo, hi], k).swap_remove(0))
+                    .collect();
+                Ok(Response::MapCount { machines })
+            }
+            Request::RelaxedCount { fingerprint, episodes, t_from, t_to } => {
+                let full = self.checked_stream(fingerprint, t_from, t_to)?;
+                Self::validate_episodes(&episodes, full.n_types, 1)?;
+                let sub = full.window(t_from, t_to);
+                let counts =
+                    episodes.iter().map(|ep| serial::count_a2(ep, &sub)).collect();
+                Ok(Response::RelaxedCount { counts })
+            }
+        }
+    }
+
+    /// Decode one frame, execute it, encode the reply. Never fails:
+    /// codec errors become typed `err` envelopes (correlation id 0,
+    /// since a frame that would not decode has no trustworthy id).
+    pub fn handle_frame(&self, bytes: &[u8]) -> Vec<u8> {
+        match proto::decode_request(bytes) {
+            Ok((id, req)) => proto::encode_response(id, &self.handle_request(req)),
+            Err(e) => proto::encode_response(0, &Err(e)),
+        }
+    }
+}
+
+/// The TCP face of a node: `epminer node --listen <addr> --log <dir>`.
+///
+/// One thread per connection (coordinators hold few, long-lived
+/// connections; an accept storm is not this system's threat model),
+/// frames handled strictly in order per connection.
+pub struct ClusterNode {
+    state: Arc<NodeState>,
+    listener: TcpListener,
+}
+
+impl ClusterNode {
+    /// Bind `addr` and open the node state (log + service).
+    pub fn bind<A: ToSocketAddrs + std::fmt::Display>(
+        addr: A,
+        log_dir: &Path,
+        service: ServiceConfig,
+    ) -> Result<ClusterNode, MineError> {
+        let listener = TcpListener::bind(&addr)
+            .map_err(|e| MineError::io(format!("bind {addr}"), e))?;
+        let state = Arc::new(NodeState::open(log_dir, service)?);
+        Ok(ClusterNode { state, listener })
+    }
+
+    /// The bound address (useful after binding port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr, MineError> {
+        self.listener.local_addr().map_err(|e| MineError::io("local_addr", e))
+    }
+
+    /// Shared node state (tests poke metrics through it).
+    pub fn state(&self) -> &Arc<NodeState> {
+        &self.state
+    }
+
+    fn serve_connection(state: &NodeState, stream: &mut TcpStream) {
+        loop {
+            match proto::read_frame(stream) {
+                Ok(Some(bytes)) => {
+                    let reply = state.handle_frame(&bytes);
+                    if proto::write_frame(stream, &reply).is_err() {
+                        return; // peer gone; nothing to tell it
+                    }
+                }
+                Ok(None) => return, // clean close
+                Err(e) => {
+                    // a best-effort typed reply, then hang up: the
+                    // stream's framing can no longer be trusted
+                    let _ = proto::write_frame(stream, &proto::encode_response(0, &Err(e)));
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Accept loop, one handler thread per connection. Runs until the
+    /// process exits (the CLI entry point).
+    pub fn run(self) -> Result<(), MineError> {
+        for conn in self.listener.incoming() {
+            let mut conn = match conn {
+                Ok(c) => c,
+                Err(e) => return Err(MineError::io("accept", e)),
+            };
+            let state = Arc::clone(&self.state);
+            std::thread::spawn(move || {
+                let _ = conn.set_nodelay(true);
+                ClusterNode::serve_connection(&state, &mut conn);
+            });
+        }
+        Ok(())
+    }
+
+    /// Run the accept loop on a background thread, returning the bound
+    /// address and the node state. The thread is detached — it lives
+    /// until the process exits (tests bind port 0 on loopback).
+    pub fn spawn(self) -> Result<(SocketAddr, Arc<NodeState>), MineError> {
+        let addr = self.local_addr()?;
+        let state = Arc::clone(&self.state);
+        std::thread::spawn(move || {
+            let _ = self.run();
+        });
+        Ok((addr, state))
+    }
+}

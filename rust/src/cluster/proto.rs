@@ -1,0 +1,1079 @@
+//! The cluster wire protocol: length-prefixed JSON frames.
+//!
+//! Scatter-gather needs so little vocabulary that a hand-rolled codec
+//! over [`util::json`](crate::util::json) beats pulling in a
+//! serialization framework (the offline crate set has none anyway):
+//! five request shapes, five response shapes, and a typed
+//! [`MineError`] round-trip so a node failure surfaces on the
+//! coordinator as the *same* error variant a local mine would raise.
+//!
+//! # Framing
+//!
+//! ```text
+//!   +----------------+---------------------------------------+
+//!   | len: u32 (LE)  | payload: `len` bytes of UTF-8 JSON    |
+//!   +----------------+---------------------------------------+
+//! ```
+//!
+//! Every payload is an envelope object
+//! `{"v": 1, "id": N, "req" | "ok" | "err": ...}`:
+//!
+//! - `v` — [`PROTO_VERSION`]. A peer speaking another version is
+//!   rejected with a typed [`MineError::InvalidConfig`] *before* the
+//!   body is interpreted, so rolling upgrades fail loudly instead of
+//!   mis-parsing.
+//! - `id` — a caller-chosen correlation id echoed verbatim in the
+//!   response, letting a client detect a stale or crossed reply on a
+//!   reused connection.
+//! - `req` / `ok` / `err` — exactly one of: a [`Request`], a
+//!   successful [`Response`], or an encoded [`MineError`].
+//!
+//! Frames larger than [`MAX_FRAME`] are refused on both sides: a
+//! corrupt length prefix must not convince a node to allocate
+//! gigabytes. Truncated frames (connection died mid-payload) decode to
+//! [`MineError::Corrupt`], distinct from clean end-of-stream
+//! (`Ok(None)` from [`read_frame`]) — the failover path retries the
+//! former and treats the latter as a closed peer.
+//!
+//! # Integrity fingerprints
+//!
+//! Counting requests carry a fingerprint of the *windowed* stream the
+//! coordinator planned against (the [`QueryKey`] mix over exact stream
+//! contents, with the semantic parameters pinned — see
+//! [`range_fingerprint`]). A node recomputes the fingerprint from its
+//! own log before counting and rejects a mismatch with
+//! [`MineError::Corrupt`]: a node replaying a stale or divergent log
+//! copy must fail the sub-mine, never silently merge wrong counts.
+//!
+//! [`QueryKey`]: crate::serve::QueryKey
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::coordinator::miner::{LevelReport, MineResult};
+use crate::coordinator::Strategy;
+use crate::datasets;
+use crate::episodes::{CountedEpisode, Episode, Interval};
+use crate::error::MineError;
+use crate::events::{EventStream, EventType, Tick};
+use crate::serve::Query;
+use crate::session::MineOptions;
+use crate::util::json::Json;
+
+/// Wire protocol version; bumped on any incompatible frame change.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Hard cap on a single frame's payload. Sized for the worst shipped
+/// case — a [`DEFAULT_CANDIDATE_BLOCK`](crate::session::DEFAULT_CANDIDATE_BLOCK)
+/// of 65,536 episodes at a few dozen JSON bytes each is single-digit
+/// megabytes — with an order of magnitude of headroom.
+pub const MAX_FRAME: usize = 64 * 1024 * 1024;
+
+/// The placeholder used to satisfy [`MineError::Corrupt`]'s `path`
+/// field for failures that live on the wire, not on disk.
+pub const WIRE: &str = "<wire>";
+
+// ---------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<(), MineError> {
+    if payload.len() > MAX_FRAME {
+        return Err(MineError::internal(format!(
+            "refusing to send a {}-byte frame (MAX_FRAME is {MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .map_err(|e| MineError::io("write frame length", e))?;
+    w.write_all(payload).map_err(|e| MineError::io("write frame payload", e))?;
+    w.flush().map_err(|e| MineError::io("flush frame", e))
+}
+
+/// Read one frame. `Ok(None)` is a clean close *between* frames (the
+/// peer hung up with nothing buffered); a close mid-frame is
+/// [`MineError::Corrupt`] so callers can tell "done" from "died".
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, MineError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(MineError::corrupt(
+                    WIRE,
+                    format!("truncated frame: peer closed after {got} of 4 length bytes"),
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(MineError::io("read frame length", e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(MineError::corrupt(
+            WIRE,
+            format!("frame length {len} exceeds MAX_FRAME {MAX_FRAME}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    if let Err(e) = r.read_exact(&mut payload) {
+        return Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => MineError::corrupt(
+                WIRE,
+                format!("truncated frame: peer closed before {len} payload bytes arrived"),
+            ),
+            _ => MineError::io("read frame payload", e),
+        });
+    }
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------
+// Requests and responses
+// ---------------------------------------------------------------------
+
+/// Everything a coordinator can ask of a node.
+///
+/// `MapCount` and `RelaxedCount` are the scatter hot path: stateless
+/// counting RPCs over a time window of the node's local log, carrying
+/// episodes in *original* type ids (the coordinator inverts its dense
+/// remap before serializing — nodes never see the coordinator's
+/// frequency-sorted alphabet). `Mine` runs a whole sub-mine through the
+/// node's `MineService`, giving remote callers the same coalescing /
+/// caching / admission the in-process service provides.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Liveness + version probe.
+    Ping,
+    /// Snapshot the node's `ServiceMetrics` as JSON.
+    Metrics,
+    /// Mine the `(t_from, t_to]` window of the node's log end-to-end.
+    Mine {
+        /// [`range_fingerprint`] of the windowed stream
+        fingerprint: u64,
+        options: MineOptions,
+        two_pass: bool,
+        t_from: Tick,
+        t_to: Tick,
+    },
+    /// Run the MapConcatenate Map phase for one shard window
+    /// `(lo, hi]` of the query range `(t_from, t_to]`, extending the
+    /// scan by `halo` ticks each side — clamped to the query range —
+    /// for boundary machines.
+    MapCount {
+        fingerprint: u64,
+        episodes: Vec<Episode>,
+        t_from: Tick,
+        t_to: Tick,
+        lo: Tick,
+        hi: Tick,
+        halo: Tick,
+        /// bounded-K automaton cap (`usize::MAX` = unbounded; encoded
+        /// as JSON `null`)
+        k: usize,
+    },
+    /// Count each episode under relaxed A2 semantics over the whole
+    /// query range (the two-pass elimination scan).
+    RelaxedCount {
+        fingerprint: u64,
+        episodes: Vec<Episode>,
+        t_from: Tick,
+        t_to: Tick,
+    },
+}
+
+/// The success half of a reply; failures travel as encoded
+/// [`MineError`]s in the envelope's `err` slot.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Pong {
+        version: u32,
+    },
+    Metrics {
+        metrics: Json,
+    },
+    Mine {
+        result: MineResult,
+    },
+    /// Per-episode machine lists `(first_start, count, next_expected)`
+    /// for the requested shard window, in request episode order.
+    MapCount {
+        machines: Vec<Vec<(Tick, u64, Tick)>>,
+    },
+    RelaxedCount {
+        counts: Vec<u64>,
+    },
+}
+
+/// The canonical integrity token counting requests carry: the
+/// [`Query`] fingerprint of the `(t_from, t_to]` window under *pinned*
+/// semantic parameters, which reduces the key to a pure content hash
+/// of the windowed stream. Coordinator and node both compute it from
+/// their own copy of the log; equality proves they are counting the
+/// same events.
+pub fn range_fingerprint(stream: &Arc<EventStream>, t_from: Tick, t_to: Tick) -> u64 {
+    let windowed = Arc::new(stream.window(t_from, t_to));
+    Query::new(windowed, 1, vec![Interval::new(0, 1)]).key().fingerprint()
+}
+
+// ---------------------------------------------------------------------
+// Envelope
+// ---------------------------------------------------------------------
+
+fn envelope(id: u64, slot: &str, body: Json) -> Vec<u8> {
+    Json::Obj(vec![
+        ("v".to_string(), Json::Num(PROTO_VERSION as f64)),
+        ("id".to_string(), Json::Num(id as f64)),
+        (slot.to_string(), body),
+    ])
+    .render()
+    .into_bytes()
+}
+
+fn open_envelope(bytes: &[u8]) -> Result<(u64, Json), MineError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| MineError::corrupt(WIRE, "frame payload is not UTF-8"))?;
+    let doc = Json::parse(text)?;
+    let v = doc
+        .req("v")?
+        .as_u64()
+        .ok_or_else(|| MineError::invalid("envelope \"v\" must be an unsigned integer"))?;
+    if v != PROTO_VERSION as u64 {
+        return Err(MineError::invalid(format!(
+            "protocol version mismatch: peer speaks v{v}, this build speaks v{PROTO_VERSION}"
+        )));
+    }
+    let id = doc
+        .req("id")?
+        .as_u64()
+        .ok_or_else(|| MineError::invalid("envelope \"id\" must be an unsigned integer"))?;
+    Ok((id, doc))
+}
+
+/// Serialize a request envelope.
+pub fn encode_request(id: u64, req: &Request) -> Vec<u8> {
+    envelope(id, "req", request_to_json(req))
+}
+
+/// Parse a request envelope (node side).
+pub fn decode_request(bytes: &[u8]) -> Result<(u64, Request), MineError> {
+    let (id, doc) = open_envelope(bytes)?;
+    Ok((id, request_from_json(doc.req("req")?)?))
+}
+
+/// Serialize a reply envelope: `ok` for success, `err` for a typed
+/// failure.
+pub fn encode_response(id: u64, outcome: &Result<Response, MineError>) -> Vec<u8> {
+    match outcome {
+        Ok(resp) => envelope(id, "ok", response_to_json(resp)),
+        Err(e) => envelope(id, "err", error_to_json(e)),
+    }
+}
+
+/// Parse a reply envelope (coordinator side). The outer `Result` is a
+/// transport/codec failure; the inner one is the node's own outcome.
+#[allow(clippy::type_complexity)]
+pub fn decode_response(bytes: &[u8]) -> Result<(u64, Result<Response, MineError>), MineError> {
+    let (id, doc) = open_envelope(bytes)?;
+    if let Some(ok) = doc.get("ok") {
+        return Ok((id, Ok(response_from_json(ok)?)));
+    }
+    if let Some(err) = doc.get("err") {
+        return Ok((id, Err(error_from_json(err)?)));
+    }
+    Err(MineError::invalid("reply envelope carries neither \"ok\" nor \"err\""))
+}
+
+// ---------------------------------------------------------------------
+// Scalar helpers
+// ---------------------------------------------------------------------
+
+fn as_tick(j: &Json) -> Result<Tick, MineError> {
+    match j.as_f64() {
+        Some(x) if x.fract() == 0.0 && (i32::MIN as f64..=i32::MAX as f64).contains(&x) => {
+            Ok(x as Tick)
+        }
+        _ => Err(MineError::invalid("expected an integer tick")),
+    }
+}
+
+fn as_usize(j: &Json) -> Result<usize, MineError> {
+    j.as_u64()
+        .map(|v| v as usize)
+        .ok_or_else(|| MineError::invalid("expected an unsigned integer"))
+}
+
+fn as_count(j: &Json) -> Result<u64, MineError> {
+    j.as_u64().ok_or_else(|| MineError::invalid("expected an unsigned integer"))
+}
+
+// 64-bit fingerprints do not survive a JSON f64 (53-bit mantissa), so
+// they travel as fixed-width hex strings.
+fn fp_to_json(fp: u64) -> Json {
+    Json::Str(format!("{fp:016x}"))
+}
+
+fn fp_from_json(j: &Json) -> Result<u64, MineError> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| MineError::invalid("fingerprint must be a hex string"))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| MineError::invalid(format!("fingerprint {s:?} is not 64-bit hex")))
+}
+
+// ---------------------------------------------------------------------
+// Domain codecs
+// ---------------------------------------------------------------------
+
+fn intervals_to_json(ivs: &[Interval]) -> Json {
+    Json::Arr(
+        ivs.iter()
+            .map(|iv| {
+                Json::Arr(vec![Json::Num(iv.t_low as f64), Json::Num(iv.t_high as f64)])
+            })
+            .collect(),
+    )
+}
+
+fn intervals_from_json(j: &Json) -> Result<Vec<Interval>, MineError> {
+    j.as_arr()
+        .ok_or_else(|| MineError::invalid("intervals must be an array"))?
+        .iter()
+        .map(|pair| {
+            let pair =
+                pair.as_arr().ok_or_else(|| MineError::invalid("interval must be [low, high]"))?;
+            if pair.len() != 2 {
+                return Err(MineError::invalid("interval must be [low, high]"));
+            }
+            let (lo, hi) = (as_tick(&pair[0])?, as_tick(&pair[1])?);
+            // Interval::new asserts; wire data must reject, not panic
+            if !(0 <= lo && lo < hi) {
+                return Err(MineError::invalid(format!(
+                    "interval ({lo},{hi}] violates 0 <= t_low < t_high"
+                )));
+            }
+            Ok(Interval { t_low: lo, t_high: hi })
+        })
+        .collect()
+}
+
+/// Episode → `{"types": [...], "intervals": [[lo,hi], ...]}`.
+pub fn episode_to_json(ep: &Episode) -> Json {
+    Json::Obj(vec![
+        (
+            "types".to_string(),
+            Json::Arr(ep.types.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        ("intervals".to_string(), intervals_to_json(&ep.intervals)),
+    ])
+}
+
+/// Parse an episode, enforcing the N-types/N-1-intervals shape that
+/// `Episode::new` would otherwise assert on.
+pub fn episode_from_json(j: &Json) -> Result<Episode, MineError> {
+    let types = j
+        .req("types")?
+        .as_arr()
+        .ok_or_else(|| MineError::invalid("episode types must be an array"))?
+        .iter()
+        .map(as_tick) // EventType and Tick are the same i32 alias
+        .collect::<Result<Vec<EventType>, _>>()?;
+    let intervals = intervals_from_json(j.req("intervals")?)?;
+    if types.is_empty() {
+        return Err(MineError::invalid("episode must have at least one event type"));
+    }
+    if intervals.len() + 1 != types.len() {
+        return Err(MineError::invalid(format!(
+            "episode with {} types needs {} intervals, got {}",
+            types.len(),
+            types.len() - 1,
+            intervals.len()
+        )));
+    }
+    Ok(Episode { types, intervals })
+}
+
+fn episodes_to_json(eps: &[Episode]) -> Json {
+    Json::Arr(eps.iter().map(episode_to_json).collect())
+}
+
+fn episodes_from_json(j: &Json) -> Result<Vec<Episode>, MineError> {
+    j.as_arr()
+        .ok_or_else(|| MineError::invalid("episodes must be an array"))?
+        .iter()
+        .map(episode_from_json)
+        .collect()
+}
+
+/// MineOptions → JSON (all fields; `candidate_block` is an execution
+/// knob but a sub-mine must still honor the coordinator's choice).
+pub fn options_to_json(o: &MineOptions) -> Json {
+    Json::Obj(vec![
+        ("theta".to_string(), Json::Num(o.theta as f64)),
+        ("intervals".to_string(), intervals_to_json(&o.intervals)),
+        ("max_level".to_string(), Json::Num(o.max_level as f64)),
+        (
+            "max_candidates_per_level".to_string(),
+            Json::Num(o.max_candidates_per_level as f64),
+        ),
+        ("candidate_block".to_string(), Json::Num(o.candidate_block as f64)),
+    ])
+}
+
+/// Parse and validate mining options (the same `MineOptions::validate`
+/// every local entry point runs — wire input is untrusted input).
+pub fn options_from_json(j: &Json) -> Result<MineOptions, MineError> {
+    let o = MineOptions {
+        theta: as_count(j.req("theta")?)?,
+        intervals: intervals_from_json(j.req("intervals")?)?,
+        max_level: as_usize(j.req("max_level")?)?,
+        max_candidates_per_level: as_usize(j.req("max_candidates_per_level")?)?,
+        candidate_block: as_usize(j.req("candidate_block")?)?,
+    };
+    o.validate()?;
+    Ok(o)
+}
+
+fn level_to_json(l: &LevelReport) -> Json {
+    Json::Obj(vec![
+        ("level".to_string(), Json::Num(l.level as f64)),
+        ("candidates".to_string(), Json::Num(l.candidates as f64)),
+        ("frequent".to_string(), Json::Num(l.frequent as f64)),
+        ("culled_by_a2".to_string(), Json::Num(l.culled_by_a2 as f64)),
+        ("count_seconds".to_string(), Json::Num(l.count_seconds)),
+        ("gen_seconds".to_string(), Json::Num(l.gen_seconds)),
+    ])
+}
+
+fn level_from_json(j: &Json) -> Result<LevelReport, MineError> {
+    Ok(LevelReport {
+        level: as_usize(j.req("level")?)?,
+        candidates: as_usize(j.req("candidates")?)?,
+        frequent: as_usize(j.req("frequent")?)?,
+        culled_by_a2: as_count(j.req("culled_by_a2")?)?,
+        count_seconds: j
+            .req("count_seconds")?
+            .as_f64()
+            .ok_or_else(|| MineError::invalid("count_seconds must be a number"))?,
+        gen_seconds: j
+            .req("gen_seconds")?
+            .as_f64()
+            .ok_or_else(|| MineError::invalid("gen_seconds must be a number"))?,
+    })
+}
+
+/// MineResult → JSON.
+pub fn result_to_json(r: &MineResult) -> Json {
+    Json::Obj(vec![
+        (
+            "frequent".to_string(),
+            Json::Arr(
+                r.frequent
+                    .iter()
+                    .map(|ce| {
+                        Json::Obj(vec![
+                            ("episode".to_string(), episode_to_json(&ce.episode)),
+                            ("count".to_string(), Json::Num(ce.count as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("levels".to_string(), Json::Arr(r.levels.iter().map(level_to_json).collect())),
+    ])
+}
+
+/// Parse a MineResult.
+pub fn result_from_json(j: &Json) -> Result<MineResult, MineError> {
+    let frequent = j
+        .req("frequent")?
+        .as_arr()
+        .ok_or_else(|| MineError::invalid("frequent must be an array"))?
+        .iter()
+        .map(|ce| {
+            Ok(CountedEpisode {
+                episode: episode_from_json(ce.req("episode")?)?,
+                count: as_count(ce.req("count")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>, MineError>>()?;
+    let levels = j
+        .req("levels")?
+        .as_arr()
+        .ok_or_else(|| MineError::invalid("levels must be an array"))?
+        .iter()
+        .map(level_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(MineResult { frequent, levels })
+}
+
+fn machines_to_json(machines: &[Vec<(Tick, u64, Tick)>]) -> Json {
+    Json::Arr(
+        machines
+            .iter()
+            .map(|per_ep| {
+                Json::Arr(
+                    per_ep
+                        .iter()
+                        .map(|&(a, c, b)| {
+                            Json::Arr(vec![
+                                Json::Num(a as f64),
+                                Json::Num(c as f64),
+                                Json::Num(b as f64),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[allow(clippy::type_complexity)]
+fn machines_from_json(j: &Json) -> Result<Vec<Vec<(Tick, u64, Tick)>>, MineError> {
+    j.as_arr()
+        .ok_or_else(|| MineError::invalid("machines must be an array"))?
+        .iter()
+        .map(|per_ep| {
+            per_ep
+                .as_arr()
+                .ok_or_else(|| MineError::invalid("machine list must be an array"))?
+                .iter()
+                .map(|m| {
+                    let m = m
+                        .as_arr()
+                        .ok_or_else(|| MineError::invalid("machine must be [a, count, b]"))?;
+                    if m.len() != 3 {
+                        return Err(MineError::invalid("machine must be [a, count, b]"));
+                    }
+                    Ok((as_tick(&m[0])?, as_count(&m[1])?, as_tick(&m[2])?))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Request / response codecs
+// ---------------------------------------------------------------------
+
+fn request_to_json(req: &Request) -> Json {
+    match req {
+        Request::Ping => Json::Obj(vec![("type".to_string(), Json::Str("ping".to_string()))]),
+        Request::Metrics => {
+            Json::Obj(vec![("type".to_string(), Json::Str("metrics".to_string()))])
+        }
+        Request::Mine { fingerprint, options, two_pass, t_from, t_to } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("mine".to_string())),
+            ("fingerprint".to_string(), fp_to_json(*fingerprint)),
+            ("options".to_string(), options_to_json(options)),
+            ("two_pass".to_string(), Json::Bool(*two_pass)),
+            ("t_from".to_string(), Json::Num(*t_from as f64)),
+            ("t_to".to_string(), Json::Num(*t_to as f64)),
+        ]),
+        Request::MapCount { fingerprint, episodes, t_from, t_to, lo, hi, halo, k } => {
+            Json::Obj(vec![
+                ("type".to_string(), Json::Str("map_count".to_string())),
+                ("fingerprint".to_string(), fp_to_json(*fingerprint)),
+                ("episodes".to_string(), episodes_to_json(episodes)),
+                ("t_from".to_string(), Json::Num(*t_from as f64)),
+                ("t_to".to_string(), Json::Num(*t_to as f64)),
+                ("lo".to_string(), Json::Num(*lo as f64)),
+                ("hi".to_string(), Json::Num(*hi as f64)),
+                ("halo".to_string(), Json::Num(*halo as f64)),
+                (
+                    "k".to_string(),
+                    if *k == usize::MAX { Json::Null } else { Json::Num(*k as f64) },
+                ),
+            ])
+        }
+        Request::RelaxedCount { fingerprint, episodes, t_from, t_to } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("relaxed_count".to_string())),
+            ("fingerprint".to_string(), fp_to_json(*fingerprint)),
+            ("episodes".to_string(), episodes_to_json(episodes)),
+            ("t_from".to_string(), Json::Num(*t_from as f64)),
+            ("t_to".to_string(), Json::Num(*t_to as f64)),
+        ]),
+    }
+}
+
+fn request_from_json(j: &Json) -> Result<Request, MineError> {
+    let ty = j
+        .req("type")?
+        .as_str()
+        .ok_or_else(|| MineError::invalid("request \"type\" must be a string"))?;
+    match ty {
+        "ping" => Ok(Request::Ping),
+        "metrics" => Ok(Request::Metrics),
+        "mine" => Ok(Request::Mine {
+            fingerprint: fp_from_json(j.req("fingerprint")?)?,
+            options: options_from_json(j.req("options")?)?,
+            two_pass: j
+                .req("two_pass")?
+                .as_bool()
+                .ok_or_else(|| MineError::invalid("two_pass must be a boolean"))?,
+            t_from: as_tick(j.req("t_from")?)?,
+            t_to: as_tick(j.req("t_to")?)?,
+        }),
+        "map_count" => Ok(Request::MapCount {
+            fingerprint: fp_from_json(j.req("fingerprint")?)?,
+            episodes: episodes_from_json(j.req("episodes")?)?,
+            t_from: as_tick(j.req("t_from")?)?,
+            t_to: as_tick(j.req("t_to")?)?,
+            lo: as_tick(j.req("lo")?)?,
+            hi: as_tick(j.req("hi")?)?,
+            halo: as_tick(j.req("halo")?)?,
+            k: match j.req("k")? {
+                Json::Null => usize::MAX,
+                other => as_usize(other)?,
+            },
+        }),
+        "relaxed_count" => Ok(Request::RelaxedCount {
+            fingerprint: fp_from_json(j.req("fingerprint")?)?,
+            episodes: episodes_from_json(j.req("episodes")?)?,
+            t_from: as_tick(j.req("t_from")?)?,
+            t_to: as_tick(j.req("t_to")?)?,
+        }),
+        other => Err(MineError::invalid(format!("unknown request type {other:?}"))),
+    }
+}
+
+fn response_to_json(resp: &Response) -> Json {
+    match resp {
+        Response::Pong { version } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("pong".to_string())),
+            ("version".to_string(), Json::Num(*version as f64)),
+        ]),
+        Response::Metrics { metrics } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("metrics".to_string())),
+            ("metrics".to_string(), metrics.clone()),
+        ]),
+        Response::Mine { result } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("mine".to_string())),
+            ("result".to_string(), result_to_json(result)),
+        ]),
+        Response::MapCount { machines } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("map_count".to_string())),
+            ("machines".to_string(), machines_to_json(machines)),
+        ]),
+        Response::RelaxedCount { counts } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("relaxed_count".to_string())),
+            (
+                "counts".to_string(),
+                Json::Arr(counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+        ]),
+    }
+}
+
+fn response_from_json(j: &Json) -> Result<Response, MineError> {
+    let ty = j
+        .req("type")?
+        .as_str()
+        .ok_or_else(|| MineError::invalid("response \"type\" must be a string"))?;
+    match ty {
+        "pong" => Ok(Response::Pong {
+            version: as_count(j.req("version")?)? as u32,
+        }),
+        "metrics" => Ok(Response::Metrics { metrics: j.req("metrics")?.clone() }),
+        "mine" => Ok(Response::Mine { result: result_from_json(j.req("result")?)? }),
+        "map_count" => {
+            Ok(Response::MapCount { machines: machines_from_json(j.req("machines")?)? })
+        }
+        "relaxed_count" => Ok(Response::RelaxedCount {
+            counts: j
+                .req("counts")?
+                .as_arr()
+                .ok_or_else(|| MineError::invalid("counts must be an array"))?
+                .iter()
+                .map(as_count)
+                .collect::<Result<Vec<_>, _>>()?,
+        }),
+        other => Err(MineError::invalid(format!("unknown response type {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed MineError round-trip
+// ---------------------------------------------------------------------
+
+/// Encode a [`MineError`] for the envelope's `err` slot. Every variant
+/// survives the round-trip with its fields; the two `&'static` validity
+/// lists (`UnknownStrategy`, `UnknownDataset`) are reconstructed from
+/// this build's registries on decode.
+pub fn error_to_json(e: &MineError) -> Json {
+    let kv = |k: &str, fields: Vec<(String, Json)>| {
+        let mut obj = vec![("kind".to_string(), Json::Str(k.to_string()))];
+        obj.extend(fields);
+        Json::Obj(obj)
+    };
+    match e {
+        MineError::UnsupportedEpisodeSize { backend, n } => kv(
+            "unsupported_episode_size",
+            vec![
+                ("backend".to_string(), Json::Str(backend.clone())),
+                ("n".to_string(), Json::Num(*n as f64)),
+            ],
+        ),
+        MineError::OutOfAlphabet { type_id, n_types } => kv(
+            "out_of_alphabet",
+            vec![
+                ("type_id".to_string(), Json::Num(*type_id as f64)),
+                ("n_types".to_string(), Json::Num(*n_types as f64)),
+            ],
+        ),
+        MineError::CandidateExplosion { level, candidates, cap } => kv(
+            "candidate_explosion",
+            vec![
+                ("level".to_string(), Json::Num(*level as f64)),
+                ("candidates".to_string(), Json::Num(*candidates as f64)),
+                ("cap".to_string(), Json::Num(*cap as f64)),
+            ],
+        ),
+        MineError::Busy { queue_depth, capacity } => kv(
+            "busy",
+            vec![
+                ("queue_depth".to_string(), Json::Num(*queue_depth as f64)),
+                ("capacity".to_string(), Json::Num(*capacity as f64)),
+            ],
+        ),
+        MineError::RuntimeUnavailable { reason } => kv(
+            "runtime_unavailable",
+            vec![("reason".to_string(), Json::Str(reason.clone()))],
+        ),
+        MineError::InvalidConfig { what } => {
+            kv("invalid_config", vec![("what".to_string(), Json::Str(what.clone()))])
+        }
+        MineError::UnknownStrategy { given, .. } => {
+            kv("unknown_strategy", vec![("given".to_string(), Json::Str(given.clone()))])
+        }
+        MineError::UnknownDataset { given, .. } => {
+            kv("unknown_dataset", vec![("given".to_string(), Json::Str(given.clone()))])
+        }
+        MineError::Io { what, source } => kv(
+            "io",
+            vec![
+                ("what".to_string(), Json::Str(what.clone())),
+                ("message".to_string(), Json::Str(source.to_string())),
+            ],
+        ),
+        MineError::Corrupt { path, detail } => kv(
+            "corrupt",
+            vec![
+                ("path".to_string(), Json::Str(path.clone())),
+                ("detail".to_string(), Json::Str(detail.clone())),
+            ],
+        ),
+        MineError::Accelerator { what } => {
+            kv("accelerator", vec![("what".to_string(), Json::Str(what.clone()))])
+        }
+        MineError::Internal { what } => {
+            kv("internal", vec![("what".to_string(), Json::Str(what.clone()))])
+        }
+    }
+}
+
+/// Decode a wire error back into the same [`MineError`] variant.
+pub fn error_from_json(j: &Json) -> Result<MineError, MineError> {
+    let str_field = |key: &str| -> Result<String, MineError> {
+        Ok(j.req(key)?
+            .as_str()
+            .ok_or_else(|| MineError::invalid(format!("error field {key:?} must be a string")))?
+            .to_string())
+    };
+    let kind = j
+        .req("kind")?
+        .as_str()
+        .ok_or_else(|| MineError::invalid("error \"kind\" must be a string"))?;
+    Ok(match kind {
+        "unsupported_episode_size" => MineError::UnsupportedEpisodeSize {
+            backend: str_field("backend")?,
+            n: as_usize(j.req("n")?)?,
+        },
+        "out_of_alphabet" => MineError::OutOfAlphabet {
+            type_id: as_tick(j.req("type_id")?)?,
+            n_types: as_usize(j.req("n_types")?)?,
+        },
+        "candidate_explosion" => MineError::CandidateExplosion {
+            level: as_usize(j.req("level")?)?,
+            candidates: as_usize(j.req("candidates")?)?,
+            cap: as_usize(j.req("cap")?)?,
+        },
+        "busy" => MineError::Busy {
+            queue_depth: as_usize(j.req("queue_depth")?)?,
+            capacity: as_usize(j.req("capacity")?)?,
+        },
+        "runtime_unavailable" => {
+            MineError::RuntimeUnavailable { reason: str_field("reason")? }
+        }
+        "invalid_config" => MineError::InvalidConfig { what: str_field("what")? },
+        "unknown_strategy" => MineError::UnknownStrategy {
+            given: str_field("given")?,
+            valid: Strategy::NAMES,
+        },
+        "unknown_dataset" => MineError::UnknownDataset {
+            given: str_field("given")?,
+            valid: datasets::names_and_schemes(),
+        },
+        "io" => MineError::Io {
+            what: str_field("what")?,
+            source: std::io::Error::other(str_field("message")?),
+        },
+        "corrupt" => {
+            MineError::Corrupt { path: str_field("path")?, detail: str_field("detail")? }
+        }
+        "accelerator" => MineError::Accelerator { what: str_field("what")? },
+        "internal" => MineError::Internal { what: str_field("what")? },
+        other => return Err(MineError::invalid(format!("unknown error kind {other:?}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_episode() -> Episode {
+        Episode::new(vec![3, 1, 4], vec![Interval::new(0, 10), Interval::new(5, 15)])
+    }
+
+    fn sample_options() -> MineOptions {
+        MineOptions {
+            theta: 7,
+            intervals: vec![Interval::new(5, 15)],
+            max_level: 6,
+            max_candidates_per_level: 100_000,
+            candidate_block: 4096,
+        }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF between frames");
+    }
+
+    #[test]
+    fn truncated_frames_are_corrupt_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+
+        // die inside the length prefix
+        let mut r = &buf[..2];
+        assert!(matches!(read_frame(&mut r), Err(MineError::Corrupt { .. })));
+
+        // die inside the payload
+        let mut r = &buf[..4 + 3];
+        assert!(matches!(read_frame(&mut r), Err(MineError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn oversized_frames_refused_both_directions() {
+        let mut buf = Vec::new();
+        // a length prefix claiming more than MAX_FRAME must be rejected
+        // without allocating
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let mut r = &buf[..];
+        assert!(matches!(read_frame(&mut r), Err(MineError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Metrics,
+            Request::Mine {
+                fingerprint: u64::MAX - 3, // exercises the >2^53 hex path
+                options: sample_options(),
+                two_pass: true,
+                t_from: -1,
+                t_to: 5_000,
+            },
+            Request::MapCount {
+                fingerprint: 0xdead_beef_cafe_f00d,
+                episodes: vec![sample_episode()],
+                t_from: 0,
+                t_to: 1_000,
+                lo: 100,
+                hi: 200,
+                halo: 30,
+                k: usize::MAX,
+            },
+            Request::RelaxedCount {
+                fingerprint: 1,
+                episodes: vec![sample_episode(), Episode::single(2)],
+                t_from: 0,
+                t_to: 1_000,
+            },
+        ];
+        for (i, req) in reqs.iter().enumerate() {
+            let bytes = encode_request(i as u64, req);
+            let (id, back) = decode_request(&bytes).unwrap();
+            assert_eq!(id, i as u64);
+            // compare via re-encode: Request has no PartialEq
+            assert_eq!(encode_request(id, &back), bytes, "request {i}");
+        }
+    }
+
+    #[test]
+    fn bounded_k_travels_as_null() {
+        let req = Request::MapCount {
+            fingerprint: 9,
+            episodes: vec![sample_episode()],
+            t_from: 0,
+            t_to: 10,
+            lo: 0,
+            hi: 10,
+            halo: 0,
+            k: 4,
+        };
+        let text = String::from_utf8(encode_request(0, &req)).unwrap();
+        assert!(text.contains("\"k\":4"), "{text}");
+        let unbounded = Request::MapCount {
+            fingerprint: 9,
+            episodes: vec![sample_episode()],
+            t_from: 0,
+            t_to: 10,
+            lo: 0,
+            hi: 10,
+            halo: 0,
+            k: usize::MAX,
+        };
+        let text = String::from_utf8(encode_request(0, &unbounded)).unwrap();
+        assert!(text.contains("\"k\":null"), "{text}");
+        let (_, back) = decode_request(text.as_bytes()).unwrap();
+        match back {
+            Request::MapCount { k, .. } => assert_eq!(k, usize::MAX),
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let result = MineResult {
+            frequent: vec![CountedEpisode { episode: sample_episode(), count: 42 }],
+            levels: vec![LevelReport {
+                level: 1,
+                candidates: 26,
+                frequent: 9,
+                culled_by_a2: 3,
+                count_seconds: 0.25,
+                gen_seconds: 0.0625,
+            }],
+        };
+        let resps = vec![
+            Response::Pong { version: PROTO_VERSION },
+            Response::Metrics {
+                metrics: Json::Obj(vec![("queue_depth".to_string(), Json::Num(2.0))]),
+            },
+            Response::Mine { result },
+            Response::MapCount {
+                machines: vec![vec![(5, 3, 20)], vec![]],
+            },
+            Response::RelaxedCount { counts: vec![0, 7, 123] },
+        ];
+        for (i, resp) in resps.iter().enumerate() {
+            let bytes = encode_response(i as u64, &Ok(resp.clone()));
+            let (id, back) = decode_response(&bytes).unwrap();
+            assert_eq!(id, i as u64);
+            assert_eq!(encode_response(id, &Ok(back.unwrap())), bytes, "response {i}");
+        }
+    }
+
+    #[test]
+    fn every_error_variant_round_trips() {
+        let errors = vec![
+            MineError::UnsupportedEpisodeSize { backend: "ptpe".to_string(), n: 9 },
+            MineError::OutOfAlphabet { type_id: -4, n_types: 26 },
+            MineError::CandidateExplosion { level: 3, candidates: 10, cap: 5 },
+            MineError::Busy { queue_depth: 8, capacity: 8 },
+            MineError::runtime_unavailable("no PJRT plugin"),
+            MineError::invalid("theta must be > 0"),
+            MineError::UnknownStrategy {
+                given: "warp-speed".to_string(),
+                valid: Strategy::NAMES,
+            },
+            MineError::UnknownDataset {
+                given: "nope".to_string(),
+                valid: datasets::names_and_schemes(),
+            },
+            MineError::io("open log", std::io::Error::other("disk on fire")),
+            MineError::corrupt("seg-0003.epseg", "checksum mismatch"),
+            MineError::accel("PJRT execute failed"),
+            MineError::internal("machine list misaligned"),
+        ];
+        for e in errors {
+            let bytes = encode_response(7, &Err(e.clone()));
+            let (id, outcome) = decode_response(&bytes).unwrap();
+            assert_eq!(id, 7);
+            let back = outcome.unwrap_err();
+            assert_eq!(
+                std::mem::discriminant(&back),
+                std::mem::discriminant(&e),
+                "{e} decoded as {back}"
+            );
+            // the human-readable rendering survives too (Io embeds the
+            // source message)
+            assert_eq!(back.to_string(), e.to_string());
+        }
+    }
+
+    #[test]
+    fn version_mismatch_rejected_before_the_body() {
+        let doc = Json::Obj(vec![
+            ("v".to_string(), Json::Num(99.0)),
+            ("id".to_string(), Json::Num(0.0)),
+            // body is deliberate garbage: it must never be inspected
+            ("req".to_string(), Json::Str("not a request".to_string())),
+        ]);
+        let err = decode_request(doc.render().as_bytes()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version mismatch"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_errors() {
+        assert!(decode_request(b"{not json").is_err());
+        assert!(decode_request(b"\xff\xfe").is_err());
+        assert!(decode_request(b"{\"v\":1}").is_err(), "missing id/req");
+        assert!(decode_response(b"{\"v\":1,\"id\":0}").is_err(), "neither ok nor err");
+        // an episode with the wrong interval arity must reject, not panic
+        let bad = Json::Obj(vec![
+            ("types".to_string(), Json::Arr(vec![Json::Num(0.0), Json::Num(1.0)])),
+            ("intervals".to_string(), Json::Arr(vec![])),
+        ]);
+        assert!(episode_from_json(&bad).is_err());
+        // and a degenerate interval likewise
+        let bad = Json::Obj(vec![
+            ("types".to_string(), Json::Arr(vec![Json::Num(0.0), Json::Num(1.0)])),
+            (
+                "intervals".to_string(),
+                Json::Arr(vec![Json::Arr(vec![Json::Num(5.0), Json::Num(5.0)])]),
+            ),
+        ]);
+        assert!(episode_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn range_fingerprint_is_content_identity() {
+        let stream = Arc::new(EventStream::from_pairs(
+            vec![(0, 1), (1, 4), (2, 8), (0, 20), (1, 24)],
+            3,
+        ));
+        let fp = range_fingerprint(&stream, 0, 30);
+        assert_eq!(fp, range_fingerprint(&stream, 0, 30), "deterministic");
+        assert_ne!(fp, range_fingerprint(&stream, 0, 20), "window matters");
+        let moved = Arc::new(EventStream::from_pairs(
+            vec![(0, 1), (1, 4), (2, 9), (0, 20), (1, 24)],
+            3,
+        ));
+        assert_ne!(fp, range_fingerprint(&moved, 0, 30), "contents matter");
+    }
+}

@@ -1,0 +1,1207 @@
+//! The scatter-gather coordinator: one `log:` range query fanned out
+//! across mining nodes, merged back byte-identical to a single-process
+//! mine.
+//!
+//! # Where the exactness comes from
+//!
+//! The coordinator does NOT merge per-node `MineResult`s — episode sets
+//! from independently-mined shards cannot be reconciled exactly (an
+//! episode frequent in the union may be infrequent in every shard).
+//! Instead the coordinator runs the *exact same level-wise driver* a
+//! local session runs ([`mine_with_backend`]) over the range stream it
+//! reads from its own log replica, and distributes only the *counting*:
+//! [`ClusterBackend`] implements [`CountBackend`] by planning the range
+//! into per-segment-group time windows and asking each node for the
+//! boundary-machine Map tuples of its window (`MapCount`), then folding
+//! them with [`mapconcat::concatenate_fold`] exactly like the
+//! stream-sharded CPU engine does across threads. Flagged concatenate
+//! misses are recounted against the coordinator's own stream, so counts
+//! always equal the serial reference — the same invariant
+//! `backend/sharded.rs` pins, with machines crossing the wire instead of
+//! a `thread::scope`.
+//!
+//! Three wrinkles the wire adds over in-process sharding:
+//!
+//! - **Alphabet translation.** Levels ≥ 2 of the driver hand this
+//!   backend *dense-id* episodes over the frequency-remapped stream;
+//!   nodes hold the raw log in original ids. Episodes are inverted back
+//!   to original ids before every RPC (the remap is a count-preserving
+//!   bijection, and the coordinator's independently-computed remap is
+//!   provably the driver's: level-1 counts are always the type
+//!   frequencies, even two-pass, because A2 of a 1-node episode *is* its
+//!   frequency). Machine tuples `(a, count, b)` are type-free, so
+//!   responses need no mapping.
+//! - **Clamped halos.** The coordinator's reference stream is
+//!   range-windowed, so nodes clamp their halo scans to the query range —
+//!   an unclamped halo would count events the single-process mine never
+//!   sees (see `cluster/node.rs`).
+//! - **Content fingerprints.** Every counting RPC names the windowed
+//!   stream it was planned against; a node whose replica diverged fails
+//!   the sub-mine (typed [`MineError::Corrupt`]) rather than merging
+//!   wrong counts.
+//!
+//! # Failure semantics
+//!
+//! Transport failures (I/O errors, garbled frames — anything tagged with
+//! the [`proto::WIRE`] path) mark the node unhealthy for the rest of the
+//! query and the window is retried on the next surviving node (a
+//! *re-plan*: dead nodes' windows are re-scattered, never dropped). When
+//! retries are exhausted or no node survives, the coordinator counts the
+//! window itself from its local stream (`local_fallbacks` in
+//! [`ClusterMetrics`]) — the query degrades to single-process speed, not
+//! to a wrong answer. Application errors (invalid options, fingerprint
+//! mismatch, candidate explosion) are *not* retried: they would fail
+//! identically everywhere, so they propagate and fail the mine.
+//! Stragglers are optionally hedged: if a window's reply is slower than
+//! `hedge_after`, a duplicate is dispatched to another healthy node and
+//! the first answer wins.
+//!
+//! # Admission
+//!
+//! The coordinator front-door is tenant-aware
+//! ([`super::admission::AdmissionController`]): per-tenant in-flight
+//! quotas, priority-then-arrival granting, and bounded queueing that
+//! sheds into typed [`MineError::Busy`] under saturation — cluster
+//! capacity is spent by policy, not arrival order.
+
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::two_pass::TwoPassBackend;
+use crate::backend::{count_grouped, CountBackend, CountReport};
+use crate::coordinator::mapconcat;
+use crate::coordinator::miner::MineResult;
+use crate::coordinator::Metrics;
+use crate::episodes::arena::AlphabetRemap;
+use crate::episodes::Episode;
+use crate::error::MineError;
+use crate::events::{EventStream, Tick};
+use crate::ingest::SpikeLog;
+use crate::mining::serial;
+use crate::serve::ServiceConfig;
+use crate::session::{mine_with_backend, MineOptions};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::admission::{AdmissionConfig, AdmissionController};
+use super::node::NodeState;
+use super::proto::{self, Request, Response};
+
+/// Per-node latency samples kept for the metrics percentiles; older
+/// samples age out so a long-lived coordinator reflects recent behavior.
+const LATENCY_WINDOW: usize = 2048;
+
+/// Grace added on top of the per-RPC deadline when draining hedged
+/// results (the calls themselves are deadline-bounded; the slack only
+/// covers scheduling).
+const DEADLINE_SLACK: Duration = Duration::from_millis(500);
+
+/// One request/response transport to a node. Implementations must be
+/// cheap to call concurrently — the coordinator scatters windows from
+/// scoped threads.
+pub trait NodeLink: Send + Sync {
+    /// Send one encoded request frame and wait for the reply frame,
+    /// bounded by `deadline`.
+    fn call(&self, request: &[u8], deadline: Duration) -> Result<Vec<u8>, MineError>;
+
+    /// Human-readable peer name for metrics (`host:port`, `local#2`).
+    fn describe(&self) -> String;
+}
+
+/// TCP transport: one short-lived connection per call. Connection setup
+/// on a LAN is microseconds against sub-mines that run for milliseconds,
+/// and per-call connections mean a node restart needs no reconnect logic
+/// anywhere.
+pub struct TcpLink {
+    addr: String,
+}
+
+impl TcpLink {
+    pub fn new(addr: impl Into<String>) -> TcpLink {
+        TcpLink { addr: addr.into() }
+    }
+}
+
+impl NodeLink for TcpLink {
+    fn call(&self, request: &[u8], deadline: Duration) -> Result<Vec<u8>, MineError> {
+        let mut conn = match self.addr.parse::<std::net::SocketAddr>() {
+            Ok(sa) => TcpStream::connect_timeout(&sa, deadline),
+            Err(_) => TcpStream::connect(&self.addr),
+        }
+        .map_err(|e| MineError::io(format!("connect {}", self.addr), e))?;
+        let _ = conn.set_nodelay(true);
+        conn.set_read_timeout(Some(deadline))
+            .map_err(|e| MineError::io(format!("configure {}", self.addr), e))?;
+        conn.set_write_timeout(Some(deadline))
+            .map_err(|e| MineError::io(format!("configure {}", self.addr), e))?;
+        proto::write_frame(&mut conn, request)?;
+        match proto::read_frame(&mut conn)? {
+            Some(reply) => Ok(reply),
+            None => Err(MineError::corrupt(
+                proto::WIRE,
+                format!("{} closed the connection mid-exchange", self.addr),
+            )),
+        }
+    }
+
+    fn describe(&self) -> String {
+        self.addr.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LocalCluster: in-process nodes with injectable faults
+// ---------------------------------------------------------------------------
+
+/// Injectable misbehavior for a [`LocalCluster`] node. Every fault acts
+/// at the transport boundary, *after* the request bytes are accepted —
+/// the same place real networks fail — so the retry/hedge/fallback
+/// machinery under test is exactly what production traffic exercises.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum Fault {
+    /// serve normally
+    #[default]
+    None,
+    /// swallow requests without replying (callers see a fast disconnect,
+    /// like a RST — not a burned deadline)
+    Drop,
+    /// serve after sleeping — a straggler, not a failure
+    Delay(Duration),
+    /// serve, then truncate the reply frame to half (guaranteed garbled)
+    Corrupt,
+    /// serve `n` more requests, then die mid-request like a crashed
+    /// process: the in-hand request and everything queued behind it get
+    /// no reply, ever
+    DieAfter(usize),
+}
+
+enum WorkerAction {
+    Serve(Option<Duration>),
+    DropIt,
+    CorruptIt,
+    Die,
+}
+
+type Job = (Vec<u8>, mpsc::Sender<Vec<u8>>);
+
+struct LocalNodeInner {
+    /// `None` after [`LocalCluster::kill`]; senders are cloned under the
+    /// lock per call, so a kill makes every later call fail fast
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    fault: Arc<Mutex<Fault>>,
+    name: String,
+}
+
+/// Threads-as-nodes harness: each node runs a real [`NodeState`] (its
+/// own log handle and embedded service) on a dedicated worker thread,
+/// fed raw frame bytes through a channel — the full codec and dispatch
+/// path of a TCP node, minus the socket. Tests and the bench suite get
+/// genuine multi-node concurrency (workers serve in parallel) and
+/// deterministic fault injection without binding a port.
+pub struct LocalCluster {
+    dir: PathBuf,
+    service: ServiceConfig,
+    nodes: Vec<Arc<LocalNodeInner>>,
+}
+
+fn spawn_worker(
+    dir: &Path,
+    service: ServiceConfig,
+    fault: Arc<Mutex<Fault>>,
+) -> Result<mpsc::Sender<Job>, MineError> {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let dir = dir.to_path_buf();
+    std::thread::spawn(move || {
+        // built on the worker thread: startup errors report through the
+        // ready channel, and the state never crosses threads
+        let state = match NodeState::open(&dir, service) {
+            Ok(s) => {
+                let _ = ready_tx.send(Ok(()));
+                s
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        };
+        for (bytes, reply) in rx {
+            let action = {
+                let mut f = fault.lock().unwrap_or_else(|p| p.into_inner());
+                match *f {
+                    Fault::None => WorkerAction::Serve(None),
+                    Fault::Delay(d) => WorkerAction::Serve(Some(d)),
+                    Fault::Drop => WorkerAction::DropIt,
+                    Fault::Corrupt => WorkerAction::CorruptIt,
+                    Fault::DieAfter(0) => WorkerAction::Die,
+                    Fault::DieAfter(n) => {
+                        *f = Fault::DieAfter(n - 1);
+                        WorkerAction::Serve(None)
+                    }
+                }
+            };
+            match action {
+                // dropping `reply` (and, for Die, the whole receiver)
+                // unblocks callers immediately with a disconnect
+                WorkerAction::Die => return,
+                WorkerAction::DropIt => continue,
+                WorkerAction::Serve(delay) => {
+                    if let Some(d) = delay {
+                        std::thread::sleep(d);
+                    }
+                    let _ = reply.send(state.handle_frame(&bytes));
+                }
+                WorkerAction::CorruptIt => {
+                    let mut out = state.handle_frame(&bytes);
+                    out.truncate(out.len() / 2);
+                    let _ = reply.send(out);
+                }
+            }
+        }
+    });
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok(tx),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Err(MineError::internal(
+            "local node worker exited before reporting readiness",
+        )),
+    }
+}
+
+impl LocalCluster {
+    /// Start `n` nodes, each opening its own handle on the log at `dir`
+    /// (the in-process stand-in for n replicas of the same recording).
+    pub fn start(dir: &Path, n: usize, service: ServiceConfig) -> Result<LocalCluster, MineError> {
+        if n == 0 {
+            return Err(MineError::invalid("a LocalCluster needs at least one node"));
+        }
+        let mut nodes = Vec::with_capacity(n);
+        for i in 0..n {
+            let fault = Arc::new(Mutex::new(Fault::None));
+            let tx = spawn_worker(dir, service.clone(), Arc::clone(&fault))?;
+            nodes.push(Arc::new(LocalNodeInner {
+                tx: Mutex::new(Some(tx)),
+                fault,
+                name: format!("local#{i}"),
+            }));
+        }
+        Ok(LocalCluster { dir: dir.to_path_buf(), service, nodes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// One [`NodeLink`] per node, in node order — feed these to
+    /// [`ScatterMiner::connect`].
+    pub fn links(&self) -> Vec<Arc<dyn NodeLink>> {
+        self.nodes
+            .iter()
+            .map(|n| Arc::new(LocalLink { node: Arc::clone(n) }) as Arc<dyn NodeLink>)
+            .collect()
+    }
+
+    /// Inject (or clear) a fault on node `i`, effective from its next
+    /// request.
+    pub fn set_fault(&self, i: usize, fault: Fault) {
+        *self.nodes[i].fault.lock().unwrap_or_else(|p| p.into_inner()) = fault;
+    }
+
+    /// Hard-kill node `i`: pending and future calls fail fast with a
+    /// transport error (the worker exits once in-flight sends drain).
+    pub fn kill(&self, i: usize) {
+        self.nodes[i].tx.lock().unwrap_or_else(|p| p.into_inner()).take();
+    }
+
+    /// Restart node `i` with a fresh worker and a clean fault slate.
+    pub fn revive(&self, i: usize) -> Result<(), MineError> {
+        self.set_fault(i, Fault::None);
+        let tx = spawn_worker(&self.dir, self.service.clone(), Arc::clone(&self.nodes[i].fault))?;
+        *self.nodes[i].tx.lock().unwrap_or_else(|p| p.into_inner()) = Some(tx);
+        Ok(())
+    }
+}
+
+struct LocalLink {
+    node: Arc<LocalNodeInner>,
+}
+
+impl NodeLink for LocalLink {
+    fn call(&self, request: &[u8], deadline: Duration) -> Result<Vec<u8>, MineError> {
+        let tx = {
+            let guard = self.node.tx.lock().unwrap_or_else(|p| p.into_inner());
+            match &*guard {
+                Some(tx) => tx.clone(),
+                None => {
+                    return Err(MineError::io(
+                        format!("send to {}", self.node.name),
+                        std::io::Error::new(std::io::ErrorKind::NotConnected, "node is down"),
+                    ))
+                }
+            }
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if tx.send((request.to_vec(), reply_tx)).is_err() {
+            return Err(MineError::io(
+                format!("send to {}", self.node.name),
+                std::io::Error::new(std::io::ErrorKind::ConnectionAborted, "node worker is gone"),
+            ));
+        }
+        match reply_rx.recv_timeout(deadline) {
+            Ok(reply) => Ok(reply),
+            Err(RecvTimeoutError::Timeout) => Err(MineError::io(
+                format!("await {}", self.node.name),
+                std::io::Error::new(std::io::ErrorKind::TimedOut, "deadline exceeded"),
+            )),
+            Err(RecvTimeoutError::Disconnected) => Err(MineError::io(
+                format!("await {}", self.node.name),
+                std::io::Error::new(std::io::ErrorKind::ConnectionReset, "node dropped the request"),
+            )),
+        }
+    }
+
+    fn describe(&self) -> String {
+        self.node.name.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// Scatter-side knobs. Defaults suit tests and LAN clusters; production
+/// deployments mostly tune `deadline` and `admission`.
+#[derive(Clone, Debug)]
+pub struct ScatterConfig {
+    /// log segments per scatter window (>= 1); larger groups mean fewer,
+    /// bigger sub-counts per level
+    pub group_segments: usize,
+    /// per-RPC deadline (also bounds each hedged duplicate)
+    pub deadline: Duration,
+    /// extra attempts after the first, each on the next surviving node
+    pub retries: usize,
+    /// hedge a duplicate request onto another healthy node if the first
+    /// has not answered within this; `None` disables hedging
+    pub hedge_after: Option<Duration>,
+    /// bounded-K occurrence lists (`usize::MAX` = unbounded, exact A1)
+    pub k: usize,
+    /// coordinator admission: per-tenant quotas, priorities, shedding
+    pub admission: AdmissionConfig,
+}
+
+impl Default for ScatterConfig {
+    fn default() -> ScatterConfig {
+        ScatterConfig {
+            group_segments: 1,
+            deadline: Duration::from_secs(30),
+            retries: 2,
+            hedge_after: None,
+            k: usize::MAX,
+            admission: AdmissionConfig::default(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct NodeStat {
+    calls: u64,
+    failures: u64,
+    in_flight: u64,
+    latencies: Vec<f64>,
+}
+
+/// State shared by every scatter thread of every query on one miner.
+struct ClusterShared {
+    links: Vec<Arc<dyn NodeLink>>,
+    /// per-query health: reset at mine start, flipped false on transport
+    /// failure so later windows skip known-dead nodes
+    healthy: Vec<AtomicBool>,
+    stats: Vec<Mutex<NodeStat>>,
+    next_id: AtomicU64,
+    retries_total: AtomicU64,
+    hedges: AtomicU64,
+    replans: AtomicU64,
+    local_fallbacks: AtomicU64,
+    deadline: Duration,
+    hedge_after: Option<Duration>,
+    retries: usize,
+}
+
+/// Transport errors are the node's *delivery* failing — retryable on
+/// another replica. Everything else (including a node's on-disk
+/// corruption report) is an application answer and must propagate.
+fn is_transport(e: &MineError) -> bool {
+    match e {
+        MineError::Io { .. } => true,
+        MineError::Corrupt { path, .. } => path == proto::WIRE,
+        _ => false,
+    }
+}
+
+fn no_survivors() -> MineError {
+    MineError::io(
+        "scatter",
+        std::io::Error::new(std::io::ErrorKind::NotConnected, "no healthy nodes remain"),
+    )
+}
+
+impl ClusterShared {
+    fn healthy_after(&self, start: usize) -> Option<usize> {
+        let n = self.links.len();
+        (0..n).map(|off| (start + off) % n).find(|&i| self.healthy[i].load(Ordering::Relaxed))
+    }
+
+    fn other_healthy(&self, not: usize) -> Option<usize> {
+        (0..self.links.len()).find(|&i| i != not && self.healthy[i].load(Ordering::Relaxed))
+    }
+
+    /// One stat-recorded exchange with `node`: send, receive, decode,
+    /// check the correlation id, unwrap the typed outcome.
+    fn raw_call(&self, node: usize, bytes: &[u8], id: u64) -> Result<Response, MineError> {
+        {
+            let mut s = self.stats[node].lock().unwrap_or_else(|p| p.into_inner());
+            s.calls += 1;
+            s.in_flight += 1;
+        }
+        let t0 = Instant::now();
+        let out = self.links[node].call(bytes, self.deadline).and_then(|reply| {
+            let (rid, outcome) = proto::decode_response(&reply)?;
+            // id 0 is the node's "your frame would not decode" channel
+            if rid != id && rid != 0 {
+                return Err(MineError::corrupt(
+                    proto::WIRE,
+                    format!("response correlation id {rid} does not match request {id}"),
+                ));
+            }
+            outcome
+        });
+        let mut s = self.stats[node].lock().unwrap_or_else(|p| p.into_inner());
+        s.in_flight -= 1;
+        if s.latencies.len() >= LATENCY_WINDOW {
+            s.latencies.drain(..LATENCY_WINDOW / 2);
+        }
+        s.latencies.push(t0.elapsed().as_nanos() as f64);
+        if out.is_err() {
+            s.failures += 1;
+        }
+        out
+    }
+}
+
+/// One possibly-hedged attempt against `node`. Without hedging this is a
+/// plain call; with it, a duplicate goes to another healthy node once
+/// `hedge_after` elapses, and the first answer (success preferred) wins.
+/// Detached call threads are harmless: every call is deadline-bounded,
+/// and a late send to the dropped receiver is ignored.
+fn attempt(
+    shared: &Arc<ClusterShared>,
+    node: usize,
+    bytes: &Arc<Vec<u8>>,
+    id: u64,
+) -> Result<Response, MineError> {
+    let Some(hedge_after) = shared.hedge_after else {
+        return shared.raw_call(node, bytes, id);
+    };
+    let (tx, rx) = mpsc::channel();
+    let spawn_call = |n: usize| {
+        let shared = Arc::clone(shared);
+        let bytes = Arc::clone(bytes);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let _ = tx.send(shared.raw_call(n, &bytes, id));
+        });
+    };
+    spawn_call(node);
+    let mut outstanding = 1usize;
+    let mut hedged = false;
+    let mut last_err: Option<MineError> = None;
+    loop {
+        let wait = if hedged { shared.deadline + DEADLINE_SLACK } else { hedge_after };
+        match rx.recv_timeout(wait) {
+            Ok(Ok(resp)) => return Ok(resp),
+            Ok(Err(e)) => {
+                last_err = Some(e);
+                outstanding -= 1;
+                if outstanding == 0 {
+                    return Err(last_err.expect("just set"));
+                }
+            }
+            Err(_) if !hedged => {
+                // stop waiting at hedge_after exactly once, whether or
+                // not a backup exists to hedge onto
+                hedged = true;
+                if let Some(backup) = shared.other_healthy(node) {
+                    shared.hedges.fetch_add(1, Ordering::Relaxed);
+                    spawn_call(backup);
+                    outstanding += 1;
+                }
+            }
+            Err(_) => {
+                return Err(last_err.unwrap_or_else(|| {
+                    MineError::io(
+                        format!("await {}", shared.links[node].describe()),
+                        std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "hedged call deadline exceeded",
+                        ),
+                    )
+                }));
+            }
+        }
+    }
+}
+
+/// Send `req` to `preferred`, failing over across surviving nodes on
+/// transport errors (each failure marks its node unhealthy and burns one
+/// retry). Success on a node other than the planned one is a re-plan.
+fn call_with_failover(
+    shared: &Arc<ClusterShared>,
+    req: &Request,
+    preferred: usize,
+) -> Result<Response, MineError> {
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+    let bytes = Arc::new(proto::encode_request(id, req));
+    let mut node = shared.healthy_after(preferred).ok_or_else(no_survivors)?;
+    let mut attempts = 0usize;
+    loop {
+        match attempt(shared, node, &bytes, id) {
+            Ok(resp) => {
+                if node != preferred {
+                    shared.replans.fetch_add(1, Ordering::Relaxed);
+                }
+                return Ok(resp);
+            }
+            Err(e) if is_transport(&e) => {
+                shared.healthy[node].store(false, Ordering::Relaxed);
+                if attempts >= shared.retries {
+                    return Err(e);
+                }
+                attempts += 1;
+                shared.retries_total.fetch_add(1, Ordering::Relaxed);
+                node = match shared.healthy_after(node) {
+                    Some(n) => n,
+                    None => return Err(e),
+                };
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The distributed counting backend
+// ---------------------------------------------------------------------------
+
+/// The exact serial reference at the cluster's K — the miss-recount path
+/// and the no-survivors fallback (same contract as `backend/sharded.rs`).
+fn recount_serial(ep: &Episode, stream: &EventStream, k: usize) -> u64 {
+    if k == usize::MAX {
+        serial::count_a1(ep, stream)
+    } else {
+        serial::count_a1_bounded(ep, stream, k)
+    }
+}
+
+/// Thin the base (per-segment-group) boundaries for one level: keep an
+/// interior boundary only if it is more than `halo` past the previous
+/// kept one, and widen the final window the same way. Narrow windows are
+/// legal but wasteful — a boundary machine can span the whole window,
+/// making misses (and recounts) likely — so levels with wide constraint
+/// windows scatter fewer, wider sub-counts. Exactness never depends on
+/// the choice: any window set folds to the reference count or flags a
+/// miss.
+fn effective_taus(base: &[Tick], halo: Tick) -> Vec<Tick> {
+    debug_assert!(base.len() >= 2, "base taus carry at least [t_from, t_to]");
+    let t_to = base[base.len() - 1];
+    let mut taus = vec![base[0]];
+    for &t in &base[1..base.len() - 1] {
+        if t - *taus.last().expect("taus is non-empty") > halo {
+            taus.push(t);
+        }
+    }
+    while taus.len() > 1 && t_to - *taus.last().expect("taus is non-empty") <= halo {
+        taus.pop();
+    }
+    taus.push(t_to);
+    taus
+}
+
+/// Scatter-window boundaries for a range: `t_from`, each segment group's
+/// last sealed tick (clamped into the range), `t_to`. Segment seals are
+/// the natural cut points — they already partition the recording on
+/// disk, so a node's window scan prunes whole segment files.
+fn base_taus(log: &SpikeLog, group_segments: usize, t_from: Tick, t_to: Tick) -> Vec<Tick> {
+    let mut taus = vec![t_from];
+    let segs: Vec<_> = log
+        .segments()
+        .iter()
+        .filter(|s| s.t_max > t_from && s.t_min <= t_to)
+        .collect();
+    for chunk in segs.chunks(group_segments.max(1)) {
+        let t = chunk.last().expect("chunks are non-empty").t_max.min(t_to);
+        if t > *taus.last().expect("taus is non-empty") && t < t_to {
+            taus.push(t);
+        }
+    }
+    taus.push(t_to);
+    taus
+}
+
+/// [`CountBackend`] over the cluster: MapCount RPCs per scatter window,
+/// host-side Concatenate, local recount of flagged misses. Constructed
+/// per query by [`ScatterMiner::mine`].
+struct ClusterBackend {
+    shared: Arc<ClusterShared>,
+    remap: AlphabetRemap,
+    fingerprint: u64,
+    t_from: Tick,
+    t_to: Tick,
+    base_taus: Vec<Tick>,
+    k: usize,
+}
+
+fn local_map(
+    shared: &ClusterShared,
+    dense: &[Episode],
+    stream: &EventStream,
+    lo: Tick,
+    hi: Tick,
+    halo: Tick,
+    k: usize,
+) -> Vec<Vec<(Tick, u64, Tick)>> {
+    shared.local_fallbacks.fetch_add(1, Ordering::Relaxed);
+    // the handed stream is already range-restricted, so no clamp here —
+    // this window matches the node's clamped scan exactly
+    let sub = stream.window(lo - halo, hi + halo);
+    dense.iter().map(|ep| serial::mapcat_map(ep, &sub, &[lo, hi], k).swap_remove(0)).collect()
+}
+
+fn local_relaxed(
+    shared: &ClusterShared,
+    idx: &[usize],
+    episodes: &[Episode],
+    stream: &EventStream,
+) -> Vec<u64> {
+    shared.local_fallbacks.fetch_add(1, Ordering::Relaxed);
+    idx.iter().map(|&i| serial::count_a2(&episodes[i], stream)).collect()
+}
+
+impl ClusterBackend {
+    /// Count one uniform n>=2 group: plan windows, scatter MapCount RPCs
+    /// (one scoped thread per window, round-robin preferred nodes), fold
+    /// machine chains, recount flagged misses locally.
+    fn map_count_group(
+        &self,
+        group: &[Episode],
+        stream: &EventStream,
+        m: &mut Metrics,
+    ) -> Result<Vec<u64>, MineError> {
+        let halo: Tick = group.iter().map(|e| e.span_max()).max().unwrap_or(0);
+        let taus = effective_taus(&self.base_taus, halo);
+        // wire episodes travel in original ids: nodes hold the raw log,
+        // while the driver hands us dense-id episodes at levels >= 2
+        let wire: Vec<Episode> = group
+            .iter()
+            .map(|ep| {
+                let mut ep = ep.clone();
+                self.remap.invert_episode(&mut ep);
+                ep
+            })
+            .collect();
+        m.shard_map_calls += 1;
+        let per_window = self.scatter_windows(&taus, &wire, group, stream, halo)?;
+        let mut counts = Vec::with_capacity(group.len());
+        for i in 0..group.len() {
+            let segments: Vec<Vec<(Tick, u64, Tick)>> =
+                per_window.iter().map(|w| w[i].clone()).collect();
+            let (total, misses) = mapconcat::concatenate_fold(&segments);
+            if misses > 0 {
+                // the chain may have desynchronized; restore exactness
+                // from the coordinator's own stream (misses are rare, so
+                // a serial recount does not dent the win)
+                m.concat_misses += misses;
+                counts.push(recount_serial(&group[i], stream, self.k));
+            } else {
+                counts.push(total);
+            }
+        }
+        Ok(counts)
+    }
+
+    fn scatter_windows(
+        &self,
+        taus: &[Tick],
+        wire: &[Episode],
+        dense: &[Episode],
+        stream: &EventStream,
+        halo: Tick,
+    ) -> Result<Vec<Vec<Vec<(Tick, u64, Tick)>>>, MineError> {
+        let n_nodes = self.shared.links.len();
+        let results: Vec<Result<Vec<Vec<(Tick, u64, Tick)>>, MineError>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = taus
+                    .windows(2)
+                    .enumerate()
+                    .map(|(w, bounds)| {
+                        let shared = Arc::clone(&self.shared);
+                        let (fingerprint, t_from, t_to, k) =
+                            (self.fingerprint, self.t_from, self.t_to, self.k);
+                        scope.spawn(move || {
+                            let (lo, hi) = (bounds[0], bounds[1]);
+                            let req = Request::MapCount {
+                                fingerprint,
+                                episodes: wire.to_vec(),
+                                t_from,
+                                t_to,
+                                lo,
+                                hi,
+                                halo,
+                                k,
+                            };
+                            match call_with_failover(&shared, &req, w % n_nodes) {
+                                Ok(Response::MapCount { machines })
+                                    if machines.len() == dense.len() =>
+                                {
+                                    Ok(machines)
+                                }
+                                // a well-formed reply of the wrong shape
+                                // is as useless as no reply: count here
+                                Ok(_) => Ok(local_map(&shared, dense, stream, lo, hi, halo, k)),
+                                Err(e) if is_transport(&e) => {
+                                    Ok(local_map(&shared, dense, stream, lo, hi, halo, k))
+                                }
+                                Err(e) => Err(e),
+                            }
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("scatter window worker panicked"))
+                    .collect()
+            });
+        results.into_iter().collect()
+    }
+
+    /// Relaxed (A2) counting for the two-pass pre-pass: n=1 answered
+    /// locally (A2 of a single node is its type frequency — not worth a
+    /// network hop), n>=2 chunked contiguously across healthy nodes.
+    fn relaxed_counts(
+        &self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<Vec<u64>, MineError> {
+        let mut counts = vec![0u64; episodes.len()];
+        let mut rest: Vec<usize> = vec![];
+        for (i, ep) in episodes.iter().enumerate() {
+            if ep.n() == 1 {
+                counts[i] = serial::count_a2(ep, stream);
+            } else {
+                rest.push(i);
+            }
+        }
+        if rest.is_empty() {
+            return Ok(counts);
+        }
+        let wire: Vec<Episode> = rest
+            .iter()
+            .map(|&i| {
+                let mut ep = episodes[i].clone();
+                self.remap.invert_episode(&mut ep);
+                ep
+            })
+            .collect();
+        let n_nodes = self.shared.links.len();
+        let healthy = (0..n_nodes)
+            .filter(|&i| self.shared.healthy[i].load(Ordering::Relaxed))
+            .count()
+            .max(1);
+        let per = rest.len().div_ceil(healthy.min(rest.len()));
+        let (fingerprint, t_from, t_to) = (self.fingerprint, self.t_from, self.t_to);
+        let results: Vec<Result<Vec<u64>, MineError>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = wire
+                .chunks(per)
+                .zip(rest.chunks(per))
+                .enumerate()
+                .map(|(c, (wire_chunk, idx_chunk))| {
+                    let shared = Arc::clone(&self.shared);
+                    scope.spawn(move || {
+                        let req = Request::RelaxedCount {
+                            fingerprint,
+                            episodes: wire_chunk.to_vec(),
+                            t_from,
+                            t_to,
+                        };
+                        match call_with_failover(&shared, &req, c % n_nodes) {
+                            Ok(Response::RelaxedCount { counts })
+                                if counts.len() == idx_chunk.len() =>
+                            {
+                                Ok(counts)
+                            }
+                            Ok(_) => Ok(local_relaxed(&shared, idx_chunk, episodes, stream)),
+                            Err(e) if is_transport(&e) => {
+                                Ok(local_relaxed(&shared, idx_chunk, episodes, stream))
+                            }
+                            Err(e) => Err(e),
+                        }
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("relaxed chunk worker panicked"))
+                .collect()
+        });
+        let mut slots = rest.iter();
+        for chunk in results {
+            for c in chunk? {
+                counts[*slots.next().expect("one slot per relaxed count")] = c;
+            }
+        }
+        Ok(counts)
+    }
+}
+
+impl CountBackend for ClusterBackend {
+    fn name(&self) -> &str {
+        "cluster-scatter"
+    }
+
+    fn supports_n(&self, _n: usize) -> bool {
+        true
+    }
+
+    fn count(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        let mut metrics = Metrics::default();
+        let this: &ClusterBackend = self;
+        let counts = count_grouped(episodes, stream, &mut metrics, |_n, group, m| {
+            this.map_count_group(group, stream, m)
+        })?;
+        Ok(CountReport { counts, culled: 0, metrics })
+    }
+
+    fn count_relaxed(
+        &mut self,
+        episodes: &[Episode],
+        stream: &EventStream,
+    ) -> Result<CountReport, MineError> {
+        let counts = self.relaxed_counts(episodes, stream)?;
+        let mut report = CountReport::from_counts(counts);
+        report.metrics.episodes_counted = episodes.len() as u64;
+        Ok(report)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ScatterMiner: the coordinator front door
+// ---------------------------------------------------------------------------
+
+/// Per-node metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct ClusterNodeMetrics {
+    pub addr: String,
+    /// health as of the most recent query (reset at each mine start)
+    pub healthy: bool,
+    pub calls: u64,
+    pub failures: u64,
+    pub in_flight: u64,
+    /// recent-call latency percentiles (`None` before the first call)
+    pub latency_ns: Option<Summary>,
+}
+
+/// Coordinator metrics snapshot: per-node health/latency plus the
+/// robustness counters (retries, hedges, re-plans, local fallbacks) and
+/// the admission gauges.
+#[derive(Clone, Debug)]
+pub struct ClusterMetrics {
+    pub nodes: Vec<ClusterNodeMetrics>,
+    pub retries: u64,
+    pub hedges: u64,
+    pub replans: u64,
+    pub local_fallbacks: u64,
+    pub shed: u64,
+    pub in_flight: usize,
+    pub queued: usize,
+}
+
+impl ClusterMetrics {
+    pub fn to_json(&self) -> Json {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let latency = match &n.latency_ns {
+                    Some(s) => Json::Obj(vec![
+                        ("n".into(), Json::Num(s.n as f64)),
+                        ("mean".into(), Json::Num(s.mean)),
+                        ("median".into(), Json::Num(s.median)),
+                        ("p95".into(), Json::Num(s.p95)),
+                        ("p99".into(), Json::Num(s.p99)),
+                        ("max".into(), Json::Num(s.max)),
+                    ]),
+                    None => Json::Null,
+                };
+                Json::Obj(vec![
+                    ("addr".into(), Json::Str(n.addr.clone())),
+                    ("healthy".into(), Json::Bool(n.healthy)),
+                    ("calls".into(), Json::Num(n.calls as f64)),
+                    ("failures".into(), Json::Num(n.failures as f64)),
+                    ("in_flight".into(), Json::Num(n.in_flight as f64)),
+                    ("latency_ns".into(), latency),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("nodes".into(), Json::Arr(nodes)),
+            ("retries".into(), Json::Num(self.retries as f64)),
+            ("hedges".into(), Json::Num(self.hedges as f64)),
+            ("replans".into(), Json::Num(self.replans as f64)),
+            ("local_fallbacks".into(), Json::Num(self.local_fallbacks as f64)),
+            ("shed".into(), Json::Num(self.shed as f64)),
+            ("in_flight".into(), Json::Num(self.in_flight as f64)),
+            ("queued".into(), Json::Num(self.queued as f64)),
+        ])
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "cluster: retries {} hedges {} replans {} local_fallbacks {} shed {} \
+             in_flight {} queued {}\n",
+            self.retries,
+            self.hedges,
+            self.replans,
+            self.local_fallbacks,
+            self.shed,
+            self.in_flight,
+            self.queued
+        );
+        for n in &self.nodes {
+            let lat = n
+                .latency_ns
+                .as_ref()
+                .map(|s| format!("p50 {:.0} p99 {:.0}", s.median, s.p99))
+                .unwrap_or_else(|| "no samples".to_string());
+            out.push_str(&format!(
+                "  {} {} calls {} failures {} in_flight {} latency_ns {}\n",
+                n.addr,
+                if n.healthy { "up" } else { "down" },
+                n.calls,
+                n.failures,
+                n.in_flight,
+                lat
+            ));
+        }
+        out
+    }
+}
+
+/// The coordinator: plans `log:` range queries over its own log replica,
+/// scatters counting across nodes, gathers results byte-identical to a
+/// single-process mine. Shareable across threads (loadgen drives one
+/// from many clients through an `Arc`).
+pub struct ScatterMiner {
+    shared: Arc<ClusterShared>,
+    admission: AdmissionController,
+    log: SpikeLog,
+    cfg: ScatterConfig,
+}
+
+impl ScatterMiner {
+    /// Open the coordinator's log replica at `log_dir` and attach to the
+    /// given node links (`LocalCluster::links`, or [`TcpLink`]s).
+    pub fn connect(
+        log_dir: &Path,
+        links: Vec<Arc<dyn NodeLink>>,
+        cfg: ScatterConfig,
+    ) -> Result<ScatterMiner, MineError> {
+        if links.is_empty() {
+            return Err(MineError::invalid("scatter needs at least one node link"));
+        }
+        if cfg.group_segments == 0 {
+            return Err(MineError::invalid("group_segments must be >= 1"));
+        }
+        if cfg.k == 0 {
+            return Err(MineError::invalid("k must be >= 1 (usize::MAX for unbounded)"));
+        }
+        let admission = AdmissionController::new(cfg.admission.clone())?;
+        let log = SpikeLog::open(log_dir)?;
+        let n = links.len();
+        let shared = Arc::new(ClusterShared {
+            links,
+            healthy: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            stats: (0..n).map(|_| Mutex::new(NodeStat::default())).collect(),
+            next_id: AtomicU64::new(0),
+            retries_total: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            replans: AtomicU64::new(0),
+            local_fallbacks: AtomicU64::new(0),
+            deadline: cfg.deadline,
+            hedge_after: cfg.hedge_after,
+            retries: cfg.retries,
+        });
+        Ok(ScatterMiner { shared, admission, log, cfg })
+    }
+
+    /// [`ScatterMiner::connect`] over TCP links — the
+    /// `epminer scatter --nodes a:1,b:2` path.
+    pub fn over_tcp(
+        log_dir: &Path,
+        addrs: &[String],
+        cfg: ScatterConfig,
+    ) -> Result<ScatterMiner, MineError> {
+        let links = addrs
+            .iter()
+            .map(|a| Arc::new(TcpLink::new(a.clone())) as Arc<dyn NodeLink>)
+            .collect();
+        ScatterMiner::connect(log_dir, links, cfg)
+    }
+
+    pub fn log(&self) -> &SpikeLog {
+        &self.log
+    }
+
+    /// Mine the range `(t_from, t_to]` distributed, returning exactly
+    /// what a single-process `Session::mine` over the same range and
+    /// options returns. `tenant` is the admission identity.
+    pub fn mine(
+        &self,
+        t_from: Tick,
+        t_to: Tick,
+        opts: &MineOptions,
+        two_pass: bool,
+        tenant: &str,
+    ) -> Result<MineResult, MineError> {
+        let _permit = self.admission.admit(tenant)?;
+        opts.validate()?;
+        // every query starts from a fresh view of node health: nodes
+        // that failed a past query may have recovered, and in-query
+        // failover re-discovers the dead ones
+        for h in &self.shared.healthy {
+            h.store(true, Ordering::Relaxed);
+        }
+        let (range_stream, _) = self.log.read_range(t_from, t_to)?;
+        let range_stream = Arc::new(range_stream);
+        let fingerprint = proto::range_fingerprint(&range_stream, t_from, t_to);
+        let base = base_taus(&self.log, self.cfg.group_segments, t_from, t_to);
+        // the driver remaps the alphabet from level-1 counts for levels
+        // >= 2; level-1 counts are always the type frequencies (even
+        // two-pass: A2 of a 1-node episode IS its frequency), so this
+        // independently-computed remap is identical to the driver's
+        let remap = AlphabetRemap::from_counts(&range_stream.type_counts());
+        let backend = ClusterBackend {
+            shared: Arc::clone(&self.shared),
+            remap,
+            fingerprint,
+            t_from,
+            t_to,
+            base_taus: base,
+            k: self.cfg.k,
+        };
+        let mut engine: Box<dyn CountBackend> = Box::new(backend);
+        if two_pass {
+            engine = Box::new(TwoPassBackend::new(engine, opts.theta));
+        }
+        let mut metrics = Metrics::default();
+        mine_with_backend(&mut *engine, &range_stream, opts, &mut metrics)
+    }
+
+    /// Mine the whole recording (`(t_begin - 1, t_end]`).
+    pub fn mine_all(
+        &self,
+        opts: &MineOptions,
+        two_pass: bool,
+        tenant: &str,
+    ) -> Result<MineResult, MineError> {
+        let t_from = self.log.t_begin().map(|t| t - 1).unwrap_or(-1);
+        let t_to = self.log.t_end().unwrap_or(0);
+        self.mine(t_from, t_to, opts, two_pass, tenant)
+    }
+
+    pub fn metrics(&self) -> ClusterMetrics {
+        let s = &self.shared;
+        let nodes = s
+            .links
+            .iter()
+            .enumerate()
+            .map(|(i, link)| {
+                let st = s.stats[i].lock().unwrap_or_else(|p| p.into_inner());
+                ClusterNodeMetrics {
+                    addr: link.describe(),
+                    healthy: s.healthy[i].load(Ordering::Relaxed),
+                    calls: st.calls,
+                    failures: st.failures,
+                    in_flight: st.in_flight,
+                    latency_ns: Summary::of_opt(&st.latencies),
+                }
+            })
+            .collect();
+        ClusterMetrics {
+            nodes,
+            retries: s.retries_total.load(Ordering::Relaxed),
+            hedges: s.hedges.load(Ordering::Relaxed),
+            replans: s.replans.load(Ordering::Relaxed),
+            local_fallbacks: s.local_fallbacks.load(Ordering::Relaxed),
+            shed: self.admission.sheds(),
+            in_flight: self.admission.in_flight(),
+            queued: self.admission.queued(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_taus_coalesces_narrow_windows() {
+        let base = vec![0, 10, 20, 30, 40];
+        assert_eq!(effective_taus(&base, 0), base);
+        // halo 10: 10 is too close to 0, 30 too close to 20
+        assert_eq!(effective_taus(&base, 10), vec![0, 20, 40]);
+        // halo wider than everything: degenerate single window
+        assert_eq!(effective_taus(&base, 100), vec![0, 40]);
+    }
+
+    #[test]
+    fn effective_taus_keeps_the_final_window_wide() {
+        // 38 survives the forward pass (38 - 10 > 5) but leaves a 2-tick
+        // final window, so the backward pass pops it
+        let base = vec![0, 10, 38, 40];
+        assert_eq!(effective_taus(&base, 5), vec![0, 10, 40]);
+    }
+
+    #[test]
+    fn transport_errors_are_distinguished_from_application_errors() {
+        let io = MineError::io(
+            "x",
+            std::io::Error::new(std::io::ErrorKind::TimedOut, "deadline"),
+        );
+        assert!(is_transport(&io));
+        assert!(is_transport(&MineError::corrupt(proto::WIRE, "garbled frame")));
+        // a node's on-disk corruption report names its log path, not the
+        // wire: that is an application answer, never retried
+        assert!(!is_transport(&MineError::corrupt("/data/log", "bad checksum")));
+        assert!(!is_transport(&MineError::invalid("nope")));
+        assert!(!is_transport(&MineError::Busy { queue_depth: 4, capacity: 4 }));
+    }
+
+    #[test]
+    fn default_config_is_valid() {
+        let cfg = ScatterConfig::default();
+        assert!(cfg.group_segments >= 1);
+        assert!(cfg.k >= 1);
+        assert!(cfg.admission.validate().is_ok());
+    }
+}

@@ -79,6 +79,16 @@
 //!   service metrics, live-update subscriptions pushing frequent-set
 //!   diffs to waiters, and a closed-loop load generator
 //!   (`epminer serve-bench`, `benches/serve_load.rs`).
+//! - [`cluster`] — scatter-gather distributed mining over log segments:
+//!   a coordinator ([`cluster::ScatterMiner`], `epminer scatter`) that
+//!   runs the exact level-wise driver locally and distributes only the
+//!   counting across [`cluster::ClusterNode`] workers (`epminer node`)
+//!   over a length-prefixed JSON wire protocol, merging with the
+//!   MapConcatenate fold + flagged-miss recount so results are
+//!   byte-identical to a single-process mine — with deadlines, retry +
+//!   re-plan onto survivors, hedged duplicates, tenant-aware admission,
+//!   and per-node latency metrics. [`cluster::LocalCluster`] runs the
+//!   whole tier in-process for tests and benches.
 //! - [`coordinator`] — strategy name menu, run metrics, the streaming
 //!   partition producer, and the deprecated pre-0.2 `Coordinator` shims.
 //! - [`bench`] — the unified perf harness: a suite registry every bench
@@ -91,6 +101,7 @@
 pub mod analysis;
 pub mod backend;
 pub mod bench;
+pub mod cluster;
 pub mod coordinator;
 pub mod datasets;
 pub mod episodes;

@@ -9,6 +9,9 @@
 //!   log-mine    — time-range / electrode-projection mining over a log
 //!   watch       — tail a live log and mine incrementally (stream/), one
 //!                 commit + frequent-set diff per sealed segment
+//!   node        — serve a log replica to a scatter coordinator (cluster/)
+//!   scatter     — distributed range mining across nodes, byte-identical
+//!                 to a single-process mine over the same range
 //!   serve-bench — load-test the multi-tenant mining service (serve/)
 //!   bench       — run registered perf suites (machine-readable output,
 //!                 baseline regression checking; see bench/)
@@ -21,6 +24,8 @@
 //!   epminer ingest --dataset sym26 --out /tmp/rec
 //!   epminer log-mine --log /tmp/rec --from 10000 --to 30000 --types 3,7,9 --theta 20
 //!   epminer watch --log /tmp/rec --theta 20 --window 8 --follow
+//!   epminer node --listen 0.0.0.0:7400 --log /tmp/rec
+//!   epminer scatter --nodes host1:7400,host2:7400 --log /tmp/rec --theta 20
 //!   epminer serve-bench --smoke
 //!   epminer bench --suite all --smoke --json-out . --check benches/baselines
 //!   epminer info
@@ -52,6 +57,8 @@ fn run() -> Result<(), MineError> {
         Some("ingest") => cmd_ingest(&args),
         Some("log-mine") => cmd_log_mine(&args),
         Some("watch") => cmd_watch(&args),
+        Some("node") => cmd_node(&args),
+        Some("scatter") => cmd_scatter(&args),
         Some("reconstruct") => cmd_reconstruct(&args),
         Some("raster") => cmd_raster(&args),
         Some("profile") => cmd_profile(&args),
@@ -60,7 +67,7 @@ fn run() -> Result<(), MineError> {
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: epminer <mine|count|gen|ingest|log-mine|watch|reconstruct|raster|profile|serve-bench|bench|info> [options]\n\
+                "usage: epminer <mine|count|gen|ingest|log-mine|watch|node|scatter|reconstruct|raster|profile|serve-bench|bench|info> [options]\n\
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
@@ -76,6 +83,15 @@ fn run() -> Result<(), MineError> {
                  \x20            [--poll-ms <n>] [--max-commits <n>] [--low <t> --high <t>]\n\
                  \x20            [--max-level <n>] [--k <n>] — incremental live mining: replay\n\
                  \x20            sealed history, then push a frequent-set diff per new segment\n\
+                 node        --listen <addr:port> --log <dir> [--workers <n>]\n\
+                 \x20            [--strategy <name>] — serve this log replica's counting to a\n\
+                 \x20            scatter coordinator (runs until killed)\n\
+                 scatter     --nodes <addr,addr,...> --log <dir> --theta <u64>\n\
+                 \x20            [--from <tick> --to <tick>] [--low <t> --high <t>]\n\
+                 \x20            [--mode two-pass|one-pass] [--max-level <n>]\n\
+                 \x20            [--group-segments <n>] [--deadline-ms <n>] [--retries <n>]\n\
+                 \x20            [--hedge-ms <n>] [--k <n>] — distributed range mine,\n\
+                 \x20            byte-identical to mining the same range in one process\n\
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
                  raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
                  profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
@@ -426,6 +442,102 @@ fn cmd_watch(args: &Args) -> Result<(), MineError> {
             std::thread::sleep(std::time::Duration::from_millis(poll_ms));
         }
     }
+}
+
+fn cmd_node(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::cluster::ClusterNode;
+    use episodes_gpu::serve::ServiceConfig;
+
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| MineError::invalid("--listen <addr:port> required"))?;
+    let dir = args.get("log").ok_or_else(|| MineError::invalid("--log <dir> required"))?;
+    let d = ServiceConfig::default();
+    let sc = ServiceConfig {
+        workers: args.get_usize("workers", d.workers)?,
+        strategy: match args.get("strategy") {
+            Some(s) => Strategy::parse(s)?,
+            None => d.strategy,
+        },
+        ..d
+    };
+    let node = ClusterNode::bind(listen, std::path::Path::new(dir), sc)?;
+    println!("node: serving {dir} on {}", node.local_addr()?);
+    node.run()
+}
+
+fn cmd_scatter(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::cluster::{ScatterConfig, ScatterMiner};
+    use episodes_gpu::session::{MineOptions, DEFAULT_CANDIDATE_BLOCK};
+    use std::time::Duration;
+
+    let nodes_spec = args
+        .get("nodes")
+        .ok_or_else(|| MineError::invalid("--nodes <addr,addr,...> required"))?;
+    let addrs: Vec<String> = nodes_spec
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let dir = args.get("log").ok_or_else(|| MineError::invalid("--log <dir> required"))?;
+    let theta = args.get_u64("theta", 20)?;
+    // same generic path-scheme default band as watch/log-mine
+    let iv = Interval::new(args.get_i32("low", 2)?, args.get_i32("high", 10)?);
+    let two_pass = match args.get_or("mode", "two-pass") {
+        "two-pass" => true,
+        "one-pass" => false,
+        other => {
+            return Err(MineError::invalid(format!(
+                "bad --mode {other} (expected two-pass or one-pass)"
+            )))
+        }
+    };
+    let opts = MineOptions {
+        theta,
+        intervals: vec![iv],
+        max_level: args.get_usize("max-level", 8)?,
+        max_candidates_per_level: 2_000_000,
+        candidate_block: DEFAULT_CANDIDATE_BLOCK,
+    };
+
+    let d = ScatterConfig::default();
+    let cfg = ScatterConfig {
+        group_segments: args.get_usize("group-segments", d.group_segments)?,
+        deadline: Duration::from_millis(
+            args.get_u64("deadline-ms", d.deadline.as_millis() as u64)?,
+        ),
+        retries: args.get_usize("retries", d.retries)?,
+        hedge_after: match args.get("hedge-ms") {
+            Some(_) => Some(Duration::from_millis(args.get_u64("hedge-ms", 0)?)),
+            None => d.hedge_after,
+        },
+        k: args.get_usize("k", d.k)?,
+        ..d
+    };
+
+    let miner = ScatterMiner::over_tcp(std::path::Path::new(dir), &addrs, cfg)?;
+    println!(
+        "scatter: {} over {} nodes ({} sealed segments)",
+        dir,
+        addrs.len(),
+        miner.log().segments().len()
+    );
+    let t0 = std::time::Instant::now();
+    let result = match (args.get("from"), args.get("to")) {
+        (None, None) => miner.mine_all(&opts, two_pass, "cli")?,
+        _ => {
+            // (t_from, t_to] half-open-left, like every range API here
+            let t_from =
+                args.get_i32("from", miner.log().t_begin().map(|t| t - 1).unwrap_or(-1))?;
+            let t_to = args.get_i32("to", miner.log().t_end().unwrap_or(0))?;
+            miner.mine(t_from, t_to, &opts, two_pass, "cli")?
+        }
+    };
+    print_levels(&result);
+    println!("\ntotal {:.3}s", t0.elapsed().as_secs_f64());
+    print!("{}", miner.metrics().report());
+    print_top_episodes(&result);
+    Ok(())
 }
 
 fn cmd_reconstruct(args: &Args) -> Result<(), MineError> {

@@ -19,6 +19,11 @@
 //! the service, the serial baseline, or a direct `Session` — that replay
 //! is how the service-equivalence test and the `serve_load` bench are
 //! built.
+//!
+//! [`cluster_curve`] is the distributed-tier sibling: stepped client
+//! counts against a [`ScatterMiner`](crate::cluster::ScatterMiner)
+//! coordinator, reporting latency under saturation (and how much load the
+//! coordinator's tenant-aware admission shed) per step.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -462,6 +467,102 @@ fn pick_query(
     // hot repeat, or the fallback when a drawn scenario's pool is empty
     // (hot is never empty — Workload::build guarantees >= 1)
     workload.hot[rng.below(workload.hot.len() as u64) as usize].clone()
+}
+
+/// One step of the multi-node saturation curve: `clients` concurrent
+/// closed-loop tenants against one scatter coordinator.
+#[derive(Clone, Debug)]
+pub struct ClusterCurvePoint {
+    pub clients: usize,
+    /// distributed mines that returned a result
+    pub completed: u64,
+    /// mines the coordinator's admission shed with [`MineError::Busy`]
+    /// (per-tenant quota or queue pressure) — expected load-shedding
+    /// under saturation, not failure
+    pub shed: u64,
+    pub errors: u64,
+    pub qps: f64,
+    /// client-observed mine latency (ns)
+    pub latency_ns: Option<Summary>,
+}
+
+impl ClusterCurvePoint {
+    pub fn report(&self) -> String {
+        let lat = match &self.latency_ns {
+            Some(s) => format!(
+                "p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+                s.median / 1e6,
+                s.p95 / 1e6,
+                s.p99 / 1e6
+            ),
+            None => "no completions".to_string(),
+        };
+        format!(
+            "clients={} completed={} shed={} errors={} qps={:.1} latency[{lat}]",
+            self.clients, self.completed, self.shed, self.errors, self.qps
+        )
+    }
+}
+
+/// Latency under saturation against a distributed coordinator: for each
+/// entry in `steps`, run that many closed-loop clients, each mining the
+/// whole recording `rounds` times under its own tenant (`curve-<i>`), and
+/// record the step's throughput/latency/shed counts. The curve's shape is
+/// the capacity story: qps should grow with clients until the node pool
+/// saturates, after which admission sheds instead of queueing unboundedly.
+pub fn cluster_curve(
+    miner: &crate::cluster::ScatterMiner,
+    opts: &crate::session::MineOptions,
+    two_pass: bool,
+    steps: &[usize],
+    rounds: usize,
+) -> Vec<ClusterCurvePoint> {
+    let mut points = Vec::with_capacity(steps.len());
+    for &clients in steps {
+        let clients = clients.max(1);
+        let t0 = Instant::now();
+        let stats: Vec<ClientStats> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|ci| {
+                    scope.spawn(move || {
+                        let tenant = format!("curve-{ci}");
+                        let mut s = ClientStats::default();
+                        for _ in 0..rounds.max(1) {
+                            let t = Instant::now();
+                            match miner.mine_all(opts, two_pass, &tenant) {
+                                Ok(_) => {
+                                    s.completed += 1;
+                                    s.latencies_ns.push(t.elapsed().as_nanos() as f64);
+                                }
+                                Err(MineError::Busy { .. }) => s.rejected += 1,
+                                Err(_) => s.errors += 1,
+                            }
+                        }
+                        s
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("curve client panicked")).collect()
+        });
+        let wall = t0.elapsed();
+        let mut latencies: Vec<f64> = vec![];
+        let (mut completed, mut shed, mut errors) = (0, 0, 0);
+        for s in stats {
+            completed += s.completed;
+            shed += s.rejected;
+            errors += s.errors;
+            latencies.extend(s.latencies_ns);
+        }
+        points.push(ClusterCurvePoint {
+            clients,
+            completed,
+            shed,
+            errors,
+            qps: completed as f64 / wall.as_secs_f64().max(1e-9),
+            latency_ns: Summary::of_opt(&latencies),
+        });
+    }
+    points
 }
 
 #[cfg(test)]

@@ -29,6 +29,10 @@ pub struct ServiceMetrics {
     pub rejected: u64,
     /// submissions that joined an identical in-flight execution
     pub coalesced: u64,
+    /// tickets currently riding an in-flight job they coalesced onto.
+    /// Distinct from `queue_depth`: a coalesced waiter holds no queue
+    /// slot and no worker — conflating the two overstates backlog.
+    pub coalesced_waiting: usize,
     pub cache: CacheStats,
     /// jobs currently waiting for a worker
     pub queue_depth: usize,
@@ -83,6 +87,7 @@ impl ServiceMetrics {
         };
         format!(
             "submitted={} completed={} failed={} rejected={} coalesced={} \
+             coalesced_waiting={} \
              cache_hits={} cache_misses={} evictions={} hit_rate={:.1}% \
              queue_depth={} subs={} subs_rejected={} pushed={} dropped={} \
              qps={:.1} latency[{}] util=[{}]",
@@ -91,6 +96,7 @@ impl ServiceMetrics {
             self.failed,
             self.rejected,
             self.coalesced,
+            self.coalesced_waiting,
             self.cache.hits,
             self.cache.misses,
             self.cache.evictions,
@@ -119,7 +125,8 @@ impl ServiceMetrics {
         };
         format!(
             "{{\"submitted\":{},\"completed\":{},\"failed\":{},\"rejected\":{},\
-             \"coalesced\":{},\"cache_hits\":{},\"cache_misses\":{},\
+             \"coalesced\":{},\"coalesced_waiting\":{},\
+             \"cache_hits\":{},\"cache_misses\":{},\
              \"cache_evictions\":{},\"cache_hit_rate\":{:.4},\"queue_depth\":{},\
              \"subscriptions_active\":{},\"subscriptions_rejected\":{},\
              \"updates_published\":{},\"updates_dropped\":{},\
@@ -130,6 +137,7 @@ impl ServiceMetrics {
             self.failed,
             self.rejected,
             self.coalesced,
+            self.coalesced_waiting,
             self.cache.hits,
             self.cache.misses,
             self.cache.evictions,
@@ -164,6 +172,7 @@ mod tests {
             failed: 0,
             rejected: 1,
             coalesced: 1,
+            coalesced_waiting: 2,
             cache: CacheStats { hits: 2, misses: 8, evictions: 0, entries: 6 },
             queue_depth: 0,
             uptime: Duration::from_secs(2),
@@ -191,8 +200,10 @@ mod tests {
         let r = m.report();
         assert!(r.contains("rejected=1") && r.contains("p99="), "{r}");
         assert!(r.contains("subs=2") && r.contains("dropped=3"), "{r}");
+        assert!(r.contains("coalesced_waiting=2"), "{r}");
         let j = m.to_json();
         assert!(j.contains("\"rejected\":1") && j.contains("\"p99\":"), "{j}");
+        assert!(j.contains("\"coalesced_waiting\":2"), "{j}");
         assert!(
             j.contains("\"subscriptions_active\":2") && j.contains("\"updates_dropped\":3"),
             "{j}"

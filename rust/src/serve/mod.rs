@@ -27,7 +27,10 @@
 //!   [`pool::Subscription`] as a frequent-set diff. Per-tenant
 //!   subscription caps extend the bounded-admission story to long-lived
 //!   feeds; full mailboxes drop oldest (every update carries the full
-//!   set, so consumers resynchronize from the latest).
+//!   set, so consumers resynchronize from the latest). With
+//!   [`pool::WatchLogConfig`] the service publishes to itself: a
+//!   watcher thread tails a `log:` directory and pushes every commit,
+//!   no external publisher required.
 //! - [`metrics::ServiceMetrics`] — throughput, queue depth, p50/p95/p99
 //!   latency, cache hit rate, per-worker utilization.
 //! - [`loadgen`] — a closed-loop load generator over a scenario mix (hot
@@ -45,5 +48,5 @@ pub mod query;
 
 pub use cache::{CacheStats, ResultCache};
 pub use metrics::ServiceMetrics;
-pub use pool::{mine_direct, MineService, ServiceConfig, Subscription, Ticket};
+pub use pool::{mine_direct, MineService, ServiceConfig, Subscription, Ticket, WatchLogConfig};
 pub use query::{Query, QueryKey, SubscribeQuery};

@@ -25,6 +25,7 @@
 //! theta-specific two-pass wrappers differ between jobs.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -38,7 +39,7 @@ use crate::runtime::Runtime;
 use crate::session::{engine_for, mine_with_backend};
 use crate::util::stats::Summary;
 
-use crate::stream::CommitUpdate;
+use crate::stream::{CommitUpdate, IncrementalConfig, LogWatcher};
 
 use super::cache::ResultCache;
 use super::metrics::ServiceMetrics;
@@ -69,6 +70,11 @@ pub struct ServiceConfig {
     /// [`MineError::Busy`] (the subscription analogue of the bounded job
     /// queue)
     pub max_subscriptions_per_tenant: usize,
+    /// tail a [`SpikeLog`](crate::ingest::SpikeLog) directory and publish
+    /// each incremental commit to this service's subscribers — see
+    /// [`WatchLogConfig`]. `None` (the default): updates arrive only when
+    /// an external caller drives [`MineService::publish`].
+    pub watch_log: Option<WatchLogConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -82,6 +88,49 @@ impl Default for ServiceConfig {
             cpu_threads: 1,
             latency_window: 4096,
             max_subscriptions_per_tenant: 4,
+            watch_log: None,
+        }
+    }
+}
+
+/// Make the service its own publisher: a [`LogWatcher`] thread tails a
+/// [`SpikeLog`](crate::ingest::SpikeLog) directory and pushes every
+/// [`CommitUpdate`] it commits to subscribers of the configured topic.
+/// With this set, a tenant that [`subscribe`](MineService::subscribe)s
+/// against a `log:` dataset receives live updates without any external
+/// process driving [`MineService::publish`]. The watcher replays
+/// already-sealed history on its first poll (window state identical to
+/// having watched from the start) and is joined at shutdown.
+#[derive(Clone, Debug)]
+pub struct WatchLogConfig {
+    /// the log directory to tail
+    pub dir: PathBuf,
+    /// incremental-mining parameters (theta, intervals, window, K)
+    pub config: IncrementalConfig,
+    /// manifest poll cadence; shutdown interrupts a sleeping poller, so
+    /// a long cadence does not delay teardown
+    pub poll_interval: Duration,
+    /// publish topic; `None` means `log:<dir>`, matching the `log:`
+    /// dataset spec the CLI uses for the same directory
+    pub topic: Option<String>,
+}
+
+impl WatchLogConfig {
+    /// Watch `dir` at a 200ms cadence, publishing to `log:<dir>`.
+    pub fn new(dir: impl Into<PathBuf>, config: IncrementalConfig) -> WatchLogConfig {
+        WatchLogConfig {
+            dir: dir.into(),
+            config,
+            poll_interval: Duration::from_millis(200),
+            topic: None,
+        }
+    }
+
+    /// The topic updates are published to (`log:<dir>` unless overridden).
+    pub fn resolved_topic(&self) -> String {
+        match &self.topic {
+            Some(t) => t.clone(),
+            None => format!("log:{}", self.dir.display()),
         }
     }
 }
@@ -95,6 +144,10 @@ struct Job {
     key: QueryKey,
     query: Query,
     submitted: Instant,
+    /// tickets that coalesced onto this job after it was admitted; feeds
+    /// the [`ServiceMetrics::coalesced_waiting`] gauge, which counts
+    /// waiters separately from queued jobs (a waiter holds no queue slot)
+    waiters: AtomicU64,
     slot: Mutex<Option<JobOutcome>>,
     done: Condvar,
 }
@@ -204,6 +257,9 @@ struct Shared {
 pub struct MineService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    /// the [`WatchLogConfig`] tailer, when configured; unparked and
+    /// joined at shutdown
+    watcher: Option<JoinHandle<()>>,
 }
 
 impl MineService {
@@ -232,6 +288,18 @@ impl MineService {
             // workers open their own handles, but if the runtime cannot
             // open here it will not open there either.
             drop(Runtime::open_default()?);
+        }
+        if let Some(wl) = &cfg.watch_log {
+            // Same fail-fast contract for the log tailer: if the log will
+            // not open (or the incremental config is invalid) here, it
+            // will not open in the watcher thread either. The thread
+            // builds its own watcher — `LogWatcher` is not `Send`-bound.
+            drop(LogWatcher::new(&wl.dir, wl.config.clone())?);
+            if wl.poll_interval.is_zero() {
+                return Err(MineError::invalid(
+                    "WatchLogConfig::poll_interval must be non-zero",
+                ));
+            }
         }
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState { jobs: VecDeque::new(), paused }),
@@ -281,7 +349,23 @@ impl MineService {
                 }
             }
         }
-        Ok(MineService { shared, workers })
+        let mut service = MineService { shared, workers, watcher: None };
+        if let Some(wl) = cfg.watch_log {
+            let topic = wl.resolved_topic();
+            let watch_shared = Arc::clone(&service.shared);
+            let spawned = std::thread::Builder::new()
+                .name("mine-watcher".to_string())
+                .spawn(move || watcher_loop(&watch_shared, &wl, &topic));
+            match spawned {
+                Ok(handle) => service.watcher = Some(handle),
+                Err(e) => {
+                    // shutdown_inner tears the already-running pool down
+                    service.shutdown_inner();
+                    return Err(MineError::io("spawning log watcher", e));
+                }
+            }
+        }
+        Ok(service)
     }
 
     /// Admit a query. Returns a [`Ticket`] (possibly already resolved
@@ -308,6 +392,7 @@ impl MineService {
         if let Some(job) = inflight.get(&key) {
             if job.query.equivalent(&query) {
                 self.shared.coalesced.fetch_add(1, Ordering::Relaxed);
+                job.waiters.fetch_add(1, Ordering::Relaxed);
                 return Ok(Ticket(TicketState::Pending(Arc::clone(job))));
             }
             register = false;
@@ -323,6 +408,7 @@ impl MineService {
             key,
             query,
             submitted: Instant::now(),
+            waiters: AtomicU64::new(0),
             slot: Mutex::new(None),
             done: Condvar::new(),
         });
@@ -391,23 +477,7 @@ impl MineService {
     /// their oldest entry rather than blocking. Returns how many
     /// subscribers were handed the update.
     pub fn publish(&self, topic: &str, update: CommitUpdate) -> usize {
-        let update = Arc::new(update);
-        let hub = self.shared.hub.lock().unwrap();
-        let mut delivered = 0;
-        for entry in hub.subs.values().filter(|s| s.topic == topic) {
-            let mut queue = entry.shared.queue.lock().unwrap();
-            while queue.len() >= entry.shared.buffer {
-                queue.pop_front();
-                self.shared.updates_dropped.fetch_add(1, Ordering::Relaxed);
-            }
-            queue.push_back(Arc::clone(&update));
-            drop(queue);
-            entry.shared.cv.notify_all();
-            delivered += 1;
-        }
-        drop(hub);
-        self.shared.updates_published.fetch_add(1, Ordering::Relaxed);
-        delivered
+        publish_update(&self.shared, topic, update)
     }
 
     /// Open a paused pool (no-op when already running).
@@ -426,6 +496,16 @@ impl MineService {
             failed: self.shared.failed.load(Ordering::Relaxed),
             rejected: self.shared.rejected.load(Ordering::Relaxed),
             coalesced: self.shared.coalesced.load(Ordering::Relaxed),
+            // gauge, not counter: waiters on jobs that already resolved
+            // left the in-flight map with their job
+            coalesced_waiting: self
+                .shared
+                .inflight
+                .lock()
+                .unwrap()
+                .values()
+                .map(|job| job.waiters.load(Ordering::Relaxed) as usize)
+                .sum(),
             cache: self.shared.cache.stats(),
             queue_depth: self.shared.queue.lock().unwrap().jobs.len(),
             uptime: self.shared.started.elapsed(),
@@ -462,6 +542,13 @@ impl MineService {
             self.shared.shutdown.store(true, Ordering::SeqCst);
         }
         self.shared.queue_cv.notify_all();
+        if let Some(handle) = self.watcher.take() {
+            // wake a sleeping poller; the unpark token is buffered, so a
+            // watcher mid-poll still returns immediately from its next
+            // park_timeout and sees the shutdown flag
+            handle.thread().unpark();
+            let _ = handle.join();
+        }
         for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
@@ -546,6 +633,53 @@ impl Drop for Subscription {
 impl Drop for MineService {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// The body of [`MineService::publish`], callable from the watcher
+/// thread (which holds the `Arc<Shared>`, not the service handle).
+fn publish_update(shared: &Shared, topic: &str, update: CommitUpdate) -> usize {
+    let update = Arc::new(update);
+    let hub = shared.hub.lock().unwrap();
+    let mut delivered = 0;
+    for entry in hub.subs.values().filter(|s| s.topic == topic) {
+        let mut queue = entry.shared.queue.lock().unwrap();
+        while queue.len() >= entry.shared.buffer {
+            queue.pop_front();
+            shared.updates_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        queue.push_back(Arc::clone(&update));
+        drop(queue);
+        entry.shared.cv.notify_all();
+        delivered += 1;
+    }
+    drop(hub);
+    shared.updates_published.fetch_add(1, Ordering::Relaxed);
+    delivered
+}
+
+/// The [`WatchLogConfig`] thread: poll the log, publish every commit,
+/// sleep (interruptibly) until the next cadence tick or shutdown.
+fn watcher_loop(shared: &Shared, wl: &WatchLogConfig, topic: &str) {
+    // start_inner probed this construction; a failure now (log deleted
+    // in the window between probe and spawn) ends the feed, which is
+    // also what a later poll error does.
+    let Ok(mut watcher) = LogWatcher::new(&wl.dir, wl.config.clone()) else {
+        return;
+    };
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match watcher.poll() {
+            Ok(updates) => {
+                for update in updates {
+                    publish_update(shared, topic, update);
+                }
+            }
+            // the log regressed or corrupted under us: stop publishing
+            // rather than spinning on the same error; subscribers keep
+            // their buffered history
+            Err(_) => return,
+        }
+        std::thread::park_timeout(wl.poll_interval);
     }
 }
 

@@ -1,0 +1,402 @@
+//! The cluster layer's acceptance property: distributed exactness.
+//!
+//! A `ScatterMiner` over any cluster shape — 1/2/4/8 nodes, varying
+//! segment-group sizes, one- or two-pass, bounded-K — must return
+//! *byte-identical* results to a single-process `Session::mine` over
+//! the same log range: same episodes, same order, same counts, same
+//! per-level tallies. The exactness must survive injected faults
+//! (node death mid-query, dropped and corrupted replies, slow nodes
+//! under hedging) because failover re-plans segments onto survivors
+//! rather than dropping them. The wire protocol must reject hostile
+//! frames — truncation, garbage, version mismatches — with typed
+//! errors, never panics.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use episodes_gpu::backend::sharded::ShardedBackend;
+use episodes_gpu::cluster::{
+    proto, AdmissionConfig, ClusterNode, Fault, LocalCluster, NodeState, ScatterConfig,
+    ScatterMiner,
+};
+use episodes_gpu::coordinator::miner::MineResult;
+use episodes_gpu::coordinator::Strategy;
+use episodes_gpu::episodes::Interval;
+use episodes_gpu::events::{EventStream, Tick};
+use episodes_gpu::ingest::{RollPolicy, SpikeLog};
+use episodes_gpu::serve::loadgen::cluster_curve;
+use episodes_gpu::serve::ServiceConfig;
+use episodes_gpu::session::{MineOptions, DEFAULT_CANDIDATE_BLOCK};
+use episodes_gpu::util::rng::Rng;
+use episodes_gpu::Session;
+
+const THETA: u64 = 40;
+const MAX_LEVEL: usize = 3;
+const CANDIDATE_CAP: usize = 1_000_000;
+
+fn interval() -> Interval {
+    Interval::new(0, 5)
+}
+
+fn opts() -> MineOptions {
+    MineOptions {
+        theta: THETA,
+        intervals: vec![interval()],
+        max_level: MAX_LEVEL,
+        max_candidates_per_level: CANDIDATE_CAP,
+        candidate_block: DEFAULT_CANDIDATE_BLOCK,
+    }
+}
+
+/// Fresh scratch directory (removed first, so reruns start clean).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("epgs_cluster_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Ingest a deterministic bursty stream into a fresh multi-segment log.
+fn build_log(tag: &str, n_events: usize, seg_events: usize) -> PathBuf {
+    let dir = scratch(tag);
+    let n_types = 6usize;
+    let mut rng = Rng::new(0xC1A5 ^ n_events as u64);
+    let mut stream = EventStream::new(n_types);
+    let mut t = 0;
+    for _ in 0..n_events {
+        t += rng.range_i32(0, 2);
+        stream.push(rng.range_i32(0, n_types as i32 - 1), t);
+    }
+    let mut ingestor = SpikeLog::create(&dir, n_types)
+        .expect("create log")
+        .ingestor(RollPolicy { max_events: seg_events, max_width_ticks: 1_000_000 })
+        .expect("ingestor");
+    ingestor.append_stream(&stream).expect("append");
+    ingestor.finish().expect("finish");
+    dir
+}
+
+/// Worker-node service: one worker, serial engine — the cluster tests
+/// exercise the scatter tier, not intra-node parallelism.
+fn node_service() -> ServiceConfig {
+    let d = ServiceConfig::default();
+    ServiceConfig { workers: 1, strategy: Strategy::CpuSerial, ..d }
+}
+
+/// The single-process ground truth: `Session::mine` over the same
+/// range, options, pass mode, and K bound.
+fn reference(log: &SpikeLog, t_from: Tick, t_to: Tick, two_pass: bool, k: usize) -> MineResult {
+    let (stream, _) = log.read_range(t_from, t_to).expect("read range");
+    let builder = Session::builder()
+        .stream(stream)
+        .theta(THETA)
+        .interval(interval())
+        .two_pass(two_pass)
+        .max_level(MAX_LEVEL)
+        .max_candidates_per_level(CANDIDATE_CAP)
+        .candidate_block(DEFAULT_CANDIDATE_BLOCK);
+    let builder = if k == usize::MAX {
+        builder.strategy(Strategy::CpuSerial)
+    } else {
+        builder.backend(Box::new(ShardedBackend::new(1).with_k(k)))
+    };
+    let mut session = builder.build().expect("build session");
+    session.mine().expect("reference mine")
+}
+
+fn whole_range(log: &SpikeLog) -> (Tick, Tick) {
+    (log.t_begin().expect("non-empty log") - 1, log.t_end().expect("non-empty log"))
+}
+
+/// Byte-identical comparison: episodes with counts, in order, plus the
+/// per-level tallies (timing fields excluded — they are wall clock).
+fn assert_same(tag: &str, got: &MineResult, want: &MineResult) {
+    let shape = |r: &MineResult| -> Vec<(String, u64)> {
+        r.frequent.iter().map(|c| (c.episode.display(), c.count)).collect()
+    };
+    assert_eq!(shape(got), shape(want), "{tag}: frequent episodes diverge");
+    assert_eq!(got.levels.len(), want.levels.len(), "{tag}: level count diverges");
+    for (g, w) in got.levels.iter().zip(&want.levels) {
+        assert_eq!(
+            (g.level, g.candidates, g.frequent, g.culled_by_a2),
+            (w.level, w.candidates, w.frequent, w.culled_by_a2),
+            "{tag}: level tallies diverge"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Equality matrix
+// ---------------------------------------------------------------------
+
+#[test]
+fn distributed_matches_single_process_across_cluster_shapes() {
+    let dir = build_log("shapes", 1400, 180);
+    let log = SpikeLog::open(&dir).expect("open log");
+    assert!(log.segments().len() >= 4, "log must span >= 4 segments");
+    let (t_from, t_to) = whole_range(&log);
+    let want_one = reference(&log, t_from, t_to, false, usize::MAX);
+    let want_two = reference(&log, t_from, t_to, true, usize::MAX);
+    assert!(!want_one.frequent.is_empty(), "degenerate fixture: nothing frequent");
+
+    for &nodes in &[1usize, 2, 4, 8] {
+        let cluster = LocalCluster::start(&dir, nodes, node_service()).expect("cluster");
+        for &group in &[1usize, 3] {
+            let cfg = ScatterConfig { group_segments: group, ..ScatterConfig::default() };
+            let miner = ScatterMiner::connect(&dir, cluster.links(), cfg).expect("connect");
+            for &two_pass in &[false, true] {
+                let tag = format!("nodes={nodes} group={group} two_pass={two_pass}");
+                let got = miner.mine_all(&opts(), two_pass, "equality").expect("scatter mine");
+                let want = if two_pass { &want_two } else { &want_one };
+                assert_same(&tag, &got, want);
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_k_distributed_matches_bounded_reference() {
+    let dir = build_log("bounded_k", 1100, 160);
+    let log = SpikeLog::open(&dir).expect("open log");
+    let (t_from, t_to) = whole_range(&log);
+    let k = 2usize;
+    let cluster = LocalCluster::start(&dir, 3, node_service()).expect("cluster");
+    let cfg = ScatterConfig { k, group_segments: 2, ..ScatterConfig::default() };
+    let miner = ScatterMiner::connect(&dir, cluster.links(), cfg).expect("connect");
+    for &two_pass in &[false, true] {
+        let got = miner.mine_all(&opts(), two_pass, "bounded").expect("scatter mine");
+        let want = reference(&log, t_from, t_to, two_pass, k);
+        assert_same(&format!("k={k} two_pass={two_pass}"), &got, &want);
+    }
+}
+
+#[test]
+fn sub_range_query_matches_single_process() {
+    let dir = build_log("subrange", 1200, 150);
+    let log = SpikeLog::open(&dir).expect("open log");
+    let (t0, t1) = whole_range(&log);
+    let span = t1 - t0;
+    let (t_from, t_to) = (t0 + span / 3, t0 + 2 * span / 3);
+    let cluster = LocalCluster::start(&dir, 4, node_service()).expect("cluster");
+    let miner =
+        ScatterMiner::connect(&dir, cluster.links(), ScatterConfig::default()).expect("connect");
+    let got = miner.mine(t_from, t_to, &opts(), false, "range").expect("scatter mine");
+    let want = reference(&log, t_from, t_to, false, usize::MAX);
+    assert_same("sub-range", &got, &want);
+}
+
+// ---------------------------------------------------------------------
+// Fault injection: the answer never changes, only the path to it
+// ---------------------------------------------------------------------
+
+#[test]
+fn node_death_mid_query_replans_onto_survivors() {
+    let dir = build_log("death", 1300, 170);
+    let log = SpikeLog::open(&dir).expect("open log");
+    let (t_from, t_to) = whole_range(&log);
+    let want = reference(&log, t_from, t_to, false, usize::MAX);
+
+    let cluster = LocalCluster::start(&dir, 4, node_service()).expect("cluster");
+    // node 0 answers two requests, then dies with requests in flight
+    cluster.set_fault(0, Fault::DieAfter(2));
+    let miner =
+        ScatterMiner::connect(&dir, cluster.links(), ScatterConfig::default()).expect("connect");
+    let got = miner.mine_all(&opts(), false, "death").expect("mine past node death");
+    assert_same("die-after mid-query", &got, &want);
+    let m = miner.metrics();
+    assert!(m.retries >= 1, "death must force a retry, metrics: {}", m.report());
+    assert!(!m.nodes[0].healthy, "the dead node must be marked unhealthy");
+
+    // an already-dead node: every call fails over, nothing is dropped
+    cluster.kill(1);
+    let got = miner.mine_all(&opts(), false, "death").expect("mine past killed node");
+    assert_same("killed before query", &got, &want);
+
+    // survivors-only cluster still answers after a revive of one peer
+    cluster.revive(1).expect("revive");
+    let got = miner.mine_all(&opts(), false, "death").expect("mine after revive");
+    assert_same("after revive", &got, &want);
+}
+
+#[test]
+fn slow_node_hedging_fires_and_stays_exact() {
+    let dir = build_log("hedge", 900, 140);
+    let log = SpikeLog::open(&dir).expect("open log");
+    let (t_from, t_to) = whole_range(&log);
+    let want = reference(&log, t_from, t_to, false, usize::MAX);
+
+    let cluster = LocalCluster::start(&dir, 2, node_service()).expect("cluster");
+    cluster.set_fault(0, Fault::Delay(Duration::from_millis(120)));
+    let cfg = ScatterConfig {
+        hedge_after: Some(Duration::from_millis(20)),
+        deadline: Duration::from_secs(10),
+        ..ScatterConfig::default()
+    };
+    let miner = ScatterMiner::connect(&dir, cluster.links(), cfg).expect("connect");
+    let got = miner.mine_all(&opts(), false, "hedge").expect("mine with straggler");
+    assert_same("hedged straggler", &got, &want);
+    let m = miner.metrics();
+    assert!(m.hedges >= 1, "the slow node must trigger a hedge, metrics: {}", m.report());
+}
+
+#[test]
+fn dropped_and_corrupted_replies_fall_back_without_wrong_answers() {
+    let dir = build_log("dropcorrupt", 1000, 150);
+    let log = SpikeLog::open(&dir).expect("open log");
+    let (t_from, t_to) = whole_range(&log);
+    let want = reference(&log, t_from, t_to, false, usize::MAX);
+
+    let cluster = LocalCluster::start(&dir, 2, node_service()).expect("cluster");
+    // a short deadline keeps the one dropped call from stalling the test
+    let cfg = ScatterConfig { deadline: Duration::from_millis(800), ..ScatterConfig::default() };
+    let miner = ScatterMiner::connect(&dir, cluster.links(), cfg).expect("connect");
+
+    cluster.set_fault(0, Fault::Drop);
+    let got = miner.mine_all(&opts(), false, "faults").expect("mine past dropped replies");
+    assert_same("dropped replies", &got, &want);
+    assert!(miner.metrics().retries >= 1, "a dropped reply must surface as a retry");
+
+    cluster.set_fault(0, Fault::Corrupt);
+    let got = miner.mine_all(&opts(), false, "faults").expect("mine past corrupt replies");
+    assert_same("corrupt replies", &got, &want);
+
+    cluster.set_fault(0, Fault::None);
+    let got = miner.mine_all(&opts(), false, "faults").expect("mine after faults clear");
+    assert_same("faults cleared", &got, &want);
+}
+
+// ---------------------------------------------------------------------
+// Admission: over-quota tenants shed into typed Busy, never hang
+// ---------------------------------------------------------------------
+
+#[test]
+fn admission_sheds_over_quota_tenants_under_saturation() {
+    let dir = build_log("admission", 700, 180);
+    let cluster = LocalCluster::start(&dir, 2, node_service()).expect("cluster");
+    // every RPC takes >= 60ms, so concurrent clients genuinely overlap
+    cluster.set_fault(0, Fault::Delay(Duration::from_millis(60)));
+    cluster.set_fault(1, Fault::Delay(Duration::from_millis(60)));
+    let cfg = ScatterConfig {
+        admission: AdmissionConfig {
+            total_in_flight: 1,
+            queue_capacity: 0,
+            ..AdmissionConfig::default()
+        },
+        ..ScatterConfig::default()
+    };
+    let miner = ScatterMiner::connect(&dir, cluster.links(), cfg).expect("connect");
+
+    let mut small = opts();
+    small.max_level = 2;
+    let points = cluster_curve(&miner, &small, false, &[3], 2);
+    assert_eq!(points.len(), 1);
+    let p = &points[0];
+    assert_eq!(p.clients, 3);
+    assert!(p.completed >= 1, "at least one client must get through: {}", p.report());
+    assert!(p.shed >= 1, "capacity 1 with 3 clients must shed: {}", p.report());
+    assert_eq!(p.errors, 0, "shedding is Busy, not an error: {}", p.report());
+    assert!(miner.metrics().shed >= 1, "the admission counter must record the sheds");
+}
+
+// ---------------------------------------------------------------------
+// Wire protocol: hostile frames get typed errors, never panics
+// ---------------------------------------------------------------------
+
+#[test]
+fn wire_rejects_truncated_garbage_and_mismatched_version_frames() {
+    // truncated payload: framed bytes cut mid-payload
+    let mut framed = Vec::new();
+    proto::write_frame(&mut framed, b"{\"v\":1,\"id\":1}").expect("frame");
+    let cut = &framed[..framed.len() - 3];
+    let err = proto::read_frame(&mut &cut[..]).expect_err("truncated frame must error");
+    assert!(format!("{err}").contains("truncated"), "{err}");
+
+    // truncated header: close after 2 of 4 length bytes
+    let err = proto::read_frame(&mut &framed[..2]).expect_err("truncated header must error");
+    assert!(format!("{err}").contains("truncated"), "{err}");
+
+    // clean EOF between frames is not an error
+    let empty: &[u8] = &[];
+    assert!(proto::read_frame(&mut &empty[..]).expect("clean close").is_none());
+
+    // a length header past MAX_FRAME is rejected before allocation
+    let huge = ((proto::MAX_FRAME + 1) as u32).to_le_bytes();
+    let err = proto::read_frame(&mut &huge[..]).expect_err("oversize frame must error");
+    assert!(format!("{err}").contains("MAX_FRAME"), "{err}");
+
+    // non-UTF-8 and non-JSON payloads
+    assert!(proto::decode_request(&[0xff, 0xfe, 0x01]).is_err());
+    assert!(proto::decode_request(b"{\"v\":1,").is_err());
+
+    // a future protocol version is refused with a version message
+    let err = proto::decode_request(b"{\"v\":2,\"id\":1,\"req\":{}}")
+        .expect_err("version mismatch must error");
+    assert!(format!("{err}").contains("version mismatch"), "{err}");
+
+    // a reply envelope must carry ok or err
+    assert!(proto::decode_response(b"{\"v\":1,\"id\":1}").is_err());
+
+    // well-formed frames round-trip: id and variant survive
+    let bytes = proto::encode_request(7, &proto::Request::Ping);
+    let (id, req) = proto::decode_request(&bytes).expect("round trip");
+    assert_eq!(id, 7);
+    assert!(matches!(req, proto::Request::Ping));
+}
+
+#[test]
+fn node_answers_undecodable_frames_on_the_zero_channel() {
+    let dir = build_log("badframe", 500, 200);
+    let state = NodeState::open(&dir, node_service()).expect("open node");
+
+    // garbage in, typed error out — correlation id 0 marks "your frame
+    // would not decode" (no request id was recoverable)
+    let reply = state.handle_frame(b"definitely not a frame");
+    let (id, outcome) = proto::decode_response(&reply).expect("reply must decode");
+    assert_eq!(id, 0);
+    assert!(outcome.is_err());
+
+    // a good frame on the same state still answers normally
+    let reply = state.handle_frame(&proto::encode_request(5, &proto::Request::Ping));
+    let (id, outcome) = proto::decode_response(&reply).expect("reply must decode");
+    assert_eq!(id, 5);
+    match outcome.expect("ping must succeed") {
+        proto::Response::Pong { version } => assert_eq!(version, proto::PROTO_VERSION),
+        other => panic!("expected Pong, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP loopback: the real sockets, end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn tcp_loopback_scatter_matches_single_process() {
+    let dir = build_log("tcp", 800, 150);
+    let log = SpikeLog::open(&dir).expect("open log");
+    let (t_from, t_to) = whole_range(&log);
+    let want = reference(&log, t_from, t_to, false, usize::MAX);
+
+    // sandboxes without loopback skip rather than fail
+    let Ok(node) = ClusterNode::bind("127.0.0.1:0", &dir, node_service()) else {
+        return;
+    };
+    let (addr, _state) = node.spawn().expect("spawn node");
+    let Ok(node2) = ClusterNode::bind("127.0.0.1:0", &dir, node_service()) else {
+        return;
+    };
+    let (addr2, _state2) = node2.spawn().expect("spawn node");
+
+    let miner = ScatterMiner::over_tcp(
+        &dir,
+        &[addr.to_string(), addr2.to_string()],
+        ScatterConfig::default(),
+    )
+    .expect("connect");
+    let want_two = reference(&log, t_from, t_to, true, usize::MAX);
+    for &two_pass in &[false, true] {
+        let got = miner.mine_all(&opts(), two_pass, "tcp").expect("tcp mine");
+        let want = if two_pass { &want_two } else { &want };
+        assert_same(&format!("tcp two_pass={two_pass}"), &got, want);
+    }
+    let m = miner.metrics();
+    assert!(m.nodes.iter().any(|n| n.calls > 0), "tcp nodes must have served calls");
+}

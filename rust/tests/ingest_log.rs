@@ -18,7 +18,8 @@ use episodes_gpu::episodes::Interval;
 use episodes_gpu::events::{io, EventStream, EventType, Tick};
 use episodes_gpu::ingest::{RangeQuery, RollPolicy, SpikeLog};
 use episodes_gpu::serve::loadgen::{LoadGenConfig, Workload};
-use episodes_gpu::serve::{MineService, ServiceConfig};
+use episodes_gpu::serve::{MineService, ServiceConfig, SubscribeQuery, WatchLogConfig};
+use episodes_gpu::stream::IncrementalConfig;
 use episodes_gpu::util::prop::{forall, small_size};
 use episodes_gpu::util::rng::Rng;
 use episodes_gpu::{MineError, Session};
@@ -490,6 +491,67 @@ fn range_pruning_skips_segment_io() {
     assert!(matches!(err, MineError::OutOfAlphabet { type_id: 9, n_types: 5 }), "{err}");
     std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn watch_log_service_publishes_commits_to_its_own_subscribers() {
+    // satellite of the live-mining story: a service configured with
+    // `watch_log` tails the log directory itself — subscribers on the
+    // `log:<dir>` topic receive CommitUpdates with no external publisher
+    let dir = scratch("watchlog");
+    let mut ingestor = SpikeLog::create(&dir, 4)
+        .unwrap()
+        .ingestor(RollPolicy { max_events: 64, max_width_ticks: 100_000 })
+        .unwrap();
+    let mut t = 0;
+    let mut push = |ingestor: &mut episodes_gpu::ingest::Ingestor, n: usize, t: &mut i32| {
+        for i in 0..n {
+            *t += 1 + (i as i32 % 2);
+            ingestor.append(i as i32 % 4, *t).unwrap();
+        }
+    };
+    // seal some history before the service starts
+    push(&mut ingestor, 200, &mut t);
+
+    let mut wl = WatchLogConfig::new(&dir, IncrementalConfig::new(3, vec![Interval::new(0, 6)]));
+    wl.poll_interval = std::time::Duration::from_millis(20);
+    let topic = wl.resolved_topic();
+    assert_eq!(topic, format!("log:{}", dir.display()), "topic follows the log: spec");
+    let service = MineService::start(ServiceConfig {
+        workers: 1,
+        strategy: Strategy::CpuSerial,
+        watch_log: Some(wl),
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let sub = service.subscribe(SubscribeQuery::new("live", topic)).unwrap();
+
+    // seal more segments while the watcher is live: these commits can
+    // only reach the subscriber through the service's own watcher thread
+    push(&mut ingestor, 200, &mut t);
+    drop(ingestor.finish().unwrap());
+
+    let update = sub
+        .recv_timeout(std::time::Duration::from_secs(20))
+        .expect("the watcher must publish a commit for a newly sealed segment");
+    assert!(update.seq >= 1);
+    let m = service.shutdown();
+    assert!(m.updates_published >= 1, "publishes must be accounted: {}", m.report());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn watch_log_on_a_missing_directory_fails_service_start() {
+    let dir = scratch("watchlog_missing"); // never created
+    let wl = WatchLogConfig::new(
+        &dir,
+        IncrementalConfig::new(3, vec![Interval::new(0, 6)]),
+    );
+    assert!(
+        MineService::start(ServiceConfig { watch_log: Some(wl), ..ServiceConfig::default() })
+            .is_err(),
+        "a watch dir that cannot be opened must fail start, not die silently"
+    );
 }
 
 #[test]

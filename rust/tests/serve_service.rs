@@ -99,6 +99,10 @@ fn identical_inflight_queries_coalesce_into_one_execution() {
     let m = service.metrics();
     assert_eq!(m.queue_depth, 1, "five identical submissions, one queued job");
     assert_eq!(m.coalesced, 4);
+    assert_eq!(
+        m.coalesced_waiting, 4,
+        "waiters ride the in-flight job, they do not hold queue slots"
+    );
     service.resume();
     let mut results = tickets.into_iter().map(|t| t.wait().unwrap());
     let first = results.next().unwrap();
@@ -107,6 +111,7 @@ fn identical_inflight_queries_coalesce_into_one_execution() {
     }
     let m = service.shutdown();
     assert_eq!(m.completed, 1);
+    assert_eq!(m.coalesced_waiting, 0, "a resolved job releases its waiters");
 }
 
 #[test]
