@@ -2,7 +2,7 @@
 //!
 //! A node owns exactly three things — an opened [`SpikeLog`], one
 //! cached full read of it, and an embedded [`MineService`] — and
-//! answers the five [`Request`](super::proto::Request) shapes. The
+//! answers the six [`Request`](super::proto::Request) shapes. The
 //! request dispatcher ([`NodeState::handle_frame`]) is transport-free:
 //! the TCP accept loop ([`ClusterNode`]) and the in-process
 //! `LocalCluster` test harness both feed it raw frame bytes, so fault
@@ -42,6 +42,7 @@ use crate::error::MineError;
 use crate::events::{EventStream, Tick};
 use crate::ingest::SpikeLog;
 use crate::mining::serial;
+use crate::obs::Trace;
 use crate::serve::{MineService, Query, ServiceConfig};
 use crate::util::json::Json;
 
@@ -149,14 +150,37 @@ impl NodeState {
 
     /// Execute one request. Pure dispatch — no transport, no framing.
     pub fn handle_request(&self, req: Request) -> Result<Response, MineError> {
+        self.handle_request_traced(req, &Trace::off())
+    }
+
+    /// [`handle_request`](NodeState::handle_request) with span recording:
+    /// a request that arrived carrying a trace context gets a root span
+    /// per request shape, with the fingerprint check and the counting
+    /// work as children. The recorded spans ride back on the reply
+    /// envelope for the coordinator to graft into its own tree.
+    pub fn handle_request_traced(
+        &self,
+        req: Request,
+        trace: &Trace,
+    ) -> Result<Response, MineError> {
         match req {
             Request::Ping => Ok(Response::Pong { version: PROTO_VERSION }),
             Request::Metrics => {
                 let metrics = Json::parse(&self.service.metrics().to_json())?;
                 Ok(Response::Metrics { metrics })
             }
+            Request::Stats => {
+                // metrics() refreshes the derived gauges (queue depth,
+                // cache occupancy) into the registry before snapshotting
+                let _ = self.service.metrics();
+                Ok(Response::Stats { snapshot: self.service.registry().snapshot().to_json() })
+            }
             Request::Mine { fingerprint, options, two_pass, t_from, t_to } => {
-                let full = self.checked_stream(fingerprint, t_from, t_to)?;
+                let root = trace.span("node.mine");
+                let full = {
+                    let _fp = root.child("fingerprint");
+                    self.checked_stream(fingerprint, t_from, t_to)?
+                };
                 let mut query = Query::new(
                     Arc::new(full.window(t_from, t_to)),
                     options.theta,
@@ -165,11 +189,18 @@ impl NodeState {
                 query.max_level = options.max_level;
                 query.max_candidates_per_level = options.max_candidates_per_level;
                 query.two_pass = two_pass;
-                let result = self.service.submit(query)?.wait()?;
+                let result = {
+                    let _mine = root.child("service mine");
+                    self.service.submit(query)?.wait()?
+                };
                 Ok(Response::Mine { result: (*result).clone() })
             }
             Request::MapCount { fingerprint, episodes, t_from, t_to, lo, hi, halo, k } => {
-                let full = self.checked_stream(fingerprint, t_from, t_to)?;
+                let root = trace.span("node.map_count");
+                let full = {
+                    let _fp = root.child("fingerprint");
+                    self.checked_stream(fingerprint, t_from, t_to)?
+                };
                 Self::validate_episodes(&episodes, full.n_types, 2)?;
                 if !(t_from <= lo && lo < hi && hi <= t_to) || halo < 0 || k == 0 {
                     return Err(MineError::invalid(format!(
@@ -181,6 +212,8 @@ impl NodeState {
                 // reference never sees events outside (t_from, t_to]
                 let sub = full
                     .window(lo.saturating_sub(halo).max(t_from), hi.saturating_add(halo).min(t_to));
+                let _count =
+                    root.child_fmt(|| format!("map {} episode(s)", episodes.len()));
                 let machines = episodes
                     .iter()
                     .map(|ep| serial::mapcat_map(ep, &sub, &[lo, hi], k).swap_remove(0))
@@ -188,9 +221,15 @@ impl NodeState {
                 Ok(Response::MapCount { machines })
             }
             Request::RelaxedCount { fingerprint, episodes, t_from, t_to } => {
-                let full = self.checked_stream(fingerprint, t_from, t_to)?;
+                let root = trace.span("node.relaxed_count");
+                let full = {
+                    let _fp = root.child("fingerprint");
+                    self.checked_stream(fingerprint, t_from, t_to)?
+                };
                 Self::validate_episodes(&episodes, full.n_types, 1)?;
                 let sub = full.window(t_from, t_to);
+                let _count =
+                    root.child_fmt(|| format!("a2 count {} episode(s)", episodes.len()));
                 let counts =
                     episodes.iter().map(|ep| serial::count_a2(ep, &sub)).collect();
                 Ok(Response::RelaxedCount { counts })
@@ -201,9 +240,18 @@ impl NodeState {
     /// Decode one frame, execute it, encode the reply. Never fails:
     /// codec errors become typed `err` envelopes (correlation id 0,
     /// since a frame that would not decode has no trustworthy id).
+    /// A frame carrying a trace context gets its node-side spans
+    /// recorded and attached to the reply envelope.
     pub fn handle_frame(&self, bytes: &[u8]) -> Vec<u8> {
-        match proto::decode_request(bytes) {
-            Ok((id, req)) => proto::encode_response(id, &self.handle_request(req)),
+        match proto::decode_request_traced(bytes) {
+            Ok((id, req, trace_id)) => {
+                let trace = match trace_id {
+                    Some(tid) => Trace::with_id(tid),
+                    None => Trace::off(),
+                };
+                let outcome = self.handle_request_traced(req, &trace);
+                proto::encode_response_traced(id, &outcome, &trace.snapshot())
+            }
             Err(e) => proto::encode_response(0, &Err(e)),
         }
     }

@@ -27,6 +27,11 @@
 //!   reused connection.
 //! - `req` / `ok` / `err` — exactly one of: a [`Request`], a
 //!   successful [`Response`], or an encoded [`MineError`].
+//! - `trace` (optional, requests) — a propagated
+//!   [`TraceId`](crate::obs::TraceId) in hex; `spans` (optional, `ok`
+//!   replies) — the node's recorded [`SpanRecord`]s for that trace.
+//!   Both keys are additive: decoders ignore unknown envelope keys, so
+//!   a v1 peer without tracing interoperates unchanged.
 //!
 //! Frames larger than [`MAX_FRAME`] are refused on both sides: a
 //! corrupt length prefix must not convince a node to allocate
@@ -56,6 +61,8 @@ use crate::datasets;
 use crate::episodes::{CountedEpisode, Episode, Interval};
 use crate::error::MineError;
 use crate::events::{EventStream, EventType, Tick};
+use crate::obs::trace::{spans_from_json, spans_to_json, SpanRecord, TraceId};
+use crate::obs::MineProfile;
 use crate::serve::Query;
 use crate::session::MineOptions;
 use crate::util::json::Json;
@@ -150,6 +157,10 @@ pub enum Request {
     Ping,
     /// Snapshot the node's `ServiceMetrics` as JSON.
     Metrics,
+    /// Snapshot the node's unified [`obs::Registry`](crate::obs::Registry)
+    /// as JSON (counters/gauges/histograms — the `epminer stats
+    /// --connect` surface).
+    Stats,
     /// Mine the `(t_from, t_to]` window of the node's log end-to-end.
     Mine {
         /// [`range_fingerprint`] of the windowed stream
@@ -194,6 +205,11 @@ pub enum Response {
     },
     Metrics {
         metrics: Json,
+    },
+    /// The node's unified metrics registry snapshot (see
+    /// [`obs::Snapshot::to_json`](crate::obs::Snapshot::to_json)).
+    Stats {
+        snapshot: Json,
     },
     Mine {
         result: MineResult,
@@ -255,19 +271,72 @@ fn open_envelope(bytes: &[u8]) -> Result<(u64, Json), MineError> {
 
 /// Serialize a request envelope.
 pub fn encode_request(id: u64, req: &Request) -> Vec<u8> {
-    envelope(id, "req", request_to_json(req))
+    encode_request_traced(id, req, None)
 }
 
-/// Parse a request envelope (node side).
+/// Serialize a request envelope carrying an optional trace context: the
+/// propagated [`TraceId`] travels as an extra `"trace"` hex-string key,
+/// which old peers (whose decoder only reads the keys it knows) skip.
+pub fn encode_request_traced(id: u64, req: &Request, trace: Option<TraceId>) -> Vec<u8> {
+    let mut fields = vec![
+        ("v".to_string(), Json::Num(PROTO_VERSION as f64)),
+        ("id".to_string(), Json::Num(id as f64)),
+    ];
+    if let Some(t) = trace {
+        fields.push(("trace".to_string(), Json::Str(t.to_hex())));
+    }
+    fields.push(("req".to_string(), request_to_json(req)));
+    Json::Obj(fields).render().into_bytes()
+}
+
+/// Parse a request envelope (node side), discarding any trace context.
 pub fn decode_request(bytes: &[u8]) -> Result<(u64, Request), MineError> {
+    decode_request_traced(bytes).map(|(id, req, _)| (id, req))
+}
+
+/// Parse a request envelope along with its optional trace context. A
+/// missing `"trace"` key is simply `None` (old peers); a present but
+/// hostile one — non-string, oversized, or non-hex — is a typed error,
+/// never a panic.
+pub fn decode_request_traced(
+    bytes: &[u8],
+) -> Result<(u64, Request, Option<TraceId>), MineError> {
     let (id, doc) = open_envelope(bytes)?;
-    Ok((id, request_from_json(doc.req("req")?)?))
+    let trace = match doc.get("trace") {
+        None => None,
+        Some(t) => {
+            let s = t
+                .as_str()
+                .ok_or_else(|| MineError::invalid("envelope \"trace\" must be a hex string"))?;
+            Some(TraceId::from_hex(s)?)
+        }
+    };
+    Ok((id, request_from_json(doc.req("req")?)?, trace))
 }
 
 /// Serialize a reply envelope: `ok` for success, `err` for a typed
 /// failure.
 pub fn encode_response(id: u64, outcome: &Result<Response, MineError>) -> Vec<u8> {
+    encode_response_traced(id, outcome, &[])
+}
+
+/// [`encode_response`] attaching the node's recorded spans (an extra
+/// `"spans"` key on `ok` envelopes only — errors travel bare, and old
+/// peers skip the unknown key).
+pub fn encode_response_traced(
+    id: u64,
+    outcome: &Result<Response, MineError>,
+    spans: &[SpanRecord],
+) -> Vec<u8> {
     match outcome {
+        Ok(resp) if !spans.is_empty() => Json::Obj(vec![
+            ("v".to_string(), Json::Num(PROTO_VERSION as f64)),
+            ("id".to_string(), Json::Num(id as f64)),
+            ("spans".to_string(), spans_to_json(spans)),
+            ("ok".to_string(), response_to_json(resp)),
+        ])
+        .render()
+        .into_bytes(),
         Ok(resp) => envelope(id, "ok", response_to_json(resp)),
         Err(e) => envelope(id, "err", error_to_json(e)),
     }
@@ -277,12 +346,26 @@ pub fn encode_response(id: u64, outcome: &Result<Response, MineError>) -> Vec<u8
 /// transport/codec failure; the inner one is the node's own outcome.
 #[allow(clippy::type_complexity)]
 pub fn decode_response(bytes: &[u8]) -> Result<(u64, Result<Response, MineError>), MineError> {
+    decode_response_traced(bytes).map(|(id, outcome, _)| (id, outcome))
+}
+
+/// Parse a reply envelope along with any spans the node attached (empty
+/// when absent — old peers). Span lists from untrusted peers are shape
+/// checked and clamped to [`MAX_SPANS`](crate::obs::trace::MAX_SPANS).
+#[allow(clippy::type_complexity)]
+pub fn decode_response_traced(
+    bytes: &[u8],
+) -> Result<(u64, Result<Response, MineError>, Vec<SpanRecord>), MineError> {
     let (id, doc) = open_envelope(bytes)?;
+    let spans = match doc.get("spans") {
+        None => vec![],
+        Some(s) => spans_from_json(s)?,
+    };
     if let Some(ok) = doc.get("ok") {
-        return Ok((id, Ok(response_from_json(ok)?)));
+        return Ok((id, Ok(response_from_json(ok)?), spans));
     }
     if let Some(err) = doc.get("err") {
-        return Ok((id, Err(error_from_json(err)?)));
+        return Ok((id, Err(error_from_json(err)?), spans));
     }
     Err(MineError::invalid("reply envelope carries neither \"ok\" nor \"err\""))
 }
@@ -465,9 +548,10 @@ fn level_from_json(j: &Json) -> Result<LevelReport, MineError> {
     })
 }
 
-/// MineResult → JSON.
+/// MineResult → JSON. The phase profile is an optional key — absent
+/// when profiling was off, skipped by decoders that predate it.
 pub fn result_to_json(r: &MineResult) -> Json {
-    Json::Obj(vec![
+    let mut fields = vec![
         (
             "frequent".to_string(),
             Json::Arr(
@@ -483,7 +567,11 @@ pub fn result_to_json(r: &MineResult) -> Json {
             ),
         ),
         ("levels".to_string(), Json::Arr(r.levels.iter().map(level_to_json).collect())),
-    ])
+    ];
+    if let Some(p) = &r.profile {
+        fields.push(("profile".to_string(), p.to_json()));
+    }
+    Json::Obj(fields)
 }
 
 /// Parse a MineResult.
@@ -507,7 +595,11 @@ pub fn result_from_json(j: &Json) -> Result<MineResult, MineError> {
         .iter()
         .map(level_from_json)
         .collect::<Result<Vec<_>, _>>()?;
-    Ok(MineResult { frequent, levels })
+    let profile = match j.get("profile") {
+        None => None,
+        Some(p) => Some(MineProfile::from_json(p)?),
+    };
+    Ok(MineResult { frequent, levels, profile })
 }
 
 fn machines_to_json(machines: &[Vec<(Tick, u64, Tick)>]) -> Json {
@@ -566,6 +658,9 @@ fn request_to_json(req: &Request) -> Json {
         Request::Metrics => {
             Json::Obj(vec![("type".to_string(), Json::Str("metrics".to_string()))])
         }
+        Request::Stats => {
+            Json::Obj(vec![("type".to_string(), Json::Str("stats".to_string()))])
+        }
         Request::Mine { fingerprint, options, two_pass, t_from, t_to } => Json::Obj(vec![
             ("type".to_string(), Json::Str("mine".to_string())),
             ("fingerprint".to_string(), fp_to_json(*fingerprint)),
@@ -608,6 +703,7 @@ fn request_from_json(j: &Json) -> Result<Request, MineError> {
     match ty {
         "ping" => Ok(Request::Ping),
         "metrics" => Ok(Request::Metrics),
+        "stats" => Ok(Request::Stats),
         "mine" => Ok(Request::Mine {
             fingerprint: fp_from_json(j.req("fingerprint")?)?,
             options: options_from_json(j.req("options")?)?,
@@ -651,6 +747,10 @@ fn response_to_json(resp: &Response) -> Json {
             ("type".to_string(), Json::Str("metrics".to_string())),
             ("metrics".to_string(), metrics.clone()),
         ]),
+        Response::Stats { snapshot } => Json::Obj(vec![
+            ("type".to_string(), Json::Str("stats".to_string())),
+            ("snapshot".to_string(), snapshot.clone()),
+        ]),
         Response::Mine { result } => Json::Obj(vec![
             ("type".to_string(), Json::Str("mine".to_string())),
             ("result".to_string(), result_to_json(result)),
@@ -679,6 +779,7 @@ fn response_from_json(j: &Json) -> Result<Response, MineError> {
             version: as_count(j.req("version")?)? as u32,
         }),
         "metrics" => Ok(Response::Metrics { metrics: j.req("metrics")?.clone() }),
+        "stats" => Ok(Response::Stats { snapshot: j.req("snapshot")?.clone() }),
         "mine" => Ok(Response::Mine { result: result_from_json(j.req("result")?)? }),
         "map_count" => {
             Ok(Response::MapCount { machines: machines_from_json(j.req("machines")?)? })
@@ -889,6 +990,7 @@ mod tests {
         let reqs = vec![
             Request::Ping,
             Request::Metrics,
+            Request::Stats,
             Request::Mine {
                 fingerprint: u64::MAX - 3, // exercises the >2^53 hex path
                 options: sample_options(),
@@ -967,13 +1069,36 @@ mod tests {
                 count_seconds: 0.25,
                 gen_seconds: 0.0625,
             }],
+            profile: None,
         };
+        let mut profiled = result.clone();
+        profiled.profile = Some(MineProfile {
+            total_seconds: 0.3125,
+            levels: vec![crate::obs::LevelProfile {
+                level: 1,
+                generate_seconds: 0.0625,
+                count_seconds: 0.25,
+                prune_seconds: 0.001,
+                candidates: 26,
+                blocks: 1,
+            }],
+            candidate_rows: 26,
+            blocks_streamed: 1,
+            concat_misses: 0,
+            shard_map_calls: 2,
+            serial_recounts: 0,
+            cache_outcome: Some("cache".to_string()),
+        });
         let resps = vec![
             Response::Pong { version: PROTO_VERSION },
             Response::Metrics {
                 metrics: Json::Obj(vec![("queue_depth".to_string(), Json::Num(2.0))]),
             },
+            Response::Stats {
+                snapshot: Json::Obj(vec![("counters".to_string(), Json::Obj(vec![]))]),
+            },
             Response::Mine { result },
+            Response::Mine { result: profiled },
             Response::MapCount {
                 machines: vec![vec![(5, 3, 20)], vec![]],
             },
@@ -1023,6 +1148,108 @@ mod tests {
             // source message)
             assert_eq!(back.to_string(), e.to_string());
         }
+    }
+
+    #[test]
+    fn trace_context_round_trips_and_old_peers_interop() {
+        let id = TraceId(0xfeed_face_0123_4567);
+        let bytes = encode_request_traced(9, &Request::Ping, Some(id));
+        let (rid, _, trace) = decode_request_traced(&bytes).unwrap();
+        assert_eq!(rid, 9);
+        assert_eq!(trace, Some(id));
+
+        // an envelope WITHOUT the trace key (an old peer's request)
+        // decodes fine as None — and byte-identically to pre-trace builds
+        let bare = encode_request(9, &Request::Ping);
+        let (_, _, trace) = decode_request_traced(&bare).unwrap();
+        assert_eq!(trace, None);
+        assert_eq!(bare, encode_request_traced(9, &Request::Ping, None));
+
+        // unknown extra envelope keys are ignored (future additive keys)
+        let doc = Json::Obj(vec![
+            ("v".to_string(), Json::Num(PROTO_VERSION as f64)),
+            ("id".to_string(), Json::Num(3.0)),
+            ("future_key".to_string(), Json::Str("ignored".to_string())),
+            ("req".to_string(), Json::Obj(vec![(
+                "type".to_string(),
+                Json::Str("ping".to_string()),
+            )])),
+        ]);
+        let (rid, req, trace) = decode_request_traced(doc.render().as_bytes()).unwrap();
+        assert_eq!(rid, 3);
+        assert!(matches!(req, Request::Ping));
+        assert_eq!(trace, None);
+    }
+
+    #[test]
+    fn hostile_trace_ids_are_typed_errors() {
+        let hostile = [
+            Json::Str(String::new()),                     // empty
+            Json::Str("1".repeat(17)),                    // oversized
+            Json::Str("not-hex!".to_string()),            // non-hex
+            Json::Str("х".repeat(400)),                   // oversized non-ascii
+            Json::Num(12.0),                              // wrong type
+            Json::Arr(vec![]),                            // wrong type
+        ];
+        for bad in hostile {
+            let doc = Json::Obj(vec![
+                ("v".to_string(), Json::Num(PROTO_VERSION as f64)),
+                ("id".to_string(), Json::Num(0.0)),
+                ("trace".to_string(), bad.clone()),
+                ("req".to_string(), Json::Obj(vec![(
+                    "type".to_string(),
+                    Json::Str("ping".to_string()),
+                )])),
+            ]);
+            let err = decode_request_traced(doc.render().as_bytes()).unwrap_err();
+            assert!(
+                matches!(err, MineError::InvalidConfig { .. }),
+                "{bad:?} should be a typed error, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn spans_attach_to_ok_envelopes_only() {
+        let spans = vec![SpanRecord {
+            id: 1,
+            parent: 0,
+            name: "node:map_count".into(),
+            node: "".into(),
+            start_ns: 5,
+            end_ns: 105,
+        }];
+        let ok: Result<Response, MineError> =
+            Ok(Response::Pong { version: PROTO_VERSION });
+        let bytes = encode_response_traced(4, &ok, &spans);
+        let (id, outcome, back) = decode_response_traced(&bytes).unwrap();
+        assert_eq!(id, 4);
+        assert!(outcome.is_ok());
+        assert_eq!(back, spans);
+
+        // spanless replies stay byte-identical to the legacy encoding,
+        // and decode with an empty span list
+        let bare = encode_response_traced(4, &ok, &[]);
+        assert_eq!(bare, encode_response(4, &ok));
+        let (_, _, back) = decode_response_traced(&bare).unwrap();
+        assert!(back.is_empty());
+
+        // errors never carry spans
+        let err: Result<Response, MineError> = Err(MineError::invalid("boom"));
+        let bytes = encode_response_traced(4, &err, &spans);
+        assert_eq!(bytes, encode_response(4, &err));
+
+        // a hostile span list is a typed decode error
+        let doc = Json::Obj(vec![
+            ("v".to_string(), Json::Num(PROTO_VERSION as f64)),
+            ("id".to_string(), Json::Num(0.0)),
+            ("spans".to_string(), Json::Str("not an array".to_string())),
+            ("ok".to_string(), Json::Obj(vec![
+                ("type".to_string(), Json::Str("pong".to_string())),
+                ("version".to_string(), Json::Num(1.0)),
+            ])),
+        ]);
+        assert!(decode_response_traced(doc.render().as_bytes()).is_err());
     }
 
     #[test]

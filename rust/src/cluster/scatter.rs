@@ -63,6 +63,8 @@
 //! quotas, priority-then-arrival granting, and bounded queueing that
 //! sheds into typed [`MineError::Busy`] under saturation — cluster
 //! capacity is spent by policy, not arrival order.
+//!
+//! [`mine_with_backend`]: crate::session::mine_with_backend
 
 use std::net::TcpStream;
 use std::path::{Path, PathBuf};
@@ -82,8 +84,9 @@ use crate::error::MineError;
 use crate::events::{EventStream, Tick};
 use crate::ingest::SpikeLog;
 use crate::mining::serial;
+use crate::obs::{Counter, Gauge, Histogram, Registry, SpanGuard, Trace};
 use crate::serve::ServiceConfig;
-use crate::session::{mine_with_backend, MineOptions};
+use crate::session::{mine_with_backend_obs, MineOptions};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -410,12 +413,28 @@ impl Default for ScatterConfig {
     }
 }
 
-#[derive(Default)]
-struct NodeStat {
-    calls: u64,
-    failures: u64,
-    in_flight: u64,
-    latencies: Vec<f64>,
+/// Live registry handles for one node's call accounting. Replaces the
+/// old lock-per-node `Mutex<NodeStat>`: each handle wraps its own atomic
+/// (or, for the latency histogram, its own windowed buffer), so scatter
+/// threads on different nodes never contend, and the numbers land in the
+/// unified [`Registry`] where `epminer stats` reads them.
+struct NodeHandles {
+    calls: Counter,
+    failures: Counter,
+    in_flight: Gauge,
+    latency_ns: Histogram,
+}
+
+impl NodeHandles {
+    fn register(registry: &Registry, i: usize) -> NodeHandles {
+        NodeHandles {
+            calls: registry.counter(&format!("cluster.node.{i}.calls")),
+            failures: registry.counter(&format!("cluster.node.{i}.failures")),
+            in_flight: registry.gauge(&format!("cluster.node.{i}.in_flight")),
+            latency_ns: registry
+                .histogram_windowed(&format!("cluster.node.{i}.latency_ns"), LATENCY_WINDOW),
+        }
+    }
 }
 
 /// State shared by every scatter thread of every query on one miner.
@@ -424,12 +443,15 @@ struct ClusterShared {
     /// per-query health: reset at mine start, flipped false on transport
     /// failure so later windows skip known-dead nodes
     healthy: Vec<AtomicBool>,
-    stats: Vec<Mutex<NodeStat>>,
+    /// the unified metrics namespace (`cluster.*`); the handles below
+    /// are live views into it
+    registry: Registry,
+    nodes: Vec<NodeHandles>,
     next_id: AtomicU64,
-    retries_total: AtomicU64,
-    hedges: AtomicU64,
-    replans: AtomicU64,
-    local_fallbacks: AtomicU64,
+    retries_total: Counter,
+    hedges: Counter,
+    replans: Counter,
+    local_fallbacks: Counter,
     deadline: Duration,
     hedge_after: Option<Duration>,
     retries: usize,
@@ -464,16 +486,20 @@ impl ClusterShared {
     }
 
     /// One stat-recorded exchange with `node`: send, receive, decode,
-    /// check the correlation id, unwrap the typed outcome.
-    fn raw_call(&self, node: usize, bytes: &[u8], id: u64) -> Result<Response, MineError> {
-        {
-            let mut s = self.stats[node].lock().unwrap_or_else(|p| p.into_inner());
-            s.calls += 1;
-            s.in_flight += 1;
-        }
+    /// check the correlation id, unwrap the typed outcome — plus any
+    /// node-side spans the reply envelope carried.
+    fn raw_call(
+        &self,
+        node: usize,
+        bytes: &[u8],
+        id: u64,
+    ) -> Result<(Response, Vec<crate::obs::SpanRecord>), MineError> {
+        let h = &self.nodes[node];
+        h.calls.inc();
+        h.in_flight.add(1);
         let t0 = Instant::now();
         let out = self.links[node].call(bytes, self.deadline).and_then(|reply| {
-            let (rid, outcome) = proto::decode_response(&reply)?;
+            let (rid, outcome, spans) = proto::decode_response_traced(&reply)?;
             // id 0 is the node's "your frame would not decode" channel
             if rid != id && rid != 0 {
                 return Err(MineError::corrupt(
@@ -481,16 +507,12 @@ impl ClusterShared {
                     format!("response correlation id {rid} does not match request {id}"),
                 ));
             }
-            outcome
+            outcome.map(|resp| (resp, spans))
         });
-        let mut s = self.stats[node].lock().unwrap_or_else(|p| p.into_inner());
-        s.in_flight -= 1;
-        if s.latencies.len() >= LATENCY_WINDOW {
-            s.latencies.drain(..LATENCY_WINDOW / 2);
-        }
-        s.latencies.push(t0.elapsed().as_nanos() as f64);
+        h.in_flight.add(-1);
+        h.latency_ns.observe(t0.elapsed().as_nanos() as f64);
         if out.is_err() {
-            s.failures += 1;
+            h.failures.inc();
         }
         out
     }
@@ -506,9 +528,9 @@ fn attempt(
     node: usize,
     bytes: &Arc<Vec<u8>>,
     id: u64,
-) -> Result<Response, MineError> {
+) -> Result<(usize, Response, Vec<crate::obs::SpanRecord>), MineError> {
     let Some(hedge_after) = shared.hedge_after else {
-        return shared.raw_call(node, bytes, id);
+        return shared.raw_call(node, bytes, id).map(|(resp, spans)| (node, resp, spans));
     };
     let (tx, rx) = mpsc::channel();
     let spawn_call = |n: usize| {
@@ -516,7 +538,7 @@ fn attempt(
         let bytes = Arc::clone(bytes);
         let tx = tx.clone();
         std::thread::spawn(move || {
-            let _ = tx.send(shared.raw_call(n, &bytes, id));
+            let _ = tx.send(shared.raw_call(n, &bytes, id).map(|(resp, spans)| (n, resp, spans)));
         });
     };
     spawn_call(node);
@@ -539,7 +561,7 @@ fn attempt(
                 // not a backup exists to hedge onto
                 hedged = true;
                 if let Some(backup) = shared.other_healthy(node) {
-                    shared.hedges.fetch_add(1, Ordering::Relaxed);
+                    shared.hedges.inc();
                     spawn_call(backup);
                     outstanding += 1;
                 }
@@ -562,21 +584,29 @@ fn attempt(
 /// Send `req` to `preferred`, failing over across surviving nodes on
 /// transport errors (each failure marks its node unhealthy and burns one
 /// retry). Success on a node other than the planned one is a re-plan.
+///
+/// When `trace` is live, the request carries its trace id and any spans
+/// the winning node recorded are grafted into the coordinator's tree
+/// under span `under`, tagged with the peer's name — the merged tree a
+/// [`Trace::render_tree`] shows per remote RPC.
 fn call_with_failover(
     shared: &Arc<ClusterShared>,
     req: &Request,
     preferred: usize,
+    trace: &Trace,
+    under: u64,
 ) -> Result<Response, MineError> {
     let id = shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-    let bytes = Arc::new(proto::encode_request(id, req));
+    let bytes = Arc::new(proto::encode_request_traced(id, req, trace.id()));
     let mut node = shared.healthy_after(preferred).ok_or_else(no_survivors)?;
     let mut attempts = 0usize;
     loop {
         match attempt(shared, node, &bytes, id) {
-            Ok(resp) => {
+            Ok((winner, resp, spans)) => {
                 if node != preferred {
-                    shared.replans.fetch_add(1, Ordering::Relaxed);
+                    shared.replans.inc();
                 }
+                trace.graft(under, &shared.links[winner].describe(), &spans);
                 return Ok(resp);
             }
             Err(e) if is_transport(&e) => {
@@ -585,7 +615,7 @@ fn call_with_failover(
                     return Err(e);
                 }
                 attempts += 1;
-                shared.retries_total.fetch_add(1, Ordering::Relaxed);
+                shared.retries_total.inc();
                 node = match shared.healthy_after(node) {
                     Some(n) => n,
                     None => return Err(e),
@@ -666,6 +696,9 @@ struct ClusterBackend {
     t_to: Tick,
     base_taus: Vec<Tick>,
     k: usize,
+    /// the query's span recorder ([`Trace::off`] when untraced); RPC
+    /// requests carry its id and node-side spans graft back into it
+    trace: Trace,
 }
 
 fn local_map(
@@ -677,7 +710,7 @@ fn local_map(
     halo: Tick,
     k: usize,
 ) -> Vec<Vec<(Tick, u64, Tick)>> {
-    shared.local_fallbacks.fetch_add(1, Ordering::Relaxed);
+    shared.local_fallbacks.inc();
     // the handed stream is already range-restricted, so no clamp here —
     // this window matches the node's clamped scan exactly
     let sub = stream.window(lo - halo, hi + halo);
@@ -690,7 +723,7 @@ fn local_relaxed(
     episodes: &[Episode],
     stream: &EventStream,
 ) -> Vec<u64> {
-    shared.local_fallbacks.fetch_add(1, Ordering::Relaxed);
+    shared.local_fallbacks.inc();
     idx.iter().map(|&i| serial::count_a2(&episodes[i], stream)).collect()
 }
 
@@ -717,7 +750,11 @@ impl ClusterBackend {
             })
             .collect();
         m.shard_map_calls += 1;
-        let per_window = self.scatter_windows(&taus, &wire, group, stream, halo)?;
+        let root = self
+            .trace
+            .span_fmt(|| format!("scatter n={} x{}", group[0].n(), group.len()));
+        let per_window = self.scatter_windows(&taus, &wire, group, stream, halo, &root)?;
+        let _merge = root.child("merge");
         let mut counts = Vec::with_capacity(group.len());
         for i in 0..group.len() {
             let segments: Vec<Vec<(Tick, u64, Tick)>> =
@@ -743,8 +780,10 @@ impl ClusterBackend {
         dense: &[Episode],
         stream: &EventStream,
         halo: Tick,
+        parent: &SpanGuard,
     ) -> Result<Vec<Vec<Vec<(Tick, u64, Tick)>>>, MineError> {
         let n_nodes = self.shared.links.len();
+        let trace = &self.trace;
         let results: Vec<Result<Vec<Vec<(Tick, u64, Tick)>>, MineError>> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = taus
@@ -756,6 +795,10 @@ impl ClusterBackend {
                             (self.fingerprint, self.t_from, self.t_to, self.k);
                         scope.spawn(move || {
                             let (lo, hi) = (bounds[0], bounds[1]);
+                            // one span per remote counting RPC; the
+                            // node's own spans graft in underneath
+                            let rpc =
+                                parent.child_fmt(|| format!("rpc map_count ({lo},{hi}]"));
                             let req = Request::MapCount {
                                 fingerprint,
                                 episodes: wire.to_vec(),
@@ -766,7 +809,13 @@ impl ClusterBackend {
                                 halo,
                                 k,
                             };
-                            match call_with_failover(&shared, &req, w % n_nodes) {
+                            match call_with_failover(
+                                &shared,
+                                &req,
+                                w % n_nodes,
+                                trace,
+                                rpc.span_id(),
+                            ) {
                                 Ok(Response::MapCount { machines })
                                     if machines.len() == dense.len() =>
                                 {
@@ -826,6 +875,10 @@ impl ClusterBackend {
             .max(1);
         let per = rest.len().div_ceil(healthy.min(rest.len()));
         let (fingerprint, t_from, t_to) = (self.fingerprint, self.t_from, self.t_to);
+        let root =
+            self.trace.span_fmt(|| format!("scatter relaxed x{}", rest.len()));
+        let parent = &root;
+        let trace = &self.trace;
         let results: Vec<Result<Vec<u64>, MineError>> = std::thread::scope(|scope| {
             let handles: Vec<_> = wire
                 .chunks(per)
@@ -834,13 +887,21 @@ impl ClusterBackend {
                 .map(|(c, (wire_chunk, idx_chunk))| {
                     let shared = Arc::clone(&self.shared);
                     scope.spawn(move || {
+                        let rpc = parent
+                            .child_fmt(|| format!("rpc relaxed_count chunk {c}"));
                         let req = Request::RelaxedCount {
                             fingerprint,
                             episodes: wire_chunk.to_vec(),
                             t_from,
                             t_to,
                         };
-                        match call_with_failover(&shared, &req, c % n_nodes) {
+                        match call_with_failover(
+                            &shared,
+                            &req,
+                            c % n_nodes,
+                            trace,
+                            rpc.span_id(),
+                        ) {
                             Ok(Response::RelaxedCount { counts })
                                 if counts.len() == idx_chunk.len() =>
                             {
@@ -1038,18 +1099,20 @@ impl ScatterMiner {
         let admission = AdmissionController::new(cfg.admission.clone())?;
         let log = SpikeLog::open(log_dir)?;
         let n = links.len();
+        let registry = Registry::new();
         let shared = Arc::new(ClusterShared {
             links,
             healthy: (0..n).map(|_| AtomicBool::new(true)).collect(),
-            stats: (0..n).map(|_| Mutex::new(NodeStat::default())).collect(),
+            nodes: (0..n).map(|i| NodeHandles::register(&registry, i)).collect(),
             next_id: AtomicU64::new(0),
-            retries_total: AtomicU64::new(0),
-            hedges: AtomicU64::new(0),
-            replans: AtomicU64::new(0),
-            local_fallbacks: AtomicU64::new(0),
+            retries_total: registry.counter("cluster.retries"),
+            hedges: registry.counter("cluster.hedges"),
+            replans: registry.counter("cluster.replans"),
+            local_fallbacks: registry.counter("cluster.local_fallbacks"),
             deadline: cfg.deadline,
             hedge_after: cfg.hedge_after,
             retries: cfg.retries,
+            registry,
         });
         Ok(ScatterMiner { shared, admission, log, cfg })
     }
@@ -1083,6 +1146,25 @@ impl ScatterMiner {
         two_pass: bool,
         tenant: &str,
     ) -> Result<MineResult, MineError> {
+        self.mine_traced(t_from, t_to, opts, two_pass, tenant, &Trace::off(), false)
+    }
+
+    /// [`ScatterMiner::mine`] with observability: a live `trace` records
+    /// the coordinator's plan/merge spans, one span per remote counting
+    /// RPC, and — grafted underneath those, tagged with the peer name —
+    /// whatever spans each node recorded, all in one merged tree.
+    /// `profile` attaches the [`MineProfile`](crate::obs::MineProfile)
+    /// phase breakdown to the result.
+    pub fn mine_traced(
+        &self,
+        t_from: Tick,
+        t_to: Tick,
+        opts: &MineOptions,
+        two_pass: bool,
+        tenant: &str,
+        trace: &Trace,
+        profile: bool,
+    ) -> Result<MineResult, MineError> {
         let _permit = self.admission.admit(tenant)?;
         opts.validate()?;
         // every query starts from a fresh view of node health: nodes
@@ -1091,6 +1173,7 @@ impl ScatterMiner {
         for h in &self.shared.healthy {
             h.store(true, Ordering::Relaxed);
         }
+        let plan = trace.span("plan");
         let (range_stream, _) = self.log.read_range(t_from, t_to)?;
         let range_stream = Arc::new(range_stream);
         let fingerprint = proto::range_fingerprint(&range_stream, t_from, t_to);
@@ -1100,6 +1183,7 @@ impl ScatterMiner {
         // two-pass: A2 of a 1-node episode IS its frequency), so this
         // independently-computed remap is identical to the driver's
         let remap = AlphabetRemap::from_counts(&range_stream.type_counts());
+        drop(plan);
         let backend = ClusterBackend {
             shared: Arc::clone(&self.shared),
             remap,
@@ -1108,13 +1192,19 @@ impl ScatterMiner {
             t_to,
             base_taus: base,
             k: self.cfg.k,
+            trace: trace.clone(),
         };
         let mut engine: Box<dyn CountBackend> = Box::new(backend);
         if two_pass {
             engine = Box::new(TwoPassBackend::new(engine, opts.theta));
         }
         let mut metrics = Metrics::default();
-        mine_with_backend(&mut *engine, &range_stream, opts, &mut metrics)
+        let result =
+            mine_with_backend_obs(&mut *engine, &range_stream, opts, &mut metrics, trace, profile);
+        // fold the run's coordinator counters into the unified registry
+        // so a Stats snapshot after the query reflects it
+        metrics.publish_to(&self.shared.registry);
+        result
     }
 
     /// Mine the whole recording (`(t_begin - 1, t_end]`).
@@ -1129,34 +1219,54 @@ impl ScatterMiner {
         self.mine(t_from, t_to, opts, two_pass, tenant)
     }
 
+    /// Point-in-time snapshot from the live registry handles; the
+    /// admission gauges (shed, in-flight, queued) and per-node health are
+    /// refreshed into the registry here so a
+    /// [`registry`](ScatterMiner::registry) snapshot carries them too.
     pub fn metrics(&self) -> ClusterMetrics {
         let s = &self.shared;
-        let nodes = s
+        let nodes: Vec<ClusterNodeMetrics> = s
             .links
             .iter()
             .enumerate()
             .map(|(i, link)| {
-                let st = s.stats[i].lock().unwrap_or_else(|p| p.into_inner());
+                let h = &s.nodes[i];
+                let healthy = s.healthy[i].load(Ordering::Relaxed);
+                s.registry
+                    .gauge(&format!("cluster.node.{i}.healthy"))
+                    .set(i64::from(healthy));
                 ClusterNodeMetrics {
                     addr: link.describe(),
-                    healthy: s.healthy[i].load(Ordering::Relaxed),
-                    calls: st.calls,
-                    failures: st.failures,
-                    in_flight: st.in_flight,
-                    latency_ns: Summary::of_opt(&st.latencies),
+                    healthy,
+                    calls: h.calls.get(),
+                    failures: h.failures.get(),
+                    in_flight: h.in_flight.get().max(0) as u64,
+                    latency_ns: h.latency_ns.summary(),
                 }
             })
             .collect();
+        let (shed, in_flight, queued) =
+            (self.admission.sheds(), self.admission.in_flight(), self.admission.queued());
+        s.registry.gauge("cluster.shed").set(shed as i64);
+        s.registry.gauge("cluster.in_flight").set(in_flight as i64);
+        s.registry.gauge("cluster.queued").set(queued as i64);
         ClusterMetrics {
             nodes,
-            retries: s.retries_total.load(Ordering::Relaxed),
-            hedges: s.hedges.load(Ordering::Relaxed),
-            replans: s.replans.load(Ordering::Relaxed),
-            local_fallbacks: s.local_fallbacks.load(Ordering::Relaxed),
-            shed: self.admission.sheds(),
-            in_flight: self.admission.in_flight(),
-            queued: self.admission.queued(),
+            retries: s.retries_total.get(),
+            hedges: s.hedges.get(),
+            replans: s.replans.get(),
+            local_fallbacks: s.local_fallbacks.get(),
+            shed,
+            in_flight,
+            queued,
         }
+    }
+
+    /// The unified metrics registry (`cluster.*` plus, after each query,
+    /// the folded `coordinator.*` run counters). Clone it to render
+    /// `epminer stats` alongside other subsystems.
+    pub fn registry(&self) -> Registry {
+        self.shared.registry.clone()
     }
 }
 

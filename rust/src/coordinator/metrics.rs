@@ -45,6 +45,32 @@ impl Metrics {
         self.host_time += other.host_time;
     }
 
+    /// Publish this run's counters into the unified observability
+    /// registry (additive, under the `coordinator.` prefix). The plain
+    /// pub fields stay the hot-path accumulation surface — backends
+    /// bump them lock-free per call — and a finished run folds into the
+    /// registry in one shot, so the registry never sits on the counting
+    /// fast path.
+    pub fn publish_to(&self, registry: &crate::obs::Registry) {
+        for (name, v) in [
+            ("coordinator.episodes_counted", self.episodes_counted),
+            ("coordinator.ptpe_calls", self.ptpe_calls),
+            ("coordinator.mapcat_calls", self.mapcat_calls),
+            ("coordinator.mapcat_fallbacks", self.mapcat_fallbacks),
+            ("coordinator.shard_map_calls", self.shard_map_calls),
+            ("coordinator.concat_misses", self.concat_misses),
+            ("coordinator.cpu_fallbacks", self.cpu_fallbacks),
+            ("coordinator.a2_culled", self.a2_culled),
+            ("coordinator.a2_survivors", self.a2_survivors),
+            ("coordinator.accel_time_ns", self.accel_time.as_nanos() as u64),
+            ("coordinator.host_time_ns", self.host_time.as_nanos() as u64),
+        ] {
+            if v > 0 {
+                registry.counter(name).add(v);
+            }
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
             "episodes={} ptpe_calls={} mapcat_calls={} mapcat_fallbacks={} \

@@ -80,6 +80,10 @@ pub struct MineResult {
     /// frequent episodes of every size, with exact counts
     pub frequent: Vec<CountedEpisode>,
     pub levels: Vec<LevelReport>,
+    /// phase profile, present only when profiling was requested
+    /// (`SessionBuilder::profile(true)` / `--profile`); optional on the
+    /// cluster wire too, so old peers interoperate unchanged
+    pub profile: Option<crate::obs::MineProfile>,
 }
 
 impl MineResult {

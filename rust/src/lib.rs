@@ -89,6 +89,15 @@
 //!   re-plan onto survivors, hedged duplicates, tenant-aware admission,
 //!   and per-node latency metrics. [`cluster::LocalCluster`] runs the
 //!   whole tier in-process for tests and benches.
+//! - [`obs`] — unified observability: per-query [`obs::Trace`] spans
+//!   (minted at serve admission or the CLI, propagated across the
+//!   cluster wire as an optional envelope field, merged into one span
+//!   tree covering remote counting work), the single [`obs::Registry`]
+//!   of typed counters/gauges/histograms every tier publishes into
+//!   (Prometheus text + JSON via `epminer stats` and the cluster `Stats`
+//!   RPC), and the [`obs::MineProfile`] mining-phase profiler
+//!   (`SessionBuilder::profile` / `--profile`). Disabled tracing is
+//!   zero-allocation — the default hot path is unaffected.
 //! - [`coordinator`] — strategy name menu, run metrics, the streaming
 //!   partition producer, and the deprecated pre-0.2 `Coordinator` shims.
 //! - [`bench`] — the unified perf harness: a suite registry every bench
@@ -110,6 +119,7 @@ pub mod events;
 pub mod gpu_model;
 pub mod ingest;
 pub mod mining;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod session;

@@ -13,6 +13,8 @@
 //!   scatter     — distributed range mining across nodes, byte-identical
 //!                 to a single-process mine over the same range
 //!   serve-bench — load-test the multi-tenant mining service (serve/)
+//!   stats       — render the unified metrics registry (obs/), local demo
+//!                 or a remote node's via the cluster Stats RPC
 //!   bench       — run registered perf suites (machine-readable output,
 //!                 baseline regression checking; see bench/)
 //!   info        — runtime/artifact information
@@ -26,7 +28,9 @@
 //!   epminer watch --log /tmp/rec --theta 20 --window 8 --follow
 //!   epminer node --listen 0.0.0.0:7400 --log /tmp/rec
 //!   epminer scatter --nodes host1:7400,host2:7400 --log /tmp/rec --theta 20
+//!   epminer scatter --nodes host1:7400,host2:7400 --log /tmp/rec --theta 20 --profile
 //!   epminer serve-bench --smoke
+//!   epminer stats --connect host1:7400
 //!   epminer bench --suite all --smoke --json-out . --check benches/baselines
 //!   epminer info
 //!
@@ -38,6 +42,7 @@ use episodes_gpu::coordinator::Strategy;
 use episodes_gpu::datasets;
 use episodes_gpu::episodes::{Episode, Interval};
 use episodes_gpu::events::io;
+use episodes_gpu::obs::Trace;
 use episodes_gpu::util::cli::Args;
 use episodes_gpu::{MineError, Session, SessionBuilder};
 
@@ -63,15 +68,17 @@ fn run() -> Result<(), MineError> {
         Some("raster") => cmd_raster(&args),
         Some("profile") => cmd_profile(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        Some("stats") => cmd_stats(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: epminer <mine|count|gen|ingest|log-mine|watch|node|scatter|reconstruct|raster|profile|serve-bench|bench|info> [options]\n\
+                "usage: epminer <mine|count|gen|ingest|log-mine|watch|node|scatter|reconstruct|raster|profile|serve-bench|stats|bench|info> [options]\n\
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
                  \x20            [--max-level <n>] [--seed <u64>] [--threads <n>]\n\
+                 \x20            [--profile] [--trace-out <path>] — phase profile + span tree\n\
                  count       --dataset <name> --episode 0,1,2 --low 5 --high 15 [--seed <u64>]\n\
                  gen         --dataset <name> --out <path> [--format bin|csv] [--seed <u64>]\n\
                  ingest      --dataset <name> --out <dir> [--append] [--segment-events <n>]\n\
@@ -90,16 +97,25 @@ fn run() -> Result<(), MineError> {
                  \x20            [--from <tick> --to <tick>] [--low <t> --high <t>]\n\
                  \x20            [--mode two-pass|one-pass] [--max-level <n>]\n\
                  \x20            [--group-segments <n>] [--deadline-ms <n>] [--retries <n>]\n\
-                 \x20            [--hedge-ms <n>] [--k <n>] — distributed range mine,\n\
-                 \x20            byte-identical to mining the same range in one process\n\
+                 \x20            [--hedge-ms <n>] [--k <n>] [--profile] [--trace-out <path>]\n\
+                 \x20            — distributed range mine, byte-identical to mining the\n\
+                 \x20            same range in one process; --profile merges every node's\n\
+                 \x20            spans into one trace tree\n\
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
                  raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
                  profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
                  serve-bench [--clients <n>] [--requests <n>] [--workers <n>] [--queue <n>]\n\
                  \x20            [--cache <entries>] [--strategy <name>] [--events <n>]\n\
                  \x20            [--dataset <spec>] [--seed <u64>] [--subscribers <n>] [--smoke]\n\
+                 \x20            [--profile] [--slow-ms <n>] [--metrics-every <secs>]\n\
+                 \x20            [--stats-out <path>] [--trace-out <path>]\n\
                  \x20            — load-test the service (with a live push feed when\n\
-                 \x20            --subscribers > 0)\n\
+                 \x20            --subscribers > 0); --stats-out / --trace-out write the\n\
+                 \x20            registry snapshot and one traced query as JSON\n\
+                 stats       [--connect <addr:port>] [--json] — the unified metrics\n\
+                 \x20            registry, Prometheus text by default; --connect asks a\n\
+                 \x20            running node over the cluster Stats RPC, otherwise a\n\
+                 \x20            local demo query populates one\n\
                  bench       [--suite <{suites}|all>] [--smoke]\n\
                  \x20            [--json-out <dir>] [--check <baseline.json|dir>]\n\
                  \x20            [--tolerance <rel>] [--write-baseline <dir>] — run perf suites,\n\
@@ -150,6 +166,11 @@ fn session_builder(
     if args.get("threads").is_some() {
         b = b.cpu_threads(args.get_usize("threads", 1)?);
     }
+    // --profile attaches the per-level phase breakdown to every result
+    // of this session (mine, log-mine, reconstruct alike)
+    if args.flag("profile") {
+        b = b.profile(true);
+    }
     match args.get_or("mode", "two-pass") {
         "two-pass" => {}
         "one-pass" => b = b.one_pass(),
@@ -181,15 +202,50 @@ fn cmd_mine(args: &Args) -> Result<(), MineError> {
     let mut session = session_builder(args, stream, &name, theta)?.build()?;
     println!("backend: {}", session.backend_name());
 
+    let trace = trace_from(args);
     let t0 = std::time::Instant::now();
-    let result = session.mine()?;
+    let result = session.mine_traced(&trace)?;
     print_levels(&result);
     println!(
         "\ntotal {:.3}s; metrics: {}",
         t0.elapsed().as_secs_f64(),
         session.metrics().report()
     );
+    print_observability(args, &result, &trace)?;
     print_top_episodes(&result);
+    Ok(())
+}
+
+/// `--profile` / `--trace-out` turn on span recording; otherwise the
+/// trace is the free disabled one.
+fn trace_from(args: &Args) -> Trace {
+    if args.flag("profile") || args.get("trace-out").is_some() {
+        Trace::started()
+    } else {
+        Trace::off()
+    }
+}
+
+/// Shared tail for the mining subcommands: render the phase profile and
+/// the span tree when enabled, and export the trace JSON on request.
+fn print_observability(
+    args: &Args,
+    result: &episodes_gpu::coordinator::miner::MineResult,
+    trace: &Trace,
+) -> Result<(), MineError> {
+    if let Some(p) = &result.profile {
+        println!();
+        print!("{}", p.render());
+    }
+    if trace.is_on() {
+        println!();
+        print!("{}", trace.render_tree());
+        if let Some(path) = args.get("trace-out") {
+            std::fs::write(path, trace.to_json().render_pretty())
+                .map_err(|e| MineError::io(format!("writing {path}"), e))?;
+            println!("wrote trace json to {path}");
+        }
+    }
     Ok(())
 }
 
@@ -413,6 +469,17 @@ fn cmd_watch(args: &Args) -> Result<(), MineError> {
         n => println!("watching {dir}: theta {theta}, sliding window of {n} segments"),
     }
 
+    // the watch loop publishes into its own registry and prints a compact
+    // metrics line every --metrics-every commits (0 disables)
+    let metrics_every = args.get_u64("metrics-every", 5)?;
+    let registry = episodes_gpu::obs::Registry::new();
+    let m_commits = registry.counter("watch.commits");
+    let m_rescanned = registry.counter("watch.events_rescanned");
+    let m_misses = registry.counter("watch.concat_misses");
+    let m_recounts = registry.counter("watch.serial_recounts");
+    let m_frequent = registry.gauge("watch.frequent");
+    let m_events = registry.gauge("watch.window_events");
+
     let mut commits = 0u64;
     loop {
         let updates = watcher.poll()?;
@@ -428,6 +495,15 @@ fn cmd_watch(args: &Args) -> Result<(), MineError> {
                 println!("  ~ {} {} -> {}", c.episode.display(), c.previous, c.current);
             }
             commits += 1;
+            m_commits.inc();
+            m_rescanned.add(u.stats.events_rescanned as u64);
+            m_misses.add(u.stats.concat_misses);
+            m_recounts.add(u.stats.serial_recounts as u64);
+            m_frequent.set(u.frequent.len() as i64);
+            m_events.set(u.window_events as i64);
+            if metrics_every > 0 && commits % metrics_every == 0 {
+                println!("metrics: {}", metrics_line(&registry.snapshot()));
+            }
             if max_commits > 0 && commits >= max_commits {
                 return Ok(());
             }
@@ -442,6 +518,21 @@ fn cmd_watch(args: &Args) -> Result<(), MineError> {
             std::thread::sleep(std::time::Duration::from_millis(poll_ms));
         }
     }
+}
+
+/// One `k=v`-per-metric line from a registry snapshot (the periodic
+/// heartbeat format for `watch` and `serve-bench`).
+fn metrics_line(snap: &episodes_gpu::obs::Snapshot) -> String {
+    let mut parts: Vec<String> =
+        snap.counters.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    parts.extend(snap.gauges.iter().map(|(k, v)| format!("{k}={v}")));
+    for (k, count, summary) in &snap.histograms {
+        match summary {
+            Some(s) => parts.push(format!("{k}.count={count} {k}.p95={:.0}", s.p95)),
+            None => parts.push(format!("{k}.count={count}")),
+        }
+    }
+    parts.join(" ")
 }
 
 fn cmd_node(args: &Args) -> Result<(), MineError> {
@@ -522,20 +613,20 @@ fn cmd_scatter(args: &Args) -> Result<(), MineError> {
         addrs.len(),
         miner.log().segments().len()
     );
+    // --profile merges the coordinator's plan/merge spans with every
+    // node's grafted counting spans into one trace tree
+    let trace = trace_from(args);
+    let profile = args.flag("profile");
     let t0 = std::time::Instant::now();
-    let result = match (args.get("from"), args.get("to")) {
-        (None, None) => miner.mine_all(&opts, two_pass, "cli")?,
-        _ => {
-            // (t_from, t_to] half-open-left, like every range API here
-            let t_from =
-                args.get_i32("from", miner.log().t_begin().map(|t| t - 1).unwrap_or(-1))?;
-            let t_to = args.get_i32("to", miner.log().t_end().unwrap_or(0))?;
-            miner.mine(t_from, t_to, &opts, two_pass, "cli")?
-        }
-    };
+    // (t_from, t_to] half-open-left, like every range API here; the
+    // defaults cover the whole recording (== mine_all)
+    let t_from = args.get_i32("from", miner.log().t_begin().map(|t| t - 1).unwrap_or(-1))?;
+    let t_to = args.get_i32("to", miner.log().t_end().unwrap_or(0))?;
+    let result = miner.mine_traced(t_from, t_to, &opts, two_pass, "cli", &trace, profile)?;
     print_levels(&result);
     println!("\ntotal {:.3}s", t0.elapsed().as_secs_f64());
     print!("{}", miner.metrics().report());
+    print_observability(args, &result, &trace)?;
     print_top_episodes(&result);
     Ok(())
 }
@@ -642,6 +733,7 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
     lg.subscribers = args.get_usize("subscribers", lg.subscribers)?;
 
     let d = ServiceConfig::default();
+    let slow_ms = args.get_u64("slow-ms", 0)?;
     let sc = ServiceConfig {
         workers: args.get_usize("workers", d.workers)?,
         queue_capacity: args.get_usize("queue", d.queue_capacity)?,
@@ -650,6 +742,10 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
             Some(s) => Strategy::parse(s)?,
             None => d.strategy,
         },
+        profile: args.flag("profile"),
+        tracing: args.flag("profile") || slow_ms > 0,
+        slow_query_threshold: (slow_ms > 0)
+            .then(|| std::time::Duration::from_millis(slow_ms)),
         ..d
     };
 
@@ -665,8 +761,62 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
     );
     let workload = Workload::build(&lg)?;
     let service = MineService::start(sc)?;
-    let report = loadgen::run(&service, &workload, &lg);
+    // a heartbeat thread prints one registry-derived metrics line every
+    // --metrics-every seconds while the load runs (0 disables)
+    let metrics_every = args.get_u64("metrics-every", 0)?;
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let report = std::thread::scope(|scope| {
+        if metrics_every > 0 {
+            let (svc, stop) = (&service, &stop);
+            scope.spawn(move || {
+                let tick = std::time::Duration::from_millis(50);
+                let mut next = std::time::Instant::now()
+                    + std::time::Duration::from_secs(metrics_every);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    if std::time::Instant::now() >= next {
+                        let _ = svc.metrics(); // refresh derived gauges
+                        println!("metrics: {}", metrics_line(&svc.registry().snapshot()));
+                        next += std::time::Duration::from_secs(metrics_every);
+                    }
+                }
+            });
+        }
+        let report = loadgen::run(&service, &workload, &lg);
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        report
+    });
+
+    for slow in service.slow_queries() {
+        println!(
+            "slow query {} ({:.1}ms):\n{}",
+            slow.trace_id,
+            slow.latency.as_secs_f64() * 1e3,
+            slow.tree
+        );
+    }
+    // artifact exports: the full registry snapshot, and one traced demo
+    // query (same dataset family the load ran over) as a span-tree JSON
+    if let Some(path) = args.get("stats-out") {
+        let _ = service.metrics(); // refresh derived gauges
+        std::fs::write(path, service.registry().snapshot().to_json().render_pretty())
+            .map_err(|e| MineError::io(format!("writing {path}"), e))?;
+        println!("wrote metrics snapshot to {path}");
+    }
     let metrics = service.shutdown();
+    if let Some(path) = args.get("trace-out") {
+        let spec = lg.base_dataset.as_deref().unwrap_or("sym26");
+        let (stream, name) = episodes_gpu::datasets::resolve(spec, lg.seed)?;
+        let trace = Trace::started();
+        let mut session =
+            session_builder(args, stream, &name, args.get_u64("theta", 100)?)?
+                .profile(true)
+                .build()?;
+        let _ = session.mine_traced(&trace)?;
+        std::fs::write(path, trace.to_json().render_pretty())
+            .map_err(|e| MineError::io(format!("writing {path}"), e))?;
+        println!("wrote trace json to {path}");
+    }
 
     println!(
         "\ncompleted {} rejected {} errors {} in {:.2}s -> {:.1} qps",
@@ -692,6 +842,62 @@ fn cmd_serve_bench(args: &Args) -> Result<(), MineError> {
     }
     println!("service: {}", metrics.report());
     println!("\n{}", report.to_json());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::cluster::proto::{self, Request, Response};
+    use episodes_gpu::cluster::{NodeLink, TcpLink};
+    use episodes_gpu::obs::Snapshot;
+    use episodes_gpu::serve::{MineService, Query, ServiceConfig};
+
+    let snapshot = match args.get("connect") {
+        // ask a running `epminer node` for its registry over the wire
+        Some(addr) => {
+            let deadline =
+                std::time::Duration::from_millis(args.get_u64("deadline-ms", 5_000)?);
+            let link = TcpLink::new(addr);
+            let reply = link.call(&proto::encode_request(1, &Request::Stats), deadline)?;
+            let (_, outcome) = proto::decode_response(&reply)?;
+            match outcome? {
+                Response::Stats { snapshot } => snapshot,
+                _ => {
+                    return Err(MineError::corrupt(
+                        proto::WIRE,
+                        format!("{addr} answered Stats with a different response kind"),
+                    ))
+                }
+            }
+        }
+        // no peer: run one query through a local service so the demo
+        // snapshot shows the real metric namespace
+        None => {
+            eprintln!("stats: no --connect, demo registry from one local query");
+            let (stream, name) = load_dataset(args)?;
+            let theta = args.get_u64("theta", 100)?;
+            let iv = interval_from(args, &name)?;
+            let sc = ServiceConfig {
+                workers: 1,
+                tracing: true,
+                profile: true,
+                ..ServiceConfig::default()
+            };
+            let service = MineService::start(sc)?;
+            let registry = service.registry();
+            service.submit(Query::new(std::sync::Arc::new(stream), theta, vec![iv]))?.wait()?;
+            let _ = service.shutdown(); // refreshes derived gauges
+            registry.snapshot().to_json()
+        }
+    };
+    if args.flag("json") {
+        print!("{}", snapshot.render_pretty());
+    } else {
+        match Snapshot::from_json(&snapshot) {
+            Some(snap) => print!("{}", snap.render_prometheus()),
+            // an unrecognized (older/newer peer) shape still prints
+            None => print!("{}", snapshot.render_pretty()),
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,36 @@
+//! Unified observability: end-to-end query tracing, one metrics
+//! registry, and the mining-phase profiler.
+//!
+//! Three pieces, all dependency-free (std + `util/json` only):
+//!
+//! - [`trace`] — hand-rolled spans. A [`Trace`] is minted per query (at
+//!   `serve` admission or at the `epminer` CLI) and carried by value
+//!   through the session driver, `MineService` jobs, incremental
+//!   commits, and — as an optional envelope field on the cluster wire
+//!   protocol — across scatter-gather RPCs, so the coordinator can
+//!   render one merged span tree covering remote counting work. A
+//!   disabled trace ([`Trace::off`]) is a `None` inside: starting and
+//!   dropping spans performs no allocation and no clock reads, so the
+//!   hot mining loop is unaffected by default (pinned by
+//!   `tests/obs_zero_alloc.rs`).
+//! - [`registry`] — a single [`Registry`] of named typed counters,
+//!   gauges, and histograms (windowed, summarized via
+//!   [`crate::util::stats::Summary`]). The serving pool, the scatter
+//!   coordinator, and `coordinator::Metrics` publish into one registry
+//!   instead of owning disjoint ad-hoc fields; one [`Snapshot`] API
+//!   renders both Prometheus-style text and JSON (`epminer stats`, the
+//!   `Stats` RPC on `ClusterNode`).
+//! - [`profile`] — the mining-phase profiler: an optional
+//!   [`MineProfile`] on `MineResult` recording per-level generate /
+//!   count / prune wall time, candidate rows materialized, and blocks
+//!   streamed, enabled by `SessionBuilder::profile(true)` / `--profile`.
+//!   Phase profiles are the input the accelerator crossover model
+//!   (ROADMAP item 2) needs to pick CPU-vs-device per batch.
+
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use profile::{LevelProfile, MineProfile};
+pub use registry::{Counter, Gauge, Histogram, Registry, Snapshot};
+pub use trace::{SpanGuard, SpanRecord, Trace, TraceId};

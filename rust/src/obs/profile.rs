@@ -1,0 +1,218 @@
+//! The mining-phase profiler: where did this query's time go?
+//!
+//! A [`MineProfile`] is an optional attachment on
+//! [`crate::coordinator::miner::MineResult`] recording, per level, the
+//! generate / count / prune wall time of the block-streamed driver plus
+//! the work volumes that explain them (candidate rows materialized,
+//! blocks streamed), and the whole-query roll-ups the accelerator
+//! crossover model needs (concatenate misses, shard Map calls, serial
+//! recounts). It is off by default — `SessionBuilder::profile(true)` or
+//! `--profile` turns it on — and it travels the cluster wire as an
+//! optional field, so old peers interoperate unchanged.
+
+use crate::util::json::Json;
+
+/// Per-level phase breakdown of one generate-count-prune pass.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LevelProfile {
+    pub level: usize,
+    /// wall time in candidate generation (join + row materialization)
+    pub generate_seconds: f64,
+    /// wall time in the counting backend
+    pub count_seconds: f64,
+    /// wall time pruning + persisting survivors
+    pub prune_seconds: f64,
+    /// candidate rows materialized at this level
+    pub candidates: u64,
+    /// streamed candidate blocks (chunks handed to the backend)
+    pub blocks: u64,
+}
+
+/// Whole-query phase profile. All counters are exact; times are wall
+/// clock on the machine that ran the driver.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MineProfile {
+    /// end-to-end driver wall time
+    pub total_seconds: f64,
+    pub levels: Vec<LevelProfile>,
+    /// candidate rows materialized across all levels
+    pub candidate_rows: u64,
+    /// candidate blocks streamed across all levels
+    pub blocks_streamed: u64,
+    /// concatenate-fold misses (shard/halo chains that desynchronized)
+    pub concat_misses: u64,
+    /// sharded / scattered Map dispatches
+    pub shard_map_calls: u64,
+    /// serial recounts that restored exactness after a miss
+    pub serial_recounts: u64,
+    /// how the serving layer satisfied this request, when it knows
+    /// ("cache" for a cache hit; `None` = mined fresh)
+    pub cache_outcome: Option<String>,
+}
+
+impl MineProfile {
+    pub fn to_json(&self) -> Json {
+        let levels = self
+            .levels
+            .iter()
+            .map(|l| {
+                Json::Obj(vec![
+                    ("level".into(), Json::Num(l.level as f64)),
+                    ("generate_seconds".into(), Json::Num(l.generate_seconds)),
+                    ("count_seconds".into(), Json::Num(l.count_seconds)),
+                    ("prune_seconds".into(), Json::Num(l.prune_seconds)),
+                    ("candidates".into(), Json::Num(l.candidates as f64)),
+                    ("blocks".into(), Json::Num(l.blocks as f64)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("total_seconds".into(), Json::Num(self.total_seconds)),
+            ("levels".into(), Json::Arr(levels)),
+            ("candidate_rows".into(), Json::Num(self.candidate_rows as f64)),
+            ("blocks_streamed".into(), Json::Num(self.blocks_streamed as f64)),
+            ("concat_misses".into(), Json::Num(self.concat_misses as f64)),
+            ("shard_map_calls".into(), Json::Num(self.shard_map_calls as f64)),
+            ("serial_recounts".into(), Json::Num(self.serial_recounts as f64)),
+        ];
+        if let Some(outcome) = &self.cache_outcome {
+            fields.push(("cache_outcome".into(), Json::Str(outcome.clone())));
+        }
+        Json::Obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<MineProfile, crate::error::MineError> {
+        use crate::error::MineError;
+        let num = |o: &Json, k: &str| {
+            o.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| MineError::invalid(format!("mine profile missing number {k:?}")))
+        };
+        let count = |o: &Json, k: &str| {
+            o.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| MineError::invalid(format!("mine profile missing count {k:?}")))
+        };
+        let levels = v
+            .get("levels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| MineError::invalid("mine profile missing levels array"))?
+            .iter()
+            .map(|l| {
+                Ok(LevelProfile {
+                    level: count(l, "level")? as usize,
+                    generate_seconds: num(l, "generate_seconds")?,
+                    count_seconds: num(l, "count_seconds")?,
+                    prune_seconds: num(l, "prune_seconds")?,
+                    candidates: count(l, "candidates")?,
+                    blocks: count(l, "blocks")?,
+                })
+            })
+            .collect::<Result<Vec<_>, MineError>>()?;
+        Ok(MineProfile {
+            total_seconds: num(v, "total_seconds")?,
+            levels,
+            candidate_rows: count(v, "candidate_rows")?,
+            blocks_streamed: count(v, "blocks_streamed")?,
+            concat_misses: count(v, "concat_misses")?,
+            shard_map_calls: count(v, "shard_map_calls")?,
+            serial_recounts: count(v, "serial_recounts")?,
+            cache_outcome: v.get("cache_outcome").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    /// Human-readable phase table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "profile: total {:.3}ms, {} candidate rows in {} blocks, \
+             {} map calls, {} concat misses, {} serial recounts{}\n",
+            self.total_seconds * 1e3,
+            self.candidate_rows,
+            self.blocks_streamed,
+            self.shard_map_calls,
+            self.concat_misses,
+            self.serial_recounts,
+            match &self.cache_outcome {
+                Some(o) => format!(" [{o}]"),
+                None => String::new(),
+            }
+        );
+        out.push_str("  level  generate_ms  count_ms  prune_ms  candidates  blocks\n");
+        for l in &self.levels {
+            out.push_str(&format!(
+                "  {:<5}  {:>11.3}  {:>8.3}  {:>8.3}  {:>10}  {:>6}\n",
+                l.level,
+                l.generate_seconds * 1e3,
+                l.count_seconds * 1e3,
+                l.prune_seconds * 1e3,
+                l.candidates,
+                l.blocks
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MineProfile {
+        MineProfile {
+            total_seconds: 0.25,
+            levels: vec![
+                LevelProfile {
+                    level: 1,
+                    generate_seconds: 0.0,
+                    count_seconds: 0.1,
+                    prune_seconds: 0.001,
+                    candidates: 26,
+                    blocks: 1,
+                },
+                LevelProfile {
+                    level: 2,
+                    generate_seconds: 0.02,
+                    count_seconds: 0.12,
+                    prune_seconds: 0.002,
+                    candidates: 130,
+                    blocks: 3,
+                },
+            ],
+            candidate_rows: 156,
+            blocks_streamed: 4,
+            concat_misses: 1,
+            shard_map_calls: 8,
+            serial_recounts: 1,
+            cache_outcome: None,
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let p = sample();
+        let back = MineProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+
+        let mut with_outcome = p;
+        with_outcome.cache_outcome = Some("cache".into());
+        let back = MineProfile::from_json(&with_outcome.to_json()).unwrap();
+        assert_eq!(back.cache_outcome.as_deref(), Some("cache"));
+    }
+
+    #[test]
+    fn malformed_profiles_are_typed_errors() {
+        assert!(MineProfile::from_json(&Json::Obj(vec![])).is_err());
+        let mut j = sample().to_json();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "levels");
+        }
+        assert!(MineProfile::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn render_mentions_every_level() {
+        let text = sample().render();
+        assert!(text.contains("level"), "{text}");
+        assert!(text.lines().count() >= 4, "{text}");
+    }
+}

@@ -1,0 +1,390 @@
+//! One metrics registry for the whole process: named typed counters,
+//! gauges, and windowed histograms, with a single snapshot API rendering
+//! Prometheus-style text and JSON.
+//!
+//! Handles are live: [`Registry::counter`] returns (get-or-creating) a
+//! cheap cloneable [`Counter`] whose atomic *is* the counter the
+//! subsystem increments — there is no copy step between "the number the
+//! hot path bumps" and "the number the snapshot reports". The serving
+//! pool, the scatter coordinator, and `coordinator::Metrics` all publish
+//! through one registry instead of owning disjoint mutexed fields; a
+//! snapshot is one consistent walk over sorted names.
+//!
+//! Names are dotted lowercase (`serve.submitted`,
+//! `cluster.node.0.calls`); the Prometheus render sanitizes them to
+//! `_`-separated and emits histogram quantiles as a `summary` family.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Default histogram window (samples kept for percentile estimation).
+pub const DEFAULT_HIST_WINDOW: usize = 4096;
+
+/// A monotonically increasing counter. Clone freely — clones share the
+/// same atomic.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable signed gauge (queue depths, in-flight counts).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistBuf {
+    window: VecDeque<f64>,
+    cap: usize,
+    /// lifetime observation count (window-independent)
+    total: u64,
+}
+
+/// A windowed histogram: keeps the most recent `cap` samples and
+/// summarizes them via [`Summary`]. Non-finite observations are dropped
+/// at the door — a NaN can never poison the percentiles.
+#[derive(Clone)]
+pub struct Histogram(Arc<Mutex<HistBuf>>);
+
+impl Histogram {
+    fn new(cap: usize) -> Histogram {
+        Histogram(Arc::new(Mutex::new(HistBuf {
+            window: VecDeque::with_capacity(cap.min(1024)),
+            cap: cap.max(1),
+            total: 0,
+        })))
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let mut buf = self.0.lock().unwrap_or_else(|p| p.into_inner());
+        if buf.window.len() >= buf.cap {
+            buf.window.pop_front();
+        }
+        buf.window.push_back(v);
+        buf.total += 1;
+    }
+
+    /// Lifetime observation count.
+    pub fn count(&self) -> u64 {
+        self.0.lock().unwrap_or_else(|p| p.into_inner()).total
+    }
+
+    /// Percentile summary over the current window (`None` while empty).
+    pub fn summary(&self) -> Option<Summary> {
+        let buf = self.0.lock().unwrap_or_else(|p| p.into_inner());
+        let samples: Vec<f64> = buf.window.iter().copied().collect();
+        Summary::of_opt(&samples)
+    }
+
+    /// The current window, oldest first (the serving layer's legacy
+    /// latency accessor).
+    pub fn samples(&self) -> Vec<f64> {
+        self.0.lock().unwrap_or_else(|p| p.into_inner()).window.iter().copied().collect()
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// The process-wide metric namespace. Cloning shares the namespace.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<RegistryInner>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or register the named counter.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or register the named gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or register the named histogram with the default window.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.histogram_windowed(name, DEFAULT_HIST_WINDOW)
+    }
+
+    /// Get or register the named histogram with an explicit window
+    /// (first registration wins the window size).
+    pub fn histogram_windowed(&self, name: &str, window: usize) -> Histogram {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(window))
+            .clone()
+    }
+
+    /// One consistent snapshot of every registered metric, names sorted.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        Snapshot {
+            counters: inner.counters.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            gauges: inner.gauges.iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, v)| (k.clone(), v.count(), v.summary()))
+                .collect(),
+        }
+    }
+}
+
+/// A point-in-time view of a [`Registry`], renderable as Prometheus
+/// text or JSON.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    /// (name, lifetime count, window summary)
+    pub histograms: Vec<(String, u64, Option<Summary>)>,
+}
+
+/// Prometheus metric names: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn prom_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+impl Snapshot {
+    /// Prometheus-style text exposition.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (name, count, summary) in &self.histograms {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            if let Some(s) = summary {
+                for (q, v) in [("0.5", s.median), ("0.95", s.p95), ("0.99", s.p99)] {
+                    out.push_str(&format!("{n}{{quantile=\"{q}\"}} {v}\n"));
+                }
+                out.push_str(&format!("{n}_sum {}\n", s.mean * s.n as f64));
+            }
+            out.push_str(&format!("{n}_count {count}\n"));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect();
+        let gauges =
+            self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect();
+        let hists = self
+            .histograms
+            .iter()
+            .map(|(k, count, summary)| {
+                let mut fields = vec![("count".into(), Json::Num(*count as f64))];
+                if let Some(s) = summary {
+                    fields.extend([
+                        ("window_n".into(), Json::Num(s.n as f64)),
+                        ("mean".into(), Json::Num(s.mean)),
+                        ("stddev".into(), Json::Num(s.stddev)),
+                        ("p50".into(), Json::Num(s.median)),
+                        ("p95".into(), Json::Num(s.p95)),
+                        ("p99".into(), Json::Num(s.p99)),
+                        ("min".into(), Json::Num(s.min)),
+                        ("max".into(), Json::Num(s.max)),
+                    ]);
+                }
+                (k.clone(), Json::Obj(fields))
+            })
+            .collect();
+        Json::Obj(vec![
+            ("counters".into(), Json::Obj(counters)),
+            ("gauges".into(), Json::Obj(gauges)),
+            ("histograms".into(), Json::Obj(hists)),
+        ])
+    }
+
+    /// Rebuild a snapshot from its [`Snapshot::to_json`] shape — what the
+    /// cluster `Stats` RPC ships — so a remote registry renders through
+    /// the same Prometheus path as a local one. `None` on any shape
+    /// mismatch (the peer may be older or hostile).
+    pub fn from_json(j: &Json) -> Option<Snapshot> {
+        fn fields(j: &Json) -> Option<&[(String, Json)]> {
+            match j {
+                Json::Obj(f) => Some(f),
+                _ => None,
+            }
+        }
+        let counters = fields(j.get("counters")?)?
+            .iter()
+            .map(|(k, v)| Some((k.clone(), v.as_u64()?)))
+            .collect::<Option<Vec<_>>>()?;
+        let gauges = fields(j.get("gauges")?)?
+            .iter()
+            .map(|(k, v)| Some((k.clone(), v.as_f64()? as i64)))
+            .collect::<Option<Vec<_>>>()?;
+        let histograms = fields(j.get("histograms")?)?
+            .iter()
+            .map(|(k, h)| {
+                let count = h.get("count").and_then(Json::as_u64)?;
+                let summary = h.get("window_n").and_then(Json::as_u64).map(|n| Summary {
+                    n: n as usize,
+                    mean: h.get("mean").and_then(Json::as_f64).unwrap_or(0.0),
+                    median: h.get("p50").and_then(Json::as_f64).unwrap_or(0.0),
+                    stddev: h.get("stddev").and_then(Json::as_f64).unwrap_or(0.0),
+                    min: h.get("min").and_then(Json::as_f64).unwrap_or(0.0),
+                    max: h.get("max").and_then(Json::as_f64).unwrap_or(0.0),
+                    p95: h.get("p95").and_then(Json::as_f64).unwrap_or(0.0),
+                    p99: h.get("p99").and_then(Json::as_f64).unwrap_or(0.0),
+                });
+                Some((k.clone(), count, summary))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(Snapshot { counters, gauges, histograms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_live_and_shared() {
+        let reg = Registry::new();
+        let a = reg.counter("serve.submitted");
+        let b = reg.counter("serve.submitted");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter("serve.submitted").get(), 3);
+
+        let g = reg.gauge("serve.queue_depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(reg.gauge("serve.queue_depth").get(), 3);
+    }
+
+    #[test]
+    fn histograms_window_and_filter_non_finite() {
+        let reg = Registry::new();
+        let h = reg.histogram_windowed("lat", 4);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert!(h.summary().is_none());
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            h.observe(v);
+        }
+        // window of 4 keeps the most recent samples; total counts all
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn snapshot_renders_prometheus_and_json() {
+        let reg = Registry::new();
+        reg.counter("serve.submitted").add(7);
+        reg.gauge("cluster.node.0.in_flight").set(2);
+        let h = reg.histogram("serve.latency_ns");
+        h.observe(10.0);
+        h.observe(20.0);
+
+        let snap = reg.snapshot();
+        let text = snap.render_prometheus();
+        assert!(text.contains("# TYPE serve_submitted counter"), "{text}");
+        assert!(text.contains("serve_submitted 7"), "{text}");
+        assert!(text.contains("cluster_node_0_in_flight 2"), "{text}");
+        assert!(text.contains("serve_latency_ns{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("serve_latency_ns_count 2"), "{text}");
+
+        let j = snap.to_json();
+        assert_eq!(j.get("counters").and_then(|c| c.get("serve.submitted")).and_then(Json::as_u64), Some(7));
+        let hist = j.get("histograms").and_then(|h| h.get("serve.latency_ns")).unwrap();
+        assert_eq!(hist.get("count").and_then(Json::as_u64), Some(2));
+        assert_eq!(hist.get("p50").and_then(Json::as_f64), Some(15.0));
+        // render round-trips through the parser (it is real JSON)
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.get("gauges").and_then(|g| g.get("cluster.node.0.in_flight")).and_then(Json::as_u64), Some(2));
+    }
+
+    #[test]
+    fn snapshot_survives_the_wire_shape() {
+        let reg = Registry::new();
+        reg.counter("serve.submitted").add(3);
+        reg.gauge("cluster.node.0.in_flight").set(-2);
+        let h = reg.histogram("serve.latency_ns");
+        h.observe(1.0);
+        h.observe(3.0);
+        let snap = reg.snapshot();
+
+        // to_json -> render -> parse -> from_json is what `epminer stats
+        // --connect` sees for a remote registry
+        let wire = Json::parse(&snap.to_json().render()).unwrap();
+        let back = Snapshot::from_json(&wire).unwrap();
+        assert_eq!(back.counters, snap.counters);
+        assert_eq!(back.gauges, snap.gauges);
+        assert_eq!(back.render_prometheus(), snap.render_prometheus());
+
+        // shape mismatches are None, not panics
+        assert!(Snapshot::from_json(&Json::Num(1.0)).is_none());
+        assert!(Snapshot::from_json(&Json::Obj(vec![])).is_none());
+    }
+
+    #[test]
+    fn prom_names_are_sanitized() {
+        assert_eq!(prom_name("serve.latency-ns"), "serve_latency_ns");
+        assert_eq!(prom_name("0weird"), "_0weird");
+    }
+}

@@ -1,0 +1,510 @@
+//! Hand-rolled spans: a bounded per-query recorder with lossless JSON
+//! export and a text tree render.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when off.** `Trace` is a `Option<Arc<_>>` by value;
+//!    [`Trace::off`] is `None`. Starting a span on a disabled trace
+//!    reads no clock, takes no lock, and allocates nothing — the guard
+//!    is a few plain words. The mining hot loop can therefore be
+//!    instrumented unconditionally.
+//! 2. **Send + Sync.** The scatter coordinator records spans from scoped
+//!    threads (one per counting window), so the recorder is a mutexed
+//!    ring behind an `Arc`, with monotonic times taken relative to the
+//!    trace's own epoch (`Instant` deltas, never wall clock).
+//! 3. **Bounded.** The buffer holds at most [`MAX_SPANS`] records;
+//!    overflow drops the newest record and counts it (`dropped`), so a
+//!    pathological query cannot balloon coordinator memory.
+//! 4. **Mergeable.** Remote spans arrive as decoded [`SpanRecord`]s from
+//!    a node's own trace (its own epoch, its own span ids). [`Trace::graft`]
+//!    re-ids them into this trace's id space under a chosen parent and
+//!    stamps the peer name, so one tree covers local and remote work.
+//!    Remote times stay on the node's clock — durations are exact,
+//!    absolute offsets are per-node.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::MineError;
+use crate::util::json::Json;
+
+/// Hard bound on recorded spans per trace (local + grafted).
+pub const MAX_SPANS: usize = 8192;
+
+/// Trace ids travel as lowercase hex, at most this many digits (u64).
+pub const MAX_TRACE_ID_HEX: usize = 16;
+
+/// A per-query identity, minted once at admission (serve) or at the CLI
+/// and carried across every hop — including the wire — as 16 lowercase
+/// hex digits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+/// Process-local uniqueness for minted ids (mixed with wall time).
+static MINT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl TraceId {
+    /// Mint a fresh id: wall-clock nanos, a process-local sequence, and
+    /// the pid, FNV-mixed. Not cryptographic — collision just merges two
+    /// traces' names, never their data.
+    pub fn mint() -> TraceId {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let seq = MINT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let mut h = 0xcbf29ce484222325u64;
+        for word in [nanos, seq, std::process::id() as u64] {
+            for b in word.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        TraceId(h)
+    }
+
+    /// The wire form: 16 lowercase hex digits.
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Parse the wire form. Hostile inputs — empty, oversized, or
+    /// non-hex — are typed errors, never panics: trace ids arrive from
+    /// untrusted peers on the cluster envelope.
+    pub fn from_hex(s: &str) -> Result<TraceId, MineError> {
+        if s.is_empty() || s.len() > MAX_TRACE_ID_HEX {
+            return Err(MineError::invalid(format!(
+                "trace id must be 1..={MAX_TRACE_ID_HEX} hex digits, got {} chars",
+                s.len()
+            )));
+        }
+        if !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(MineError::invalid(format!("trace id {s:?} is not hex")));
+        }
+        u64::from_str_radix(s, 16)
+            .map(TraceId)
+            .map_err(|_| MineError::invalid(format!("trace id {s:?} is not a u64")))
+    }
+}
+
+/// One recorded span: a named interval with a parent link (0 = root)
+/// and the peer name for grafted remote spans ("" = this process).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub id: u64,
+    /// parent span id; 0 means top-level
+    pub parent: u64,
+    pub name: Cow<'static, str>,
+    /// peer that recorded the span ("" locally; set by [`Trace::graft`])
+    pub node: Cow<'static, str>,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl SpanRecord {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("id".into(), Json::Num(self.id as f64)),
+            ("parent".into(), Json::Num(self.parent as f64)),
+            ("name".into(), Json::Str(self.name.to_string())),
+            ("node".into(), Json::Str(self.node.to_string())),
+            ("start_ns".into(), Json::Num(self.start_ns as f64)),
+            ("end_ns".into(), Json::Num(self.end_ns as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SpanRecord, MineError> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| MineError::invalid(format!("span record missing u64 {k:?}")))
+        };
+        let text = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| MineError::invalid(format!("span record missing string {k:?}")))
+        };
+        Ok(SpanRecord {
+            id: field("id")?,
+            parent: field("parent")?,
+            name: Cow::Owned(text("name")?),
+            node: Cow::Owned(text("node")?),
+            start_ns: field("start_ns")?,
+            end_ns: field("end_ns")?,
+        })
+    }
+}
+
+/// Encode a span list (the wire form used on cluster `ok` envelopes).
+pub fn spans_to_json(spans: &[SpanRecord]) -> Json {
+    Json::Arr(spans.iter().map(SpanRecord::to_json).collect())
+}
+
+/// Decode a span list from an untrusted peer: shape errors are typed,
+/// and the count is clamped to [`MAX_SPANS`] so a hostile reply cannot
+/// balloon coordinator memory.
+pub fn spans_from_json(v: &Json) -> Result<Vec<SpanRecord>, MineError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| MineError::invalid("span list must be a JSON array"))?;
+    arr.iter().take(MAX_SPANS).map(SpanRecord::from_json).collect()
+}
+
+struct SpanBuf {
+    spans: Vec<SpanRecord>,
+    dropped: u64,
+}
+
+struct TraceInner {
+    id: TraceId,
+    epoch: Instant,
+    next_span: AtomicU64,
+    buf: Mutex<SpanBuf>,
+}
+
+/// A per-query span recorder, cheap to clone and pass by value. See the
+/// module docs for the cost model; the practical API is
+/// [`Trace::span`] → [`SpanGuard::child`] with explicit nesting (no
+/// thread-locals — the scatter threads make implicit context a trap).
+#[derive(Clone)]
+pub struct Trace {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl Trace {
+    /// The disabled trace: every operation is a no-op.
+    pub fn off() -> Trace {
+        Trace { inner: None }
+    }
+
+    /// An enabled trace under an existing id (the remote side of a
+    /// propagated trace context).
+    pub fn with_id(id: TraceId) -> Trace {
+        Trace {
+            inner: Some(Arc::new(TraceInner {
+                id,
+                epoch: Instant::now(),
+                next_span: AtomicU64::new(0),
+                buf: Mutex::new(SpanBuf { spans: Vec::new(), dropped: 0 }),
+            })),
+        }
+    }
+
+    /// An enabled trace with a freshly minted id.
+    pub fn started() -> Trace {
+        Trace::with_id(TraceId::mint())
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn id(&self) -> Option<TraceId> {
+        self.inner.as_ref().map(|i| i.id)
+    }
+
+    /// Start a top-level span. On a disabled trace this is free: no
+    /// clock read, no allocation, no lock.
+    pub fn span(&self, name: &'static str) -> SpanGuard {
+        self.start(0, Cow::Borrowed(name))
+    }
+
+    /// Start a root span with a computed name; the closure runs only
+    /// when the trace is enabled, so the disabled path stays
+    /// allocation-free.
+    pub fn span_fmt(&self, name: impl FnOnce() -> String) -> SpanGuard {
+        if self.is_on() {
+            self.start(0, Cow::Owned(name()))
+        } else {
+            self.start(0, Cow::Borrowed(""))
+        }
+    }
+
+    fn start(&self, parent: u64, name: Cow<'static, str>) -> SpanGuard {
+        match &self.inner {
+            None => SpanGuard { trace: Trace::off(), id: 0, parent: 0, name: Cow::Borrowed(""), start_ns: 0 },
+            Some(inner) => {
+                let id = inner.next_span.fetch_add(1, Ordering::Relaxed) + 1;
+                let start_ns = inner.epoch.elapsed().as_nanos() as u64;
+                SpanGuard { trace: self.clone(), id, parent, name, start_ns }
+            }
+        }
+    }
+
+    fn record(&self, rec: SpanRecord) {
+        if let Some(inner) = &self.inner {
+            let mut buf = inner.buf.lock().unwrap_or_else(|p| p.into_inner());
+            if buf.spans.len() >= MAX_SPANS {
+                buf.dropped += 1;
+            } else {
+                buf.spans.push(rec);
+            }
+        }
+    }
+
+    /// Adopt spans recorded by a remote peer under the local span
+    /// `under`: ids are re-based into this trace's id space (so they
+    /// cannot collide with local spans), top-level remote spans hang off
+    /// `under`, and every record is stamped with the peer's name. Times
+    /// stay on the peer's clock (durations exact, offsets node-local).
+    pub fn graft(&self, under: u64, node: &str, remote: &[SpanRecord]) {
+        let Some(inner) = &self.inner else { return };
+        if remote.is_empty() {
+            return;
+        }
+        let max_id = remote.iter().map(|s| s.id).max().unwrap_or(0);
+        let base = inner.next_span.fetch_add(max_id, Ordering::Relaxed);
+        let remote_ids: std::collections::HashSet<u64> = remote.iter().map(|s| s.id).collect();
+        for s in remote.iter().take(MAX_SPANS) {
+            let parent = if s.parent == 0 || !remote_ids.contains(&s.parent) {
+                under
+            } else {
+                base + s.parent
+            };
+            self.record(SpanRecord {
+                id: base + s.id,
+                parent,
+                name: Cow::Owned(s.name.to_string()),
+                node: Cow::Owned(if s.node.is_empty() { node.to_string() } else { s.node.to_string() }),
+                start_ns: s.start_ns,
+                end_ns: s.end_ns,
+            });
+        }
+    }
+
+    /// Spans recorded so far, in completion order.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        match &self.inner {
+            None => vec![],
+            Some(inner) => inner.buf.lock().unwrap_or_else(|p| p.into_inner()).spans.clone(),
+        }
+    }
+
+    /// Records dropped to the [`MAX_SPANS`] bound.
+    pub fn dropped(&self) -> u64 {
+        match &self.inner {
+            None => 0,
+            Some(inner) => inner.buf.lock().unwrap_or_else(|p| p.into_inner()).dropped,
+        }
+    }
+
+    /// Lossless JSON export: `{trace_id, dropped, spans: [...]}`.
+    pub fn to_json(&self) -> Json {
+        let id = self.id().map(|i| i.to_hex()).unwrap_or_default();
+        Json::Obj(vec![
+            ("trace_id".into(), Json::Str(id)),
+            ("dropped".into(), Json::Num(self.dropped() as f64)),
+            ("spans".into(), spans_to_json(&self.snapshot())),
+        ])
+    }
+
+    /// Text flamegraph: one line per span, children indented under
+    /// parents, siblings in start order, remote spans tagged `@peer`.
+    pub fn render_tree(&self) -> String {
+        let spans = self.snapshot();
+        let id = self.id().map(|i| i.to_hex()).unwrap_or_default();
+        let mut out = format!("trace {id} ({} spans", spans.len());
+        let dropped = self.dropped();
+        if dropped > 0 {
+            out.push_str(&format!(", {dropped} dropped"));
+        }
+        out.push_str(")\n");
+        let known: std::collections::HashSet<u64> = spans.iter().map(|s| s.id).collect();
+        let mut children: HashMap<u64, Vec<&SpanRecord>> = HashMap::new();
+        for s in &spans {
+            // a span whose parent never completed (still open at export)
+            // renders at top level rather than vanishing
+            let parent = if s.parent != 0 && known.contains(&s.parent) { s.parent } else { 0 };
+            children.entry(parent).or_default().push(s);
+        }
+        for kids in children.values_mut() {
+            kids.sort_by_key(|s| (s.start_ns, s.id));
+        }
+        fn walk(
+            out: &mut String,
+            children: &HashMap<u64, Vec<&SpanRecord>>,
+            id: u64,
+            depth: usize,
+        ) {
+            let Some(kids) = children.get(&id) else { return };
+            for s in kids {
+                let ms = s.duration_ns() as f64 / 1e6;
+                let tag = if s.node.is_empty() { String::new() } else { format!(" @{}", s.node) };
+                out.push_str(&format!("{:indent$}{}{tag} {ms:.3}ms\n", "", s.name, indent = depth * 2));
+                walk(out, children, s.id, depth + 1);
+            }
+        }
+        walk(&mut out, &children, 0, 1);
+        out
+    }
+}
+
+/// An in-flight span. Records itself (one buffer push) on drop; create
+/// children with [`SpanGuard::child`] for explicit nesting.
+pub struct SpanGuard {
+    trace: Trace,
+    id: u64,
+    parent: u64,
+    name: Cow<'static, str>,
+    start_ns: u64,
+}
+
+impl SpanGuard {
+    /// This span's id — the graft point for remote spans.
+    pub fn span_id(&self) -> u64 {
+        self.id
+    }
+
+    /// Start a child span.
+    pub fn child(&self, name: &'static str) -> SpanGuard {
+        self.trace.start(self.id, Cow::Borrowed(name))
+    }
+
+    /// Start a child span with a computed name; the closure runs only
+    /// when the trace is enabled, so the disabled path stays
+    /// allocation-free.
+    pub fn child_fmt(&self, name: impl FnOnce() -> String) -> SpanGuard {
+        if self.trace.is_on() {
+            self.trace.start(self.id, Cow::Owned(name()))
+        } else {
+            self.trace.start(self.id, Cow::Borrowed(""))
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(inner) = &self.trace.inner else { return };
+        let end_ns = inner.epoch.elapsed().as_nanos() as u64;
+        self.trace.record(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: std::mem::replace(&mut self.name, Cow::Borrowed("")),
+            node: Cow::Borrowed(""),
+            start_ns: self.start_ns,
+            end_ns,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_id_round_trips_and_rejects_hostile_input() {
+        let id = TraceId(0xdeadbeefcafef00d);
+        assert_eq!(id.to_hex(), "deadbeefcafef00d");
+        assert_eq!(TraceId::from_hex(&id.to_hex()).unwrap(), id);
+        assert_eq!(TraceId::from_hex("0").unwrap(), TraceId(0));
+        for bad in ["", "12345678901234567", "xyz", "deadbeef!", "деад"] {
+            assert!(TraceId::from_hex(bad).is_err(), "{bad:?} should be rejected");
+        }
+        // minted ids are distinct within a process
+        assert_ne!(TraceId::mint(), TraceId::mint());
+    }
+
+    #[test]
+    fn disabled_trace_is_inert() {
+        let t = Trace::off();
+        assert!(!t.is_on());
+        assert!(t.id().is_none());
+        {
+            let root = t.span("root");
+            let _child = root.child("child");
+            assert_eq!(root.span_id(), 0);
+        }
+        assert!(t.snapshot().is_empty());
+        assert_eq!(t.render_tree().lines().count(), 1);
+    }
+
+    #[test]
+    fn spans_nest_and_render() {
+        let t = Trace::started();
+        {
+            let root = t.span("mine");
+            {
+                let l1 = root.child_fmt(|| "level 1".to_string());
+                let _c = l1.child("count");
+            }
+            let _l2 = root.child("level 2");
+        }
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 4);
+        let tree = t.render_tree();
+        let lines: Vec<&str> = tree.lines().collect();
+        assert!(lines[1].trim_start().starts_with("mine"), "{tree}");
+        // children are indented under mine, grandchild deeper still
+        assert!(tree.contains("\n    level 1"), "{tree}");
+        assert!(tree.contains("\n      count"), "{tree}");
+        assert!(tree.contains("\n    level 2"), "{tree}");
+    }
+
+    #[test]
+    fn graft_rebases_ids_and_tags_the_peer() {
+        let t = Trace::started();
+        let rpc_id = {
+            let root = t.span("scatter");
+            let rpc = root.child("rpc");
+            rpc.span_id()
+        };
+        let remote = vec![
+            SpanRecord {
+                id: 1,
+                parent: 0,
+                name: "node:map_count".into(),
+                node: "".into(),
+                start_ns: 10,
+                end_ns: 50,
+            },
+            SpanRecord {
+                id: 2,
+                parent: 1,
+                name: "scan".into(),
+                node: "".into(),
+                start_ns: 12,
+                end_ns: 40,
+            },
+        ];
+        t.graft(rpc_id, "local#3", &remote);
+        let spans = t.snapshot();
+        let top = spans.iter().find(|s| s.name == "node:map_count").unwrap();
+        let scan = spans.iter().find(|s| s.name == "scan").unwrap();
+        assert_eq!(top.parent, rpc_id);
+        assert_eq!(scan.parent, top.id);
+        assert_eq!(top.node, "local#3");
+        assert!(t.render_tree().contains("@local#3"), "{}", t.render_tree());
+    }
+
+    #[test]
+    fn span_buffer_is_bounded() {
+        let t = Trace::started();
+        for _ in 0..(MAX_SPANS + 10) {
+            let _s = t.span("x");
+        }
+        assert_eq!(t.snapshot().len(), MAX_SPANS);
+        assert_eq!(t.dropped(), 10);
+    }
+
+    #[test]
+    fn span_json_round_trips() {
+        let t = Trace::started();
+        {
+            let root = t.span("mine");
+            let _c = root.child("count");
+        }
+        let j = spans_to_json(&t.snapshot());
+        let back = spans_from_json(&j).unwrap();
+        assert_eq!(back, t.snapshot());
+        assert!(spans_from_json(&Json::Num(3.0)).is_err());
+        assert!(spans_from_json(&Json::Arr(vec![Json::Obj(vec![])])).is_err());
+    }
+}

@@ -32,7 +32,18 @@
 //!   watcher thread tails a `log:` directory and pushes every commit,
 //!   no external publisher required.
 //! - [`metrics::ServiceMetrics`] — throughput, queue depth, p50/p95/p99
-//!   latency, cache hit rate, per-worker utilization.
+//!   latency, cache hit rate, per-worker utilization. The counters live
+//!   in a unified [`obs::Registry`](crate::obs::Registry) (see
+//!   [`MineService::registry`]) so `epminer stats` renders the service,
+//!   cluster, and coordinator in one snapshot.
+//! - observability — [`ServiceConfig::tracing`] mints a per-query
+//!   [`TraceId`](crate::obs::TraceId) at admission and records a span
+//!   tree per query; [`ServiceConfig::profile`] attaches an
+//!   [`obs::MineProfile`](crate::obs::MineProfile) phase breakdown to
+//!   every result (cache hits annotated `cache_outcome="cache"`); and
+//!   [`ServiceConfig::slow_query_threshold`] dumps the span tree of any
+//!   over-budget query into the bounded slow-query log
+//!   ([`MineService::slow_queries`]).
 //! - [`loadgen`] — a closed-loop load generator over a scenario mix (hot
 //!   repeats, theta sweeps, distinct datasets, sliding stream windows fed
 //!   by the partition producer), driving `epminer serve-bench` and
@@ -48,5 +59,8 @@ pub mod query;
 
 pub use cache::{CacheStats, ResultCache};
 pub use metrics::ServiceMetrics;
-pub use pool::{mine_direct, MineService, ServiceConfig, Subscription, Ticket, WatchLogConfig};
+pub use pool::{
+    mine_direct, MineService, ServiceConfig, SlowQuery, Subscription, Ticket, WatchLogConfig,
+    SLOW_QUERY_LOG,
+};
 pub use query::{Query, QueryKey, SubscribeQuery};

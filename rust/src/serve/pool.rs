@@ -20,9 +20,12 @@
 //! `Rc<Runtime>` and is deliberately not `Send`, so each worker thread
 //! opens its own runtime handle (when the strategy is accelerated) and
 //! builds a fresh engine per job via [`crate::session::engine_for`],
-//! running the shared [`mine_with_backend`] driver directly. CPU engine
+//! running the shared [`mine_with_backend`] driver directly (the traced
+//! variant, so per-query spans and phase profiles ride along). CPU engine
 //! construction is a few allocations; the per-job build is what lets
 //! theta-specific two-pass wrappers differ between jobs.
+//!
+//! [`mine_with_backend`]: crate::session::mine_with_backend
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
@@ -35,9 +38,9 @@ use std::time::{Duration, Instant};
 use crate::coordinator::miner::MineResult;
 use crate::coordinator::{Metrics, Strategy};
 use crate::error::MineError;
+use crate::obs::{Counter, Histogram, MineProfile, Registry, Trace};
 use crate::runtime::Runtime;
-use crate::session::{engine_for, mine_with_backend};
-use crate::util::stats::Summary;
+use crate::session::{engine_for, mine_with_backend_obs};
 
 use crate::stream::{CommitUpdate, IncrementalConfig, LogWatcher};
 
@@ -75,7 +78,24 @@ pub struct ServiceConfig {
     /// [`WatchLogConfig`]. `None` (the default): updates arrive only when
     /// an external caller drives [`MineService::publish`].
     pub watch_log: Option<WatchLogConfig>,
+    /// mint a [`TraceId`](crate::obs::TraceId) at admission and record a
+    /// span tree for every query (default off — disabled tracing is
+    /// zero-allocation on the mining hot path)
+    pub tracing: bool,
+    /// attach an [`obs::MineProfile`](crate::obs::MineProfile) to every
+    /// result (default off); cache hits are annotated
+    /// `cache_outcome="cache"`
+    pub profile: bool,
+    /// dump the span tree of any query whose submit-to-completion latency
+    /// exceeds this into the bounded slow-query log
+    /// ([`MineService::slow_queries`]); setting it implies per-query
+    /// tracing even when `tracing` is off
+    pub slow_query_threshold: Option<Duration>,
 }
+
+/// Bounded slow-query log depth: newest [`SlowQuery`] records evict the
+/// oldest beyond this.
+pub const SLOW_QUERY_LOG: usize = 64;
 
 impl Default for ServiceConfig {
     fn default() -> ServiceConfig {
@@ -89,8 +109,23 @@ impl Default for ServiceConfig {
             latency_window: 4096,
             max_subscriptions_per_tenant: 4,
             watch_log: None,
+            tracing: false,
+            profile: false,
+            slow_query_threshold: None,
         }
     }
+}
+
+/// One slow-query log entry: the query's trace id, how long it took,
+/// and its rendered span tree (text flamegraph) at completion.
+#[derive(Clone, Debug)]
+pub struct SlowQuery {
+    /// hex trace id ("" when tracing was off for this query)
+    pub trace_id: String,
+    /// submit-to-completion latency
+    pub latency: Duration,
+    /// [`Trace::render_tree`] output at completion
+    pub tree: String,
 }
 
 /// Make the service its own publisher: a [`LogWatcher`] thread tails a
@@ -144,6 +179,9 @@ struct Job {
     key: QueryKey,
     query: Query,
     submitted: Instant,
+    /// per-query span recorder, minted at admission; [`Trace::off`] when
+    /// the service runs without tracing
+    trace: Trace,
     /// tickets that coalesced onto this job after it was admitted; feeds
     /// the [`ServiceMetrics::coalesced_waiting`] gauge, which counts
     /// waiters separately from queued jobs (a waiter holds no queue slot)
@@ -237,19 +275,58 @@ struct Shared {
     cpu_threads: usize,
     shutdown: AtomicBool,
     started: Instant,
-    submitted: AtomicU64,
-    completed: AtomicU64,
-    failed: AtomicU64,
-    rejected: AtomicU64,
-    coalesced: AtomicU64,
-    latencies_ns: Mutex<VecDeque<f64>>,
-    latency_window: usize,
-    busy_ns: Vec<AtomicU64>,
+    /// the unified metrics namespace; the fields below are live handles
+    /// into it (the atomic a handle wraps IS the registry's number — a
+    /// snapshot needs no copy step)
+    registry: Registry,
+    submitted: Counter,
+    completed: Counter,
+    failed: Counter,
+    rejected: Counter,
+    coalesced: Counter,
+    latencies_ns: Histogram,
+    busy_ns: Vec<Counter>,
     hub: Mutex<HubState>,
     max_subs_per_tenant: usize,
-    subs_rejected: AtomicU64,
-    updates_published: AtomicU64,
-    updates_dropped: AtomicU64,
+    subs_rejected: Counter,
+    updates_published: Counter,
+    updates_dropped: Counter,
+    trace_queries: bool,
+    profile: bool,
+    slow_query_threshold: Option<Duration>,
+    slow: Mutex<VecDeque<SlowQuery>>,
+}
+
+impl Shared {
+    /// Cache hits hand back the cached `Arc` untouched unless profiling
+    /// is on, in which case a clone is annotated `cache_outcome="cache"`
+    /// so the tenant can tell a 2µs cache answer from a fresh mine.
+    fn annotate_cache_hit(&self, hit: Arc<MineResult>) -> Arc<MineResult> {
+        if !self.profile {
+            return hit;
+        }
+        let mut r = (*hit).clone();
+        match &mut r.profile {
+            Some(p) => p.cache_outcome = Some("cache".to_string()),
+            None => {
+                r.profile = Some(MineProfile {
+                    cache_outcome: Some("cache".to_string()),
+                    ..MineProfile::default()
+                })
+            }
+        }
+        Arc::new(r)
+    }
+
+    /// A fresh per-query trace when tracing (or the slow-query log)
+    /// wants one; the zero-cost disabled trace otherwise.
+    fn new_trace(&self) -> Trace {
+        if self.trace_queries || self.slow_query_threshold.is_some() {
+            Trace::started()
+        } else {
+            Trace::off()
+        }
+    }
 }
 
 /// The service: start it, submit [`Query`]s from any thread, shut it down
@@ -301,6 +378,7 @@ impl MineService {
                 ));
             }
         }
+        let registry = Registry::new();
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState { jobs: VecDeque::new(), paused }),
             queue_cv: Condvar::new(),
@@ -311,19 +389,26 @@ impl MineService {
             cpu_threads: cfg.cpu_threads.max(1),
             shutdown: AtomicBool::new(false),
             started: Instant::now(),
-            submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            failed: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            coalesced: AtomicU64::new(0),
-            latencies_ns: Mutex::new(VecDeque::new()),
-            latency_window: cfg.latency_window.max(1),
-            busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            submitted: registry.counter("serve.submitted"),
+            completed: registry.counter("serve.completed"),
+            failed: registry.counter("serve.failed"),
+            rejected: registry.counter("serve.rejected"),
+            coalesced: registry.counter("serve.coalesced"),
+            latencies_ns: registry
+                .histogram_windowed("serve.latency_ns", cfg.latency_window.max(1)),
+            busy_ns: (0..cfg.workers)
+                .map(|wi| registry.counter(&format!("serve.worker.{wi}.busy_ns")))
+                .collect(),
             hub: Mutex::new(HubState::default()),
             max_subs_per_tenant: cfg.max_subscriptions_per_tenant.max(1),
-            subs_rejected: AtomicU64::new(0),
-            updates_published: AtomicU64::new(0),
-            updates_dropped: AtomicU64::new(0),
+            subs_rejected: registry.counter("serve.subscriptions_rejected"),
+            updates_published: registry.counter("serve.updates_published"),
+            updates_dropped: registry.counter("serve.updates_dropped"),
+            trace_queries: cfg.tracing,
+            profile: cfg.profile,
+            slow_query_threshold: cfg.slow_query_threshold,
+            slow: Mutex::new(VecDeque::new()),
+            registry,
         });
         let mut workers = Vec::with_capacity(cfg.workers);
         for wi in 0..cfg.workers {
@@ -376,10 +461,10 @@ impl MineService {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(MineError::invalid("service is shut down"));
         }
-        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.submitted.inc();
         let key = query.key();
         if let Some(hit) = self.shared.cache.get(&key, &query) {
-            return Ok(Ticket(TicketState::Ready(hit)));
+            return Ok(Ticket(TicketState::Ready(self.shared.annotate_cache_hit(hit))));
         }
         let mut inflight = self.shared.inflight.lock().unwrap();
         // Coalesce only onto a *verified-equivalent* in-flight twin: the
@@ -391,7 +476,7 @@ impl MineService {
         let mut register = true;
         if let Some(job) = inflight.get(&key) {
             if job.query.equivalent(&query) {
-                self.shared.coalesced.fetch_add(1, Ordering::Relaxed);
+                self.shared.coalesced.inc();
                 job.waiters.fetch_add(1, Ordering::Relaxed);
                 return Ok(Ticket(TicketState::Pending(Arc::clone(job))));
             }
@@ -402,12 +487,13 @@ impl MineService {
         // just-finished twin is already visible in the cache — re-check
         // (uncounted) before paying for a fresh execution.
         if let Some(hit) = self.shared.cache.peek(&key, &query) {
-            return Ok(Ticket(TicketState::Ready(hit)));
+            return Ok(Ticket(TicketState::Ready(self.shared.annotate_cache_hit(hit))));
         }
         let job = Arc::new(Job {
             key,
             query,
             submitted: Instant::now(),
+            trace: self.shared.new_trace(),
             waiters: AtomicU64::new(0),
             slot: Mutex::new(None),
             done: Condvar::new(),
@@ -415,7 +501,7 @@ impl MineService {
         {
             let mut queue = self.shared.queue.lock().unwrap();
             if queue.jobs.len() >= self.shared.queue_capacity {
-                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shared.rejected.inc();
                 return Err(MineError::Busy {
                     queue_depth: queue.jobs.len(),
                     capacity: self.shared.queue_capacity,
@@ -447,7 +533,7 @@ impl MineService {
         let mut hub = self.shared.hub.lock().unwrap();
         let active = hub.subs.values().filter(|s| s.tenant == query.tenant).count();
         if active >= self.shared.max_subs_per_tenant {
-            self.shared.subs_rejected.fetch_add(1, Ordering::Relaxed);
+            self.shared.subs_rejected.inc();
             return Err(MineError::Busy {
                 queue_depth: active,
                 capacity: self.shared.max_subs_per_tenant,
@@ -486,41 +572,68 @@ impl MineService {
         self.shared.queue_cv.notify_all();
     }
 
-    /// Point-in-time health snapshot.
+    /// Point-in-time health snapshot. The counters read the same live
+    /// registry handles the hot path bumps; derived gauges (queue depth,
+    /// waiters, cache occupancy) are refreshed into the registry here so
+    /// an `epminer stats` snapshot carries them too.
     pub fn metrics(&self) -> ServiceMetrics {
-        let latencies: Vec<f64> =
-            self.shared.latencies_ns.lock().unwrap().iter().copied().collect();
+        let cache = self.shared.cache.stats();
+        let queue_depth = self.shared.queue.lock().unwrap().jobs.len();
+        // gauge, not counter: waiters on jobs that already resolved
+        // left the in-flight map with their job
+        let coalesced_waiting: usize = self
+            .shared
+            .inflight
+            .lock()
+            .unwrap()
+            .values()
+            .map(|job| job.waiters.load(Ordering::Relaxed) as usize)
+            .sum();
+        let subscriptions_active = self.shared.hub.lock().unwrap().subs.len();
+        let reg = &self.shared.registry;
+        reg.gauge("serve.queue_depth").set(queue_depth as i64);
+        reg.gauge("serve.coalesced_waiting").set(coalesced_waiting as i64);
+        reg.gauge("serve.subscriptions_active").set(subscriptions_active as i64);
+        reg.gauge("serve.cache.entries").set(cache.entries as i64);
+        reg.gauge("serve.cache.hits").set(cache.hits as i64);
+        reg.gauge("serve.cache.misses").set(cache.misses as i64);
+        reg.gauge("serve.cache.evictions").set(cache.evictions as i64);
         ServiceMetrics {
-            submitted: self.shared.submitted.load(Ordering::Relaxed),
-            completed: self.shared.completed.load(Ordering::Relaxed),
-            failed: self.shared.failed.load(Ordering::Relaxed),
-            rejected: self.shared.rejected.load(Ordering::Relaxed),
-            coalesced: self.shared.coalesced.load(Ordering::Relaxed),
-            // gauge, not counter: waiters on jobs that already resolved
-            // left the in-flight map with their job
-            coalesced_waiting: self
-                .shared
-                .inflight
-                .lock()
-                .unwrap()
-                .values()
-                .map(|job| job.waiters.load(Ordering::Relaxed) as usize)
-                .sum(),
-            cache: self.shared.cache.stats(),
-            queue_depth: self.shared.queue.lock().unwrap().jobs.len(),
+            submitted: self.shared.submitted.get(),
+            completed: self.shared.completed.get(),
+            failed: self.shared.failed.get(),
+            rejected: self.shared.rejected.get(),
+            coalesced: self.shared.coalesced.get(),
+            coalesced_waiting,
+            cache,
+            queue_depth,
             uptime: self.shared.started.elapsed(),
-            latency_ns: Summary::of_opt(&latencies),
+            latency_ns: self.shared.latencies_ns.summary(),
             worker_busy: self
                 .shared
                 .busy_ns
                 .iter()
-                .map(|b| std::time::Duration::from_nanos(b.load(Ordering::Relaxed)))
+                .map(|b| std::time::Duration::from_nanos(b.get()))
                 .collect(),
-            subscriptions_active: self.shared.hub.lock().unwrap().subs.len(),
-            subscriptions_rejected: self.shared.subs_rejected.load(Ordering::Relaxed),
-            updates_published: self.shared.updates_published.load(Ordering::Relaxed),
-            updates_dropped: self.shared.updates_dropped.load(Ordering::Relaxed),
+            subscriptions_active,
+            subscriptions_rejected: self.shared.subs_rejected.get(),
+            updates_published: self.shared.updates_published.get(),
+            updates_dropped: self.shared.updates_dropped.get(),
         }
+    }
+
+    /// The unified metrics registry this service publishes into. Clone
+    /// it to register additional subsystems (the cluster node does) or
+    /// to render `epminer stats`.
+    pub fn registry(&self) -> Registry {
+        self.shared.registry.clone()
+    }
+
+    /// The slow-query log, oldest first: every query whose latency
+    /// exceeded [`ServiceConfig::slow_query_threshold`], with its span
+    /// tree. Bounded at [`SLOW_QUERY_LOG`] records.
+    pub fn slow_queries(&self) -> Vec<SlowQuery> {
+        self.shared.slow.lock().unwrap().iter().cloned().collect()
     }
 
     /// Graceful shutdown: stop admitting, let workers drain every queued
@@ -646,7 +759,7 @@ fn publish_update(shared: &Shared, topic: &str, update: CommitUpdate) -> usize {
         let mut queue = entry.shared.queue.lock().unwrap();
         while queue.len() >= entry.shared.buffer {
             queue.pop_front();
-            shared.updates_dropped.fetch_add(1, Ordering::Relaxed);
+            shared.updates_dropped.inc();
         }
         queue.push_back(Arc::clone(&update));
         drop(queue);
@@ -654,7 +767,7 @@ fn publish_update(shared: &Shared, topic: &str, update: CommitUpdate) -> usize {
         delivered += 1;
     }
     drop(hub);
-    shared.updates_published.fetch_add(1, Ordering::Relaxed);
+    shared.updates_published.inc();
     delivered
 }
 
@@ -721,32 +834,45 @@ fn worker_loop(wi: usize, shared: Arc<Shared>) {
             // submitter and every future identical query. A panic becomes
             // a typed error on this job; the worker lives on.
             None => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                execute(&job.query, shared.strategy, rt.clone(), shared.cpu_threads)
+                execute(
+                    &job.query,
+                    shared.strategy,
+                    rt.clone(),
+                    shared.cpu_threads,
+                    &job.trace,
+                    shared.profile,
+                )
             }))
             .unwrap_or_else(|_| {
                 Err(MineError::internal("worker panicked while executing the query"))
             }),
         };
-        shared.busy_ns[wi].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shared.busy_ns[wi].add(t0.elapsed().as_nanos() as u64);
 
         let outcome = match outcome {
             Ok(result) => {
                 let result = Arc::new(result);
                 shared.cache.insert(job.key, job.query.clone(), Arc::clone(&result));
-                shared.completed.fetch_add(1, Ordering::Relaxed);
+                shared.completed.inc();
                 Ok(result)
             }
             Err(e) => {
-                shared.failed.fetch_add(1, Ordering::Relaxed);
+                shared.failed.inc();
                 Err(e)
             }
         };
-        {
-            let mut latencies = shared.latencies_ns.lock().unwrap();
-            if latencies.len() >= shared.latency_window {
-                latencies.pop_front();
+        let elapsed = job.submitted.elapsed();
+        shared.latencies_ns.observe(elapsed.as_nanos() as f64);
+        if shared.slow_query_threshold.is_some_and(|th| elapsed >= th) && job.trace.is_on() {
+            let mut slow = shared.slow.lock().unwrap();
+            while slow.len() >= SLOW_QUERY_LOG {
+                slow.pop_front();
             }
-            latencies.push_back(job.submitted.elapsed().as_nanos() as f64);
+            slow.push_back(SlowQuery {
+                trace_id: job.trace.id().map(|i| i.to_hex()).unwrap_or_default(),
+                latency: elapsed,
+                tree: job.trace.render_tree(),
+            });
         }
         // Leave the in-flight map only after the cache insert above, so a
         // submit that finds the key absent here can trust the cache
@@ -772,7 +898,7 @@ pub fn mine_direct(
     strategy: Strategy,
     cpu_threads: usize,
 ) -> Result<MineResult, MineError> {
-    execute(query, strategy, None, cpu_threads)
+    execute(query, strategy, None, cpu_threads, &Trace::off(), false)
 }
 
 fn execute(
@@ -780,8 +906,10 @@ fn execute(
     strategy: Strategy,
     rt: Option<Rc<Runtime>>,
     cpu_threads: usize,
+    trace: &Trace,
+    profile: bool,
 ) -> Result<MineResult, MineError> {
     let mut engine = engine_for(strategy, rt, query.two_pass, query.theta, cpu_threads)?;
     let mut metrics = Metrics::default();
-    mine_with_backend(&mut *engine, &query.stream, &query.options(), &mut metrics)
+    mine_with_backend_obs(&mut *engine, &query.stream, &query.options(), &mut metrics, trace, profile)
 }

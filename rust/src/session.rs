@@ -41,6 +41,7 @@ use crate::episodes::arena::{AlphabetRemap, EpisodeArena, LevelBlock};
 use crate::episodes::{candidates, CountedEpisode, Episode, Interval};
 use crate::error::MineError;
 use crate::events::{EventStream, EventType};
+use crate::obs::{LevelProfile, MineProfile, SpanGuard, Trace};
 use crate::runtime::Runtime;
 
 /// Default candidate block size for streamed generation: large enough to
@@ -125,10 +126,62 @@ pub fn mine_with_backend(
     opts: &MineOptions,
     metrics: &mut Metrics,
 ) -> Result<MineResult, MineError> {
+    mine_with_backend_obs(backend, stream, opts, metrics, &Trace::off(), false)
+}
+
+/// [`mine_with_backend`] with observability: every span lands on `trace`
+/// (free when the trace is disabled — no clock read, no allocation), and
+/// `profile` attaches a [`MineProfile`] phase breakdown to the result.
+/// The mining arithmetic is identical either way.
+pub fn mine_with_backend_obs(
+    backend: &mut dyn CountBackend,
+    stream: &EventStream,
+    opts: &MineOptions,
+    metrics: &mut Metrics,
+    trace: &Trace,
+    profile: bool,
+) -> Result<MineResult, MineError> {
+    let t_total = Instant::now();
+    // profile counters are this run's delta, not the session's lifetime
+    let base_misses = metrics.concat_misses;
+    let base_maps = metrics.shard_map_calls;
+    let base_cpu = metrics.cpu_fallbacks;
+    let mut level_profiles: Vec<LevelProfile> = vec![];
+    let mut result = {
+        let root = trace.span("mine");
+        mine_levels(backend, stream, opts, metrics, &root, profile, &mut level_profiles)?
+    };
+    if profile {
+        let candidate_rows = level_profiles.iter().map(|l| l.candidates).sum();
+        let blocks_streamed = level_profiles.iter().map(|l| l.blocks).sum();
+        result.profile = Some(MineProfile {
+            total_seconds: t_total.elapsed().as_secs_f64(),
+            levels: level_profiles,
+            candidate_rows,
+            blocks_streamed,
+            concat_misses: metrics.concat_misses - base_misses,
+            shard_map_calls: metrics.shard_map_calls - base_maps,
+            serial_recounts: metrics.cpu_fallbacks - base_cpu,
+            cache_outcome: None,
+        });
+    }
+    Ok(result)
+}
+
+fn mine_levels(
+    backend: &mut dyn CountBackend,
+    stream: &EventStream,
+    opts: &MineOptions,
+    metrics: &mut Metrics,
+    root: &SpanGuard,
+    profile: bool,
+    level_profiles: &mut Vec<LevelProfile>,
+) -> Result<MineResult, MineError> {
     let mut result = MineResult::default();
 
     // -- level 1: original ids, whole-level counting (the level-1 path is
     //    answered from host-side type frequencies by every engine)
+    let span1 = root.child("level 1");
     let t_gen = Instant::now();
     let cands1 = candidates::level1(stream.n_types);
     let gen_seconds = t_gen.elapsed().as_secs_f64();
@@ -143,11 +196,15 @@ pub fn mine_with_backend(
         });
     }
     let t_count = Instant::now();
-    let report = backend.count(&cands1, stream)?;
+    let report = {
+        let _count_span = span1.child("count");
+        backend.count(&cands1, stream)?
+    };
     metrics.merge(&report.metrics);
     let count_seconds = t_count.elapsed().as_secs_f64();
     let counts1 = report.counts;
 
+    let t_prune = Instant::now();
     let frequent1: Vec<EventType> = cands1
         .iter()
         .zip(&counts1)
@@ -169,6 +226,17 @@ pub fn mine_with_backend(
             .filter(|(_, c)| *c >= opts.theta)
             .map(|(episode, count)| CountedEpisode { episode, count }),
     );
+    if profile {
+        level_profiles.push(LevelProfile {
+            level: 1,
+            generate_seconds: gen_seconds,
+            count_seconds,
+            prune_seconds: t_prune.elapsed().as_secs_f64(),
+            candidates: result.levels[0].candidates as u64,
+            blocks: 1,
+        });
+    }
+    drop(span1);
     if frequent1.is_empty() || opts.max_level == 1 {
         return Ok(result);
     }
@@ -184,6 +252,7 @@ pub fn mine_with_backend(
 
     let mut scratch = Episode { types: vec![], intervals: vec![] };
     for level in 2..=opts.max_level {
+        let lvl_span = root.child_fmt(|| format!("level {level}"));
         let top = arena.num_levels() - 1;
         let frontier: Vec<u32> = (0..arena.block_len(top) as u32).collect();
 
@@ -202,6 +271,9 @@ pub fn mine_with_backend(
 
         let mut gen_seconds = t_gen.elapsed().as_secs_f64();
         let mut count_seconds = 0.0f64;
+        let mut count_only_seconds = 0.0f64;
+        let mut prune_seconds = 0.0f64;
+        let mut blocks = 0u64;
         let mut culled = 0u64;
         let mut survivors = LevelBlock::default();
         let mut frequent: Vec<CountedEpisode> = vec![];
@@ -210,9 +282,14 @@ pub fn mine_with_backend(
             gen_seconds += t_mark.elapsed().as_secs_f64();
             let t_chunk = Instant::now();
             let batch = EpisodeBatch::new(&arena, chunk);
-            let rep = backend.count_batch(&batch, &dense_stream)?;
+            let rep = {
+                let _block_span = lvl_span.child("count block");
+                backend.count_batch(&batch, &dense_stream)?
+            };
             metrics.merge(&rep.metrics);
             culled += rep.culled;
+            count_only_seconds += t_chunk.elapsed().as_secs_f64();
+            let t_prune = Instant::now();
             for (i, &c) in rep.counts.iter().enumerate() {
                 if c >= opts.theta {
                     survivors.push(
@@ -227,6 +304,10 @@ pub fn mine_with_backend(
                     frequent.push(CountedEpisode { episode, count: c });
                 }
             }
+            prune_seconds += t_prune.elapsed().as_secs_f64();
+            blocks += 1;
+            // LevelReport keeps its historical semantics: count time is
+            // the whole per-chunk backend+prune stretch
             count_seconds += t_chunk.elapsed().as_secs_f64();
             t_mark = Instant::now();
             Ok(())
@@ -242,6 +323,16 @@ pub fn mine_with_backend(
             gen_seconds,
         });
         result.frequent.append(&mut frequent);
+        if profile {
+            level_profiles.push(LevelProfile {
+                level,
+                generate_seconds: gen_seconds,
+                count_seconds: count_only_seconds,
+                prune_seconds,
+                candidates: total as u64,
+                blocks,
+            });
+        }
         if n_frequent == 0 {
             break;
         }
@@ -292,6 +383,7 @@ pub struct Session {
     stream: EventStream,
     opts: MineOptions,
     metrics: Metrics,
+    profile: bool,
 }
 
 impl Session {
@@ -301,7 +393,22 @@ impl Session {
 
     /// Run the full level-wise mining loop over the session's stream.
     pub fn mine(&mut self) -> Result<MineResult, MineError> {
-        mine_with_backend(&mut *self.backend, &self.stream, &self.opts, &mut self.metrics)
+        self.mine_traced(&Trace::off())
+    }
+
+    /// [`Session::mine`] recording spans onto a caller-supplied
+    /// [`Trace`] (per-level + per-count-block), e.g. the CLI's
+    /// `--trace-out` export. With the default disabled trace this is
+    /// exactly [`Session::mine`].
+    pub fn mine_traced(&mut self, trace: &Trace) -> Result<MineResult, MineError> {
+        mine_with_backend_obs(
+            &mut *self.backend,
+            &self.stream,
+            &self.opts,
+            &mut self.metrics,
+            trace,
+            self.profile,
+        )
     }
 
     /// Count explicit episodes over the session's stream (sizes may mix).
@@ -438,6 +545,7 @@ pub struct SessionBuilder {
     max_candidates_per_level: usize,
     candidate_block: usize,
     cpu_threads: usize,
+    profile: bool,
 }
 
 impl Default for SessionBuilder {
@@ -455,6 +563,7 @@ impl Default for SessionBuilder {
             max_candidates_per_level: 2_000_000,
             candidate_block: DEFAULT_CANDIDATE_BLOCK,
             cpu_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            profile: false,
         }
     }
 }
@@ -554,6 +663,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach an [`obs::MineProfile`](crate::obs::MineProfile) phase
+    /// breakdown (per-level generate/count/prune wall time and work
+    /// volumes) to every [`MineResult`] this session produces (default
+    /// off — the profile costs a handful of clock reads per block).
+    pub fn profile(mut self, enabled: bool) -> Self {
+        self.profile = enabled;
+        self
+    }
+
     pub fn build(self) -> Result<Session, MineError> {
         let SessionBuilder {
             stream,
@@ -568,6 +686,7 @@ impl SessionBuilder {
             max_candidates_per_level,
             candidate_block,
             cpu_threads,
+            profile,
         } = self;
 
         let theta = theta
@@ -635,7 +754,7 @@ impl SessionBuilder {
             }
         };
 
-        Ok(Session { backend, stream, opts, metrics: Metrics::default() })
+        Ok(Session { backend, stream, opts, metrics: Metrics::default(), profile })
     }
 }
 
@@ -758,6 +877,62 @@ mod tests {
         assert_eq!(session.backend_name(), "two-pass(cpu-sharded)");
         let result = session.mine().unwrap();
         assert!(!result.frequent.is_empty());
+    }
+
+    #[test]
+    fn profile_attaches_phase_breakdown() {
+        let build = |profile: bool| {
+            Session::builder()
+                .stream(tiny_stream())
+                .theta(1)
+                .interval(Interval::new(0, 10))
+                .strategy(Strategy::CpuSerial)
+                .max_level(3)
+                .profile(profile)
+                .build()
+                .unwrap()
+        };
+
+        // default: no profile, identical results
+        let plain = build(false).mine().unwrap();
+        assert!(plain.profile.is_none());
+
+        let mut session = build(true);
+        let result = session.mine().unwrap();
+        let prof = result.profile.as_ref().expect("profile requested");
+        assert_eq!(prof.levels.len(), result.levels.len());
+        assert_eq!(
+            prof.candidate_rows,
+            result.levels.iter().map(|l| l.candidates as u64).sum::<u64>()
+        );
+        assert!(prof.blocks_streamed >= prof.levels.len() as u64);
+        assert!(prof.total_seconds >= 0.0);
+        // the mining answer itself is byte-identical
+        assert_eq!(result.frequent.len(), plain.frequent.len());
+    }
+
+    #[test]
+    fn mine_traced_records_per_level_spans() {
+        let mut session = Session::builder()
+            .stream(tiny_stream())
+            .theta(1)
+            .interval(Interval::new(0, 10))
+            .strategy(Strategy::CpuSerial)
+            .max_level(3)
+            .build()
+            .unwrap();
+        let trace = crate::obs::Trace::started();
+        let result = session.mine_traced(&trace).unwrap();
+        let spans = trace.snapshot();
+        let mine = spans.iter().find(|s| s.name == "mine").expect("root span");
+        for report in &result.levels {
+            let name = format!("level {}", report.level);
+            let lvl = spans
+                .iter()
+                .find(|s| s.name == name.as_str())
+                .unwrap_or_else(|| panic!("missing span {name}"));
+            assert_eq!(lvl.parent, mine.id);
+        }
     }
 
     #[test]

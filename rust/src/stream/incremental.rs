@@ -50,6 +50,7 @@ use crate::episodes::{CountedEpisode, Episode, Interval};
 use crate::error::MineError;
 use crate::events::{EventStream, EventType, Tick};
 use crate::mining::serial;
+use crate::obs::Trace;
 use crate::session::{MineOptions, DEFAULT_CANDIDATE_BLOCK};
 
 use super::diff::{CommitStats, CommitUpdate, FrequentDiff};
@@ -221,10 +222,24 @@ impl IncrementalMiner {
     /// the previous segment's last tick — the same contiguity the ingest
     /// log guarantees for sealed segments.
     pub fn push_segment(&mut self, seg: EventStream) -> Result<CommitUpdate, MineError> {
+        self.push_segment_traced(seg, &Trace::off())
+    }
+
+    /// [`push_segment`](IncrementalMiner::push_segment) with span
+    /// recording: a live `trace` gets one `commit` root span with the
+    /// commit's phases (structural window update, tracked-tuple refresh,
+    /// level-wise cascade, diff/publish) as children.
+    pub fn push_segment_traced(
+        &mut self,
+        seg: EventStream,
+        trace: &Trace,
+    ) -> Result<CommitUpdate, MineError> {
         self.validate_segment(&seg)?;
+        let root = trace.span_fmt(|| format!("commit {}", self.commit_seq + 1));
         let mut stats = CommitStats { events_added: seg.len(), ..CommitStats::default() };
 
         // -- structural update: append, then retire expired prefix segments
+        let structural_span = root.child("structural");
         let old_end = self.taus.last().copied();
         let hist = seg.type_counts();
         for (ty, c) in hist.iter().enumerate() {
@@ -253,8 +268,10 @@ impl IncrementalMiner {
             self.taus[0] = self.segs.front().unwrap().stream.t_begin() - 1;
         }
         stats.segments_retired = segments_retired;
+        drop(structural_span);
 
         // -- refresh the cached tuples of every tracked episode
+        let tuples_span = root.child("tuples");
         let window_len: usize = self.segs.iter().map(|s| s.stream.len()).sum();
         let mut window_cache: Option<EventStream> = None;
         let partitions = self.taus.len() - 1;
@@ -287,9 +304,12 @@ impl IncrementalMiner {
             );
         }
 
+        drop(tuples_span);
+
         // -- level-wise cascade, candidate generation gated on frontier
         //    movement (mirrors session::mine_with_backend exactly: break
         //    on empty candidates/frontier, explosion guardrail intact)
+        let cascade_span = root.child("cascade");
         let mut frequent: Vec<CountedEpisode> = vec![];
         let mut frontier_refs: Vec<u32> = vec![];
         let mut active: HashSet<Episode> = HashSet::new();
@@ -405,8 +425,10 @@ impl IncrementalMiner {
         self.cached_frontiers.truncate(levels_reached.saturating_sub(1));
         self.tracked.retain(|ep, _| active.contains(ep));
         stats.tracked_episodes = self.tracked.len();
+        drop(cascade_span);
 
         // -- commit: diff against the previous frequent set and publish
+        let _publish_span = root.child("publish");
         let frequent = Arc::new(frequent);
         let diff = FrequentDiff::between(&self.frequent, &frequent);
         self.frequent = Arc::clone(&frequent);

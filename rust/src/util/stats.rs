@@ -14,18 +14,41 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize a sample. Pinned semantics (registry histograms and
+    /// latency windows feed arbitrary runtime data through here, so the
+    /// edge cases are contracts, not accidents):
+    ///
+    /// - **Non-finite samples are skipped**, and `n` counts only the
+    ///   finite ones — a stray NaN/∞ can never poison the percentiles
+    ///   or turn the sort into a panic.
+    /// - **Panics** when no finite sample remains (use [`Summary::of_opt`]
+    ///   where "nothing measured yet" is a legal state).
+    /// - **Tiny samples degrade linearly**: n = 1 reports the sample for
+    ///   every statistic (stddev 0); n ≥ 2 linearly interpolates
+    ///   percentiles over rank `pct/100 · (n−1)` (so with n = 2,
+    ///   p95 = lo + 0.95·(hi−lo); with n = 3 the median is the middle
+    ///   sample exactly).
     pub fn of(samples: &[f64]) -> Summary {
-        assert!(!samples.is_empty(), "empty sample");
-        let n = samples.len();
-        let mean = samples.iter().sum::<f64>() / n as f64;
+        Summary::of_opt(samples).expect("Summary::of needs at least one finite sample")
+    }
+
+    /// [`Summary::of`], tolerating an empty (or all-non-finite) sample
+    /// (`None`) — the shape a metrics snapshot wants when nothing has
+    /// been measured yet.
+    pub fn of_opt(samples: &[f64]) -> Option<Summary> {
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        if sorted.is_empty() {
+            return None;
+        }
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite samples are totally ordered"));
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
-            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
         } else {
             0.0
         };
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Summary {
+        Some(Summary {
             n,
             mean,
             median: percentile_sorted(&sorted, 50.0),
@@ -34,17 +57,7 @@ impl Summary {
             max: sorted[n - 1],
             p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
-        }
-    }
-
-    /// [`Summary::of`], tolerating an empty sample (`None`) — the shape a
-    /// metrics snapshot wants when nothing has been measured yet.
-    pub fn of_opt(samples: &[f64]) -> Option<Summary> {
-        if samples.is_empty() {
-            None
-        } else {
-            Some(Summary::of(samples))
-        }
+        })
     }
 }
 
@@ -109,6 +122,45 @@ mod tests {
     fn of_opt_handles_empty() {
         assert!(Summary::of_opt(&[]).is_none());
         assert_eq!(Summary::of_opt(&[2.0]).unwrap().p99, 2.0);
+    }
+
+    #[test]
+    fn tiny_samples_have_pinned_percentiles() {
+        // n = 1: every statistic is the sample itself
+        let s = Summary::of(&[7.5]);
+        assert_eq!((s.n, s.mean, s.median, s.min, s.max, s.p95, s.p99), (1, 7.5, 7.5, 7.5, 7.5, 7.5, 7.5));
+        assert_eq!(s.stddev, 0.0);
+
+        // n = 2: percentiles interpolate over rank pct/100 * 1
+        let s = Summary::of(&[10.0, 20.0]);
+        assert_eq!(s.median, 15.0);
+        assert!((s.p95 - 19.5).abs() < 1e-9, "{}", s.p95);
+        assert!((s.p99 - 19.9).abs() < 1e-9, "{}", s.p99);
+        assert_eq!((s.min, s.max), (10.0, 20.0));
+
+        // n = 3: median is the middle sample exactly; p95 interpolates
+        // between the top two at rank 1.9
+        let s = Summary::of(&[1.0, 2.0, 4.0]);
+        assert_eq!(s.median, 2.0);
+        assert!((s.p95 - (2.0 * 0.1 + 4.0 * 0.9)).abs() < 1e-9, "{}", s.p95);
+
+        // order of arrival never matters
+        assert_eq!(Summary::of(&[4.0, 1.0, 2.0]), Summary::of(&[1.0, 2.0, 4.0]));
+    }
+
+    #[test]
+    fn non_finite_samples_are_skipped_not_poisonous() {
+        // NaN/∞ are dropped; n counts finite samples only
+        let s = Summary::of(&[f64::NAN, 1.0, f64::INFINITY, 3.0, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 2);
+        assert_eq!((s.min, s.max, s.median), (1.0, 3.0, 2.0));
+        assert!(s.mean.is_finite() && s.p99.is_finite());
+
+        // nothing finite left: of_opt is None, of panics
+        assert!(Summary::of_opt(&[f64::NAN, f64::INFINITY]).is_none());
+        let panicked =
+            std::panic::catch_unwind(|| Summary::of(&[f64::NAN])).is_err();
+        assert!(panicked, "Summary::of must panic when no finite sample remains");
     }
 
     #[test]

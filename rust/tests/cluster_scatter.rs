@@ -400,3 +400,75 @@ fn tcp_loopback_scatter_matches_single_process() {
     let m = miner.metrics();
     assert!(m.nodes.iter().any(|n| n.calls > 0), "tcp nodes must have served calls");
 }
+
+// ---------------------------------------------------------------------
+// Observability: one merged trace + phase profile across the cluster
+// ---------------------------------------------------------------------
+
+#[test]
+fn profiled_query_produces_one_merged_trace_across_four_nodes() {
+    use episodes_gpu::obs::Trace;
+    use episodes_gpu::util::json::Json;
+
+    let dir = build_log("trace", 1400, 180);
+    let log = SpikeLog::open(&dir).expect("open log");
+    let (t_from, t_to) = whole_range(&log);
+    let cluster = LocalCluster::start(&dir, 4, node_service()).expect("cluster");
+    let miner = ScatterMiner::connect(&dir, cluster.links(), ScatterConfig::default())
+        .expect("connect");
+
+    let trace = Trace::started();
+    let result = miner
+        .mine_traced(t_from, t_to, &opts(), true, "obs", &trace, true)
+        .expect("traced mine");
+
+    // instrumentation must not perturb the equality contract
+    assert_same("traced", &result, &reference(&log, t_from, t_to, true, usize::MAX));
+
+    // the phase profile rides on the result
+    let profile = result.profile.as_ref().expect("profile attached");
+    assert_eq!(profile.levels.len(), result.levels.len());
+    assert!(profile.shard_map_calls > 0, "cluster counting goes through shard map calls");
+
+    let spans = trace.snapshot();
+    let names: Vec<&str> = spans.iter().map(|s| s.name.as_ref()).collect();
+    assert!(names.contains(&"plan"), "coordinator plan span missing: {names:?}");
+    assert!(
+        names.iter().any(|n| n.starts_with("scatter ")),
+        "scatter root spans missing: {names:?}"
+    );
+    assert!(names.contains(&"merge"), "merge span missing: {names:?}");
+
+    // one grafted remote span tree per counting RPC, hung off that RPC's
+    // span and tagged with the peer name
+    let rpcs: Vec<_> = spans.iter().filter(|s| s.name.starts_with("rpc ")).collect();
+    assert!(!rpcs.is_empty(), "no rpc spans recorded");
+    let node_roots: Vec<_> = spans
+        .iter()
+        .filter(|s| s.name == "node.map_count" || s.name == "node.relaxed_count")
+        .collect();
+    assert_eq!(node_roots.len(), rpcs.len(), "one remote span tree per RPC");
+    for root in &node_roots {
+        assert!(
+            root.node.starts_with("local#"),
+            "grafted span must carry the peer name, got {:?}",
+            root.node
+        );
+        assert!(
+            rpcs.iter().any(|r| r.id == root.parent),
+            "node span must hang off an rpc span"
+        );
+    }
+    // with 8 segments round-robined over 4 nodes, every peer counts
+    let peers: std::collections::HashSet<&str> =
+        node_roots.iter().map(|s| s.node.as_ref()).collect();
+    assert_eq!(peers.len(), 4, "expected counting spans from all 4 nodes: {peers:?}");
+
+    // text tree and lossless JSON export agree with the snapshot
+    let tree = trace.render_tree();
+    assert!(tree.contains("plan"), "{tree}");
+    assert!(tree.contains("@local#"), "{tree}");
+    let json = Json::parse(&trace.to_json().render()).expect("trace json parses");
+    let exported = json.get("spans").and_then(Json::as_arr).expect("spans array").len();
+    assert_eq!(exported, spans.len(), "JSON export is lossless");
+}

@@ -1,0 +1,64 @@
+//! Pins the obs cost model: recording spans on a *disabled* trace is
+//! zero-allocation (and `_fmt` name closures never run), so the mining
+//! hot loop can be instrumented unconditionally without perturbing the
+//! profiling-off bench baselines.
+//!
+//! The whole file is one test so the counting allocator sees no
+//! concurrent test threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use episodes_gpu::obs::Trace;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: delegates to System; the counter is a relaxed atomic.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_trace_span_recording_is_zero_allocation() {
+    let trace = Trace::off();
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..1_000 {
+        let root = trace.span("root");
+        let child = root.child("child");
+        // the name closures must not run on the disabled path — if one
+        // did, its format!/to_string would show up in the counter
+        let fmt_child = root.child_fmt(|| format!("level {}", 42));
+        let fmt_root = trace.span_fmt(|| "computed".to_string());
+        drop(fmt_root);
+        drop(fmt_child);
+        drop(child);
+    }
+    let allocated = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(allocated, 0, "disabled tracing allocated {allocated} times");
+
+    // sanity: the counter itself works (an enabled trace does allocate)
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let on = Trace::started();
+    {
+        let _s = on.span("root");
+    }
+    assert!(ALLOCS.load(Ordering::Relaxed) > before, "counting allocator is dead");
+}
