@@ -1,0 +1,11 @@
+//! Connectivity-inference fan-out (serial surrogate loop vs the batched
+//! executor) and significance scoring — registered as the `connectivity`
+//! suite in `episodes_gpu::bench`. The suite body lives in
+//! `src/bench/suites/connectivity.rs`.
+//!
+//! Run: `cargo bench --bench connectivity
+//!        [-- --smoke] [--json-out <dir>] [--check <baseline.json|dir>]`
+
+fn main() {
+    episodes_gpu::bench::cli::bench_binary_main("connectivity")
+}

@@ -1,0 +1,195 @@
+//! Batched multi-mine executor: N independent streams, one query config,
+//! fanned across thread-local engines.
+//!
+//! This is the substrate the connectivity pipeline's `1 + n_surrogates`
+//! fan-out runs on (and the shape ROADMAP item 2's batched device
+//! dispatch needs: many mines of the same query config are exactly what
+//! the MapConcatenate mapping batches onto one device launch). The
+//! executor mirrors how `serve/`'s worker pool runs engines — each worker
+//! thread builds **one** engine via [`session::engine_for`] and reuses it
+//! across every job it claims, instead of paying engine construction per
+//! mine the way a naive serial re-mine loop would — and every job funnels
+//! through the single [`session::dispatch_mine`] dispatch point, which is
+//! where the profile-driven CPU-vs-device crossover will later plug in.
+//!
+//! Determinism: jobs are claimed from a shared index and results are
+//! stored back by index, so the output order (and content — engines are
+//! deterministic and carry no state across mines) is independent of
+//! thread scheduling. `parallelism = 1` degenerates to the serial
+//! reference loop; `tests/connectivity.rs` pins batched == serial.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::{MineResult, Strategy};
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::obs::Trace;
+use crate::session::{self, MineOptions};
+
+/// How the executor builds and spreads its engines.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// counting strategy for every engine (accelerated strategies open a
+    /// thread-local runtime per worker)
+    pub strategy: Strategy,
+    /// two-pass A2+A1 elimination, as in `SessionBuilder::two_pass`
+    pub two_pass: bool,
+    /// engine-internal threads (the sharded backend's shard count)
+    pub cpu_threads: usize,
+    /// executor fan-out: worker threads each holding one engine.
+    /// `1` is the serial reference loop the equivalence tests compare
+    /// against; `0` is treated as `1`.
+    pub parallelism: usize,
+    /// attach a `MineProfile` to every job's result
+    pub profile: bool,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig {
+            strategy: Strategy::CpuParallel,
+            two_pass: true,
+            cpu_threads: 1,
+            parallelism: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            profile: false,
+        }
+    }
+}
+
+/// Mine every stream in `jobs` under the same `opts`, returning results
+/// in job order. Fails with the lowest-index job error if any job fails
+/// (the same error a serial loop would surface first).
+pub fn mine_batch(
+    jobs: &[&EventStream],
+    opts: &MineOptions,
+    cfg: &BatchConfig,
+    trace: &Trace,
+) -> Result<Vec<MineResult>, MineError> {
+    opts.validate()?;
+    if jobs.is_empty() {
+        return Ok(vec![]);
+    }
+    let workers = cfg.parallelism.max(1).min(jobs.len());
+    let span = trace.span_fmt(|| format!("batch mine ({} jobs, {workers} workers)", jobs.len()));
+
+    if workers == 1 {
+        // serial reference loop: one engine, one job at a time
+        let mut engine =
+            session::engine_for(cfg.strategy, None, cfg.two_pass, opts.theta, cfg.cpu_threads)?;
+        let mut out = Vec::with_capacity(jobs.len());
+        for (i, stream) in jobs.iter().enumerate() {
+            let job_span = span.child_fmt(|| format!("job {i}"));
+            let r = session::dispatch_mine(engine.as_mut(), stream, opts, trace, cfg.profile);
+            drop(job_span);
+            out.push(r?);
+        }
+        return Ok(out);
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<MineResult, MineError>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+    let engine_errors: Mutex<Vec<MineError>> = Mutex::new(vec![]);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                // one engine per worker, reused across every claimed job
+                // (the thread-local-engine pattern serve/'s pool uses)
+                let mut engine = match session::engine_for(
+                    cfg.strategy,
+                    None,
+                    cfg.two_pass,
+                    opts.theta,
+                    cfg.cpu_threads,
+                ) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        engine_errors.lock().unwrap_or_else(|p| p.into_inner()).push(e);
+                        return;
+                    }
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        return;
+                    }
+                    let job_span = span.child_fmt(|| format!("job {i}"));
+                    let r = session::dispatch_mine(
+                        engine.as_mut(),
+                        jobs[i],
+                        opts,
+                        trace,
+                        cfg.profile,
+                    );
+                    drop(job_span);
+                    *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
+                }
+            });
+        }
+    });
+
+    let mut out = Vec::with_capacity(jobs.len());
+    for slot in slots {
+        match slot.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(e)) => return Err(e),
+            // every worker's engine failed to build before this job ran
+            None => {
+                let mut errs = engine_errors.into_inner().unwrap_or_else(|p| p.into_inner());
+                return Err(errs.pop().unwrap_or_else(|| {
+                    MineError::internal("batch job never ran and no engine error was recorded")
+                }));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sym26::{self, Sym26Config};
+    use crate::episodes::Interval;
+
+    fn opts() -> MineOptions {
+        MineOptions {
+            theta: 10,
+            intervals: vec![Interval::new(5, 15)],
+            max_level: 3,
+            max_candidates_per_level: 2_000_000,
+            candidate_block: crate::session::DEFAULT_CANDIDATE_BLOCK,
+        }
+    }
+
+    #[test]
+    fn batched_matches_serial_loop() {
+        let cfg = Sym26Config { duration_ms: 4_000, ..Sym26Config::default() };
+        let streams: Vec<EventStream> =
+            (0..5).map(|s| sym26::generate(&cfg, 100 + s)).collect();
+        let jobs: Vec<&EventStream> = streams.iter().collect();
+        let serial = BatchConfig { parallelism: 1, ..BatchConfig::default() };
+        let batched = BatchConfig { parallelism: 4, ..BatchConfig::default() };
+        let a = mine_batch(&jobs, &opts(), &serial, &Trace::off()).unwrap();
+        let b = mine_batch(&jobs, &opts(), &batched, &Trace::off()).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.frequent, y.frequent);
+        }
+    }
+
+    #[test]
+    fn empty_job_list() {
+        let cfg = BatchConfig::default();
+        assert!(mine_batch(&[], &opts(), &cfg, &Trace::off()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn invalid_options_rejected_up_front() {
+        let cfg = BatchConfig::default();
+        let bad = MineOptions { theta: 0, ..opts() };
+        let s = sym26::generate(&Sym26Config { duration_ms: 1_000, ..Sym26Config::default() }, 1);
+        assert!(mine_batch(&[&s], &bad, &cfg, &Trace::off()).is_err());
+    }
+}

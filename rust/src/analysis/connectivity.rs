@@ -1,61 +1,142 @@
 //! Functional-connectivity reconstruction from mined episodes (paper
-//! Fig. 1 right-to-left arrow; the end product of chip-on-chip mining).
+//! Fig. 1; arXiv:0709.0218's screen, arXiv:0902.3725's statistics).
 //!
-//! Every adjacent pair inside a frequent episode is evidence for a
-//! directed functional edge A -> B with the episode's inter-event delay.
-//! Edges are scored by the maximum support among the episodes that
-//! contain them; the reconstructed graph is compared against a generator
-//! ground truth with precision/recall.
+//! Pipeline (`infer_connectivity`):
+//!
+//! ```text
+//!   real stream ──┬────────────────────────── mine ──┐
+//!                 │ jitter ×N (surrogate.rs)         │ score (significance.rs)
+//!                 └─ surrogate streams ── mine ×N ───┴─→ p / excess per episode
+//!                        (batch.rs fan-out)               │
+//!                                                         ▼
+//!                                    Circuit: edges ranked by significance
+//! ```
+//!
+//! An edge `A → B` is putative connectivity evidence: some significant
+//! episode walks `A` then `B` under an inter-event delay band. The
+//! seed-era reconstruction ranked edges by raw max support, which
+//! conflates firing rate with timing structure — two fast-firing
+//! neurons coincide often by chance alone. Ranking by surrogate-null
+//! significance (p ascending, excess descending) keeps only edges whose
+//! delay structure survives jitter; [`Circuit::from_support`] preserves
+//! the old support-max behaviour for callers that have no null model
+//! (e.g. `epminer reconstruct`).
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 
+use crate::analysis::batch::{self, BatchConfig};
+use crate::analysis::significance::{self, SignificanceReport};
+use crate::analysis::surrogate;
+use crate::coordinator::MineResult;
 use crate::episodes::{CountedEpisode, Episode};
-use crate::events::EventType;
+use crate::error::MineError;
+use crate::events::{EventStream, EventType, Tick};
+use crate::obs::Trace;
+use crate::session::MineOptions;
 
-/// A directed functional edge with its evidence.
+/// A putative connection, with the best evidence seen for it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Edge {
     pub from: EventType,
     pub to: EventType,
-    /// strongest support among episodes containing this edge
+    /// support of the strongest episode asserting this edge
     pub support: u64,
-    /// delay bounds of the supporting constraint
-    pub t_low: i32,
-    pub t_high: i32,
+    /// delay bounds of that episode's adjacent pair
+    pub t_low: Tick,
+    pub t_high: Tick,
+    /// significance of the best witnessing episode; `1.0` under
+    /// [`Circuit::from_support`], which carries no null model
+    pub p_value: f64,
+    /// excess count of that episode over the surrogate mean; `0.0`
+    /// under [`Circuit::from_support`]
+    pub excess: f64,
 }
 
-/// The reconstructed functional-connectivity graph.
-#[derive(Clone, Debug, Default)]
+/// The reconstructed putative circuit.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Circuit {
+    /// ranked most-credible first: significance order under
+    /// [`Circuit::reconstruct`], support order under
+    /// [`Circuit::from_support`]
     pub edges: Vec<Edge>,
 }
 
 impl Circuit {
-    /// Build from mined episodes: every adjacent pair contributes an edge
-    /// candidate; keep the strongest evidence per (from, to).
-    pub fn reconstruct(frequent: &[CountedEpisode]) -> Circuit {
-        let mut best: HashMap<(EventType, EventType), Edge> = HashMap::new();
-        for c in frequent {
-            let ep = &c.episode;
-            for i in 0..ep.n().saturating_sub(1) {
-                let key = (ep.types[i], ep.types[i + 1]);
-                let iv = &ep.intervals[i];
-                let e = best.entry(key).or_insert(Edge {
-                    from: key.0,
-                    to: key.1,
-                    support: 0,
-                    t_low: iv.t_low,
-                    t_high: iv.t_high,
-                });
-                if c.count > e.support {
-                    e.support = c.count;
-                    e.t_low = iv.t_low;
-                    e.t_high = iv.t_high;
+    /// Build the significance-ranked graph: every adjacent pair of every
+    /// scored episode asserts an edge, and each `(from, to)` keeps the
+    /// evidence of its most significant witness (lowest p, then largest
+    /// excess, then largest support).
+    pub fn reconstruct(report: &SignificanceReport) -> Circuit {
+        let mut edges: Vec<Edge> = vec![];
+        for s in &report.scores {
+            for i in 0..s.episode.n() - 1 {
+                let cand = Edge {
+                    from: s.episode.types[i],
+                    to: s.episode.types[i + 1],
+                    support: s.count,
+                    t_low: s.episode.intervals[i].t_low,
+                    t_high: s.episode.intervals[i].t_high,
+                    p_value: s.p_value,
+                    excess: s.excess,
+                };
+                match edges.iter_mut().find(|e| e.from == cand.from && e.to == cand.to) {
+                    None => edges.push(cand),
+                    Some(e) => {
+                        let better = cand
+                            .p_value
+                            .total_cmp(&e.p_value)
+                            .then(e.excess.total_cmp(&cand.excess))
+                            .then(e.support.cmp(&cand.support))
+                            .is_lt();
+                        if better {
+                            *e = cand;
+                        }
+                    }
                 }
             }
         }
-        let mut edges: Vec<Edge> = best.into_values().collect();
-        edges.sort_by_key(|e| (std::cmp::Reverse(e.support), e.from, e.to));
+        edges.sort_by(|a, b| {
+            a.p_value
+                .total_cmp(&b.p_value)
+                .then(b.excess.total_cmp(&a.excess))
+                .then(b.support.cmp(&a.support))
+                .then(a.from.cmp(&b.from))
+                .then(a.to.cmp(&b.to))
+        });
+        Circuit { edges }
+    }
+
+    /// The pre-0.3 reconstruction: max support per adjacent pair, no
+    /// null model (`p_value = 1.0`, `excess = 0.0`), ranked by support.
+    pub fn from_support(frequent: &[CountedEpisode]) -> Circuit {
+        let mut edges: Vec<Edge> = vec![];
+        for c in frequent {
+            for i in 0..c.episode.n().saturating_sub(1) {
+                let (from, to) = (c.episode.types[i], c.episode.types[i + 1]);
+                let iv = c.episode.intervals[i];
+                match edges.iter_mut().find(|e| e.from == from && e.to == to) {
+                    None => edges.push(Edge {
+                        from,
+                        to,
+                        support: c.count,
+                        t_low: iv.t_low,
+                        t_high: iv.t_high,
+                        p_value: 1.0,
+                        excess: 0.0,
+                    }),
+                    Some(e) => {
+                        if c.count > e.support {
+                            e.support = c.count;
+                            e.t_low = iv.t_low;
+                            e.t_high = iv.t_high;
+                        }
+                    }
+                }
+            }
+        }
+        edges.sort_by(|a, b| {
+            b.support.cmp(&a.support).then(a.from.cmp(&b.from)).then(a.to.cmp(&b.to))
+        });
         Circuit { edges }
     }
 
@@ -66,41 +147,45 @@ impl Circuit {
         }
     }
 
+    /// Edges at or below `max_p` (meaningful only for significance-
+    /// ranked circuits; [`Circuit::from_support`] edges all carry
+    /// `p = 1.0`).
+    pub fn significant(&self, max_p: f64) -> Circuit {
+        Circuit {
+            edges: self.edges.iter().filter(|e| e.p_value <= max_p).cloned().collect(),
+        }
+    }
+
     pub fn contains(&self, from: EventType, to: EventType) -> bool {
         self.edges.iter().any(|e| e.from == from && e.to == to)
     }
 
     /// Precision/recall against ground-truth chains (the generator's
-    /// embedded circuits).
+    /// embedded circuits — see `datasets::ground_truth`).
     pub fn score(&self, truth_chains: &[Episode]) -> Score {
-        let mut truth: Vec<(EventType, EventType)> = vec![];
-        for ch in truth_chains {
-            for w in ch.types.windows(2) {
-                truth.push((w[0], w[1]));
-            }
-        }
-        truth.sort_unstable();
-        truth.dedup();
-        let tp = self
-            .edges
+        let actual: HashSet<(EventType, EventType)> = truth_chains
             .iter()
-            .filter(|e| truth.contains(&(e.from, e.to)))
-            .count();
+            .flat_map(|ch| ch.types.windows(2).map(|w| (w[0], w[1])))
+            .collect();
+        let predicted: HashSet<(EventType, EventType)> =
+            self.edges.iter().map(|e| (e.from, e.to)).collect();
         Score {
-            true_positives: tp,
-            predicted: self.edges.len(),
-            actual: truth.len(),
+            true_positives: predicted.intersection(&actual).count(),
+            predicted: predicted.len(),
+            actual: actual.len(),
         }
     }
 
-    /// Graphviz dot rendering for the supplementary-style visuals.
+    /// Graphviz dot rendering; significance annotated when present.
     pub fn to_dot(&self) -> String {
         let mut s = String::from("digraph circuit {\n  rankdir=LR;\n");
         for e in &self.edges {
-            s.push_str(&format!(
-                "  n{} -> n{} [label=\"{} ({},{}]\"];\n",
-                e.from, e.to, e.support, e.t_low, e.t_high
-            ));
+            let label = if e.p_value < 1.0 {
+                format!("p={:.3} +{:.1} ({}x)", e.p_value, e.excess, e.support)
+            } else {
+                format!("{} ({},{}]", e.support, e.t_low, e.t_high)
+            };
+            s.push_str(&format!("  n{} -> n{} [label=\"{label}\"];\n", e.from, e.to));
         }
         s.push_str("}\n");
         s
@@ -138,34 +223,128 @@ impl Score {
     }
 }
 
+/// The connectivity pipeline's knobs on top of one mine config.
+#[derive(Clone, Debug)]
+pub struct ConnectivityConfig {
+    /// null-model sample size; the p-value floor is `1/(n+1)`
+    pub n_surrogates: usize,
+    /// jitter half-width in ticks — pick it on the order of the delay
+    /// band it is meant to destroy
+    pub jitter: Tick,
+    /// surrogate RNG seed; the whole pipeline is deterministic under it
+    pub seed: u64,
+    /// how the `1 + n_surrogates` mines execute
+    pub batch: BatchConfig,
+}
+
+/// Everything one connectivity query produces.
+#[derive(Clone, Debug)]
+pub struct ConnectivityResult {
+    /// the real stream's mine (profile attached when requested)
+    pub base: MineResult,
+    /// per-episode significance, ranked
+    pub report: SignificanceReport,
+    /// the ranked putative-connection graph
+    pub circuit: Circuit,
+}
+
+/// Run the full pipeline: mine the real stream and `n_surrogates`
+/// jittered nulls through the batched executor, score, reconstruct.
+/// Deterministic under `(stream, opts, n_surrogates, jitter, seed)` and
+/// independent of `batch.parallelism` (pinned in `tests/connectivity.rs`).
+pub fn infer_connectivity(
+    stream: &EventStream,
+    opts: &MineOptions,
+    cfg: &ConnectivityConfig,
+    trace: &Trace,
+) -> Result<ConnectivityResult, MineError> {
+    surrogate::validate(cfg.n_surrogates, cfg.jitter)?;
+    opts.validate()?;
+    let root = trace.span("connectivity");
+
+    let surr_streams = {
+        let _g = root.child("surrogate gen");
+        surrogate::surrogates(stream, cfg.n_surrogates, cfg.jitter, cfg.seed)?
+    };
+
+    // job 0 is the real stream; the executor's span tree records the
+    // fan-out shape
+    let mut jobs: Vec<&EventStream> = Vec::with_capacity(1 + surr_streams.len());
+    jobs.push(stream);
+    jobs.extend(surr_streams.iter());
+    let mut results = batch::mine_batch(&jobs, opts, &cfg.batch, trace)?;
+
+    let base = results.remove(0);
+    let _g = root.child("score");
+    let report = significance::score_against_surrogates(&base, &results);
+    let circuit = Circuit::reconstruct(&report);
+    Ok(ConnectivityResult { base, report, circuit })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::significance::EpisodeScore;
     use crate::episodes::Interval;
 
-    fn counted(types: Vec<i32>, count: u64) -> CountedEpisode {
-        let iv = Interval::new(2, 10);
-        let n = types.len();
-        CountedEpisode { episode: Episode::new(types, vec![iv; n - 1]), count }
+    fn ep(types: &[EventType]) -> Episode {
+        Episode::new(types.to_vec(), vec![Interval::new(2, 10); types.len() - 1])
+    }
+
+    fn counted(types: &[EventType], count: u64) -> CountedEpisode {
+        CountedEpisode { episode: ep(types), count }
+    }
+
+    fn scored(types: &[EventType], count: u64, p: f64, excess: f64) -> EpisodeScore {
+        EpisodeScore {
+            episode: ep(types),
+            count,
+            null_mean: count as f64 - excess,
+            null_max: 0,
+            p_value: p,
+            excess,
+        }
     }
 
     #[test]
-    fn reconstruct_takes_max_support_per_edge() {
-        let c = Circuit::reconstruct(&[
-            counted(vec![0, 1], 5),
-            counted(vec![0, 1, 2], 9),
-            counted(vec![1, 2], 3),
+    fn from_support_takes_max_support_per_edge() {
+        let c = Circuit::from_support(&[
+            counted(&[0, 1], 5),
+            counted(&[0, 1, 2], 9),
+            counted(&[1, 2], 3),
         ]);
         let e01 = c.edges.iter().find(|e| e.from == 0 && e.to == 1).unwrap();
         assert_eq!(e01.support, 9);
+        assert_eq!(e01.p_value, 1.0);
         let e12 = c.edges.iter().find(|e| e.from == 1 && e.to == 2).unwrap();
         assert_eq!(e12.support, 9);
         assert_eq!(c.edges.len(), 2);
     }
 
     #[test]
+    fn reconstruct_ranks_by_significance_not_support() {
+        let rep = SignificanceReport {
+            scores: vec![
+                scored(&[4, 5], 30, 0.1, 25.0), // significant, modest support
+                scored(&[1, 2], 90, 0.8, 2.0),  // busy but explained by rate
+                scored(&[4, 5, 6], 20, 0.1, 18.0), // ties 4->5's p, less excess
+            ],
+            n_surrogates: 9,
+        };
+        let c = Circuit::reconstruct(&rep);
+        assert_eq!((c.edges[0].from, c.edges[0].to), (4, 5));
+        // best witness for 4->5 is the pair episode, not the triple
+        assert_eq!(c.edges[0].support, 30);
+        assert_eq!(c.edges[0].excess, 25.0);
+        // the high-support, high-p edge ranks last
+        let last = c.edges.last().unwrap();
+        assert_eq!((last.from, last.to), (1, 2));
+        assert_eq!(c.significant(0.5).edges.len(), 2);
+    }
+
+    #[test]
     fn threshold_filters() {
-        let c = Circuit::reconstruct(&[counted(vec![0, 1], 5), counted(vec![2, 3], 50)]);
+        let c = Circuit::from_support(&[counted(&[0, 1], 5), counted(&[2, 3], 50)]);
         let t = c.thresholded(10);
         assert_eq!(t.edges.len(), 1);
         assert!(t.contains(2, 3));
@@ -173,13 +352,10 @@ mod tests {
 
     #[test]
     fn score_precision_recall() {
-        let truth = vec![Episode::new(
-            vec![0, 1, 2],
-            vec![Interval::new(2, 10); 2],
-        )];
-        let c = Circuit::reconstruct(&[
-            counted(vec![0, 1], 5), // true edge
-            counted(vec![5, 6], 5), // false edge
+        let truth = vec![ep(&[0, 1, 2])];
+        let c = Circuit::from_support(&[
+            counted(&[0, 1], 5), // true edge
+            counted(&[5, 6], 5), // false edge
         ]);
         let s = c.score(&truth);
         assert_eq!(s.true_positives, 1);
@@ -192,9 +368,13 @@ mod tests {
 
     #[test]
     fn dot_output_contains_edges() {
-        let c = Circuit::reconstruct(&[counted(vec![3, 7], 12)]);
-        let dot = c.to_dot();
-        assert!(dot.contains("n3 -> n7"));
-        assert!(dot.contains("digraph"));
+        let sup = Circuit::from_support(&[counted(&[3, 7], 12)]);
+        assert!(sup.to_dot().contains("n3 -> n7"));
+        assert!(sup.to_dot().contains("digraph"));
+        let sig = Circuit::reconstruct(&SignificanceReport {
+            scores: vec![scored(&[3, 7], 12, 0.05, 11.0)],
+            n_surrogates: 19,
+        });
+        assert!(sig.to_dot().contains("p=0.050"));
     }
 }

@@ -2,7 +2,19 @@
 //! artifacts (paper Fig. 1: "frequent episodes ... summarized to
 //! reconstruct the underlying neuronal circuitry", §6.5 evolving
 //! cultures).
+//!
+//! Grown in 0.3 into a statistically-grounded connectivity pipeline
+//! (ROADMAP item 4): `surrogate` builds seeded jitter null models,
+//! `batch` fans `1 + n_surrogates` mines across thread-local engines,
+//! `significance` turns the surrogate count distribution into
+//! per-episode p-values and excess scores, and `connectivity` ranks the
+//! resulting putative-connection graph by significance instead of raw
+//! support. Served as the `connectivity` query type and the
+//! `epminer connectivity` subcommand.
 
+pub mod batch;
 pub mod connectivity;
-pub mod summarize;
 pub mod raster;
+pub mod significance;
+pub mod summarize;
+pub mod surrogate;

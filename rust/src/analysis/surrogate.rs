@@ -1,0 +1,145 @@
+//! Surrogate null models for significance testing (arXiv:0902.3725 §3).
+//!
+//! A surrogate stream answers "how often would this episode occur if the
+//! spike *timing* carried no information?" — it must preserve everything
+//! about the recording except the fine temporal structure the episodes
+//! measure. The generator here is spike-time **jitter** (dither): every
+//! event keeps its type but its time is displaced by a uniform draw from
+//! `[-jitter, +jitter]`, clamped into the original recording window.
+//! Firing rates, per-type counts, and the overall envelope survive;
+//! millisecond-scale causal delays (the `(t_low, t_high]` bands the miner
+//! screens for) are destroyed when `jitter` is on the order of the band.
+//!
+//! Determinism contract: surrogate `index` under `seed` is a pure
+//! function of `(stream, jitter, seed, index)` — independent of how many
+//! surrogates are generated, in what order, or on which thread. The
+//! batched executor and the serial reference loop therefore mine
+//! byte-identical inputs (pinned in `tests/connectivity.rs`).
+
+use crate::error::MineError;
+use crate::events::{EventStream, Tick};
+use crate::util::rng::Rng;
+
+/// Jitter every event's time by a uniform draw from `[-jitter, +jitter]`,
+/// clamped to the original window `[t_begin, t_end]`, then re-sort
+/// (stable, so simultaneous events keep a deterministic order).
+///
+/// Draws come from per-type forked RNG streams: event `k` of type `ty`
+/// consumes draw `k` of `rng.fork(ty)`, so the dither applied to one
+/// neuron's spikes does not depend on how other neurons interleave.
+pub fn jitter_stream(stream: &EventStream, jitter: Tick, mut rng: Rng) -> EventStream {
+    if stream.is_empty() {
+        return stream.clone();
+    }
+    let (lo, hi) = (stream.t_begin(), stream.t_end());
+    let mut per_type: Vec<Rng> =
+        (0..stream.n_types).map(|ty| rng.fork(ty as u64 + 1)).collect();
+    let mut pairs = Vec::with_capacity(stream.len());
+    for i in 0..stream.len() {
+        let ty = stream.types[i];
+        let d = per_type[ty as usize].range_i32(-jitter, jitter);
+        let t = stream.times[i].saturating_add(d).clamp(lo, hi);
+        pairs.push((ty, t));
+    }
+    EventStream::from_pairs(pairs, stream.n_types)
+}
+
+/// The RNG for surrogate `index` under `seed`: a fresh fork, so any
+/// surrogate can be regenerated in isolation (the executor's workers
+/// claim indices in arbitrary order).
+pub fn surrogate_rng(seed: u64, index: usize) -> Rng {
+    Rng::new(seed).fork(index as u64 + 1)
+}
+
+/// Surrogate `index` of `stream` under `seed`.
+pub fn surrogate(stream: &EventStream, jitter: Tick, seed: u64, index: usize) -> EventStream {
+    jitter_stream(stream, jitter, surrogate_rng(seed, index))
+}
+
+/// Generate surrogates `0..n`. Validates the knobs the way the serve/
+/// admission path does, so the CLI and the service reject the same
+/// configs.
+pub fn surrogates(
+    stream: &EventStream,
+    n: usize,
+    jitter: Tick,
+    seed: u64,
+) -> Result<Vec<EventStream>, MineError> {
+    validate(n, jitter)?;
+    Ok((0..n).map(|i| surrogate(stream, jitter, seed, i)).collect())
+}
+
+/// Shared knob validation (also used by `serve/`'s admission path).
+pub fn validate(n_surrogates: usize, jitter: Tick) -> Result<(), MineError> {
+    if n_surrogates == 0 {
+        return Err(MineError::invalid(
+            "n_surrogates must be >= 1 (empirical p-values need a null sample)",
+        ));
+    }
+    if jitter < 1 {
+        return Err(MineError::invalid(
+            "jitter must be >= 1 tick (a zero-jitter surrogate is the real stream)",
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::sym26::{self, Sym26Config};
+
+    fn small_stream() -> EventStream {
+        let cfg = Sym26Config { duration_ms: 5_000, ..Sym26Config::default() };
+        sym26::generate(&cfg, 7)
+    }
+
+    #[test]
+    fn same_seed_same_surrogate() {
+        let s = small_stream();
+        assert_eq!(surrogate(&s, 10, 42, 3), surrogate(&s, 10, 42, 3));
+        assert_ne!(surrogate(&s, 10, 42, 3), surrogate(&s, 10, 43, 3));
+        assert_ne!(surrogate(&s, 10, 42, 3), surrogate(&s, 10, 42, 4));
+    }
+
+    #[test]
+    fn index_is_order_independent() {
+        // surrogate k is the same whether generated alone or as part of a
+        // batch — the executor depends on this
+        let s = small_stream();
+        let batch = surrogates(&s, 5, 8, 11).unwrap();
+        for (i, surr) in batch.iter().enumerate() {
+            assert_eq!(*surr, surrogate(&s, 8, 11, i));
+        }
+    }
+
+    #[test]
+    fn preserves_counts_and_window() {
+        let s = small_stream();
+        let j = jitter_stream(&s, 25, Rng::new(9));
+        assert_eq!(j.len(), s.len());
+        assert_eq!(j.type_counts(), s.type_counts());
+        assert!(j.check_sorted());
+        assert!(j.t_begin() >= s.t_begin() && j.t_end() <= s.t_end());
+    }
+
+    #[test]
+    fn jitter_actually_moves_spikes() {
+        let s = small_stream();
+        let j = jitter_stream(&s, 10, Rng::new(9));
+        assert_ne!(s, j);
+    }
+
+    #[test]
+    fn empty_stream_is_fine() {
+        let s = EventStream::new(4);
+        assert_eq!(jitter_stream(&s, 10, Rng::new(1)).len(), 0);
+    }
+
+    #[test]
+    fn knob_validation() {
+        assert!(validate(0, 10).is_err());
+        assert!(validate(5, 0).is_err());
+        assert!(validate(1, 1).is_ok());
+    }
+}

@@ -111,6 +111,11 @@ pub const SUITES: &[SuiteDef] = &[
         description: "scatter-gather distributed mining vs single-process (cluster/)",
         run: suites::cluster_scatter::run,
     },
+    SuiteDef {
+        name: "connectivity",
+        description: "surrogate fan-out (serial loop vs batched executor) + significance scoring",
+        run: suites::connectivity::run,
+    },
 ];
 
 /// Look a suite up by name.
@@ -163,7 +168,7 @@ mod tests {
             assert!(!names[i + 1..].contains(n), "duplicate suite {n}");
             assert!(find(n).is_some());
         }
-        assert_eq!(SUITES.len(), 13, "every bench target registers exactly once");
+        assert_eq!(SUITES.len(), 14, "every bench target registers exactly once");
         assert!(find("nonexistent").is_none());
     }
 

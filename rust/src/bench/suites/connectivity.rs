@@ -1,0 +1,127 @@
+//! The connectivity pipeline's cost shape: the `1 + n_surrogates` mine
+//! fan-out (serial reference loop vs the batched executor) and the
+//! scoring/reconstruction tail.
+//!
+//! Before anything is timed, the batched pipeline's ranked output is
+//! checked identical to the serial loop's — the executor's whole claim
+//! is that parallelism is invisible in the result, and a fast divergent
+//! answer is not a benchmark. `fanout/serial_loop` re-mines every stream
+//! one at a time on one engine (the pre-batch baseline); `fanout/batched`
+//! spreads the same jobs across four thread-local engines.
+//! `score/pipeline` prices the statistics alone: p-values, excess counts
+//! and the significance-ranked circuit over already-mined results.
+
+use crate::analysis::batch::{self, BatchConfig};
+use crate::analysis::connectivity::{infer_connectivity, Circuit, ConnectivityConfig};
+use crate::analysis::significance;
+use crate::analysis::surrogate;
+use crate::coordinator::Strategy;
+use crate::datasets::{self, sym26::Sym26Config};
+use crate::error::MineError;
+use crate::events::EventStream;
+use crate::obs::Trace;
+use crate::session::{MineOptions, DEFAULT_CANDIDATE_BLOCK};
+
+use super::super::harness::{SuiteCtx, Work};
+
+pub fn run(ctx: &mut SuiteCtx) -> Result<(), MineError> {
+    // the planted sym26 variant the connectivity tests pin: quiet
+    // background, every chain link firing, so significance is unambiguous
+    let cfg = Sym26Config {
+        duration_ms: if ctx.smoke { 6_000 } else { 20_000 },
+        basal_hz: 5.0,
+        trigger_hz: 3.0,
+        link_prob: 1.0,
+        ..Sym26Config::default()
+    };
+    let stream = datasets::sym26::generate(&cfg, 0xC0);
+    let n_surrogates = if ctx.smoke { 4 } else { 9 };
+    let theta = if ctx.smoke { 8 } else { 20 };
+    let jitter = cfg.d_high;
+    let seed = 0x5EED;
+    let opts = MineOptions {
+        theta,
+        intervals: cfg.interval_set(),
+        max_level: 3,
+        max_candidates_per_level: 2_000_000,
+        candidate_block: DEFAULT_CANDIDATE_BLOCK,
+    };
+    let conn = |parallelism: usize| ConnectivityConfig {
+        n_surrogates,
+        jitter,
+        seed,
+        batch: BatchConfig {
+            strategy: Strategy::CpuParallel,
+            two_pass: true,
+            cpu_threads: 1,
+            parallelism,
+            profile: false,
+        },
+    };
+
+    // Exactness gate: batched fan-out must reproduce the serial loop's
+    // ranked graph byte for byte before its timings mean anything.
+    let serial = infer_connectivity(&stream, &opts, &conn(1), &Trace::off())?;
+    let batched = infer_connectivity(&stream, &opts, &conn(4), &Trace::off())?;
+    if serial.report != batched.report || serial.circuit != batched.circuit {
+        return Err(MineError::internal(format!(
+            "batched connectivity diverged from the serial loop: \
+             {} vs {} scored episodes, {} vs {} edges",
+            serial.report.scores.len(),
+            batched.report.scores.len(),
+            serial.circuit.edges.len(),
+            batched.circuit.edges.len()
+        )));
+    }
+    let truth = datasets::ground_truth("sym26").expect("sym26 embeds chains");
+    let floor = serial.report.p_floor();
+    let s = serial.circuit.significant(floor + 1e-9).score(&truth.chains);
+    ctx.note(format!(
+        "exactness gate: batched == serial ({} scored episodes, {} edges); \
+         p-floor recall {:.2} precision {:.2} over {} true edges",
+        serial.report.scores.len(),
+        serial.circuit.edges.len(),
+        s.recall(),
+        s.precision(),
+        s.actual
+    ));
+
+    let mines = (1 + n_surrogates) as u64;
+    let work = Work::items(mines, "mines").with_events(mines * stream.len() as u64);
+    ctx.measure("fanout/serial_loop", work, || {
+        infer_connectivity(&stream, &opts, &conn(1), &Trace::off())
+            .expect("serial pipeline")
+            .circuit
+            .edges
+            .len() as u64
+    });
+    ctx.measure("fanout/batched", work, || {
+        infer_connectivity(&stream, &opts, &conn(4), &Trace::off())
+            .expect("batched pipeline")
+            .circuit
+            .edges
+            .len() as u64
+    });
+    let s1 = ctx.median_ns("fanout/serial_loop").unwrap_or(f64::MAX);
+    let s4 = ctx.median_ns("fanout/batched").unwrap_or(f64::MAX);
+    ctx.note(format!(
+        "fan-out: batched {:.1}ms vs serial loop {:.1}ms ({:.2}x) over {mines} mines",
+        s4 / 1e6,
+        s1 / 1e6,
+        s1 / s4
+    ));
+
+    // the statistics tail alone, over pre-mined results
+    let surr_streams = surrogate::surrogates(&stream, n_surrogates, jitter, seed)?;
+    let mut jobs: Vec<&EventStream> = vec![&stream];
+    jobs.extend(surr_streams.iter());
+    let mut mined = batch::mine_batch(&jobs, &opts, &conn(4).batch, &Trace::off())?;
+    let base = mined.remove(0);
+    let scored = serial.report.scores.len() as u64;
+    ctx.measure("score/pipeline", Work::items(scored, "episodes"), || {
+        let report = significance::score_against_surrogates(&base, &mined);
+        Circuit::reconstruct(&report).edges.len() as u64
+    });
+
+    Ok(())
+}

@@ -18,6 +18,7 @@ pub mod ablation;
 pub mod axis_scaling;
 pub mod candidate_scaling;
 pub mod cluster_scatter;
+pub mod connectivity;
 pub mod fig10;
 pub mod fig11;
 pub mod fig7;

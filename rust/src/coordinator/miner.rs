@@ -1,68 +1,15 @@
-//! Level-wise mining configuration and reports.
+//! Level-wise mining reports.
 //!
 //! The mining loop itself lives in [`crate::session::mine_with_backend`]
 //! (one implementation for `Session`, streaming partitions, and the
-//! deprecated [`Coordinator::mine`] shim below); this module keeps the
-//! config/report types that benches and tests consume.
+//! batched executor [`crate::analysis::batch`]); this module keeps the
+//! report types that benches and tests consume. The pre-0.2
+//! `MineConfig`/`CountMode` shims were removed in 0.3 — configuration is
+//! [`crate::session::MineOptions`], and counting mode is backend
+//! composition (a bare engine, or
+//! [`crate::backend::two_pass::TwoPassBackend`] wrapping one).
 
-use crate::backend::two_pass::TwoPassBackend;
-use crate::backend::CountBackend;
-use crate::episodes::{CountedEpisode, Interval};
-use crate::error::MineError;
-use crate::events::EventStream;
-use crate::session::{mine_with_backend, MineOptions};
-
-use super::{Coordinator, Strategy};
-
-/// Counting mode for each mining level.
-///
-/// Superseded by backend composition: one-pass is a bare engine, two-pass
-/// is [`TwoPassBackend`] wrapping it. Kept for the deprecated
-/// [`Coordinator::mine`] shim.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CountMode {
-    /// one pass with the given strategy
-    OnePass(Strategy),
-    /// the paper's two-pass elimination (A2 filter + Hybrid exact pass)
-    TwoPass,
-}
-
-#[derive(Clone, Debug)]
-pub struct MineConfig {
-    /// support threshold theta (non-overlapped occurrence count)
-    pub theta: u64,
-    /// the inter-event constraint set I (paper Problem 1)
-    pub intervals: Vec<Interval>,
-    pub mode: CountMode,
-    /// stop after this episode size (the paper mines to ~7-8)
-    pub max_level: usize,
-    /// guardrail: abort a level whose candidate set exceeds this (a
-    /// too-low theta on bursty data grows the lattice combinatorially;
-    /// production systems must fail fast, not OOM)
-    pub max_candidates_per_level: usize,
-}
-
-impl MineConfig {
-    pub fn new(theta: u64, intervals: Vec<Interval>) -> MineConfig {
-        MineConfig {
-            theta,
-            intervals,
-            mode: CountMode::TwoPass,
-            max_level: 8,
-            max_candidates_per_level: 2_000_000,
-        }
-    }
-
-    pub(crate) fn options(&self) -> MineOptions {
-        MineOptions {
-            theta: self.theta,
-            intervals: self.intervals.clone(),
-            max_level: self.max_level,
-            max_candidates_per_level: self.max_candidates_per_level,
-            candidate_block: crate::session::DEFAULT_CANDIDATE_BLOCK,
-        }
-    }
-}
+use crate::episodes::CountedEpisode;
 
 /// Per-level mining report (the numbers Figs. 7/9 are built from).
 #[derive(Clone, Debug)]
@@ -93,41 +40,5 @@ impl MineResult {
 
     pub fn total_count_seconds(&self) -> f64 {
         self.levels.iter().map(|l| l.count_seconds).sum()
-    }
-}
-
-impl Coordinator {
-    /// The backend a [`MineConfig`]'s mode names (shared by the deprecated
-    /// mine/mine_stream shims).
-    pub(crate) fn mode_backend(
-        &self,
-        cfg: &MineConfig,
-    ) -> Result<Box<dyn CountBackend>, MineError> {
-        match cfg.mode {
-            CountMode::OnePass(strategy) => self.strategy_backend(strategy),
-            CountMode::TwoPass => {
-                let inner = self.strategy_backend(Strategy::Hybrid)?;
-                Ok(Box::new(TwoPassBackend::new(inner, cfg.theta)))
-            }
-        }
-    }
-
-    pub(crate) fn mine_impl(
-        &mut self,
-        stream: &EventStream,
-        cfg: &MineConfig,
-    ) -> Result<MineResult, MineError> {
-        let mut backend = self.mode_backend(cfg)?;
-        mine_with_backend(backend.as_mut(), stream, &cfg.options(), &mut self.metrics)
-    }
-
-    /// Run the full level-wise mining loop.
-    #[deprecated(since = "0.2.0", note = "use Session::builder()...build()?.mine()")]
-    pub fn mine(
-        &mut self,
-        stream: &EventStream,
-        cfg: &MineConfig,
-    ) -> Result<MineResult, MineError> {
-        self.mine_impl(stream, cfg)
     }
 }

@@ -4,10 +4,14 @@
 //! Algorithm dispatch (PTPE vs MapConcatenate vs Hybrid, paper §5.2), the
 //! two-pass A2+A1 elimination pipeline (§5.3) and the level-wise mining
 //! driver (§5) live in [`crate::backend`] and [`crate::session`]; this
-//! module keeps the strategy name menu, the run metrics, the streaming
-//! partition producer, and the old [`Coordinator`] entry points as thin
-//! **deprecated** shims so existing benches and tests migrate
-//! incrementally. New code should start from [`crate::Session`].
+//! module keeps the strategy name menu ([`Strategy`]), the run metrics,
+//! the streaming partition producer, and the level/mine report types.
+//! The pre-0.2 `Coordinator` entry points (`mine`, `count`,
+//! `count_two_pass`, `count_relaxed`, `mine_stream`) spent the 0.2 cycle
+//! as migration shims and were removed in 0.3 — start from
+//! [`crate::Session`], or compose a [`crate::backend::CountBackend`]
+//! directly (see the README's "removed in 0.3" note for the exact
+//! replacements).
 
 pub mod mapconcat;
 pub mod metrics;
@@ -15,18 +19,11 @@ pub mod miner;
 pub mod streaming;
 pub mod two_pass;
 
-use std::rc::Rc;
-
-use crate::backend::two_pass::{TwoPassBackend, TwoPassOutcome};
-use crate::backend::{self, accel, CountBackend};
-use crate::episodes::Episode;
 use crate::error::MineError;
-use crate::events::EventStream;
-use crate::gpu_model::crossover::CostModel;
-use crate::runtime::Runtime;
 
 pub use crate::backend::accel::Dispatch;
 pub use metrics::Metrics;
+pub use miner::{LevelReport, MineResult};
 
 /// Counting strategy (the paper's algorithm menu). Each name resolves to a
 /// [`CountBackend`] via [`crate::backend::for_strategy`].
@@ -91,104 +88,6 @@ impl std::str::FromStr for Strategy {
 
     fn from_str(s: &str) -> Result<Strategy, MineError> {
         Strategy::parse(s)
-    }
-}
-
-/// The legacy coordinator: runtime handle + dispatch model + run metrics.
-///
-/// Deprecated in favor of [`crate::Session`] (which owns backend
-/// construction, per-level reporting and streaming partition mining); the
-/// methods below are thin shims over the same backend layer and will be
-/// removed after one release.
-pub struct Coordinator {
-    pub rt: Rc<Runtime>,
-    pub dispatch: Dispatch,
-    pub metrics: Metrics,
-    /// worker threads for the CPU-parallel strategy
-    pub cpu_threads: usize,
-}
-
-impl Coordinator {
-    pub fn new(rt: Runtime) -> Coordinator {
-        let mf = rt.manifest();
-        let cost = CostModel::substrate_default(mf.m_episodes, mf.c_chunk);
-        Coordinator {
-            rt: Rc::new(rt),
-            dispatch: Dispatch::Cost(cost),
-            metrics: Metrics::default(),
-            cpu_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
-        }
-    }
-
-    /// Switch the Hybrid dispatch rule (benches compare both).
-    pub fn with_dispatch(mut self, d: Dispatch) -> Coordinator {
-        self.dispatch = d;
-        self
-    }
-
-    pub fn open_default() -> Result<Coordinator, MineError> {
-        Ok(Coordinator::new(Runtime::open_default()?))
-    }
-
-    /// Build the backend a strategy names, honoring this coordinator's
-    /// dispatch model for Hybrid. (The non-deprecated internal the shims
-    /// share.)
-    pub(crate) fn strategy_backend(
-        &self,
-        strategy: Strategy,
-    ) -> Result<Box<dyn CountBackend>, MineError> {
-        if strategy == Strategy::Hybrid {
-            return Ok(Box::new(accel::HybridBackend::with_runtime_dispatch(
-                self.rt.clone(),
-                self.cpu_threads,
-                self.dispatch,
-            )));
-        }
-        backend::for_strategy(strategy, Some(self.rt.clone()), self.cpu_threads)
-    }
-
-    /// Count every episode's non-overlapped occurrences under the given
-    /// strategy. Episodes may mix sizes; results return in input order.
-    #[deprecated(since = "0.2.0", note = "use Session::count or a CountBackend directly")]
-    pub fn count(
-        &mut self,
-        episodes: &[Episode],
-        stream: &EventStream,
-        strategy: Strategy,
-    ) -> Result<Vec<u64>, MineError> {
-        let mut be = self.strategy_backend(strategy)?;
-        let report = be.count(episodes, stream)?;
-        self.metrics.merge(&report.metrics);
-        Ok(report.counts)
-    }
-
-    /// Two-pass count at support threshold `theta` (paper CTh).
-    #[deprecated(since = "0.2.0", note = "use backend::two_pass::TwoPassBackend")]
-    pub fn count_two_pass(
-        &mut self,
-        episodes: &[Episode],
-        stream: &EventStream,
-        theta: u64,
-    ) -> Result<TwoPassOutcome, MineError> {
-        let inner = self.strategy_backend(Strategy::Hybrid)?;
-        let mut tp = TwoPassBackend::new(inner, theta);
-        let (outcome, metrics) = tp.run(episodes, stream)?;
-        self.metrics.merge(&metrics);
-        Ok(outcome)
-    }
-
-    /// Pass 1 only: relaxed counts via the A2 path (CPU fallback for
-    /// unsupported sizes).
-    #[deprecated(since = "0.2.0", note = "use CountBackend::count_relaxed")]
-    pub fn count_relaxed(
-        &mut self,
-        episodes: &[Episode],
-        stream: &EventStream,
-    ) -> Result<Vec<u64>, MineError> {
-        let mut be = self.strategy_backend(Strategy::Hybrid)?;
-        let report = be.count_relaxed(episodes, stream)?;
-        self.metrics.merge(&report.metrics);
-        Ok(report.counts)
     }
 }
 

@@ -10,10 +10,9 @@
 //! Consume the receiver with [`crate::Session::mine_partitions`].
 
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::miner::{MineConfig, MineResult};
-use super::Coordinator;
+use super::miner::MineResult;
 use crate::error::MineError;
 use crate::events::{EventStream, Tick};
 
@@ -141,34 +140,10 @@ pub fn spawn_producer_with(
     Ok(rx)
 }
 
-impl Coordinator {
-    /// Mine each partition as it arrives; returns per-partition reports.
-    #[deprecated(since = "0.2.0", note = "use Session::mine_partitions")]
-    pub fn mine_stream(
-        &mut self,
-        rx: Receiver<Partition>,
-        cfg: &MineConfig,
-    ) -> Result<Vec<PartitionReport>, MineError> {
-        let mut reports = vec![];
-        while let Ok(part) = rx.recv() {
-            let t0 = Instant::now();
-            let result = self.mine_impl(&part.stream, cfg)?;
-            reports.push(PartitionReport {
-                index: part.index,
-                events: part.stream.len(),
-                frequent: result.frequent.len(),
-                mine_time: t0.elapsed(),
-                recording: part.recording,
-                result,
-            });
-        }
-        Ok(reports)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     fn stream_ms(total: Tick) -> EventStream {
         let pairs: Vec<(i32, Tick)> = (1..=total).step_by(10).map(|t| (0, t)).collect();

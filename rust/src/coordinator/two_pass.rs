@@ -3,9 +3,9 @@
 //!
 //! The implementation moved to [`crate::backend::two_pass`], where the
 //! pipeline is a [`TwoPassBackend`](crate::backend::two_pass::TwoPassBackend)
-//! wrapping any exact engine; the old `Coordinator::count_two_pass` /
-//! `count_relaxed` entry points live on in `coordinator/mod.rs` as
-//! deprecated shims over it. This module re-exports the outcome type so
-//! `coordinator::two_pass::TwoPassOutcome` keeps resolving.
+//! wrapping any exact engine (the pre-0.2 `Coordinator::count_two_pass` /
+//! `count_relaxed` shims over it were removed in 0.3). This module
+//! re-exports the outcome type so `coordinator::two_pass::TwoPassOutcome`
+//! keeps resolving.
 
 pub use crate::backend::two_pass::TwoPassOutcome;

@@ -136,6 +136,48 @@ pub fn by_name(name: &str, seed: u64) -> Option<(EventStream, &'static str)> {
     }
 }
 
+/// The causal structure a generator embeds: the chains the connectivity
+/// pipeline should recover. Typed so precision/recall in `analysis/` is
+/// registry-driven instead of hardcoded to one dataset; recordings
+/// (`file:`/`log:` specs) have no generator and so no ground truth.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroundTruth {
+    /// registry name of the generator
+    pub dataset: &'static str,
+    /// the embedded episodes, with the generator's delay band
+    pub chains: Vec<crate::episodes::Episode>,
+}
+
+impl GroundTruth {
+    /// The true directed edge set: every adjacent pair of every chain,
+    /// deduplicated, in first-seen order.
+    pub fn edges(&self) -> Vec<(crate::events::EventType, crate::events::EventType)> {
+        let mut out = vec![];
+        for ch in &self.chains {
+            for w in ch.types.windows(2) {
+                if !out.contains(&(w[0], w[1])) {
+                    out.push((w[0], w[1]));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Ground truth for a registered generator name, if it embeds any.
+pub fn ground_truth(name: &str) -> Option<GroundTruth> {
+    let chains = match name {
+        "sym26" => sym26::Sym26Config::default().embedded_episodes(),
+        "2-1-33" => culture::CultureConfig::day(33).embedded_episodes(),
+        "2-1-34" => culture::CultureConfig::day(34).embedded_episodes(),
+        "2-1-35" => culture::CultureConfig::day(35).embedded_episodes(),
+        "huge-alphabet" => huge::HugeConfig::default().embedded_episodes(),
+        _ => return None,
+    };
+    let dataset = info(name)?.name;
+    Some(GroundTruth { dataset, chains })
+}
+
 /// Resolve any dataset spec — a registry name, `file:<path>` (the
 /// `events::io` binary format), or `log:<dir>` (a sealed ingest log) —
 /// into a stream plus its display tag. The single entry point behind
@@ -188,6 +230,33 @@ mod tests {
             }
             _ => panic!("unknown spec must list names and schemes"),
         }
+    }
+
+    #[test]
+    fn every_generator_exposes_ground_truth() {
+        for d in REGISTRY {
+            let gt = ground_truth(d.name).expect("registered generators embed chains");
+            assert_eq!(gt.dataset, d.name);
+            assert!(!gt.chains.is_empty());
+            assert!(!gt.edges().is_empty());
+            // chains carry the generator's own delay band
+            let band = d.default_interval();
+            for ch in &gt.chains {
+                assert!(ch.intervals.iter().all(|iv| *iv == band));
+            }
+        }
+        assert_eq!(ground_truth("file:/tmp/x.bin"), None);
+        assert_eq!(ground_truth("nope"), None);
+    }
+
+    #[test]
+    fn ground_truth_edges_dedup_adjacent_pairs() {
+        let gt = ground_truth("sym26").unwrap();
+        let edges = gt.edges();
+        let mut uniq = edges.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), edges.len());
     }
 
     #[test]

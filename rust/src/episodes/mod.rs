@@ -35,7 +35,7 @@ impl Interval {
 
 /// A serial episode with inter-event constraints:
 /// `E(1) -(I1]-> E(2) ... -(I(N-1)]-> E(N)`.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Episode {
     pub types: Vec<EventType>,
     pub intervals: Vec<Interval>,

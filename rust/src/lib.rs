@@ -73,12 +73,14 @@
 //!   [`stream::LogWatcher`] that tails a live [`ingest::SpikeLog`]
 //!   (`epminer watch`). Every commit is provably identical to a cold
 //!   batch mine of the current window.
-//! - [`serve`] — the multi-tenant mining service: a worker pool over the
-//!   engines with request coalescing, a sharded LRU result cache keyed by
-//!   exact stream fingerprint, bounded admission ([`MineError::Busy`]),
-//!   service metrics, live-update subscriptions pushing frequent-set
-//!   diffs to waiters, and a closed-loop load generator
-//!   (`epminer serve-bench`, `benches/serve_load.rs`).
+//! - [`serve`] — the multi-tenant mining service: one typed
+//!   [`serve::Request`] surface (plain mines, live subscriptions, and
+//!   connectivity inference) over a worker pool with request coalescing,
+//!   a sharded LRU result cache keyed by exact stream fingerprint,
+//!   bounded admission ([`MineError::Busy`]), service metrics,
+//!   live-update subscriptions pushing frequent-set diffs to waiters,
+//!   and a closed-loop load generator (`epminer serve-bench`,
+//!   `benches/serve_load.rs`).
 //! - [`cluster`] — scatter-gather distributed mining over log segments:
 //!   a coordinator ([`cluster::ScatterMiner`], `epminer scatter`) that
 //!   runs the exact level-wise driver locally and distributes only the
@@ -98,8 +100,19 @@
 //!   RPC), and the [`obs::MineProfile`] mining-phase profiler
 //!   (`SessionBuilder::profile` / `--profile`). Disabled tracing is
 //!   zero-allocation — the default hot path is unaffected.
+//! - [`analysis`] — the statistically-grounded connectivity pipeline on
+//!   top of mining: seeded spike-time jitter surrogates
+//!   ([`analysis::surrogate`]), the batched multi-mine executor fanning
+//!   `1 + n` streams across thread-local engines
+//!   ([`analysis::batch::mine_batch`]), per-episode empirical p-values
+//!   and excess counts against the surrogate null
+//!   ([`analysis::significance`]), and significance-ranked circuit
+//!   reconstruction scored against generator ground truth
+//!   ([`analysis::connectivity`], `epminer connectivity`, the serve
+//!   layer's connectivity query).
 //! - [`coordinator`] — strategy name menu, run metrics, the streaming
-//!   partition producer, and the deprecated pre-0.2 `Coordinator` shims.
+//!   partition producer, and the level/mine report types (the pre-0.2
+//!   `Coordinator` shims were removed in 0.3).
 //! - [`bench`] — the unified perf harness: a suite registry every bench
 //!   target registers into, a shared measurement loop, the versioned
 //!   `BENCH_<suite>.json` result schema with environment capture, and

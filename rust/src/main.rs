@@ -12,6 +12,9 @@
 //!   node        — serve a log replica to a scatter coordinator (cluster/)
 //!   scatter     — distributed range mining across nodes, byte-identical
 //!                 to a single-process mine over the same range
+//!   connectivity — statistical connectivity inference: mine the real
+//!                 stream plus N jitter-surrogate mines, rank putative
+//!                 edges by empirical significance (analysis/)
 //!   serve-bench — load-test the multi-tenant mining service (serve/)
 //!   stats       — render the unified metrics registry (obs/), local demo
 //!                 or a remote node's via the cluster Stats RPC
@@ -29,6 +32,7 @@
 //!   epminer node --listen 0.0.0.0:7400 --log /tmp/rec
 //!   epminer scatter --nodes host1:7400,host2:7400 --log /tmp/rec --theta 20
 //!   epminer scatter --nodes host1:7400,host2:7400 --log /tmp/rec --theta 20 --profile
+//!   epminer connectivity --dataset 2-1-35 --theta 40 --surrogates 19 --jitter 10
 //!   epminer serve-bench --smoke
 //!   epminer stats --connect host1:7400
 //!   epminer bench --suite all --smoke --json-out . --check benches/baselines
@@ -65,6 +69,7 @@ fn run() -> Result<(), MineError> {
         Some("node") => cmd_node(&args),
         Some("scatter") => cmd_scatter(&args),
         Some("reconstruct") => cmd_reconstruct(&args),
+        Some("connectivity") => cmd_connectivity(&args),
         Some("raster") => cmd_raster(&args),
         Some("profile") => cmd_profile(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
@@ -73,7 +78,7 @@ fn run() -> Result<(), MineError> {
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: epminer <mine|count|gen|ingest|log-mine|watch|node|scatter|reconstruct|raster|profile|serve-bench|stats|bench|info> [options]\n\
+                "usage: epminer <mine|count|gen|ingest|log-mine|watch|node|scatter|reconstruct|connectivity|raster|profile|serve-bench|stats|bench|info> [options]\n\
                  \n\
                  mine        --dataset <{names}> --theta <u64>\n\
                  \x20            [--mode two-pass|one-pass] [--strategy {strategies}]\n\
@@ -102,6 +107,14 @@ fn run() -> Result<(), MineError> {
                  \x20            same range in one process; --profile merges every node's\n\
                  \x20            spans into one trace tree\n\
                  reconstruct --dataset <name> --theta <u64> [--dot <path>] — mine + circuit graph\n\
+                 connectivity --dataset <name> --theta <u64> [--surrogates <n>]\n\
+                 \x20            [--jitter <ticks>] [--seed <u64>] [--parallelism <n>]\n\
+                 \x20            [--max-p <p>] [--dot <path>] [--strategy {strategies}]\n\
+                 \x20            [--threads <n>] [--mode two-pass|one-pass] [--max-level <n>]\n\
+                 \x20            [--low <t> --high <t>] [--profile] [--trace-out <path>]\n\
+                 \x20            — mine + N jitter-surrogate mines through the batched\n\
+                 \x20            executor; edges ranked by empirical p / excess count,\n\
+                 \x20            scored against generator ground truth when known\n\
                  raster      --dataset <name> [--from <tick> --to <tick>] [--episode 0,1,2]\n\
                  profile     --dataset <name> --size <n> --episodes <count> — Fig-10 counters\n\
                  serve-bench [--clients <n>] [--requests <n>] [--workers <n>] [--queue <n>]\n\
@@ -648,7 +661,7 @@ fn cmd_reconstruct(args: &Args) -> Result<(), MineError> {
 
     let deep: Vec<_> =
         result.frequent.iter().filter(|c| c.episode.n() >= 2).cloned().collect();
-    let circuit = Circuit::reconstruct(&deep).thresholded(theta);
+    let circuit = Circuit::from_support(&deep).thresholded(theta);
     println!("\nreconstructed functional edges ({}):", circuit.edges.len());
     for e in circuit.edges.iter().take(20) {
         println!(
@@ -661,6 +674,124 @@ fn cmd_reconstruct(args: &Args) -> Result<(), MineError> {
             .map_err(|e| MineError::io(format!("writing {path}"), e))?;
         println!("\nwrote graphviz to {path}");
     }
+    Ok(())
+}
+
+fn cmd_connectivity(args: &Args) -> Result<(), MineError> {
+    use episodes_gpu::analysis::batch::BatchConfig;
+    use episodes_gpu::analysis::connectivity::{infer_connectivity, ConnectivityConfig};
+    use episodes_gpu::session::{MineOptions, DEFAULT_CANDIDATE_BLOCK};
+
+    let (stream, name) = load_dataset(args)?;
+    println!(
+        "dataset {name}: {} events, {} types, {:.1}s span, {:.0} Hz mean",
+        stream.len(),
+        stream.n_types,
+        stream.span() as f64 / 1000.0,
+        stream.mean_rate_hz()
+    );
+    let theta = args.get_u64("theta", 60)?;
+    let iv = interval_from(args, &name)?;
+    let opts = MineOptions {
+        theta,
+        intervals: vec![iv],
+        max_level: args.get_usize("max-level", 8)?,
+        max_candidates_per_level: 2_000_000,
+        candidate_block: DEFAULT_CANDIDATE_BLOCK,
+    };
+    let two_pass = match args.get_or("mode", "two-pass") {
+        "two-pass" => true,
+        "one-pass" => false,
+        other => {
+            return Err(MineError::invalid(format!(
+                "bad --mode {other} (expected two-pass or one-pass)"
+            )))
+        }
+    };
+    let d = BatchConfig::default();
+    let batch = BatchConfig {
+        strategy: match args.get("strategy") {
+            Some(s) => Strategy::parse(s)?,
+            None => d.strategy,
+        },
+        two_pass,
+        cpu_threads: args.get_usize("threads", d.cpu_threads)?,
+        parallelism: args.get_usize("parallelism", d.parallelism)?,
+        profile: args.flag("profile"),
+    };
+    let cfg = ConnectivityConfig {
+        n_surrogates: args.get_usize("surrogates", 19)?,
+        // default jitter: the upper delay bound, sized to destroy exactly
+        // the timing structure the delay band asserts
+        jitter: args.get_i32("jitter", iv.t_high.max(1))?,
+        // the dataset seed doubles as the surrogate seed (streams are
+        // forked per surrogate, so sharing the root is safe)
+        seed: args.get_u64("seed", 7)?,
+        batch,
+    };
+    println!(
+        "null model: {} jitter surrogates, half-width {} ticks, seed {} \
+         ({} mines over {} worker(s))",
+        cfg.n_surrogates,
+        cfg.jitter,
+        cfg.seed,
+        cfg.n_surrogates + 1,
+        cfg.batch.parallelism.max(1),
+    );
+
+    let trace = trace_from(args);
+    let t0 = std::time::Instant::now();
+    let result = infer_connectivity(&stream, &opts, &cfg, &trace)?;
+    print_levels(&result.base);
+    println!("\ntotal {:.3}s", t0.elapsed().as_secs_f64());
+
+    let report = &result.report;
+    println!(
+        "\nsignificance over {} episodes of size >= 2 (p floor {:.3}):",
+        report.scores.len(),
+        report.p_floor()
+    );
+    for s in report.scores.iter().take(12) {
+        println!(
+            "  p={:.3}  excess {:+.1}  null mean {:>6.1}  [{:>4}] {}",
+            s.p_value,
+            s.excess,
+            s.null_mean,
+            s.count,
+            s.episode.display()
+        );
+    }
+
+    // --max-p keeps only edges whose best witness clears the cut
+    let circuit = match args.get("max-p") {
+        Some(_) => result.circuit.significant(args.get_f64("max-p", 0.05)?),
+        None => result.circuit.clone(),
+    };
+    println!("\nputative circuit ({} edges, most credible first):", circuit.edges.len());
+    for e in circuit.edges.iter().take(20) {
+        println!(
+            "  {} -> {}  p={:.3}  excess {:+.1}  [support {}, delay ({},{}]]",
+            e.from, e.to, e.p_value, e.excess, e.support, e.t_low, e.t_high
+        );
+    }
+    if let Some(truth) = datasets::ground_truth(&name) {
+        let s = circuit.score(&truth.chains);
+        println!(
+            "\nvs ground truth ({} chains, {} true edges): \
+             precision {:.2}  recall {:.2}  f1 {:.2}",
+            truth.chains.len(),
+            s.actual,
+            s.precision(),
+            s.recall(),
+            s.f1()
+        );
+    }
+    if let Some(path) = args.get("dot") {
+        std::fs::write(path, circuit.to_dot())
+            .map_err(|e| MineError::io(format!("writing {path}"), e))?;
+        println!("\nwrote graphviz to {path}");
+    }
+    print_observability(args, &result.base, &trace)?;
     Ok(())
 }
 

@@ -3,24 +3,27 @@
 //! Results are cached under the exact stream fingerprint, so a hit can
 //! never be stale — there is no invalidation problem because a mutated or
 //! extended stream hashes to a different key. The fingerprint is only the
-//! *routing* identity, though: each entry keeps its [`Query`] and every
-//! lookup re-verifies exact semantic equality ([`Query::equivalent`]), so
-//! a fingerprint collision (FNV-style mixing is invertible, and tenants
+//! *routing* identity, though: each entry keeps its [`WorkItem`] and every
+//! lookup re-verifies exact semantic equality ([`WorkItem::equivalent`]),
+//! so a fingerprint collision (FNV-style mixing is invertible, and tenants
 //! are untrusted) degrades to a miss/overwrite instead of serving one
-//! tenant another tenant's counts. Sharding (by fingerprint low bits)
-//! keeps lock contention off the submit hot path; eviction is LRU per
-//! shard via a last-used stamp and a scan, which is O(shard capacity)
-//! only on insertion into a full shard — fine at the few-hundred entry
-//! capacities a result cache wants (each entry is a full [`MineResult`],
-//! not a counter).
+//! tenant another tenant's counts. Since 0.3 the cache stores typed
+//! [`WorkOutput`]s, so every [`Request`](super::Request) arm that
+//! produces a result shares one cache (connectivity answers are cached
+//! alongside plain mines; the kind discriminator in
+//! `ConnectivityQuery::key` keeps their key spaces disjoint). Sharding
+//! (by fingerprint low bits) keeps lock contention off the submit hot
+//! path; eviction is LRU per shard via a last-used stamp and a scan,
+//! which is O(shard capacity) only on insertion into a full shard — fine
+//! at the few-hundred entry capacities a result cache wants (each entry
+//! is a full result, not a counter).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
-use crate::coordinator::miner::MineResult;
-
-use super::query::{Query, QueryKey};
+use super::pool::{WorkItem, WorkOutput};
+use super::query::QueryKey;
 
 /// Hit/miss/eviction counters plus current occupancy, as one snapshot.
 #[derive(Clone, Copy, Debug, Default)]
@@ -51,10 +54,11 @@ struct Shard {
 
 struct Entry {
     last_used: u64,
-    /// the query this result answers, for collision verification (streams
-    /// are `Arc`-shared, so this is cheap for repeat-heavy workloads)
-    query: Query,
-    result: Arc<MineResult>,
+    /// the work item this result answers, for collision verification
+    /// (streams are `Arc`-shared, so this is cheap for repeat-heavy
+    /// workloads)
+    item: WorkItem,
+    result: WorkOutput,
 }
 
 /// A sharded LRU cache of mining results. `capacity == 0` disables
@@ -88,7 +92,7 @@ impl ResultCache {
         &self.shards[key.fingerprint() as usize & (self.shards.len() - 1)]
     }
 
-    fn lookup(&self, key: &QueryKey, query: &Query) -> Option<Arc<MineResult>> {
+    fn lookup(&self, key: &QueryKey, item: &WorkItem) -> Option<WorkOutput> {
         if self.per_shard_capacity == 0 {
             return None;
         }
@@ -96,7 +100,7 @@ impl ResultCache {
         shard.clock += 1;
         let now = shard.clock;
         match shard.entries.get_mut(key) {
-            Some(entry) if entry.query.equivalent(query) => {
+            Some(entry) if entry.item.equivalent(item) => {
                 entry.last_used = now;
                 Some(entry.result.clone())
             }
@@ -104,10 +108,10 @@ impl ResultCache {
         }
     }
 
-    /// Look up `query`'s result, counting a hit or miss. A same-key entry
-    /// whose contents are not [`Query::equivalent`] is a miss.
-    pub fn get(&self, key: &QueryKey, query: &Query) -> Option<Arc<MineResult>> {
-        let found = self.lookup(key, query);
+    /// Look up `item`'s result, counting a hit or miss. A same-key entry
+    /// whose contents are not [`WorkItem::equivalent`] is a miss.
+    pub fn get(&self, key: &QueryKey, item: &WorkItem) -> Option<WorkOutput> {
+        let found = self.lookup(key, item);
         match &found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -120,14 +124,14 @@ impl ResultCache {
     /// under the in-flight lock — a job can complete (cache insert, then
     /// in-flight removal) between a counted miss and that lock, and the
     /// re-check closes the window without double-counting the lookup.
-    pub fn peek(&self, key: &QueryKey, query: &Query) -> Option<Arc<MineResult>> {
-        self.lookup(key, query)
+    pub fn peek(&self, key: &QueryKey, item: &WorkItem) -> Option<WorkOutput> {
+        self.lookup(key, item)
     }
 
-    /// Insert (or replace) the result for `query`. A same-key entry for a
-    /// non-equivalent query is overwritten — the collision degrades to
+    /// Insert (or replace) the result for `item`. A same-key entry for a
+    /// non-equivalent item is overwritten — the collision degrades to
     /// thrash between the colliding tenants, never to a wrong answer.
-    pub fn insert(&self, key: QueryKey, query: Query, result: Arc<MineResult>) {
+    pub fn insert(&self, key: QueryKey, item: WorkItem, result: WorkOutput) {
         if self.per_shard_capacity == 0 {
             return;
         }
@@ -143,7 +147,7 @@ impl ResultCache {
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        shard.entries.insert(key, Entry { last_used: now, query, result });
+        shard.entries.insert(key, Entry { last_used: now, item, result });
     }
 
     pub fn len(&self) -> usize {
@@ -167,26 +171,29 @@ impl ResultCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::miner::MineResult;
     use crate::episodes::Interval;
     use crate::events::EventStream;
+    use crate::serve::query::Query;
+    use std::sync::Arc;
 
-    fn query(theta: u64) -> Query {
+    fn item(theta: u64) -> WorkItem {
         let stream = Arc::new(EventStream::from_pairs(vec![(0, 1), (1, 5)], 2));
-        Query::new(stream, theta, vec![Interval::new(0, 4)])
+        WorkItem::Mine(Query::new(stream, theta, vec![Interval::new(0, 4)]))
     }
 
-    fn result() -> Arc<MineResult> {
-        Arc::new(MineResult::default())
+    fn result() -> WorkOutput {
+        WorkOutput::Mine(Arc::new(MineResult::default()))
     }
 
-    fn put(cache: &ResultCache, q: &Query) {
+    fn put(cache: &ResultCache, q: &WorkItem) {
         cache.insert(q.key(), q.clone(), result());
     }
 
     #[test]
     fn get_after_insert_hits() {
         let cache = ResultCache::new(8, 2);
-        let q = query(3);
+        let q = item(3);
         assert!(cache.get(&q.key(), &q).is_none());
         put(&cache, &q);
         assert!(cache.get(&q.key(), &q).is_some());
@@ -199,7 +206,7 @@ mod tests {
     fn lru_evicts_the_least_recently_used() {
         // single shard, capacity 2: freshen q1, insert q3 → q2 evicted
         let cache = ResultCache::new(2, 1);
-        let (q1, q2, q3) = (query(1), query(2), query(3));
+        let (q1, q2, q3) = (item(1), item(2), item(3));
         put(&cache, &q1);
         put(&cache, &q2);
         assert!(cache.get(&q1.key(), &q1).is_some());
@@ -214,7 +221,7 @@ mod tests {
     #[test]
     fn zero_capacity_disables_caching() {
         let cache = ResultCache::new(0, 4);
-        let q = query(1);
+        let q = item(1);
         put(&cache, &q);
         assert!(cache.get(&q.key(), &q).is_none());
         assert_eq!(cache.stats().entries, 0);
@@ -223,7 +230,7 @@ mod tests {
     #[test]
     fn reinsert_updates_in_place_without_eviction() {
         let cache = ResultCache::new(1, 1);
-        let q = query(1);
+        let q = item(1);
         put(&cache, &q);
         put(&cache, &q);
         assert_eq!(cache.stats().evictions, 0);
@@ -235,9 +242,24 @@ mod tests {
         // Simulate a fingerprint collision by looking up a *different*
         // query under q1's key: content verification must refuse the hit.
         let cache = ResultCache::new(8, 1);
-        let (q1, q2) = (query(1), query(2));
+        let (q1, q2) = (item(1), item(2));
         put(&cache, &q1);
         assert!(cache.get(&q1.key(), &q2).is_none(), "colliding lookup must miss");
         assert!(cache.get(&q1.key(), &q1).is_some());
+    }
+
+    #[test]
+    fn kinds_never_cross_alias() {
+        // a connectivity item under a mine entry's key (or vice versa)
+        // must miss even though both wrap the same query
+        let cache = ResultCache::new(8, 1);
+        let WorkItem::Mine(q) = item(1) else { unreachable!() };
+        let mine = WorkItem::Mine(q.clone());
+        let conn = WorkItem::Connectivity(crate::serve::query::ConnectivityQuery::new(
+            q, 5, 5, 1,
+        ));
+        put(&cache, &mine);
+        assert!(cache.get(&mine.key(), &conn).is_none());
+        assert!(cache.get(&conn.key(), &conn).is_none());
     }
 }

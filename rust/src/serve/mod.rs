@@ -8,6 +8,17 @@
 //! queries per dataset. This module turns the single-caller `Session`
 //! world into that service:
 //!
+//! - [`query::Request`] — the one typed request surface: every way of
+//!   asking the service for work (a plain mine, a live subscription, a
+//!   surrogate-tested connectivity inference) is an arm of one enum,
+//!   admitted through shared validation and dispatched at the single
+//!   [`MineService::request`] point. A [`query::ConnectivityQuery`] is
+//!   admission-counted as **one** tenant job (one queue slot, one cache
+//!   entry) even though the worker that claims it fans out into
+//!   `1 + n_surrogates` internal mines through the batched executor
+//!   ([`crate::analysis::batch`]); the fan-out never re-enters the
+//!   service's own queue, so connectivity requests cannot deadlock the
+//!   pool however small it is.
 //! - [`pool::MineService`] — a pool of worker threads, each constructing
 //!   its counting engine thread-locally (sessions hold `Rc<Runtime>` and
 //!   do not cross threads; engines do not need to — workers build them in
@@ -60,7 +71,7 @@ pub mod query;
 pub use cache::{CacheStats, ResultCache};
 pub use metrics::ServiceMetrics;
 pub use pool::{
-    mine_direct, MineService, ServiceConfig, SlowQuery, Subscription, Ticket, WatchLogConfig,
-    SLOW_QUERY_LOG,
+    mine_direct, Admitted, ConnectivityTicket, MineService, ServiceConfig, SlowQuery,
+    Subscription, Ticket, WatchLogConfig, WorkItem, WorkOutput, SLOW_QUERY_LOG,
 };
-pub use query::{Query, QueryKey, SubscribeQuery};
+pub use query::{ConnectivityQuery, Query, QueryKey, Request, SubscribeQuery};

@@ -2,10 +2,18 @@
 //! engines, with request coalescing, a result cache, and bounded
 //! admission.
 //!
-//! Layout of one query's life:
+//! Every way of asking the service for work is one arm of the typed
+//! [`Request`] enum, admitted through the same validation and routed at
+//! a single dispatch point, [`MineService::request`]. The convenience
+//! wrappers ([`MineService::submit`], [`MineService::subscribe`],
+//! [`MineService::submit_connectivity`]) are thin shims over it. Layout
+//! of one mining request's life (connectivity requests follow the same
+//! path — one queue slot, one cache entry — but the worker that claims
+//! one fans out into `1 + n_surrogates` internal mines through
+//! [`analysis::batch`](crate::analysis::batch)):
 //!
 //! ```text
-//! submit(query) ── key() ── cache? ──hit──> Ticket::Ready
+//! request(req) ── key() ── cache? ──hit──> Ticket::Ready
 //!                    │
 //!                    ├── in-flight? ──yes──> Ticket joins that job (coalesced)
 //!                    │
@@ -35,6 +43,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::analysis::batch::BatchConfig;
+use crate::analysis::connectivity::{infer_connectivity, ConnectivityConfig, ConnectivityResult};
 use crate::coordinator::miner::MineResult;
 use crate::coordinator::{Metrics, Strategy};
 use crate::error::MineError;
@@ -46,7 +56,7 @@ use crate::stream::{CommitUpdate, IncrementalConfig, LogWatcher};
 
 use super::cache::ResultCache;
 use super::metrics::ServiceMetrics;
-use super::query::{Query, QueryKey, SubscribeQuery};
+use super::query::{ConnectivityQuery, Query, QueryKey, Request, SubscribeQuery};
 
 /// Pool/cache/admission knobs for [`MineService::start`].
 #[derive(Clone, Debug)]
@@ -66,6 +76,14 @@ pub struct ServiceConfig {
     /// parallelism is across queries; nested engine threads oversubscribe
     /// unless the workload is a few huge queries.
     pub cpu_threads: usize,
+    /// fan-out threads *inside* the one worker that claims a
+    /// [`ConnectivityQuery`]: the batched executor spreads the
+    /// `1 + n_surrogates` internal mines over this many engines while the
+    /// request itself holds a single queue slot (admission counts it as
+    /// one tenant job). Default: available parallelism — a connectivity
+    /// request is a burst workload, unlike the steady per-query engines
+    /// `cpu_threads` guards.
+    pub connectivity_parallelism: usize,
     /// how many recent execution latencies the metrics window keeps
     pub latency_window: usize,
     /// live-update subscriptions one tenant may hold at once; the next
@@ -106,6 +124,9 @@ impl Default for ServiceConfig {
             cache_shards: 8,
             strategy: Strategy::CpuParallel,
             cpu_threads: 1,
+            connectivity_parallelism: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4),
             latency_window: 4096,
             max_subscriptions_per_tenant: 4,
             watch_log: None,
@@ -170,14 +191,54 @@ impl WatchLogConfig {
     }
 }
 
-/// What one execution produced: the shared result, or an error each
-/// waiter receives a duplicate of.
-type JobOutcome = Result<Arc<MineResult>, MineError>;
+/// One unit of queued work: the executable payload behind every
+/// [`Request`] arm that takes a queue slot. The cache and in-flight map
+/// store these, so a fingerprint collision between kinds still fails the
+/// [`WorkItem::equivalent`] check (cross-kind is never equivalent) and
+/// degrades to a miss, exactly like a same-kind collision.
+#[derive(Clone, Debug)]
+pub enum WorkItem {
+    Mine(Query),
+    Connectivity(ConnectivityQuery),
+}
+
+impl WorkItem {
+    /// The kind-discriminated cache/coalescing identity.
+    pub fn key(&self) -> QueryKey {
+        match self {
+            WorkItem::Mine(q) => q.key(),
+            WorkItem::Connectivity(c) => c.key(),
+        }
+    }
+
+    /// Exact semantic equality; items of different kinds are never
+    /// equivalent.
+    pub fn equivalent(&self, other: &WorkItem) -> bool {
+        match (self, other) {
+            (WorkItem::Mine(a), WorkItem::Mine(b)) => a.equivalent(b),
+            (WorkItem::Connectivity(a), WorkItem::Connectivity(b)) => a.equivalent(b),
+            _ => false,
+        }
+    }
+}
+
+/// What one execution produced, matching its [`WorkItem`]'s kind. Cheap
+/// to clone (the payload is `Arc`-shared), so cache entries and coalesced
+/// waiters all hand out the same allocation.
+#[derive(Clone, Debug)]
+pub enum WorkOutput {
+    Mine(Arc<MineResult>),
+    Connectivity(Arc<ConnectivityResult>),
+}
+
+/// One execution's outcome: the shared output, or an error each waiter
+/// receives a duplicate of.
+type JobOutcome = Result<WorkOutput, MineError>;
 
 /// One admitted execution; coalesced waiters share it through the `Arc`.
 struct Job {
     key: QueryKey,
-    query: Query,
+    item: WorkItem,
     submitted: Instant,
     /// per-query span recorder, minted at admission; [`Trace::off`] when
     /// the service runs without tracing
@@ -201,28 +262,45 @@ impl Job {
     }
 }
 
-/// A claim on a query's result. `Ready` tickets were answered from the
-/// cache at submit time; `Pending` tickets resolve when the (possibly
+/// A claim on a plain mine's result. `Ready` tickets were answered from
+/// the cache at submit time; `Pending` tickets resolve when the (possibly
 /// shared) execution completes.
 pub struct Ticket(TicketState);
 
+/// A claim on a connectivity request's result — the same admission state
+/// machine as [`Ticket`], typed to what the request produces.
+pub struct ConnectivityTicket(TicketState);
+
 enum TicketState {
-    Ready(Arc<MineResult>),
+    Ready(WorkOutput),
     Pending(Arc<Job>),
+}
+
+/// Block until the (possibly coalesced) execution resolves; `Ready`
+/// states return immediately. Both ticket types funnel through here.
+fn wait_outcome(state: TicketState) -> JobOutcome {
+    match state {
+        TicketState::Ready(output) => Ok(output),
+        TicketState::Pending(job) => {
+            let mut slot = job.slot.lock().unwrap();
+            while slot.is_none() {
+                slot = job.done.wait(slot).unwrap();
+            }
+            slot.as_ref().unwrap().clone()
+        }
+    }
 }
 
 impl Ticket {
     /// Block until the result is available. Coalesced waiters each get
     /// the same `Arc`'d result (or a duplicate of the same error).
     pub fn wait(self) -> Result<Arc<MineResult>, MineError> {
-        match self.0 {
-            TicketState::Ready(result) => Ok(result),
-            TicketState::Pending(job) => {
-                let mut slot = job.slot.lock().unwrap();
-                while slot.is_none() {
-                    slot = job.done.wait(slot).unwrap();
-                }
-                slot.as_ref().unwrap().clone()
+        match wait_outcome(self.0)? {
+            WorkOutput::Mine(result) => Ok(result),
+            // unreachable by construction: admission only pairs a mine
+            // item with a mine output — typed here instead of panicking
+            WorkOutput::Connectivity(_) => {
+                Err(MineError::internal("mine ticket resolved with a connectivity result"))
             }
         }
     }
@@ -231,6 +309,34 @@ impl Ticket {
     pub fn from_cache(&self) -> bool {
         matches!(self.0, TicketState::Ready(_))
     }
+}
+
+impl ConnectivityTicket {
+    /// Block until the inference pipeline (real mine + surrogate fan-out
+    /// + scoring) completes; coalesced waiters share the same `Arc`.
+    pub fn wait(self) -> Result<Arc<ConnectivityResult>, MineError> {
+        match wait_outcome(self.0)? {
+            WorkOutput::Connectivity(result) => Ok(result),
+            WorkOutput::Mine(_) => Err(MineError::internal(
+                "connectivity ticket resolved with a plain mine result",
+            )),
+        }
+    }
+
+    /// Was this ticket answered from the cache at submit time?
+    pub fn from_cache(&self) -> bool {
+        matches!(self.0, TicketState::Ready(_))
+    }
+}
+
+/// What [`MineService::request`] hands back: one arm per [`Request`]
+/// arm. The typed wrappers (`submit`, `submit_connectivity`,
+/// `subscribe`) unwrap the matching arm for callers that know their
+/// request kind statically.
+pub enum Admitted {
+    Mine(Ticket),
+    Subscription(Subscription),
+    Connectivity(ConnectivityTicket),
 }
 
 struct QueueState {
@@ -273,6 +379,7 @@ struct Shared {
     cache: ResultCache,
     strategy: Strategy,
     cpu_threads: usize,
+    connectivity_parallelism: usize,
     shutdown: AtomicBool,
     started: Instant,
     /// the unified metrics namespace; the fields below are live handles
@@ -300,22 +407,24 @@ struct Shared {
 impl Shared {
     /// Cache hits hand back the cached `Arc` untouched unless profiling
     /// is on, in which case a clone is annotated `cache_outcome="cache"`
-    /// so the tenant can tell a 2µs cache answer from a fresh mine.
-    fn annotate_cache_hit(&self, hit: Arc<MineResult>) -> Arc<MineResult> {
+    /// so the tenant can tell a 2µs cache answer from a fresh execution.
+    /// Connectivity hits annotate the base (real-stream) mine's profile.
+    fn annotate_cache_hit(&self, hit: WorkOutput) -> WorkOutput {
         if !self.profile {
             return hit;
         }
-        let mut r = (*hit).clone();
-        match &mut r.profile {
-            Some(p) => p.cache_outcome = Some("cache".to_string()),
-            None => {
-                r.profile = Some(MineProfile {
-                    cache_outcome: Some("cache".to_string()),
-                    ..MineProfile::default()
-                })
+        match hit {
+            WorkOutput::Mine(r) => {
+                let mut r = (*r).clone();
+                mark_profile_cached(&mut r);
+                WorkOutput::Mine(Arc::new(r))
+            }
+            WorkOutput::Connectivity(c) => {
+                let mut c = (*c).clone();
+                mark_profile_cached(&mut c.base);
+                WorkOutput::Connectivity(Arc::new(c))
             }
         }
-        Arc::new(r)
     }
 
     /// A fresh per-query trace when tracing (or the slow-query log)
@@ -325,6 +434,20 @@ impl Shared {
             Trace::started()
         } else {
             Trace::off()
+        }
+    }
+}
+
+/// Stamp `cache_outcome="cache"` onto a result's profile (creating an
+/// otherwise-empty profile when the cached run was executed unprofiled).
+fn mark_profile_cached(r: &mut MineResult) {
+    match &mut r.profile {
+        Some(p) => p.cache_outcome = Some("cache".to_string()),
+        None => {
+            r.profile = Some(MineProfile {
+                cache_outcome: Some("cache".to_string()),
+                ..MineProfile::default()
+            })
         }
     }
 }
@@ -387,6 +510,7 @@ impl MineService {
             cache: ResultCache::new(cfg.cache_capacity, cfg.cache_shards),
             strategy: cfg.strategy,
             cpu_threads: cfg.cpu_threads.max(1),
+            connectivity_parallelism: cfg.connectivity_parallelism.max(1),
             shutdown: AtomicBool::new(false),
             started: Instant::now(),
             submitted: registry.counter("serve.submitted"),
@@ -453,32 +577,73 @@ impl MineService {
         Ok(service)
     }
 
+    /// The single dispatch point for every request kind: shared
+    /// validation ([`Request::validate`]), then the arm-appropriate
+    /// admission — queue-slot admission for the mining arms (cache,
+    /// coalescing, bounded queue), the per-tenant subscription cap for
+    /// [`Request::Subscribe`]. New query types are new arms here, not
+    /// parallel code paths.
+    pub fn request(&self, req: Request) -> Result<Admitted, MineError> {
+        req.validate()?;
+        match req {
+            Request::Mine(q) => Ok(Admitted::Mine(Ticket(self.admit(WorkItem::Mine(q))?))),
+            Request::Subscribe(s) => Ok(Admitted::Subscription(self.subscribe_inner(s)?)),
+            Request::Connectivity(c) => Ok(Admitted::Connectivity(ConnectivityTicket(
+                self.admit(WorkItem::Connectivity(c))?,
+            ))),
+        }
+    }
+
     /// Admit a query. Returns a [`Ticket`] (possibly already resolved
     /// from the cache, possibly joined onto an identical in-flight
     /// execution), or [`MineError::Busy`] when the job queue is full.
     pub fn submit(&self, query: Query) -> Result<Ticket, MineError> {
-        query.validate()?;
+        match self.request(Request::Mine(query))? {
+            Admitted::Mine(ticket) => Ok(ticket),
+            _ => Err(MineError::internal("mine request admitted as a different kind")),
+        }
+    }
+
+    /// Admit a connectivity-inference request. One queue slot and one
+    /// cache entry even though execution fans out into `1 + n_surrogates`
+    /// internal mines; identical in-flight requests coalesce onto one
+    /// pipeline run.
+    pub fn submit_connectivity(
+        &self,
+        query: ConnectivityQuery,
+    ) -> Result<ConnectivityTicket, MineError> {
+        match self.request(Request::Connectivity(query))? {
+            Admitted::Connectivity(ticket) => Ok(ticket),
+            _ => Err(MineError::internal("connectivity request admitted as a different kind")),
+        }
+    }
+
+    /// Queue-slot admission shared by every executable request kind:
+    /// cache lookup, verified coalescing onto an in-flight twin, bounded
+    /// queue with [`MineError::Busy`]. Validation already happened in
+    /// [`MineService::request`].
+    fn admit(&self, item: WorkItem) -> Result<TicketState, MineError> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(MineError::invalid("service is shut down"));
         }
         self.shared.submitted.inc();
-        let key = query.key();
-        if let Some(hit) = self.shared.cache.get(&key, &query) {
-            return Ok(Ticket(TicketState::Ready(self.shared.annotate_cache_hit(hit))));
+        let key = item.key();
+        if let Some(hit) = self.shared.cache.get(&key, &item) {
+            return Ok(TicketState::Ready(self.shared.annotate_cache_hit(hit)));
         }
         let mut inflight = self.shared.inflight.lock().unwrap();
         // Coalesce only onto a *verified-equivalent* in-flight twin: the
         // fingerprint routes, content equality decides (a crafted
         // collision must never hand this tenant another tenant's result).
-        // On a collision mismatch the query runs standalone — queued but
+        // On a collision mismatch the item runs standalone — queued but
         // never registered in the in-flight map, which stays owned by the
         // earlier job.
         let mut register = true;
         if let Some(job) = inflight.get(&key) {
-            if job.query.equivalent(&query) {
+            if job.item.equivalent(&item) {
                 self.shared.coalesced.inc();
                 job.waiters.fetch_add(1, Ordering::Relaxed);
-                return Ok(Ticket(TicketState::Pending(Arc::clone(job))));
+                return Ok(TicketState::Pending(Arc::clone(job)));
             }
             register = false;
         }
@@ -486,12 +651,12 @@ impl MineService {
         // in-flight map, so "not in flight" under this lock means any
         // just-finished twin is already visible in the cache — re-check
         // (uncounted) before paying for a fresh execution.
-        if let Some(hit) = self.shared.cache.peek(&key, &query) {
-            return Ok(Ticket(TicketState::Ready(self.shared.annotate_cache_hit(hit))));
+        if let Some(hit) = self.shared.cache.peek(&key, &item) {
+            return Ok(TicketState::Ready(self.shared.annotate_cache_hit(hit)));
         }
         let job = Arc::new(Job {
             key,
-            query,
+            item,
             submitted: Instant::now(),
             trace: self.shared.new_trace(),
             waiters: AtomicU64::new(0),
@@ -514,7 +679,7 @@ impl MineService {
         }
         drop(inflight);
         self.shared.queue_cv.notify_one();
-        Ok(Ticket(TicketState::Pending(job)))
+        Ok(TicketState::Pending(job))
     }
 
     /// Join a live-update topic. The returned [`Subscription`] receives
@@ -526,7 +691,15 @@ impl MineService {
     /// the bounded job queue: `queue_depth` reports the tenant's active
     /// subscriptions, `capacity` the cap.
     pub fn subscribe(&self, query: SubscribeQuery) -> Result<Subscription, MineError> {
-        query.validate()?;
+        match self.request(Request::Subscribe(query))? {
+            Admitted::Subscription(sub) => Ok(sub),
+            _ => Err(MineError::internal("subscribe request admitted as a different kind")),
+        }
+    }
+
+    /// The subscription arm of [`MineService::request`] (validation
+    /// already ran there).
+    fn subscribe_inner(&self, query: SubscribeQuery) -> Result<Subscription, MineError> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(MineError::invalid("service is shut down"));
         }
@@ -834,14 +1007,7 @@ fn worker_loop(wi: usize, shared: Arc<Shared>) {
             // submitter and every future identical query. A panic becomes
             // a typed error on this job; the worker lives on.
             None => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                execute(
-                    &job.query,
-                    shared.strategy,
-                    rt.clone(),
-                    shared.cpu_threads,
-                    &job.trace,
-                    shared.profile,
-                )
+                execute_item(&job.item, &shared, rt.clone(), &job.trace)
             }))
             .unwrap_or_else(|_| {
                 Err(MineError::internal("worker panicked while executing the query"))
@@ -850,11 +1016,10 @@ fn worker_loop(wi: usize, shared: Arc<Shared>) {
         shared.busy_ns[wi].add(t0.elapsed().as_nanos() as u64);
 
         let outcome = match outcome {
-            Ok(result) => {
-                let result = Arc::new(result);
-                shared.cache.insert(job.key, job.query.clone(), Arc::clone(&result));
+            Ok(output) => {
+                shared.cache.insert(job.key, job.item.clone(), output.clone());
                 shared.completed.inc();
-                Ok(result)
+                Ok(output)
             }
             Err(e) => {
                 shared.failed.inc();
@@ -899,6 +1064,41 @@ pub fn mine_direct(
     cpu_threads: usize,
 ) -> Result<MineResult, MineError> {
     execute(query, strategy, None, cpu_threads, &Trace::off(), false)
+}
+
+/// Execute one claimed [`WorkItem`] on this worker thread. Plain mines
+/// run on the worker's thread-local engine state; a connectivity item
+/// hands its `1 + n_surrogates` fan-out to the batched executor, whose
+/// workers are scoped threads that build their own engines (so the
+/// worker's `rt` handle stays thread-local and unused for that arm).
+fn execute_item(
+    item: &WorkItem,
+    shared: &Shared,
+    rt: Option<Rc<Runtime>>,
+    trace: &Trace,
+) -> Result<WorkOutput, MineError> {
+    match item {
+        WorkItem::Mine(query) => {
+            execute(query, shared.strategy, rt, shared.cpu_threads, trace, shared.profile)
+                .map(|r| WorkOutput::Mine(Arc::new(r)))
+        }
+        WorkItem::Connectivity(c) => {
+            let cfg = ConnectivityConfig {
+                n_surrogates: c.n_surrogates,
+                jitter: c.jitter,
+                seed: c.seed,
+                batch: BatchConfig {
+                    strategy: shared.strategy,
+                    two_pass: c.mine.two_pass,
+                    cpu_threads: shared.cpu_threads,
+                    parallelism: shared.connectivity_parallelism,
+                    profile: shared.profile,
+                },
+            };
+            infer_connectivity(&c.mine.stream, &c.mine.options(), &cfg, trace)
+                .map(|r| WorkOutput::Connectivity(Arc::new(r)))
+        }
+    }
 }
 
 fn execute(

@@ -136,6 +136,98 @@ impl Query {
     }
 }
 
+/// A served connectivity-inference request: one mine config plus the
+/// null-model knobs. Admission counts it as a single tenant job — one
+/// queue slot, one cache entry — even though executing it fans out into
+/// `1 + n_surrogates` internal mines (see
+/// [`analysis::connectivity::infer_connectivity`]).
+///
+/// [`analysis::connectivity::infer_connectivity`]: crate::analysis::connectivity::infer_connectivity
+#[derive(Clone, Debug)]
+pub struct ConnectivityQuery {
+    /// the mine every stream (real and surrogate) runs under
+    pub mine: Query,
+    /// null-model sample size; the p-value floor is `1/(n+1)`
+    pub n_surrogates: usize,
+    /// surrogate jitter half-width in ticks
+    pub jitter: crate::events::Tick,
+    /// surrogate RNG seed — same seed, same ranked graph
+    pub seed: u64,
+}
+
+impl ConnectivityQuery {
+    pub fn new(mine: Query, n_surrogates: usize, jitter: crate::events::Tick, seed: u64) -> Self {
+        ConnectivityQuery { mine, n_surrogates, jitter, seed }
+    }
+
+    /// Admission-time validation: the shared mine invariants plus the
+    /// surrogate knobs (the same checks the pipeline itself runs).
+    pub fn validate(&self) -> Result<(), MineError> {
+        self.mine.validate()?;
+        crate::analysis::surrogate::validate(self.n_surrogates, self.jitter)
+    }
+
+    /// Exact semantic equality (collision-proofing, as for
+    /// [`Query::equivalent`]).
+    pub fn equivalent(&self, other: &ConnectivityQuery) -> bool {
+        self.n_surrogates == other.n_surrogates
+            && self.jitter == other.jitter
+            && self.seed == other.seed
+            && self.mine.equivalent(&other.mine)
+    }
+
+    /// Canonical identity. Extends the mine fingerprint with a kind
+    /// discriminator and the surrogate knobs, so a connectivity query
+    /// can never alias the plain mine of the same stream.
+    pub fn key(&self) -> QueryKey {
+        let base = self.mine.key();
+        let mut h = Mix::new();
+        h.u64(base.fingerprint);
+        h.u64(KIND_CONNECTIVITY);
+        h.u64(self.n_surrogates as u64);
+        h.i32(self.jitter);
+        h.u64(self.seed);
+        QueryKey { fingerprint: h.0, events: base.events, theta: base.theta }
+    }
+}
+
+/// Kind discriminator mixed into [`ConnectivityQuery::key`] (a plain
+/// [`Query::key`] never mixes one, so the key spaces are disjoint even
+/// for identical parameters).
+const KIND_CONNECTIVITY: u64 = 0xC09A_EC71_11F3_0001;
+
+/// The one typed request surface of [`MineService`]: every way of asking
+/// the service for work is an arm here, admitted through the same
+/// validation and dispatched at a single point
+/// ([`MineService::request`]). The next query type — ROADMAP item 2's
+/// batched device mine — is a new arm, not a parallel code path.
+///
+/// [`MineService`]: super::MineService
+/// [`MineService::request`]: super::MineService::request
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// one mine of one stream → [`Ticket`](super::Ticket)
+    Mine(Query),
+    /// join a live update feed → [`Subscription`](super::Subscription)
+    Subscribe(SubscribeQuery),
+    /// surrogate-tested connectivity inference →
+    /// [`ConnectivityTicket`](super::ConnectivityTicket)
+    Connectivity(ConnectivityQuery),
+}
+
+impl Request {
+    /// Shared admission validation — `MineOptions::validate` and the
+    /// stream invariants for the mining arms, tenant/topic/buffer rules
+    /// for subscriptions.
+    pub fn validate(&self) -> Result<(), MineError> {
+        match self {
+            Request::Mine(q) => q.validate(),
+            Request::Subscribe(s) => s.validate(),
+            Request::Connectivity(c) => c.validate(),
+        }
+    }
+}
+
 /// A live-update subscription request: which tenant is asking, which
 /// topic of [`CommitUpdate`](crate::stream::CommitUpdate)s they want
 /// pushed, and how many undelivered updates may buffer before the oldest
@@ -299,6 +391,44 @@ mod tests {
 
         let q = base().max_level(0);
         assert!(matches!(q.validate(), Err(MineError::InvalidConfig { .. })));
+    }
+
+    #[test]
+    fn connectivity_key_never_aliases_the_plain_mine() {
+        let c = ConnectivityQuery::new(base(), 20, 10, 7);
+        assert_ne!(c.key(), base().key());
+        assert_eq!(c.key(), ConnectivityQuery::new(base(), 20, 10, 7).key());
+        // every surrogate knob perturbs the key
+        assert_ne!(ConnectivityQuery::new(base(), 21, 10, 7).key(), c.key());
+        assert_ne!(ConnectivityQuery::new(base(), 20, 11, 7).key(), c.key());
+        assert_ne!(ConnectivityQuery::new(base(), 20, 10, 8).key(), c.key());
+        // so does the underlying mine
+        assert_ne!(ConnectivityQuery::new(base().one_pass(), 20, 10, 7).key(), c.key());
+    }
+
+    #[test]
+    fn connectivity_equivalence_and_validation() {
+        let c = ConnectivityQuery::new(base(), 20, 10, 7);
+        assert!(c.equivalent(&ConnectivityQuery::new(base(), 20, 10, 7)));
+        assert!(!c.equivalent(&ConnectivityQuery::new(base(), 20, 10, 8)));
+        assert!(c.validate().is_ok());
+        assert!(ConnectivityQuery::new(base(), 0, 10, 7).validate().is_err());
+        assert!(ConnectivityQuery::new(base(), 20, 0, 7).validate().is_err());
+        let mut bad = base();
+        bad.theta = 0;
+        assert!(ConnectivityQuery::new(bad, 20, 10, 7).validate().is_err());
+    }
+
+    #[test]
+    fn request_validate_dispatches_per_arm() {
+        assert!(Request::Mine(base()).validate().is_ok());
+        assert!(Request::Subscribe(SubscribeQuery::new("t", "topic")).validate().is_ok());
+        assert!(Request::Connectivity(ConnectivityQuery::new(base(), 5, 5, 1)).validate().is_ok());
+        let mut q = base();
+        q.theta = 0;
+        assert!(Request::Mine(q.clone()).validate().is_err());
+        assert!(Request::Connectivity(ConnectivityQuery::new(q, 5, 5, 1)).validate().is_err());
+        assert!(Request::Subscribe(SubscribeQuery::new("", "topic")).validate().is_err());
     }
 
     #[test]

@@ -105,7 +105,7 @@ impl MineOptions {
 /// The level-wise mining loop (paper §5): candidate generation on the host
 /// alternating with counting on whatever engine `backend` is. This is the
 /// single implementation behind `Session::mine`, streaming partitions, and
-/// the deprecated `Coordinator::mine` shim.
+/// the batched multi-mine executor (`analysis::batch`).
 ///
 /// Level 1 runs in original type ids over the caller's stream. Levels ≥ 2
 /// run on the arena-backed candidate engine (`episodes::arena`): the
@@ -365,6 +365,28 @@ pub fn engine_for(
     Ok(wrap_two_pass(exact, two_pass, theta))
 }
 
+/// One mine of the batched multi-mine executor (`analysis::batch`): the
+/// single dispatch point every fan-out job goes through, whatever engine
+/// the worker holds. Fresh per-run [`Metrics`] (the executor's jobs are
+/// independent; nothing accumulates across them) and a [`MineProfile`]
+/// attached when `profile` is set — this is the seam where ROADMAP
+/// item 2's CPU-vs-device crossover decision plugs in: with per-level
+/// phase profiles in hand, a future dispatcher can route each job (or
+/// each level's count blocks) to the device backend instead of the
+/// engine it was handed.
+///
+/// [`MineProfile`]: crate::obs::MineProfile
+pub fn dispatch_mine(
+    backend: &mut dyn CountBackend,
+    stream: &EventStream,
+    opts: &MineOptions,
+    trace: &Trace,
+    profile: bool,
+) -> Result<MineResult, MineError> {
+    let mut metrics = Metrics::default();
+    mine_with_backend_obs(backend, stream, opts, &mut metrics, trace, profile)
+}
+
 fn wrap_two_pass(
     exact: Box<dyn CountBackend>,
     two_pass: bool,
@@ -418,7 +440,7 @@ impl Session {
     /// theta report that sub-threshold upper bound rather than their
     /// exact count (the `>= theta` decision is exact either way). Build
     /// with [`SessionBuilder::one_pass`] when exact counts for infrequent
-    /// episodes matter — e.g. when migrating from the 0.1
+    /// episodes matter — e.g. when migrating from the removed pre-0.2
     /// `Coordinator::count`, which was always exact.
     ///
     /// Episodes referencing event types outside the stream's alphabet are

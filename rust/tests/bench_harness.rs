@@ -35,6 +35,8 @@ fn registry_covers_every_bench_target() {
         "ingest_replay",
         "stream_incremental",
         "candidate_scaling",
+        "cluster_scatter",
+        "connectivity",
     ];
     assert_eq!(SUITES.len(), expected.len());
     for name in expected {

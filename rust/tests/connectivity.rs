@@ -1,0 +1,229 @@
+//! The connectivity pipeline end to end: seeded determinism, batched ==
+//! serial execution, the planted-chain significance property the whole
+//! statistical apparatus exists for, and the served surface
+//! (`Request::Connectivity` through `MineService`) against the direct
+//! pipeline.
+
+use std::sync::Arc;
+
+use episodes_gpu::analysis::batch::BatchConfig;
+use episodes_gpu::analysis::connectivity::{
+    infer_connectivity, ConnectivityConfig, ConnectivityResult,
+};
+use episodes_gpu::coordinator::Strategy;
+use episodes_gpu::datasets::sym26::{self, Sym26Config};
+use episodes_gpu::events::EventStream;
+use episodes_gpu::obs::Trace;
+use episodes_gpu::serve::{
+    Admitted, ConnectivityQuery, MineService, Query, Request, ServiceConfig,
+};
+use episodes_gpu::session::MineOptions;
+use episodes_gpu::MineError;
+
+/// A small but structured stream: the sym26 model scaled down so ten-odd
+/// mines stay fast, with the background quieted and every chain link
+/// firing, so the planted structure is unambiguous at this duration.
+fn planted_cfg() -> Sym26Config {
+    Sym26Config {
+        duration_ms: 10_000,
+        basal_hz: 5.0,
+        trigger_hz: 3.0,
+        link_prob: 1.0,
+        ..Sym26Config::default()
+    }
+}
+
+fn planted_stream(seed: u64) -> EventStream {
+    sym26::generate(&planted_cfg(), seed)
+}
+
+fn opts(theta: u64) -> MineOptions {
+    MineOptions {
+        theta,
+        intervals: planted_cfg().interval_set(),
+        max_level: 3,
+        max_candidates_per_level: 2_000_000,
+        candidate_block: episodes_gpu::session::DEFAULT_CANDIDATE_BLOCK,
+    }
+}
+
+fn cfg(n_surrogates: usize, seed: u64, parallelism: usize) -> ConnectivityConfig {
+    ConnectivityConfig {
+        n_surrogates,
+        jitter: 15,
+        seed,
+        batch: BatchConfig {
+            strategy: Strategy::CpuParallel,
+            parallelism,
+            ..BatchConfig::default()
+        },
+    }
+}
+
+fn run(stream: &EventStream, theta: u64, c: &ConnectivityConfig) -> ConnectivityResult {
+    infer_connectivity(stream, &opts(theta), c, &Trace::off()).unwrap()
+}
+
+#[test]
+fn same_seed_same_ranked_circuit() {
+    let stream = planted_stream(11);
+    let a = run(&stream, 10, &cfg(4, 42, 2));
+    let b = run(&stream, 10, &cfg(4, 42, 2));
+    assert_eq!(a.base.frequent, b.base.frequent);
+    assert_eq!(a.report, b.report);
+    assert_eq!(a.circuit, b.circuit);
+    // a different surrogate seed is a different null sample
+    let c = run(&stream, 10, &cfg(4, 43, 2));
+    assert_ne!(
+        a.report.scores.iter().map(|s| s.null_mean).collect::<Vec<_>>(),
+        c.report.scores.iter().map(|s| s.null_mean).collect::<Vec<_>>(),
+        "seed 43 must draw a different null"
+    );
+}
+
+#[test]
+fn batched_equals_serial_pipeline() {
+    // the whole pipeline, not just mine_batch: surrogate generation is
+    // index-keyed, so worker claim order must not leak into the result
+    let stream = planted_stream(12);
+    let serial = run(&stream, 10, &cfg(5, 7, 1));
+    let batched = run(&stream, 10, &cfg(5, 7, 4));
+    assert_eq!(serial.base.frequent, batched.base.frequent);
+    assert_eq!(serial.report, batched.report);
+    assert_eq!(serial.circuit, batched.circuit);
+}
+
+#[test]
+fn planted_chains_rank_above_rate_background() {
+    // The property the statistics exist for: the generator's embedded
+    // chains survive jitter at the null's p-floor, and nothing the rate
+    // background produces outranks them.
+    let c = planted_cfg();
+    let stream = sym26::generate(&c, 13);
+    let result = run(&stream, 10, &cfg(9, 99, 4));
+    let report = &result.report;
+    assert!(!report.scores.is_empty());
+    assert_eq!(report.n_surrogates, 9);
+    let floor = report.p_floor();
+    assert!((floor - 0.1).abs() < 1e-12);
+
+    let truth = episodes_gpu::datasets::ground_truth("sym26").unwrap();
+    let true_edges = truth.edges();
+
+    // every true edge is recovered at the p-floor: ~30 planted
+    // occurrences per link against a ~5 Hz background leave the null no
+    // room to reach the real count
+    let significant = result.circuit.significant(floor + 1e-9);
+    for (from, to) in &true_edges {
+        assert!(
+            significant.contains(*from, *to),
+            "true edge {from}->{to} missing from the p-floor set; circuit: {:?}",
+            result.circuit.edges
+        );
+    }
+    let s = significant.score(&truth.chains);
+    assert_eq!(s.true_positives, true_edges.len(), "recall {:.2}", s.recall());
+
+    // and the ranking puts them first: the top |truth| edges are exactly
+    // the planted ones (rate-driven coincidences jitter away)
+    for e in result.circuit.edges.iter().take(true_edges.len()) {
+        assert!(
+            true_edges.contains(&(e.from, e.to)),
+            "non-planted edge {}->{} (p={}) outranks a planted one",
+            e.from,
+            e.to,
+            e.p_value
+        );
+    }
+}
+
+fn serve_query(stream: &Arc<EventStream>, theta: u64) -> ConnectivityQuery {
+    let mine = Query::new(Arc::clone(stream), theta, planted_cfg().interval_set()).max_level(3);
+    ConnectivityQuery::new(mine, 4, 15, 77)
+}
+
+#[test]
+fn served_connectivity_matches_direct_pipeline() {
+    let stream = Arc::new(planted_stream(14));
+    let service = MineService::start(ServiceConfig {
+        workers: 2,
+        strategy: Strategy::CpuSerial,
+        connectivity_parallelism: 2,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+
+    let q = serve_query(&stream, 10);
+    let served = match service.request(Request::Connectivity(q.clone())).unwrap() {
+        Admitted::Connectivity(t) => {
+            assert!(!t.from_cache());
+            t.wait().unwrap()
+        }
+        _ => panic!("connectivity request admitted as a different kind"),
+    };
+
+    // direct pipeline under the service's effective config; the batch
+    // parallelism knob is result-invariant, so any value compares equal
+    let direct = infer_connectivity(
+        &stream,
+        &opts(10),
+        &ConnectivityConfig {
+            n_surrogates: q.n_surrogates,
+            jitter: q.jitter,
+            seed: q.seed,
+            batch: BatchConfig {
+                strategy: Strategy::CpuSerial,
+                parallelism: 1,
+                ..BatchConfig::default()
+            },
+        },
+        &Trace::off(),
+    )
+    .unwrap();
+    assert_eq!(served.base.frequent, direct.base.frequent);
+    assert_eq!(served.report, direct.report);
+    assert_eq!(served.circuit, direct.circuit);
+
+    // one admission = one tenant job: a resubmission is a cache hit on
+    // the connectivity-kind key, sharing the same Arc'd result
+    let again = match service.request(Request::Connectivity(q)).unwrap() {
+        Admitted::Connectivity(t) => {
+            assert!(t.from_cache(), "identical resubmission must hit the cache");
+            t.wait().unwrap()
+        }
+        _ => panic!("connectivity request admitted as a different kind"),
+    };
+    assert!(Arc::ptr_eq(&served, &again));
+
+    let m = service.shutdown();
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.completed, 1, "two requests, one execution");
+}
+
+#[test]
+fn service_rejects_invalid_connectivity_at_admission() {
+    let stream = Arc::new(planted_stream(15));
+    let service =
+        MineService::start(ServiceConfig { workers: 1, ..ServiceConfig::default() }).unwrap();
+
+    let mut zero_surrogates = serve_query(&stream, 10);
+    zero_surrogates.n_surrogates = 0;
+    assert!(matches!(
+        service.request(Request::Connectivity(zero_surrogates)),
+        Err(MineError::InvalidConfig { .. })
+    ));
+
+    let mut zero_jitter = serve_query(&stream, 10);
+    zero_jitter.jitter = 0;
+    assert!(matches!(
+        service.request(Request::Connectivity(zero_jitter)),
+        Err(MineError::InvalidConfig { .. })
+    ));
+
+    let mut bad_mine = serve_query(&stream, 10);
+    bad_mine.mine.theta = 0;
+    assert!(service.request(Request::Connectivity(bad_mine)).is_err());
+
+    let m = service.shutdown();
+    assert_eq!(m.completed + m.failed, 0, "rejected requests never reach a worker");
+}

@@ -6,9 +6,11 @@
 //! test skips with a notice rather than failing — the CPU-path coverage
 //! lives in `miner_e2e.rs` / `session_api.rs` and always runs.
 
-#![allow(deprecated)]
+use std::rc::Rc;
 
-use episodes_gpu::coordinator::{Coordinator, Strategy};
+use episodes_gpu::backend::two_pass::TwoPassBackend;
+use episodes_gpu::backend::{self, CountBackend};
+use episodes_gpu::coordinator::Strategy;
 use episodes_gpu::episodes::{Episode, Interval};
 use episodes_gpu::events::EventStream;
 use episodes_gpu::mining::serial;
@@ -25,14 +27,21 @@ fn open_rt() -> Option<Runtime> {
     }
 }
 
-fn open_coord() -> Option<Coordinator> {
-    match Coordinator::open_default() {
-        Ok(c) => Some(c),
-        Err(e) => {
-            eprintln!("skipping: {e}");
-            None
-        }
-    }
+fn open_shared_rt() -> Option<Rc<Runtime>> {
+    open_rt().map(Rc::new)
+}
+
+/// Exact counts under `strategy` via the same engine construction
+/// `Session` uses (`backend::for_strategy`).
+fn count_with(
+    rt: &Rc<Runtime>,
+    strategy: Strategy,
+    episodes: &[Episode],
+    stream: &EventStream,
+) -> Vec<u64> {
+    let mut be = backend::for_strategy(strategy, Some(Rc::clone(rt)), 4)
+        .expect("engine construction");
+    be.count(episodes, stream).expect("count").counts
 }
 
 fn gen_stream(rng: &mut Rng, n_events: usize, n_types: i32) -> EventStream {
@@ -145,41 +154,43 @@ fn mapconcat_kernel_equals_cpu_map_and_serial_count() {
 }
 
 #[test]
-fn coordinator_strategies_agree() {
-    let Some(mut coord) = open_coord() else { return };
+fn backend_strategies_agree() {
+    let Some(rt) = open_shared_rt() else { return };
     let mut rng = Rng::new(0x57);
     let stream = gen_stream(&mut rng, 8000, 6);
     let eps = gen_episodes(&mut rng, 24, 3, 6);
-    let cpu = coord.count(&eps, &stream, Strategy::CpuSerial).unwrap();
-    let ptpe = coord.count(&eps, &stream, Strategy::PtpeA1).unwrap();
-    let hybrid = coord.count(&eps, &stream, Strategy::Hybrid).unwrap();
-    let par = coord.count(&eps, &stream, Strategy::CpuParallel).unwrap();
+    let cpu = count_with(&rt, Strategy::CpuSerial, &eps, &stream);
+    let ptpe = count_with(&rt, Strategy::PtpeA1, &eps, &stream);
+    let hybrid = count_with(&rt, Strategy::Hybrid, &eps, &stream);
+    let par = count_with(&rt, Strategy::CpuParallel, &eps, &stream);
     assert_eq!(cpu, ptpe);
     assert_eq!(cpu, hybrid);
     assert_eq!(cpu, par);
 }
 
 #[test]
-fn coordinator_mapconcat_agrees_or_falls_back() {
-    let Some(mut coord) = open_coord() else { return };
+fn backend_mapconcat_agrees_or_falls_back() {
+    let Some(rt) = open_shared_rt() else { return };
     let mut rng = Rng::new(0x58);
     let stream = gen_stream(&mut rng, 30_000, 6);
     let eps = gen_episodes(&mut rng, 8, 4, 6);
-    let cpu = coord.count(&eps, &stream, Strategy::CpuSerial).unwrap();
-    let mc = coord.count(&eps, &stream, Strategy::MapConcat).unwrap();
-    assert_eq!(cpu, mc, "metrics: {}", coord.metrics.report());
+    let mut mc_be = backend::for_strategy(Strategy::MapConcat, Some(Rc::clone(&rt)), 4).unwrap();
+    let report = mc_be.count(&eps, &stream).unwrap();
+    let cpu = count_with(&rt, Strategy::CpuSerial, &eps, &stream);
+    assert_eq!(cpu, report.counts, "metrics: {}", report.metrics.report());
 }
 
 #[test]
 fn two_pass_is_exact_at_threshold() {
-    let Some(mut coord) = open_coord() else { return };
+    let Some(rt) = open_shared_rt() else { return };
     let mut rng = Rng::new(0x2B);
     let stream = gen_stream(&mut rng, 6000, 5);
     let eps = gen_episodes(&mut rng, 64, 3, 5);
     let theta = 10;
-    let out = coord.count_two_pass(&eps, &stream, theta).unwrap();
+    let inner = backend::for_strategy(Strategy::Hybrid, Some(Rc::clone(&rt)), 4).unwrap();
+    let (out, _metrics) = TwoPassBackend::new(inner, theta).run(&eps, &stream).unwrap();
     for (i, ep) in eps.iter().enumerate() {
-        let exact = serial::count_a1_bounded(ep, &stream, coord.rt.manifest().k_slots);
+        let exact = serial::count_a1_bounded(ep, &stream, rt.manifest().k_slots);
         // frequency decision must be exact
         assert_eq!(out.counts[i] >= theta, exact >= theta, "{}", ep.display());
         // survivors carry exact counts
@@ -193,15 +204,15 @@ fn two_pass_is_exact_at_threshold() {
 
 #[test]
 fn mixed_size_batches_route_correctly() {
-    let Some(mut coord) = open_coord() else { return };
+    let Some(rt) = open_shared_rt() else { return };
     let mut rng = Rng::new(0x33);
     let stream = gen_stream(&mut rng, 4000, 5);
     let mut eps = gen_episodes(&mut rng, 10, 2, 5);
     eps.extend(gen_episodes(&mut rng, 10, 4, 5));
     eps.push(Episode::single(3));
-    let got = coord.count(&eps, &stream, Strategy::Hybrid).unwrap();
+    let got = count_with(&rt, Strategy::Hybrid, &eps, &stream);
     for (i, ep) in eps.iter().enumerate() {
-        let want = serial::count_a1_bounded(ep, &stream, coord.rt.manifest().k_slots);
+        let want = serial::count_a1_bounded(ep, &stream, rt.manifest().k_slots);
         assert_eq!(got[i], want, "{}", ep.display());
     }
 }
